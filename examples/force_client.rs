@@ -1,0 +1,43 @@
+//! Client for the force server (`repro serve`): demonstrates the
+//! coordinator-as-a-service deployment shape — a central process owning the
+//! compiled potential, clients streaming neighborhood batches.
+//!
+//! ```bash
+//! cargo run --release -- serve --port 7878 --engine fused &
+//! cargo run --release --example force_client -- 127.0.0.1:7878
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+fn main() -> anyhow::Result<()> {
+    let addr = std::env::args().nth(1).unwrap_or_else(|| "127.0.0.1:7878".into());
+    let mut conn = TcpStream::connect(&addr)?;
+    println!("connected to {addr}");
+
+    // a 2-atom request: one bcc-ish neighborhood + one dimer
+    let rij = [
+        // atom 0: 3 neighbors
+        1.59, 1.59, 1.59, -1.59, 1.59, 1.59, 3.18, 0.0, 0.0,
+        // atom 1: 1 neighbor + 2 padded slots
+        2.2, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0,
+    ];
+    let mask = [1.0, 1.0, 1.0, 1.0, 0.0, 0.0];
+    let fmt = |v: &[f64]| {
+        v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+    };
+    let req = format!(
+        "{{\"num_atoms\": 2, \"num_nbor\": 3, \"rij\": [{}], \"mask\": [{}]}}\n",
+        fmt(&rij),
+        fmt(&mask)
+    );
+    let t0 = std::time::Instant::now();
+    conn.write_all(req.as_bytes())?;
+    let mut reader = BufReader::new(conn);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    println!("round-trip: {:.2} ms", t0.elapsed().as_secs_f64() * 1e3);
+    println!("response: {}", &line[..line.len().min(300)]);
+    anyhow::ensure!(line.contains("\"ok\": true"), "server returned an error");
+    Ok(())
+}

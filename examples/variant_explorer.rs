@@ -1,0 +1,48 @@
+//! Variant explorer: run the paper's full optimization ladder on one
+//! workload and print the speedup table — the interactive version of
+//! Figs. 2/3.
+//!
+//! ```bash
+//! cargo run --release --example variant_explorer -- [twojmax] [cells]
+//! # e.g.   ... variant_explorer -- 8 6     (432 atoms, 2J=8)
+//! ```
+
+use repro::bench::{grind, Workload};
+use repro::snap::coeff::SnapCoeffs;
+use repro::snap::variants::Variant;
+use repro::snap::{SnapIndex, SnapParams};
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let twojmax: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(8);
+    let cells: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(5);
+
+    let params = SnapParams::with_twojmax(twojmax);
+    let idx = Arc::new(SnapIndex::new(twojmax));
+    let coeffs = SnapCoeffs::synthetic(twojmax, idx.idxb_max, 42);
+    let w = Workload::tungsten(cells, params.rcut());
+    println!(
+        "# ladder: 2J={twojmax}, {} atoms, {} neighbors/atom\n",
+        w.num_atoms, w.num_nbor
+    );
+    println!("{:<18} {:>12} {:>16} {:>10}  memory@2000x26", "variant", "ms/step", "Katom-steps/s", "speedup");
+
+    let mut base = None;
+    for v in Variant::ladder() {
+        let mut eng = v.build(params, idx.clone(), coeffs.beta.clone());
+        let fp = eng.footprint(2000, 26);
+        let r = grind(eng.as_mut(), &w, 1, 3);
+        let b = *base.get_or_insert(r.secs_per_step);
+        println!(
+            "{:<18} {:>12.2} {:>16.2} {:>9.2}x  {:.3} GiB",
+            v.label(),
+            r.secs_per_step * 1e3,
+            r.katom_steps_per_sec,
+            b / r.secs_per_step,
+            fp.gib()
+        );
+    }
+    println!("\n(paper, V100: ladder ends at 7.5x for 2J8 / 8.9x for 2J14;\n section VI fused kernels reach 19.6x / 21.7x — see EXPERIMENTS.md)");
+    Ok(())
+}

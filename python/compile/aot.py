@@ -1,0 +1,203 @@
+"""AOT compile path: lower the L2 model to HLO text + metadata + goldens.
+
+Run once by ``make artifacts``; Python never appears on the request path.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, per (variant, 2J) configuration:
+  artifacts/<name>.hlo.txt    -- the lowered module
+  artifacts/<name>.meta.json  -- I/O contract: shapes, dtypes, params
+and shared:
+  artifacts/golden/*.json     -- cross-language golden vectors (inputs +
+                                 every intermediate) consumed by the Rust
+                                 test-suite; generated from the jnp oracle.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile.indexsets import get_index
+from compile.kernels.ref import SnapParams
+from compile import model as model_lib
+
+jax.config.update("jax_enable_x64", True)
+
+# The artifact matrix: name -> (builder, twojmax, num_atoms, num_nbor, tile)
+# Tile sizes: 32-atom batches with up to 32 neighbors cover the paper's
+# benchmark geometry (26 neighbors/atom); 2J14 is compiled at a smaller
+# batch because its contraction plan is ~40x larger (O(J^7)).
+CONFIGS = {
+    "snap_2j8": ("pallas", 8, 32, 32, 8),
+    "snap_2j8_ref": ("ref", 8, 32, 32, 0),
+    "snap_2j14": ("pallas", 14, 8, 32, 8),
+    "snap_2j14_ref": ("ref", 14, 8, 32, 0),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the contraction-plan tables are multi-MB
+    # literals; the default printer elides them as "constant({...})", which
+    # the Rust-side HLO text parser cannot round-trip.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def build_artifact(name: str, outdir: str) -> dict:
+    kind, twojmax, num_atoms, num_nbor, tile = CONFIGS[name]
+    p = SnapParams(twojmax=twojmax)
+    idx = get_index(twojmax)
+    if kind == "pallas":
+        fn = model_lib.snap_model(p, tile)
+    else:
+        fn = model_lib.snap_model_ref(p)
+    args = model_lib.example_args(num_atoms, num_nbor, idx.idxb_max)
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(outdir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    meta = {
+        "name": name,
+        "kind": kind,
+        "twojmax": twojmax,
+        "num_atoms": num_atoms,
+        "num_nbor": num_nbor,
+        "tile": tile,
+        "num_bispectrum": int(idx.idxb_max),
+        "params": {
+            "rcutfac": p.rcutfac,
+            "rfac0": p.rfac0,
+            "rmin0": p.rmin0,
+            "wself": p.wself,
+        },
+        "inputs": [
+            {"name": "rij", "shape": [num_atoms, num_nbor, 3], "dtype": "f64"},
+            {"name": "mask", "shape": [num_atoms, num_nbor], "dtype": "f64"},
+            {"name": "beta", "shape": [int(idx.idxb_max)], "dtype": "f64"},
+        ],
+        "outputs": [
+            {"name": "ei", "shape": [num_atoms], "dtype": "f64"},
+            {"name": "dedr", "shape": [num_atoms, num_nbor, 3], "dtype": "f64"},
+        ],
+        "hlo_bytes": len(text),
+    }
+    with open(os.path.join(outdir, f"{name}.meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"  {name}: {len(text)/1e6:.1f} MB HLO text")
+    return meta
+
+
+def golden_case(twojmax: int, num_atoms: int, num_nbor: int, seed: int) -> dict:
+    """One golden vector: inputs + every intermediate, from the jnp oracle."""
+    from compile.kernels.adjoint import compute_dulist, compute_ylist
+    from compile.kernels.ref import (
+        compute_bispectrum, compute_ulisttot, snap_ref,
+    )
+
+    p = SnapParams(twojmax=twojmax)
+    idx = get_index(twojmax)
+    rng = np.random.default_rng(seed)
+    rij = rng.uniform(-0.55 * p.rcut, 0.55 * p.rcut, (num_atoms, num_nbor, 3))
+    mask = (rng.random((num_atoms, num_nbor)) > 0.2).astype(float)
+    beta = rng.normal(size=idx.idxb_max) / np.sqrt(1.0 + np.arange(idx.idxb_max))
+
+    jrij, jmask, jbeta = jnp.asarray(rij), jnp.asarray(mask), jnp.asarray(beta)
+    utot = compute_ulisttot(jrij, jmask, p, idx)
+    ylist = compute_ylist(utot, jbeta, idx)
+    blist = compute_bispectrum(jrij, jmask, p)
+    ei, dedr = snap_ref(jrij, jmask, jbeta, p)
+
+    def ls(x):  # listify
+        return np.asarray(x).ravel().tolist()
+
+    return {
+        "twojmax": twojmax,
+        "num_atoms": num_atoms,
+        "num_nbor": num_nbor,
+        "params": {"rcutfac": p.rcutfac, "rfac0": p.rfac0,
+                   "rmin0": p.rmin0, "wself": p.wself},
+        "rij": ls(rij),
+        "mask": ls(mask),
+        "beta": ls(beta),
+        "ulisttot_re": ls(jnp.real(utot)),
+        "ulisttot_im": ls(jnp.imag(utot)),
+        "ylist_re": ls(jnp.real(ylist)),
+        "ylist_im": ls(jnp.imag(ylist)),
+        "blist": ls(blist),
+        "ei": ls(ei),
+        "dedr": ls(dedr),
+    }
+
+
+def index_golden(twojmax: int) -> dict:
+    """Index-machinery golden: lets Rust unit-test its tables directly."""
+    idx = get_index(twojmax)
+    return {
+        "twojmax": twojmax,
+        "idxu_max": int(idx.idxu_max),
+        "idxb_max": int(idx.idxb_max),
+        "idxz_max": int(idx.idxz_max),
+        "idxu_block": idx.idxu_block.tolist(),
+        "cglist_sum": float(np.abs(idx.cglist).sum()),
+        "cglist_head": idx.cglist[:32].tolist(),
+        "zplan_rows": int(len(idx.zplan_seg)),
+        "zplan_c_sum": float(np.abs(idx.zplan_c).sum()),
+        "yplan_fac_sum": float(idx.yplan_fac.sum()),
+        "bplan_w_sum": float(idx.bplan_w.sum()),
+        "dedr_w_sum": float(idx.dedr_w.sum()),
+        "idxb": idx.idxb.ravel().tolist(),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", help="subset of artifact names")
+    ap.add_argument("--skip-goldens", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+    gold_dir = os.path.join(args.outdir, "golden")
+    os.makedirs(gold_dir, exist_ok=True)
+
+    names = args.only or list(CONFIGS)
+    print("lowering artifacts:")
+    for name in names:
+        build_artifact(name, args.outdir)
+
+    if not args.skip_goldens:
+        print("golden vectors:")
+        cases = [
+            ("case_2j2", 2, 4, 6, 11),
+            ("case_2j4", 4, 3, 8, 12),
+            ("case_2j8", 8, 4, 10, 13),
+            ("case_2j8_sparse", 8, 2, 26, 14),
+            ("case_2j14", 14, 2, 4, 15),
+        ]
+        for fname, tjm, na, nn, seed in cases:
+            with open(os.path.join(gold_dir, f"{fname}.json"), "w") as f:
+                json.dump(golden_case(tjm, na, nn, seed), f)
+            print(f"  {fname}")
+        for tjm in (2, 4, 8, 14):
+            with open(os.path.join(gold_dir, f"index_2j{tjm}.json"), "w") as f:
+                json.dump(index_golden(tjm), f)
+            print(f"  index_2j{tjm}")
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

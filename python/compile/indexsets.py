@@ -1,0 +1,372 @@
+"""Static index machinery for the SNAP bispectrum calculation.
+
+Everything about the (j1, j2, j, ma, mb) index structure of SNAP is static
+given ``twojmax`` (the paper's 2J).  This module precomputes, in plain numpy:
+
+  * Clebsch-Gordan coefficients (``cglist`` in the LAMMPS flat layout),
+  * the Wigner-U flat index blocks (``idxu_block`` / ``idxu_max``),
+  * the Z / B / Y index triples (``idxz`` / ``idxb``),
+  * and, crucially, *flattened contraction plans*: CSR-like index +
+    coefficient arrays that turn the variable-length Clebsch-Gordan sums of
+    ``compute_zi`` / ``compute_bi`` / ``compute_yi`` into gather +
+    segment-sum operations.
+
+The contraction-plan formulation is the TPU adaptation of the paper's AoSoA /
+warp-load-balancing work (DESIGN.md section 3): instead of giving each CUDA
+thread a variable-length CG sum, the sums are flattened at build time so the
+kernel executes perfectly load-balanced dense gathers.
+
+All ``j``-like variables follow the LAMMPS "doubled" convention: ``j`` here
+is the physical ``2j`` and is always a non-negative integer.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+def factorial(n: int) -> float:
+    """Exact integer factorial, returned as float (LAMMPS uses a double table)."""
+    if n < 0:
+        raise ValueError(f"factorial of negative {n}")
+    return float(math.factorial(n))
+
+
+def deltacg(j1: int, j2: int, j: int) -> float:
+    """The Delta(j1 j2 j) factor of the Clebsch-Gordan coefficient (VMK 8.2.1)."""
+    sfaccg = factorial((j1 + j2 + j) // 2 + 1)
+    return math.sqrt(
+        factorial((j1 + j2 - j) // 2)
+        * factorial((j1 - j2 + j) // 2)
+        * factorial((-j1 + j2 + j) // 2)
+        / sfaccg
+    )
+
+
+def clebsch_gordan(j1: int, j2: int, j: int, aa2: int, bb2: int, cc2: int) -> float:
+    """Clebsch-Gordan coefficient <j1/2 aa2/2 ; j2/2 bb2/2 | j/2 cc2/2>.
+
+    All six arguments are doubled (integer) angular momenta / projections,
+    exactly as in LAMMPS ``SNA::init_clebsch_gordan``.
+    """
+    if aa2 + bb2 != cc2:
+        return 0.0
+    z_min = max(0, max(-(j - j2 + aa2) // 2, -(j - j1 - bb2) // 2))
+    z_max = min(
+        (j1 + j2 - j) // 2,
+        min((j1 - aa2) // 2, (j2 + bb2) // 2),
+    )
+    s = 0.0
+    for z in range(z_min, z_max + 1):
+        ifac = -1.0 if z % 2 else 1.0
+        s += ifac / (
+            factorial(z)
+            * factorial((j1 + j2 - j) // 2 - z)
+            * factorial((j1 - aa2) // 2 - z)
+            * factorial((j2 + bb2) // 2 - z)
+            * factorial((j - j2 + aa2) // 2 + z)
+            * factorial((j - j1 - bb2) // 2 + z)
+        )
+    return (
+        s
+        * deltacg(j1, j2, j)
+        * math.sqrt(
+            factorial((j1 + aa2) // 2)
+            * factorial((j1 - aa2) // 2)
+            * factorial((j2 + bb2) // 2)
+            * factorial((j2 - bb2) // 2)
+            * factorial((j + cc2) // 2)
+            * factorial((j - cc2) // 2)
+        )
+    )
+
+
+def triangle_triples(twojmax: int):
+    """All (j1, j2, j) with j2 <= j1 <= twojmax, |j1-j2| <= j <= min(twojmax, j1+j2),
+    stepping j by 2 (parity).  This is the iteration order of LAMMPS cglist/idxz."""
+    for j1 in range(twojmax + 1):
+        for j2 in range(j1 + 1):
+            for j in range(j1 - j2, min(twojmax, j1 + j2) + 1, 2):
+                yield j1, j2, j
+
+
+@dataclass
+class SnapIndex:
+    """All static index structure for one value of twojmax."""
+
+    twojmax: int
+
+    # Wigner-U flat layout: jju = idxu_block[j] + (j+1)*mb + ma
+    idxu_block: np.ndarray = field(init=False)
+    idxu_max: int = field(init=False)
+
+    # rootpq[p, q] = sqrt(p/q) for the U recursion
+    rootpq: np.ndarray = field(init=False)
+
+    # Bispectrum triples (j1 >= j2, j >= j1): idxb[(nb, 3)]
+    idxb: np.ndarray = field(init=False)
+    idxb_max: int = field(init=False)
+
+    # Z triples + per-(mb, ma) entries
+    idxz: np.ndarray = field(init=False)  # structured: j1 j2 j ma1min ma2max mb1min mb2max na nb jju
+    idxz_max: int = field(init=False)
+
+    # flat CG table in LAMMPS layout
+    cglist: np.ndarray = field(init=False)
+    idxcg_block: dict = field(init=False)
+
+    # Contraction plans (see module docstring)
+    zplan_seg: np.ndarray = field(init=False)  # (rows,) int32: target jjz
+    zplan_u1: np.ndarray = field(init=False)   # (rows,) int32: flat idxu into ulisttot
+    zplan_u2: np.ndarray = field(init=False)
+    zplan_c: np.ndarray = field(init=False)    # (rows,) f64: cg_a * cg_b
+    bplan_seg: np.ndarray = field(init=False)  # (rows,) int32: target jjb
+    bplan_u: np.ndarray = field(init=False)
+    bplan_z: np.ndarray = field(init=False)
+    bplan_w: np.ndarray = field(init=False)
+    yplan_jju: np.ndarray = field(init=False)  # (idxz_max,) scatter target in ylist
+    yplan_jjb: np.ndarray = field(init=False)  # (idxz_max,) which beta
+    yplan_fac: np.ndarray = field(init=False)  # (idxz_max,) multiplicity factor
+
+    # Per-level U-recursion coefficient matrices (lists indexed by j)
+    #   ca[j][mb, ma] = sqrt((j-ma)/(j-mb)) on the computed half, else 0
+    #   cb[j][mb, ma] = sqrt(ma/(j-mb))     on the computed half, else 0
+    #   usym_sign[j][mb, ma] = (-1)^(ma-mb); uhalf_mask[j][mb, ma] = 2*mb <= j
+    ca: list = field(init=False)
+    cb: list = field(init=False)
+    usym_sign: list = field(init=False)
+    uhalf_mask: list = field(init=False)
+
+    # dedr half-sum weights: w[mb, ma] per level (1, or 0.5 on the middle
+    # diagonal of even j, 0 outside the half) -- flattened to idxu_max.
+    dedr_w: np.ndarray = field(init=False)
+
+    # diag self-contribution positions (wself): flat indices of (j, ma==mb)
+    uself_idx: np.ndarray = field(init=False)
+
+    def __post_init__(self):
+        tj = self.twojmax
+        jdim = tj + 1
+
+        # ---- idxu ----
+        self.idxu_block = np.zeros(jdim, dtype=np.int32)
+        c = 0
+        for j in range(jdim):
+            self.idxu_block[j] = c
+            c += (j + 1) * (j + 1)
+        self.idxu_max = c
+
+        # ---- rootpq ----
+        self.rootpq = np.zeros((jdim + 2, jdim + 2))
+        for p in range(1, jdim + 2):
+            for q in range(1, jdim + 2):
+                self.rootpq[p, q] = math.sqrt(p / q)
+
+        # ---- idxb ----
+        idxb = [
+            (j1, j2, j)
+            for (j1, j2, j) in triangle_triples(tj)
+            if j >= j1
+        ]
+        self.idxb = np.array(idxb, dtype=np.int32).reshape(-1, 3)
+        self.idxb_max = len(idxb)
+        idxb_block = {}
+        for jjb, (j1, j2, j) in enumerate(idxb):
+            idxb_block[(j1, j2, j)] = jjb
+
+        # ---- cglist ----
+        self.idxcg_block = {}
+        cg = []
+        count = 0
+        for (j1, j2, j) in triangle_triples(tj):
+            self.idxcg_block[(j1, j2, j)] = count
+            for m1 in range(j1 + 1):
+                aa2 = 2 * m1 - j1
+                for m2 in range(j2 + 1):
+                    bb2 = 2 * m2 - j2
+                    m = (aa2 + bb2 + j) // 2
+                    if m < 0 or m > j:
+                        cg.append(0.0)
+                    else:
+                        cg.append(clebsch_gordan(j1, j2, j, aa2, bb2, aa2 + bb2))
+                    count += 1
+        self.cglist = np.array(cg)
+
+        # ---- idxz ----
+        dt = np.dtype(
+            [
+                ("j1", np.int32), ("j2", np.int32), ("j", np.int32),
+                ("ma1min", np.int32), ("ma2max", np.int32), ("na", np.int32),
+                ("mb1min", np.int32), ("mb2max", np.int32), ("nb", np.int32),
+                ("jju", np.int32),
+            ]
+        )
+        entries = []
+        idxz_block = {}
+        for (j1, j2, j) in triangle_triples(tj):
+            idxz_block[(j1, j2, j)] = len(entries)
+            for mb in range(j // 2 + 1):  # 2*mb <= j
+                for ma in range(j + 1):
+                    ma1min = max(0, (2 * ma - j - j2 + j1) // 2)
+                    ma2max = (2 * ma - j - (2 * ma1min - j1) + j2) // 2
+                    na = min(j1, (2 * ma - j + j2 + j1) // 2) - ma1min + 1
+                    mb1min = max(0, (2 * mb - j - j2 + j1) // 2)
+                    mb2max = (2 * mb - j - (2 * mb1min - j1) + j2) // 2
+                    nb = min(j1, (2 * mb - j + j2 + j1) // 2) - mb1min + 1
+                    jju = self.idxu_block[j] + (j + 1) * mb + ma
+                    entries.append(
+                        (j1, j2, j, ma1min, ma2max, na, mb1min, mb2max, nb, jju)
+                    )
+        self.idxz = np.array(entries, dtype=dt)
+        self.idxz_max = len(entries)
+        self._idxz_block = idxz_block
+        self._idxb_block = idxb_block
+
+        # ---- Z contraction plan ----
+        seg, u1s, u2s, cs = [], [], [], []
+        for jjz, e in enumerate(self.idxz):
+            j1, j2, j = int(e["j1"]), int(e["j2"]), int(e["j"])
+            cgblock = self.cglist[self.idxcg_block[(j1, j2, j)]:]
+            jju1 = self.idxu_block[j1] + (j1 + 1) * e["mb1min"]
+            jju2 = self.idxu_block[j2] + (j2 + 1) * e["mb2max"]
+            icgb = e["mb1min"] * (j2 + 1) + e["mb2max"]
+            for _ib in range(e["nb"]):
+                ma1 = int(e["ma1min"])
+                ma2 = int(e["ma2max"])
+                icga = e["ma1min"] * (j2 + 1) + e["ma2max"]
+                for _ia in range(e["na"]):
+                    seg.append(jjz)
+                    u1s.append(jju1 + ma1)
+                    u2s.append(jju2 + ma2)
+                    cs.append(cgblock[icgb] * cgblock[icga])
+                    ma1 += 1
+                    ma2 -= 1
+                    icga += j2
+                jju1 += j1 + 1
+                jju2 -= j2 + 1
+                icgb += j2
+        self.zplan_seg = np.array(seg, dtype=np.int32)
+        self.zplan_u1 = np.array(u1s, dtype=np.int32)
+        self.zplan_u2 = np.array(u2s, dtype=np.int32)
+        self.zplan_c = np.array(cs)
+
+        # ---- B plan: B_{j1j2j} = 2 * sum_half w * Re(conj(Utot[jju]) Z[jjz]) ----
+        bseg, bu, bz, bw = [], [], [], []
+        for jjb, (j1, j2, j) in enumerate(idxb):
+            jjz = idxz_block[(j1, j2, j)]
+            jju = int(self.idxu_block[j])
+            for mb in range(j // 2 + 1):
+                for ma in range(j + 1):
+                    if 2 * mb < j:
+                        w = 1.0
+                    elif 2 * mb == j:  # middle row of even j
+                        if ma < mb:
+                            w = 1.0
+                        elif ma == mb:
+                            w = 0.5
+                        else:
+                            w = 0.0
+                    if w != 0.0:
+                        bseg.append(jjb)
+                        bu.append(jju)
+                        bz.append(jjz)
+                        bw.append(w)
+                    jjz += 1
+                    jju += 1
+        self.bplan_seg = np.array(bseg, dtype=np.int32)
+        self.bplan_u = np.array(bu, dtype=np.int32)
+        self.bplan_z = np.array(bz, dtype=np.int32)
+        self.bplan_w = np.array(bw)
+
+        # ---- Y plan: ylist[jju] += fac * beta[jjb] * Z[jjz] ----
+        # The multiplicity factor is how many slots of the *sorted* triple the
+        # output level j occupies: dE/dU_j picks up one term per appearance of
+        # j in B_{j1 j2 j} (verified against jax.grad of the reference energy;
+        # see python/tests/test_adjoint.py).  With this module's B
+        # normalization no (j1+1)/(j+1) rescaling appears.
+        yj, yb, yf = [], [], []
+        for e in self.idxz:
+            j1, j2, j = int(e["j1"]), int(e["j2"]), int(e["j"])
+            lo, mid, hi = sorted((j1, j2, j))
+            jjb = idxb_block[(mid, lo, hi)]
+            fac = 1.0 + (j == j1) + (j == j2)
+            yj.append(int(e["jju"]))
+            yb.append(jjb)
+            yf.append(fac)
+        self.yplan_jju = np.array(yj, dtype=np.int32)
+        self.yplan_jjb = np.array(yb, dtype=np.int32)
+        self.yplan_fac = np.array(yf)
+
+        # ---- per-level recursion coefficients ----
+        self.ca, self.cb, self.usym_sign, self.uhalf_mask = [], [], [], []
+        for j in range(jdim):
+            n = j + 1
+            ca = np.zeros((n, n))
+            cb = np.zeros((n, n))
+            sgn = np.zeros((n, n))
+            half = np.zeros((n, n), dtype=bool)
+            for mb in range(n):
+                for ma in range(n):
+                    sgn[mb, ma] = -1.0 if (ma - mb) % 2 else 1.0
+                    if j >= 1 and 2 * mb <= j:
+                        half[mb, ma] = True
+                        ca[mb, ma] = math.sqrt((j - ma) / (j - mb)) if ma < j else 0.0
+                        cb[mb, ma] = math.sqrt(ma / (j - mb)) if ma > 0 else 0.0
+            if j == 0:
+                half[0, 0] = True
+            self.ca.append(ca)
+            self.cb.append(cb)
+            self.usym_sign.append(sgn)
+            self.uhalf_mask.append(half)
+
+        # ---- dedr half-sum weights, flattened ----
+        w = np.zeros(self.idxu_max)
+        for j in range(jdim):
+            for mb in range(j + 1):
+                for ma in range(j + 1):
+                    jju = self.idxu_block[j] + (j + 1) * mb + ma
+                    if 2 * mb < j:
+                        w[jju] = 1.0
+                    elif 2 * mb == j:
+                        if ma < mb:
+                            w[jju] = 1.0
+                        elif ma == mb:
+                            w[jju] = 0.5
+        self.dedr_w = w
+
+        # ---- self-contribution (wself on diagonal of each level) ----
+        us = []
+        for j in range(jdim):
+            for ma in range(j + 1):
+                us.append(self.idxu_block[j] + (j + 1) * ma + ma)
+        self.uself_idx = np.array(us, dtype=np.int32)
+
+    # -- helpers ---------------------------------------------------------
+
+    def flat_u(self, j: int, mb: int, ma: int) -> int:
+        return int(self.idxu_block[j]) + (j + 1) * mb + ma
+
+    def level_slices(self):
+        """(j, start, stop) for each U level in the flat layout."""
+        out = []
+        for j in range(self.twojmax + 1):
+            s = int(self.idxu_block[j])
+            out.append((j, s, s + (j + 1) * (j + 1)))
+        return out
+
+    @property
+    def num_bispectrum(self) -> int:
+        return self.idxb_max
+
+
+_CACHE: dict = {}
+
+
+def get_index(twojmax: int) -> SnapIndex:
+    """Memoized SnapIndex constructor (plans for 2J=14 take a moment to build)."""
+    if twojmax not in _CACHE:
+        _CACHE[twojmax] = SnapIndex(twojmax)
+    return _CACHE[twojmax]

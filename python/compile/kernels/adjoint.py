@@ -1,0 +1,194 @@
+"""Hand-coded adjoint (Y-based) SNAP force path -- the paper's section IV.
+
+Instead of materializing Zlist (O(J^5) per atom) and dBlist (O(J^5 N_nbor)),
+define the adjoint of B with respect to U:
+
+    Y_j = sum_{j1 j2} beta^j_{j1 j2} Z^j_{j1 j2}          (eq. 7)
+
+so the force contraction collapses to a single bispectrum index:
+
+    F_k = - sum_i sum_j  Y_j : dU_j^* / dr_k              (eq. 8)
+
+This module implements compute_Y (via the flattened contraction plan),
+the dU recursion (derivative of the Wigner recursion, eq. 9), and the
+fused dE contraction (the paper's ``compute_fused_dE``).  It must agree
+with ``jax.grad`` of the reference energy to machine precision -- that
+equivalence (noted by the paper, citing Bachmayr et al.) is enforced by
+``python/tests/test_adjoint.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.indexsets import SnapIndex, get_index
+from compile.kernels.ref import (
+    SnapParams,
+    cayley_klein,
+    compute_dsfac,
+    compute_sfac,
+    compute_ulist_levels,
+    compute_ulisttot,
+    flatten_levels,
+    safe_rij,
+)
+
+jax.config.update("jax_enable_x64", True)
+
+
+# ---------------------------------------------------------------------------
+# compute_Y: Z computed on the fly, immediately contracted with beta
+# ---------------------------------------------------------------------------
+
+def compute_ylist(utot, beta, idx: SnapIndex):
+    """Y accumulation (eq. 7): ylist[jju] += fac * beta[jjb] * Z[jjz].
+
+    utot: (..., idxu_max) complex; beta: (idxb_max,).
+    Returns (..., idxu_max) complex; only the half 2*mb <= j is populated
+    (all the dE contraction reads).  No Zlist is ever materialized across
+    atoms -- each Z element is consumed the moment it is complete, which is
+    the entire point of the refactorization.
+    """
+    u1 = utot[..., np.asarray(idx.zplan_u1)]
+    u2 = utot[..., np.asarray(idx.zplan_u2)]
+    terms = np.asarray(idx.zplan_c) * u1 * u2
+    seg = np.asarray(idx.zplan_seg)
+    ztmp = jnp.zeros(terms.shape[:-1] + (idx.idxz_max,), dtype=terms.dtype)
+    ztmp = ztmp.at[..., seg].add(terms)
+    coef = np.asarray(idx.yplan_fac) * beta[np.asarray(idx.yplan_jjb)]
+    y = jnp.zeros(terms.shape[:-1] + (idx.idxu_max,), dtype=terms.dtype)
+    return y.at[..., np.asarray(idx.yplan_jju)].add(coef * ztmp)
+
+
+# ---------------------------------------------------------------------------
+# compute_dU: derivative of the Wigner recursion w.r.t. r_ij
+# ---------------------------------------------------------------------------
+
+def cayley_klein_derivatives(rij, p: SnapParams):
+    """a, b and their Cartesian derivatives da/dr_k, db/dr_k (k = x,y,z).
+
+    Follows LAMMPS SNA::compute_duarray pre-computation exactly.
+    Returns (a, b, da, db, r, sfac, dsfac, uhat) where da/db have a trailing
+    axis of length 3 and uhat = r_ij / |r_ij|.
+    """
+    x, y, z = rij[..., 0], rij[..., 1], rij[..., 2]
+    r = jnp.sqrt(x * x + y * y + z * z)
+    rinv = 1.0 / r
+    ux, uy, uz = x * rinv, y * rinv, z * rinv
+    uhat = jnp.stack([ux, uy, uz], axis=-1)
+
+    rscale0 = p.rfac0 * jnp.pi / (p.rcut - p.rmin0)
+    theta0 = (r - p.rmin0) * rscale0
+    cs, sn = jnp.cos(theta0), jnp.sin(theta0)
+    z0 = r * cs / sn
+    dz0dr = z0 / r - r * rscale0 * (r * r + z0 * z0) / (r * r)
+
+    r0inv = 1.0 / jnp.sqrt(r * r + z0 * z0)
+    a = r0inv * (z0 - 1j * z)
+    b = r0inv * (y - 1j * x)
+
+    dr0invdr = -(r0inv ** 3) * (r + z0 * dz0dr)
+    dr0inv = dr0invdr[..., None] * uhat          # (..., 3)
+    dz0 = dz0dr[..., None] * uhat                # (..., 3)
+
+    da = dz0 * r0inv[..., None] + z0[..., None] * dr0inv \
+        - 1j * (z[..., None] * dr0inv)
+    # da_i[2] += -r0inv
+    da = da.at[..., 2].add(-1j * r0inv)
+
+    db = y[..., None] * dr0inv - 1j * (x[..., None] * dr0inv)
+    db = db.at[..., 0].add(-1j * r0inv)
+    db = db.at[..., 1].add(r0inv)
+
+    return a, b, da, db, r, uhat
+
+
+def compute_dulist_levels(a, b, da, db, ulevels, idx: SnapIndex):
+    """Derivative recursion: du_j from (u_{j-1}, du_{j-1}) by the product rule.
+
+    a, b: (...,) complex; da, db: (..., 3) complex; ulevels: output of
+    compute_ulist_levels.  Returns list over j of (..., j+1, j+1, 3) complex.
+    """
+    batch = a.shape
+    dlevels = [jnp.zeros(batch + (1, 1, 3), dtype=jnp.complex128)]
+    ac, bc = jnp.conj(a)[..., None, None, None], jnp.conj(b)[..., None, None, None]
+    dac, dbc = jnp.conj(da)[..., None, None, :], jnp.conj(db)[..., None, None, :]
+    for j in range(1, idx.twojmax + 1):
+        uprev = ulevels[j - 1]          # (..., j, j)
+        dprev = dlevels[-1]             # (..., j, j, 3)
+        pads = [(0, 0)] * len(batch)
+        up = jnp.pad(uprev, pads + [(0, 1), (0, 1)])[..., None]  # (..., j+1, j+1, 1)
+        dp = jnp.pad(dprev, pads + [(0, 1), (0, 1), (0, 0)])
+        up_m = jnp.roll(up, 1, axis=-2).at[..., 0, :].set(0.0)
+        dp_m = jnp.roll(dp, 1, axis=-2).at[..., 0, :].set(0.0)
+        ca = np.asarray(idx.ca[j])[..., None]
+        cb = np.asarray(idx.cb[j])[..., None]
+        du_left = (
+            ca * (dac * up + ac * dp)
+            - cb * (dbc * up_m + bc * dp_m)
+        )
+        sgn = np.asarray(idx.usym_sign[j])[..., None]
+        du_sym = sgn * jnp.conj(jnp.flip(du_left, axis=(-3, -2)))
+        half = np.asarray(idx.uhalf_mask[j])[..., None]
+        dlevels.append(jnp.where(half, du_left, du_sym))
+    return dlevels
+
+
+def compute_dulist(rij, mask, p: SnapParams, idx: SnapIndex):
+    """Full dU_total/dr_k per (atom, neighbor): dsfac*uhat*u + sfac*du.
+
+    Returns (..., idxu_max, 3) complex, already masked.
+    """
+    rs = safe_rij(rij, mask, p)
+    a, b, da, db, r, uhat = cayley_klein_derivatives(rs, p)
+    ulevels = compute_ulist_levels(a, b, idx)
+    dlevels = compute_dulist_levels(a, b, da, db, ulevels, idx)
+    batch = a.shape
+    uflat = flatten_levels(ulevels)  # (..., idxu)
+    dflat = jnp.concatenate(
+        [lv.reshape(batch + (-1, 3)) for lv in dlevels], axis=-2
+    )  # (..., idxu, 3)
+    sfac = (compute_sfac(r, p) * mask)[..., None, None]
+    dsfac = (compute_dsfac(r, p) * mask)[..., None, None]
+    return dsfac * uflat[..., None] * uhat[..., None, :] + sfac * dflat
+
+
+# ---------------------------------------------------------------------------
+# compute_dE: the fused force contraction (eq. 8)
+# ---------------------------------------------------------------------------
+
+def compute_dedr(dulist, ylist, idx: SnapIndex):
+    """dE/dr_ij[k] = 2 * sum_half w_jju * Re(dU[jju,k] * conj(Y[jju])).
+
+    dulist: (A, N, idxu, 3); ylist: (A, idxu).  Returns (A, N, 3).
+    """
+    w = np.asarray(idx.dedr_w)
+    yc = jnp.conj(ylist)[..., None, :, None]  # (A, 1, idxu, 1)
+    terms = jnp.real(dulist * yc) * w[:, None]
+    return 2.0 * jnp.sum(terms, axis=-2)
+
+
+def snap_adjoint(rij, mask, beta, p: SnapParams):
+    """Adjoint-path energies + per-pair force contractions.
+
+    Must match ``ref.snap_ref`` to machine precision (the section-IV
+    equivalence).  This is the computation the Pallas kernels and the Rust
+    engines implement.
+    """
+    from compile.kernels.ref import compute_blist, compute_zlist
+
+    idx = get_index(p.twojmax)
+    utot = compute_ulisttot(rij, mask, p, idx)
+    # Energy still needs B (cheap, atom-level): Z recomputed streamingly.
+    zl = compute_zlist(utot, idx)
+    ei = compute_blist(utot, zl, idx) @ beta
+    ylist = compute_ylist(utot, beta, idx)
+    dulist = compute_dulist(rij, mask, p, idx)
+    dedr = compute_dedr(dulist, ylist, idx)
+    return ei, dedr
+
+
+def snap_adjoint_jit(p: SnapParams):
+    return jax.jit(lambda rij, mask, beta: snap_adjoint(rij, mask, beta, p))

@@ -1,0 +1,213 @@
+"""Pure-jnp reference implementation of the SNAP bispectrum potential.
+
+This is the oracle every other implementation (the hand-coded adjoint path,
+the Pallas kernels, and the native Rust engines via golden vectors) is
+validated against.  It follows the *original* Listing-1 structure of the
+paper: ``compute_U`` -> ``compute_Z`` (Zlist fully materialized, the O(J^5)
+storage the paper's adjoint refactorization removes) -> ``compute_B`` ->
+energy.  Forces come from ``jax.grad`` of the energy: the paper (section IV,
+citing Bachmayr et al.) notes the adjoint refactorization *is* backward
+differentiation, so autodiff of this reference is the ground truth the
+hand-coded Y/dU path must match to machine precision.
+
+Conventions
+-----------
+* ``rij``  : (A, N, 3) float64, displacement r_k - r_i for each neighbor.
+* ``mask`` : (A, N) float64 in {0, 1}; masked (padded) lanes contribute
+  nothing (their switching function is forced to zero).
+* ``beta`` : (num_bispectrum,) float64 linear SNAP coefficients.
+* All j indices are LAMMPS-doubled integers (j == 2*j_physical).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.indexsets import SnapIndex, get_index
+
+jax.config.update("jax_enable_x64", True)
+
+
+@dataclass(frozen=True)
+class SnapParams:
+    """Hyper-parameters of the SNAP descriptor (LAMMPS pair_style snap names)."""
+
+    twojmax: int = 8
+    rcutfac: float = 4.73442  # the W benchmark cutoff, Angstrom
+    rfac0: float = 0.99363
+    rmin0: float = 0.0
+    wself: float = 1.0
+
+    @property
+    def rcut(self) -> float:
+        return self.rcutfac
+
+
+# ---------------------------------------------------------------------------
+# geometry -> Cayley-Klein parameters
+# ---------------------------------------------------------------------------
+
+def compute_sfac(r, p: SnapParams):
+    """Switching function: 1 at r<=rmin0, smooth cosine to 0 at rcut."""
+    x = (r - p.rmin0) / (p.rcut - p.rmin0)
+    s = 0.5 * (jnp.cos(jnp.pi * x) + 1.0)
+    s = jnp.where(r <= p.rmin0, 1.0, s)
+    return jnp.where(r >= p.rcut, 0.0, s)
+
+
+def compute_dsfac(r, p: SnapParams):
+    """d(sfac)/dr."""
+    x = (r - p.rmin0) / (p.rcut - p.rmin0)
+    d = -0.5 * jnp.pi / (p.rcut - p.rmin0) * jnp.sin(jnp.pi * x)
+    d = jnp.where(r <= p.rmin0, 0.0, d)
+    return jnp.where(r >= p.rcut, 0.0, d)
+
+
+def cayley_klein(rij, p: SnapParams):
+    """Map displacement vectors to the Cayley-Klein parameters (a, b).
+
+    Returns complex a, b with |a|^2+|b|^2 = 1, plus r and z0 (for dU).
+    """
+    x, y, z = rij[..., 0], rij[..., 1], rij[..., 2]
+    r = jnp.sqrt(x * x + y * y + z * z)
+    rscale0 = p.rfac0 * jnp.pi / (p.rcut - p.rmin0)
+    theta0 = (r - p.rmin0) * rscale0
+    z0 = r * jnp.cos(theta0) / jnp.sin(theta0)
+    r0inv = 1.0 / jnp.sqrt(r * r + z0 * z0)
+    a = r0inv * (z0 - 1j * z)
+    b = r0inv * (y - 1j * x)
+    return a, b, r, z0
+
+
+def safe_rij(rij, mask, p: SnapParams):
+    """Replace masked/degenerate displacements with a benign dummy vector so
+    the recursion produces finite values (they are zeroed by sfac*mask)."""
+    dummy = np.array([0.0, 0.0, 0.5 * p.rcut])
+    m = mask[..., None] > 0.5
+    return jnp.where(m, rij, dummy)
+
+
+# ---------------------------------------------------------------------------
+# compute_U: Wigner-U recursion, level by level
+# ---------------------------------------------------------------------------
+
+def compute_ulist_levels(a, b, idx: SnapIndex):
+    """Per-neighbor Wigner matrices U_j for all levels.
+
+    a, b: (...,) complex Cayley-Klein parameters.
+    Returns a list over j of complex arrays (..., j+1, j+1) with axes
+    (mb, ma) so that C-order flattening matches the LAMMPS jju layout.
+    """
+    batch = a.shape
+    levels = [jnp.ones(batch + (1, 1), dtype=jnp.complex128)]
+    ac, bc = jnp.conj(a), jnp.conj(b)
+    for j in range(1, idx.twojmax + 1):
+        prev = levels[-1]  # (..., j, j)
+        prev_p = jnp.pad(prev, [(0, 0)] * len(batch) + [(0, 1), (0, 1)])
+        # shift along ma (last axis): shifted[..., ma] = prev_p[..., ma-1]
+        prev_m = jnp.roll(prev_p, 1, axis=-1).at[..., 0].set(0.0)
+        ca = np.asarray(idx.ca[j])
+        cb = np.asarray(idx.cb[j])
+        u_left = (
+            ca * ac[..., None, None] * prev_p
+            - cb * bc[..., None, None] * prev_m
+        )
+        sgn = np.asarray(idx.usym_sign[j])
+        u_sym = sgn * jnp.conj(jnp.flip(u_left, axis=(-2, -1)))
+        half = np.asarray(idx.uhalf_mask[j])
+        levels.append(jnp.where(half, u_left, u_sym))
+    return levels
+
+
+def flatten_levels(levels):
+    """Concatenate per-level matrices into the flat idxu layout."""
+    batch = levels[0].shape[:-2]
+    return jnp.concatenate(
+        [lv.reshape(batch + (-1,)) for lv in levels], axis=-1
+    )
+
+
+def compute_ulisttot(rij, mask, p: SnapParams, idx: SnapIndex):
+    """Eq. (1): density expansion coefficients, summed over neighbors,
+    plus the wself self-contribution on each level diagonal.
+
+    rij: (A, N, 3); mask: (A, N).  Returns complex (A, idxu_max).
+    """
+    rs = safe_rij(rij, mask, p)
+    a, b, r, _ = cayley_klein(rs, p)
+    ulist = flatten_levels(compute_ulist_levels(a, b, idx))  # (A, N, idxu)
+    sfac = compute_sfac(r, p) * mask  # (A, N)
+    utot = jnp.sum(sfac[..., None] * ulist, axis=-2)  # (A, idxu)
+    self_c = jnp.zeros(utot.shape[-1:], dtype=jnp.complex128)
+    self_c = self_c.at[np.asarray(idx.uself_idx)].set(p.wself + 0.0j)
+    return utot + self_c
+
+
+# ---------------------------------------------------------------------------
+# compute_Z / compute_B via the contraction plans
+# ---------------------------------------------------------------------------
+
+def compute_zlist(utot, idx: SnapIndex):
+    """Eq. (2-3): Clebsch-Gordan products, fully materialized Zlist.
+
+    utot: (..., idxu_max) complex.  Returns (..., idxz_max) complex.
+    This *is* the O(J^5)-storage structure the adjoint refactorization
+    eliminates -- kept here deliberately as the baseline formulation.
+    """
+    u1 = utot[..., np.asarray(idx.zplan_u1)]
+    u2 = utot[..., np.asarray(idx.zplan_u2)]
+    terms = np.asarray(idx.zplan_c) * u1 * u2
+    seg = np.asarray(idx.zplan_seg)
+    out = jnp.zeros(terms.shape[:-1] + (idx.idxz_max,), dtype=terms.dtype)
+    return out.at[..., seg].add(terms)
+
+
+def compute_blist(utot, zlist, idx: SnapIndex):
+    """Bispectrum components B_l = 2 * sum_half w * Re(conj(Utot) Z)."""
+    u = utot[..., np.asarray(idx.bplan_u)]
+    z = zlist[..., np.asarray(idx.bplan_z)]
+    terms = np.asarray(idx.bplan_w) * jnp.real(jnp.conj(u) * z)
+    seg = np.asarray(idx.bplan_seg)
+    out = jnp.zeros(terms.shape[:-1] + (idx.idxb_max,), dtype=terms.dtype)
+    return 2.0 * out.at[..., seg].add(terms)
+
+
+def compute_bispectrum(rij, mask, p: SnapParams):
+    """Full descriptor pipeline: (A, N, 3) -> (A, num_bispectrum)."""
+    idx = get_index(p.twojmax)
+    utot = compute_ulisttot(rij, mask, p, idx)
+    zlist = compute_zlist(utot, idx)
+    return compute_blist(utot, zlist, idx)
+
+
+# ---------------------------------------------------------------------------
+# energy + autodiff forces (the oracle)
+# ---------------------------------------------------------------------------
+
+def energy_per_atom(rij, mask, beta, p: SnapParams):
+    """E_i = sum_l beta_l B_l(i)   (eq. 4; constant coeff0 handled by L3)."""
+    b = compute_bispectrum(rij, mask, p)
+    return b @ beta
+
+
+def snap_ref(rij, mask, beta, p: SnapParams):
+    """Reference energies + dE_i/d(r_ij): the ground-truth oracle.
+
+    Returns (ei (A,), dedr (A, N, 3)).  dedr is the per-pair gradient; the
+    MD layer assembles forces as F_i += sum_n dedr[i,n], F_k -= dedr[i,n].
+    """
+    def etot(r):
+        return jnp.sum(energy_per_atom(r, mask, beta, p))
+
+    ei = energy_per_atom(rij, mask, beta, p)
+    dedr = jax.grad(etot)(rij)
+    return ei, dedr
+
+
+def snap_ref_jit(p: SnapParams):
+    """Jitted closure over static params."""
+    return jax.jit(lambda rij, mask, beta: snap_ref(rij, mask, beta, p))

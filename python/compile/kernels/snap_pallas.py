@@ -1,0 +1,406 @@
+"""Layer-1 Pallas kernels for the SNAP force pipeline.
+
+Three kernels mirror the paper's final (section VI) kernel structure,
+rethought for a TPU-shaped machine (DESIGN.md section 3 "Hardware
+adaptation"):
+
+* ``compute_ui``  -- one grid step per atom tile; the Wigner recursion is
+  unrolled over its <= twojmax+1 static levels and the neighbor sum is a
+  dense reduction over the neighbor axis *inside* the kernel (the
+  TPU-idiomatic replacement for the paper's ``Kokkos::atomic_add``).
+* ``compute_zy``  -- the adjoint contraction (eq. 7): Z elements are
+  produced by a flattened gather + segment-sum contraction plan and consumed
+  immediately into Y and B; no Zlist ever exists in HBM.
+* ``compute_dei`` -- the paper's ``compute_fused_dE``: dU is *recomputed*
+  level-by-level (recompute-instead-of-load, section VI-A) and contracted
+  against Y on the fly; only the (A, N, 3) force contributions are written.
+
+All static index structure (recursion coefficients, contraction plans,
+half-sum weights) is passed to the kernels as explicit operands with a
+broadcast BlockSpec: Pallas kernels may not close over array constants, and
+on a real TPU these tables would be streamed HBM->VMEM once per tile exactly
+as expressed here.
+
+All kernels take/return split real+imag float64 arrays at their boundaries
+(the paper splits complex atomics into real/imag halves for the same
+data-movement reason); complex arithmetic lives only inside a kernel
+invocation, i.e. in VMEM.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernels lower to plain HLO.  VMEM footprints per tile
+are estimated analytically in DESIGN.md / EXPERIMENTS.md section Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from compile.indexsets import get_index
+from compile.kernels.ref import SnapParams
+
+jax.config.update("jax_enable_x64", True)
+
+# Default atom-tile height.  For a real TPU this would be a multiple of the
+# sublane count; 8 keeps the per-tile VMEM estimate of the 2J14 dU working
+# set under the 16 MB VMEM budget -- see EXPERIMENTS.md section Perf.
+DEFAULT_TILE = 8
+
+
+# ---------------------------------------------------------------------------
+# static tables, stacked dense for kernel transport
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def recursion_tables(twojmax: int):
+    """Stacked per-level recursion coefficient tables.
+
+    Returns (CA, CB, SGN, HALF, SELF): the first four are
+    (jdim, jdim, jdim) float64, zero-padded outside each level's (j+1, j+1)
+    square; SELF is the flat wself diagonal vector (idxu_max,).
+    """
+    idx = get_index(twojmax)
+    jdim = twojmax + 1
+    CA = np.zeros((jdim, jdim, jdim))
+    CB = np.zeros((jdim, jdim, jdim))
+    SGN = np.zeros((jdim, jdim, jdim))
+    HALF = np.zeros((jdim, jdim, jdim))
+    for j in range(jdim):
+        n = j + 1
+        CA[j, :n, :n] = idx.ca[j]
+        CB[j, :n, :n] = idx.cb[j]
+        SGN[j, :n, :n] = idx.usym_sign[j]
+        HALF[j, :n, :n] = idx.uhalf_mask[j].astype(float)
+    SELF = np.zeros(idx.idxu_max)
+    SELF[np.asarray(idx.uself_idx)] = 1.0
+    return CA, CB, SGN, HALF, SELF
+
+
+@functools.lru_cache(maxsize=None)
+def zy_tables(twojmax: int):
+    """Contraction-plan operands for the zy kernel (see indexsets.SnapIndex)."""
+    idx = get_index(twojmax)
+    return (
+        idx.zplan_u1.astype(np.int32),
+        idx.zplan_u2.astype(np.int32),
+        idx.zplan_seg.astype(np.int32),
+        idx.zplan_c.astype(np.float64),
+        idx.yplan_fac.astype(np.float64),
+        idx.yplan_jjb.astype(np.int32),
+        idx.yplan_jju.astype(np.int32),
+        idx.bplan_u.astype(np.int32),
+        idx.bplan_z.astype(np.int32),
+        idx.bplan_seg.astype(np.int32),
+        idx.bplan_w.astype(np.float64),
+    )
+
+
+# ---------------------------------------------------------------------------
+# kernel-local math (operates on transported tables, scalars from params)
+# ---------------------------------------------------------------------------
+
+def _safe(rij, mask, p: SnapParams):
+    """Masked lanes get a benign dummy displacement (scalar-only consts)."""
+    m = (mask > 0.5)[..., None]
+    x = jnp.where(m[..., 0], rij[..., 0], 0.0)
+    y = jnp.where(m[..., 0], rij[..., 1], 0.0)
+    z = jnp.where(m[..., 0], rij[..., 2], 0.5 * p.rcut)
+    return jnp.stack([x, y, z], axis=-1)
+
+
+def _sfac(r, p: SnapParams):
+    x = (r - p.rmin0) / (p.rcut - p.rmin0)
+    s = 0.5 * (jnp.cos(jnp.pi * x) + 1.0)
+    s = jnp.where(r <= p.rmin0, 1.0, s)
+    return jnp.where(r >= p.rcut, 0.0, s)
+
+
+def _dsfac(r, p: SnapParams):
+    x = (r - p.rmin0) / (p.rcut - p.rmin0)
+    d = -0.5 * jnp.pi / (p.rcut - p.rmin0) * jnp.sin(jnp.pi * x)
+    d = jnp.where(r <= p.rmin0, 0.0, d)
+    return jnp.where(r >= p.rcut, 0.0, d)
+
+
+def _ck(rij, p: SnapParams):
+    """Cayley-Klein parameters (kernel-local, scalar constants only)."""
+    x, y, z = rij[..., 0], rij[..., 1], rij[..., 2]
+    r = jnp.sqrt(x * x + y * y + z * z)
+    rscale0 = p.rfac0 * jnp.pi / (p.rcut - p.rmin0)
+    theta0 = (r - p.rmin0) * rscale0
+    z0 = r * jnp.cos(theta0) / jnp.sin(theta0)
+    r0inv = 1.0 / jnp.sqrt(r * r + z0 * z0)
+    a = r0inv * (z0 - 1j * z)
+    b = r0inv * (y - 1j * x)
+    return a, b, r, z0
+
+
+def _ck_derivs(rij, p: SnapParams):
+    """a, b, da/dr_k, db/dr_k, r, uhat -- kernel-local version."""
+    x, y, z = rij[..., 0], rij[..., 1], rij[..., 2]
+    r = jnp.sqrt(x * x + y * y + z * z)
+    rinv = 1.0 / r
+    uhat = rij * rinv[..., None]
+    rscale0 = p.rfac0 * jnp.pi / (p.rcut - p.rmin0)
+    theta0 = (r - p.rmin0) * rscale0
+    z0 = r * jnp.cos(theta0) / jnp.sin(theta0)
+    dz0dr = z0 / r - r * rscale0 * (r * r + z0 * z0) / (r * r)
+    r0inv = 1.0 / jnp.sqrt(r * r + z0 * z0)
+    a = r0inv * (z0 - 1j * z)
+    b = r0inv * (y - 1j * x)
+    dr0invdr = -(r0inv ** 3) * (r + z0 * dz0dr)
+    dr0inv = dr0invdr[..., None] * uhat
+    dz0 = dz0dr[..., None] * uhat
+    da = dz0 * r0inv[..., None] + z0[..., None] * dr0inv - 1j * (z[..., None] * dr0inv)
+    da = da.at[..., 2].add(-1j * r0inv)
+    db = y[..., None] * dr0inv - 1j * (x[..., None] * dr0inv)
+    db = db.at[..., 0].add(-1j * r0inv)
+    db = db.at[..., 1].add(r0inv)
+    return a, b, da, db, r, uhat
+
+
+def _u_levels(a, b, CA, CB, SGN, HALF, twojmax: int):
+    """Wigner recursion from transported coefficient tables.
+
+    Returns list over j of (..., j+1, j+1) complex (axes mb, ma).
+    """
+    batch = a.shape
+    levels = [jnp.ones(batch + (1, 1), dtype=jnp.complex128)]
+    ac, bc = jnp.conj(a), jnp.conj(b)
+    for j in range(1, twojmax + 1):
+        prev = levels[-1]
+        prev_p = jnp.pad(prev, [(0, 0)] * len(batch) + [(0, 1), (0, 1)])
+        prev_m = jnp.roll(prev_p, 1, axis=-1).at[..., 0].set(0.0)
+        ca = CA[j, : j + 1, : j + 1]
+        cb = CB[j, : j + 1, : j + 1]
+        u_left = ca * ac[..., None, None] * prev_p - cb * bc[..., None, None] * prev_m
+        sgn = SGN[j, : j + 1, : j + 1]
+        u_sym = sgn * jnp.conj(jnp.flip(u_left, axis=(-2, -1)))
+        half = HALF[j, : j + 1, : j + 1] > 0.5
+        levels.append(jnp.where(half, u_left, u_sym))
+    return levels
+
+
+def _du_levels(a, b, da, db, ulevels, CA, CB, SGN, HALF, twojmax: int):
+    """Derivative recursion (product rule over _u_levels)."""
+    batch = a.shape
+    dlevels = [jnp.zeros(batch + (1, 1, 3), dtype=jnp.complex128)]
+    ac = jnp.conj(a)[..., None, None, None]
+    bc = jnp.conj(b)[..., None, None, None]
+    dac = jnp.conj(da)[..., None, None, :]
+    dbc = jnp.conj(db)[..., None, None, :]
+    for j in range(1, twojmax + 1):
+        uprev = ulevels[j - 1]
+        dprev = dlevels[-1]
+        pads = [(0, 0)] * len(batch)
+        up = jnp.pad(uprev, pads + [(0, 1), (0, 1)])[..., None]
+        dp = jnp.pad(dprev, pads + [(0, 1), (0, 1), (0, 0)])
+        up_m = jnp.roll(up, 1, axis=-2).at[..., 0, :].set(0.0)
+        dp_m = jnp.roll(dp, 1, axis=-2).at[..., 0, :].set(0.0)
+        ca = CA[j, : j + 1, : j + 1][..., None]
+        cb = CB[j, : j + 1, : j + 1][..., None]
+        du_left = ca * (dac * up + ac * dp) - cb * (dbc * up_m + bc * dp_m)
+        sgn = SGN[j, : j + 1, : j + 1][..., None]
+        du_sym = sgn * jnp.conj(jnp.flip(du_left, axis=(-3, -2)))
+        half = (HALF[j, : j + 1, : j + 1] > 0.5)[..., None]
+        dlevels.append(jnp.where(half, du_left, du_sym))
+    return dlevels
+
+
+def _flatten(levels):
+    batch = levels[0].shape[:-2]
+    return jnp.concatenate([lv.reshape(batch + (-1,)) for lv in levels], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# kernel bodies
+# ---------------------------------------------------------------------------
+
+def _ui_kernel(rij_ref, mask_ref, ca_ref, cb_ref, sgn_ref, half_ref,
+               self_ref, utr_ref, uti_ref, *, p: SnapParams, twojmax: int):
+    """compute_ui: (TA, N, 3) geometry -> (TA, idxu_max) accumulated U."""
+    rij = rij_ref[...]
+    mask = mask_ref[...]
+    rs = _safe(rij, mask, p)
+    a, b, r, _ = _ck(rs, p)
+    levels = _u_levels(a, b, ca_ref[...], cb_ref[...], sgn_ref[...],
+                       half_ref[...], twojmax)
+    ulist = _flatten(levels)  # (TA, N, idxu)
+    sfac = _sfac(r, p) * mask
+    utot = jnp.sum(sfac[..., None] * ulist, axis=1)  # neighbor reduction
+    utr_ref[...] = jnp.real(utot) + p.wself * self_ref[...]
+    uti_ref[...] = jnp.imag(utot)
+
+
+def _zy_kernel(utr_ref, uti_ref, beta_ref, zu1_ref, zu2_ref, zseg_ref,
+               zc_ref, yfac_ref, yjjb_ref, yjju_ref, bu_ref, bz_ref,
+               bseg_ref, bw_ref, yr_ref, yi_ref, b_ref, *, idxz_max: int,
+               idxb_max: int):
+    """compute_zy: adjoint Y (eq. 7) + bispectrum B via contraction plans."""
+    utot = utr_ref[...] + 1j * uti_ref[...]  # (TA, idxu)
+    beta = beta_ref[...]
+    u1 = jnp.take(utot, zu1_ref[...], axis=-1)
+    u2 = jnp.take(utot, zu2_ref[...], axis=-1)
+    terms = zc_ref[...] * u1 * u2
+    ztmp = jnp.zeros(terms.shape[:-1] + (idxz_max,), dtype=terms.dtype)
+    ztmp = ztmp.at[..., zseg_ref[...]].add(terms)
+    # Y: scatter-accumulate with the beta multiplicity plan
+    coef = yfac_ref[...] * jnp.take(beta, yjjb_ref[...])
+    y = jnp.zeros(utot.shape, dtype=terms.dtype)
+    y = y.at[..., yjju_ref[...]].add(coef * ztmp)
+    yr_ref[...] = jnp.real(y)
+    yi_ref[...] = jnp.imag(y)
+    # B: half-sum contraction (for the energy output)
+    ub = jnp.take(utot, bu_ref[...], axis=-1)
+    zb = jnp.take(ztmp, bz_ref[...], axis=-1)
+    bterms = bw_ref[...] * jnp.real(jnp.conj(ub) * zb)
+    bl = jnp.zeros(utot.shape[:-1] + (idxb_max,), dtype=bterms.dtype)
+    b_ref[...] = 2.0 * bl.at[..., bseg_ref[...]].add(bterms)
+
+
+def _dei_kernel(rij_ref, mask_ref, yr_ref, yi_ref, ca_ref, cb_ref, sgn_ref,
+                half_ref, w_ref, dedr_ref, *, p: SnapParams, twojmax: int,
+                idxu_block):
+    """compute_fused_dE: recompute u/du per level, contract with Y on the fly.
+
+    The paper's section VI-A kernel: no dUlist is ever stored; each level's
+    dU is consumed against Y the moment it exists, and only dedr leaves.
+    """
+    rij = rij_ref[...]
+    mask = mask_ref[...]
+    y = yr_ref[...] + 1j * yi_ref[...]  # (TA, idxu)
+    rs = _safe(rij, mask, p)
+    a, b, da, db, r, uhat = _ck_derivs(rs, p)
+    sfac = (_sfac(r, p) * mask)[..., None, None]
+    dsfac = (_dsfac(r, p) * mask)[..., None, None]
+    CA, CB, SGN, HALF = ca_ref[...], cb_ref[...], sgn_ref[...], half_ref[...]
+    w = w_ref[...]
+    ulevels = _u_levels(a, b, CA, CB, SGN, HALF, twojmax)
+    dlevels = _du_levels(a, b, da, db, ulevels, CA, CB, SGN, HALF, twojmax)
+    acc = jnp.zeros(rij.shape, dtype=jnp.float64)  # (TA, N, 3)
+    yc = jnp.conj(y)
+    batch = a.shape
+    for j in range(twojmax + 1):
+        n = (j + 1) * (j + 1)
+        s = int(idxu_block[j])
+        uj = ulevels[j].reshape(batch + (n,))
+        dj = dlevels[j].reshape(batch + (n, 3))
+        duj = dsfac * uj[..., None] * uhat[..., None, :] + sfac * dj
+        ycj = yc[:, None, s:s + n, None]        # (TA, 1, n, 1)
+        wj = w[s:s + n]
+        acc = acc + jnp.sum(jnp.real(duj * ycj) * wj[:, None], axis=-2)
+    dedr_ref[...] = 2.0 * acc
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers
+# ---------------------------------------------------------------------------
+
+def _tiles(num_atoms: int, tile: int) -> int:
+    if num_atoms % tile:
+        raise ValueError(f"num_atoms {num_atoms} not a multiple of tile {tile}")
+    return num_atoms // tile
+
+
+def _bcast_spec(arr):
+    """BlockSpec for a table operand broadcast to every grid step."""
+    shape = tuple(arr.shape)  # works for tracers and numpy alike
+    return pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+
+
+def compute_ui(rij, mask, p: SnapParams, tile: int = DEFAULT_TILE):
+    """(A, N, 3), (A, N) -> utot re/im, each (A, idxu_max)."""
+    idx = get_index(p.twojmax)
+    tables = recursion_tables(p.twojmax)
+    A, N, _ = rij.shape
+    grid = (_tiles(A, tile),)
+    out = jax.ShapeDtypeStruct((A, idx.idxu_max), jnp.float64)
+    return pl.pallas_call(
+        functools.partial(_ui_kernel, p=p, twojmax=p.twojmax),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, N, 3), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tile, N), lambda i: (i, 0)),
+            *[_bcast_spec(t) for t in tables],
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, idx.idxu_max), lambda i: (i, 0)),
+            pl.BlockSpec((tile, idx.idxu_max), lambda i: (i, 0)),
+        ],
+        out_shape=[out, out],
+        interpret=True,
+    )(rij, mask, *tables)
+
+
+def compute_zy(utr, uti, beta, p: SnapParams, tile: int = DEFAULT_TILE):
+    """utot re/im (A, idxu), beta (nB,) -> y re/im (A, idxu), blist (A, nB)."""
+    idx = get_index(p.twojmax)
+    tables = zy_tables(p.twojmax)
+    A = utr.shape[0]
+    grid = (_tiles(A, tile),)
+    uo = jax.ShapeDtypeStruct((A, idx.idxu_max), jnp.float64)
+    bo = jax.ShapeDtypeStruct((A, idx.idxb_max), jnp.float64)
+    return pl.pallas_call(
+        functools.partial(
+            _zy_kernel, idxz_max=idx.idxz_max, idxb_max=idx.idxb_max,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, idx.idxu_max), lambda i: (i, 0)),
+            pl.BlockSpec((tile, idx.idxu_max), lambda i: (i, 0)),
+            _bcast_spec(beta),
+            *[_bcast_spec(t) for t in tables],
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, idx.idxu_max), lambda i: (i, 0)),
+            pl.BlockSpec((tile, idx.idxu_max), lambda i: (i, 0)),
+            pl.BlockSpec((tile, idx.idxb_max), lambda i: (i, 0)),
+        ],
+        out_shape=[uo, uo, bo],
+        interpret=True,
+    )(utr, uti, beta, *tables)
+
+
+def compute_dei(rij, mask, yr, yi, p: SnapParams, tile: int = DEFAULT_TILE):
+    """(A, N, 3), (A, N), y re/im (A, idxu) -> dedr (A, N, 3)."""
+    idx = get_index(p.twojmax)
+    CA, CB, SGN, HALF, _ = recursion_tables(p.twojmax)
+    W = idx.dedr_w
+    A, N, _ = rij.shape
+    grid = (_tiles(A, tile),)
+    out = jax.ShapeDtypeStruct((A, N, 3), jnp.float64)
+    return pl.pallas_call(
+        functools.partial(
+            _dei_kernel, p=p, twojmax=p.twojmax,
+            idxu_block=tuple(int(v) for v in idx.idxu_block),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, N, 3), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tile, N), lambda i: (i, 0)),
+            pl.BlockSpec((tile, idx.idxu_max), lambda i: (i, 0)),
+            pl.BlockSpec((tile, idx.idxu_max), lambda i: (i, 0)),
+            _bcast_spec(CA), _bcast_spec(CB), _bcast_spec(SGN),
+            _bcast_spec(HALF), _bcast_spec(W),
+        ],
+        out_specs=[pl.BlockSpec((tile, N, 3), lambda i: (i, 0, 0))],
+        out_shape=[out],
+        interpret=True,
+    )(rij, mask, yr, yi, CA, CB, SGN, HALF, W)[0]
+
+
+def snap_pallas(rij, mask, beta, p: SnapParams, tile: int = DEFAULT_TILE):
+    """Full three-kernel SNAP pipeline: returns (ei (A,), dedr (A, N, 3))."""
+    utr, uti = compute_ui(rij, mask, p, tile)
+    yr, yi, blist = compute_zy(utr, uti, beta, p, tile)
+    ei = blist @ beta
+    dedr = compute_dei(rij, mask, yr, yi, p, tile)
+    return ei, dedr
+
+
+def snap_pallas_jit(p: SnapParams, tile: int = DEFAULT_TILE):
+    return jax.jit(lambda rij, mask, beta: snap_pallas(rij, mask, beta, p, tile))

@@ -1,0 +1,63 @@
+"""Layer-2 JAX model: the batched SNAP force computation.
+
+This is the computation the Rust coordinator executes per tile of atoms on
+the request path (via the AOT-compiled HLO artifact).  Two variants exist:
+
+* ``snap_model``     -- the optimized pipeline built from the three Pallas
+  kernels (compute_ui -> compute_zy -> compute_fused_dE), i.e. the paper's
+  final section-VI structure.
+* ``snap_model_ref`` -- the *baseline* formulation: Listing-1 pipeline with
+  Zlist fully materialized and forces obtained by autodiff.  This is lowered
+  to its own artifact so the Rust benchmark harness can compare
+  baseline-vs-optimized through the identical PJRT execution path
+  (Table I / Fig 4 rows "xla-ref" vs "xla-pallas").
+
+Model I/O contract (enforced by artifacts/<name>.meta.json):
+  inputs : rij  f64[A, N, 3]   displacements r_k - r_i, padded
+           mask f64[A, N]      1.0 for real neighbors, 0.0 for padding
+           beta f64[nB]        linear SNAP coefficients
+  outputs: (ei f64[A], dedr f64[A, N, 3])  as a tuple
+
+Padding rows (whole fake atoms) are harmless: their mask is all zero, so
+they produce E_i = E(isolated atom) and dedr = 0; the coordinator drops them.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.indexsets import get_index
+from compile.kernels.ref import SnapParams, snap_ref
+from compile.kernels.snap_pallas import DEFAULT_TILE, snap_pallas
+
+jax.config.update("jax_enable_x64", True)
+
+
+def snap_model(p: SnapParams, tile: int = DEFAULT_TILE):
+    """The optimized (Pallas) model as a traceable fn(rij, mask, beta)."""
+
+    def fn(rij, mask, beta):
+        ei, dedr = snap_pallas(rij, mask, beta, p, tile)
+        return ei, dedr
+
+    return fn
+
+
+def snap_model_ref(p: SnapParams):
+    """The baseline (Listing-1 + autodiff) model, same I/O contract."""
+
+    def fn(rij, mask, beta):
+        ei, dedr = snap_ref(rij, mask, beta, p)
+        return ei, dedr
+
+    return fn
+
+
+def example_args(num_atoms: int, num_nbor: int, num_b: int):
+    """Shape-only abstract arguments for jax.jit(...).lower()."""
+    return (
+        jax.ShapeDtypeStruct((num_atoms, num_nbor, 3), jnp.float64),
+        jax.ShapeDtypeStruct((num_atoms, num_nbor), jnp.float64),
+        jax.ShapeDtypeStruct((num_b,), jnp.float64),
+    )

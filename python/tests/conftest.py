@@ -1,0 +1,39 @@
+"""Shared fixtures/helpers for the SNAP python test-suite."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from compile.kernels.ref import SnapParams
+
+
+def random_config(rng, num_atoms, num_nbor, p: SnapParams, sparsity=0.2):
+    """Random neighbor geometry: displacements within ~the cutoff shell,
+    with a fraction of lanes masked out (padding)."""
+    rij = rng.uniform(-0.55 * p.rcut, 0.55 * p.rcut, (num_atoms, num_nbor, 3))
+    # keep everything off the degenerate r=0 point
+    norms = np.linalg.norm(rij, axis=-1, keepdims=True)
+    rij = np.where(norms < 0.3, rij + 0.5, rij)
+    mask = (rng.random((num_atoms, num_nbor)) > sparsity).astype(float)
+    return rij, mask
+
+
+def random_rotation(rng):
+    """Uniform-ish random rotation matrix via axis-angle."""
+    axis = rng.normal(size=3)
+    axis /= np.linalg.norm(axis)
+    ang = rng.uniform(0.2, 3.0)
+    K = np.array(
+        [
+            [0, -axis[2], axis[1]],
+            [axis[2], 0, -axis[0]],
+            [-axis[1], axis[0], 0],
+        ]
+    )
+    return np.eye(3) + np.sin(ang) * K + (1 - np.cos(ang)) * (K @ K)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(20260710)

@@ -1,0 +1,185 @@
+"""Unit tests for the static index machinery (Clebsch-Gordan, plans)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.indexsets import (
+    SnapIndex,
+    clebsch_gordan,
+    deltacg,
+    factorial,
+    get_index,
+    triangle_triples,
+)
+
+
+class TestClebschGordan:
+    def test_known_small_values(self):
+        """LAMMPS normalization: values are standard CG divided by
+        sqrt(2j+1) (the deltacg denominator uses (j1+j2+j)/2 + 1)."""
+        # <1/2 1/2 ; 1/2 -1/2 | 0 0> = 1/sqrt(2); j=0 so unchanged
+        v = clebsch_gordan(1, 1, 0, 1, -1, 0)
+        assert v == pytest.approx(1.0 / math.sqrt(2.0))
+        # <1/2 1/2 ; 1/2 1/2 | 1 1> = 1 -> /sqrt(3)
+        assert clebsch_gordan(1, 1, 2, 1, 1, 2) == pytest.approx(1 / math.sqrt(3))
+        # <1 1 ; 1 -1 | 0 0> = 1/sqrt(3); j=0 so unchanged
+        assert clebsch_gordan(2, 2, 0, 2, -2, 0) == pytest.approx(1 / math.sqrt(3))
+        # <1 0 ; 1 0 | 2 0> = sqrt(2/3) -> /sqrt(5)
+        assert clebsch_gordan(2, 2, 4, 0, 0, 0) == pytest.approx(math.sqrt(2 / 15))
+        # <1 0 ; 1 0 | 1 0> = 0 (vanishing by symmetry)
+        assert clebsch_gordan(2, 2, 2, 0, 0, 0) == pytest.approx(0.0)
+
+    def test_projection_conservation(self):
+        assert clebsch_gordan(2, 2, 2, 2, -2, 2) == 0.0
+
+    @given(
+        j1=st.integers(0, 5),
+        j2=st.integers(0, 5),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_orthogonality_rows(self, j1, j2):
+        """sum_j (j+1) * C^{jm}_{j1m1 j2m2} C^{jm}_{j1m1' j2m2'} = delta.
+
+        The (j+1) weight (= 2j+1 physical) restores the standard-CG
+        orthogonality under the LAMMPS 1/sqrt(2j+1) normalization.
+        """
+        for m1 in range(-j1, j1 + 1, 2):
+            for m2 in range(-j2, j2 + 1, 2):
+                for m1p in range(-j1, j1 + 1, 2):
+                    m2p = m1 + m2 - m1p
+                    if abs(m2p) > j2 or (m2p - j2) % 2:
+                        continue
+                    s = 0.0
+                    for j in range(abs(j1 - j2), j1 + j2 + 1, 2):
+                        m = m1 + m2
+                        if abs(m) > j:
+                            continue
+                        s += (j + 1) * clebsch_gordan(
+                            j1, j2, j, m1, m2, m
+                        ) * clebsch_gordan(j1, j2, j, m1p, m2p, m1p + m2p)
+                    expect = 1.0 if (m1 == m1p and m2 == m2p) else 0.0
+                    assert s == pytest.approx(expect, abs=1e-12)
+
+    @given(j1=st.integers(0, 6), j2=st.integers(0, 6))
+    @settings(max_examples=25, deadline=None)
+    def test_swap_symmetry(self, j1, j2):
+        """C_{j1m1 j2m2} = (-1)^{(j1+j2-j)/2} C_{j2m2 j1m1}."""
+        for j in range(abs(j1 - j2), j1 + j2 + 1, 2):
+            phase = (-1.0) ** ((j1 + j2 - j) // 2)
+            for m1 in range(-j1, j1 + 1, 2):
+                for m2 in range(-j2, j2 + 1, 2):
+                    m = m1 + m2
+                    if abs(m) > j:
+                        continue
+                    a = clebsch_gordan(j1, j2, j, m1, m2, m)
+                    b = clebsch_gordan(j2, j1, j, m2, m1, m)
+                    assert a == pytest.approx(phase * b, abs=1e-12)
+
+    def test_deltacg_positive(self):
+        for (j1, j2, j) in triangle_triples(6):
+            assert deltacg(j1, j2, j) > 0
+
+
+class TestIndexCounts:
+    @pytest.mark.parametrize(
+        "tjm,nb", [(2, 5), (4, 14), (6, 30), (8, 55), (10, 91), (14, 204)]
+    )
+    def test_num_bispectrum_matches_paper(self, tjm, nb):
+        """2J=8 -> 55, 2J=14 -> 204 (paper section II-C)."""
+        assert get_index(tjm).idxb_max == nb
+
+    @pytest.mark.parametrize("tjm", [2, 4, 8])
+    def test_idxu_is_sum_of_squares(self, tjm):
+        idx = get_index(tjm)
+        assert idx.idxu_max == sum((j + 1) ** 2 for j in range(tjm + 1))
+        for j in range(tjm + 1):
+            assert idx.idxu_block[j] == sum((k + 1) ** 2 for k in range(j))
+
+    def test_idxz_covers_half(self):
+        idx = get_index(4)
+        expect = sum(
+            (j // 2 + 1) * (j + 1) for (_, _, j) in triangle_triples(4)
+        )
+        assert idx.idxz_max == expect
+
+
+class TestPlans:
+    @pytest.mark.parametrize("tjm", [2, 3, 4, 6])
+    def test_zplan_row_counts(self, tjm):
+        """Each jjz segment must have exactly na*nb rows."""
+        idx = get_index(tjm)
+        counts = np.bincount(idx.zplan_seg, minlength=idx.idxz_max)
+        expect = idx.idxz["na"] * idx.idxz["nb"]
+        assert (counts == expect).all()
+
+    @pytest.mark.parametrize("tjm", [2, 4, 6])
+    def test_plan_indices_in_range(self, tjm):
+        idx = get_index(tjm)
+        for arr, hi in [
+            (idx.zplan_u1, idx.idxu_max),
+            (idx.zplan_u2, idx.idxu_max),
+            (idx.zplan_seg, idx.idxz_max),
+            (idx.yplan_jju, idx.idxu_max),
+            (idx.yplan_jjb, idx.idxb_max),
+            (idx.bplan_u, idx.idxu_max),
+            (idx.bplan_z, idx.idxz_max),
+            (idx.bplan_seg, idx.idxb_max),
+        ]:
+            assert arr.min() >= 0 and arr.max() < hi
+
+    def test_yplan_fac_values(self):
+        """Multiplicity factor is 1 + (j==j1) + (j==j2) (see test_adjoint for
+        the ground-truth derivation against autodiff)."""
+        idx = get_index(6)
+        for e, fac in zip(idx.idxz, idx.yplan_fac[:: max(1, idx.idxz_max // 64)]):
+            pass  # spot-check structure below instead
+        assert set(np.unique(idx.yplan_fac)).issubset({1.0, 2.0, 3.0})
+
+    def test_dedr_weights(self):
+        """Half-sum weights: full matrix sum = 2 * weighted half sum for a
+        symmetric integrand; encoded as sum of w per level == n^2/2."""
+        idx = get_index(6)
+        for j in range(7):
+            s = idx.idxu_block[j]
+            n = (j + 1) * (j + 1)
+            assert idx.dedr_w[s:s + n].sum() == pytest.approx(n / 2.0)
+
+    @pytest.mark.parametrize("tjm", [2, 4])
+    def test_recursion_coeff_tables(self, tjm):
+        idx = get_index(tjm)
+        for j in range(1, tjm + 1):
+            ca, cb = idx.ca[j], idx.cb[j]
+            for mb in range(j // 2 + 1):
+                for ma in range(j + 1):
+                    if ma < j:
+                        assert ca[mb, ma] == pytest.approx(
+                            math.sqrt((j - ma) / (j - mb))
+                        )
+                    if ma > 0:
+                        assert cb[mb, ma] == pytest.approx(
+                            math.sqrt(ma / (j - mb))
+                        )
+
+    def test_uself_hits_diagonals_only(self):
+        idx = get_index(4)
+        hit = np.zeros(idx.idxu_max, dtype=bool)
+        hit[idx.uself_idx] = True
+        for j in range(5):
+            for mb in range(j + 1):
+                for ma in range(j + 1):
+                    jju = idx.flat_u(j, mb, ma)
+                    assert hit[jju] == (ma == mb)
+
+
+class TestFactorial:
+    def test_matches_math(self):
+        for n in range(20):
+            assert factorial(n) == float(math.factorial(n))
+
+    def test_negative_raises(self):
+        with pytest.raises(ValueError):
+            factorial(-1)

@@ -1,0 +1,160 @@
+"""Pallas kernels vs the jnp oracle: the core L1 correctness signal.
+
+Hypothesis sweeps shapes (atoms, neighbors, tiles) and problem sizes
+(twojmax); all arrays are float64 end-to-end (the descriptor recursion is
+numerically delicate -- float32 SNAP is out of scope, as in the paper).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.indexsets import get_index
+from compile.kernels.adjoint import compute_ylist
+from compile.kernels.ref import (
+    SnapParams,
+    compute_bispectrum,
+    compute_ulisttot,
+    snap_ref,
+)
+from compile.kernels.snap_pallas import (
+    compute_dei,
+    compute_ui,
+    compute_zy,
+    snap_pallas,
+)
+from tests.conftest import random_config
+
+
+@pytest.mark.parametrize("tjm,tile", [(2, 2), (4, 4), (8, 8)])
+def test_pipeline_matches_ref(rng, tjm, tile):
+    p = SnapParams(twojmax=tjm)
+    idx = get_index(tjm)
+    A, N = 2 * tile, 11
+    rij, mask = random_config(rng, A, N, p)
+    beta = rng.normal(size=idx.idxb_max)
+    args = (jnp.asarray(rij), jnp.asarray(mask), jnp.asarray(beta))
+    ei_r, dedr_r = snap_ref(*args, p)
+    ei_p, dedr_p = snap_pallas(*args, p, tile=tile)
+    np.testing.assert_allclose(np.array(ei_p), np.array(ei_r), rtol=1e-10)
+    scale = np.abs(np.array(dedr_r)).max() + 1.0
+    np.testing.assert_allclose(
+        np.array(dedr_p) / scale, np.array(dedr_r) / scale, atol=1e-11
+    )
+
+
+def test_ui_kernel_matches_ref(rng):
+    p = SnapParams(twojmax=6)
+    idx = get_index(6)
+    rij, mask = random_config(rng, 8, 9, p)
+    utot_ref = compute_ulisttot(jnp.asarray(rij), jnp.asarray(mask), p, idx)
+    utr, uti = compute_ui(jnp.asarray(rij), jnp.asarray(mask), p, tile=4)
+    np.testing.assert_allclose(np.array(utr), np.real(np.array(utot_ref)), atol=1e-12)
+    np.testing.assert_allclose(np.array(uti), np.imag(np.array(utot_ref)), atol=1e-12)
+
+
+def test_zy_kernel_matches_ref(rng):
+    p = SnapParams(twojmax=6)
+    idx = get_index(6)
+    rij, mask = random_config(rng, 8, 9, p)
+    beta = rng.normal(size=idx.idxb_max)
+    utot = compute_ulisttot(jnp.asarray(rij), jnp.asarray(mask), p, idx)
+    y_ref = compute_ylist(utot, jnp.asarray(beta), idx)
+    b_ref = compute_bispectrum(jnp.asarray(rij), jnp.asarray(mask), p)
+    yr, yi, bl = compute_zy(
+        jnp.real(utot), jnp.imag(utot), jnp.asarray(beta), p, tile=4
+    )
+    np.testing.assert_allclose(np.array(yr), np.real(np.array(y_ref)), atol=1e-11)
+    np.testing.assert_allclose(np.array(yi), np.imag(np.array(y_ref)), atol=1e-11)
+    np.testing.assert_allclose(np.array(bl), np.array(b_ref), atol=1e-11)
+
+
+def test_dei_kernel_matches_ref(rng):
+    p = SnapParams(twojmax=6)
+    idx = get_index(6)
+    rij, mask = random_config(rng, 8, 9, p)
+    beta = rng.normal(size=idx.idxb_max)
+    args = (jnp.asarray(rij), jnp.asarray(mask), jnp.asarray(beta))
+    _, dedr_ref = snap_ref(*args, p)
+    utot = compute_ulisttot(args[0], args[1], p, idx)
+    y = compute_ylist(utot, args[2], idx)
+    dedr = compute_dei(
+        args[0], args[1], jnp.real(y), jnp.imag(y), p, tile=4
+    )
+    scale = np.abs(np.array(dedr_ref)).max() + 1.0
+    np.testing.assert_allclose(
+        np.array(dedr) / scale, np.array(dedr_ref) / scale, atol=1e-11
+    )
+
+
+def test_tile_size_does_not_change_results(rng):
+    """Batching/tiling is numerically inert (coordinator invariant)."""
+    p = SnapParams(twojmax=4)
+    idx = get_index(4)
+    rij, mask = random_config(rng, 8, 7, p)
+    beta = rng.normal(size=idx.idxb_max)
+    args = (jnp.asarray(rij), jnp.asarray(mask), jnp.asarray(beta))
+    outs = [snap_pallas(*args, p, tile=t) for t in (1, 2, 4, 8)]
+    for ei, dedr in outs[1:]:
+        np.testing.assert_allclose(np.array(ei), np.array(outs[0][0]), rtol=1e-12)
+        np.testing.assert_allclose(np.array(dedr), np.array(outs[0][1]), atol=1e-12)
+
+
+def test_non_divisible_tile_raises(rng):
+    p = SnapParams(twojmax=2)
+    idx = get_index(2)
+    rij, mask = random_config(rng, 6, 5, p)
+    beta = rng.normal(size=idx.idxb_max)
+    with pytest.raises(ValueError, match="not a multiple"):
+        snap_pallas(
+            jnp.asarray(rij), jnp.asarray(mask), jnp.asarray(beta), p, tile=4
+        )
+
+
+def test_padded_atom_rows_are_inert(rng):
+    """A fully-masked atom row (batch padding) yields dedr == 0 and the
+    isolated-atom energy -- the coordinator relies on this."""
+    p = SnapParams(twojmax=4)
+    idx = get_index(4)
+    rij, mask = random_config(rng, 4, 6, p, sparsity=0.0)
+    mask[3] = 0.0
+    beta = rng.normal(size=idx.idxb_max)
+    ei, dedr = snap_pallas(
+        jnp.asarray(rij), jnp.asarray(mask), jnp.asarray(beta), p, tile=2
+    )
+    np.testing.assert_allclose(np.array(dedr)[3], 0.0, atol=1e-14)
+    # isolated-atom energy: identical for any fully-masked row
+    rij2 = rng.uniform(-1, 1, rij.shape)
+    rij2[:3] = rij[:3]
+    ei2, _ = snap_pallas(
+        jnp.asarray(rij2), jnp.asarray(mask), jnp.asarray(beta), p, tile=2
+    )
+    assert float(ei[3]) == pytest.approx(float(ei2[3]), rel=1e-12)
+
+
+@given(
+    tile_pow=st.integers(0, 2),
+    ntiles=st.integers(1, 3),
+    nn=st.integers(1, 9),
+    seed=st.integers(0, 2**31),
+    tjm=st.sampled_from([2, 3, 4]),
+)
+@settings(max_examples=10, deadline=None)
+def test_hypothesis_pallas_equals_ref(tile_pow, ntiles, nn, seed, tjm):
+    """Shape sweep: every (tile, atoms, neighbors, 2J) combination agrees."""
+    rng = np.random.default_rng(seed)
+    tile = 2 ** tile_pow
+    p = SnapParams(twojmax=tjm)
+    idx = get_index(tjm)
+    rij, mask = random_config(rng, tile * ntiles, nn, p)
+    beta = rng.normal(size=idx.idxb_max)
+    args = (jnp.asarray(rij), jnp.asarray(mask), jnp.asarray(beta))
+    ei_r, dedr_r = snap_ref(*args, p)
+    ei_p, dedr_p = snap_pallas(*args, p, tile=tile)
+    scale = np.abs(np.array(dedr_r)).max() + 1.0
+    np.testing.assert_allclose(np.array(ei_p), np.array(ei_r), rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(
+        np.array(dedr_p) / scale, np.array(dedr_r) / scale, atol=1e-10
+    )

@@ -1,0 +1,204 @@
+"""Physics-invariant tests of the jnp reference implementation.
+
+These are the *independent* correctness anchors (DESIGN.md section 6): no
+external ground truth exists in this environment, so the oracle itself is
+pinned down by unitarity, rotation invariance, finite differences, and
+permutation/mask invariances.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.indexsets import get_index
+from compile.kernels.ref import (
+    SnapParams,
+    cayley_klein,
+    compute_bispectrum,
+    compute_dsfac,
+    compute_sfac,
+    compute_ulist_levels,
+    compute_ulisttot,
+    energy_per_atom,
+    snap_ref,
+)
+from tests.conftest import random_config, random_rotation
+
+
+class TestCayleyKlein:
+    def test_unit_norm(self, rng):
+        p = SnapParams(twojmax=2)
+        rij = jnp.asarray(rng.uniform(-2, 2, (5, 3)))
+        a, b, r, z0 = cayley_klein(rij, p)
+        np.testing.assert_allclose(
+            np.abs(np.array(a)) ** 2 + np.abs(np.array(b)) ** 2, 1.0, atol=1e-14
+        )
+
+    def test_wigner_unitarity(self, rng):
+        """U_j U_j^dagger = I for every level: validates the recursion."""
+        p = SnapParams(twojmax=8)
+        idx = get_index(8)
+        rij = jnp.asarray(rng.uniform(-2, 2, (4, 3)))
+        a, b, _, _ = cayley_klein(rij, p)
+        for j, lv in enumerate(compute_ulist_levels(a, b, idx)):
+            for k in range(4):
+                U = np.array(lv[k])
+                np.testing.assert_allclose(
+                    U @ U.conj().T, np.eye(j + 1), atol=1e-12
+                )
+
+    def test_level1_closed_form(self, rng):
+        """U_{1/2} = [[a, -conj(b)], [b, conj(a)]] in the (mb, ma) layout."""
+        p = SnapParams(twojmax=1)
+        idx = get_index(1)
+        rij = jnp.asarray(rng.uniform(-2, 2, (3,)))
+        a, b, _, _ = cayley_klein(rij[None], p)
+        lv = compute_ulist_levels(a, b, idx)[1][0]
+        av, bv = complex(np.array(a)[0]), complex(np.array(b)[0])
+        U = np.array(lv)
+        # recursion convention: U[mb, ma]; row mb=0 = (conj(a), -conj(b))
+        assert U[0, 0] == pytest.approx(np.conj(av))
+        assert U[0, 1] == pytest.approx(-np.conj(bv))
+        assert U[1, 0] == pytest.approx(bv)
+        assert U[1, 1] == pytest.approx(av)
+
+
+class TestSwitching:
+    def test_sfac_boundaries(self):
+        p = SnapParams()
+        assert float(compute_sfac(jnp.asarray(0.0), p)) == pytest.approx(1.0)
+        assert float(compute_sfac(jnp.asarray(p.rcut), p)) == 0.0
+        assert float(compute_sfac(jnp.asarray(p.rcut * 2), p)) == 0.0
+        mid = float(compute_sfac(jnp.asarray(p.rcut / 2), p))
+        assert 0.0 < mid < 1.0
+
+    def test_dsfac_is_derivative(self):
+        p = SnapParams()
+        r = jnp.linspace(0.3, p.rcut - 0.05, 37)
+        g = jax.vmap(jax.grad(lambda x: compute_sfac(x, p)))(r)
+        np.testing.assert_allclose(
+            np.array(g), np.array(compute_dsfac(r, p)), atol=1e-12
+        )
+
+
+class TestBispectrumInvariances:
+    @pytest.mark.parametrize("tjm", [2, 4, 8])
+    def test_rotation_invariance(self, rng, tjm):
+        p = SnapParams(twojmax=tjm)
+        rij, mask = random_config(rng, 3, 8, p)
+        Q = random_rotation(rng)
+        b1 = np.array(compute_bispectrum(jnp.asarray(rij), jnp.asarray(mask), p))
+        b2 = np.array(
+            compute_bispectrum(jnp.asarray(rij @ Q.T), jnp.asarray(mask), p)
+        )
+        np.testing.assert_allclose(b1, b2, rtol=1e-10, atol=1e-10)
+
+    def test_neighbor_permutation_invariance(self, rng):
+        p = SnapParams(twojmax=6)
+        rij, mask = random_config(rng, 2, 9, p, sparsity=0.0)
+        perm = rng.permutation(9)
+        b1 = np.array(compute_bispectrum(jnp.asarray(rij), jnp.asarray(mask), p))
+        b2 = np.array(
+            compute_bispectrum(jnp.asarray(rij[:, perm]), jnp.asarray(mask), p)
+        )
+        np.testing.assert_allclose(b1, b2, rtol=1e-12)
+
+    def test_masked_lane_is_inert(self, rng):
+        """Adding a masked garbage neighbor changes nothing."""
+        p = SnapParams(twojmax=4)
+        rij, mask = random_config(rng, 2, 6, p, sparsity=0.0)
+        b1 = np.array(compute_bispectrum(jnp.asarray(rij), jnp.asarray(mask), p))
+        rij2 = np.concatenate([rij, rng.normal(size=(2, 1, 3))], axis=1)
+        mask2 = np.concatenate([mask, np.zeros((2, 1))], axis=1)
+        b2 = np.array(compute_bispectrum(jnp.asarray(rij2), jnp.asarray(mask2), p))
+        np.testing.assert_allclose(b1, b2, rtol=1e-12)
+
+    def test_out_of_cutoff_neighbor_is_inert(self, rng):
+        p = SnapParams(twojmax=4)
+        rij, mask = random_config(rng, 2, 6, p, sparsity=0.0)
+        b1 = np.array(compute_bispectrum(jnp.asarray(rij), jnp.asarray(mask), p))
+        far = np.zeros((2, 1, 3))
+        far[..., 0] = p.rcut * 1.7
+        rij2 = np.concatenate([rij, far], axis=1)
+        mask2 = np.concatenate([mask, np.ones((2, 1))], axis=1)
+        b2 = np.array(compute_bispectrum(jnp.asarray(rij2), jnp.asarray(mask2), p))
+        np.testing.assert_allclose(b1, b2, rtol=1e-12)
+
+    def test_isolated_atom_b_is_constant(self):
+        """With no neighbors only wself survives: B is a geometry-independent
+        constant vector (the bzero shift of LAMMPS)."""
+        p = SnapParams(twojmax=4)
+        rij = jnp.zeros((2, 3, 3))
+        mask = jnp.zeros((2, 3))
+        b = np.array(compute_bispectrum(rij, mask, p))
+        np.testing.assert_allclose(b[0], b[1], rtol=1e-14)
+        assert np.all(np.isfinite(b))
+
+
+class TestForces:
+    @pytest.mark.parametrize("tjm", [2, 6])
+    def test_finite_difference(self, rng, tjm):
+        """F = -dE/dr by central differences: the gold-standard check."""
+        p = SnapParams(twojmax=tjm)
+        idx = get_index(tjm)
+        rij, mask = random_config(rng, 2, 5, p)
+        beta = rng.normal(size=idx.idxb_max)
+        args = (jnp.asarray(mask), jnp.asarray(beta), p)
+        ei, dedr = snap_ref(jnp.asarray(rij), *args)
+        h = 1e-6
+        for (a, n, k) in [(0, 1, 0), (1, 3, 2), (0, 4, 1)]:
+            rp, rm = rij.copy(), rij.copy()
+            rp[a, n, k] += h
+            rm[a, n, k] -= h
+            ep = float(jnp.sum(energy_per_atom(jnp.asarray(rp), *args)))
+            em = float(jnp.sum(energy_per_atom(jnp.asarray(rm), *args)))
+            fd = (ep - em) / (2 * h)
+            assert fd == pytest.approx(float(dedr[a, n, k]), rel=2e-6, abs=1e-8)
+
+    def test_forces_corotate(self, rng):
+        p = SnapParams(twojmax=4)
+        idx = get_index(4)
+        rij, mask = random_config(rng, 3, 6, p)
+        beta = rng.normal(size=idx.idxb_max)
+        Q = random_rotation(rng)
+        _, d1 = snap_ref(jnp.asarray(rij), jnp.asarray(mask), jnp.asarray(beta), p)
+        _, d2 = snap_ref(
+            jnp.asarray(rij @ Q.T), jnp.asarray(mask), jnp.asarray(beta), p
+        )
+        np.testing.assert_allclose(
+            np.array(d2), np.array(d1) @ Q.T, rtol=1e-9, atol=1e-9
+        )
+
+    def test_energy_linear_in_beta(self, rng):
+        p = SnapParams(twojmax=4)
+        idx = get_index(4)
+        rij, mask = random_config(rng, 2, 5, p)
+        b1 = rng.normal(size=idx.idxb_max)
+        b2 = rng.normal(size=idx.idxb_max)
+        e = lambda b: np.array(
+            energy_per_atom(jnp.asarray(rij), jnp.asarray(mask), jnp.asarray(b), p)
+        )
+        np.testing.assert_allclose(
+            e(b1) + e(b2), e(b1 + b2), rtol=1e-10, atol=1e-12
+        )
+
+
+@given(
+    na=st.integers(1, 4),
+    nn=st.integers(1, 10),
+    seed=st.integers(0, 2**31),
+    tjm=st.sampled_from([2, 3, 4]),
+)
+@settings(max_examples=15, deadline=None)
+def test_hypothesis_rotation_invariance(na, nn, seed, tjm):
+    """Property sweep: invariance holds for arbitrary shapes/geometries."""
+    rng = np.random.default_rng(seed)
+    p = SnapParams(twojmax=tjm)
+    rij, mask = random_config(rng, na, nn, p)
+    Q = random_rotation(rng)
+    b1 = np.array(compute_bispectrum(jnp.asarray(rij), jnp.asarray(mask), p))
+    b2 = np.array(compute_bispectrum(jnp.asarray(rij @ Q.T), jnp.asarray(mask), p))
+    np.testing.assert_allclose(b1, b2, rtol=1e-8, atol=1e-8)

@@ -1,0 +1,8 @@
+//! Bench: Fig. 1 — pre-adjoint staging (runtime + memory/OOM study).
+use repro::experiments::{self, ExpOpts};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let opts = if quick { ExpOpts::quick() } else { ExpOpts::default() };
+    println!("{}", experiments::run("fig1", &opts).unwrap());
+}

@@ -1,0 +1,8 @@
+//! Bench: Fig. 3 — the V1..V7 optimization ladder at 2J=14.
+use repro::experiments::{self, ExpOpts};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let opts = if quick { ExpOpts::quick() } else { ExpOpts::default() };
+    println!("{}", experiments::run("fig3", &opts).unwrap());
+}

@@ -1,0 +1,9 @@
+//! Bench: Fig. 4 — final (section VI) implementation vs baseline + memory.
+use repro::experiments::{self, ExpOpts};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let opts = if quick { ExpOpts::quick() } else { ExpOpts::default() };
+    println!("{}", experiments::run("fig4", &opts).unwrap());
+    println!("{}", experiments::run("memory", &opts).unwrap());
+}

@@ -1,0 +1,110 @@
+//! Bench: per-kernel micro-benchmarks (the profiling substrate of the perf
+//! pass, and the section-VI per-kernel isolation numbers).
+//!
+//! `cargo bench --bench kernels [-- --quick]`
+
+use repro::bench::{measure, Workload};
+use repro::snap::coeff::SnapCoeffs;
+use repro::snap::kernels;
+use repro::snap::wigner::{compute_dulist_pair, compute_ulist_pair, PairGeom};
+use repro::snap::{SnapIndex, SnapParams};
+use std::hint::black_box;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (reps, cells) = if quick { (1, 3) } else { (5, 5) };
+    for twojmax in [8usize, 14] {
+        let params = SnapParams::with_twojmax(twojmax);
+        let idx = SnapIndex::new(twojmax);
+        let beta = SnapCoeffs::synthetic(twojmax, idx.idxb_max, 42).beta;
+        let w = Workload::tungsten(if twojmax == 14 { cells.min(3) } else { cells }, params.rcut());
+        let npairs = w.mask.iter().filter(|&&m| m > 0.0).count();
+        println!(
+            "# kernels @ 2J={twojmax}: {} atoms, {npairs} pairs, idxu={}, idxz={}, zplan_rows={}",
+            w.num_atoms, idx.idxu_max, idx.idxz_max, idx.zplan_seg.len()
+        );
+
+        let iu = idx.idxu_max;
+        let g = PairGeom::new([1.3, -0.9, 1.8], &params);
+        let mut u_r = vec![0.0; iu];
+        let mut u_i = vec![0.0; iu];
+        let s = measure(
+            || {
+                for _ in 0..1000 {
+                    compute_ulist_pair(&g, &idx, &mut u_r, &mut u_i);
+                    black_box(&u_r);
+                }
+            },
+            1,
+            reps,
+        );
+        println!("  compute_ulist_pair     : {:>10.3} us/pair", s.min_secs * 1e3);
+
+        let mut du_r = vec![0.0; iu * 3];
+        let mut du_i = vec![0.0; iu * 3];
+        let s = measure(
+            || {
+                for _ in 0..1000 {
+                    compute_dulist_pair(&g, &idx, &u_r, &u_i, &mut du_r, &mut du_i);
+                    black_box(&du_r);
+                }
+            },
+            1,
+            reps,
+        );
+        println!("  compute_dulist_pair    : {:>10.3} us/pair", s.min_secs * 1e3);
+
+        // per-atom stages on realistic utot
+        let mut ut_r = vec![0.0; iu];
+        let mut ut_i = vec![0.0; iu];
+        let mut sr = vec![0.0; iu];
+        let mut si = vec![0.0; iu];
+        let rows = (0..w.num_nbor).map(|n| {
+            let o = n * 3;
+            ([w.rij[o], w.rij[o + 1], w.rij[o + 2]], w.mask[n] > 0.5)
+        });
+        kernels::compute_utot_atom(&idx, &params, rows, &mut sr, &mut si, &mut ut_r, &mut ut_i);
+
+        let mut z_r = vec![0.0; idx.idxz_max];
+        let mut z_i = vec![0.0; idx.idxz_max];
+        let s = measure(
+            || {
+                kernels::compute_zlist(&idx, &ut_r, &ut_i, &mut z_r, &mut z_i);
+                black_box(&z_r);
+            },
+            1,
+            reps,
+        );
+        println!("  compute_zlist (atom)   : {:>10.3} us/atom", s.min_secs * 1e6);
+
+        let mut y_r = vec![0.0; iu];
+        let mut y_i = vec![0.0; iu];
+        let s = measure(
+            || {
+                kernels::compute_ylist(&idx, &ut_r, &ut_i, &beta, &mut y_r, &mut y_i);
+                black_box(&y_r);
+            },
+            1,
+            reps,
+        );
+        println!("  compute_ylist (atom)   : {:>10.3} us/atom", s.min_secs * 1e6);
+
+        let s = measure(
+            || {
+                let d = kernels::compute_dedr_pair(&idx, &du_r, &du_i, &y_r, &y_i);
+                black_box(d);
+            },
+            1,
+            reps,
+        );
+        println!("  compute_dedr (pair)    : {:>10.3} us/pair", s.min_secs * 1e6);
+        println!();
+    }
+    // the section-VI stage-isolation comparisons
+    let opts = if quick {
+        repro::experiments::ExpOpts::quick()
+    } else {
+        repro::experiments::ExpOpts::default()
+    };
+    println!("{}", repro::experiments::run("stages", &opts).unwrap());
+}

@@ -1,0 +1,9 @@
+//! Bench: Table I — speed (Katom-steps/s) by backend.
+//! `cargo bench --bench table1 [-- --quick]`
+use repro::experiments::{self, ExpOpts};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let opts = if quick { ExpOpts::quick() } else { ExpOpts::default() };
+    println!("{}", experiments::run("table1", &opts).unwrap());
+}

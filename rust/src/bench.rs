@@ -1,0 +1,161 @@
+//! Benchmark utilities: wall-clock measurement with warmup + repeats, the
+//! paper's figures of merit (grind-time, Katom-steps/s), and workload
+//! builders for the benchmark geometry.
+//!
+//! criterion is unavailable offline, so `benches/*.rs` use this module with
+//! `harness = false`.
+
+use crate::md::{lattice, NeighborList, Structure};
+use crate::snap::engine::{ForceEngine, TileInput};
+use crate::util::Stopwatch;
+
+/// Timing statistics over repeats.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStats {
+    pub mean_secs: f64,
+    pub min_secs: f64,
+    pub stddev_secs: f64,
+    pub reps: usize,
+}
+
+impl BenchStats {
+    pub fn format_ms(&self) -> String {
+        format!(
+            "{:.3} ms ±{:.3} (min {:.3}, n={})",
+            self.mean_secs * 1e3,
+            self.stddev_secs * 1e3,
+            self.min_secs * 1e3,
+            self.reps
+        )
+    }
+}
+
+/// Measure a closure: `warmup` unmeasured calls then `reps` timed calls.
+pub fn measure<F: FnMut()>(mut f: F, warmup: usize, reps: usize) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps.max(1) {
+        let sw = Stopwatch::start();
+        f();
+        samples.push(sw.elapsed_secs());
+    }
+    let n = samples.len() as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+    BenchStats {
+        mean_secs: mean,
+        min_secs: samples.iter().copied().fold(f64::INFINITY, f64::min),
+        stddev_secs: var.sqrt(),
+        reps: samples.len(),
+    }
+}
+
+/// A frozen benchmark workload: one force evaluation's worth of tiles.
+pub struct Workload {
+    pub structure: Structure,
+    pub neighbors: NeighborList,
+    pub rij: Vec<f64>,
+    pub mask: Vec<f64>,
+    pub num_atoms: usize,
+    pub num_nbor: usize,
+}
+
+impl Workload {
+    /// The paper's benchmark geometry: bcc W with exactly 26 neighbors per
+    /// atom at the 2J8 cutoff; `cells` scales the atom count (10 -> 2000).
+    pub fn tungsten(cells: usize, cutoff: f64) -> Self {
+        assert!(
+            cells as f64 * lattice::BCC_W_LATTICE > 2.0 * cutoff,
+            "need >= {} cells for cutoff {cutoff} (minimum-image)",
+            (2.0 * cutoff / lattice::BCC_W_LATTICE).ceil()
+        );
+        let structure = lattice::bcc(cells, cells, cells, lattice::BCC_W_LATTICE, 183.84);
+        Self::from_structure(structure, cutoff)
+    }
+
+    pub fn from_structure(structure: Structure, cutoff: f64) -> Self {
+        let neighbors = NeighborList::build_cells(&structure, cutoff);
+        let num_atoms = structure.natoms();
+        let num_nbor = neighbors.max_count();
+        let mut rij = vec![0.0; num_atoms * num_nbor * 3];
+        let mut mask = vec![0.0; num_atoms * num_nbor];
+        for a in 0..num_atoms {
+            for (slot, (_, d)) in neighbors.row(a).enumerate() {
+                let o = (a * num_nbor + slot) * 3;
+                rij[o] = d[0];
+                rij[o + 1] = d[1];
+                rij[o + 2] = d[2];
+                mask[a * num_nbor + slot] = 1.0;
+            }
+        }
+        Self { structure, neighbors, rij, mask, num_atoms, num_nbor }
+    }
+
+    pub fn tile(&self) -> TileInput<'_> {
+        TileInput {
+            num_atoms: self.num_atoms,
+            num_nbor: self.num_nbor,
+            rij: &self.rij,
+            mask: &self.mask,
+        }
+    }
+}
+
+/// One engine-vs-workload measurement in the paper's units.
+#[derive(Clone, Debug)]
+pub struct GrindResult {
+    pub engine: String,
+    /// Seconds per force evaluation of the whole workload (= one MD step's
+    /// force work, the dominant cost).
+    pub secs_per_step: f64,
+    /// The paper's speed metric.
+    pub katom_steps_per_sec: f64,
+    /// grind-time: microseconds per atom-step.
+    pub us_per_atom_step: f64,
+    pub stats: BenchStats,
+}
+
+/// Time one engine on one workload.
+pub fn grind(engine: &mut dyn ForceEngine, w: &Workload, warmup: usize, reps: usize) -> GrindResult {
+    let tile = w.tile();
+    let stats = measure(
+        || {
+            let out = engine.compute(&tile);
+            std::hint::black_box(&out);
+        },
+        warmup,
+        reps,
+    );
+    let secs = stats.min_secs; // min = least-noise estimate on a busy host
+    GrindResult {
+        engine: engine.name().to_string(),
+        secs_per_step: secs,
+        katom_steps_per_sec: w.num_atoms as f64 / secs / 1e3,
+        us_per_atom_step: secs * 1e6 / w.num_atoms as f64,
+        stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_reps() {
+        let mut calls = 0;
+        let s = measure(|| calls += 1, 2, 5);
+        assert_eq!(calls, 7);
+        assert_eq!(s.reps, 5);
+        assert!(s.min_secs <= s.mean_secs);
+    }
+
+    #[test]
+    fn tungsten_workload_geometry() {
+        let w = Workload::tungsten(5, 4.73442);
+        assert_eq!(w.num_atoms, 250);
+        assert_eq!(w.num_nbor, 26); // the paper's 26 neighbors
+        assert_eq!(w.mask.iter().filter(|&&m| m > 0.0).count(), 250 * 26);
+    }
+}

@@ -1,0 +1,194 @@
+//! Run configuration: a TOML-subset parser + the engine factory shared by
+//! the CLI, the examples and the experiment harness.
+//!
+//! The TOML subset supports flat `key = value` lines with strings, numbers
+//! and booleans plus `[section]` headers flattened to `section.key` — all
+//! this project's configs need, hand-rolled because the build is offline.
+
+use crate::snap::coeff::SnapCoeffs;
+use crate::snap::engine::ForceEngine;
+use crate::snap::variants::Variant;
+use crate::snap::SnapIndex;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Flat TOML-subset document.
+#[derive(Clone, Debug, Default)]
+pub struct Toml {
+    map: BTreeMap<String, String>,
+}
+
+impl Toml {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap().trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: bad section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let mut val = v.trim().to_string();
+            if val.starts_with('"') && val.ends_with('"') && val.len() >= 2 {
+                val = val[1..val.len() - 1].to_string();
+            }
+            map.insert(key, val);
+        }
+        Ok(Self { map })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("config key {key} = {v}: {e}")),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+}
+
+/// Build any named engine.  Names: `baseline`, `pre-adjoint-atom`,
+/// `pre-adjoint-pair`, `V1`..`V7`, `fused`, `aosoa`, or `xla:<artifact>`
+/// (e.g. `xla:snap_2j8`).
+pub fn build_engine(
+    name: &str,
+    twojmax: usize,
+    beta: Vec<f64>,
+    artifacts_dir: &str,
+) -> Result<Box<dyn ForceEngine>> {
+    if let Some(artifact) = name.strip_prefix("xla:") {
+        let rt = crate::runtime::Runtime::open(artifacts_dir)?;
+        let meta = rt
+            .meta(artifact)
+            .with_context(|| format!("unknown artifact {artifact}"))?;
+        anyhow::ensure!(
+            meta.twojmax == twojmax,
+            "artifact {artifact} is 2J={} but run wants 2J={twojmax}",
+            meta.twojmax
+        );
+        return Ok(Box::new(crate::runtime::XlaEngine::new(rt, artifact, beta)?));
+    }
+    let variant = match name {
+        "baseline" | "V0" => Variant::V0Baseline,
+        "pre-adjoint-atom" => Variant::PreAdjointAtom,
+        "pre-adjoint-pair" => Variant::PreAdjointPair,
+        "V1" => Variant::V1,
+        "V2" => Variant::V2,
+        "V3" => Variant::V3,
+        "V4" => Variant::V4,
+        "V5" => Variant::V5,
+        "V6" => Variant::V6,
+        "V7" => Variant::V7,
+        "fused" => Variant::Fused,
+        "aosoa" => Variant::FusedAosoa,
+        other => bail!("unknown engine `{other}`"),
+    };
+    let params = crate::snap::SnapParams::with_twojmax(twojmax);
+    let idx = Arc::new(SnapIndex::new(twojmax));
+    anyhow::ensure!(
+        beta.len() == idx.idxb_max,
+        "beta length {} != {} bispectrum components",
+        beta.len(),
+        idx.idxb_max
+    );
+    Ok(variant.build(params, idx, beta))
+}
+
+/// Resolve coefficients from an input-script coefficient source.
+pub fn resolve_coeffs(
+    source: &crate::io::script::CoeffSource,
+    twojmax: usize,
+) -> Result<SnapCoeffs> {
+    let idx = SnapIndex::new(twojmax);
+    match source {
+        crate::io::script::CoeffSource::Synthetic(seed) => {
+            Ok(SnapCoeffs::synthetic(twojmax, idx.idxb_max, *seed))
+        }
+        crate::io::script::CoeffSource::File(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading {path}"))?;
+            let params = crate::snap::SnapParams::with_twojmax(twojmax);
+            let c = SnapCoeffs::parse_snapcoeff(&text, params)?;
+            anyhow::ensure!(
+                c.beta.len() == idx.idxb_max,
+                "coeff file has {} coefficients, 2J={twojmax} needs {}",
+                c.beta.len(),
+                idx.idxb_max
+            );
+            Ok(c)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn toml_subset_parses() {
+        let t = Toml::parse(
+            "a = 1\nname = \"hello\"  # comment\n[md]\nsteps = 50\ndt = 0.0005\n",
+        )
+        .unwrap();
+        assert_eq!(t.get("a"), Some("1"));
+        assert_eq!(t.get("name"), Some("hello"));
+        assert_eq!(t.get_or::<usize>("md.steps", 0).unwrap(), 50);
+        assert_eq!(t.get_or::<f64>("md.dt", 0.0).unwrap(), 0.0005);
+        assert_eq!(t.get_or::<usize>("absent", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn toml_rejects_garbage() {
+        assert!(Toml::parse("[unclosed\n").is_err());
+        assert!(Toml::parse("novalue\n").is_err());
+    }
+
+    #[test]
+    fn engine_factory_builds_every_native_name() {
+        for name in [
+            "baseline", "pre-adjoint-atom", "pre-adjoint-pair", "V1", "V2", "V3",
+            "V4", "V5", "V6", "V7", "fused", "aosoa",
+        ] {
+            let idx = SnapIndex::new(2);
+            let beta = vec![0.1; idx.idxb_max];
+            let e = build_engine(name, 2, beta, "artifacts").unwrap();
+            assert!(!e.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn engine_factory_rejects_unknown() {
+        assert!(build_engine("warp-drive", 2, vec![0.0; 5], "artifacts").is_err());
+    }
+
+    #[test]
+    fn engine_factory_checks_beta_length() {
+        assert!(build_engine("fused", 8, vec![0.0; 3], "artifacts").is_err());
+    }
+}

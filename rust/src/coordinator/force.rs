@@ -1,0 +1,216 @@
+//! Tile batching + force assembly.
+
+use crate::md::{NeighborList, Structure};
+use crate::snap::engine::{ForceEngine, TileInput};
+use crate::util::StageTimes;
+
+/// Global result of one force evaluation.
+#[derive(Clone, Debug)]
+pub struct ForceResult {
+    /// Per-atom potential energies (without coeff0), len N.
+    pub ei: Vec<f64>,
+    /// Forces, 3N.
+    pub forces: Vec<f64>,
+    /// Virial tensor W = -sum_(i,k) r_ik (x) dedr(i,k), row-major 3x3.
+    pub virial: [f64; 9],
+}
+
+impl ForceResult {
+    pub fn e_pot(&self) -> f64 {
+        self.ei.iter().sum()
+    }
+}
+
+/// The force field: an engine + batching geometry.
+pub struct ForceField {
+    pub engine: Box<dyn ForceEngine>,
+    /// Atoms per dispatched tile.
+    pub tile_atoms: usize,
+    /// Neighbor slots per atom row (must be >= max neighbor count).
+    pub tile_nbor: usize,
+    pub times: StageTimes,
+}
+
+impl ForceField {
+    pub fn new(engine: Box<dyn ForceEngine>, tile_atoms: usize, tile_nbor: usize) -> Self {
+        Self { engine, tile_atoms, tile_nbor, times: StageTimes::new() }
+    }
+
+    /// Evaluate energies/forces/virial for the whole system.
+    ///
+    /// Padding contract: rows beyond an atom's neighbor count carry
+    /// mask = 0 and are inert (enforced by engine tests); whole padded
+    /// atoms never occur here because tiles are cut from real atoms only.
+    pub fn compute(&mut self, s: &Structure, nl: &NeighborList) -> ForceResult {
+        let n = s.natoms();
+        assert_eq!(nl.natoms(), n, "neighbor list does not match structure");
+        let maxn = nl.max_count();
+        assert!(
+            maxn <= self.tile_nbor,
+            "an atom has {maxn} neighbors > tile_nbor {}; increase tile_nbor",
+            self.tile_nbor
+        );
+        let nn = self.tile_nbor;
+        let mut result = ForceResult {
+            ei: vec![0.0; n],
+            forces: vec![0.0; 3 * n],
+            virial: [0.0; 9],
+        };
+        let ta = self.tile_atoms.max(1);
+        let mut rij = vec![0.0; ta * nn * 3];
+        let mut mask = vec![0.0; ta * nn];
+        let mut nbr_ids: Vec<u32> = vec![0; ta * nn];
+
+        for tile_start in (0..n).step_by(ta) {
+            let count = ta.min(n - tile_start);
+            // ---- pack ----
+            self.times.time("pack", || {
+                rij[..count * nn * 3].fill(0.0);
+                mask[..count * nn].fill(0.0);
+                for a in 0..count {
+                    let atom = tile_start + a;
+                    for (slot, (j, d)) in nl.row(atom).enumerate() {
+                        let o = (a * nn + slot) * 3;
+                        rij[o] = d[0];
+                        rij[o + 1] = d[1];
+                        rij[o + 2] = d[2];
+                        mask[a * nn + slot] = 1.0;
+                        nbr_ids[a * nn + slot] = j;
+                    }
+                }
+            });
+            // ---- execute ----
+            let input = TileInput {
+                num_atoms: count,
+                num_nbor: nn,
+                rij: &rij[..count * nn * 3],
+                mask: &mask[..count * nn],
+            };
+            let out = self.times.time("execute", || self.engine.compute(&input));
+            // ---- scatter ----
+            self.times.time("scatter", || {
+                for a in 0..count {
+                    let atom = tile_start + a;
+                    result.ei[atom] = out.ei[a];
+                    for slot in 0..nn {
+                        if mask[a * nn + slot] == 0.0 {
+                            continue;
+                        }
+                        let j = nbr_ids[a * nn + slot] as usize;
+                        let o = (a * nn + slot) * 3;
+                        let d = [out.dedr[o], out.dedr[o + 1], out.dedr[o + 2]];
+                        // F_i += dedr, F_j -= dedr  (r_ij = r_j - r_i)
+                        for k in 0..3 {
+                            result.forces[3 * atom + k] += d[k];
+                            result.forces[3 * j + k] -= d[k];
+                        }
+                        // virial W -= r_ij (x) dedr
+                        let r = [rij[o], rij[o + 1], rij[o + 2]];
+                        for (ki, rk) in r.iter().enumerate() {
+                            for (kj, dk) in d.iter().enumerate() {
+                                result.virial[3 * ki + kj] -= rk * dk;
+                            }
+                        }
+                    }
+                }
+            });
+        }
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::md::{lattice, NeighborList};
+    use crate::snap::baseline::{BaselineEngine, Staging};
+    use crate::snap::coeff::SnapCoeffs;
+    use crate::snap::{SnapIndex, SnapParams};
+    use std::sync::Arc;
+
+    fn small_system() -> (crate::md::Structure, NeighborList, ForceField) {
+        let p = SnapParams::with_twojmax(2);
+        let idx = Arc::new(SnapIndex::new(2));
+        let coeffs = SnapCoeffs::synthetic(2, idx.idxb_max, 3);
+        let mut s = lattice::bcc(3, 3, 3, 3.18, 183.84);
+        let mut rng = crate::util::XorShift::new(8);
+        s.jitter(0.05, &mut rng);
+        s.wrap_all();
+        let nl = NeighborList::build_cells(&s, p.rcut());
+        let eng = Box::new(BaselineEngine::new(p, idx, coeffs.beta, Staging::Monolithic));
+        let ff = ForceField::new(eng, 16, nl.max_count().max(1));
+        (s, nl, ff)
+    }
+
+    #[test]
+    fn newton_third_law_total_force_zero() {
+        let (s, nl, mut ff) = small_system();
+        let r = ff.compute(&s, &nl);
+        for k in 0..3 {
+            let total: f64 = (0..s.natoms()).map(|i| r.forces[3 * i + k]).sum();
+            assert!(total.abs() < 1e-9, "net force axis {k}: {total}");
+        }
+    }
+
+    #[test]
+    fn tile_size_does_not_change_physics() {
+        let (s, nl, mut ff) = small_system();
+        let want = ff.compute(&s, &nl);
+        for ta in [1usize, 5, 27, 64] {
+            let (s2, nl2, mut ff2) = small_system();
+            ff2.tile_atoms = ta;
+            let got = ff2.compute(&s2, &nl2);
+            let _ = s2;
+            for (a, b) in want.forces.iter().zip(got.forces.iter()) {
+                assert!((a - b).abs() < 1e-10, "tile {ta}");
+            }
+            assert!((want.e_pot() - got.e_pot()).abs() < 1e-10);
+        }
+        let _ = nl;
+    }
+
+    #[test]
+    fn perfect_lattice_has_zero_force() {
+        // by symmetry every bcc site is an inversion center
+        let p = SnapParams::with_twojmax(2);
+        let idx = Arc::new(SnapIndex::new(2));
+        let coeffs = SnapCoeffs::synthetic(2, idx.idxb_max, 3);
+        let s = lattice::bcc(3, 3, 3, 3.18, 183.84);
+        let nl = NeighborList::build_cells(&s, p.rcut());
+        let eng = Box::new(BaselineEngine::new(p, idx, coeffs.beta, Staging::Monolithic));
+        let mut ff = ForceField::new(eng, 32, nl.max_count());
+        let r = ff.compute(&s, &nl);
+        for f in &r.forces {
+            assert!(f.abs() < 1e-9, "lattice force {f}");
+        }
+        // all atoms equivalent -> identical energies
+        for e in &r.ei {
+            assert!((e - r.ei[0]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn forces_match_finite_difference_of_total_energy() {
+        let (mut s, _, mut ff) = small_system();
+        let h = 1e-5;
+        let nl0 = NeighborList::build_cells(&s, 4.73442);
+        let r0 = ff.compute(&s, &nl0);
+        for probe in [(3usize, 0usize), (10, 2)] {
+            let (i, k) = probe;
+            let orig = s.pos[3 * i + k];
+            s.pos[3 * i + k] = orig + h;
+            let nlp = NeighborList::build_cells(&s, 4.73442);
+            let ep = ff.compute(&s, &nlp).e_pot();
+            s.pos[3 * i + k] = orig - h;
+            let nlm = NeighborList::build_cells(&s, 4.73442);
+            let em = ff.compute(&s, &nlm).e_pot();
+            s.pos[3 * i + k] = orig;
+            let fd = -(ep - em) / (2.0 * h);
+            let got = r0.forces[3 * i + k];
+            assert!(
+                (fd - got).abs() < 1e-5 * (1.0 + got.abs()),
+                "atom {i} axis {k}: fd {fd} vs {got}"
+            );
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! The L3 coordinator: turns neighbor lists into padded tiles, routes them
+//! to a `ForceEngine` (native or PJRT), scatters per-pair results back into
+//! global forces/virial, and drives the MD loop.
+//!
+//! This is the layer the paper's LAMMPS/Kokkos driver occupies; here it
+//! owns batching geometry (tile sizes), the neighbor-rebuild policy, the
+//! thermostat, metrics, and the thermo log.
+
+pub mod force;
+pub mod server;
+pub mod sim;
+
+pub use force::{ForceField, ForceResult};
+pub use sim::{SimConfig, Simulation};

@@ -1,0 +1,140 @@
+//! A minimal force server: newline-delimited JSON over TCP.
+//!
+//! This exercises the coordinator as a *service* (the shape a production
+//! deployment of an ML potential takes: a central process owning the
+//! compiled executable, clients submitting neighborhood batches).  Protocol:
+//!
+//! request:  {"num_atoms": A, "num_nbor": N, "rij": [...3AN...], "mask": [...AN...]}\n
+//! response: {"ok": true, "ei": [...A...], "dedr": [...3AN...]}\n
+//!
+//! The listener is single-threaded-accept with sequential request handling
+//! per connection (the engine itself is the bottleneck; see DESIGN.md).
+
+use crate::snap::engine::{ForceEngine, TileInput};
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Serve requests until `stop` flips true (checked between connections).
+pub fn serve(
+    listener: TcpListener,
+    mut engine: Box<dyn ForceEngine>,
+    stop: Arc<AtomicBool>,
+) -> std::io::Result<()> {
+    listener.set_nonblocking(true)?;
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(false)?;
+                if let Err(e) = handle(stream, engine.as_mut()) {
+                    eprintln!("force-server connection error: {e}");
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+fn handle(stream: TcpStream, engine: &mut dyn ForceEngine) -> std::io::Result<()> {
+    let peer = stream.try_clone()?;
+    let reader = BufReader::new(peer);
+    let mut writer = stream;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match process(&line, engine) {
+            Ok(r) => r,
+            Err(msg) => format!("{{\"ok\": false, \"error\": \"{msg}\"}}"),
+        };
+        writer.write_all(reply.as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    Ok(())
+}
+
+fn process(line: &str, engine: &mut dyn ForceEngine) -> Result<String, String> {
+    let j = Json::parse(line).map_err(|e| e.to_string())?;
+    let na = j
+        .get("num_atoms")
+        .and_then(Json::as_usize)
+        .ok_or("missing num_atoms")?;
+    let nn = j
+        .get("num_nbor")
+        .and_then(Json::as_usize)
+        .ok_or("missing num_nbor")?;
+    let rij = j
+        .get("rij")
+        .and_then(Json::as_f64_vec)
+        .ok_or("missing rij")?;
+    let mask = j
+        .get("mask")
+        .and_then(Json::as_f64_vec)
+        .ok_or("missing mask")?;
+    if rij.len() != na * nn * 3 || mask.len() != na * nn {
+        return Err("shape mismatch".to_string());
+    }
+    let out = engine.compute(&TileInput { num_atoms: na, num_nbor: nn, rij: &rij, mask: &mask });
+    let fmt = |v: &[f64]| {
+        let items: Vec<String> = v.iter().map(|x| format!("{x:.17e}")).collect();
+        format!("[{}]", items.join(","))
+    };
+    Ok(format!(
+        "{{\"ok\": true, \"ei\": {}, \"dedr\": {}}}",
+        fmt(&out.ei),
+        fmt(&out.dedr)
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snap::coeff::SnapCoeffs;
+    use crate::snap::fused::{FusedConfig, FusedEngine};
+    use crate::snap::{SnapIndex, SnapParams};
+    use std::io::BufRead;
+
+    #[test]
+    fn roundtrip_request() {
+        let p = SnapParams::with_twojmax(2);
+        let idx = std::sync::Arc::new(SnapIndex::new(2));
+        let coeffs = SnapCoeffs::synthetic(2, idx.idxb_max, 3);
+        let engine: Box<dyn ForceEngine> = Box::new(FusedEngine::new(
+            p, idx, coeffs.beta, FusedConfig::default(), "fused",
+        ));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let h = std::thread::spawn(move || serve(listener, engine, stop2));
+
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let req = format!(
+            "{{\"num_atoms\": 1, \"num_nbor\": 2, \"rij\": [1.5,0,0, 0,1.5,0], \"mask\": [1,1]}}\n"
+        );
+        conn.write_all(req.as_bytes()).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\": true"), "{line}");
+        assert!(line.contains("dedr"));
+        // malformed request gets an error, not a crash
+        conn.write_all(b"{\"num_atoms\": 1}\n").unwrap();
+        let mut line2 = String::new();
+        reader.read_line(&mut line2).unwrap();
+        assert!(line2.contains("\"ok\": false"));
+        // close *both* clones of the client socket so the server's read
+        // loop sees EOF and returns to accept()
+        drop(reader);
+        drop(conn);
+        stop.store(true, Ordering::Relaxed);
+        h.join().unwrap().unwrap();
+    }
+}

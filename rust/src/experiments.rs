@@ -1,0 +1,481 @@
+//! The experiment harness: regenerates every table and figure of the paper
+//! (DESIGN.md section 5 maps IDs to paper artifacts).
+//!
+//! Absolute numbers belong to *this* testbed (a single-core CPU container;
+//! the paper used a V100-16GB), so each report prints the paper's expected
+//! values alongside the measured ones and EXPERIMENTS.md records the
+//! comparison of *shape* (ordering, rough factors, feasibility boundaries).
+
+use crate::bench::{grind, GrindResult, Workload};
+use crate::snap::coeff::SnapCoeffs;
+use crate::snap::memory::V100_BUDGET;
+use crate::snap::variants::Variant;
+use crate::snap::{SnapIndex, SnapParams};
+use std::fmt::Write as _;
+use std::sync::Arc;
+
+/// Harness options.
+#[derive(Clone, Debug)]
+pub struct ExpOpts {
+    /// bcc cells per axis for the 2J8 workload (10 = the paper's 2000 atoms).
+    pub cells8: usize,
+    /// cells per axis for the 2J14 workload (O(J^7) cost; default smaller).
+    pub cells14: usize,
+    pub warmup: usize,
+    pub reps: usize,
+    pub artifacts_dir: String,
+    /// Include the PJRT-backed engines where applicable (table1).
+    pub with_xla: bool,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        Self {
+            cells8: 10,
+            cells14: 4,
+            warmup: 1,
+            reps: 3,
+            artifacts_dir: "artifacts".into(),
+            with_xla: true,
+        }
+    }
+}
+
+impl ExpOpts {
+    pub fn quick() -> Self {
+        // 3 cells is the smallest box compatible with the 4.73 A cutoff
+        Self { cells8: 4, cells14: 3, warmup: 0, reps: 1, ..Self::default() }
+    }
+}
+
+fn beta_for(twojmax: usize) -> Vec<f64> {
+    let idx = SnapIndex::new(twojmax);
+    SnapCoeffs::synthetic(twojmax, idx.idxb_max, 42).beta
+}
+
+/// Run a set of variants on one workload, returning grind results.
+pub fn run_ladder(
+    variants: &[Variant],
+    twojmax: usize,
+    cells: usize,
+    warmup: usize,
+    reps: usize,
+) -> Vec<GrindResult> {
+    let params = SnapParams::with_twojmax(twojmax);
+    let idx = Arc::new(SnapIndex::new(twojmax));
+    let beta = beta_for(twojmax);
+    let w = Workload::tungsten(cells, params.rcut());
+    variants
+        .iter()
+        .map(|v| {
+            let mut eng = v.build(params, idx.clone(), beta.clone());
+            let mut r = grind(eng.as_mut(), &w, warmup, reps);
+            r.engine = v.label().to_string();
+            r
+        })
+        .collect()
+}
+
+fn speedup_table(
+    title: &str,
+    results: &[GrindResult],
+    paper: &[(&str, &str)],
+    natoms: usize,
+) -> String {
+    let mut s = String::new();
+    let base = results[0].secs_per_step;
+    let _ = writeln!(s, "## {title}");
+    let _ = writeln!(s, "workload: {natoms} atoms, 26 neighbors/atom\n");
+    let _ = writeln!(
+        s,
+        "| variant | time/step | Katom-steps/s | speedup vs baseline | paper |"
+    );
+    let _ = writeln!(s, "|---|---|---|---|---|");
+    for r in results {
+        let paper_note = paper
+            .iter()
+            .find(|(k, _)| *k == r.engine)
+            .map(|(_, v)| *v)
+            .unwrap_or("—");
+        let _ = writeln!(
+            s,
+            "| {} | {:.1} ms | {:.2} | {:.2}x | {} |",
+            r.engine,
+            r.secs_per_step * 1e3,
+            r.katom_steps_per_sec,
+            base / r.secs_per_step,
+            paper_note
+        );
+    }
+    s
+}
+
+/// Fig. 1: pre-adjoint staged parallelization — runtime *and* the memory
+/// blow-up that OOMs a 16 GB device at 2J14.
+pub fn fig1(opts: &ExpOpts) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "# Fig 1 — pre-adjoint TestSNAP staging (memory-bound story)\n"
+    );
+    for (twojmax, cells) in [(8usize, opts.cells8), (14usize, opts.cells14)] {
+        let params = SnapParams::with_twojmax(twojmax);
+        let idx = Arc::new(SnapIndex::new(twojmax));
+        let beta = beta_for(twojmax);
+        let w = Workload::tungsten(cells, params.rcut());
+        let _ = writeln!(
+            s,
+            "## 2J={twojmax} (timed at {} atoms; footprints at the paper's 2000x26)\n",
+            w.num_atoms
+        );
+        let _ = writeln!(
+            s,
+            "| variant | time/step | rel. to baseline | footprint @2000 atoms | fits V100-16GB? | paper |"
+        );
+        let _ = writeln!(s, "|---|---|---|---|---|---|");
+        let paper: &[(&str, &str)] = if twojmax == 8 {
+            &[
+                ("baseline", "1.0x, 2 GB"),
+                ("pre-adjoint-atom", "0.67x, 3 GB"),
+                ("pre-adjoint-pair", "1.0x, 5 GB"),
+            ]
+        } else {
+            &[
+                ("baseline", "1.0x, 14 GB"),
+                ("pre-adjoint-atom", "0.5x, 5 GB"),
+                ("pre-adjoint-pair", "OOM (>16 GB)"),
+            ]
+        };
+        let mut base_time = None;
+        for v in Variant::fig1() {
+            let mut eng = v.build(params, idx.clone(), beta.clone());
+            let fp = eng.footprint(2000, 26);
+            let fits = fp.fits(V100_BUDGET);
+            // honor the OOM gate: a variant that would not fit the paper's
+            // device is reported as OOM (and still timed here, since host
+            // RAM allows it, for the curious)
+            let r = grind(eng.as_mut(), &w, opts.warmup, opts.reps);
+            let base = *base_time.get_or_insert(r.secs_per_step);
+            let paper_note = paper
+                .iter()
+                .find(|(k, _)| *k == v.label())
+                .map(|(_, x)| *x)
+                .unwrap_or("—");
+            let _ = writeln!(
+                s,
+                "| {} | {:.1} ms | {:.2}x | {:.2} GiB | {} | {} |",
+                v.label(),
+                r.secs_per_step * 1e3,
+                base / r.secs_per_step,
+                fp.gib(),
+                if fits { "yes" } else { "**OOM**" },
+                paper_note
+            );
+        }
+        let _ = writeln!(s);
+    }
+    s
+}
+
+/// Fig. 2: the V-ladder at 2J8.
+pub fn fig2(opts: &ExpOpts) -> String {
+    let ladder = Variant::ladder();
+    let pre_vi = &ladder[..8]; // V0..V7 (section V scope)
+    let results = run_ladder(pre_vi, 8, opts.cells8, opts.warmup, opts.reps);
+    let paper: &[(&str, &str)] = &[
+        ("baseline", "1.0x"),
+        ("V1", "1.15x"),
+        ("V2", "~2.3x"),
+        ("V3", "~3.7x (1.6x step)"),
+        ("V4", "~3.5x agg (2x step)"),
+        ("V5", "~6.3x (80% step)"),
+        ("V6", "~7.2x (15% step)"),
+        ("V7", "7.5x (15% step)"),
+    ];
+    speedup_table(
+        "Fig 2 — optimization ladder, 2J=8 (paper: V100; here: CPU — layout steps can invert, see DESIGN.md)",
+        &results,
+        paper,
+        2 * opts.cells8.pow(3),
+    )
+}
+
+/// Fig. 3: the V-ladder at 2J14.
+pub fn fig3(opts: &ExpOpts) -> String {
+    let ladder = Variant::ladder();
+    let pre_vi = &ladder[..8];
+    let results = run_ladder(pre_vi, 14, opts.cells14, opts.warmup, opts.reps);
+    let paper: &[(&str, &str)] = &[
+        ("baseline", "1.0x"),
+        ("V1", "1.5x"),
+        ("V2", "~3x"),
+        ("V3", "~4x agg"),
+        ("V4", "~4x agg"),
+        ("V5", "~7.2x"),
+        ("V6", "~8.6x"),
+        ("V7", "8.9x"),
+    ];
+    speedup_table(
+        "Fig 3 — optimization ladder, 2J=14",
+        &results,
+        paper,
+        2 * opts.cells14.pow(3),
+    )
+}
+
+/// Fig. 4: final (section VI) vs baseline + the memory collapse.
+pub fn fig4(opts: &ExpOpts) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "# Fig 4 — final implementation vs baseline\n");
+    for (twojmax, cells, paper_speed, paper_mem) in [
+        (8usize, opts.cells8, "19.6x", "0.1 GB"),
+        (14usize, opts.cells14, "21.7x", "0.9 GB"),
+    ] {
+        let set = [Variant::V0Baseline, Variant::V7, Variant::Fused, Variant::FusedAosoa];
+        let results = run_ladder(&set, twojmax, cells, opts.warmup, opts.reps);
+        let params = SnapParams::with_twojmax(twojmax);
+        let idx = Arc::new(SnapIndex::new(twojmax));
+        let base = results[0].secs_per_step;
+        let _ = writeln!(s, "## 2J={twojmax}\n");
+        let _ = writeln!(
+            s,
+            "| variant | time/step | speedup | footprint @2000x26 | paper |"
+        );
+        let _ = writeln!(s, "|---|---|---|---|---|");
+        for (v, r) in set.iter().zip(results.iter()) {
+            let eng = v.build(params, idx.clone(), beta_for(twojmax));
+            let fp = eng.footprint(2000, 26);
+            let note = match v {
+                Variant::Fused | Variant::FusedAosoa => {
+                    format!("{paper_speed}, {paper_mem}")
+                }
+                Variant::V0Baseline => "1.0x".to_string(),
+                _ => "—".to_string(),
+            };
+            let _ = writeln!(
+                s,
+                "| {} | {:.1} ms | {:.2}x | {:.3} GiB | {} |",
+                r.engine,
+                r.secs_per_step * 1e3,
+                base / r.secs_per_step,
+                fp.gib(),
+                note
+            );
+        }
+        let _ = writeln!(s);
+    }
+    s
+}
+
+/// Table I analog: speed across *backends* (the hardware column becomes the
+/// execution-backend column on this single-node testbed).
+pub fn table1(opts: &ExpOpts) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "# Table I — speed by backend (paper: speed by hardware, normalized fraction-of-peak)\n"
+    );
+    let params = SnapParams::with_twojmax(8);
+    let w = Workload::tungsten(opts.cells8, params.rcut());
+    let _ = writeln!(s, "workload: {} atoms, 26 neighbors, 2J=8\n", w.num_atoms);
+    let _ = writeln!(s, "| backend | Katom-steps/s | normalized vs baseline |");
+    let _ = writeln!(s, "|---|---|---|");
+    let mut rows: Vec<GrindResult> = Vec::new();
+    for v in [Variant::V0Baseline, Variant::V1, Variant::V7, Variant::Fused, Variant::FusedAosoa]
+    {
+        let idx = Arc::new(SnapIndex::new(8));
+        let mut eng = v.build(params, idx, beta_for(8));
+        let mut r = grind(eng.as_mut(), &w, opts.warmup, opts.reps);
+        r.engine = format!("native-{}", v.label());
+        rows.push(r);
+    }
+    if opts.with_xla {
+        for art in ["snap_2j8", "snap_2j8_ref"] {
+            match crate::config::build_engine(
+                &format!("xla:{art}"),
+                8,
+                beta_for(8),
+                &opts.artifacts_dir,
+            ) {
+                Ok(mut eng) => {
+                    let r = grind(eng.as_mut(), &w, opts.warmup, opts.reps);
+                    rows.push(r);
+                }
+                Err(e) => {
+                    let _ = writeln!(s, "| xla:{art} | (unavailable: {e}) | — |");
+                }
+            }
+        }
+    }
+    let base = rows[0].katom_steps_per_sec;
+    for r in &rows {
+        let _ = writeln!(
+            s,
+            "| {} | {:.2} | {:.2} |",
+            r.engine,
+            r.katom_steps_per_sec,
+            r.katom_steps_per_sec / base
+        );
+    }
+    let _ = writeln!(
+        s,
+        "\npaper Table I (for shape reference): SandyBridge 17.7 (1.0), Haswell 29.4 (0.47), V100 32.8 (0.079 fraction-of-peak)."
+    );
+    s
+}
+
+/// Section VI per-kernel isolated speedups + the memory table.
+pub fn stages(opts: &ExpOpts) -> String {
+    use crate::snap::engine::ForceEngine;
+    let mut s = String::new();
+    let _ = writeln!(s, "# Section VI — per-kernel isolation (paper: compute_U 5.2x/4.9x, fused dE 3.3x/5.0x, AoSoA Y 1.4x)\n");
+    for (twojmax, cells) in [(8usize, opts.cells8), (14usize, opts.cells14.min(3))] {
+        let params = SnapParams::with_twojmax(twojmax);
+        let idx = Arc::new(SnapIndex::new(twojmax));
+        let beta = beta_for(twojmax);
+        let w = Workload::tungsten(cells, params.rcut());
+        // stage isolation via StageEngines defined in bench::stages
+        let mut table = Vec::new();
+        for (label, a, b) in crate::experiments::stage_pairs(
+            params,
+            idx.clone(),
+            beta.clone(),
+        ) {
+            let mut ea = a;
+            let mut eb = b;
+            let ra = grind(ea.as_mut(), &w, opts.warmup, opts.reps);
+            let rb = grind(eb.as_mut(), &w, opts.warmup, opts.reps);
+            table.push((label, ra.secs_per_step / rb.secs_per_step));
+        }
+        let _ = writeln!(s, "## 2J={twojmax} ({} atoms)\n", w.num_atoms);
+        let _ = writeln!(s, "| stage comparison | speedup (optimized/old) |");
+        let _ = writeln!(s, "|---|---|");
+        for (label, f) in table {
+            let _ = writeln!(s, "| {label} | {f:.2}x |");
+        }
+        let _ = writeln!(s);
+        let _ = idx.idxu_max; // keep idx alive
+        fn _assert_engine(_: &dyn ForceEngine) {}
+    }
+    s
+}
+
+/// Pairs of (old, new) engines whose ratio isolates one section-VI change.
+pub fn stage_pairs(
+    params: SnapParams,
+    idx: Arc<SnapIndex>,
+    beta: Vec<f64>,
+) -> Vec<(
+    &'static str,
+    Box<dyn crate::snap::engine::ForceEngine>,
+    Box<dyn crate::snap::engine::ForceEngine>,
+)> {
+    vec![
+        (
+            "store-dU (V7) -> fused recompute-dE (VI-A)",
+            Variant::V7.build(params, idx.clone(), beta.clone()),
+            Variant::Fused.build(params, idx.clone(), beta.clone()),
+        ),
+        (
+            "fused flat -> fused AoSoA (VI-B)",
+            Variant::Fused.build(params, idx.clone(), beta.clone()),
+            Variant::FusedAosoa.build(params, idx, beta),
+        ),
+    ]
+}
+
+/// The memory table (every variant, both problem sizes, 16 GB gate).
+pub fn memory(_opts: &ExpOpts) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "# Memory footprints at the paper's 2000 atoms x 26 neighbors\n"
+    );
+    let _ = writeln!(
+        s,
+        "paper: baseline 2/14 GB; staged-atom 3/5 GB; staged-pair 5 GB / OOM; adjoint TestSNAP 12 GB (2J14); final 0.1/0.9 GB\n"
+    );
+    let _ = writeln!(s, "| variant | 2J8 GiB | 2J14 GiB | 2J14 fits 16 GB? |");
+    let _ = writeln!(s, "|---|---|---|---|");
+    let all: Vec<Variant> = Variant::fig1()
+        .iter()
+        .chain(Variant::ladder().iter().skip(1))
+        .copied()
+        .collect();
+    let idx8 = Arc::new(SnapIndex::new(8));
+    let idx14 = Arc::new(SnapIndex::new(14));
+    for v in all {
+        let e8 = v.build(SnapParams::with_twojmax(8), idx8.clone(), beta_for(8));
+        let e14 = v.build(SnapParams::with_twojmax(14), idx14.clone(), beta_for(14));
+        let f8 = e8.footprint(2000, 26);
+        let f14 = e14.footprint(2000, 26);
+        let _ = writeln!(
+            s,
+            "| {} | {:.3} | {:.3} | {} |",
+            v.label(),
+            f8.gib(),
+            f14.gib(),
+            if f14.fits(V100_BUDGET) { "yes" } else { "**OOM**" }
+        );
+    }
+    s
+}
+
+/// Run an experiment by ID ("fig1".."fig4", "table1", "stages", "memory",
+/// "all").
+pub fn run(id: &str, opts: &ExpOpts) -> anyhow::Result<String> {
+    Ok(match id {
+        "fig1" => fig1(opts),
+        "fig2" => fig2(opts),
+        "fig3" => fig3(opts),
+        "fig4" => fig4(opts),
+        "table1" => table1(opts),
+        "stages" => stages(opts),
+        "memory" => memory(opts),
+        "all" => {
+            let mut s = String::new();
+            for id in ["table1", "fig1", "fig2", "fig3", "fig4", "stages", "memory"] {
+                s.push_str(&run(id, opts)?);
+                s.push('\n');
+            }
+            s
+        }
+        other => anyhow::bail!("unknown experiment id `{other}`"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nano_opts() -> ExpOpts {
+        ExpOpts {
+            cells8: 3, // box must exceed 2*rcut = 9.47 A (3 cells = 9.54 A)
+            cells14: 3,
+            warmup: 0,
+            reps: 1,
+            artifacts_dir: "artifacts".into(),
+            with_xla: false,
+        }
+    }
+
+    #[test]
+    fn ladder_runs_and_orders() {
+        let r = run_ladder(&[Variant::V0Baseline, Variant::Fused], 2, 3, 0, 1);
+        assert_eq!(r.len(), 2);
+        assert!(r.iter().all(|g| g.secs_per_step > 0.0));
+    }
+
+    #[test]
+    fn memory_report_contains_oom_gate() {
+        let s = memory(&nano_opts());
+        assert!(s.contains("pre-adjoint-pair"));
+        assert!(s.contains("VI-fused"));
+        assert!(s.contains("|"));
+    }
+
+    #[test]
+    fn unknown_id_errors() {
+        assert!(run("fig9", &nano_opts()).is_err());
+    }
+}

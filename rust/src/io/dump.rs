@@ -1,0 +1,80 @@
+//! Trajectory writers: extended-XYZ and LAMMPS dump formats.
+
+use crate::md::Structure;
+use std::io::Write;
+
+/// Append one extended-XYZ frame.
+pub fn write_xyz(w: &mut dyn Write, s: &Structure, comment: &str) -> std::io::Result<()> {
+    let n = s.natoms();
+    writeln!(w, "{n}")?;
+    let l = s.simbox.lengths;
+    writeln!(
+        w,
+        "Lattice=\"{} 0 0 0 {} 0 0 0 {}\" Properties=species:S:1:pos:R:3 {comment}",
+        l[0], l[1], l[2]
+    )?;
+    for i in 0..n {
+        let p = s.pos_of(i);
+        writeln!(w, "W {:.8} {:.8} {:.8}", p[0], p[1], p[2])?;
+    }
+    Ok(())
+}
+
+/// Append one LAMMPS `dump custom` frame (id x y z fx fy fz).
+pub fn write_lammpstrj(
+    w: &mut dyn Write,
+    s: &Structure,
+    step: usize,
+) -> std::io::Result<()> {
+    let n = s.natoms();
+    writeln!(w, "ITEM: TIMESTEP\n{step}")?;
+    writeln!(w, "ITEM: NUMBER OF ATOMS\n{n}")?;
+    writeln!(w, "ITEM: BOX BOUNDS pp pp pp")?;
+    for k in 0..3 {
+        writeln!(w, "0.0 {:.8}", s.simbox.lengths[k])?;
+    }
+    writeln!(w, "ITEM: ATOMS id x y z fx fy fz")?;
+    for i in 0..n {
+        let p = s.pos_of(i);
+        writeln!(
+            w,
+            "{} {:.8} {:.8} {:.8} {:.8} {:.8} {:.8}",
+            i + 1,
+            p[0],
+            p[1],
+            p[2],
+            s.force[3 * i],
+            s.force[3 * i + 1],
+            s.force[3 * i + 2]
+        )?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::md::boxpbc::SimBox;
+
+    #[test]
+    fn xyz_frame_shape() {
+        let s = Structure::new(SimBox::cubic(5.0), vec![1.0, 2.0, 3.0], 1.0);
+        let mut buf = Vec::new();
+        write_xyz(&mut buf, &s, "step=0").unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "1");
+        assert!(lines[1].contains("Lattice"));
+        assert!(lines[2].starts_with("W "));
+    }
+
+    #[test]
+    fn lammpstrj_frame_shape() {
+        let s = Structure::new(SimBox::cubic(5.0), vec![1.0, 2.0, 3.0], 1.0);
+        let mut buf = Vec::new();
+        write_lammpstrj(&mut buf, &s, 7).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.contains("ITEM: TIMESTEP\n7"));
+        assert!(text.contains("ITEM: ATOMS id x y z fx fy fz"));
+    }
+}

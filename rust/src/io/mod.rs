@@ -1,0 +1,7 @@
+//! Input/output: the mini-LAMMPS input script, trajectory dumps, and data
+//! files.
+
+pub mod dump;
+pub mod script;
+
+pub use script::InputScript;

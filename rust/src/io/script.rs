@@ -1,0 +1,204 @@
+//! Mini-LAMMPS input scripts: the launcher's native workload description.
+//!
+//! Supported commands (a LAMMPS-flavored subset sufficient for the paper's
+//! benchmarks — unknown commands are hard errors, not silent no-ops):
+//!
+//! ```text
+//! units        metal
+//! lattice      bcc 3.1803            # style, constant
+//! region       10 10 10              # cells per axis
+//! mass         183.84
+//! pair_style   snap 8                # twojmax
+//! pair_coeff   synthetic 42          # or: file <path.snapcoeff>
+//! engine       fused                 # baseline|V1..V7|fused|aosoa|xla:<artifact>
+//! velocity     300.0 87287           # T seed
+//! timestep     0.0005                # ps
+//! fix          langevin 300.0 0.1 11 # optional thermostat
+//! neigh_every  10
+//! thermo       10
+//! run          100
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed script (declarative; execution lives in main.rs / examples).
+#[derive(Clone, Debug)]
+pub struct InputScript {
+    pub lattice_style: String,
+    pub lattice_a: f64,
+    pub cells: [usize; 3],
+    pub mass: f64,
+    pub twojmax: usize,
+    pub coeff_source: CoeffSource,
+    pub engine: String,
+    pub velocity: Option<(f64, u64)>,
+    pub timestep: f64,
+    pub langevin: Option<(f64, f64, u64)>,
+    pub neigh_every: usize,
+    pub thermo: usize,
+    pub run_steps: usize,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum CoeffSource {
+    Synthetic(u64),
+    File(String),
+}
+
+impl Default for InputScript {
+    fn default() -> Self {
+        Self {
+            lattice_style: "bcc".into(),
+            lattice_a: 3.1803,
+            cells: [10, 10, 10],
+            mass: 183.84,
+            twojmax: 8,
+            coeff_source: CoeffSource::Synthetic(42),
+            engine: "fused".into(),
+            velocity: Some((300.0, 87287)),
+            timestep: 0.0005,
+            langevin: None,
+            neigh_every: 10,
+            thermo: 10,
+            run_steps: 100,
+        }
+    }
+}
+
+impl InputScript {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut s = Self::default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap().trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let cmd = it.next().unwrap();
+            let args: Vec<&str> = it.collect();
+            let ctx = || format!("line {}: {raw}", lineno + 1);
+            match cmd {
+                "units" => {
+                    if args != ["metal"] {
+                        bail!("only `units metal` is supported ({})", ctx());
+                    }
+                }
+                "lattice" => {
+                    s.lattice_style = args
+                        .first()
+                        .with_context(ctx)?
+                        .to_string();
+                    if !matches!(s.lattice_style.as_str(), "bcc" | "fcc" | "sc") {
+                        bail!("unknown lattice style {} ({})", s.lattice_style, ctx());
+                    }
+                    s.lattice_a = args.get(1).with_context(ctx)?.parse()?;
+                }
+                "region" => {
+                    for k in 0..3 {
+                        s.cells[k] = args.get(k).with_context(ctx)?.parse()?;
+                    }
+                }
+                "mass" => s.mass = args.first().with_context(ctx)?.parse()?,
+                "pair_style" => {
+                    if args.first() != Some(&"snap") {
+                        bail!("only pair_style snap is supported ({})", ctx());
+                    }
+                    s.twojmax = args.get(1).with_context(ctx)?.parse()?;
+                }
+                "pair_coeff" => match args.first() {
+                    Some(&"synthetic") => {
+                        s.coeff_source = CoeffSource::Synthetic(
+                            args.get(1).unwrap_or(&"42").parse()?,
+                        )
+                    }
+                    Some(&"file") => {
+                        s.coeff_source =
+                            CoeffSource::File(args.get(1).with_context(ctx)?.to_string())
+                    }
+                    _ => bail!("pair_coeff synthetic <seed> | file <path> ({})", ctx()),
+                },
+                "engine" => s.engine = args.first().with_context(ctx)?.to_string(),
+                "velocity" => {
+                    s.velocity = Some((
+                        args.first().with_context(ctx)?.parse()?,
+                        args.get(1).unwrap_or(&"87287").parse()?,
+                    ))
+                }
+                "timestep" => s.timestep = args.first().with_context(ctx)?.parse()?,
+                "fix" => {
+                    if args.first() != Some(&"langevin") {
+                        bail!("only `fix langevin T damp seed` is supported ({})", ctx());
+                    }
+                    s.langevin = Some((
+                        args.get(1).with_context(ctx)?.parse()?,
+                        args.get(2).with_context(ctx)?.parse()?,
+                        args.get(3).unwrap_or(&"11").parse()?,
+                    ));
+                }
+                "neigh_every" => s.neigh_every = args.first().with_context(ctx)?.parse()?,
+                "thermo" => s.thermo = args.first().with_context(ctx)?.parse()?,
+                "run" => s.run_steps = args.first().with_context(ctx)?.parse()?,
+                other => bail!("unknown command `{other}` ({})", ctx()),
+            }
+        }
+        Ok(s)
+    }
+
+    pub fn natoms(&self) -> usize {
+        let per_cell = match self.lattice_style.as_str() {
+            "bcc" => 2,
+            "fcc" => 4,
+            _ => 1,
+        };
+        self.cells[0] * self.cells[1] * self.cells[2] * per_cell
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_benchmark_script() {
+        let text = "
+            units metal
+            lattice bcc 3.1803
+            region 10 10 10      # the paper's 2000-atom cell
+            mass 183.84
+            pair_style snap 8
+            pair_coeff synthetic 42
+            engine fused
+            velocity 300.0 87287
+            timestep 0.0005
+            thermo 10
+            run 100
+        ";
+        let s = InputScript::parse(text).unwrap();
+        assert_eq!(s.natoms(), 2000);
+        assert_eq!(s.twojmax, 8);
+        assert_eq!(s.engine, "fused");
+        assert_eq!(s.run_steps, 100);
+    }
+
+    #[test]
+    fn rejects_unknown_command() {
+        assert!(InputScript::parse("frobnicate 1\n").is_err());
+    }
+
+    #[test]
+    fn rejects_unsupported_units() {
+        assert!(InputScript::parse("units real\n").is_err());
+    }
+
+    #[test]
+    fn langevin_fix_parses() {
+        let s = InputScript::parse("fix langevin 250.0 0.05 9\n").unwrap();
+        assert_eq!(s.langevin, Some((250.0, 0.05, 9)));
+    }
+
+    #[test]
+    fn fcc_atom_count() {
+        let s = InputScript::parse("lattice fcc 4.05\nregion 3 3 3\n").unwrap();
+        assert_eq!(s.natoms(), 108);
+    }
+}

@@ -1,0 +1,34 @@
+//! # repro-snap: a Rust + JAX + Pallas reproduction of the TestSNAP paper
+//!
+//! Reproduction of *"Rapid Exploration of Optimization Strategies on Advanced
+//! Architectures using TestSNAP and LAMMPS"* (Gayatri et al., 2020) as a
+//! three-layer stack:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: a miniature LAMMPS-style
+//!   molecular-dynamics engine ([`md`]), the tile batcher and simulation
+//!   orchestrator ([`coordinator`]), and the PJRT runtime that executes the
+//!   AOT-compiled JAX/Pallas force model ([`runtime`]).  Also the *native*
+//!   SNAP engines ([`snap`]) that realize the paper's entire optimization
+//!   ladder (baseline → adjoint refactorization → V1..V7 → section-VI fused
+//!   kernels) so every figure of the paper can be regenerated on this CPU.
+//! * **Layer 2 (python/compile/model.py)** — the batched SNAP force model in
+//!   JAX, lowered once to HLO text (`make artifacts`).
+//! * **Layer 1 (python/compile/kernels/)** — the Pallas kernels
+//!   (`compute_ui`, `compute_zy`, `compute_fused_dE`).
+//!
+//! Python never runs on the request path: the binary loads
+//! `artifacts/*.hlo.txt` through the PJRT C API and is self-contained
+//! afterwards.
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index, and
+//! `EXPERIMENTS.md` for measured paper-vs-reproduction results.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod io;
+pub mod md;
+pub mod runtime;
+pub mod snap;
+pub mod util;

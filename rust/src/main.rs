@@ -1,0 +1,225 @@
+//! `repro` — the leader binary: MD runs, the experiment harness, artifact
+//! inspection, and the force server.
+//!
+//! ```text
+//! repro run --script examples/in.tungsten [--steps N] [--engine fused]
+//! repro experiments --id all|table1|fig1..fig4|stages|memory [--quick]
+//! repro inspect [--artifacts artifacts]
+//! repro serve --port 7878 [--engine fused] [--twojmax 8]
+//! ```
+//!
+//! Argument parsing is hand-rolled (offline build: no clap); every flag is
+//! `--name value`.
+
+use anyhow::{bail, Context, Result};
+use repro::coordinator::{ForceField, SimConfig, Simulation};
+use repro::experiments::{self, ExpOpts};
+use repro::io::script::InputScript;
+use repro::md::lattice;
+use repro::util::Stopwatch;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Minimal `--key value` flag map.
+struct Flags<'a> {
+    pairs: Vec<(&'a str, &'a str)>,
+}
+
+impl<'a> Flags<'a> {
+    fn parse(args: &'a [String]) -> Result<Self> {
+        let mut pairs = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let k = args[i]
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, got `{}`", args[i]))?;
+            if k == "quick" || k == "no-xla" {
+                pairs.push((k, "true"));
+                i += 1;
+            } else {
+                let v = args.get(i + 1).with_context(|| format!("--{k} needs a value"))?;
+                pairs.push((k, v.as_str()));
+                i += 2;
+            }
+        }
+        Ok(Self { pairs })
+    }
+
+    fn get(&self, k: &str) -> Option<&str> {
+        self.pairs.iter().find(|(key, _)| *key == k).map(|(_, v)| *v)
+    }
+
+    fn get_or<T: std::str::FromStr>(&self, k: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(k) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{k} {v}: {e}")),
+        }
+    }
+
+    fn has(&self, k: &str) -> bool {
+        self.get(k).is_some()
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_help();
+        return Ok(());
+    };
+    let flags = Flags::parse(&args[1..])?;
+    match cmd.as_str() {
+        "run" => cmd_run(&flags),
+        "experiments" => cmd_experiments(&flags),
+        "inspect" => cmd_inspect(&flags),
+        "serve" => cmd_serve(&flags),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command `{other}` (try `repro help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "repro — TestSNAP/SNAP reproduction (rust + JAX/Pallas via PJRT)\n\
+         \n\
+         commands:\n\
+         \x20 run         --script <file> [--steps N] [--engine NAME] [--artifacts DIR]\n\
+         \x20 experiments --id all|table1|fig1|fig2|fig3|fig4|stages|memory\n\
+         \x20             [--quick] [--no-xla] [--cells8 N] [--cells14 N] [--reps N]\n\
+         \x20             [--out FILE] [--artifacts DIR]\n\
+         \x20 inspect     [--artifacts DIR]\n\
+         \x20 serve       --port P [--engine NAME] [--twojmax J]\n\
+         \n\
+         engines: baseline V1..V7 fused aosoa pre-adjoint-atom pre-adjoint-pair\n\
+         \x20        xla:snap_2j8 xla:snap_2j8_ref xla:snap_2j14 xla:snap_2j14_ref"
+    );
+}
+
+fn cmd_run(flags: &Flags) -> Result<()> {
+    let script_path = flags.get("script").context("--script is required")?;
+    let text = std::fs::read_to_string(script_path)
+        .with_context(|| format!("reading {script_path}"))?;
+    let mut script = InputScript::parse(&text)?;
+    if let Some(engine) = flags.get("engine") {
+        script.engine = engine.to_string();
+    }
+    let steps = flags.get_or("steps", script.run_steps)?;
+    let artifacts = flags.get_or("artifacts", "artifacts".to_string())?;
+
+    let coeffs = repro::config::resolve_coeffs(&script.coeff_source, script.twojmax)?;
+    let params = coeffs.params;
+    println!(
+        "# repro run: {} atoms ({} {}^3 cells), 2J={}, engine={}, {} steps",
+        script.natoms(),
+        script.lattice_style,
+        script.cells[0],
+        script.twojmax,
+        script.engine,
+        steps
+    );
+
+    let mut structure = match script.lattice_style.as_str() {
+        "bcc" => lattice::bcc(script.cells[0], script.cells[1], script.cells[2], script.lattice_a, script.mass),
+        "fcc" => lattice::fcc(script.cells[0], script.cells[1], script.cells[2], script.lattice_a, script.mass),
+        _ => lattice::sc(script.cells[0], script.cells[1], script.cells[2], script.lattice_a, script.mass),
+    };
+    let mut rng = repro::util::XorShift::new(script.velocity.map(|(_, s)| s).unwrap_or(1));
+    if let Some((t, _)) = script.velocity {
+        structure.seed_velocities(t, &mut rng);
+    }
+
+    let engine = repro::config::build_engine(
+        &script.engine,
+        script.twojmax,
+        coeffs.beta.clone(),
+        &artifacts,
+    )?;
+    let tile_atoms = flags.get_or("tile-atoms", 32usize)?;
+    let tile_nbor = flags.get_or("tile-nbor", 32usize)?;
+    let field = ForceField::new(engine, tile_atoms, tile_nbor);
+    let cfg = SimConfig {
+        dt: script.timestep,
+        neighbor_every: script.neigh_every,
+        skin: 0.3,
+        thermo_every: script.thermo,
+        langevin: script.langevin,
+    };
+    let mut sim = Simulation::new(structure, field, params.rcut(), cfg);
+    let sw = Stopwatch::start();
+    let stats = sim.run(steps, &mut std::io::stdout());
+    println!(
+        "# done: {:.2} s wall, {:.2} Katom-steps/s, NVE drift {:.3e} eV/atom",
+        sw.elapsed_secs(),
+        stats.katom_steps_per_sec,
+        stats.energy_drift_per_atom
+    );
+    println!("# stage times: {}", sim.field.times.report());
+    Ok(())
+}
+
+fn cmd_experiments(flags: &Flags) -> Result<()> {
+    let id = flags.get("id").unwrap_or("all");
+    let mut opts = if flags.has("quick") { ExpOpts::quick() } else { ExpOpts::default() };
+    opts.cells8 = flags.get_or("cells8", opts.cells8)?;
+    opts.cells14 = flags.get_or("cells14", opts.cells14)?;
+    opts.reps = flags.get_or("reps", opts.reps)?;
+    opts.warmup = flags.get_or("warmup", opts.warmup)?;
+    opts.artifacts_dir = flags.get_or("artifacts", opts.artifacts_dir)?;
+    if flags.has("no-xla") {
+        opts.with_xla = false;
+    }
+    let report = experiments::run(id, &opts)?;
+    println!("{report}");
+    if let Some(path) = flags.get("out") {
+        std::fs::write(path, &report)?;
+        eprintln!("(report written to {path})");
+    }
+    Ok(())
+}
+
+fn cmd_inspect(flags: &Flags) -> Result<()> {
+    let dir = flags.get_or("artifacts", "artifacts".to_string())?;
+    let rt = repro::runtime::Runtime::open(&dir)?;
+    println!("artifacts in {dir}:");
+    for name in rt.names() {
+        let m = rt.meta(name).unwrap();
+        println!(
+            "  {name}: kind={} 2J={} tile={}x{} nB={} rcut={:.5} hlo={:.1}MB",
+            m.kind,
+            m.twojmax,
+            m.num_atoms,
+            m.num_nbor,
+            m.num_bispectrum,
+            m.rcutfac,
+            m.hlo_bytes as f64 / 1e6
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(flags: &Flags) -> Result<()> {
+    let port: u16 = flags.get_or("port", 7878)?;
+    let engine_name = flags.get_or("engine", "fused".to_string())?;
+    let twojmax = flags.get_or("twojmax", 8usize)?;
+    let artifacts = flags.get_or("artifacts", "artifacts".to_string())?;
+    let idx = repro::snap::SnapIndex::new(twojmax);
+    let coeffs = repro::snap::coeff::SnapCoeffs::synthetic(twojmax, idx.idxb_max, 42);
+    let engine =
+        repro::config::build_engine(&engine_name, twojmax, coeffs.beta, &artifacts)?;
+    let listener = std::net::TcpListener::bind(("0.0.0.0", port))?;
+    println!("force server on :{port} engine={engine_name} 2J={twojmax} (ctrl-c to stop)");
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    repro::coordinator::server::serve(listener, engine, stop)?;
+    Ok(())
+}

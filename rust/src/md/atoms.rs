@@ -1,0 +1,107 @@
+//! Structure-of-arrays atom store.
+
+use super::boxpbc::SimBox;
+use crate::util::XorShift;
+
+/// Atom positions/velocities/forces + the box they live in.
+#[derive(Clone, Debug)]
+pub struct Structure {
+    pub simbox: SimBox,
+    /// Positions, 3*N (A).
+    pub pos: Vec<f64>,
+    /// Velocities, 3*N (A/ps).
+    pub vel: Vec<f64>,
+    /// Forces, 3*N (eV/A).
+    pub force: Vec<f64>,
+    /// Atomic mass (g/mol); single species.
+    pub mass: f64,
+}
+
+impl Structure {
+    pub fn new(simbox: SimBox, pos: Vec<f64>, mass: f64) -> Self {
+        assert_eq!(pos.len() % 3, 0);
+        let n = pos.len();
+        Self { simbox, pos, vel: vec![0.0; n], force: vec![0.0; n], mass }
+    }
+
+    pub fn natoms(&self) -> usize {
+        self.pos.len() / 3
+    }
+
+    #[inline]
+    pub fn pos_of(&self, i: usize) -> [f64; 3] {
+        [self.pos[3 * i], self.pos[3 * i + 1], self.pos[3 * i + 2]]
+    }
+
+    /// Gaussian velocities at temperature `t_kelvin`, zero net momentum.
+    pub fn seed_velocities(&mut self, t_kelvin: f64, rng: &mut XorShift) {
+        use super::units::{KB, MVV2E};
+        let n = self.natoms();
+        // equipartition: (1/2) m v_k^2 * MVV2E = (1/2) kB T per dof
+        let sigma = (KB * t_kelvin / (self.mass * MVV2E)).sqrt();
+        for v in self.vel.iter_mut() {
+            *v = sigma * rng.normal();
+        }
+        // remove center-of-mass drift
+        for k in 0..3 {
+            let mean: f64 = (0..n).map(|i| self.vel[3 * i + k]).sum::<f64>() / n as f64;
+            for i in 0..n {
+                self.vel[3 * i + k] -= mean;
+            }
+        }
+    }
+
+    /// Random displacement of every atom (to break lattice symmetry).
+    pub fn jitter(&mut self, amplitude: f64, rng: &mut XorShift) {
+        for x in self.pos.iter_mut() {
+            *x += amplitude * (rng.next_f64() - 0.5);
+        }
+    }
+
+    /// Wrap all positions into the box.
+    pub fn wrap_all(&mut self) {
+        for i in 0..self.natoms() {
+            let w = self.simbox.wrap(self.pos_of(i));
+            self.pos[3 * i] = w[0];
+            self.pos[3 * i + 1] = w[1];
+            self.pos[3 * i + 2] = w[2];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::md::units::{KB, MVV2E};
+
+    #[test]
+    fn seeded_velocities_have_target_temperature() {
+        let b = SimBox::cubic(20.0);
+        let pos = vec![0.0; 3 * 2000];
+        let mut s = Structure::new(b, pos, 183.84);
+        let mut rng = XorShift::new(4);
+        s.seed_velocities(300.0, &mut rng);
+        let n = s.natoms();
+        let ke: f64 = 0.5
+            * s.mass
+            * MVV2E
+            * s.vel.iter().map(|v| v * v).sum::<f64>();
+        let t = 2.0 * ke / (3.0 * n as f64 * KB);
+        assert!((t - 300.0).abs() < 30.0, "T = {t}");
+        // zero net momentum
+        for k in 0..3 {
+            let p: f64 = (0..n).map(|i| s.vel[3 * i + k]).sum();
+            assert!(p.abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn jitter_and_wrap() {
+        let b = SimBox::cubic(5.0);
+        let mut s = Structure::new(b, vec![4.9, 0.1, 2.5], 1.0);
+        let mut rng = XorShift::new(1);
+        s.jitter(0.5, &mut rng);
+        s.wrap_all();
+        assert!(s.pos.iter().all(|&x| (0.0..5.0).contains(&x)));
+    }
+}

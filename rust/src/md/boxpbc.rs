@@ -1,0 +1,95 @@
+//! Orthorhombic periodic simulation box.
+
+/// An orthorhombic box with per-axis periodicity.
+#[derive(Clone, Copy, Debug)]
+pub struct SimBox {
+    pub lengths: [f64; 3],
+    pub periodic: [bool; 3],
+}
+
+impl SimBox {
+    pub fn cubic(l: f64) -> Self {
+        Self { lengths: [l, l, l], periodic: [true; 3] }
+    }
+
+    pub fn ortho(lengths: [f64; 3]) -> Self {
+        Self { lengths, periodic: [true; 3] }
+    }
+
+    pub fn volume(&self) -> f64 {
+        self.lengths[0] * self.lengths[1] * self.lengths[2]
+    }
+
+    /// Minimum-image convention applied to a displacement.
+    #[inline]
+    pub fn minimum_image(&self, mut d: [f64; 3]) -> [f64; 3] {
+        for k in 0..3 {
+            if self.periodic[k] {
+                let l = self.lengths[k];
+                if d[k] > 0.5 * l {
+                    d[k] -= l;
+                } else if d[k] < -0.5 * l {
+                    d[k] += l;
+                }
+            }
+        }
+        d
+    }
+
+    /// Wrap a position into [0, L) on periodic axes.
+    #[inline]
+    pub fn wrap(&self, mut x: [f64; 3]) -> [f64; 3] {
+        for k in 0..3 {
+            if self.periodic[k] {
+                let l = self.lengths[k];
+                x[k] -= l * (x[k] / l).floor();
+            }
+        }
+        x
+    }
+
+    /// Largest cutoff for which the minimum-image convention is valid.
+    pub fn max_cutoff(&self) -> f64 {
+        self.lengths
+            .iter()
+            .zip(self.periodic)
+            .filter(|(_, p)| *p)
+            .map(|(l, _)| 0.5 * l)
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimum_image_folds_to_half_box() {
+        let b = SimBox::cubic(10.0);
+        let d = b.minimum_image([7.0, -6.0, 4.9]);
+        assert_eq!(d, [-3.0, 4.0, 4.9]);
+    }
+
+    #[test]
+    fn wrap_into_box() {
+        let b = SimBox::cubic(10.0);
+        let x = b.wrap([12.5, -0.5, 9.999]);
+        assert!((x[0] - 2.5).abs() < 1e-12);
+        assert!((x[1] - 9.5).abs() < 1e-12);
+        assert!(x.iter().all(|&v| (0.0..10.0).contains(&v)));
+    }
+
+    #[test]
+    fn nonperiodic_axis_untouched() {
+        let mut b = SimBox::cubic(10.0);
+        b.periodic[2] = false;
+        assert_eq!(b.minimum_image([0.0, 0.0, 8.0])[2], 8.0);
+        assert_eq!(b.wrap([0.0, 0.0, 13.0])[2], 13.0);
+    }
+
+    #[test]
+    fn max_cutoff_is_half_min_length() {
+        let b = SimBox::ortho([10.0, 8.0, 12.0]);
+        assert_eq!(b.max_cutoff(), 4.0);
+    }
+}

@@ -1,0 +1,160 @@
+//! Velocity-Verlet integration (NVE) with an optional Langevin thermostat —
+//! LAMMPS metal units (A, ps, eV, g/mol).
+
+use super::atoms::Structure;
+use super::units::{FTM2V, KB, MVV2E};
+use crate::util::XorShift;
+
+/// Velocity-Verlet integrator state.
+#[derive(Clone, Copy, Debug)]
+pub struct VelocityVerlet {
+    /// Timestep, ps (LAMMPS metal default is 0.001 = 1 fs).
+    pub dt: f64,
+}
+
+impl VelocityVerlet {
+    pub fn new(dt: f64) -> Self {
+        Self { dt }
+    }
+
+    /// First half-kick + drift.  Forces must be valid for the current
+    /// positions when this is called.
+    pub fn initial_integrate(&self, s: &mut Structure) {
+        let dtf = 0.5 * self.dt * FTM2V / s.mass;
+        for i in 0..s.vel.len() {
+            s.vel[i] += dtf * s.force[i];
+            s.pos[i] += self.dt * s.vel[i];
+        }
+    }
+
+    /// Second half-kick.  Forces must have been recomputed for the new
+    /// positions before this is called.
+    pub fn final_integrate(&self, s: &mut Structure) {
+        let dtf = 0.5 * self.dt * FTM2V / s.mass;
+        for i in 0..s.vel.len() {
+            s.vel[i] += dtf * s.force[i];
+        }
+    }
+}
+
+/// Langevin thermostat (LAMMPS `fix langevin` style): adds friction +
+/// Gaussian noise to the force array, targeting `t_target` Kelvin.
+#[derive(Clone, Debug)]
+pub struct Langevin {
+    pub t_target: f64,
+    /// Damping time, ps.
+    pub damp: f64,
+    pub rng: XorShift,
+}
+
+impl Langevin {
+    pub fn new(t_target: f64, damp: f64, seed: u64) -> Self {
+        Self { t_target, damp, rng: XorShift::new(seed) }
+    }
+
+    /// Apply friction + noise forces (call between force compute and the
+    /// final half-kick).
+    pub fn apply(&mut self, s: &mut Structure, dt: f64) {
+        // friction coefficient gamma = m/damp, in (eV/A)/(A/ps)
+        let gamma = s.mass * MVV2E / self.damp;
+        // fluctuation-dissipation: sigma_F = sqrt(2 kB T gamma / dt)
+        let sigma = (2.0 * KB * self.t_target * gamma / dt).sqrt();
+        for i in 0..s.vel.len() {
+            s.force[i] += -gamma * s.vel[i] + sigma * self.rng.normal();
+        }
+    }
+}
+
+/// Kinetic energy, eV.
+pub fn kinetic_energy(s: &Structure) -> f64 {
+    0.5 * s.mass * MVV2E * s.vel.iter().map(|v| v * v).sum::<f64>()
+}
+
+/// Instantaneous temperature, K.
+pub fn temperature(s: &Structure) -> f64 {
+    let n = s.natoms();
+    if n == 0 {
+        return 0.0;
+    }
+    2.0 * kinetic_energy(s) / (3.0 * n as f64 * KB)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::md::boxpbc::SimBox;
+
+    /// Harmonic oscillator integration: NVE energy conservation with an
+    /// analytic force (validates the integrator independent of SNAP).
+    #[test]
+    fn verlet_conserves_harmonic_energy() {
+        let k_spring = 1.0; // eV/A^2
+        let mut s = Structure::new(SimBox::cubic(100.0), vec![50.5, 50.0, 50.0], 10.0);
+        let vv = VelocityVerlet::new(0.001);
+        let center = 50.0;
+        let pot = |x: f64| 0.5 * k_spring * (x - center) * (x - center);
+        let force = |x: f64| -k_spring * (x - center);
+        s.force[0] = force(s.pos[0]);
+        let e0 = pot(s.pos[0]) + kinetic_energy(&s);
+        for _ in 0..5000 {
+            vv.initial_integrate(&mut s);
+            s.force[0] = force(s.pos[0]);
+            vv.final_integrate(&mut s);
+        }
+        let e1 = pot(s.pos[0]) + kinetic_energy(&s);
+        // velocity-Verlet energy error is a bounded oscillation of relative
+        // amplitude O((dt*omega)^2) ~ 1e-3 here, not a drift
+        assert!((e1 - e0).abs() < 2e-3 * (1.0 + e0.abs()), "drift {e0} -> {e1}");
+    }
+
+    #[test]
+    fn verlet_is_time_reversible() {
+        let mut s = Structure::new(SimBox::cubic(100.0), vec![50.7, 50.0, 50.0], 5.0);
+        let vv = VelocityVerlet::new(0.002);
+        let force = |x: f64| -2.0 * (x - 50.0);
+        let x0 = s.pos[0];
+        s.force[0] = force(s.pos[0]);
+        for _ in 0..100 {
+            vv.initial_integrate(&mut s);
+            s.force[0] = force(s.pos[0]);
+            vv.final_integrate(&mut s);
+        }
+        // reverse velocities and integrate back
+        for v in s.vel.iter_mut() {
+            *v = -*v;
+        }
+        for _ in 0..100 {
+            vv.initial_integrate(&mut s);
+            s.force[0] = force(s.pos[0]);
+            vv.final_integrate(&mut s);
+        }
+        assert!((s.pos[0] - x0).abs() < 1e-9, "{} vs {x0}", s.pos[0]);
+    }
+
+    #[test]
+    fn langevin_thermalizes_free_particles() {
+        let n = 200;
+        let mut s = Structure::new(SimBox::cubic(50.0), vec![0.0; 3 * n], 20.0);
+        let vv = VelocityVerlet::new(0.001);
+        let mut lang = Langevin::new(300.0, 0.05, 9);
+        let mut t_acc = 0.0;
+        let steps = 4000;
+        // canonical loop: the (physical + thermostat) force array persists
+        // through the next step's first half-kick
+        lang.apply(&mut s, vv.dt);
+        for step in 0..steps {
+            vv.initial_integrate(&mut s);
+            s.force.fill(0.0); // physical force recompute (free particles)
+            lang.apply(&mut s, vv.dt);
+            vv.final_integrate(&mut s);
+            if step >= steps / 2 {
+                t_acc += temperature(&s);
+            }
+        }
+        let t_mean = t_acc / (steps / 2) as f64;
+        assert!(
+            (t_mean - 300.0).abs() < 45.0,
+            "Langevin equilibrium T = {t_mean}, want ~300"
+        );
+    }
+}

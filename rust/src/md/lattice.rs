@@ -1,0 +1,102 @@
+//! Crystal lattice builders.
+//!
+//! The paper's benchmark is bcc tungsten (a = 3.1803 A for the 2J8 SNAP W
+//! potential), 10x10x10 conventional cells = 2000 atoms, whose neighbor
+//! count within the 4.73442 A cutoff is exactly 26 (8 first + 6 second +
+//! 12 third shell).
+
+use super::atoms::Structure;
+use super::boxpbc::SimBox;
+use super::units::MASS_W;
+
+/// bcc lattice constant used for the tungsten benchmark (A).
+pub const BCC_W_LATTICE: f64 = 3.1803;
+
+/// Build a bcc crystal of nx*ny*nz conventional cells (2 atoms/cell).
+pub fn bcc(nx: usize, ny: usize, nz: usize, a: f64, mass: f64) -> Structure {
+    let basis = [[0.0, 0.0, 0.0], [0.5, 0.5, 0.5]];
+    build(nx, ny, nz, a, mass, &basis)
+}
+
+/// Build an fcc crystal (4 atoms/cell).
+pub fn fcc(nx: usize, ny: usize, nz: usize, a: f64, mass: f64) -> Structure {
+    let basis = [
+        [0.0, 0.0, 0.0],
+        [0.5, 0.5, 0.0],
+        [0.5, 0.0, 0.5],
+        [0.0, 0.5, 0.5],
+    ];
+    build(nx, ny, nz, a, mass, &basis)
+}
+
+/// Simple cubic (1 atom/cell).
+pub fn sc(nx: usize, ny: usize, nz: usize, a: f64, mass: f64) -> Structure {
+    build(nx, ny, nz, a, mass, &[[0.0, 0.0, 0.0]])
+}
+
+fn build(
+    nx: usize,
+    ny: usize,
+    nz: usize,
+    a: f64,
+    mass: f64,
+    basis: &[[f64; 3]],
+) -> Structure {
+    let simbox = SimBox::ortho([nx as f64 * a, ny as f64 * a, nz as f64 * a]);
+    let mut pos = Vec::with_capacity(nx * ny * nz * basis.len() * 3);
+    for ix in 0..nx {
+        for iy in 0..ny {
+            for iz in 0..nz {
+                for b in basis {
+                    pos.push((ix as f64 + b[0]) * a);
+                    pos.push((iy as f64 + b[1]) * a);
+                    pos.push((iz as f64 + b[2]) * a);
+                }
+            }
+        }
+    }
+    Structure::new(simbox, pos, mass)
+}
+
+/// The paper's 2000-atom tungsten benchmark cell (10x10x10 bcc).
+pub fn tungsten_benchmark() -> Structure {
+    bcc(10, 10, 10, BCC_W_LATTICE, MASS_W)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::md::neighbor::NeighborList;
+
+    #[test]
+    fn bcc_atom_count() {
+        assert_eq!(bcc(3, 3, 3, 3.18, 1.0).natoms(), 54);
+        assert_eq!(tungsten_benchmark().natoms(), 2000);
+    }
+
+    #[test]
+    fn fcc_atom_count() {
+        assert_eq!(fcc(2, 2, 2, 4.05, 1.0).natoms(), 32);
+    }
+
+    #[test]
+    fn benchmark_has_26_neighbors() {
+        // the paper: "2000 atoms with 26 neighbors each"
+        let s = tungsten_benchmark();
+        let nl = NeighborList::build_cells(&s, 4.73442);
+        for i in 0..s.natoms() {
+            assert_eq!(nl.count(i), 26, "atom {i}");
+        }
+    }
+
+    #[test]
+    fn atoms_inside_box() {
+        let s = bcc(4, 3, 2, 3.0, 1.0);
+        for i in 0..s.natoms() {
+            let p = s.pos_of(i);
+            for k in 0..3 {
+                assert!(p[k] >= 0.0 && p[k] < s.simbox.lengths[k]);
+            }
+        }
+    }
+}

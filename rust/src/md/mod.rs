@@ -1,0 +1,34 @@
+//! Miniature LAMMPS: the molecular-dynamics substrate the SNAP engines
+//! plug into.
+//!
+//! * [`boxpbc`]    — orthorhombic periodic box, minimum image, wrapping.
+//! * [`atoms`]     — structure-of-arrays atom store.
+//! * [`lattice`]   — bcc/fcc/sc crystal builders (the paper's benchmark is
+//!                   2000 atoms of bcc tungsten with 26 neighbors/atom).
+//! * [`neighbor`]  — cell-list and brute-force full neighbor lists.
+//! * [`integrate`] — velocity-Verlet NVE + Langevin thermostat
+//!                   (LAMMPS metal units).
+//! * [`thermo`]    — kinetic energy, temperature, virial pressure.
+
+pub mod atoms;
+pub mod boxpbc;
+pub mod integrate;
+pub mod lattice;
+pub mod neighbor;
+pub mod thermo;
+
+pub use atoms::Structure;
+pub use boxpbc::SimBox;
+pub use neighbor::NeighborList;
+
+/// LAMMPS "metal" units constants.
+pub mod units {
+    /// Boltzmann constant, eV/K.
+    pub const KB: f64 = 8.617333262e-5;
+    /// mv^2 -> eV: (g/mol)(A/ps)^2 -> eV.
+    pub const MVV2E: f64 = 1.0364269e-4;
+    /// F/m -> acceleration: (eV/A)/(g/mol) -> A/ps^2.
+    pub const FTM2V: f64 = 1.0 / MVV2E;
+    /// Tungsten atomic mass, g/mol.
+    pub const MASS_W: f64 = 183.84;
+}

@@ -1,0 +1,247 @@
+//! Full neighbor lists: cell-list O(N) construction + a brute-force O(N^2)
+//! reference, property-tested against each other.
+//!
+//! Lists are *full* (each pair appears in both atoms' rows) because SNAP's
+//! per-atom energy needs every atom's complete neighborhood; displacement
+//! vectors are stored minimum-imaged at build time so the force kernels are
+//! PBC-oblivious.
+
+use super::atoms::Structure;
+
+/// CSR full neighbor list with cached minimum-image displacements.
+#[derive(Clone, Debug)]
+pub struct NeighborList {
+    /// CSR offsets, len natoms+1.
+    pub offsets: Vec<usize>,
+    /// Neighbor atom indices.
+    pub idx: Vec<u32>,
+    /// Displacement r_j - r_i per entry (minimum image), 3 per entry.
+    pub rij: Vec<f64>,
+    pub cutoff: f64,
+}
+
+impl NeighborList {
+    /// O(N^2) reference builder.
+    pub fn build_bruteforce(s: &Structure, cutoff: f64) -> Self {
+        let n = s.natoms();
+        let c2 = cutoff * cutoff;
+        let mut rows: Vec<Vec<(u32, [f64; 3])>> = vec![Vec::new(); n];
+        for i in 0..n {
+            let pi = s.pos_of(i);
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                let pj = s.pos_of(j);
+                let d = s.simbox.minimum_image([
+                    pj[0] - pi[0],
+                    pj[1] - pi[1],
+                    pj[2] - pi[2],
+                ]);
+                if d[0] * d[0] + d[1] * d[1] + d[2] * d[2] < c2 {
+                    rows[i].push((j as u32, d));
+                }
+            }
+        }
+        Self::from_rows(rows, cutoff)
+    }
+
+    /// O(N) cell-list builder (bins >= cutoff, 27-stencil).
+    pub fn build_cells(s: &Structure, cutoff: f64) -> Self {
+        let n = s.natoms();
+        assert!(
+            cutoff <= s.simbox.max_cutoff() + 1e-12,
+            "cutoff {cutoff} exceeds minimum-image limit {}",
+            s.simbox.max_cutoff()
+        );
+        let c2 = cutoff * cutoff;
+        // bin counts (at least 1; fall back to brute force when < 3 bins on
+        // a periodic axis, where the 27-stencil would double-count)
+        let mut nbins = [0usize; 3];
+        for k in 0..3 {
+            nbins[k] = (s.simbox.lengths[k] / cutoff).floor().max(1.0) as usize;
+            if s.simbox.periodic[k] && nbins[k] < 3 {
+                return Self::build_bruteforce(s, cutoff);
+            }
+        }
+        let bin_of = |p: [f64; 3]| -> [usize; 3] {
+            let mut b = [0usize; 3];
+            for k in 0..3 {
+                let f = (p[k] / s.simbox.lengths[k]).clamp(0.0, 0.999_999_999);
+                b[k] = ((f * nbins[k] as f64) as usize).min(nbins[k] - 1);
+            }
+            b
+        };
+        let flat = |b: [usize; 3]| (b[0] * nbins[1] + b[1]) * nbins[2] + b[2];
+        let mut cells: Vec<Vec<u32>> = vec![Vec::new(); nbins[0] * nbins[1] * nbins[2]];
+        for i in 0..n {
+            cells[flat(bin_of(s.pos_of(i)))].push(i as u32);
+        }
+        let mut rows: Vec<Vec<(u32, [f64; 3])>> = vec![Vec::new(); n];
+        for i in 0..n {
+            let pi = s.pos_of(i);
+            let bi = bin_of(pi);
+            for dx in -1i64..=1 {
+                for dy in -1i64..=1 {
+                    for dz in -1i64..=1 {
+                        let mut bb = [0usize; 3];
+                        let d = [dx, dy, dz];
+                        let mut valid = true;
+                        for k in 0..3 {
+                            let v = bi[k] as i64 + d[k];
+                            if s.simbox.periodic[k] {
+                                bb[k] = v.rem_euclid(nbins[k] as i64) as usize;
+                            } else if v < 0 || v >= nbins[k] as i64 {
+                                valid = false;
+                                break;
+                            } else {
+                                bb[k] = v as usize;
+                            }
+                        }
+                        if !valid {
+                            continue;
+                        }
+                        for &j in &cells[flat(bb)] {
+                            if j as usize == i {
+                                continue;
+                            }
+                            let pj = s.pos_of(j as usize);
+                            let dvec = s.simbox.minimum_image([
+                                pj[0] - pi[0],
+                                pj[1] - pi[1],
+                                pj[2] - pi[2],
+                            ]);
+                            if dvec[0] * dvec[0] + dvec[1] * dvec[1] + dvec[2] * dvec[2]
+                                < c2
+                            {
+                                rows[i].push((j, dvec));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Self::from_rows(rows, cutoff)
+    }
+
+    fn from_rows(mut rows: Vec<Vec<(u32, [f64; 3])>>, cutoff: f64) -> Self {
+        // deterministic order (brute force and cell lists agree)
+        for row in rows.iter_mut() {
+            row.sort_by_key(|(j, _)| *j);
+        }
+        let mut offsets = Vec::with_capacity(rows.len() + 1);
+        let mut idx = Vec::new();
+        let mut rij = Vec::new();
+        offsets.push(0);
+        for row in rows {
+            for (j, d) in row {
+                idx.push(j);
+                rij.extend_from_slice(&d);
+            }
+            offsets.push(idx.len());
+        }
+        Self { offsets, idx, rij, cutoff }
+    }
+
+    pub fn natoms(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn count(&self, i: usize) -> usize {
+        self.offsets[i + 1] - self.offsets[i]
+    }
+
+    pub fn max_count(&self) -> usize {
+        (0..self.natoms()).map(|i| self.count(i)).max().unwrap_or(0)
+    }
+
+    /// (neighbor index, displacement) entries of atom i.
+    pub fn row(&self, i: usize) -> impl Iterator<Item = (u32, [f64; 3])> + '_ {
+        (self.offsets[i]..self.offsets[i + 1]).map(move |e| {
+            (
+                self.idx[e],
+                [self.rij[3 * e], self.rij[3 * e + 1], self.rij[3 * e + 2]],
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::md::boxpbc::SimBox;
+    use crate::md::lattice;
+    use crate::util::XorShift;
+
+    fn random_structure(seed: u64, n: usize, l: f64) -> Structure {
+        let mut rng = XorShift::new(seed);
+        let pos: Vec<f64> = (0..3 * n).map(|_| rng.uniform(0.0, l)).collect();
+        Structure::new(SimBox::cubic(l), pos, 1.0)
+    }
+
+    /// Property test: cell list == brute force on random configurations
+    /// (the proptest-style invariant sweep; generator seeds vary geometry).
+    #[test]
+    fn cells_equal_bruteforce_property() {
+        for seed in 0..20u64 {
+            let n = 20 + (seed as usize * 13) % 60;
+            let l = 8.0 + (seed % 5) as f64;
+            let s = random_structure(seed, n, l);
+            let cutoff = 2.5 + (seed % 3) as f64 * 0.4;
+            let a = NeighborList::build_bruteforce(&s, cutoff);
+            let b = NeighborList::build_cells(&s, cutoff);
+            assert_eq!(a.offsets, b.offsets, "seed {seed}");
+            assert_eq!(a.idx, b.idx, "seed {seed}");
+            for (x, y) in a.rij.iter().zip(b.rij.iter()) {
+                assert!((x - y).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn list_is_symmetric() {
+        let s = random_structure(3, 40, 9.0);
+        let nl = NeighborList::build_cells(&s, 3.0);
+        for i in 0..s.natoms() {
+            for (j, _) in nl.row(i) {
+                assert!(
+                    nl.row(j as usize).any(|(k, _)| k as usize == i),
+                    "pair ({i},{j}) not symmetric"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn displacements_within_cutoff() {
+        let s = random_structure(9, 50, 10.0);
+        let nl = NeighborList::build_cells(&s, 3.3);
+        for i in 0..s.natoms() {
+            for (_, d) in nl.row(i) {
+                let r = (d[0] * d[0] + d[1] * d[1] + d[2] * d[2]).sqrt();
+                assert!(r < 3.3 && r > 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn bcc_shells() {
+        // bcc first shell = 8 at sqrt(3)/2*a, second = 6 at a
+        let s = lattice::bcc(4, 4, 4, 3.0, 1.0);
+        let first = NeighborList::build_cells(&s, 0.87 * 3.0);
+        for i in 0..s.natoms() {
+            assert_eq!(first.count(i), 8);
+        }
+        let second = NeighborList::build_cells(&s, 1.01 * 3.0);
+        for i in 0..s.natoms() {
+            assert_eq!(second.count(i), 14);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds minimum-image")]
+    fn oversized_cutoff_panics() {
+        let s = random_structure(1, 10, 6.0);
+        NeighborList::build_cells(&s, 3.5);
+    }
+}

@@ -1,0 +1,86 @@
+//! Thermodynamic observables: the quantities `thermo` lines report.
+
+use super::atoms::Structure;
+use super::integrate::{kinetic_energy, temperature};
+use super::units::KB;
+
+/// One thermo sample.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Thermo {
+    pub step: usize,
+    pub temp: f64,
+    pub e_pot: f64,
+    pub e_kin: f64,
+    pub e_total: f64,
+    pub press: f64,
+}
+
+impl Thermo {
+    /// Assemble a sample from current state.
+    ///
+    /// `virial` is the 3x3 virial tensor W = -sum_(i,k) r_ik (x) dedr(i,k)
+    /// accumulated by the coordinator; pressure (bar) follows
+    /// P V = N kB T + tr(W)/3.
+    pub fn sample(
+        step: usize,
+        s: &Structure,
+        e_pot: f64,
+        virial: &[f64; 9],
+    ) -> Self {
+        let n = s.natoms() as f64;
+        let t = temperature(s);
+        let ke = kinetic_energy(s);
+        let vol = s.simbox.volume();
+        let w_trace = virial[0] + virial[4] + virial[8];
+        // eV/A^3 -> bar
+        const EVA3_TO_BAR: f64 = 1.602176634e6;
+        let press = (n * KB * t + w_trace / 3.0) / vol * EVA3_TO_BAR;
+        Self { step, temp: t, e_pot, e_kin: ke, e_total: e_pot + ke, press }
+    }
+
+    pub fn header() -> &'static str {
+        "step        temp(K)     e_pot(eV)       e_kin(eV)       e_total(eV)     press(bar)"
+    }
+
+    pub fn line(&self) -> String {
+        format!(
+            "{:<11} {:<11.3} {:<15.6} {:<15.6} {:<15.6} {:<11.1}",
+            self.step, self.temp, self.e_pot, self.e_kin, self.e_total, self.press
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::md::boxpbc::SimBox;
+
+    #[test]
+    fn ideal_gas_pressure() {
+        // stationary atoms, zero virial -> P = N kB T / V with T = 0 -> 0
+        let s = Structure::new(SimBox::cubic(10.0), vec![0.0; 30], 1.0);
+        let t = Thermo::sample(0, &s, 0.0, &[0.0; 9]);
+        assert_eq!(t.press, 0.0);
+        assert_eq!(t.e_total, 0.0);
+    }
+
+    #[test]
+    fn virial_contributes_to_pressure() {
+        let s = Structure::new(SimBox::cubic(10.0), vec![0.0; 30], 1.0);
+        let mut w = [0.0; 9];
+        w[0] = 3.0;
+        w[4] = 3.0;
+        w[8] = 3.0;
+        let t = Thermo::sample(0, &s, 0.0, &w);
+        // tr(W)/3 / V * conv = 3/1000 * 1.602e6
+        assert!((t.press - 3.0 / 1000.0 * 1.602176634e6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn line_formats() {
+        let s = Structure::new(SimBox::cubic(10.0), vec![0.0; 3], 1.0);
+        let t = Thermo::sample(7, &s, -1.0, &[0.0; 9]);
+        assert!(t.line().starts_with('7'));
+        assert!(Thermo::header().contains("e_total"));
+    }
+}

@@ -1,0 +1,179 @@
+//! Artifact registry: metadata + lazily compiled PJRT executables.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// The I/O contract of one artifact (parsed from `<name>.meta.json`).
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: String,
+    pub twojmax: usize,
+    pub num_atoms: usize,
+    pub num_nbor: usize,
+    pub num_bispectrum: usize,
+    pub rcutfac: f64,
+    pub rfac0: f64,
+    pub rmin0: f64,
+    pub hlo_bytes: usize,
+}
+
+impl ArtifactMeta {
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).context("parsing artifact meta json")?;
+        let get = |k: &str| -> Result<&Json> {
+            j.get(k).with_context(|| format!("meta missing key {k}"))
+        };
+        let params = get("params")?;
+        Ok(Self {
+            name: get("name")?.as_str().context("name")?.to_string(),
+            kind: get("kind")?.as_str().context("kind")?.to_string(),
+            twojmax: get("twojmax")?.as_usize().context("twojmax")?,
+            num_atoms: get("num_atoms")?.as_usize().context("num_atoms")?,
+            num_nbor: get("num_nbor")?.as_usize().context("num_nbor")?,
+            num_bispectrum: get("num_bispectrum")?
+                .as_usize()
+                .context("num_bispectrum")?,
+            rcutfac: params.get("rcutfac").and_then(Json::as_f64).context("rcutfac")?,
+            rfac0: params.get("rfac0").and_then(Json::as_f64).context("rfac0")?,
+            rmin0: params.get("rmin0").and_then(Json::as_f64).context("rmin0")?,
+            hlo_bytes: get("hlo_bytes")?.as_usize().context("hlo_bytes")?,
+        })
+    }
+}
+
+/// A compiled artifact: metadata + loaded PJRT executable.
+pub struct LoadedArtifact {
+    pub meta: ArtifactMeta,
+    pub exe: xla::PjRtLoadedExecutable,
+}
+
+/// The artifact registry + PJRT client.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    dir: PathBuf,
+    metas: HashMap<String, ArtifactMeta>,
+    compiled: HashMap<String, LoadedArtifact>,
+}
+
+impl Runtime {
+    /// Scan `dir` for `*.meta.json` and create a CPU PJRT client.
+    /// Compilation is lazy (per artifact, on first use) because the 2J14
+    /// modules are tens of MB of HLO text.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut metas = HashMap::new();
+        for entry in std::fs::read_dir(&dir)
+            .with_context(|| format!("reading artifact dir {}", dir.display()))?
+        {
+            let path = entry?.path();
+            let fname = path.file_name().and_then(|s| s.to_str()).unwrap_or("");
+            if let Some(stem) = fname.strip_suffix(".meta.json") {
+                let text = std::fs::read_to_string(&path)?;
+                let meta = ArtifactMeta::parse(&text)
+                    .with_context(|| format!("parsing {}", path.display()))?;
+                metas.insert(stem.to_string(), meta);
+            }
+        }
+        if metas.is_empty() {
+            bail!(
+                "no artifacts found in {} — run `make artifacts` first",
+                dir.display()
+            );
+        }
+        Ok(Self { client, dir, metas, compiled: HashMap::new() })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.metas.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.metas.get(name)
+    }
+
+    /// Compile (once) and return the loaded artifact.
+    pub fn load(&mut self, name: &str) -> Result<&LoadedArtifact> {
+        if !self.compiled.contains_key(name) {
+            let meta = self
+                .metas
+                .get(name)
+                .with_context(|| format!("unknown artifact {name}"))?
+                .clone();
+            let hlo_path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                hlo_path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", hlo_path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("PJRT compile of {name}"))?;
+            self.compiled.insert(name.to_string(), LoadedArtifact { meta, exe });
+        }
+        Ok(&self.compiled[name])
+    }
+
+    /// Execute one tile through a loaded artifact.
+    ///
+    /// Inputs follow the model contract (rij, mask, beta); returns
+    /// (ei, dedr) as flat vectors.
+    pub fn execute(
+        &mut self,
+        name: &str,
+        rij: &[f64],
+        mask: &[f64],
+        beta: &[f64],
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        let art = self.load(name)?;
+        let (a, n, b) = (
+            art.meta.num_atoms as i64,
+            art.meta.num_nbor as i64,
+            art.meta.num_bispectrum as i64,
+        );
+        anyhow::ensure!(rij.len() as i64 == a * n * 3, "rij length mismatch");
+        anyhow::ensure!(mask.len() as i64 == a * n, "mask length mismatch");
+        anyhow::ensure!(beta.len() as i64 == b, "beta length mismatch");
+        let l_rij = xla::Literal::vec1(rij).reshape(&[a, n, 3])?;
+        let l_mask = xla::Literal::vec1(mask).reshape(&[a, n])?;
+        let l_beta = xla::Literal::vec1(beta);
+        let result = art.exe.execute::<xla::Literal>(&[l_rij, l_mask, l_beta])?[0][0]
+            .to_literal_sync()?;
+        let (ei_l, dedr_l) = result.to_tuple2()?;
+        Ok((ei_l.to_vec::<f64>()?, dedr_l.to_vec::<f64>()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parses() {
+        let text = r#"{"name": "snap_2j8", "kind": "pallas", "twojmax": 8,
+            "num_atoms": 32, "num_nbor": 32, "tile": 8, "num_bispectrum": 55,
+            "params": {"rcutfac": 4.73442, "rfac0": 0.99363, "rmin0": 0.0,
+            "wself": 1.0}, "inputs": [], "outputs": [], "hlo_bytes": 123}"#;
+        let m = ArtifactMeta::parse(text).unwrap();
+        assert_eq!(m.twojmax, 8);
+        assert_eq!(m.num_atoms, 32);
+        assert_eq!(m.num_bispectrum, 55);
+        assert!((m.rcutfac - 4.73442).abs() < 1e-12);
+    }
+
+    #[test]
+    fn meta_rejects_missing_keys() {
+        assert!(ArtifactMeta::parse(r#"{"name": "x"}"#).is_err());
+    }
+
+    #[test]
+    fn open_missing_dir_errors() {
+        assert!(Runtime::open("/nonexistent/path").is_err());
+    }
+}

@@ -1,0 +1,123 @@
+//! `XlaEngine`: a `ForceEngine` backed by an AOT-compiled PJRT executable.
+//!
+//! The executable has a *fixed* tile geometry (num_atoms x num_nbor from the
+//! artifact metadata); the engine pads/splits arbitrary tile inputs to fit,
+//! relying on the padding-inertness contract of the model (fully masked
+//! rows produce the isolated-atom energy and zero dedr — enforced by
+//! python/tests/test_pallas.py and re-checked in rust integration tests).
+
+use super::artifact::Runtime;
+use crate::snap::engine::{ForceEngine, TileInput, TileOutput};
+use crate::snap::memory::{MemoryFootprint, C128, F64};
+use crate::snap::SnapIndex;
+
+/// PJRT-backed force engine.
+pub struct XlaEngine {
+    runtime: Runtime,
+    artifact: String,
+    beta: Vec<f64>,
+    name: String,
+    /// isolated-atom energy (subtracted for padded rows by callers that
+    /// sum energies; kept for reference)
+    pub tile_atoms: usize,
+    pub tile_nbor: usize,
+}
+
+impl XlaEngine {
+    pub fn new(mut runtime: Runtime, artifact: &str, beta: Vec<f64>) -> anyhow::Result<Self> {
+        let meta = runtime
+            .meta(artifact)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact {artifact}"))?
+            .clone();
+        anyhow::ensure!(
+            beta.len() == meta.num_bispectrum,
+            "beta length {} != artifact num_bispectrum {}",
+            beta.len(),
+            meta.num_bispectrum
+        );
+        // compile eagerly so the first MD step isn't a compile stall
+        runtime.load(artifact)?;
+        Ok(Self {
+            runtime,
+            artifact: artifact.to_string(),
+            beta,
+            name: format!("xla-{artifact}"),
+            tile_atoms: meta.num_atoms,
+            tile_nbor: meta.num_nbor,
+        })
+    }
+
+    /// Run exactly one artifact-shaped tile (lengths must match).
+    fn run_tile(&mut self, rij: &[f64], mask: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        self.runtime
+            .execute(&self.artifact, rij, mask, &self.beta)
+            .expect("PJRT execution failed")
+    }
+}
+
+// SAFETY: `XlaEngine` owns its `Runtime` exclusively — the `Rc` inside
+// `PjRtClient` and the raw executable handles never escape this struct, and
+// all PJRT calls go through `&mut self`, i.e. one thread at a time.  Moving
+// the whole engine to another thread (what `Send` permits) is sound.
+unsafe impl Send for XlaEngine {}
+
+impl ForceEngine for XlaEngine {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn compute(&mut self, input: &TileInput) -> TileOutput {
+        input.validate();
+        let (na, nn) = (input.num_atoms, input.num_nbor);
+        let (ta, tn) = (self.tile_atoms, self.tile_nbor);
+        assert!(
+            nn <= tn,
+            "input neighbor count {nn} exceeds artifact tile width {tn}"
+        );
+        let mut out = TileOutput { ei: vec![0.0; na], dedr: vec![0.0; na * nn * 3] };
+        let mut rij = vec![0.0; ta * tn * 3];
+        let mut mask = vec![0.0; ta * tn];
+        for tile_start in (0..na).step_by(ta) {
+            let count = ta.min(na - tile_start);
+            rij.fill(0.0);
+            mask.fill(0.0);
+            for a in 0..count {
+                let src_a = tile_start + a;
+                for n in 0..nn {
+                    let src = (src_a * nn + n) * 3;
+                    let dst = (a * tn + n) * 3;
+                    rij[dst..dst + 3].copy_from_slice(&input.rij[src..src + 3]);
+                    mask[a * tn + n] = input.mask[src_a * nn + n];
+                }
+            }
+            let (ei, dedr) = self.run_tile(&rij, &mask);
+            for a in 0..count {
+                let src_a = tile_start + a;
+                out.ei[src_a] = ei[a];
+                for n in 0..nn {
+                    let src = (a * tn + n) * 3;
+                    let dst = (src_a * nn + n) * 3;
+                    out.dedr[dst..dst + 3].copy_from_slice(&dedr[src..src + 3]);
+                }
+            }
+        }
+        out
+    }
+
+    fn footprint(&self, num_atoms: usize, num_nbor: usize) -> MemoryFootprint {
+        // the XLA path materializes (per resident tile) what the fused
+        // kernels need: utot + y + per-tile input/output buffers
+        let idx = SnapIndex::new(
+            self.runtime.meta(&self.artifact).map(|m| m.twojmax).unwrap_or(8),
+        );
+        let (a, n) = (self.tile_atoms as u64, self.tile_nbor as u64);
+        let tiles = num_atoms.div_ceil(self.tile_atoms) as u64;
+        let _ = num_nbor;
+        let mut m = MemoryFootprint::new();
+        m.add("tile io (rij,mask,ei,dedr)", a * n * 7 * F64 + a * F64);
+        m.add("ulisttot(tile)", a * idx.idxu_max as u64 * C128);
+        m.add("ylist(tile)", a * idx.idxu_max as u64 * C128);
+        m.add("host results", tiles * a * (n * 3 + 1) * F64);
+        m
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts and executes them on
+//! the request path.
+//!
+//! This is the only place the `xla` crate is touched.  The flow (see
+//! /opt/xla-example/load_hlo) is: HLO *text* (written once by
+//! `python/compile/aot.py`) -> `HloModuleProto::from_text_file` ->
+//! `XlaComputation` -> `PjRtClient::compile` -> `execute` per tile.  Text is
+//! the interchange format because jax >= 0.5 emits protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids.
+
+pub mod artifact;
+pub mod engine;
+
+pub use artifact::{ArtifactMeta, Runtime};
+pub use engine::XlaEngine;

@@ -1,0 +1,617 @@
+//! The adjoint-refactored engine (paper sections IV + V) with the V1..V7
+//! optimization ladder as explicit knobs.
+//!
+//! Pipeline (staged kernels, Listing 5):
+//!   compute_U -> [transpose] -> compute_Y -> compute_dU -> compute_dE
+//!
+//! Ladder knobs (cumulative in [`crate::snap::variants`]):
+//! * **V1** — this engine itself: staged kernels + adjoint Y (no Zlist, no
+//!   dBlist).  Ulist and dUlist are still stored per (atom, neighbor), as in
+//!   pre-section-VI TestSNAP; the fused engine removes them.
+//! * **V2 pair_collapsed** — dU/dE loop over a single flattened pair index
+//!   instead of nested atom/neighbor loops.
+//! * **V3 layout_atom_fastest** — Ulisttot/Ylist stored atom-fastest
+//!   ([j*num_atoms + atom]) instead of j-fastest ([atom*idxu + j]).  On the
+//!   GPU this coalesces compute_Y; on this CPU the effect typically
+//!   *inverts* (DESIGN.md section 2) — the harness reports what it measures.
+//! * **V4 pair_atom_fastest** — flattened pair index unflattened
+//!   atom-fastest (pair = nbor*A + atom) instead of neighbor-fastest.
+//! * **V5 collapsed_y** — compute_Y consumes the precomputed flat
+//!   contraction plan (pure streaming, load-balanced) instead of walking
+//!   the nested (j1, j2, j, mb, ma) loops with on-the-fly CG indexing.
+//! * **V6 transpose_utot** — compute_U accumulates j-fastest (contiguous
+//!   writes) and an explicit transpose kernel produces the atom-fastest
+//!   view for compute_Y, instead of strided accumulation.
+//! * **V7 vectorized** — level-structured, branchless dE contraction
+//!   (contiguous per-level slices; the CPU analog of the 128-bit
+//!   load/store alignment fix).
+
+use super::engine::{ForceEngine, TileInput, TileOutput};
+use super::indices::SnapIndex;
+use super::kernels::*;
+use super::memory::{MemoryFootprint, C128, F64};
+use super::params::SnapParams;
+use super::wigner::{compute_dulist_pair, compute_ulist_pair, PairGeom};
+use std::sync::Arc;
+
+/// Ladder configuration (see module docs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AdjointConfig {
+    pub pair_collapsed: bool,
+    pub layout_atom_fastest: bool,
+    pub pair_atom_fastest: bool,
+    pub collapsed_y: bool,
+    pub transpose_utot: bool,
+    pub vectorized: bool,
+}
+
+/// The staged adjoint engine.
+pub struct AdjointEngine {
+    pub params: SnapParams,
+    pub idx: Arc<SnapIndex>,
+    pub beta: Vec<f64>,
+    pub cfg: AdjointConfig,
+    name: String,
+    // staged storage (allocated per tile size on demand)
+    ulist_r: Vec<f64>,
+    ulist_i: Vec<f64>,
+    dulist_r: Vec<f64>,
+    dulist_i: Vec<f64>,
+    utot_r: Vec<f64>,
+    utot_i: Vec<f64>,
+    utot_t_r: Vec<f64>,
+    utot_t_i: Vec<f64>,
+    y_r: Vec<f64>,
+    y_i: Vec<f64>,
+    z_r: Vec<f64>,
+    z_i: Vec<f64>,
+    blist: Vec<f64>,
+    yscratch_r: Vec<f64>,
+    yscratch_i: Vec<f64>,
+}
+
+impl AdjointEngine {
+    pub fn new(
+        params: SnapParams,
+        idx: Arc<SnapIndex>,
+        beta: Vec<f64>,
+        cfg: AdjointConfig,
+        name: impl Into<String>,
+    ) -> Self {
+        assert_eq!(beta.len(), idx.idxb_max);
+        let iu = idx.idxu_max;
+        let iz = idx.idxz_max;
+        let ib = idx.idxb_max;
+        Self {
+            params,
+            idx,
+            beta,
+            cfg,
+            name: name.into(),
+            ulist_r: Vec::new(),
+            ulist_i: Vec::new(),
+            dulist_r: Vec::new(),
+            dulist_i: Vec::new(),
+            utot_r: Vec::new(),
+            utot_i: Vec::new(),
+            utot_t_r: Vec::new(),
+            utot_t_i: Vec::new(),
+            y_r: Vec::new(),
+            y_i: Vec::new(),
+            z_r: vec![0.0; iz],
+            z_i: vec![0.0; iz],
+            blist: vec![0.0; ib],
+            yscratch_r: vec![0.0; iu],
+            yscratch_i: vec![0.0; iu],
+        }
+    }
+
+    fn ensure_capacity(&mut self, na: usize, nn: usize) {
+        let iu = self.idx.idxu_max;
+        self.ulist_r.resize(na * nn * iu, 0.0);
+        self.ulist_i.resize(na * nn * iu, 0.0);
+        self.dulist_r.resize(na * nn * iu * 3, 0.0);
+        self.dulist_i.resize(na * nn * iu * 3, 0.0);
+        self.utot_r.resize(na * iu, 0.0);
+        self.utot_i.resize(na * iu, 0.0);
+        if self.cfg.layout_atom_fastest && self.cfg.transpose_utot {
+            self.utot_t_r.resize(na * iu, 0.0);
+            self.utot_t_i.resize(na * iu, 0.0);
+        }
+        self.y_r.resize(na * iu, 0.0);
+        self.y_i.resize(na * iu, 0.0);
+    }
+
+    /// Flat index of (atom, jju) in the configured staged layout.
+    #[inline]
+    fn at(&self, atom: usize, jju: usize, na: usize) -> usize {
+        if self.cfg.layout_atom_fastest {
+            jju * na + atom
+        } else {
+            atom * self.idx.idxu_max + jju
+        }
+    }
+
+    /// Pair iteration order for the dU/dE stages.
+    fn pair_order(&self, na: usize, nn: usize) -> Vec<(usize, usize)> {
+        let mut pairs = Vec::with_capacity(na * nn);
+        if self.cfg.pair_collapsed && self.cfg.pair_atom_fastest {
+            for nbor in 0..nn {
+                for atom in 0..na {
+                    pairs.push((atom, nbor));
+                }
+            }
+        } else {
+            // nested / neighbor-fastest
+            for atom in 0..na {
+                for nbor in 0..nn {
+                    pairs.push((atom, nbor));
+                }
+            }
+        }
+        pairs
+    }
+
+    /// compute_Y, pre-V5: nested loops with on-the-fly CG index walking
+    /// (the LAMMPS-style formulation, heavier index arithmetic).
+    fn compute_ylist_nested(&mut self, atom: usize, na: usize) {
+        let idx = self.idx.clone();
+        let iu = idx.idxu_max;
+        // gather utot for this atom into scratch (layout-independent)
+        for jju in 0..iu {
+            let src = if self.cfg.layout_atom_fastest && self.cfg.transpose_utot {
+                jju * na + atom
+            } else {
+                self.at(atom, jju, na)
+            };
+            let (r, i) = if self.cfg.layout_atom_fastest && self.cfg.transpose_utot {
+                (self.utot_t_r[src], self.utot_t_i[src])
+            } else {
+                (self.utot_r[src], self.utot_i[src])
+            };
+            self.yscratch_r[jju] = r;
+            self.yscratch_i[jju] = i;
+        }
+        for jjz in 0..idx.idxz_max {
+            let e = idx.idxz[jjz];
+            let cgblock = idx.idxcg_block(e.j1, e.j2, e.j);
+            let mut jju1 = (idx.idxu_block[e.j1] + (e.j1 + 1) * e.mb1min) as i64;
+            let mut jju2 = (idx.idxu_block[e.j2] + (e.j2 + 1) * e.mb2max) as i64;
+            let mut icgb = (e.mb1min * (e.j2 + 1) + e.mb2max) as i64;
+            let mut sr = 0.0;
+            let mut si = 0.0;
+            for _ib in 0..e.nb {
+                let mut suma_r = 0.0;
+                let mut suma_i = 0.0;
+                let mut ma1 = e.ma1min as i64;
+                let mut ma2 = e.ma2max as i64;
+                let mut icga = (e.ma1min * (e.j2 + 1) + e.ma2max) as i64;
+                for _ia in 0..e.na {
+                    let u1 = (jju1 + ma1) as usize;
+                    let u2 = (jju2 + ma2) as usize;
+                    let cga = idx.cglist[(cgblock as i64 + icga) as usize];
+                    suma_r += cga
+                        * (self.yscratch_r[u1] * self.yscratch_r[u2]
+                            - self.yscratch_i[u1] * self.yscratch_i[u2]);
+                    suma_i += cga
+                        * (self.yscratch_r[u1] * self.yscratch_i[u2]
+                            + self.yscratch_i[u1] * self.yscratch_r[u2]);
+                    ma1 += 1;
+                    ma2 -= 1;
+                    icga += e.j2 as i64;
+                }
+                let cgb = idx.cglist[(cgblock as i64 + icgb) as usize];
+                sr += cgb * suma_r;
+                si += cgb * suma_i;
+                jju1 += e.j1 as i64 + 1;
+                jju2 -= e.j2 as i64 + 1;
+                icgb += e.j2 as i64;
+            }
+            let coef = idx.yplan_fac[jjz] * self.beta[idx.yplan_jjb[jjz] as usize];
+            let jju = idx.yplan_jju[jjz] as usize;
+            let dst = self.at(atom, jju, na);
+            self.y_r[dst] += coef * sr;
+            self.y_i[dst] += coef * si;
+        }
+    }
+
+    /// compute_Y, V5+: flat streaming over the precomputed contraction plan.
+    fn compute_ylist_collapsed(&mut self, atom: usize, na: usize) {
+        let idx = self.idx.clone();
+        let iu = idx.idxu_max;
+        for jju in 0..iu {
+            let (r, i) = if self.cfg.layout_atom_fastest && self.cfg.transpose_utot {
+                (self.utot_t_r[jju * na + atom], self.utot_t_i[jju * na + atom])
+            } else {
+                let s = self.at(atom, jju, na);
+                (self.utot_r[s], self.utot_i[s])
+            };
+            self.yscratch_r[jju] = r;
+            self.yscratch_i[jju] = i;
+        }
+        for jjz in 0..idx.idxz_max {
+            let lo = idx.zplan_offsets[jjz] as usize;
+            let hi = idx.zplan_offsets[jjz + 1] as usize;
+            let mut sr = 0.0;
+            let mut si = 0.0;
+            for row in lo..hi {
+                let u1 = idx.zplan_u1[row] as usize;
+                let u2 = idx.zplan_u2[row] as usize;
+                let c = idx.zplan_c[row];
+                sr += c
+                    * (self.yscratch_r[u1] * self.yscratch_r[u2]
+                        - self.yscratch_i[u1] * self.yscratch_i[u2]);
+                si += c
+                    * (self.yscratch_r[u1] * self.yscratch_i[u2]
+                        + self.yscratch_i[u1] * self.yscratch_r[u2]);
+            }
+            let coef = idx.yplan_fac[jjz] * self.beta[idx.yplan_jjb[jjz] as usize];
+            let jju = idx.yplan_jju[jjz] as usize;
+            let dst = self.at(atom, jju, na);
+            self.y_r[dst] += coef * sr;
+            self.y_i[dst] += coef * si;
+        }
+    }
+
+    /// dE contraction for one pair from *stored* dUlist.
+    fn dedr_pair(&self, atom: usize, pair: usize, na: usize) -> [f64; 3] {
+        let idx = &self.idx;
+        let base = pair * idx.idxu_max * 3;
+        let mut out = [0.0; 3];
+        if self.cfg.vectorized {
+            // V7: level-structured, branchless — full rows (w == 1) in a
+            // straight streaming loop, the middle row of even j separately.
+            for j in 0..=idx.twojmax {
+                let nrow = j + 1;
+                let full_rows = j.div_ceil(2); // rows with 2*mb < j
+                let start = idx.idxu_block[j];
+                for mb in 0..full_rows {
+                    let row0 = start + nrow * mb;
+                    for jju in row0..row0 + nrow {
+                        let (yr, yi) = self.y_at(atom, jju, na);
+                        let o = base + jju * 3;
+                        out[0] += self.dulist_r[o] * yr + self.dulist_i[o] * yi;
+                        out[1] += self.dulist_r[o + 1] * yr + self.dulist_i[o + 1] * yi;
+                        out[2] += self.dulist_r[o + 2] * yr + self.dulist_i[o + 2] * yi;
+                    }
+                }
+                if j % 2 == 0 {
+                    let mb = j / 2;
+                    let row0 = start + nrow * mb;
+                    for (off, jju) in (row0..row0 + mb).enumerate() {
+                        let _ = off;
+                        let (yr, yi) = self.y_at(atom, jju, na);
+                        let o = base + jju * 3;
+                        out[0] += self.dulist_r[o] * yr + self.dulist_i[o] * yi;
+                        out[1] += self.dulist_r[o + 1] * yr + self.dulist_i[o + 1] * yi;
+                        out[2] += self.dulist_r[o + 2] * yr + self.dulist_i[o + 2] * yi;
+                    }
+                    // diagonal element, half weight
+                    let jju = row0 + mb;
+                    let (yr, yi) = self.y_at(atom, jju, na);
+                    let o = base + jju * 3;
+                    for k in 0..3 {
+                        out[k] +=
+                            0.5 * (self.dulist_r[o + k] * yr + self.dulist_i[o + k] * yi);
+                    }
+                }
+            }
+        } else {
+            for &jju32 in &idx.uhalf {
+                let jju = jju32 as usize;
+                let w = idx.dedr_w[jju];
+                if w == 0.0 {
+                    continue;
+                }
+                let (yr, yi) = self.y_at(atom, jju, na);
+                let o = base + jju * 3;
+                for k in 0..3 {
+                    out[k] += w * (self.dulist_r[o + k] * yr + self.dulist_i[o + k] * yi);
+                }
+            }
+        }
+        [2.0 * out[0], 2.0 * out[1], 2.0 * out[2]]
+    }
+
+    #[inline]
+    fn y_at(&self, atom: usize, jju: usize, na: usize) -> (f64, f64) {
+        let s = self.at(atom, jju, na);
+        (self.y_r[s], self.y_i[s])
+    }
+}
+
+impl ForceEngine for AdjointEngine {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn compute(&mut self, input: &TileInput) -> TileOutput {
+        input.validate();
+        let (na, nn) = (input.num_atoms, input.num_nbor);
+        let iu = self.idx.idxu_max;
+        self.ensure_capacity(na, nn);
+        let p = self.params;
+        let idx = self.idx.clone();
+
+        // ---- compute_U: per-pair Wigner matrices + accumulation ----
+        self.utot_r.fill(0.0);
+        self.utot_i.fill(0.0);
+        // self-contribution, in the layout the accumulation below uses:
+        // strided atom-fastest only in the V3-without-V6 mode; j-fastest
+        // otherwise (the V6 transpose produces the atom-fastest view later).
+        let acc_atom_fastest = self.cfg.layout_atom_fastest && !self.cfg.transpose_utot;
+        for atom in 0..na {
+            for &jju in &idx.uself {
+                let s = if acc_atom_fastest {
+                    (jju as usize) * na + atom
+                } else {
+                    atom * iu + jju as usize
+                };
+                self.utot_r[s] = p.wself;
+            }
+        }
+        for atom in 0..na {
+            for nbor in 0..nn {
+                let pair = atom * nn + nbor;
+                let (ur, ui) = (
+                    &mut self.ulist_r[pair * iu..(pair + 1) * iu],
+                    &mut self.ulist_i[pair * iu..(pair + 1) * iu],
+                );
+                if !input.is_real(atom, nbor) {
+                    ur.fill(0.0);
+                    ui.fill(0.0);
+                    continue;
+                }
+                let g = PairGeom::new(input.rij_of(atom, nbor), &p);
+                compute_ulist_pair(&g, &idx, ur, ui);
+                // accumulate (strided when layout_atom_fastest && !transpose)
+                if self.cfg.layout_atom_fastest && !self.cfg.transpose_utot {
+                    for jju in 0..iu {
+                        let s = jju * na + atom;
+                        self.utot_r[s] += g.sfac * self.ulist_r[pair * iu + jju];
+                        self.utot_i[s] += g.sfac * self.ulist_i[pair * iu + jju];
+                    }
+                } else {
+                    // j-fastest accumulation (contiguous)
+                    let base = if self.cfg.layout_atom_fastest {
+                        // V6: accumulate into j-fastest temp (utot_r is
+                        // j-fastest here; transpose below)
+                        atom * iu
+                    } else {
+                        atom * iu
+                    };
+                    for jju in 0..iu {
+                        self.utot_r[base + jju] += g.sfac * self.ulist_r[pair * iu + jju];
+                        self.utot_i[base + jju] += g.sfac * self.ulist_i[pair * iu + jju];
+                    }
+                }
+            }
+        }
+        // ---- transpose kernel (the paper's V6) ----
+        if self.cfg.layout_atom_fastest && self.cfg.transpose_utot {
+            for atom in 0..na {
+                for jju in 0..iu {
+                    self.utot_t_r[jju * na + atom] = self.utot_r[atom * iu + jju];
+                    self.utot_t_i[jju * na + atom] = self.utot_i[atom * iu + jju];
+                }
+            }
+        }
+
+        // ---- compute_Y ----
+        self.y_r.fill(0.0);
+        self.y_i.fill(0.0);
+        for atom in 0..na {
+            if self.cfg.collapsed_y {
+                self.compute_ylist_collapsed(atom, na);
+            } else {
+                self.compute_ylist_nested(atom, na);
+            }
+        }
+
+        // ---- energy (compute_Z/B per atom, reusing scratch) ----
+        let mut out = TileOutput { ei: vec![0.0; na], dedr: vec![0.0; na * nn * 3] };
+        for atom in 0..na {
+            for jju in 0..iu {
+                let (r, i) = if self.cfg.layout_atom_fastest && self.cfg.transpose_utot
+                {
+                    (self.utot_t_r[jju * na + atom], self.utot_t_i[jju * na + atom])
+                } else {
+                    let s = self.at(atom, jju, na);
+                    (self.utot_r[s], self.utot_i[s])
+                };
+                self.yscratch_r[jju] = r;
+                self.yscratch_i[jju] = i;
+            }
+            compute_zlist(
+                &idx, &self.yscratch_r, &self.yscratch_i, &mut self.z_r, &mut self.z_i,
+            );
+            compute_blist(
+                &idx, &self.yscratch_r, &self.yscratch_i, &self.z_r, &self.z_i,
+                &mut self.blist,
+            );
+            out.ei[atom] = energy_from_blist(&self.blist, &self.beta);
+        }
+
+        // ---- compute_dU (stored) ----
+        let pairs = self.pair_order(na, nn);
+        for &(atom, nbor) in &pairs {
+            let pair = atom * nn + nbor;
+            let base = pair * iu * 3;
+            if !input.is_real(atom, nbor) {
+                self.dulist_r[base..base + iu * 3].fill(0.0);
+                self.dulist_i[base..base + iu * 3].fill(0.0);
+                continue;
+            }
+            let g = PairGeom::new(input.rij_of(atom, nbor), &p);
+            // ulist for this pair is already stored (recursion input)
+            let (ur, ui) = (
+                &self.ulist_r[pair * iu..(pair + 1) * iu],
+                &self.ulist_i[pair * iu..(pair + 1) * iu],
+            );
+            let (dur, dui) = (
+                &mut self.dulist_r[base..base + iu * 3],
+                &mut self.dulist_i[base..base + iu * 3],
+            );
+            compute_dulist_pair(&g, &idx, ur, ui, dur, dui);
+        }
+
+        // ---- compute_dE ----
+        for &(atom, nbor) in &pairs {
+            let pair = atom * nn + nbor;
+            if !input.is_real(atom, nbor) {
+                continue;
+            }
+            let d = self.dedr_pair(atom, pair, na);
+            let o = pair * 3;
+            out.dedr[o] = d[0];
+            out.dedr[o + 1] = d[1];
+            out.dedr[o + 2] = d[2];
+        }
+        out
+    }
+
+    fn footprint(&self, num_atoms: usize, num_nbor: usize) -> MemoryFootprint {
+        let (a, n) = (num_atoms as u64, num_nbor as u64);
+        let iu = self.idx.idxu_max as u64;
+        let ib = self.idx.idxb_max as u64;
+        let mut m = MemoryFootprint::new();
+        m.add("ulist(a,n,ju)", a * n * iu * C128);
+        m.add("ulisttot(a,ju)", a * iu * C128);
+        if self.cfg.transpose_utot {
+            m.add("ulisttot_T(a,ju)", a * iu * C128);
+        }
+        m.add("ylist(a,ju)", a * iu * C128);
+        m.add("dulist(a,n,ju,3)", a * n * iu * 3 * C128);
+        m.add("blist(a,b)", a * ib * F64);
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snap::baseline::{BaselineEngine, Staging};
+    use crate::util::XorShift;
+
+    fn random_tile(
+        rng: &mut XorShift,
+        na: usize,
+        nn: usize,
+        p: &SnapParams,
+    ) -> (Vec<f64>, Vec<f64>) {
+        let mut rij = Vec::new();
+        let mut mask = Vec::new();
+        for _ in 0..na * nn {
+            for _ in 0..3 {
+                rij.push(rng.uniform(-0.55 * p.rcut(), 0.55 * p.rcut()));
+            }
+            mask.push(if rng.next_f64() > 0.2 { 1.0 } else { 0.0 });
+        }
+        (rij, mask)
+    }
+
+    fn all_configs() -> Vec<AdjointConfig> {
+        let mut v = vec![AdjointConfig::default()];
+        v.push(AdjointConfig { pair_collapsed: true, ..Default::default() });
+        v.push(AdjointConfig {
+            pair_collapsed: true,
+            layout_atom_fastest: true,
+            ..Default::default()
+        });
+        v.push(AdjointConfig {
+            pair_collapsed: true,
+            layout_atom_fastest: true,
+            pair_atom_fastest: true,
+            ..Default::default()
+        });
+        v.push(AdjointConfig {
+            pair_collapsed: true,
+            layout_atom_fastest: true,
+            pair_atom_fastest: true,
+            collapsed_y: true,
+            ..Default::default()
+        });
+        v.push(AdjointConfig {
+            pair_collapsed: true,
+            layout_atom_fastest: true,
+            pair_atom_fastest: true,
+            collapsed_y: true,
+            transpose_utot: true,
+            ..Default::default()
+        });
+        v.push(AdjointConfig {
+            pair_collapsed: true,
+            layout_atom_fastest: true,
+            pair_atom_fastest: true,
+            collapsed_y: true,
+            transpose_utot: true,
+            vectorized: true,
+        });
+        v
+    }
+
+    #[test]
+    fn every_variant_matches_baseline() {
+        let p = SnapParams::with_twojmax(4);
+        let idx = Arc::new(SnapIndex::new(4));
+        let mut rng = XorShift::new(17);
+        let beta: Vec<f64> = (0..idx.idxb_max).map(|_| rng.normal()).collect();
+        let (rij, mask) = random_tile(&mut rng, 3, 6, &p);
+        let inp = TileInput { num_atoms: 3, num_nbor: 6, rij: &rij, mask: &mask };
+        let mut base =
+            BaselineEngine::new(p, idx.clone(), beta.clone(), Staging::Monolithic);
+        let ref_out = base.compute(&inp);
+        for cfg in all_configs() {
+            let mut eng =
+                AdjointEngine::new(p, idx.clone(), beta.clone(), cfg, format!("{cfg:?}"));
+            let out = eng.compute(&inp);
+            for (i, (a, b)) in ref_out.ei.iter().zip(out.ei.iter()).enumerate() {
+                assert!((a - b).abs() < 1e-9, "{cfg:?} ei[{i}]: {a} vs {b}");
+            }
+            for (i, (a, b)) in ref_out.dedr.iter().zip(out.dedr.iter()).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-9 * (1.0 + a.abs()),
+                    "{cfg:?} dedr[{i}]: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn adjoint_footprint_smaller_than_pair_staged_baseline() {
+        // the heart of section IV: no O(J^5) Zlist, no dBlist
+        let p = SnapParams::with_twojmax(14);
+        let idx = Arc::new(SnapIndex::new(14));
+        let beta = vec![0.0; idx.idxb_max];
+        let adj = AdjointEngine::new(
+            p, idx.clone(), beta.clone(), AdjointConfig::default(), "v1",
+        )
+        .footprint(2000, 26);
+        let base = BaselineEngine::new(p, idx, beta, Staging::PairStaged)
+            .footprint(2000, 26);
+        assert!(adj.total() < base.total());
+    }
+
+    #[test]
+    fn engine_is_reusable_across_tile_sizes() {
+        let p = SnapParams::with_twojmax(2);
+        let idx = Arc::new(SnapIndex::new(2));
+        let mut rng = XorShift::new(23);
+        let beta: Vec<f64> = (0..idx.idxb_max).map(|_| rng.normal()).collect();
+        let mut eng = AdjointEngine::new(
+            p, idx, beta, AdjointConfig::default(), "v1",
+        );
+        for (na, nn) in [(2, 3), (4, 5), (1, 8)] {
+            let (rij, mask) = random_tile(&mut rng, na, nn, &p);
+            let out = eng.compute(&TileInput {
+                num_atoms: na,
+                num_nbor: nn,
+                rij: &rij,
+                mask: &mask,
+            });
+            assert_eq!(out.ei.len(), na);
+            assert_eq!(out.dedr.len(), na * nn * 3);
+            assert!(out.dedr.iter().all(|x| x.is_finite()));
+        }
+    }
+}

@@ -1,0 +1,333 @@
+//! The baseline (pre-adjoint) SNAP formulation — Listing 1 of the paper.
+//!
+//! Per atom: `compute_U` → `compute_Z` (the O(J^5) Zlist, **materialized**)
+//! → `compute_B`; then per neighbor: `compute_dU` → `compute_dB` (the
+//! O(J^5) per-neighbor derivative of every bispectrum component,
+//! **materialized**) → `update_forces` (dedr = Σ_l β_l dB_l).
+//!
+//! This engine is the "1×" reference every figure of the paper is
+//! normalized against.  Two staging modes mirror Fig. 1:
+//!
+//! * [`Staging::Monolithic`] — one pass per atom with per-atom scratch
+//!   (the original CPU formulation; minimal memory).
+//! * [`Staging::AtomStaged`] / [`Staging::PairStaged`] — each stage runs
+//!   over *all* atoms before the next starts, so every intermediate gains
+//!   an atom (and, for PairStaged, a neighbor) dimension.  This reproduces
+//!   the paper's memory blow-up: the footprint model is what the Fig-1
+//!   OOM gate evaluates.
+
+use super::engine::{ForceEngine, TileInput, TileOutput};
+use super::indices::SnapIndex;
+use super::kernels::*;
+use super::memory::{MemoryFootprint, C128, F64};
+use super::params::SnapParams;
+use super::wigner::{compute_dulist_pair, compute_ulist_pair, PairGeom};
+use std::sync::Arc;
+
+/// How the Listing-1 pipeline is staged across atoms (Fig. 1 variants).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Staging {
+    /// Per-atom monolithic pipeline (the true baseline; scratch reused).
+    Monolithic,
+    /// Kernels staged across all atoms: intermediates gain an atom axis.
+    AtomStaged,
+    /// Staged + pair-parallel: U/dU/dB intermediates gain (atom, neighbor).
+    PairStaged,
+}
+
+/// Baseline engine (see module docs).
+pub struct BaselineEngine {
+    pub params: SnapParams,
+    pub idx: Arc<SnapIndex>,
+    pub beta: Vec<f64>,
+    pub staging: Staging,
+    // scratch (monolithic mode reuses these across atoms)
+    u_r: Vec<f64>,
+    u_i: Vec<f64>,
+    ut_r: Vec<f64>,
+    ut_i: Vec<f64>,
+    z_r: Vec<f64>,
+    z_i: Vec<f64>,
+    du_r: Vec<f64>,
+    du_i: Vec<f64>,
+    blist: Vec<f64>,
+    dblist: Vec<f64>,
+}
+
+impl BaselineEngine {
+    pub fn new(
+        params: SnapParams,
+        idx: Arc<SnapIndex>,
+        beta: Vec<f64>,
+        staging: Staging,
+    ) -> Self {
+        assert_eq!(beta.len(), idx.idxb_max, "beta length != num bispectrum");
+        let iu = idx.idxu_max;
+        let iz = idx.idxz_max;
+        let ib = idx.idxb_max;
+        Self {
+            params,
+            idx,
+            beta,
+            staging,
+            u_r: vec![0.0; iu],
+            u_i: vec![0.0; iu],
+            ut_r: vec![0.0; iu],
+            ut_i: vec![0.0; iu],
+            z_r: vec![0.0; iz],
+            z_i: vec![0.0; iz],
+            du_r: vec![0.0; iu * 3],
+            du_i: vec![0.0; iu * 3],
+            blist: vec![0.0; ib],
+            dblist: vec![0.0; ib * 3],
+        }
+    }
+
+    /// compute_dB for one pair: dB_l[k] for all l, via the per-l adjoint
+    /// rows (eq. 6 regrouped); cost O(J^2) per (l, level) = the paper's
+    /// O(J^5) per neighbor.
+    fn compute_dblist_pair(&mut self) {
+        let idx = &self.idx;
+        self.dblist.fill(0.0);
+        for l in 0..idx.idxb_max {
+            let lo = idx.dbplan_offsets[l] as usize;
+            let hi = idx.dbplan_offsets[l + 1] as usize;
+            let mut acc = [0.0f64; 3];
+            for row in lo..hi {
+                let jju = idx.dbplan_jju[row] as usize;
+                let w = idx.dedr_w[jju];
+                if w == 0.0 {
+                    continue;
+                }
+                let jjz = idx.dbplan_jjz[row] as usize;
+                let fw = idx.dbplan_fac[row] * w;
+                let (zr, zi) = (self.z_r[jjz], self.z_i[jjz]);
+                for k in 0..3 {
+                    // Re(dU * conj(fac*Z))
+                    acc[k] += fw
+                        * (self.du_r[jju * 3 + k] * zr + self.du_i[jju * 3 + k] * zi);
+                }
+            }
+            for k in 0..3 {
+                self.dblist[l * 3 + k] = 2.0 * acc[k];
+            }
+        }
+    }
+}
+
+impl ForceEngine for BaselineEngine {
+    fn name(&self) -> &str {
+        match self.staging {
+            Staging::Monolithic => "baseline",
+            Staging::AtomStaged => "pre-adjoint-atom",
+            Staging::PairStaged => "pre-adjoint-pair",
+        }
+    }
+
+    fn compute(&mut self, input: &TileInput) -> TileOutput {
+        input.validate();
+        let (na, nn) = (input.num_atoms, input.num_nbor);
+        let mut out = TileOutput {
+            ei: vec![0.0; na],
+            dedr: vec![0.0; na * nn * 3],
+        };
+        // All staging modes compute identical numbers; staging changes only
+        // which intermediates persist (modelled in footprint()).  The
+        // arithmetic pipeline below is the Listing-1 order.
+        for atom in 0..na {
+            // compute_U (+ Ulisttot)
+            let p = self.params;
+            init_utot(&self.idx, &p, &mut self.ut_r, &mut self.ut_i);
+            for nbor in 0..nn {
+                if !input.is_real(atom, nbor) {
+                    continue;
+                }
+                let g = PairGeom::new(input.rij_of(atom, nbor), &p);
+                compute_ulist_pair(&g, &self.idx, &mut self.u_r, &mut self.u_i);
+                accumulate_utot(
+                    g.sfac, &self.u_r, &self.u_i, &mut self.ut_r, &mut self.ut_i,
+                );
+            }
+            // compute_Z: materialized Zlist (the O(J^5) storage)
+            compute_zlist(
+                &self.idx, &self.ut_r, &self.ut_i, &mut self.z_r, &mut self.z_i,
+            );
+            // compute_B -> energy
+            compute_blist(
+                &self.idx, &self.ut_r, &self.ut_i, &self.z_r, &self.z_i,
+                &mut self.blist,
+            );
+            out.ei[atom] = energy_from_blist(&self.blist, &self.beta);
+            // per neighbor: compute_dU -> compute_dB -> update_forces
+            for nbor in 0..nn {
+                if !input.is_real(atom, nbor) {
+                    continue;
+                }
+                let g = PairGeom::new(input.rij_of(atom, nbor), &p);
+                compute_ulist_pair(&g, &self.idx, &mut self.u_r, &mut self.u_i);
+                compute_dulist_pair(
+                    &g, &self.idx, &self.u_r, &self.u_i, &mut self.du_r,
+                    &mut self.du_i,
+                );
+                self.compute_dblist_pair();
+                let o = (atom * nn + nbor) * 3;
+                for k in 0..3 {
+                    let mut s = 0.0;
+                    for l in 0..self.idx.idxb_max {
+                        s += self.beta[l] * self.dblist[l * 3 + k];
+                    }
+                    out.dedr[o + k] = s;
+                }
+            }
+        }
+        out
+    }
+
+    fn footprint(&self, num_atoms: usize, num_nbor: usize) -> MemoryFootprint {
+        let (a, n) = (num_atoms as u64, num_nbor as u64);
+        // Legacy layout accounting: the pre-adjoint implementations the
+        // paper benchmarked used dense cubic arrays — u_array[j][mb][ma]
+        // padded to jdim^3 and z_array[j1][j2][j][mb][ma] padded to
+        // jdim^2 per triple.  Flattening these jagged arrays is itself one
+        // of the paper's section-V optimizations ("We additionally
+        // flattened jagged multi-dimensional arrays..."), so the baseline
+        // footprint must use the padded sizes.
+        let jdim = (self.idx.twojmax + 1) as u64;
+        let iu = jdim * jdim * jdim;
+        let ntriples = self
+            .idx
+            .idxz
+            .iter()
+            .map(|e| (e.j1, e.j2, e.j))
+            .collect::<std::collections::HashSet<_>>()
+            .len() as u64;
+        let iz = ntriples * jdim * jdim;
+        let ib = self.idx.idxb_max as u64;
+        let mut m = MemoryFootprint::new();
+        match self.staging {
+            Staging::Monolithic => {
+                // the GPU baseline: team-per-atom, all per-atom intermediates
+                // resident for every atom simultaneously (Kokkos views)
+                m.add("ulist(a,n,ju)", a * n * iu * C128);
+                m.add("ulisttot(a,ju)", a * iu * C128);
+                m.add("zlist(a,jz)", a * iz * C128);
+                m.add("blist(a,b)", a * ib * F64);
+                m.add("dulist(pair-scratch)", a * iu * 3 * C128);
+                m.add("dblist(a,b,3)", a * ib * 3 * F64);
+            }
+            Staging::AtomStaged => {
+                // staged kernels: every intermediate gains the atom axis
+                m.add("ulist(a,n,ju)", a * n * iu * C128);
+                m.add("ulisttot(a,ju)", a * iu * C128);
+                m.add("zlist(a,jz)", a * iz * C128);
+                m.add("blist(a,b)", a * ib * F64);
+                m.add("dulist(a,ju,3)", a * iu * 3 * C128);
+                m.add("dblist(a,b,3)", a * ib * 3 * F64);
+            }
+            Staging::PairStaged => {
+                // pair-parallel staging: dU/dB gain the neighbor axis too
+                m.add("ulist(a,n,ju)", a * n * iu * C128);
+                m.add("ulisttot(a,ju)", a * iu * C128);
+                m.add("zlist(a,jz)", a * iz * C128);
+                m.add("blist(a,b)", a * ib * F64);
+                m.add("dulist(a,n,ju,3)", a * n * iu * 3 * C128);
+                m.add("dblist(a,n,b,3)", a * n * ib * 3 * F64);
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    fn small_input(
+        rng: &mut XorShift,
+        na: usize,
+        nn: usize,
+        p: &SnapParams,
+    ) -> (Vec<f64>, Vec<f64>) {
+        let mut rij = Vec::with_capacity(na * nn * 3);
+        let mut mask = Vec::with_capacity(na * nn);
+        for _ in 0..na * nn {
+            for _ in 0..3 {
+                rij.push(rng.uniform(-0.55 * p.rcut(), 0.55 * p.rcut()));
+            }
+            mask.push(if rng.next_f64() > 0.2 { 1.0 } else { 0.0 });
+        }
+        (rij, mask)
+    }
+
+    #[test]
+    fn forces_match_finite_difference() {
+        let p = SnapParams::with_twojmax(4);
+        let idx = Arc::new(SnapIndex::new(4));
+        let mut rng = XorShift::new(5);
+        let beta: Vec<f64> = (0..idx.idxb_max).map(|_| rng.normal()).collect();
+        let (mut rij, mask) = small_input(&mut rng, 2, 5, &p);
+        let mut eng = BaselineEngine::new(p, idx, beta, Staging::Monolithic);
+        let inp = TileInput { num_atoms: 2, num_nbor: 5, rij: &rij.clone(), mask: &mask };
+        let out = eng.compute(&inp);
+
+        let h = 1e-6;
+        for probe in [(0usize, 1usize, 0usize), (1, 3, 2), (0, 4, 1)] {
+            let (a, n, k) = probe;
+            if mask[a * 5 + n] == 0.0 {
+                continue;
+            }
+            let o = (a * 5 + n) * 3 + k;
+            let orig = rij[o];
+            rij[o] = orig + h;
+            let ep: f64 = eng
+                .compute(&TileInput { num_atoms: 2, num_nbor: 5, rij: &rij, mask: &mask })
+                .ei
+                .iter()
+                .sum();
+            rij[o] = orig - h;
+            let em: f64 = eng
+                .compute(&TileInput { num_atoms: 2, num_nbor: 5, rij: &rij, mask: &mask })
+                .ei
+                .iter()
+                .sum();
+            rij[o] = orig;
+            let fd = (ep - em) / (2.0 * h);
+            let got = out.dedr[o];
+            assert!(
+                (fd - got).abs() < 1e-6 * (1.0 + got.abs()),
+                "probe {probe:?}: fd={fd} got={got}"
+            );
+        }
+    }
+
+    #[test]
+    fn masked_pairs_zero_dedr() {
+        let p = SnapParams::with_twojmax(2);
+        let idx = Arc::new(SnapIndex::new(2));
+        let mut rng = XorShift::new(6);
+        let beta: Vec<f64> = (0..idx.idxb_max).map(|_| rng.normal()).collect();
+        let (rij, mut mask) = small_input(&mut rng, 2, 4, &p);
+        mask[3] = 0.0;
+        let mut eng = BaselineEngine::new(p, idx, beta, Staging::Monolithic);
+        let out = eng.compute(&TileInput { num_atoms: 2, num_nbor: 4, rij: &rij, mask: &mask });
+        for k in 0..3 {
+            assert_eq!(out.dedr[3 * 3 + k], 0.0);
+        }
+    }
+
+    #[test]
+    fn staged_footprints_grow() {
+        let p = SnapParams::with_twojmax(8);
+        let idx = Arc::new(SnapIndex::new(8));
+        let beta = vec![0.0; idx.idxb_max];
+        let mono = BaselineEngine::new(p, idx.clone(), beta.clone(), Staging::Monolithic)
+            .footprint(2000, 26);
+        let atom = BaselineEngine::new(p, idx.clone(), beta.clone(), Staging::AtomStaged)
+            .footprint(2000, 26);
+        let pair = BaselineEngine::new(p, idx, beta, Staging::PairStaged)
+            .footprint(2000, 26);
+        assert!(pair.total() > atom.total());
+        assert!(pair.total() > mono.total());
+    }
+}

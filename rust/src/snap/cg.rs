@@ -1,0 +1,134 @@
+//! Clebsch-Gordan coefficients in the LAMMPS convention.
+//!
+//! All angular momenta are *doubled* integers (j here = physical 2j), and
+//! values carry the LAMMPS normalization: standard CG divided by
+//! sqrt(2j+1) (the `deltacg` denominator uses (j1+j2+j)/2 + 1).  The Python
+//! twin is `compile/indexsets.py`; agreement is enforced by the golden
+//! index files in `tests/golden_tests.rs`.
+
+/// Exact factorial as f64 (n <= 170 before overflow; SNAP needs ~3*2J).
+pub fn factorial(n: i64) -> f64 {
+    assert!(n >= 0, "factorial of negative {n}");
+    let mut acc = 1.0f64;
+    for k in 2..=n {
+        acc *= k as f64;
+    }
+    acc
+}
+
+/// The Delta(j1 j2 j) factor (VMK 8.2.1), LAMMPS normalization.
+pub fn deltacg(j1: i64, j2: i64, j: i64) -> f64 {
+    let sfaccg = factorial((j1 + j2 + j) / 2 + 1);
+    (factorial((j1 + j2 - j) / 2) * factorial((j1 - j2 + j) / 2)
+        * factorial((-j1 + j2 + j) / 2)
+        / sfaccg)
+        .sqrt()
+}
+
+/// Clebsch-Gordan coefficient <j1/2 aa2/2 ; j2/2 bb2/2 | j/2 cc2/2>, all
+/// arguments doubled.  Returns 0 when projections don't add up.
+pub fn clebsch_gordan(j1: i64, j2: i64, j: i64, aa2: i64, bb2: i64, cc2: i64) -> f64 {
+    if aa2 + bb2 != cc2 {
+        return 0.0;
+    }
+    let z_min = 0.max((-(j - j2 + aa2) / 2).max(-(j - j1 - bb2) / 2));
+    let z_max = ((j1 + j2 - j) / 2).min(((j1 - aa2) / 2).min((j2 + bb2) / 2));
+    let mut sum = 0.0;
+    let mut z = z_min;
+    while z <= z_max {
+        let ifac = if z % 2 == 1 { -1.0 } else { 1.0 };
+        sum += ifac
+            / (factorial(z)
+                * factorial((j1 + j2 - j) / 2 - z)
+                * factorial((j1 - aa2) / 2 - z)
+                * factorial((j2 + bb2) / 2 - z)
+                * factorial((j - j2 + aa2) / 2 + z)
+                * factorial((j - j1 - bb2) / 2 + z));
+        z += 1;
+    }
+    sum * deltacg(j1, j2, j)
+        * (factorial((j1 + aa2) / 2)
+            * factorial((j1 - aa2) / 2)
+            * factorial((j2 + bb2) / 2)
+            * factorial((j2 - bb2) / 2)
+            * factorial((j + cc2) / 2)
+            * factorial((j - cc2) / 2))
+            .sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factorial_small() {
+        assert_eq!(factorial(0), 1.0);
+        assert_eq!(factorial(5), 120.0);
+        assert_eq!(factorial(10), 3628800.0);
+    }
+
+    #[test]
+    fn known_values_lammps_normalized() {
+        // standard CG / sqrt(2j+1) with doubled args
+        let s2 = 1.0 / 2f64.sqrt();
+        let s3 = 1.0 / 3f64.sqrt();
+        assert!((clebsch_gordan(1, 1, 0, 1, -1, 0) - s2).abs() < 1e-14);
+        assert!((clebsch_gordan(1, 1, 2, 1, 1, 2) - s3).abs() < 1e-14);
+        assert!((clebsch_gordan(2, 2, 0, 2, -2, 0) - s3).abs() < 1e-14);
+        assert!((clebsch_gordan(2, 2, 4, 0, 0, 0) - (2f64 / 15.0).sqrt()).abs() < 1e-14);
+        assert_eq!(clebsch_gordan(2, 2, 2, 0, 0, 0), 0.0);
+    }
+
+    #[test]
+    fn projection_conservation() {
+        assert_eq!(clebsch_gordan(2, 2, 2, 2, -2, 2), 0.0);
+    }
+
+    #[test]
+    fn orthogonality_weighted() {
+        // sum_j (j+1) C C' = delta under the LAMMPS normalization
+        for j1 in 0..5i64 {
+            for j2 in 0..5i64 {
+                for m1 in (-j1..=j1).step_by(2) {
+                    for m2 in (-j2..=j2).step_by(2) {
+                        let mut s = 0.0;
+                        let mut j = (j1 - j2).abs();
+                        while j <= j1 + j2 {
+                            let m = m1 + m2;
+                            if m.abs() <= j {
+                                let c = clebsch_gordan(j1, j2, j, m1, m2, m);
+                                s += (j + 1) as f64 * c * c;
+                            }
+                            j += 2;
+                        }
+                        assert!((s - 1.0).abs() < 1e-12, "j1={j1} j2={j2}: {s}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn swap_symmetry() {
+        for j1 in 0..5i64 {
+            for j2 in 0..5i64 {
+                let mut j = (j1 - j2).abs();
+                while j <= j1 + j2 {
+                    let phase = if ((j1 + j2 - j) / 2) % 2 == 1 { -1.0 } else { 1.0 };
+                    for m1 in (-j1..=j1).step_by(2) {
+                        for m2 in (-j2..=j2).step_by(2) {
+                            let m = m1 + m2;
+                            if m.abs() > j {
+                                continue;
+                            }
+                            let a = clebsch_gordan(j1, j2, j, m1, m2, m);
+                            let b = clebsch_gordan(j2, j1, j, m2, m1, m);
+                            assert!((a - phase * b).abs() < 1e-12);
+                        }
+                    }
+                    j += 2;
+                }
+            }
+        }
+    }
+}

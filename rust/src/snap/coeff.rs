@@ -1,0 +1,187 @@
+//! LAMMPS `.snapcoeff` / `.snapparam` file support + synthetic coefficients.
+//!
+//! The real tungsten coefficient file (W_2940_2017.2.snapcoeff) is not
+//! redistributable inside this environment, so the default potential uses
+//! deterministic *synthetic* coefficients (documented substitution,
+//! DESIGN.md section 2): energies/forces are linear in beta, so every
+//! correctness property and every performance result is beta-independent.
+//! The parser accepts the genuine LAMMPS format, so a real file drops in.
+
+use super::params::SnapParams;
+use crate::util::XorShift;
+use anyhow::{bail, Context, Result};
+
+/// A parsed SNAP potential: hyper-parameters + linear coefficients.
+#[derive(Clone, Debug)]
+pub struct SnapCoeffs {
+    pub params: SnapParams,
+    /// The energy shift coefficient (beta_0 in LAMMPS files).
+    pub coeff0: f64,
+    /// Linear coefficients, one per bispectrum component.
+    pub beta: Vec<f64>,
+    pub element: String,
+}
+
+impl SnapCoeffs {
+    /// Deterministic synthetic coefficients for a given problem size.
+    ///
+    /// Magnitudes decay with component index (higher-order bispectrum
+    /// components describe finer density detail and carry smaller weights
+    /// in fitted potentials); the overall scale keeps forces O(1) eV/A for
+    /// the benchmark lattice.
+    pub fn synthetic(twojmax: usize, num_bispectrum: usize, seed: u64) -> Self {
+        let mut rng = XorShift::new(seed);
+        let beta = (0..num_bispectrum)
+            .map(|l| 0.05 * rng.normal() / (1.0 + l as f64).sqrt())
+            .collect();
+        Self {
+            params: SnapParams::with_twojmax(twojmax),
+            coeff0: 0.0,
+            beta,
+            element: "W".to_string(),
+        }
+    }
+
+    /// Parse the LAMMPS `.snapcoeff` format:
+    /// ```text
+    /// # comments
+    /// nelem ncoeff
+    /// element R w
+    /// coeff0
+    /// coeff1 ... coeff_{ncoeff-1}
+    /// ```
+    /// Single-element files only (the paper's benchmark is elemental W).
+    pub fn parse_snapcoeff(text: &str, params: SnapParams) -> Result<Self> {
+        let mut lines = text
+            .lines()
+            .map(|l| l.trim())
+            .filter(|l| !l.is_empty() && !l.starts_with('#'));
+        let header = lines.next().context("missing header line")?;
+        let mut it = header.split_whitespace();
+        let nelem: usize = it.next().context("missing nelem")?.parse()?;
+        let ncoeff: usize = it.next().context("missing ncoeff")?.parse()?;
+        if nelem != 1 {
+            bail!("only single-element SNAP supported (got nelem={nelem})");
+        }
+        let elem_line = lines.next().context("missing element line")?;
+        let element = elem_line
+            .split_whitespace()
+            .next()
+            .context("missing element symbol")?
+            .to_string();
+        let mut vals = Vec::with_capacity(ncoeff);
+        for line in lines {
+            for tok in line.split_whitespace() {
+                vals.push(tok.parse::<f64>().with_context(|| format!("bad coeff {tok}"))?);
+            }
+        }
+        if vals.len() != ncoeff {
+            bail!("expected {ncoeff} coefficients, found {}", vals.len());
+        }
+        Ok(Self { params, coeff0: vals[0], beta: vals[1..].to_vec(), element })
+    }
+
+    /// Parse the LAMMPS `.snapparam` format (key value lines).
+    pub fn parse_snapparam(text: &str) -> Result<SnapParams> {
+        let mut p = SnapParams::default();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let key = it.next().unwrap();
+            let val = it.next().with_context(|| format!("missing value for {key}"))?;
+            match key {
+                "twojmax" => p.twojmax = val.parse()?,
+                "rcutfac" => p.rcutfac = val.parse()?,
+                "rfac0" => p.rfac0 = val.parse()?,
+                "rmin0" => p.rmin0 = val.parse()?,
+                "wselfallflag" | "chemflag" | "bnormflag" | "switchflag"
+                | "bzeroflag" | "quadraticflag" => {
+                    // recognized LAMMPS keys whose non-default values are
+                    // out of scope; reject non-defaults loudly
+                    let v: f64 = val.parse()?;
+                    let default_ok = matches!(
+                        (key, v as i64),
+                        ("switchflag", 1) | ("bzeroflag", 0) | ("quadraticflag", 0)
+                            | ("chemflag", 0) | ("bnormflag", 0) | ("wselfallflag", 0)
+                    );
+                    if !default_ok {
+                        bail!("unsupported {key} = {val} (see DESIGN.md scope)");
+                    }
+                }
+                _ => bail!("unknown snapparam key {key}"),
+            }
+        }
+        Ok(p)
+    }
+
+    /// Serialize to the `.snapcoeff` format (round-trip support).
+    pub fn to_snapcoeff(&self) -> String {
+        let mut s = String::new();
+        s.push_str("# SNAP coefficients (synthetic reproduction potential)\n");
+        s.push_str(&format!("1 {}\n", self.beta.len() + 1));
+        s.push_str(&format!("{} 0.5 1.0\n", self.element));
+        s.push_str(&format!("{:.17e}\n", self.coeff0));
+        for b in &self.beta {
+            s.push_str(&format!("{b:.17e}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_is_deterministic_and_decaying() {
+        let a = SnapCoeffs::synthetic(8, 55, 42);
+        let b = SnapCoeffs::synthetic(8, 55, 42);
+        assert_eq!(a.beta, b.beta);
+        assert_eq!(a.beta.len(), 55);
+        let head: f64 = a.beta[..10].iter().map(|x| x.abs()).sum();
+        let tail: f64 = a.beta[45..].iter().map(|x| x.abs()).sum();
+        assert!(head > tail, "magnitudes should decay");
+    }
+
+    #[test]
+    fn snapcoeff_roundtrip() {
+        let c = SnapCoeffs::synthetic(8, 55, 7);
+        let text = c.to_snapcoeff();
+        let back = SnapCoeffs::parse_snapcoeff(&text, c.params).unwrap();
+        assert_eq!(back.beta.len(), 55);
+        assert_eq!(back.element, "W");
+        for (x, y) in c.beta.iter().zip(back.beta.iter()) {
+            assert!((x - y).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn snapcoeff_rejects_multielement() {
+        let text = "2 3\nW 0.5 1.0\n1\n2\n3\nMo 0.5 1.0\n1\n2\n3\n";
+        assert!(SnapCoeffs::parse_snapcoeff(text, SnapParams::default()).is_err());
+    }
+
+    #[test]
+    fn snapcoeff_rejects_count_mismatch() {
+        let text = "1 4\nW 0.5 1.0\n0.0\n1.0\n";
+        assert!(SnapCoeffs::parse_snapcoeff(text, SnapParams::default()).is_err());
+    }
+
+    #[test]
+    fn snapparam_parses_benchmark_values() {
+        let text = "# params\nrcutfac 4.73442\ntwojmax 8\nrfac0 0.99363\nrmin0 0.0\nbzeroflag 0\n";
+        let p = SnapCoeffs::parse_snapparam(text).unwrap();
+        assert_eq!(p.twojmax, 8);
+        assert!((p.rcutfac - 4.73442).abs() < 1e-12);
+    }
+
+    #[test]
+    fn snapparam_rejects_unsupported_flags() {
+        assert!(SnapCoeffs::parse_snapparam("chemflag 1\n").is_err());
+        assert!(SnapCoeffs::parse_snapparam("quadraticflag 1\n").is_err());
+        assert!(SnapCoeffs::parse_snapparam("nonsense 3\n").is_err());
+    }
+}

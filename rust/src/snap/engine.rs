@@ -1,0 +1,88 @@
+//! The `ForceEngine` abstraction every SNAP implementation satisfies.
+//!
+//! Engines consume the same padded tile representation the AOT model uses
+//! (DESIGN.md: "Model I/O contract"), so the coordinator can route a tile to
+//! a native Rust engine or to the PJRT executable interchangeably, and the
+//! test-suite can diff them element-for-element.
+
+use super::memory::MemoryFootprint;
+
+/// One padded tile of work: `num_atoms * num_nbor` displacement rows.
+#[derive(Clone, Copy, Debug)]
+pub struct TileInput<'a> {
+    pub num_atoms: usize,
+    pub num_nbor: usize,
+    /// Row-major (atom, neighbor, xyz): len = num_atoms*num_nbor*3.
+    pub rij: &'a [f64],
+    /// 1.0 = real neighbor, 0.0 = padding; len = num_atoms*num_nbor.
+    pub mask: &'a [f64],
+}
+
+impl<'a> TileInput<'a> {
+    pub fn validate(&self) {
+        assert_eq!(self.rij.len(), self.num_atoms * self.num_nbor * 3);
+        assert_eq!(self.mask.len(), self.num_atoms * self.num_nbor);
+    }
+
+    #[inline]
+    pub fn rij_of(&self, atom: usize, nbor: usize) -> [f64; 3] {
+        let o = (atom * self.num_nbor + nbor) * 3;
+        [self.rij[o], self.rij[o + 1], self.rij[o + 2]]
+    }
+
+    #[inline]
+    pub fn is_real(&self, atom: usize, nbor: usize) -> bool {
+        self.mask[atom * self.num_nbor + nbor] > 0.5
+    }
+}
+
+/// Per-tile result: per-atom energies and per-pair force contractions.
+#[derive(Clone, Debug, Default)]
+pub struct TileOutput {
+    /// Per-atom SNAP energy (without the coeff0 constant); len num_atoms.
+    pub ei: Vec<f64>,
+    /// dE_i/d(r_ij) per pair, row-major (atom, nbor, xyz).
+    pub dedr: Vec<f64>,
+}
+
+/// A SNAP force implementation (native or PJRT-backed).
+///
+/// `Send` so a coordinator/server thread can own an engine; all native
+/// engines are plain owned data, and the PJRT wrapper types are opaque
+/// heap handles used from one thread at a time.
+pub trait ForceEngine: Send {
+    /// Short identifier used in benches/reports ("baseline", "v5", "fused",
+    /// "xla-pallas", ...).
+    fn name(&self) -> &str;
+
+    /// Compute energies + per-pair dE/dr for one tile.
+    fn compute(&mut self, input: &TileInput) -> TileOutput;
+
+    /// Analytic device-memory footprint for a given problem size (used by
+    /// the Fig-1 memory table and the OOM gate).
+    fn footprint(&self, num_atoms: usize, num_nbor: usize) -> MemoryFootprint;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tile_input_accessors() {
+        let rij: Vec<f64> = (0..12).map(|i| i as f64).collect();
+        let mask = vec![1.0, 0.0];
+        let t = TileInput { num_atoms: 1, num_nbor: 2, rij: &rij[..6], mask: &mask };
+        t.validate();
+        assert_eq!(t.rij_of(0, 1), [3.0, 4.0, 5.0]);
+        assert!(t.is_real(0, 0));
+        assert!(!t.is_real(0, 1));
+    }
+
+    #[test]
+    #[should_panic]
+    fn validate_rejects_bad_lengths() {
+        let rij = vec![0.0; 5];
+        let mask = vec![1.0; 2];
+        TileInput { num_atoms: 1, num_nbor: 2, rij: &rij, mask: &mask }.validate();
+    }
+}

@@ -1,0 +1,359 @@
+//! The architecture-tier engine (paper section VI): recompute instead of
+//! store, kernel fusion, half-index Y, split re/im, optional AoSoA layout.
+//!
+//! Differences from the staged [`crate::snap::adjoint::AdjointEngine`]:
+//!
+//! * **No Ulist, no dUlist** — the Wigner recursion (and its derivative)
+//!   is *recomputed* per pair inside the force kernel, living only in a
+//!   small per-pair scratch (the paper's shared-memory double buffer; here
+//!   an L1-resident slice).  This is the paper's `compute_fused_dE`:
+//!   fusing compute_dU + update_forces eliminates the largest arrays
+//!   entirely (section VI-C: 0.1 / 0.9 GB total).
+//! * **Half-index Ylist** — only the 2*mb <= j half is stored (the dE
+//!   contraction reads nothing else); the conjugation symmetry halves the
+//!   memory exactly as in section VI-A.
+//! * **Split re/im** everywhere (the paper splits `Uarraytot`/`Ylist` into
+//!   real and imaginary structures for the atomics; here it buys clean
+//!   stride-1 autovectorizable loops).
+//! * **AoSoA option** (section VI-B): `Ulisttot`/`Ylist` laid out
+//!   [atom_block][quantum_number][atom_in_block] with a vector-width inner
+//!   index (8 doubles = one AVX-512 register / 4 NEON pairs), the CPU
+//!   generalization the paper sketches in section VI-C.
+
+use super::engine::{ForceEngine, TileInput, TileOutput};
+use super::indices::SnapIndex;
+use super::memory::{MemoryFootprint, C128, F64};
+use super::params::SnapParams;
+use super::wigner::{compute_fused_dedr_pair, compute_ulist_pair, FusedDuScratch, PairGeom};
+use std::sync::Arc;
+
+/// Inner vector width of the AoSoA layout (doubles per SIMD register).
+pub const AOSOA_WIDTH: usize = 8;
+
+/// Section-VI engine configuration.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FusedConfig {
+    /// AoSoA layout for Ulisttot/Ylist (section VI-B) instead of j-fastest.
+    pub aosoa: bool,
+}
+
+/// The fused (section VI) engine.
+pub struct FusedEngine {
+    pub params: SnapParams,
+    pub idx: Arc<SnapIndex>,
+    pub beta: Vec<f64>,
+    pub cfg: FusedConfig,
+    name: String,
+    // persistent tile state: utot (full index space) + ylist (half)
+    utot_r: Vec<f64>,
+    utot_i: Vec<f64>,
+    yhalf_r: Vec<f64>,
+    yhalf_i: Vec<f64>,
+    // per-pair scratch (the "shared memory" of the GPU kernel)
+    u_r: Vec<f64>,
+    u_i: Vec<f64>,
+    du: FusedDuScratch,
+    // per-atom scratch for the Y stage
+    ut_scratch_r: Vec<f64>,
+    ut_scratch_i: Vec<f64>,
+}
+
+impl FusedEngine {
+    pub fn new(
+        params: SnapParams,
+        idx: Arc<SnapIndex>,
+        beta: Vec<f64>,
+        cfg: FusedConfig,
+        name: impl Into<String>,
+    ) -> Self {
+        assert_eq!(beta.len(), idx.idxb_max);
+        let iu = idx.idxu_max;
+        Self {
+            params,
+            idx: idx.clone(),
+            beta,
+            cfg,
+            name: name.into(),
+            utot_r: Vec::new(),
+            utot_i: Vec::new(),
+            yhalf_r: Vec::new(),
+            yhalf_i: Vec::new(),
+            u_r: vec![0.0; iu],
+            u_i: vec![0.0; iu],
+            du: FusedDuScratch::new(params.twojmax),
+            ut_scratch_r: vec![0.0; iu],
+            ut_scratch_i: vec![0.0; iu],
+        }
+    }
+
+    /// Flat slot of (atom, index) for a per-atom array of `width` entries.
+    #[inline]
+    fn slot(&self, atom: usize, i: usize, width: usize, na: usize) -> usize {
+        if self.cfg.aosoa {
+            let blk = atom / AOSOA_WIDTH;
+            let lane = atom % AOSOA_WIDTH;
+            (blk * width + i) * AOSOA_WIDTH + lane
+        } else {
+            let _ = na;
+            atom * width + i
+        }
+    }
+
+    fn padded_atoms(&self, na: usize) -> usize {
+        if self.cfg.aosoa {
+            na.div_ceil(AOSOA_WIDTH) * AOSOA_WIDTH
+        } else {
+            na
+        }
+    }
+}
+
+impl ForceEngine for FusedEngine {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn compute(&mut self, input: &TileInput) -> TileOutput {
+        input.validate();
+        let (na, nn) = (input.num_atoms, input.num_nbor);
+        let iu = self.idx.idxu_max;
+        let ih = self.idx.idxu_half_max();
+        let nap = self.padded_atoms(na);
+        self.utot_r.resize(nap * iu, 0.0);
+        self.utot_i.resize(nap * iu, 0.0);
+        self.yhalf_r.resize(nap * ih, 0.0);
+        self.yhalf_i.resize(nap * ih, 0.0);
+        self.utot_r.fill(0.0);
+        self.utot_i.fill(0.0);
+        self.yhalf_r.fill(0.0);
+        self.yhalf_i.fill(0.0);
+        let p = self.params;
+        let idx = self.idx.clone();
+        let mut out = TileOutput { ei: vec![0.0; na], dedr: vec![0.0; na * nn * 3] };
+
+        // ---- compute_U (fused accumulate; recursion scratch reused) ----
+        for atom in 0..na {
+            for &jju in &idx.uself {
+                let s = self.slot(atom, jju as usize, iu, nap);
+                self.utot_r[s] = p.wself;
+            }
+            for nbor in 0..nn {
+                if !input.is_real(atom, nbor) {
+                    continue;
+                }
+                let g = PairGeom::new(input.rij_of(atom, nbor), &p);
+                compute_ulist_pair(&g, &idx, &mut self.u_r, &mut self.u_i);
+                if self.cfg.aosoa {
+                    for jju in 0..iu {
+                        let s = self.slot(atom, jju, iu, nap);
+                        self.utot_r[s] += g.sfac * self.u_r[jju];
+                        self.utot_i[s] += g.sfac * self.u_i[jju];
+                    }
+                } else {
+                    let base = atom * iu;
+                    for jju in 0..iu {
+                        self.utot_r[base + jju] += g.sfac * self.u_r[jju];
+                        self.utot_i[base + jju] += g.sfac * self.u_i[jju];
+                    }
+                }
+            }
+        }
+
+        // ---- compute_Y (half-index) + energy ----
+        for atom in 0..na {
+            // gather utot for this atom (contiguous in the non-AoSoA case)
+            for jju in 0..iu {
+                let s = self.slot(atom, jju, iu, nap);
+                self.ut_scratch_r[jju] = self.utot_r[s];
+                self.ut_scratch_i[jju] = self.utot_i[s];
+            }
+            // Z on the fly -> Y (half slots): bounds-check-free streaming
+            // over the contraction plan (the load-balanced flat formulation)
+            let (ur, ui) = (&self.ut_scratch_r, &self.ut_scratch_i);
+            for jjz in 0..idx.idxz_max {
+                let lo = idx.zplan_offsets[jjz] as usize;
+                let hi = idx.zplan_offsets[jjz + 1] as usize;
+                let mut sr = 0.0;
+                let mut si = 0.0;
+                for ((&u1, &u2), &c) in idx.zplan_u1[lo..hi]
+                    .iter()
+                    .zip(idx.zplan_u2[lo..hi].iter())
+                    .zip(idx.zplan_c[lo..hi].iter())
+                {
+                    // SAFETY: plan indices < idxu_max by construction
+                    // (indices::tests::plan_indices_in_range)
+                    let (ar, ai, br, bi) = unsafe {
+                        (
+                            *ur.get_unchecked(u1 as usize),
+                            *ui.get_unchecked(u1 as usize),
+                            *ur.get_unchecked(u2 as usize),
+                            *ui.get_unchecked(u2 as usize),
+                        )
+                    };
+                    sr = (ar * br - ai * bi).mul_add(c, sr);
+                    si = (ar * bi + ai * br).mul_add(c, si);
+                }
+                let coef = idx.yplan_fac[jjz] * self.beta[idx.yplan_jjb[jjz] as usize];
+                let half = idx.uhalf_slot[idx.yplan_jju[jjz] as usize];
+                debug_assert!(half != usize::MAX);
+                let s = self.slot(atom, half, ih, nap);
+                self.yhalf_r[s] += coef * sr;
+                self.yhalf_i[s] += coef * si;
+            }
+            // Energy via Euler's identity for homogeneous cubics: the
+            // bispectrum is a cubic form in U, so
+            //   E_i = (2/3) * sum_half w * Re(conj(Utot) * Y)
+            // — no Zlist/B pass at all once Y exists.  Verified against the
+            // explicit beta.B path by goldens and the engine-equality tests.
+            let mut e = 0.0;
+            for (half, &jju32) in idx.uhalf.iter().enumerate() {
+                let jju = jju32 as usize;
+                let w = idx.dedr_w[jju];
+                if w == 0.0 {
+                    continue;
+                }
+                let s = self.slot(atom, half, ih, nap);
+                e += w
+                    * (self.ut_scratch_r[jju] * self.yhalf_r[s]
+                        + self.ut_scratch_i[jju] * self.yhalf_i[s]);
+            }
+            out.ei[atom] = 2.0 / 3.0 * e;
+        }
+
+        // ---- compute_fused_dE: recompute u/du per pair, contract, emit ----
+        for atom in 0..na {
+            for nbor in 0..nn {
+                if !input.is_real(atom, nbor) {
+                    continue;
+                }
+                let g = PairGeom::new(input.rij_of(atom, nbor), &p);
+                compute_ulist_pair(&g, &idx, &mut self.u_r, &mut self.u_i);
+                // level-streaming fused kernel: dU never exists outside a
+                // ~20 KB L1-resident double buffer (section VI-A)
+                let (yr_s, yi_s) = (&self.yhalf_r, &self.yhalf_i);
+                let aosoa = self.cfg.aosoa;
+                let uhalf_slot = &idx.uhalf_slot;
+                let y_at = |jju: usize| {
+                    let half = uhalf_slot[jju];
+                    let s = if aosoa {
+                        let blk = atom / AOSOA_WIDTH;
+                        let lane = atom % AOSOA_WIDTH;
+                        (blk * ih + half) * AOSOA_WIDTH + lane
+                    } else {
+                        atom * ih + half
+                    };
+                    (yr_s[s], yi_s[s])
+                };
+                let d = compute_fused_dedr_pair(
+                    &g, &idx, &self.u_r, &self.u_i, y_at, &mut self.du,
+                );
+                let o = (atom * nn + nbor) * 3;
+                out.dedr[o..o + 3].copy_from_slice(&d);
+            }
+        }
+        out
+    }
+
+    fn footprint(&self, num_atoms: usize, num_nbor: usize) -> MemoryFootprint {
+        let a = self.padded_atoms(num_atoms) as u64;
+        let _n = num_nbor as u64;
+        let iu = self.idx.idxu_max as u64;
+        let ih = self.idx.idxu_half_max() as u64;
+        let ib = self.idx.idxb_max as u64;
+        let mut m = MemoryFootprint::new();
+        // no Ulist, no dUlist: only the per-atom accumulated structures +
+        // per-execution-lane scratch (one lane on this machine)
+        m.add("ulisttot(a,ju)", a * iu * C128);
+        m.add("ylist_half(a,jh)", a * ih * C128);
+        m.add("blist(a,b)", a * ib * F64);
+        m.add("pair_scratch(u,du)", (iu + iu * 3) as u64 * C128);
+        m.add("dedr(a,n,3)", a * _n * 3 * F64);
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snap::baseline::{BaselineEngine, Staging};
+    use crate::util::XorShift;
+
+    fn tile(rng: &mut XorShift, na: usize, nn: usize, p: &SnapParams) -> (Vec<f64>, Vec<f64>) {
+        let mut rij = Vec::new();
+        let mut mask = Vec::new();
+        for _ in 0..na * nn {
+            for _ in 0..3 {
+                rij.push(rng.uniform(-0.55 * p.rcut(), 0.55 * p.rcut()));
+            }
+            mask.push(if rng.next_f64() > 0.25 { 1.0 } else { 0.0 });
+        }
+        (rij, mask)
+    }
+
+    #[test]
+    fn fused_matches_baseline_both_layouts() {
+        let p = SnapParams::with_twojmax(4);
+        let idx = Arc::new(SnapIndex::new(4));
+        let mut rng = XorShift::new(31);
+        let beta: Vec<f64> = (0..idx.idxb_max).map(|_| rng.normal()).collect();
+        let (rij, mask) = tile(&mut rng, 5, 7, &p);
+        let inp = TileInput { num_atoms: 5, num_nbor: 7, rij: &rij, mask: &mask };
+        let mut base =
+            BaselineEngine::new(p, idx.clone(), beta.clone(), Staging::Monolithic);
+        let want = base.compute(&inp);
+        for cfg in [FusedConfig { aosoa: false }, FusedConfig { aosoa: true }] {
+            let mut eng =
+                FusedEngine::new(p, idx.clone(), beta.clone(), cfg, "fused");
+            let got = eng.compute(&inp);
+            for (a, b) in want.ei.iter().zip(got.ei.iter()) {
+                assert!((a - b).abs() < 1e-9, "{cfg:?}: ei {a} vs {b}");
+            }
+            for (a, b) in want.dedr.iter().zip(got.dedr.iter()) {
+                assert!((a - b).abs() < 1e-9 * (1.0 + a.abs()), "{cfg:?}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_footprint_is_tiny() {
+        // section VI-C: 2J8 -> ~0.1 GB, 2J14 -> ~0.9 GB at 2000 atoms
+        let idx8 = Arc::new(SnapIndex::new(8));
+        let idx14 = Arc::new(SnapIndex::new(14));
+        let f8 = FusedEngine::new(
+            SnapParams::with_twojmax(8), idx8, vec![0.0; 55],
+            FusedConfig::default(), "fused",
+        )
+        .footprint(2000, 26);
+        let f14 = FusedEngine::new(
+            SnapParams::with_twojmax(14), idx14, vec![0.0; 204],
+            FusedConfig::default(), "fused",
+        )
+        .footprint(2000, 26);
+        assert!(f8.gib() < 0.2, "2J8 fused {:.3} GiB", f8.gib());
+        assert!(f14.gib() < 1.0, "2J14 fused {:.3} GiB", f14.gib());
+    }
+
+    #[test]
+    fn aosoa_padding_does_not_leak() {
+        // atom counts not divisible by the vector width still work
+        let p = SnapParams::with_twojmax(2);
+        let idx = Arc::new(SnapIndex::new(2));
+        let mut rng = XorShift::new(37);
+        let beta: Vec<f64> = (0..idx.idxb_max).map(|_| rng.normal()).collect();
+        for na in [1usize, 3, 8, 9, 17] {
+            let (rij, mask) = tile(&mut rng, na, 4, &p);
+            let inp = TileInput { num_atoms: na, num_nbor: 4, rij: &rij, mask: &mask };
+            let mut a = FusedEngine::new(
+                p, idx.clone(), beta.clone(), FusedConfig { aosoa: true }, "aosoa",
+            );
+            let mut b = FusedEngine::new(
+                p, idx.clone(), beta.clone(), FusedConfig { aosoa: false }, "flat",
+            );
+            let oa = a.compute(&inp);
+            let ob = b.compute(&inp);
+            for (x, y) in oa.dedr.iter().zip(ob.dedr.iter()) {
+                assert!((x - y).abs() < 1e-12);
+            }
+        }
+    }
+}

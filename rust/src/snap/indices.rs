@@ -1,0 +1,506 @@
+//! Static index machinery for the SNAP bispectrum — the Rust twin of
+//! `python/compile/indexsets.py`.
+//!
+//! Everything about the (j1, j2, j, ma, mb) structure is fixed once
+//! `twojmax` is chosen, so it is all precomputed here: the flat Wigner-U
+//! layout, the Clebsch-Gordan table, the Z/B/Y triples, and the flattened
+//! *contraction plans* that turn the variable-length Clebsch-Gordan sums
+//! into linear sweeps (gather + segment-accumulate).  The Python and Rust
+//! constructions are cross-checked value-for-value by the index golden
+//! files (`artifacts/golden/index_2j*.json`, see `tests/golden_tests.rs`).
+//!
+//! All j-like quantities use the LAMMPS doubled-integer convention.
+
+use super::cg::clebsch_gordan;
+
+/// One Z entry: the (j1, j2, j, ma, mb) node with its CG-sum bounds.
+#[derive(Clone, Copy, Debug)]
+pub struct IdxZ {
+    pub j1: usize,
+    pub j2: usize,
+    pub j: usize,
+    pub ma1min: usize,
+    pub ma2max: usize,
+    pub na: usize,
+    pub mb1min: usize,
+    pub mb2max: usize,
+    pub nb: usize,
+    /// Flat U index of the (j, mb, ma) node this entry accumulates into.
+    pub jju: usize,
+}
+
+/// All static index structure for one `twojmax`.
+pub struct SnapIndex {
+    pub twojmax: usize,
+    /// Flat U layout: jju = idxu_block[j] + (j+1)*mb + ma.
+    pub idxu_block: Vec<usize>,
+    pub idxu_max: usize,
+    /// rootpq[p * (jdim+2) + q] = sqrt(p/q).
+    pub rootpq: Vec<f64>,
+    pub rootpq_stride: usize,
+    /// Bispectrum triples (j1 >= j2, j >= j1).
+    pub idxb: Vec<(usize, usize, usize)>,
+    pub idxb_max: usize,
+    /// Z entries (all j1 >= j2 triples, half mb, full ma).
+    pub idxz: Vec<IdxZ>,
+    pub idxz_max: usize,
+    /// Flat CG table, LAMMPS block layout; idxcg_block maps a triple to its
+    /// block offset.
+    pub cglist: Vec<f64>,
+    idxcg_block: Vec<usize>,
+    idxz_block: Vec<usize>,
+    idxb_block: Vec<usize>,
+    triple_stride: usize,
+
+    // ---- contraction plans (see module docs) ----
+    /// Z plan rows: ztmp[seg] += c * U[u1] * U[u2]  (complex product).
+    pub zplan_seg: Vec<u32>,
+    pub zplan_u1: Vec<u32>,
+    pub zplan_u2: Vec<u32>,
+    pub zplan_c: Vec<f64>,
+    /// Per-segment row ranges in the z plan (CSR offsets, len idxz_max+1).
+    pub zplan_offsets: Vec<u32>,
+    /// B plan rows: B[seg] += 2 * w * Re(conj(U[u]) * Z[z]).
+    pub bplan_seg: Vec<u32>,
+    pub bplan_u: Vec<u32>,
+    pub bplan_z: Vec<u32>,
+    pub bplan_w: Vec<f64>,
+    /// Y plan (one row per idxz entry): Y[jju] += fac * beta[jjb] * Z[jjz].
+    pub yplan_jju: Vec<u32>,
+    pub yplan_jjb: Vec<u32>,
+    pub yplan_fac: Vec<f64>,
+    /// dB plan: y-plan rows regrouped by jjb (CSR): for each bispectrum
+    /// component l, the (jju, jjz, fac) triples building its adjoint Y_l.
+    /// Used by the baseline engine's explicit compute_dB.
+    pub dbplan_offsets: Vec<u32>,
+    pub dbplan_jju: Vec<u32>,
+    pub dbplan_jjz: Vec<u32>,
+    pub dbplan_fac: Vec<f64>,
+    /// Half-sum weights for the dE contraction (1, 0.5 middle diagonal, 0).
+    pub dedr_w: Vec<f64>,
+    /// Flat indices of the (j, ma==mb) diagonal (wself self-contribution).
+    pub uself: Vec<u32>,
+    /// Flat indices with 2*mb <= j (the stored half), in flat order, and the
+    /// map full-index -> half-slot (usize::MAX when not in the half).
+    pub uhalf: Vec<u32>,
+    pub uhalf_slot: Vec<usize>,
+}
+
+impl SnapIndex {
+    pub fn new(twojmax: usize) -> Self {
+        let jdim = twojmax + 1;
+
+        // ---- idxu ----
+        let mut idxu_block = vec![0usize; jdim];
+        let mut c = 0;
+        for j in 0..jdim {
+            idxu_block[j] = c;
+            c += (j + 1) * (j + 1);
+        }
+        let idxu_max = c;
+
+        // ---- rootpq ----
+        let stride = jdim + 2;
+        let mut rootpq = vec![0.0; stride * stride];
+        for p in 1..stride {
+            for q in 1..stride {
+                rootpq[p * stride + q] = (p as f64 / q as f64).sqrt();
+            }
+        }
+
+        // ---- triples (shared iteration order with python) ----
+        let mut triples = Vec::new();
+        for j1 in 0..jdim {
+            for j2 in 0..=j1 {
+                let mut j = j1 - j2;
+                while j <= twojmax.min(j1 + j2) {
+                    triples.push((j1, j2, j));
+                    j += 2;
+                }
+            }
+        }
+
+        let triple_stride = jdim;
+        let tidx = |j1: usize, j2: usize, j: usize| {
+            (j1 * triple_stride + j2) * triple_stride + j
+        };
+
+        // ---- idxb ----
+        let idxb: Vec<(usize, usize, usize)> =
+            triples.iter().copied().filter(|&(j1, _, j)| j >= j1).collect();
+        let idxb_max = idxb.len();
+        let mut idxb_block = vec![usize::MAX; triple_stride.pow(3)];
+        for (jjb, &(j1, j2, j)) in idxb.iter().enumerate() {
+            idxb_block[tidx(j1, j2, j)] = jjb;
+        }
+
+        // ---- cglist ----
+        let mut idxcg_block = vec![usize::MAX; triple_stride.pow(3)];
+        let mut cglist = Vec::new();
+        for &(j1, j2, j) in &triples {
+            idxcg_block[tidx(j1, j2, j)] = cglist.len();
+            for m1 in 0..=j1 {
+                let aa2 = 2 * m1 as i64 - j1 as i64;
+                for m2 in 0..=j2 {
+                    let bb2 = 2 * m2 as i64 - j2 as i64;
+                    let m = (aa2 + bb2 + j as i64) / 2;
+                    if m < 0 || m > j as i64 {
+                        cglist.push(0.0);
+                    } else {
+                        cglist.push(clebsch_gordan(
+                            j1 as i64, j2 as i64, j as i64, aa2, bb2, aa2 + bb2,
+                        ));
+                    }
+                }
+            }
+        }
+
+        // ---- idxz ----
+        let mut idxz = Vec::new();
+        let mut idxz_block = vec![usize::MAX; triple_stride.pow(3)];
+        for &(j1, j2, j) in &triples {
+            idxz_block[tidx(j1, j2, j)] = idxz.len();
+            for mb in 0..=(j / 2) {
+                for ma in 0..=j {
+                    let (j1i, j2i, ji) = (j1 as i64, j2 as i64, j as i64);
+                    let (mai, mbi) = (ma as i64, mb as i64);
+                    let ma1min = 0i64.max((2 * mai - ji - j2i + j1i) / 2);
+                    let ma2max = (2 * mai - ji - (2 * ma1min - j1i) + j2i) / 2;
+                    let na = j1i.min((2 * mai - ji + j2i + j1i) / 2) - ma1min + 1;
+                    let mb1min = 0i64.max((2 * mbi - ji - j2i + j1i) / 2);
+                    let mb2max = (2 * mbi - ji - (2 * mb1min - j1i) + j2i) / 2;
+                    let nb = j1i.min((2 * mbi - ji + j2i + j1i) / 2) - mb1min + 1;
+                    idxz.push(IdxZ {
+                        j1,
+                        j2,
+                        j,
+                        ma1min: ma1min as usize,
+                        ma2max: ma2max as usize,
+                        na: na as usize,
+                        mb1min: mb1min as usize,
+                        mb2max: mb2max as usize,
+                        nb: nb as usize,
+                        jju: idxu_block[j] + (j + 1) * mb + ma,
+                    });
+                }
+            }
+        }
+        let idxz_max = idxz.len();
+
+        // ---- Z contraction plan ----
+        let mut zplan_seg = Vec::new();
+        let mut zplan_u1 = Vec::new();
+        let mut zplan_u2 = Vec::new();
+        let mut zplan_c = Vec::new();
+        let mut zplan_offsets = Vec::with_capacity(idxz_max + 1);
+        zplan_offsets.push(0u32);
+        for (jjz, e) in idxz.iter().enumerate() {
+            let cgblock = idxcg_block[tidx(e.j1, e.j2, e.j)];
+            // i64 bookkeeping: the walking indices legitimately step past
+            // zero *after* their final use (matching the C++/python loops).
+            let mut jju1 = (idxu_block[e.j1] + (e.j1 + 1) * e.mb1min) as i64;
+            let mut jju2 = (idxu_block[e.j2] + (e.j2 + 1) * e.mb2max) as i64;
+            let mut icgb = (e.mb1min * (e.j2 + 1) + e.mb2max) as i64;
+            for _ib in 0..e.nb {
+                let mut ma1 = e.ma1min as i64;
+                let mut ma2 = e.ma2max as i64;
+                let mut icga = (e.ma1min * (e.j2 + 1) + e.ma2max) as i64;
+                for _ia in 0..e.na {
+                    zplan_seg.push(jjz as u32);
+                    zplan_u1.push((jju1 + ma1) as u32);
+                    zplan_u2.push((jju2 + ma2) as u32);
+                    zplan_c.push(
+                        cglist[(cgblock as i64 + icgb) as usize]
+                            * cglist[(cgblock as i64 + icga) as usize],
+                    );
+                    ma1 += 1;
+                    ma2 -= 1;
+                    icga += e.j2 as i64;
+                }
+                jju1 += e.j1 as i64 + 1;
+                jju2 -= e.j2 as i64 + 1;
+                icgb += e.j2 as i64;
+            }
+            zplan_offsets.push(zplan_seg.len() as u32);
+        }
+
+        // ---- B plan ----
+        let mut bplan_seg = Vec::new();
+        let mut bplan_u = Vec::new();
+        let mut bplan_z = Vec::new();
+        let mut bplan_w = Vec::new();
+        for (jjb, &(j1, j2, j)) in idxb.iter().enumerate() {
+            let mut jjz = idxz_block[tidx(j1, j2, j)];
+            let mut jju = idxu_block[j];
+            for mb in 0..=(j / 2) {
+                for ma in 0..=j {
+                    let w = if 2 * mb < j {
+                        1.0
+                    } else if ma < mb {
+                        1.0
+                    } else if ma == mb {
+                        0.5
+                    } else {
+                        0.0
+                    };
+                    if w != 0.0 {
+                        bplan_seg.push(jjb as u32);
+                        bplan_u.push(jju as u32);
+                        bplan_z.push(jjz as u32);
+                        bplan_w.push(w);
+                    }
+                    jjz += 1;
+                    jju += 1;
+                }
+            }
+        }
+
+        // ---- Y plan ----
+        // Multiplicity factor = 1 + (j==j1) + (j==j2): how many slots of the
+        // sorted triple the output level occupies.  Derived empirically
+        // against jax.grad of the reference energy (see
+        // python/tests/test_adjoint.py) — with this crate's B normalization
+        // no (j1+1)/(j+1) rescaling appears.
+        let mut yplan_jju = Vec::with_capacity(idxz_max);
+        let mut yplan_jjb = Vec::with_capacity(idxz_max);
+        let mut yplan_fac = Vec::with_capacity(idxz_max);
+        for e in &idxz {
+            let mut t = [e.j1, e.j2, e.j];
+            t.sort_unstable();
+            let jjb = idxb_block[tidx(t[1], t[0], t[2])];
+            debug_assert!(jjb != usize::MAX);
+            let fac = 1.0
+                + if e.j == e.j1 { 1.0 } else { 0.0 }
+                + if e.j == e.j2 { 1.0 } else { 0.0 };
+            yplan_jju.push(e.jju as u32);
+            yplan_jjb.push(jjb as u32);
+            yplan_fac.push(fac);
+        }
+
+        // ---- dB plan: y-plan rows regrouped by jjb (CSR over l) ----
+        let mut by_b: Vec<Vec<(u32, u32, f64)>> = vec![Vec::new(); idxb_max];
+        for (jjz, (&jju, (&jjb, &fac))) in yplan_jju
+            .iter()
+            .zip(yplan_jjb.iter().zip(yplan_fac.iter()))
+            .enumerate()
+        {
+            by_b[jjb as usize].push((jju, jjz as u32, fac));
+        }
+        let mut dbplan_offsets = Vec::with_capacity(idxb_max + 1);
+        let mut dbplan_jju = Vec::new();
+        let mut dbplan_jjz = Vec::new();
+        let mut dbplan_fac = Vec::new();
+        dbplan_offsets.push(0u32);
+        for rows in &by_b {
+            for &(jju, jjz, fac) in rows {
+                dbplan_jju.push(jju);
+                dbplan_jjz.push(jjz);
+                dbplan_fac.push(fac);
+            }
+            dbplan_offsets.push(dbplan_jju.len() as u32);
+        }
+
+        // ---- dedr half-sum weights ----
+        let mut dedr_w = vec![0.0; idxu_max];
+        for j in 0..jdim {
+            for mb in 0..=j {
+                for ma in 0..=j {
+                    let jju = idxu_block[j] + (j + 1) * mb + ma;
+                    dedr_w[jju] = if 2 * mb < j {
+                        1.0
+                    } else if 2 * mb == j {
+                        if ma < mb {
+                            1.0
+                        } else if ma == mb {
+                            0.5
+                        } else {
+                            0.0
+                        }
+                    } else {
+                        0.0
+                    };
+                }
+            }
+        }
+
+        // ---- self-contribution diagonal ----
+        let mut uself = Vec::new();
+        for j in 0..jdim {
+            for ma in 0..=j {
+                uself.push((idxu_block[j] + (j + 1) * ma + ma) as u32);
+            }
+        }
+
+        // ---- half-index map (2*mb <= j), used by the fused engine ----
+        let mut uhalf = Vec::new();
+        let mut uhalf_slot = vec![usize::MAX; idxu_max];
+        for j in 0..jdim {
+            for mb in 0..=(j / 2) {
+                for ma in 0..=j {
+                    let jju = idxu_block[j] + (j + 1) * mb + ma;
+                    uhalf_slot[jju] = uhalf.len();
+                    uhalf.push(jju as u32);
+                }
+            }
+        }
+
+        Self {
+            twojmax,
+            idxu_block,
+            idxu_max,
+            rootpq,
+            rootpq_stride: stride,
+            idxb,
+            idxb_max,
+            idxz,
+            idxz_max,
+            cglist,
+            idxcg_block,
+            idxz_block,
+            idxb_block,
+            triple_stride,
+            zplan_seg,
+            zplan_u1,
+            zplan_u2,
+            zplan_c,
+            zplan_offsets,
+            bplan_seg,
+            bplan_u,
+            bplan_z,
+            bplan_w,
+            yplan_jju,
+            yplan_jjb,
+            yplan_fac,
+            dbplan_offsets,
+            dbplan_jju,
+            dbplan_jjz,
+            dbplan_fac,
+            dedr_w,
+            uself,
+            uhalf,
+            uhalf_slot,
+        }
+    }
+
+    #[inline]
+    pub fn rootpq(&self, p: usize, q: usize) -> f64 {
+        self.rootpq[p * self.rootpq_stride + q]
+    }
+
+    #[inline]
+    pub fn flat_u(&self, j: usize, mb: usize, ma: usize) -> usize {
+        self.idxu_block[j] + (j + 1) * mb + ma
+    }
+
+    pub fn idxz_block(&self, j1: usize, j2: usize, j: usize) -> usize {
+        self.idxz_block[(j1 * self.triple_stride + j2) * self.triple_stride + j]
+    }
+
+    pub fn idxb_block(&self, j1: usize, j2: usize, j: usize) -> usize {
+        self.idxb_block[(j1 * self.triple_stride + j2) * self.triple_stride + j]
+    }
+
+    pub fn idxcg_block(&self, j1: usize, j2: usize, j: usize) -> usize {
+        self.idxcg_block[(j1 * self.triple_stride + j2) * self.triple_stride + j]
+    }
+
+    /// Number of stored half entries (2*mb <= j).
+    pub fn idxu_half_max(&self) -> usize {
+        self.uhalf.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bispectrum_counts_match_paper() {
+        // 2J = 8 -> 55 components, 2J = 14 -> 204 (paper section II-C)
+        assert_eq!(SnapIndex::new(8).idxb_max, 55);
+        assert_eq!(SnapIndex::new(14).idxb_max, 204);
+        assert_eq!(SnapIndex::new(2).idxb_max, 5);
+    }
+
+    #[test]
+    fn idxu_is_sum_of_squares() {
+        for tjm in [2usize, 4, 8] {
+            let idx = SnapIndex::new(tjm);
+            let expect: usize = (0..=tjm).map(|j| (j + 1) * (j + 1)).sum();
+            assert_eq!(idx.idxu_max, expect);
+        }
+    }
+
+    #[test]
+    fn zplan_row_counts_match_na_nb() {
+        let idx = SnapIndex::new(4);
+        for (jjz, e) in idx.idxz.iter().enumerate() {
+            let rows = (idx.zplan_offsets[jjz + 1] - idx.zplan_offsets[jjz]) as usize;
+            assert_eq!(rows, e.na * e.nb);
+        }
+    }
+
+    #[test]
+    fn plan_indices_in_range() {
+        let idx = SnapIndex::new(6);
+        assert!(idx.zplan_u1.iter().all(|&i| (i as usize) < idx.idxu_max));
+        assert!(idx.zplan_u2.iter().all(|&i| (i as usize) < idx.idxu_max));
+        assert!(idx.zplan_seg.iter().all(|&i| (i as usize) < idx.idxz_max));
+        assert!(idx.yplan_jju.iter().all(|&i| (i as usize) < idx.idxu_max));
+        assert!(idx.yplan_jjb.iter().all(|&i| (i as usize) < idx.idxb_max));
+        assert!(idx.bplan_seg.iter().all(|&i| (i as usize) < idx.idxb_max));
+    }
+
+    #[test]
+    fn yplan_fac_is_multiplicity() {
+        let idx = SnapIndex::new(6);
+        for (e, &fac) in idx.idxz.iter().zip(idx.yplan_fac.iter()) {
+            let expect = 1.0
+                + if e.j == e.j1 { 1.0 } else { 0.0 }
+                + if e.j == e.j2 { 1.0 } else { 0.0 };
+            assert_eq!(fac, expect);
+        }
+        assert!(idx.yplan_fac.iter().all(|&f| (1.0..=3.0).contains(&f)));
+    }
+
+    #[test]
+    fn dedr_weights_sum_to_half_matrix() {
+        let idx = SnapIndex::new(6);
+        for j in 0..=6usize {
+            let s = idx.idxu_block[j];
+            let n = (j + 1) * (j + 1);
+            let sum: f64 = idx.dedr_w[s..s + n].iter().sum();
+            assert!((sum - n as f64 / 2.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dbplan_covers_all_yplan_rows() {
+        let idx = SnapIndex::new(4);
+        assert_eq!(*idx.dbplan_offsets.last().unwrap() as usize, idx.idxz_max);
+        assert_eq!(idx.dbplan_jju.len(), idx.idxz_max);
+    }
+
+    #[test]
+    fn uhalf_roundtrip() {
+        let idx = SnapIndex::new(5);
+        for (slot, &jju) in idx.uhalf.iter().enumerate() {
+            assert_eq!(idx.uhalf_slot[jju as usize], slot);
+        }
+        // entries outside the half have no slot
+        let in_half: std::collections::HashSet<u32> =
+            idx.uhalf.iter().copied().collect();
+        for jju in 0..idx.idxu_max {
+            if !in_half.contains(&(jju as u32)) {
+                assert_eq!(idx.uhalf_slot[jju], usize::MAX);
+            }
+        }
+    }
+
+    #[test]
+    fn uself_is_diagonal() {
+        let idx = SnapIndex::new(4);
+        let expect: usize = (0..=4usize).map(|j| j + 1).sum();
+        assert_eq!(idx.uself.len(), expect);
+    }
+}

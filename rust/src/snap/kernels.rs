@@ -1,0 +1,263 @@
+//! Shared stage kernels: the building blocks the engines compose.
+//!
+//! Each function is the Rust realization of one of the paper's GPU kernels
+//! (`compute_U`, `compute_Z`, `compute_B`, `compute_Y`, `compute_dE`),
+//! operating on split re/im flat buffers.  Layout decisions (who owns which
+//! stride) live in the engines; these helpers take plain slices.
+
+use super::indices::SnapIndex;
+use super::params::SnapParams;
+use super::wigner::{compute_ulist_pair, PairGeom};
+
+/// The fallback displacement for masked lanes (keeps the recursion finite;
+/// contributions are zeroed by mask handling in the engines).
+#[inline]
+pub fn safe_rij(rij: [f64; 3], real: bool, p: &SnapParams) -> [f64; 3] {
+    if real {
+        rij
+    } else {
+        [0.0, 0.0, 0.5 * p.rcut()]
+    }
+}
+
+/// Initialize a per-atom U-total buffer with the wself self-contribution.
+pub fn init_utot(idx: &SnapIndex, p: &SnapParams, ut_r: &mut [f64], ut_i: &mut [f64]) {
+    ut_r.fill(0.0);
+    ut_i.fill(0.0);
+    for &jju in &idx.uself {
+        ut_r[jju as usize] = p.wself;
+    }
+}
+
+/// Accumulate one neighbor's weighted U into U-total:
+/// `utot += sfac * ulist` (the paper's atomic_add site; a plain add here
+/// because each atom is owned by one execution lane).
+pub fn accumulate_utot(
+    sfac: f64,
+    u_r: &[f64],
+    u_i: &[f64],
+    ut_r: &mut [f64],
+    ut_i: &mut [f64],
+) {
+    for ((tr, ti), (ur, ui)) in ut_r
+        .iter_mut()
+        .zip(ut_i.iter_mut())
+        .zip(u_r.iter().zip(u_i.iter()))
+    {
+        *tr += sfac * ur;
+        *ti += sfac * ui;
+    }
+}
+
+/// Convenience: full compute_U for one atom's neighbor rows into utot.
+/// `scratch_*` must be idxu_max long.
+#[allow(clippy::too_many_arguments)]
+pub fn compute_utot_atom(
+    idx: &SnapIndex,
+    p: &SnapParams,
+    rows: impl Iterator<Item = ([f64; 3], bool)>,
+    scratch_r: &mut [f64],
+    scratch_i: &mut [f64],
+    ut_r: &mut [f64],
+    ut_i: &mut [f64],
+) {
+    init_utot(idx, p, ut_r, ut_i);
+    for (rij, real) in rows {
+        if !real {
+            continue;
+        }
+        let g = PairGeom::new(rij, p);
+        compute_ulist_pair(&g, idx, scratch_r, scratch_i);
+        accumulate_utot(g.sfac, scratch_r, scratch_i, ut_r, ut_i);
+    }
+}
+
+/// compute_Z into a caller buffer (len idxz_max): the materialized Zlist of
+/// the baseline formulation (eq. 2-3), via the flattened contraction plan.
+pub fn compute_zlist(
+    idx: &SnapIndex,
+    ut_r: &[f64],
+    ut_i: &[f64],
+    z_r: &mut [f64],
+    z_i: &mut [f64],
+) {
+    for jjz in 0..idx.idxz_max {
+        let lo = idx.zplan_offsets[jjz] as usize;
+        let hi = idx.zplan_offsets[jjz + 1] as usize;
+        let mut sr = 0.0;
+        let mut si = 0.0;
+        for row in lo..hi {
+            let u1 = idx.zplan_u1[row] as usize;
+            let u2 = idx.zplan_u2[row] as usize;
+            let c = idx.zplan_c[row];
+            // plain complex product U1 * U2
+            sr += c * (ut_r[u1] * ut_r[u2] - ut_i[u1] * ut_i[u2]);
+            si += c * (ut_r[u1] * ut_i[u2] + ut_i[u1] * ut_r[u2]);
+        }
+        z_r[jjz] = sr;
+        z_i[jjz] = si;
+    }
+}
+
+/// compute_B from utot + zlist: B_l = 2 sum_half w * Re(conj(U) Z).
+pub fn compute_blist(
+    idx: &SnapIndex,
+    ut_r: &[f64],
+    ut_i: &[f64],
+    z_r: &[f64],
+    z_i: &[f64],
+    blist: &mut [f64],
+) {
+    blist.fill(0.0);
+    for row in 0..idx.bplan_seg.len() {
+        let l = idx.bplan_seg[row] as usize;
+        let u = idx.bplan_u[row] as usize;
+        let z = idx.bplan_z[row] as usize;
+        blist[l] += idx.bplan_w[row] * (ut_r[u] * z_r[z] + ut_i[u] * z_i[z]);
+    }
+    for b in blist.iter_mut() {
+        *b *= 2.0;
+    }
+}
+
+/// compute_Y (the adjoint, eq. 7): Z elements computed on the fly and
+/// consumed immediately — no Zlist storage.  `y_*` are idxu_max long (only
+/// the 2*mb <= j half is populated).  This is the "collapsed" (V5) flat
+/// streaming formulation.
+pub fn compute_ylist(
+    idx: &SnapIndex,
+    ut_r: &[f64],
+    ut_i: &[f64],
+    beta: &[f64],
+    y_r: &mut [f64],
+    y_i: &mut [f64],
+) {
+    y_r.fill(0.0);
+    y_i.fill(0.0);
+    debug_assert!(ut_r.len() >= idx.idxu_max && ut_i.len() >= idx.idxu_max);
+    for jjz in 0..idx.idxz_max {
+        let lo = idx.zplan_offsets[jjz] as usize;
+        let hi = idx.zplan_offsets[jjz + 1] as usize;
+        let mut sr = 0.0;
+        let mut si = 0.0;
+        // zip over the plan slices (no per-row bounds checks on the plan);
+        // the u1/u2 gathers are in range by construction of the plan
+        // (validated by SnapIndex tests), checked in debug builds.
+        for ((&u1, &u2), &c) in idx.zplan_u1[lo..hi]
+            .iter()
+            .zip(idx.zplan_u2[lo..hi].iter())
+            .zip(idx.zplan_c[lo..hi].iter())
+        {
+            let (u1, u2) = (u1 as usize, u2 as usize);
+            debug_assert!(u1 < ut_r.len() && u2 < ut_r.len());
+            // SAFETY: plan indices are < idxu_max by construction
+            // (plan_indices_in_range test); ut_* are idxu_max long.
+            let (a_r, a_i, b_r, b_i) = unsafe {
+                (
+                    *ut_r.get_unchecked(u1),
+                    *ut_i.get_unchecked(u1),
+                    *ut_r.get_unchecked(u2),
+                    *ut_i.get_unchecked(u2),
+                )
+            };
+            sr = (a_r * b_r - a_i * b_i).mul_add(c, sr);
+            si = (a_r * b_i + a_i * b_r).mul_add(c, si);
+        }
+        let coef = idx.yplan_fac[jjz] * beta[idx.yplan_jjb[jjz] as usize];
+        let jju = idx.yplan_jju[jjz] as usize;
+        y_r[jju] += coef * sr;
+        y_i[jju] += coef * si;
+    }
+}
+
+/// compute_dE for one pair: dedr[k] = 2 sum_half w * Re(dU[.,k] conj(Y)).
+/// `du_*` layout: [jju*3 + k].
+pub fn compute_dedr_pair(
+    idx: &SnapIndex,
+    du_r: &[f64],
+    du_i: &[f64],
+    y_r: &[f64],
+    y_i: &[f64],
+) -> [f64; 3] {
+    let mut out = [0.0; 3];
+    // iterate only the stored half (w == 0 elsewhere)
+    for &jju32 in &idx.uhalf {
+        let jju = jju32 as usize;
+        let w = idx.dedr_w[jju];
+        if w == 0.0 {
+            continue;
+        }
+        let (yr, yi) = (y_r[jju], y_i[jju]);
+        for k in 0..3 {
+            out[k] += w * (du_r[jju * 3 + k] * yr + du_i[jju * 3 + k] * yi);
+        }
+    }
+    [2.0 * out[0], 2.0 * out[1], 2.0 * out[2]]
+}
+
+/// Per-atom energy: beta . B.
+pub fn energy_from_blist(blist: &[f64], beta: &[f64]) -> f64 {
+    blist.iter().zip(beta).map(|(b, c)| b * c).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snap::{SnapIndex, SnapParams};
+
+    #[test]
+    fn utot_of_isolated_atom_is_wself_diagonal() {
+        let p = SnapParams::with_twojmax(4);
+        let idx = SnapIndex::new(4);
+        let mut ut_r = vec![0.0; idx.idxu_max];
+        let mut ut_i = vec![0.0; idx.idxu_max];
+        init_utot(&idx, &p, &mut ut_r, &mut ut_i);
+        let diag: f64 = ut_r.iter().sum();
+        assert_eq!(diag, idx.uself.len() as f64 * p.wself);
+        assert!(ut_i.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn blist_from_zlist_matches_ylist_contraction_identity() {
+        // E = beta . B must equal the half-sum contraction of Y with Utot
+        // weighted like the B plan:  sum_l beta_l B_l
+        //   = 2 sum_half w Re(conj(U) * sum fac beta Z)/multiplicity-care.
+        // We verify a weaker but fully discriminating identity instead:
+        // compute_ylist with one-hot beta reproduces compute_zlist entries
+        // scattered with the multiplicity factors.
+        let p = SnapParams::with_twojmax(3);
+        let idx = SnapIndex::new(3);
+        let mut rng = crate::util::XorShift::new(9);
+        let mut ut_r = vec![0.0; idx.idxu_max];
+        let mut ut_i = vec![0.0; idx.idxu_max];
+        for v in ut_r.iter_mut().chain(ut_i.iter_mut()) {
+            *v = rng.normal();
+        }
+        let mut z_r = vec![0.0; idx.idxz_max];
+        let mut z_i = vec![0.0; idx.idxz_max];
+        compute_zlist(&idx, &ut_r, &ut_i, &mut z_r, &mut z_i);
+        for l in 0..idx.idxb_max {
+            let mut beta = vec![0.0; idx.idxb_max];
+            beta[l] = 1.0;
+            let mut y_r = vec![0.0; idx.idxu_max];
+            let mut y_i = vec![0.0; idx.idxu_max];
+            compute_ylist(&idx, &ut_r, &ut_i, &beta, &mut y_r, &mut y_i);
+            // rebuild from the dbplan (regrouped rows) and compare
+            let mut y2_r = vec![0.0; idx.idxu_max];
+            let mut y2_i = vec![0.0; idx.idxu_max];
+            let lo = idx.dbplan_offsets[l] as usize;
+            let hi = idx.dbplan_offsets[l + 1] as usize;
+            for row in lo..hi {
+                let jju = idx.dbplan_jju[row] as usize;
+                let jjz = idx.dbplan_jjz[row] as usize;
+                let fac = idx.dbplan_fac[row];
+                y2_r[jju] += fac * z_r[jjz];
+                y2_i[jju] += fac * z_i[jjz];
+            }
+            for jju in 0..idx.idxu_max {
+                assert!((y_r[jju] - y2_r[jju]).abs() < 1e-12);
+                assert!((y_i[jju] - y2_i[jju]).abs() < 1e-12);
+            }
+        }
+    }
+}

@@ -1,0 +1,35 @@
+//! Native SNAP engines: the paper's full optimization ladder in Rust.
+//!
+//! * [`params`]   — descriptor hyper-parameters + switching function.
+//! * [`cg`]       — Clebsch-Gordan coefficients (LAMMPS normalization).
+//! * [`indices`]  — all static (j1, j2, j, ma, mb) index structure and the
+//!                  flattened contraction plans (shared convention with
+//!                  `python/compile/indexsets.py`; cross-checked by goldens).
+//! * [`wigner`]   — the per-pair Wigner-U recursion and its derivative.
+//! * [`engine`]   — the `ForceEngine` trait every implementation satisfies.
+//! * [`baseline`] — the pre-adjoint Listing-1 formulation (Zlist + dBlist
+//!                  materialized) = the paper's "baseline" all figures are
+//!                  normalized against, plus the Fig-1 staged variants.
+//! * [`adjoint`]  — the section IV/V engine with the V1..V7 variant knobs.
+//! * [`fused`]    — the section VI engine: recompute-instead-of-store,
+//!                  fused dE, half-index Y, split re/im, AoSoA layouts.
+//! * [`variants`] — the named ladder (V0..V7, VI) used by benches/figures.
+//! * [`memory`]   — analytic memory-footprint model + device budget gate.
+//! * [`coeff`]    — LAMMPS `.snapcoeff`/`.snapparam` file support.
+
+pub mod adjoint;
+pub mod baseline;
+pub mod cg;
+pub mod kernels;
+pub mod coeff;
+pub mod engine;
+pub mod fused;
+pub mod indices;
+pub mod memory;
+pub mod params;
+pub mod variants;
+pub mod wigner;
+
+pub use engine::{ForceEngine, TileInput, TileOutput};
+pub use indices::SnapIndex;
+pub use params::SnapParams;

@@ -1,0 +1,106 @@
+//! SNAP descriptor hyper-parameters and the radial switching function.
+//!
+//! Field names follow LAMMPS `pair_style snap` so a real `.snapparam` file
+//! maps 1:1 (see [`crate::snap::coeff`]).
+
+/// Hyper-parameters of the SNAP descriptor.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SnapParams {
+    /// Doubled maximum angular momentum (the paper's 2J; 8 or 14).
+    pub twojmax: usize,
+    /// Cutoff radius (Angstrom); the W benchmark value by default.
+    pub rcutfac: f64,
+    /// Angular scaling of the polar mapping (theta0 max = rfac0 * pi).
+    pub rfac0: f64,
+    /// Inner radius below which the switching function is exactly 1.
+    pub rmin0: f64,
+    /// Self-contribution weight on the U diagonal.
+    pub wself: f64,
+}
+
+impl Default for SnapParams {
+    fn default() -> Self {
+        // The 2000-atom tungsten benchmark of the paper.
+        Self { twojmax: 8, rcutfac: 4.73442, rfac0: 0.99363, rmin0: 0.0, wself: 1.0 }
+    }
+}
+
+impl SnapParams {
+    pub fn with_twojmax(twojmax: usize) -> Self {
+        Self { twojmax, ..Self::default() }
+    }
+
+    #[inline]
+    pub fn rcut(&self) -> f64 {
+        self.rcutfac
+    }
+
+    /// Switching function: 1 at r <= rmin0, smooth cosine to 0 at rcut.
+    #[inline]
+    pub fn sfac(&self, r: f64) -> f64 {
+        if r <= self.rmin0 {
+            1.0
+        } else if r >= self.rcut() {
+            0.0
+        } else {
+            let x = (r - self.rmin0) / (self.rcut() - self.rmin0);
+            0.5 * ((std::f64::consts::PI * x).cos() + 1.0)
+        }
+    }
+
+    /// d(sfac)/dr.
+    #[inline]
+    pub fn dsfac(&self, r: f64) -> f64 {
+        if r <= self.rmin0 || r >= self.rcut() {
+            0.0
+        } else {
+            let span = self.rcut() - self.rmin0;
+            let x = (r - self.rmin0) / span;
+            -0.5 * std::f64::consts::PI / span * (std::f64::consts::PI * x).sin()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sfac_boundaries() {
+        let p = SnapParams::default();
+        assert_eq!(p.sfac(0.0), 1.0);
+        assert_eq!(p.sfac(p.rcut()), 0.0);
+        assert_eq!(p.sfac(p.rcut() + 1.0), 0.0);
+        let mid = p.sfac(p.rcut() / 2.0);
+        assert!(mid > 0.0 && mid < 1.0);
+    }
+
+    #[test]
+    fn dsfac_matches_finite_difference() {
+        let p = SnapParams::default();
+        let h = 1e-7;
+        for i in 1..40 {
+            let r = 0.1 + i as f64 * 0.1;
+            if r >= p.rcut() - 0.05 {
+                break;
+            }
+            let fd = (p.sfac(r + h) - p.sfac(r - h)) / (2.0 * h);
+            assert!(
+                (fd - p.dsfac(r)).abs() < 1e-6,
+                "r={r}: fd={fd} vs {}",
+                p.dsfac(r)
+            );
+        }
+    }
+
+    #[test]
+    fn sfac_monotone_decreasing() {
+        let p = SnapParams::default();
+        let mut prev = 1.0;
+        for i in 0..100 {
+            let s = p.sfac(i as f64 * p.rcut() / 100.0);
+            assert!(s <= prev + 1e-15);
+            prev = s;
+        }
+    }
+}

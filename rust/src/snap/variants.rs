@@ -1,0 +1,208 @@
+//! The named optimization ladder: V0 (baseline) through V7 and the
+//! section-VI fused tier, exactly as enumerated by the paper's Figs. 2-4.
+//!
+//! Each ladder step is cumulative (the paper: "the height of the bar for
+//! any given subsection assumes the optimizations from all previous
+//! subsections are in place").
+
+use super::adjoint::{AdjointConfig, AdjointEngine};
+use super::baseline::{BaselineEngine, Staging};
+use super::engine::ForceEngine;
+use super::fused::{FusedConfig, FusedEngine};
+use super::indices::SnapIndex;
+use super::params::SnapParams;
+use std::sync::Arc;
+
+/// The ladder of named variants (paper x-axis labels).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Variant {
+    /// Pre-adjoint baseline: monolithic Listing-1 with Zlist + dBlist.
+    V0Baseline,
+    /// Fig. 1 pre-adjoint staged variants (memory study).
+    PreAdjointAtom,
+    PreAdjointPair,
+    /// V1: adjoint refactorization + staged kernels (section IV / V-A).
+    V1,
+    /// V2: + atom,neighbor pair collapse (V-B).
+    V2,
+    /// V3: + atom-fastest data layout for Ulisttot/Ylist (V-C).
+    V3,
+    /// V4: + atom-fastest pair index (V-D).
+    V4,
+    /// V5: + collapsed bispectrum (flat contraction plan) Y (V-E).
+    V5,
+    /// V6: + Ulisttot transpose between compute_U and compute_Y (V-F).
+    V6,
+    /// V7: + vectorized/branchless dE contraction (V-G's 128-bit analog).
+    V7,
+    /// Section VI: fused dE, recompute, half-Y, split re/im.
+    Fused,
+    /// Section VI-B: + AoSoA Ulisttot/Ylist.
+    FusedAosoa,
+}
+
+impl Variant {
+    /// All ladder steps in paper order.
+    pub fn ladder() -> &'static [Variant] {
+        use Variant::*;
+        &[V0Baseline, V1, V2, V3, V4, V5, V6, V7, Fused, FusedAosoa]
+    }
+
+    /// The Fig. 1 set.
+    pub fn fig1() -> &'static [Variant] {
+        use Variant::*;
+        &[V0Baseline, PreAdjointAtom, PreAdjointPair]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Variant::V0Baseline => "baseline",
+            Variant::PreAdjointAtom => "pre-adjoint-atom",
+            Variant::PreAdjointPair => "pre-adjoint-pair",
+            Variant::V1 => "V1",
+            Variant::V2 => "V2",
+            Variant::V3 => "V3",
+            Variant::V4 => "V4",
+            Variant::V5 => "V5",
+            Variant::V6 => "V6",
+            Variant::V7 => "V7",
+            Variant::Fused => "VI-fused",
+            Variant::FusedAosoa => "VI-aosoa",
+        }
+    }
+
+    /// Instantiate the engine realizing this ladder step.
+    pub fn build(
+        &self,
+        params: SnapParams,
+        idx: Arc<SnapIndex>,
+        beta: Vec<f64>,
+    ) -> Box<dyn ForceEngine> {
+        let adj = |cfg: AdjointConfig, name: &str| -> Box<dyn ForceEngine> {
+            Box::new(AdjointEngine::new(params, idx.clone(), beta.clone(), cfg, name))
+        };
+        match self {
+            Variant::V0Baseline => Box::new(BaselineEngine::new(
+                params, idx.clone(), beta.clone(), Staging::Monolithic,
+            )),
+            Variant::PreAdjointAtom => Box::new(BaselineEngine::new(
+                params, idx.clone(), beta.clone(), Staging::AtomStaged,
+            )),
+            Variant::PreAdjointPair => Box::new(BaselineEngine::new(
+                params, idx.clone(), beta.clone(), Staging::PairStaged,
+            )),
+            Variant::V1 => adj(AdjointConfig::default(), "V1"),
+            Variant::V2 => adj(
+                AdjointConfig { pair_collapsed: true, ..Default::default() },
+                "V2",
+            ),
+            Variant::V3 => adj(
+                AdjointConfig {
+                    pair_collapsed: true,
+                    layout_atom_fastest: true,
+                    ..Default::default()
+                },
+                "V3",
+            ),
+            Variant::V4 => adj(
+                AdjointConfig {
+                    pair_collapsed: true,
+                    layout_atom_fastest: true,
+                    pair_atom_fastest: true,
+                    ..Default::default()
+                },
+                "V4",
+            ),
+            Variant::V5 => adj(
+                AdjointConfig {
+                    pair_collapsed: true,
+                    layout_atom_fastest: true,
+                    pair_atom_fastest: true,
+                    collapsed_y: true,
+                    ..Default::default()
+                },
+                "V5",
+            ),
+            Variant::V6 => adj(
+                AdjointConfig {
+                    pair_collapsed: true,
+                    layout_atom_fastest: true,
+                    pair_atom_fastest: true,
+                    collapsed_y: true,
+                    transpose_utot: true,
+                    ..Default::default()
+                },
+                "V6",
+            ),
+            Variant::V7 => adj(
+                AdjointConfig {
+                    pair_collapsed: true,
+                    layout_atom_fastest: true,
+                    pair_atom_fastest: true,
+                    collapsed_y: true,
+                    transpose_utot: true,
+                    vectorized: true,
+                },
+                "V7",
+            ),
+            Variant::Fused => Box::new(FusedEngine::new(
+                params, idx.clone(), beta.clone(), FusedConfig { aosoa: false }, "VI-fused",
+            )),
+            Variant::FusedAosoa => Box::new(FusedEngine::new(
+                params, idx.clone(), beta.clone(), FusedConfig { aosoa: true }, "VI-aosoa",
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snap::engine::TileInput;
+    use crate::util::XorShift;
+
+    #[test]
+    fn every_ladder_step_agrees_on_physics() {
+        let p = SnapParams::with_twojmax(3);
+        let idx = Arc::new(SnapIndex::new(3));
+        let mut rng = XorShift::new(77);
+        let beta: Vec<f64> = (0..idx.idxb_max).map(|_| rng.normal()).collect();
+        let (na, nn) = (4usize, 6usize);
+        let mut rij = Vec::new();
+        let mut mask = Vec::new();
+        for _ in 0..na * nn {
+            for _ in 0..3 {
+                rij.push(rng.uniform(-2.4, 2.4));
+            }
+            mask.push(if rng.next_f64() > 0.2 { 1.0 } else { 0.0 });
+        }
+        let inp = TileInput { num_atoms: na, num_nbor: nn, rij: &rij, mask: &mask };
+        let mut reference: Option<crate::snap::TileOutput> = None;
+        for v in Variant::ladder().iter().chain(Variant::fig1()) {
+            let mut eng = v.build(p, idx.clone(), beta.clone());
+            let out = eng.compute(&inp);
+            if let Some(want) = &reference {
+                for (a, b) in want.ei.iter().zip(out.ei.iter()) {
+                    assert!((a - b).abs() < 1e-9, "{v:?} energy mismatch");
+                }
+                for (a, b) in want.dedr.iter().zip(out.dedr.iter()) {
+                    assert!(
+                        (a - b).abs() < 1e-9 * (1.0 + a.abs()),
+                        "{v:?} dedr mismatch: {a} vs {b}"
+                    );
+                }
+            } else {
+                reference = Some(out);
+            }
+        }
+    }
+
+    #[test]
+    fn labels_are_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for v in Variant::ladder().iter().chain(Variant::fig1()) {
+            seen.insert(v.label());
+        }
+        assert_eq!(seen.len(), Variant::ladder().len() + Variant::fig1().len() - 1);
+    }
+}

@@ -1,0 +1,488 @@
+//! Per-pair Wigner-U recursion and its derivative — the compute hot-spot.
+//!
+//! `compute_ulist_pair` evaluates the hyperspherical harmonics U_j(r_ij)
+//! level-by-level (eq. 9 of the paper: each element of u_j is a linear
+//! combination of two adjacent elements of u_{j-1/2}), and
+//! `compute_dulist_pair` applies the product rule for dU/dr.  Both write
+//! into caller-provided flat scratch (split re/im, the layout the paper
+//! adopts in section VI-A), so engines choose whether the result is stored
+//! (baseline / V-ladder) or consumed immediately (fused, section VI).
+
+use super::indices::SnapIndex;
+use super::params::SnapParams;
+
+/// Cayley-Klein parameters and friends for one displacement.
+#[derive(Clone, Copy, Debug)]
+pub struct PairGeom {
+    pub r: f64,
+    pub a_r: f64,
+    pub a_i: f64,
+    pub b_r: f64,
+    pub b_i: f64,
+    pub z0: f64,
+    pub dz0dr: f64,
+    pub sfac: f64,
+    pub dsfac: f64,
+    pub ux: f64,
+    pub uy: f64,
+    pub uz: f64,
+    pub x: f64,
+    pub y: f64,
+    pub z: f64,
+}
+
+impl PairGeom {
+    /// Map a displacement to the 3-sphere (LAMMPS compute_uarray preamble).
+    pub fn new(rij: [f64; 3], p: &SnapParams) -> Self {
+        let [x, y, z] = rij;
+        let r = (x * x + y * y + z * z).sqrt();
+        let rscale0 = p.rfac0 * std::f64::consts::PI / (p.rcut() - p.rmin0);
+        let theta0 = (r - p.rmin0) * rscale0;
+        let z0 = r * theta0.cos() / theta0.sin();
+        let dz0dr = z0 / r - r * rscale0 * (r * r + z0 * z0) / (r * r);
+        let r0inv = 1.0 / (r * r + z0 * z0).sqrt();
+        Self {
+            r,
+            a_r: r0inv * z0,
+            a_i: -r0inv * z,
+            b_r: r0inv * y,
+            b_i: -r0inv * x,
+            z0,
+            dz0dr,
+            sfac: p.sfac(r),
+            dsfac: p.dsfac(r),
+            ux: x / r,
+            uy: y / r,
+            uz: z / r,
+            x,
+            y,
+            z,
+        }
+    }
+}
+
+/// Fill `u_r/u_i` (len idxu_max) with the per-pair Wigner matrices,
+/// *unweighted* by the switching function.
+pub fn compute_ulist_pair(
+    g: &PairGeom,
+    idx: &SnapIndex,
+    u_r: &mut [f64],
+    u_i: &mut [f64],
+) {
+    u_r[0] = 1.0;
+    u_i[0] = 0.0;
+    for j in 1..=idx.twojmax {
+        let mut jju = idx.idxu_block[j];
+        let mut jjup = idx.idxu_block[j - 1];
+        // left half: 2*mb <= j, recursion from level j-1
+        for mb in 0..=(j / 2) {
+            u_r[jju] = 0.0;
+            u_i[jju] = 0.0;
+            for ma in 0..j {
+                let rootpq = idx.rootpq(j - ma, j - mb);
+                let (pr, pi) = (u_r[jjup], u_i[jjup]);
+                // += rootpq * conj(a) * u_prev
+                u_r[jju] += rootpq * (g.a_r * pr + g.a_i * pi);
+                u_i[jju] += rootpq * (g.a_r * pi - g.a_i * pr);
+                // next element seeded with -rootpq' * conj(b) * u_prev
+                let rootpq2 = idx.rootpq(ma + 1, j - mb);
+                u_r[jju + 1] = -rootpq2 * (g.b_r * pr + g.b_i * pi);
+                u_i[jju + 1] = -rootpq2 * (g.b_r * pi - g.b_i * pr);
+                jju += 1;
+                jjup += 1;
+            }
+            jju += 1;
+            let _ = mb;
+        }
+        // right half via the conjugation symmetry:
+        // u[j-mb][j-ma] = (-1)^(ma-mb) conj(u[mb][ma])
+        let mut jju = idx.idxu_block[j];
+        let mut jjup = idx.idxu_block[j] + (j + 1) * (j + 1) - 1;
+        let mut mbpar = 1i32;
+        for _mb in 0..=(j / 2) {
+            let mut mapar = mbpar;
+            for _ma in 0..=j {
+                if mapar == 1 {
+                    u_r[jjup] = u_r[jju];
+                    u_i[jjup] = -u_i[jju];
+                } else {
+                    u_r[jjup] = -u_r[jju];
+                    u_i[jjup] = u_i[jju];
+                }
+                mapar = -mapar;
+                jju += 1;
+                jjup -= 1;
+            }
+            mbpar = -mbpar;
+        }
+    }
+}
+
+/// Fill `du_*` (len idxu_max*3, dim-major per element: [jju*3 + k]) with the
+/// full derivative d(sfac * U)/dr_k, recomputing the U recursion inline.
+/// `u_r/u_i` must already hold `compute_ulist_pair`'s output.
+pub fn compute_dulist_pair(
+    g: &PairGeom,
+    idx: &SnapIndex,
+    u_r: &[f64],
+    u_i: &[f64],
+    du_r: &mut [f64],
+    du_i: &mut [f64],
+) {
+    let uhat = [g.ux, g.uy, g.uz];
+    let r0inv = 1.0 / (g.r * g.r + g.z0 * g.z0).sqrt();
+    let dr0invdr = -r0inv.powi(3) * (g.r + g.z0 * g.dz0dr);
+    let dr0inv = [dr0invdr * g.ux, dr0invdr * g.uy, dr0invdr * g.uz];
+    let dz0 = [g.dz0dr * g.ux, g.dz0dr * g.uy, g.dz0dr * g.uz];
+    let mut da_r = [0.0; 3];
+    let mut da_i = [0.0; 3];
+    let mut db_r = [0.0; 3];
+    let mut db_i = [0.0; 3];
+    for k in 0..3 {
+        da_r[k] = dz0[k] * r0inv + g.z0 * dr0inv[k];
+        da_i[k] = -g.z * dr0inv[k];
+        db_r[k] = g.y * dr0inv[k];
+        db_i[k] = -g.x * dr0inv[k];
+    }
+    da_i[2] += -r0inv;
+    db_i[0] += -r0inv;
+    db_r[1] += r0inv;
+
+    for k in 0..3 {
+        du_r[k] = 0.0;
+        du_i[k] = 0.0;
+    }
+    for j in 1..=idx.twojmax {
+        let mut jju = idx.idxu_block[j];
+        let mut jjup = idx.idxu_block[j - 1];
+        for _mb in 0..=(j / 2) {
+            for k in 0..3 {
+                du_r[jju * 3 + k] = 0.0;
+                du_i[jju * 3 + k] = 0.0;
+            }
+            for ma in 0..j {
+                let rootpq = idx.rootpq(j - ma, j - _mb);
+                let (pr, pi) = (u_r[jjup], u_i[jjup]);
+                for k in 0..3 {
+                    let (dpr, dpi) = (du_r[jjup * 3 + k], du_i[jjup * 3 + k]);
+                    du_r[jju * 3 + k] += rootpq
+                        * (da_r[k] * pr + da_i[k] * pi + g.a_r * dpr + g.a_i * dpi);
+                    du_i[jju * 3 + k] += rootpq
+                        * (da_r[k] * pi - da_i[k] * pr + g.a_r * dpi - g.a_i * dpr);
+                }
+                let rootpq2 = idx.rootpq(ma + 1, j - _mb);
+                for k in 0..3 {
+                    let (dpr, dpi) = (du_r[jjup * 3 + k], du_i[jjup * 3 + k]);
+                    du_r[(jju + 1) * 3 + k] = -rootpq2
+                        * (db_r[k] * pr + db_i[k] * pi + g.b_r * dpr + g.b_i * dpi);
+                    du_i[(jju + 1) * 3 + k] = -rootpq2
+                        * (db_r[k] * pi - db_i[k] * pr + g.b_r * dpi - g.b_i * dpr);
+                }
+                jju += 1;
+                jjup += 1;
+            }
+            jju += 1;
+        }
+        // symmetry copy (same pattern as the U levels)
+        let mut jju = idx.idxu_block[j];
+        let mut jjup = idx.idxu_block[j] + (j + 1) * (j + 1) - 1;
+        let mut mbpar = 1i32;
+        for _mb in 0..=(j / 2) {
+            let mut mapar = mbpar;
+            for _ma in 0..=j {
+                for k in 0..3 {
+                    if mapar == 1 {
+                        du_r[jjup * 3 + k] = du_r[jju * 3 + k];
+                        du_i[jjup * 3 + k] = -du_i[jju * 3 + k];
+                    } else {
+                        du_r[jjup * 3 + k] = -du_r[jju * 3 + k];
+                        du_i[jjup * 3 + k] = du_i[jju * 3 + k];
+                    }
+                }
+                mapar = -mapar;
+                jju += 1;
+                if jjup == 0 {
+                    break;
+                }
+                jjup -= 1;
+            }
+            mbpar = -mbpar;
+        }
+        let _ = jjup;
+    }
+
+    // combine with the switching function: d(sfac*u) = dsfac*u*uhat + sfac*du
+    for jju in 0..idx.idxu_max {
+        for k in 0..3 {
+            du_r[jju * 3 + k] =
+                g.dsfac * u_r[jju] * uhat[k] + g.sfac * du_r[jju * 3 + k];
+            du_i[jju * 3 + k] =
+                g.dsfac * u_i[jju] * uhat[k] + g.sfac * du_i[jju * 3 + k];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom(rij: [f64; 3]) -> (PairGeom, SnapIndex, SnapParams) {
+        let p = SnapParams::with_twojmax(6);
+        let idx = SnapIndex::new(6);
+        (PairGeom::new(rij, &p), idx, p)
+    }
+
+    #[test]
+    fn cayley_klein_unit_norm() {
+        let (g, _, _) = geom([0.7, -1.1, 1.9]);
+        let n = g.a_r * g.a_r + g.a_i * g.a_i + g.b_r * g.b_r + g.b_i * g.b_i;
+        assert!((n - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wigner_levels_are_unitary() {
+        let (g, idx, _) = geom([1.3, 0.4, -0.8]);
+        let mut u_r = vec![0.0; idx.idxu_max];
+        let mut u_i = vec![0.0; idx.idxu_max];
+        compute_ulist_pair(&g, &idx, &mut u_r, &mut u_i);
+        for j in 0..=idx.twojmax {
+            let n = j + 1;
+            // (U U^dagger)[r][c] = sum_k U[r][k] conj(U[c][k])
+            for r in 0..n {
+                for c in 0..n {
+                    let mut sr = 0.0;
+                    let mut si = 0.0;
+                    for k in 0..n {
+                        let i1 = idx.flat_u(j, r, k);
+                        let i2 = idx.flat_u(j, c, k);
+                        sr += u_r[i1] * u_r[i2] + u_i[i1] * u_i[i2];
+                        si += u_i[i1] * u_r[i2] - u_r[i1] * u_i[i2];
+                    }
+                    let expect = if r == c { 1.0 } else { 0.0 };
+                    assert!(
+                        (sr - expect).abs() < 1e-12 && si.abs() < 1e-12,
+                        "j={j} ({r},{c}): {sr}+{si}i"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn level1_closed_form() {
+        let (g, idx, _) = geom([0.9, 1.2, -0.3]);
+        let mut u_r = vec![0.0; idx.idxu_max];
+        let mut u_i = vec![0.0; idx.idxu_max];
+        compute_ulist_pair(&g, &idx, &mut u_r, &mut u_i);
+        // U_{1/2} = [[conj(a), -conj(b)], [b, a]] in (mb, ma) layout
+        let i00 = idx.flat_u(1, 0, 0);
+        let i01 = idx.flat_u(1, 0, 1);
+        let i10 = idx.flat_u(1, 1, 0);
+        let i11 = idx.flat_u(1, 1, 1);
+        assert!((u_r[i00] - g.a_r).abs() < 1e-15 && (u_i[i00] + g.a_i).abs() < 1e-15);
+        assert!((u_r[i01] + g.b_r).abs() < 1e-15 && (u_i[i01] - g.b_i).abs() < 1e-15);
+        assert!((u_r[i10] - g.b_r).abs() < 1e-15 && (u_i[i10] - g.b_i).abs() < 1e-15);
+        assert!((u_r[i11] - g.a_r).abs() < 1e-15 && (u_i[i11] - g.a_i).abs() < 1e-15);
+    }
+
+    #[test]
+    fn dulist_matches_finite_difference() {
+        let p = SnapParams::with_twojmax(4);
+        let idx = SnapIndex::new(4);
+        let rij = [1.1, -0.7, 1.4];
+        let g = PairGeom::new(rij, &p);
+        let mut u_r = vec![0.0; idx.idxu_max];
+        let mut u_i = vec![0.0; idx.idxu_max];
+        compute_ulist_pair(&g, &idx, &mut u_r, &mut u_i);
+        let mut du_r = vec![0.0; idx.idxu_max * 3];
+        let mut du_i = vec![0.0; idx.idxu_max * 3];
+        compute_dulist_pair(&g, &idx, &u_r, &u_i, &mut du_r, &mut du_i);
+
+        let h = 1e-6;
+        for k in 0..3 {
+            let mut rp = rij;
+            rp[k] += h;
+            let mut rm = rij;
+            rm[k] -= h;
+            let gp = PairGeom::new(rp, &p);
+            let gm = PairGeom::new(rm, &p);
+            let mut upr = vec![0.0; idx.idxu_max];
+            let mut upi = vec![0.0; idx.idxu_max];
+            let mut umr = vec![0.0; idx.idxu_max];
+            let mut umi = vec![0.0; idx.idxu_max];
+            compute_ulist_pair(&gp, &idx, &mut upr, &mut upi);
+            compute_ulist_pair(&gm, &idx, &mut umr, &mut umi);
+            for jju in 0..idx.idxu_max {
+                let fd_r = (gp.sfac * upr[jju] - gm.sfac * umr[jju]) / (2.0 * h);
+                let fd_i = (gp.sfac * upi[jju] - gm.sfac * umi[jju]) / (2.0 * h);
+                assert!(
+                    (fd_r - du_r[jju * 3 + k]).abs() < 1e-6,
+                    "jju={jju} k={k}: {fd_r} vs {}",
+                    du_r[jju * 3 + k]
+                );
+                assert!((fd_i - du_i[jju * 3 + k]).abs() < 1e-6);
+            }
+        }
+    }
+}
+
+/// Scratch for the fused dE kernel: two level-local derivative buffers
+/// (the CPU analog of the paper's shared-memory double buffer, ~21 KB at
+/// 2J=14 — L1-resident).
+pub struct FusedDuScratch {
+    cur_r: Vec<f64>,
+    cur_i: Vec<f64>,
+    prev_r: Vec<f64>,
+    prev_i: Vec<f64>,
+}
+
+impl FusedDuScratch {
+    pub fn new(twojmax: usize) -> Self {
+        let n = (twojmax + 1) * (twojmax + 1) * 3;
+        Self {
+            cur_r: vec![0.0; n],
+            cur_i: vec![0.0; n],
+            prev_r: vec![0.0; n],
+            prev_i: vec![0.0; n],
+        }
+    }
+}
+
+/// The section-VI `compute_fused_dE` hot path: run the dU recursion
+/// level-by-level in the small scratch and contract each level against Y
+/// the moment it exists.  Nothing is written to large arrays; there is no
+/// symmetry copy into a global dUlist and no separate combine pass.
+///
+/// `u_r/u_i` must hold this pair's full Wigner matrices
+/// (`compute_ulist_pair` output); `y_at(jju)` returns the adjoint at a
+/// *half-index* jju (only 2*mb <= j entries are queried).
+pub fn compute_fused_dedr_pair<F: Fn(usize) -> (f64, f64)>(
+    g: &PairGeom,
+    idx: &SnapIndex,
+    u_r: &[f64],
+    u_i: &[f64],
+    y_at: F,
+    s: &mut FusedDuScratch,
+) -> [f64; 3] {
+    let uhat = [g.ux, g.uy, g.uz];
+    let r0inv = 1.0 / (g.r * g.r + g.z0 * g.z0).sqrt();
+    let dr0invdr = -r0inv.powi(3) * (g.r + g.z0 * g.dz0dr);
+    let dr0inv = [dr0invdr * g.ux, dr0invdr * g.uy, dr0invdr * g.uz];
+    let dz0 = [g.dz0dr * g.ux, g.dz0dr * g.uy, g.dz0dr * g.uz];
+    let mut da_r = [0.0; 3];
+    let mut da_i = [0.0; 3];
+    let mut db_r = [0.0; 3];
+    let mut db_i = [0.0; 3];
+    for k in 0..3 {
+        da_r[k] = dz0[k] * r0inv + g.z0 * dr0inv[k];
+        da_i[k] = -g.z * dr0inv[k];
+        db_r[k] = g.y * dr0inv[k];
+        db_i[k] = -g.x * dr0inv[k];
+    }
+    da_i[2] += -r0inv;
+    db_i[0] += -r0inv;
+    db_r[1] += r0inv;
+
+    let (sfac, dsfac) = (g.sfac, g.dsfac);
+    let mut acc = [0.0f64; 3];
+
+    // level 0: du = 0, u = 1, w = 0.5
+    {
+        let (yr, yi) = y_at(0);
+        for k in 0..3 {
+            let dr = dsfac * u_r[0] * uhat[k];
+            let di = dsfac * u_i[0] * uhat[k];
+            acc[k] += 0.5 * (dr * yr + di * yi);
+        }
+    }
+
+    // prev level (j=0) derivative is zero
+    s.prev_r[..3].fill(0.0);
+    s.prev_i[..3].fill(0.0);
+
+    for j in 1..=idx.twojmax {
+        let n = j + 1;
+        let block = idx.idxu_block[j];
+        let pblock = idx.idxu_block[j - 1];
+        // --- left-half recursion, writing the level-local buffer ---
+        for mb in 0..=(j / 2) {
+            let row = mb * n * 3;
+            for k in 0..3 {
+                s.cur_r[row + k] = 0.0;
+                s.cur_i[row + k] = 0.0;
+            }
+            let prow = mb * j * 3; // prev level stride is j
+            for ma in 0..j {
+                let rootpq = idx.rootpq(j - ma, j - mb);
+                let pu = pblock + j * mb + ma; // prev-level global u index
+                let (pr, pi) = (u_r[pu], u_i[pu]);
+                let o = row + ma * 3;
+                let po = prow + ma * 3;
+                for k in 0..3 {
+                    let (dpr, dpi) = (s.prev_r[po + k], s.prev_i[po + k]);
+                    s.cur_r[o + k] += rootpq
+                        * (da_r[k] * pr + da_i[k] * pi + g.a_r * dpr + g.a_i * dpi);
+                    s.cur_i[o + k] += rootpq
+                        * (da_r[k] * pi - da_i[k] * pr + g.a_r * dpi - g.a_i * dpr);
+                }
+                let rootpq2 = idx.rootpq(ma + 1, j - mb);
+                for k in 0..3 {
+                    let (dpr, dpi) = (s.prev_r[po + k], s.prev_i[po + k]);
+                    s.cur_r[o + 3 + k] = -rootpq2
+                        * (db_r[k] * pr + db_i[k] * pi + g.b_r * dpr + g.b_i * dpi);
+                    s.cur_i[o + 3 + k] = -rootpq2
+                        * (db_r[k] * pi - db_i[k] * pr + g.b_r * dpi - g.b_i * dpr);
+                }
+            }
+        }
+        // --- symmetry fill, minimal: level j+1's recursion reads prev rows
+        // mb <= (j+1)/2, so only odd levels owe one extra row beyond the
+        // computed half (vs. the full right-half copy of the staged path) ---
+        if j % 2 == 1 && j < idx.twojmax {
+            let mb = (j + 1) / 2;
+            for ma in 0..=j {
+                let src = ((j - mb) * n + (j - ma)) * 3;
+                let dst = (mb * n + ma) * 3;
+                let sgn = if (ma + mb) % 2 == 0 { 1.0 } else { -1.0 };
+                for k in 0..3 {
+                    s.cur_r[dst + k] = sgn * s.cur_r[src + k];
+                    s.cur_i[dst + k] = -sgn * s.cur_i[src + k];
+                }
+            }
+        }
+        // --- immediate contraction of the stored half against Y ---
+        for mb in 0..=(j / 2) {
+            let ma_full = if 2 * mb < j { j + 1 } else { 0 };
+            for ma in 0..ma_full {
+                let jju = block + n * mb + ma;
+                let (yr, yi) = y_at(jju);
+                let o = (mb * n + ma) * 3;
+                let (ur, ui) = (u_r[jju], u_i[jju]);
+                for k in 0..3 {
+                    let dr = dsfac * ur * uhat[k] + sfac * s.cur_r[o + k];
+                    let di = dsfac * ui * uhat[k] + sfac * s.cur_i[o + k];
+                    acc[k] += dr * yr + di * yi;
+                }
+            }
+            if 2 * mb == j {
+                // middle row of even j: full weight below the diagonal,
+                // half weight on it
+                for ma in 0..=mb {
+                    let w = if ma == mb { 0.5 } else { 1.0 };
+                    let jju = block + n * mb + ma;
+                    let (yr, yi) = y_at(jju);
+                    let o = (mb * n + ma) * 3;
+                    let (ur, ui) = (u_r[jju], u_i[jju]);
+                    for k in 0..3 {
+                        let dr = dsfac * ur * uhat[k] + sfac * s.cur_r[o + k];
+                        let di = dsfac * ui * uhat[k] + sfac * s.cur_i[o + k];
+                        acc[k] += w * (dr * yr + di * yi);
+                    }
+                }
+            }
+        }
+        std::mem::swap(&mut s.cur_r, &mut s.prev_r);
+        std::mem::swap(&mut s.cur_i, &mut s.prev_i);
+    }
+    [2.0 * acc[0], 2.0 * acc[1], 2.0 * acc[2]]
+}

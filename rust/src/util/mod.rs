@@ -1,0 +1,15 @@
+//! Small self-contained substrates: timers, deterministic RNG, a scoped
+//! thread-pool `parallel_for`, and a minimal JSON reader.
+//!
+//! Everything here is std-only by necessity (the build is fully offline);
+//! these utilities replace what `rayon`, `serde_json` and `criterion` would
+//! normally provide.
+
+pub mod json;
+pub mod parallel;
+pub mod rng;
+pub mod timer;
+
+pub use parallel::parallel_for;
+pub use rng::XorShift;
+pub use timer::{Stopwatch, StageTimes};

@@ -1,0 +1,88 @@
+//! Scoped-thread `parallel_for` — the std-only stand-in for rayon.
+//!
+//! The container this reproduction runs in exposes a single core, so the
+//! default is sequential execution (zero thread overhead); the chunked
+//! scoped-thread path is exercised by tests and used when
+//! `REPRO_THREADS > 1` is set, keeping the coordinator structurally parallel
+//! exactly where the paper's Kokkos `parallel_for` sits.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use (env `REPRO_THREADS`, default = number of
+/// available cores).
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("REPRO_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(i)` for every `i in 0..n`, distributing iterations over threads
+/// with dynamic (work-stealing-ish, atomic counter) scheduling.
+///
+/// `f` must be `Sync` (it is shared by reference across workers); per-index
+/// mutable state should live behind interior mutability or be produced via
+/// [`parallel_map`].
+pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, f: F) {
+    let workers = num_threads().min(n.max(1));
+    if workers <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let counter = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = counter.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Map `f` over `0..n` collecting results in index order.
+pub fn parallel_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, f: F) -> Vec<T> {
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    {
+        let slots: Vec<std::sync::Mutex<&mut Option<T>>> =
+            out.iter_mut().map(std::sync::Mutex::new).collect();
+        parallel_for(n, |i| {
+            **slots[i].lock().unwrap() = Some(f(i));
+        });
+    }
+    out.into_iter().map(|x| x.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_all_indices_once() {
+        let hits: Vec<AtomicU64> = (0..257).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(257, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn map_in_order() {
+        let v = parallel_map(100, |i| i * i);
+        assert_eq!(v, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_is_fine() {
+        parallel_for(0, |_| panic!("must not run"));
+        assert!(parallel_map(0, |i| i).is_empty());
+    }
+}

@@ -1,0 +1,252 @@
+//! Cross-language golden tests: the Rust engines and index machinery must
+//! reproduce the jnp oracle's numbers exactly (artifacts/golden/*.json,
+//! written by `python -m compile.aot`).
+//!
+//! This is the strongest correctness anchor in the repo: the Python oracle
+//! is pinned by autodiff + rotation invariance, and these tests transfer
+//! that trust to every native engine.
+
+use repro::snap::baseline::{BaselineEngine, Staging};
+use repro::snap::engine::{ForceEngine, TileInput};
+use repro::snap::fused::{FusedConfig, FusedEngine};
+use repro::snap::kernels;
+use repro::snap::variants::Variant;
+use repro::snap::{SnapIndex, SnapParams};
+use repro::util::json::Json;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/golden")
+}
+
+fn load(name: &str) -> Option<Json> {
+    let path = golden_dir().join(name);
+    let text = std::fs::read_to_string(path).ok()?;
+    Some(Json::parse(&text).expect("golden json parses"))
+}
+
+macro_rules! require_golden {
+    ($name:expr) => {
+        match load($name) {
+            Some(j) => j,
+            None => {
+                eprintln!("skipping: {} not built (run `make artifacts`)", $name);
+                return;
+            }
+        }
+    };
+}
+
+fn vecf(j: &Json, key: &str) -> Vec<f64> {
+    j.get(key).and_then(Json::as_f64_vec).unwrap_or_else(|| panic!("missing {key}"))
+}
+
+#[test]
+fn index_machinery_matches_python() {
+    for tjm in [2usize, 4, 8, 14] {
+        let g = match load(&format!("index_2j{tjm}.json")) {
+            Some(g) => g,
+            None => {
+                eprintln!("skipping index_2j{tjm} (artifacts not built)");
+                return;
+            }
+        };
+        let idx = SnapIndex::new(tjm);
+        assert_eq!(idx.idxu_max, g.get("idxu_max").unwrap().as_usize().unwrap());
+        assert_eq!(idx.idxb_max, g.get("idxb_max").unwrap().as_usize().unwrap());
+        assert_eq!(idx.idxz_max, g.get("idxz_max").unwrap().as_usize().unwrap());
+        assert_eq!(
+            idx.zplan_seg.len(),
+            g.get("zplan_rows").unwrap().as_usize().unwrap()
+        );
+        // value-level checks
+        let cg_head = vecf(&g, "cglist_head");
+        for (i, want) in cg_head.iter().enumerate() {
+            assert!(
+                (idx.cglist[i] - want).abs() < 1e-12,
+                "2J={tjm} cglist[{i}]: {} vs {want}",
+                idx.cglist[i]
+            );
+        }
+        let cg_sum: f64 = idx.cglist.iter().map(|c| c.abs()).sum();
+        let want_sum = g.get("cglist_sum").unwrap().as_f64().unwrap();
+        assert!((cg_sum - want_sum).abs() < 1e-9 * want_sum.max(1.0));
+        let zc_sum: f64 = idx.zplan_c.iter().map(|c| c.abs()).sum();
+        let want_zc = g.get("zplan_c_sum").unwrap().as_f64().unwrap();
+        assert!((zc_sum - want_zc).abs() < 1e-9 * want_zc.max(1.0));
+        let yfac_sum: f64 = idx.yplan_fac.iter().sum();
+        assert!(
+            (yfac_sum - g.get("yplan_fac_sum").unwrap().as_f64().unwrap()).abs() < 1e-9
+        );
+        let w_sum: f64 = idx.dedr_w.iter().sum();
+        assert!((w_sum - g.get("dedr_w_sum").unwrap().as_f64().unwrap()).abs() < 1e-9);
+        // idxb triple-for-triple
+        let idxb_flat = vecf(&g, "idxb");
+        for (i, &(j1, j2, j)) in idx.idxb.iter().enumerate() {
+            assert_eq!(idxb_flat[3 * i] as usize, j1);
+            assert_eq!(idxb_flat[3 * i + 1] as usize, j2);
+            assert_eq!(idxb_flat[3 * i + 2] as usize, j);
+        }
+    }
+}
+
+struct Case {
+    twojmax: usize,
+    na: usize,
+    nn: usize,
+    rij: Vec<f64>,
+    mask: Vec<f64>,
+    beta: Vec<f64>,
+    ulisttot_re: Vec<f64>,
+    ulisttot_im: Vec<f64>,
+    ylist_re: Vec<f64>,
+    ylist_im: Vec<f64>,
+    blist: Vec<f64>,
+    ei: Vec<f64>,
+    dedr: Vec<f64>,
+}
+
+fn parse_case(j: &Json) -> Case {
+    Case {
+        twojmax: j.get("twojmax").unwrap().as_usize().unwrap(),
+        na: j.get("num_atoms").unwrap().as_usize().unwrap(),
+        nn: j.get("num_nbor").unwrap().as_usize().unwrap(),
+        rij: vecf(j, "rij"),
+        mask: vecf(j, "mask"),
+        beta: vecf(j, "beta"),
+        ulisttot_re: vecf(j, "ulisttot_re"),
+        ulisttot_im: vecf(j, "ulisttot_im"),
+        ylist_re: vecf(j, "ylist_re"),
+        ylist_im: vecf(j, "ylist_im"),
+        blist: vecf(j, "blist"),
+        ei: vecf(j, "ei"),
+        dedr: vecf(j, "dedr"),
+    }
+}
+
+fn check_case(c: &Case) {
+    let params = SnapParams::with_twojmax(c.twojmax);
+    let idx = Arc::new(SnapIndex::new(c.twojmax));
+    let iu = idx.idxu_max;
+
+    // --- stage-level: ulisttot / ylist / blist via the kernel helpers ---
+    let mut sr = vec![0.0; iu];
+    let mut si = vec![0.0; iu];
+    let mut ut_r = vec![0.0; iu];
+    let mut ut_i = vec![0.0; iu];
+    let mut y_r = vec![0.0; iu];
+    let mut y_i = vec![0.0; iu];
+    let mut z_r = vec![0.0; idx.idxz_max];
+    let mut z_i = vec![0.0; idx.idxz_max];
+    let mut blist = vec![0.0; idx.idxb_max];
+    for atom in 0..c.na {
+        let rows = (0..c.nn).map(|n| {
+            let o = (atom * c.nn + n) * 3;
+            (
+                [c.rij[o], c.rij[o + 1], c.rij[o + 2]],
+                c.mask[atom * c.nn + n] > 0.5,
+            )
+        });
+        kernels::compute_utot_atom(
+            &idx, &params, rows, &mut sr, &mut si, &mut ut_r, &mut ut_i,
+        );
+        for jju in 0..iu {
+            let o = atom * iu + jju;
+            assert!(
+                (ut_r[jju] - c.ulisttot_re[o]).abs() < 1e-10,
+                "2J={} atom {atom} utot_re[{jju}]: {} vs {}",
+                c.twojmax,
+                ut_r[jju],
+                c.ulisttot_re[o]
+            );
+            assert!((ut_i[jju] - c.ulisttot_im[o]).abs() < 1e-10);
+        }
+        kernels::compute_ylist(&idx, &ut_r, &ut_i, &c.beta, &mut y_r, &mut y_i);
+        for jju in 0..iu {
+            let o = atom * iu + jju;
+            assert!(
+                (y_r[jju] - c.ylist_re[o]).abs() < 1e-9,
+                "2J={} atom {atom} y_re[{jju}]: {} vs {}",
+                c.twojmax,
+                y_r[jju],
+                c.ylist_re[o]
+            );
+            assert!((y_i[jju] - c.ylist_im[o]).abs() < 1e-9);
+        }
+        kernels::compute_zlist(&idx, &ut_r, &ut_i, &mut z_r, &mut z_i);
+        kernels::compute_blist(&idx, &ut_r, &ut_i, &z_r, &z_i, &mut blist);
+        for l in 0..idx.idxb_max {
+            let o = atom * idx.idxb_max + l;
+            assert!(
+                (blist[l] - c.blist[o]).abs() < 1e-9 * (1.0 + c.blist[o].abs()),
+                "2J={} atom {atom} B[{l}]: {} vs {}",
+                c.twojmax,
+                blist[l],
+                c.blist[o]
+            );
+        }
+    }
+
+    // --- engine-level: ei + dedr through the public ForceEngine API ---
+    let input = TileInput { num_atoms: c.na, num_nbor: c.nn, rij: &c.rij, mask: &c.mask };
+    let engines: Vec<Box<dyn ForceEngine>> = vec![
+        Box::new(BaselineEngine::new(
+            params, idx.clone(), c.beta.clone(), Staging::Monolithic,
+        )),
+        Box::new(FusedEngine::new(
+            params, idx.clone(), c.beta.clone(), FusedConfig::default(), "fused",
+        )),
+        Variant::V5.build(params, idx.clone(), c.beta.clone()),
+    ];
+    for mut eng in engines {
+        let out = eng.compute(&input);
+        for (a, (got, want)) in out.ei.iter().zip(c.ei.iter()).enumerate() {
+            assert!(
+                (got - want).abs() < 1e-8 * (1.0 + want.abs()),
+                "{} 2J={} ei[{a}]: {got} vs {want}",
+                eng.name(),
+                c.twojmax
+            );
+        }
+        let scale = c.dedr.iter().fold(1.0f64, |m, x| m.max(x.abs()));
+        for (i, (got, want)) in out.dedr.iter().zip(c.dedr.iter()).enumerate() {
+            assert!(
+                (got - want).abs() < 1e-8 * scale,
+                "{} 2J={} dedr[{i}]: {got} vs {want}",
+                eng.name(),
+                c.twojmax
+            );
+        }
+    }
+}
+
+#[test]
+fn golden_case_2j2() {
+    let j = require_golden!("case_2j2.json");
+    check_case(&parse_case(&j));
+}
+
+#[test]
+fn golden_case_2j4() {
+    let j = require_golden!("case_2j4.json");
+    check_case(&parse_case(&j));
+}
+
+#[test]
+fn golden_case_2j8() {
+    let j = require_golden!("case_2j8.json");
+    check_case(&parse_case(&j));
+}
+
+#[test]
+fn golden_case_2j8_sparse() {
+    let j = require_golden!("case_2j8_sparse.json");
+    check_case(&parse_case(&j));
+}
+
+#[test]
+fn golden_case_2j14() {
+    let j = require_golden!("case_2j14.json");
+    check_case(&parse_case(&j));
+}

@@ -1,0 +1,234 @@
+//! Property-based tests (proptest-style, hand-rolled generator loop: the
+//! offline build has no proptest crate).  Each property runs across a sweep
+//! of seeded random cases; failures print the offending seed for replay.
+//!
+//! Coordinator invariants: batching/tiling never changes physics, padding
+//! is inert, routing to any engine yields identical results, global force
+//! balance holds on random (not just lattice) geometry.
+
+use repro::coordinator::ForceField;
+use repro::md::boxpbc::SimBox;
+use repro::md::{NeighborList, Structure};
+use repro::snap::coeff::SnapCoeffs;
+use repro::snap::engine::{ForceEngine, TileInput};
+use repro::snap::variants::Variant;
+use repro::snap::{SnapIndex, SnapParams};
+use repro::util::XorShift;
+use std::sync::Arc;
+
+const CASES: u64 = 12;
+
+fn random_structure(rng: &mut XorShift) -> Structure {
+    let n = 8 + rng.below(40);
+    let l = 9.0 + rng.next_f64() * 6.0;
+    let pos: Vec<f64> = (0..3 * n).map(|_| rng.uniform(0.0, l)).collect();
+    Structure::new(SimBox::cubic(l), pos, 183.84)
+}
+
+fn random_tile(rng: &mut XorShift, p: &SnapParams, na: usize, nn: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut rij = Vec::with_capacity(na * nn * 3);
+    let mut mask = Vec::with_capacity(na * nn);
+    for _ in 0..na * nn {
+        // keep radii in a well-conditioned band
+        loop {
+            let v = [
+                rng.uniform(-0.6, 0.6) * p.rcut(),
+                rng.uniform(-0.6, 0.6) * p.rcut(),
+                rng.uniform(-0.6, 0.6) * p.rcut(),
+            ];
+            let r = (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]).sqrt();
+            if r > 0.2 {
+                rij.extend_from_slice(&v);
+                break;
+            }
+        }
+        mask.push(if rng.next_f64() > 0.25 { 1.0 } else { 0.0 });
+    }
+    (rij, mask)
+}
+
+fn engine(v: Variant, twojmax: usize, seed: u64) -> Box<dyn ForceEngine> {
+    let params = SnapParams::with_twojmax(twojmax);
+    let idx = Arc::new(SnapIndex::new(twojmax));
+    let beta = SnapCoeffs::synthetic(twojmax, idx.idxb_max, seed).beta;
+    v.build(params, idx, beta)
+}
+
+#[test]
+fn prop_tiling_is_invisible() {
+    for seed in 0..CASES {
+        let mut rng = XorShift::new(1000 + seed);
+        let s = random_structure(&mut rng);
+        let nl = NeighborList::build_cells(&s, 4.0);
+        let nn = nl.max_count().max(1);
+        let run = |tile: usize| {
+            let mut ff = ForceField::new(engine(Variant::Fused, 3, 42), tile, nn);
+            ff.compute(&s, &nl)
+        };
+        let a = run(1);
+        let b = run(7);
+        let c = run(1024);
+        for i in 0..a.forces.len() {
+            assert!(
+                (a.forces[i] - b.forces[i]).abs() < 1e-10,
+                "seed {seed} tile 1 vs 7 at {i}"
+            );
+            assert!((a.forces[i] - c.forces[i]).abs() < 1e-10, "seed {seed}");
+        }
+        assert!((a.e_pot() - b.e_pot()).abs() < 1e-10);
+    }
+}
+
+#[test]
+fn prop_engines_agree_on_random_geometry() {
+    for seed in 0..CASES {
+        let mut rng = XorShift::new(2000 + seed);
+        let p = SnapParams::with_twojmax(3);
+        let (rij, mask) = random_tile(&mut rng, &p, 3, 7);
+        let inp = TileInput { num_atoms: 3, num_nbor: 7, rij: &rij, mask: &mask };
+        let mut base = engine(Variant::V0Baseline, 3, 42);
+        let want = base.compute(&inp);
+        for v in [Variant::V2, Variant::V4, Variant::V6, Variant::Fused, Variant::FusedAosoa] {
+            let mut e = engine(v, 3, 42);
+            let got = e.compute(&inp);
+            let scale = want.dedr.iter().fold(1.0f64, |m, x| m.max(x.abs()));
+            for i in 0..want.dedr.len() {
+                assert!(
+                    (want.dedr[i] - got.dedr[i]).abs() < 1e-9 * scale,
+                    "seed {seed} {v:?} dedr[{i}]"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_padding_rows_are_inert() {
+    for seed in 0..CASES {
+        let mut rng = XorShift::new(3000 + seed);
+        let p = SnapParams::with_twojmax(3);
+        let (rij, mask) = random_tile(&mut rng, &p, 2, 5);
+        let inp = TileInput { num_atoms: 2, num_nbor: 5, rij: &rij, mask: &mask };
+        let mut e = engine(Variant::Fused, 3, 42);
+        let want = e.compute(&inp);
+        // append 3 garbage masked lanes per atom
+        let mut rij2 = Vec::new();
+        let mut mask2 = Vec::new();
+        for a in 0..2 {
+            rij2.extend_from_slice(&rij[a * 5 * 3..(a + 1) * 5 * 3]);
+            for _ in 0..3 {
+                rij2.extend_from_slice(&[rng.normal(), rng.normal(), rng.normal()]);
+            }
+            mask2.extend_from_slice(&mask[a * 5..(a + 1) * 5]);
+            mask2.extend_from_slice(&[0.0, 0.0, 0.0]);
+        }
+        let inp2 = TileInput { num_atoms: 2, num_nbor: 8, rij: &rij2, mask: &mask2 };
+        let got = e.compute(&inp2);
+        for a in 0..2 {
+            assert!((want.ei[a] - got.ei[a]).abs() < 1e-10, "seed {seed}");
+            for n in 0..5 {
+                for k in 0..3 {
+                    let i1 = (a * 5 + n) * 3 + k;
+                    let i2 = (a * 8 + n) * 3 + k;
+                    assert!(
+                        (want.dedr[i1] - got.dedr[i2]).abs() < 1e-10,
+                        "seed {seed} pair ({a},{n})"
+                    );
+                }
+            }
+            for n in 5..8 {
+                for k in 0..3 {
+                    assert_eq!(got.dedr[(a * 8 + n) * 3 + k], 0.0);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_rotation_invariance_of_energy() {
+    for seed in 0..CASES {
+        let mut rng = XorShift::new(4000 + seed);
+        let p = SnapParams::with_twojmax(4);
+        let (rij, mask) = random_tile(&mut rng, &p, 2, 6);
+        // random rotation (axis-angle)
+        let axis = {
+            let v = [rng.normal(), rng.normal(), rng.normal()];
+            let n = (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]).sqrt();
+            [v[0] / n, v[1] / n, v[2] / n]
+        };
+        let ang = rng.uniform(0.3, 2.8);
+        let (c, s) = (ang.cos(), ang.sin());
+        let rot = |v: [f64; 3]| -> [f64; 3] {
+            // Rodrigues
+            let dot = axis[0] * v[0] + axis[1] * v[1] + axis[2] * v[2];
+            let cross = [
+                axis[1] * v[2] - axis[2] * v[1],
+                axis[2] * v[0] - axis[0] * v[2],
+                axis[0] * v[1] - axis[1] * v[0],
+            ];
+            [
+                v[0] * c + cross[0] * s + axis[0] * dot * (1.0 - c),
+                v[1] * c + cross[1] * s + axis[1] * dot * (1.0 - c),
+                v[2] * c + cross[2] * s + axis[2] * dot * (1.0 - c),
+            ]
+        };
+        let mut rij_rot = vec![0.0; rij.len()];
+        for i in 0..rij.len() / 3 {
+            let v = rot([rij[3 * i], rij[3 * i + 1], rij[3 * i + 2]]);
+            rij_rot[3 * i..3 * i + 3].copy_from_slice(&v);
+        }
+        let mut e = engine(Variant::Fused, 4, 42);
+        let a = e.compute(&TileInput { num_atoms: 2, num_nbor: 6, rij: &rij, mask: &mask });
+        let b = e.compute(&TileInput {
+            num_atoms: 2,
+            num_nbor: 6,
+            rij: &rij_rot,
+            mask: &mask,
+        });
+        for (x, y) in a.ei.iter().zip(b.ei.iter()) {
+            assert!(
+                (x - y).abs() < 1e-8 * (1.0 + x.abs()),
+                "seed {seed}: E {x} vs rotated {y}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_force_balance_on_random_structures() {
+    for seed in 0..CASES {
+        let mut rng = XorShift::new(5000 + seed);
+        let s = random_structure(&mut rng);
+        let nl = NeighborList::build_cells(&s, 4.2);
+        let mut ff =
+            ForceField::new(engine(Variant::Fused, 2, 42), 16, nl.max_count().max(1));
+        let r = ff.compute(&s, &nl);
+        for k in 0..3 {
+            let sum: f64 = (0..s.natoms()).map(|i| r.forces[3 * i + k]).sum();
+            assert!(sum.abs() < 1e-8, "seed {seed} axis {k}: net force {sum}");
+        }
+        assert!(r.forces.iter().all(|f| f.is_finite()));
+        assert!(r.virial.iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn prop_energy_extensive_under_duplication() {
+    // two disjoint copies of the same neighborhood = twice the energy
+    for seed in 0..CASES {
+        let mut rng = XorShift::new(6000 + seed);
+        let p = SnapParams::with_twojmax(3);
+        let (rij, mask) = random_tile(&mut rng, &p, 1, 6);
+        let mut e = engine(Variant::Fused, 3, 42);
+        let single = e.compute(&TileInput { num_atoms: 1, num_nbor: 6, rij: &rij, mask: &mask });
+        let mut rij2 = rij.clone();
+        rij2.extend_from_slice(&rij);
+        let mut mask2 = mask.clone();
+        mask2.extend_from_slice(&mask);
+        let double = e.compute(&TileInput { num_atoms: 2, num_nbor: 6, rij: &rij2, mask: &mask2 });
+        let want = 2.0 * single.ei[0];
+        let got = double.ei[0] + double.ei[1];
+        assert!((want - got).abs() < 1e-10 * (1.0 + want.abs()), "seed {seed}");
+    }
+}

@@ -1,0 +1,124 @@
+//! All-layers-compose check: the PJRT-executed Pallas/JAX artifacts must
+//! agree with the native Rust engines on identical inputs.
+//!
+//! L1 (Pallas kernels) -> L2 (JAX model) -> AOT HLO text -> L3 (this crate's
+//! runtime) on one side; the hand-written Rust engines (validated against
+//! the jnp oracle via goldens) on the other.  Agreement here certifies the
+//! whole stack end to end.
+
+use repro::bench::Workload;
+use repro::runtime::{Runtime, XlaEngine};
+use repro::snap::coeff::SnapCoeffs;
+use repro::snap::engine::ForceEngine;
+use repro::snap::fused::{FusedConfig, FusedEngine};
+use repro::snap::{SnapIndex, SnapParams};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have(name: &str) -> bool {
+    artifacts_dir().join(format!("{name}.hlo.txt")).exists()
+}
+
+macro_rules! require_artifact {
+    ($name:expr) => {
+        if !have($name) {
+            eprintln!("skipping: artifact {} not built (run `make artifacts`)", $name);
+            return;
+        }
+    };
+}
+
+fn compare(artifact: &str, twojmax: usize, cells: usize) {
+    let params = SnapParams::with_twojmax(twojmax);
+    let idx = Arc::new(SnapIndex::new(twojmax));
+    let coeffs = SnapCoeffs::synthetic(twojmax, idx.idxb_max, 42);
+    let w = Workload::tungsten(cells, params.rcut());
+    let tile = w.tile();
+
+    let rt = Runtime::open(artifacts_dir()).expect("runtime opens");
+    let mut xla = XlaEngine::new(rt, artifact, coeffs.beta.clone()).expect("xla engine");
+    let mut native = FusedEngine::new(
+        params, idx, coeffs.beta, FusedConfig::default(), "native",
+    );
+
+    let got = xla.compute(&tile);
+    let want = native.compute(&tile);
+
+    let escale = want.ei.iter().fold(1.0f64, |m, x| m.max(x.abs()));
+    for (i, (g, w_)) in got.ei.iter().zip(want.ei.iter()).enumerate() {
+        assert!(
+            (g - w_).abs() < 1e-8 * escale,
+            "{artifact} ei[{i}]: xla {g} vs native {w_}"
+        );
+    }
+    let fscale = want.dedr.iter().fold(1.0f64, |m, x| m.max(x.abs()));
+    for (i, (g, w_)) in got.dedr.iter().zip(want.dedr.iter()).enumerate() {
+        assert!(
+            (g - w_).abs() < 1e-8 * fscale,
+            "{artifact} dedr[{i}]: xla {g} vs native {w_}"
+        );
+    }
+}
+
+#[test]
+fn pallas_artifact_2j8_matches_native() {
+    require_artifact!("snap_2j8");
+    // 3^3 bcc cells = 54 atoms -> two 32-atom tiles incl. padding
+    compare("snap_2j8", 8, 3);
+}
+
+#[test]
+fn ref_artifact_2j8_matches_native() {
+    require_artifact!("snap_2j8_ref");
+    compare("snap_2j8_ref", 8, 3);
+}
+
+#[test]
+fn pallas_artifact_2j14_matches_native() {
+    if std::env::var("REPRO_HEAVY_TESTS").is_err() {
+        eprintln!("skipping 2J14 PJRT compile (set REPRO_HEAVY_TESTS=1 to run)");
+        return;
+    }
+    require_artifact!("snap_2j14");
+    compare("snap_2j14", 14, 2);
+}
+
+#[test]
+fn runtime_registry_lists_artifacts() {
+    if !artifacts_dir().join("snap_2j8.meta.json").exists() {
+        eprintln!("skipping (artifacts not built)");
+        return;
+    }
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    assert!(rt.names().contains(&"snap_2j8"));
+    let meta = rt.meta("snap_2j8").unwrap();
+    assert_eq!(meta.twojmax, 8);
+    assert_eq!(meta.num_bispectrum, 55);
+}
+
+#[test]
+fn xla_engine_handles_multiple_tiles_and_padding() {
+    require_artifact!("snap_2j8");
+    let params = SnapParams::with_twojmax(8);
+    let idx = Arc::new(SnapIndex::new(8));
+    let coeffs = SnapCoeffs::synthetic(8, idx.idxb_max, 7);
+    // 3^3 cells = 54 atoms: one full 32-atom tile + a 22-atom tile with
+    // 10 fully padded fake rows
+    let w = Workload::tungsten(3, params.rcut());
+    let rt = Runtime::open(artifacts_dir()).unwrap();
+    let mut xla = XlaEngine::new(rt, "snap_2j8", coeffs.beta.clone()).unwrap();
+    let mut native = FusedEngine::new(
+        params, idx, coeffs.beta, FusedConfig::default(), "native",
+    );
+    let got = xla.compute(&w.tile());
+    let want = native.compute(&w.tile());
+    assert_eq!(got.ei.len(), 54);
+    let fscale = want.dedr.iter().fold(1.0f64, |m, x| m.max(x.abs()));
+    for (g, w_) in got.dedr.iter().zip(want.dedr.iter()) {
+        assert!((g - w_).abs() < 1e-8 * fscale);
+    }
+}
