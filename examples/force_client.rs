@@ -1,43 +1,187 @@
-//! Client for the force server (`repro serve`): demonstrates the
-//! coordinator-as-a-service deployment shape — a central process owning the
-//! compiled potential, clients streaming neighborhood batches.
+//! Multi-connection load generator for the force server (`repro serve`):
+//! opens N concurrent connections, streams M requests down each, verifies
+//! every reply, and reports aggregate requests/sec — the measurement tool
+//! behind the serving-throughput trajectory (`BENCH_serve.json`).
 //!
 //! ```bash
-//! cargo run --release -- serve --port 7878 --engine fused &
-//! cargo run --release --example force_client -- 127.0.0.1:7878
+//! cargo run --release -- serve --port 7878 --engine fused --workers 4 &
+//! cargo run --release --example force_client -- 127.0.0.1:7878 \
+//!     --conns 8 --requests 200 --out BENCH_serve.json
 //! ```
+//!
+//! Requests are deterministic (seeded per connection) single-atom
+//! neighborhoods with `--nbor` neighbor slots, so runs are reproducible and
+//! the server's batch coalescer gets mergeable traffic.
 
+use repro::util::XorShift;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
-    let addr = std::env::args().nth(1).unwrap_or_else(|| "127.0.0.1:7878".into());
-    let mut conn = TcpStream::connect(&addr)?;
-    println!("connected to {addr}");
+struct Args {
+    addr: String,
+    conns: usize,
+    requests: usize,
+    nbor: usize,
+    out: Option<String>,
+}
 
-    // a 2-atom request: one bcc-ish neighborhood + one dimer
-    let rij = [
-        // atom 0: 3 neighbors
-        1.59, 1.59, 1.59, -1.59, 1.59, 1.59, 3.18, 0.0, 0.0,
-        // atom 1: 1 neighbor + 2 padded slots
-        2.2, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0,
-    ];
-    let mask = [1.0, 1.0, 1.0, 1.0, 0.0, 0.0];
+fn flag_value<'a>(argv: &'a [String], i: usize) -> anyhow::Result<&'a str> {
+    argv.get(i + 1)
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow::anyhow!("{} needs a value", argv[i]))
+}
+
+fn parse_args() -> anyhow::Result<Args> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut args = Args {
+        addr: "127.0.0.1:7878".into(),
+        conns: 4,
+        requests: 100,
+        nbor: 6,
+        out: None,
+    };
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--conns" => {
+                args.conns = flag_value(&argv, i)?.parse()?;
+                i += 2;
+            }
+            "--requests" => {
+                args.requests = flag_value(&argv, i)?.parse()?;
+                i += 2;
+            }
+            "--nbor" => {
+                args.nbor = flag_value(&argv, i)?.parse()?;
+                i += 2;
+            }
+            "--out" => {
+                args.out = Some(flag_value(&argv, i)?.to_string());
+                i += 2;
+            }
+            s if !s.starts_with("--") => {
+                args.addr = s.to_string();
+                i += 1;
+            }
+            other => anyhow::bail!(
+                "unknown flag {other} (usage: force_client [ADDR] [--conns N] \
+                 [--requests M] [--nbor K] [--out FILE])"
+            ),
+        }
+    }
+    anyhow::ensure!(args.conns >= 1 && args.requests >= 1, "need >=1 conns and requests");
+    Ok(args)
+}
+
+/// Deterministic single-atom request: `nbor` neighbors in a shell where the
+/// SNAP switching function is well-conditioned.
+fn request_line(rng: &mut XorShift, nbor: usize) -> String {
+    let mut rij = Vec::with_capacity(nbor * 3);
+    for _ in 0..nbor {
+        loop {
+            let v = [
+                rng.uniform(-2.4, 2.4),
+                rng.uniform(-2.4, 2.4),
+                rng.uniform(-2.4, 2.4),
+            ];
+            let r = (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]).sqrt();
+            if r > 0.8 {
+                rij.extend_from_slice(&v);
+                break;
+            }
+        }
+    }
     let fmt = |v: &[f64]| {
         v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
     };
-    let req = format!(
-        "{{\"num_atoms\": 2, \"num_nbor\": 3, \"rij\": [{}], \"mask\": [{}]}}\n",
+    let mask: Vec<f64> = vec![1.0; nbor];
+    format!(
+        "{{\"num_atoms\": 1, \"num_nbor\": {nbor}, \"rij\": [{}], \"mask\": [{}]}}\n",
         fmt(&rij),
         fmt(&mask)
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = parse_args()?;
+    println!(
+        "# load generator: {} conns x {} requests, {} neighbors/atom -> {}",
+        args.conns, args.requests, args.nbor, args.addr
     );
-    let t0 = std::time::Instant::now();
-    conn.write_all(req.as_bytes())?;
-    let mut reader = BufReader::new(conn);
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
-    println!("round-trip: {:.2} ms", t0.elapsed().as_secs_f64() * 1e3);
-    println!("response: {}", &line[..line.len().min(300)]);
-    anyhow::ensure!(line.contains("\"ok\": true"), "server returned an error");
+
+    // connect everything first so the timed window measures serving, not dialing
+    let barrier = Arc::new(Barrier::new(args.conns + 1));
+    let mut handles = Vec::new();
+    for conn_id in 0..args.conns {
+        let addr = args.addr.clone();
+        let barrier = barrier.clone();
+        let (requests, nbor) = (args.requests, args.nbor);
+        handles.push(std::thread::spawn(move || -> anyhow::Result<f64> {
+            // Dial before the barrier, but *always* reach the barrier even
+            // on failure — otherwise one refused connection deadlocks every
+            // other thread (and main) at the rendezvous.
+            let setup = (|| -> anyhow::Result<(TcpStream, BufReader<TcpStream>)> {
+                let conn = TcpStream::connect(&addr)?;
+                let writer = conn.try_clone()?;
+                Ok((writer, BufReader::new(conn)))
+            })();
+            barrier.wait();
+            let (mut writer, mut reader) = setup?;
+            let mut rng = XorShift::new(1000 + conn_id as u64);
+            let t0 = Instant::now();
+            let mut line = String::new();
+            for k in 0..requests {
+                let req = request_line(&mut rng, nbor);
+                writer.write_all(req.as_bytes())?;
+                line.clear();
+                reader.read_line(&mut line)?;
+                anyhow::ensure!(
+                    line.contains("\"ok\": true"),
+                    "conn {conn_id} request {k} failed: {}",
+                    &line[..line.len().min(200)]
+                );
+            }
+            Ok(t0.elapsed().as_secs_f64())
+        }));
+    }
+
+    barrier.wait();
+    let t0 = Instant::now();
+    let mut per_conn_secs = Vec::new();
+    for h in handles {
+        per_conn_secs.push(h.join().expect("client thread panicked")?);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let total = (args.conns * args.requests) as f64;
+    let rps = total / wall;
+    println!(
+        "# done: {total} requests in {wall:.3} s -> {rps:.1} req/s \
+         (slowest conn {:.3} s)",
+        per_conn_secs.iter().cloned().fold(0.0f64, f64::max)
+    );
+
+    // pull the server's own pipeline counters
+    if let Ok(conn) = TcpStream::connect(&args.addr) {
+        let mut writer = conn.try_clone()?;
+        let mut reader = BufReader::new(conn);
+        writer.write_all(b"{\"cmd\": \"stats\"}\n")?;
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        println!("# server stats: {}", line.trim());
+    }
+
+    if let Some(path) = &args.out {
+        let json = format!(
+            "{{\"bench\": \"serve\", \"conns\": {}, \"requests_per_conn\": {}, \
+             \"num_nbor\": {}, \"total_requests\": {}, \"wall_s\": {:.6}, \
+             \"req_per_s\": {:.2}}}\n",
+            args.conns, args.requests, args.nbor, total as u64, wall, rps
+        );
+        std::fs::write(path, json)?;
+        println!("# wrote {path}");
+    }
+    anyhow::ensure!(rps > 0.0, "throughput must be nonzero");
     Ok(())
 }

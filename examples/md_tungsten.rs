@@ -1,4 +1,4 @@
-//! **The end-to-end driver** (DESIGN.md deliverable): molecular dynamics of
+//! **The end-to-end driver**: molecular dynamics of
 //! the paper's 2000-atom bcc-tungsten benchmark with forces computed by the
 //! AOT-compiled JAX/Pallas model executed through PJRT — all three layers
 //! composing on a real workload.
@@ -13,7 +13,7 @@
 //! # native engine:       ... md_tungsten -- --engine fused
 //! ```
 //!
-//! Results are recorded in EXPERIMENTS.md ("End-to-end validation").
+//! Results are recorded in the experiment reports (`repro experiments`).
 
 use repro::coordinator::{ForceField, SimConfig, Simulation};
 use repro::md::lattice;

@@ -43,6 +43,6 @@ fn main() -> anyhow::Result<()> {
             fp.gib()
         );
     }
-    println!("\n(paper, V100: ladder ends at 7.5x for 2J8 / 8.9x for 2J14;\n section VI fused kernels reach 19.6x / 21.7x — see EXPERIMENTS.md)");
+    println!("\n(paper, V100: ladder ends at 7.5x for 2J8 / 8.9x for 2J14;\n section VI fused kernels reach 19.6x / 21.7x)");
     Ok(())
 }

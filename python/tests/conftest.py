@@ -2,10 +2,17 @@
 
 from __future__ import annotations
 
+import sys
+from pathlib import Path
+
 import numpy as np
 import pytest
 
-from compile.kernels.ref import SnapParams
+# Make `compile.*` importable regardless of pytest's rootdir/cwd (the
+# package lives at python/compile, one level above this conftest).
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from compile.kernels.ref import SnapParams  # noqa: E402
 
 
 def random_config(rng, num_atoms, num_nbor, p: SnapParams, sparsity=0.2):

@@ -6,12 +6,31 @@
 //! this project's configs need, hand-rolled because the build is offline.
 
 use crate::snap::coeff::SnapCoeffs;
-use crate::snap::engine::ForceEngine;
+use crate::snap::engine::{EngineFactory, ForceEngine};
 use crate::snap::variants::Variant;
 use crate::snap::SnapIndex;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::sync::Arc;
+
+/// Map a CLI engine name to its ladder variant (None for `xla:` names).
+fn variant_from_name(name: &str) -> Result<Variant> {
+    Ok(match name {
+        "baseline" | "V0" => Variant::V0Baseline,
+        "pre-adjoint-atom" => Variant::PreAdjointAtom,
+        "pre-adjoint-pair" => Variant::PreAdjointPair,
+        "V1" => Variant::V1,
+        "V2" => Variant::V2,
+        "V3" => Variant::V3,
+        "V4" => Variant::V4,
+        "V5" => Variant::V5,
+        "V6" => Variant::V6,
+        "V7" => Variant::V7,
+        "fused" => Variant::Fused,
+        "aosoa" => Variant::FusedAosoa,
+        other => bail!("unknown engine `{other}`"),
+    })
+}
 
 /// Flat TOML-subset document.
 #[derive(Clone, Debug, Default)]
@@ -76,39 +95,53 @@ impl Toml {
 /// Build any named engine.  Names: `baseline`, `pre-adjoint-atom`,
 /// `pre-adjoint-pair`, `V1`..`V7`, `fused`, `aosoa`, or `xla:<artifact>`
 /// (e.g. `xla:snap_2j8`).
+///
+/// One-shot convenience over [`engine_factory`] — a single validation and
+/// construction site serves both the CLI `run` path and the server's
+/// worker pool.
 pub fn build_engine(
     name: &str,
     twojmax: usize,
     beta: Vec<f64>,
     artifacts_dir: &str,
 ) -> Result<Box<dyn ForceEngine>> {
+    engine_factory(name, twojmax, beta, artifacts_dir)?()
+}
+
+/// Build an [`EngineFactory`]: a shared, thread-safe constructor the force
+/// server hands to each worker so every worker owns a private engine
+/// instance (engines carry mutable scratch) while the heavy immutable
+/// state — the `SnapIndex` tables — is built once and shared via `Arc`.
+///
+/// Validation (engine name, beta length, artifact metadata) happens here,
+/// eagerly, so `serve` fails at startup rather than in a worker thread.
+pub fn engine_factory(
+    name: &str,
+    twojmax: usize,
+    beta: Vec<f64>,
+    artifacts_dir: &str,
+) -> Result<EngineFactory> {
     if let Some(artifact) = name.strip_prefix("xla:") {
-        let rt = crate::runtime::Runtime::open(artifacts_dir)?;
-        let meta = rt
-            .meta(artifact)
+        // PJRT engines own a runtime/client each, so the closure opens a
+        // fresh Runtime per build; metadata is validated once up front.
+        let artifact = artifact.to_string();
+        let artifacts_dir = artifacts_dir.to_string();
+        let probe = crate::runtime::Runtime::open(&artifacts_dir)?;
+        let meta = probe
+            .meta(&artifact)
             .with_context(|| format!("unknown artifact {artifact}"))?;
         anyhow::ensure!(
             meta.twojmax == twojmax,
             "artifact {artifact} is 2J={} but run wants 2J={twojmax}",
             meta.twojmax
         );
-        return Ok(Box::new(crate::runtime::XlaEngine::new(rt, artifact, beta)?));
+        return Ok(Arc::new(move || {
+            let rt = crate::runtime::Runtime::open(&artifacts_dir)?;
+            let engine = crate::runtime::XlaEngine::new(rt, &artifact, beta.clone())?;
+            Ok(Box::new(engine) as Box<dyn ForceEngine>)
+        }));
     }
-    let variant = match name {
-        "baseline" | "V0" => Variant::V0Baseline,
-        "pre-adjoint-atom" => Variant::PreAdjointAtom,
-        "pre-adjoint-pair" => Variant::PreAdjointPair,
-        "V1" => Variant::V1,
-        "V2" => Variant::V2,
-        "V3" => Variant::V3,
-        "V4" => Variant::V4,
-        "V5" => Variant::V5,
-        "V6" => Variant::V6,
-        "V7" => Variant::V7,
-        "fused" => Variant::Fused,
-        "aosoa" => Variant::FusedAosoa,
-        other => bail!("unknown engine `{other}`"),
-    };
+    let variant = variant_from_name(name)?;
     let params = crate::snap::SnapParams::with_twojmax(twojmax);
     let idx = Arc::new(SnapIndex::new(twojmax));
     anyhow::ensure!(
@@ -117,7 +150,7 @@ pub fn build_engine(
         beta.len(),
         idx.idxb_max
     );
-    Ok(variant.build(params, idx, beta))
+    Ok(Arc::new(move || Ok(variant.build(params, idx.clone(), beta.clone()))))
 }
 
 /// Resolve coefficients from an input-script coefficient source.
@@ -185,6 +218,30 @@ mod tests {
     #[test]
     fn engine_factory_rejects_unknown() {
         assert!(build_engine("warp-drive", 2, vec![0.0; 5], "artifacts").is_err());
+    }
+
+    #[test]
+    fn shared_factory_builds_independent_engines() {
+        let idx = SnapIndex::new(2);
+        let beta = vec![0.1; idx.idxb_max];
+        let factory = engine_factory("fused", 2, beta, "artifacts").unwrap();
+        let mut a = factory().unwrap();
+        let mut b = factory().unwrap();
+        assert_eq!(a.name(), b.name());
+        // both instances compute independently (each owns its scratch)
+        let rij = vec![1.5, 0.0, 0.0, 0.0, 1.5, 0.0];
+        let mask = vec![1.0, 1.0];
+        let t = crate::snap::TileInput { num_atoms: 1, num_nbor: 2, rij: &rij, mask: &mask };
+        let oa = a.compute(&t);
+        let ob = b.compute(&t);
+        assert_eq!(oa.ei, ob.ei);
+        assert_eq!(oa.dedr, ob.dedr);
+    }
+
+    #[test]
+    fn shared_factory_validates_eagerly() {
+        assert!(engine_factory("warp-drive", 2, vec![0.0; 5], "artifacts").is_err());
+        assert!(engine_factory("fused", 8, vec![0.0; 3], "artifacts").is_err());
     }
 
     #[test]

@@ -1,8 +1,85 @@
-//! Tile batching + force assembly.
+//! Tile batching + force assembly, plus the tile coalescer the force
+//! server uses to merge small requests into one engine dispatch.
 
 use crate::md::{NeighborList, Structure};
-use crate::snap::engine::{ForceEngine, TileInput};
+use crate::snap::engine::{ForceEngine, OwnedTile, TileInput, TileOutput};
 use crate::util::StageTimes;
+
+/// Packs several small tiles that share one neighbor width into a single
+/// engine dispatch, then splits the output back per member.
+///
+/// This is the server-side sibling of [`ForceField::compute`]'s pack/scatter:
+/// the same padded-tile contract (masked rows are inert, rows are
+/// per-atom-independent), applied across *requests* instead of across a
+/// neighbor list.  Because members are concatenated row-for-row with no
+/// re-padding, a member's slice of the merged output is bit-identical to
+/// evaluating that member alone.
+pub struct TileBatch {
+    num_nbor: usize,
+    /// Atom-row count of each member, in push order.
+    member_atoms: Vec<usize>,
+    rij: Vec<f64>,
+    mask: Vec<f64>,
+}
+
+impl TileBatch {
+    pub fn new(num_nbor: usize) -> Self {
+        Self { num_nbor, member_atoms: Vec::new(), rij: Vec::new(), mask: Vec::new() }
+    }
+
+    /// Number of member tiles.
+    pub fn len(&self) -> usize {
+        self.member_atoms.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.member_atoms.is_empty()
+    }
+
+    /// Total atom rows across members.
+    pub fn num_atoms(&self) -> usize {
+        self.member_atoms.iter().sum()
+    }
+
+    /// Append one member tile (must match this batch's neighbor width).
+    pub fn push(&mut self, tile: &OwnedTile) {
+        assert_eq!(
+            tile.num_nbor, self.num_nbor,
+            "TileBatch members must share num_nbor"
+        );
+        tile.as_input().validate();
+        self.member_atoms.push(tile.num_atoms);
+        self.rij.extend_from_slice(&tile.rij);
+        self.mask.extend_from_slice(&tile.mask);
+    }
+
+    /// The merged tile, ready for one `ForceEngine::compute` call.
+    pub fn input(&self) -> TileInput<'_> {
+        TileInput {
+            num_atoms: self.num_atoms(),
+            num_nbor: self.num_nbor,
+            rij: &self.rij,
+            mask: &self.mask,
+        }
+    }
+
+    /// Demultiplex the merged output back into per-member outputs
+    /// (in push order).
+    pub fn split(&self, out: &TileOutput) -> Vec<TileOutput> {
+        assert_eq!(out.ei.len(), self.num_atoms(), "output does not match batch");
+        let nn = self.num_nbor;
+        let mut parts = Vec::with_capacity(self.member_atoms.len());
+        let mut row = 0usize;
+        for &na in &self.member_atoms {
+            parts.push(TileOutput {
+                ei: out.ei[row..row + na].to_vec(),
+                dedr: out.dedr[row * nn * 3..(row + na) * nn * 3].to_vec(),
+            });
+            row += na;
+        }
+        parts
+    }
+}
 
 /// Global result of one force evaluation.
 #[derive(Clone, Debug)]
@@ -187,6 +264,52 @@ mod tests {
         for e in &r.ei {
             assert!((e - r.ei[0]).abs() < 1e-10);
         }
+    }
+
+    #[test]
+    fn tile_batch_split_is_bitwise_identical_to_solo_eval() {
+        let p = SnapParams::with_twojmax(2);
+        let idx = Arc::new(SnapIndex::new(2));
+        let coeffs = SnapCoeffs::synthetic(2, idx.idxb_max, 5);
+        let mut rng = crate::util::XorShift::new(31);
+        let nn = 4usize;
+        let mut members = Vec::new();
+        for na in [1usize, 1, 2, 1, 3] {
+            let mut rij = Vec::new();
+            let mut mask = Vec::new();
+            for _ in 0..na * nn {
+                for _ in 0..3 {
+                    rij.push(rng.uniform(-2.0, 2.0));
+                }
+                mask.push(if rng.next_f64() > 0.3 { 1.0 } else { 0.0 });
+            }
+            members.push(OwnedTile { num_atoms: na, num_nbor: nn, rij, mask });
+        }
+        let mut batch = TileBatch::new(nn);
+        for m in &members {
+            batch.push(m);
+        }
+        assert_eq!(batch.len(), 5);
+        assert_eq!(batch.num_atoms(), 8);
+
+        let mut eng = BaselineEngine::new(p, idx, coeffs.beta, Staging::Monolithic);
+        let merged_out = eng.compute(&batch.input());
+        let parts = batch.split(&merged_out);
+        assert_eq!(parts.len(), members.len());
+        for (m, part) in members.iter().zip(parts.iter()) {
+            let solo = eng.compute(&m.as_input());
+            // bitwise: coalescing must be invisible to clients
+            assert_eq!(solo.ei, part.ei, "ei differs for member");
+            assert_eq!(solo.dedr, part.dedr, "dedr differs for member");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn tile_batch_rejects_mismatched_nbor_width() {
+        let mut batch = TileBatch::new(3);
+        let t = OwnedTile { num_atoms: 1, num_nbor: 2, rij: vec![0.0; 6], mask: vec![0.0; 2] };
+        batch.push(&t);
     }
 
     #[test]

@@ -4,11 +4,12 @@
 //!
 //! This is the layer the paper's LAMMPS/Kokkos driver occupies; here it
 //! owns batching geometry (tile sizes), the neighbor-rebuild policy, the
-//! thermostat, metrics, and the thermo log.
+//! thermostat, metrics, the thermo log, and the concurrent force server
+//! ([`server`]).
 
 pub mod force;
 pub mod server;
 pub mod sim;
 
-pub use force::{ForceField, ForceResult};
+pub use force::{ForceField, ForceResult, TileBatch};
 pub use sim::{SimConfig, Simulation};

@@ -1,47 +1,416 @@
-//! A minimal force server: newline-delimited JSON over TCP.
+//! The force server: newline-delimited JSON over TCP, served by a
+//! concurrent pipeline.
 //!
-//! This exercises the coordinator as a *service* (the shape a production
+//! This is the coordinator as a *service* (the shape a production
 //! deployment of an ML potential takes: a central process owning the
-//! compiled executable, clients submitting neighborhood batches).  Protocol:
+//! compiled potential, clients submitting neighborhood batches).  Protocol:
 //!
+//! ```text
 //! request:  {"num_atoms": A, "num_nbor": N, "rij": [...3AN...], "mask": [...AN...]}\n
 //! response: {"ok": true, "ei": [...A...], "dedr": [...3AN...]}\n
+//! control:  {"cmd": "stats"}\n  ->  {"ok": true, "stats": {...counters...}}\n
+//! errors:   {"ok": false, "error": "<json-escaped message>"}\n
+//! ```
 //!
-//! The listener is single-threaded-accept with sequential request handling
-//! per connection (the engine itself is the bottleneck; see DESIGN.md).
+//! Pipeline (the paper's hierarchical-parallelism lesson applied to the
+//! service layer):
+//!
+//! ```text
+//! accept loop ──> session thread per connection (parse, reply I/O)
+//!                      │  bounded ingress queue (backpressure)
+//!                      ▼
+//!                 coalescer: merges small requests that arrive within
+//!                      │     `batch_window` into one padded tile
+//!                      ▼  bounded work queue
+//!                 worker pool: N workers, each owning a private engine
+//!                      │     built from one shared `EngineFactory`
+//!                      ▼
+//!                 per-request replies demultiplexed back to sessions
+//! ```
+//!
+//! Every stage is bounded, so a slow engine propagates backpressure to the
+//! client sockets instead of buffering unboundedly.  Shutdown: flip the
+//! stop flag and poke the accept loop with a throwaway connection
+//! ([`shutdown`]); the queues drain, the workers join, sessions end when
+//! their clients disconnect.
 
-use crate::snap::engine::{ForceEngine, TileInput};
-use crate::util::json::Json;
+use crate::coordinator::force::TileBatch;
+use crate::snap::engine::{EngineFactory, ForceEngine, OwnedTile, TileOutput};
+use crate::util::json::{self, Json};
+use crate::util::parallel::{num_threads, BoundedQueue, RecvTimeout};
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
-/// Serve requests until `stop` flips true (checked between connections).
-pub fn serve(
-    listener: TcpListener,
-    mut engine: Box<dyn ForceEngine>,
-    stop: Arc<AtomicBool>,
-) -> std::io::Result<()> {
-    listener.set_nonblocking(true)?;
-    while !stop.load(Ordering::Relaxed) {
-        match listener.accept() {
-            Ok((stream, _)) => {
-                stream.set_nonblocking(false)?;
-                if let Err(e) = handle(stream, engine.as_mut()) {
-                    eprintln!("force-server connection error: {e}");
-                }
-            }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(std::time::Duration::from_millis(5));
-            }
-            Err(e) => return Err(e),
-        }
-    }
-    Ok(())
+/// Tuning knobs for the serving pipeline.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Worker threads, each owning a private engine (`--workers`,
+    /// default `REPRO_THREADS` / available cores).
+    pub workers: usize,
+    /// How long the coalescer holds a small request hoping to merge more
+    /// into the same tile (`--batch-window-us`; zero disables coalescing).
+    pub batch_window: Duration,
+    /// Capacity of each pipeline queue (`--queue-depth`); full queues
+    /// block upstream, i.e. backpressure.
+    pub queue_depth: usize,
+    /// Merged tiles never exceed this many atom rows.
+    pub max_batch_atoms: usize,
 }
 
-fn handle(stream: TcpStream, engine: &mut dyn ForceEngine) -> std::io::Result<()> {
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            workers: num_threads(),
+            batch_window: Duration::from_micros(100),
+            queue_depth: 256,
+            max_batch_atoms: 32,
+        }
+    }
+}
+
+/// Monotonic counters for every pipeline stage, readable over the wire via
+/// `{"cmd": "stats"}`.
+///
+/// Invariant (checked by tests): `requests_total` = `replies_ok` +
+/// `replies_err` + `stats_requests` once the pipeline is idle.
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    pub connections_total: AtomicU64,
+    pub connections_active: AtomicU64,
+    /// Non-empty frames received (compute + control + malformed).
+    pub requests_total: AtomicU64,
+    pub replies_ok: AtomicU64,
+    pub replies_err: AtomicU64,
+    pub stats_requests: AtomicU64,
+    /// Engine dispatches (merged batches count once).
+    pub jobs_dispatched: AtomicU64,
+    /// Dispatches that merged >= 2 requests.
+    pub batches_merged: AtomicU64,
+    /// Requests that rode a merged dispatch.
+    pub requests_coalesced: AtomicU64,
+    /// Total time requests spent queued (enqueue -> worker pickup), ns.
+    pub queue_wait_ns: AtomicU64,
+    /// Total engine time, ns.
+    pub compute_ns: AtomicU64,
+    /// Total atom rows computed.
+    pub atoms_computed: AtomicU64,
+    /// Worker-pool size (set once at startup).
+    pub workers: AtomicU64,
+}
+
+impl ServerStats {
+    pub fn snapshot_json(&self) -> String {
+        let n = |v: &AtomicU64| v.load(Ordering::Relaxed).to_string();
+        let us = |v: &AtomicU64| (v.load(Ordering::Relaxed) / 1_000).to_string();
+        json::write_obj(&[
+            ("workers", n(&self.workers)),
+            ("connections_total", n(&self.connections_total)),
+            ("connections_active", n(&self.connections_active)),
+            ("requests_total", n(&self.requests_total)),
+            ("replies_ok", n(&self.replies_ok)),
+            ("replies_err", n(&self.replies_err)),
+            ("stats_requests", n(&self.stats_requests)),
+            ("jobs_dispatched", n(&self.jobs_dispatched)),
+            ("batches_merged", n(&self.batches_merged)),
+            ("requests_coalesced", n(&self.requests_coalesced)),
+            ("queue_wait_us", us(&self.queue_wait_ns)),
+            ("compute_us", us(&self.compute_ns)),
+            ("atoms_computed", n(&self.atoms_computed)),
+        ])
+    }
+}
+
+/// One parsed compute request in flight through the pipeline.
+struct Pending {
+    tile: OwnedTile,
+    reply: mpsc::Sender<Result<TileOutput, String>>,
+    enqueued: Instant,
+}
+
+/// A unit of engine work popped by a worker.
+enum Job {
+    Single(Pending),
+    /// >= 2 requests sharing a neighbor width, merged into one tile.
+    Batch(Vec<Pending>),
+}
+
+/// Shared state handed to each session thread.
+struct SessionCtx {
+    ingress: Arc<BoundedQueue<Pending>>,
+    stats: Arc<ServerStats>,
+}
+
+/// Serve requests until `stop` flips true.  Blocks the calling thread.
+///
+/// The accept call is *blocking* — an idle server parks in the kernel
+/// instead of sleep-polling.  To stop it, flip `stop` and make a
+/// throwaway connection to the listen address (see [`shutdown`]).
+pub fn serve(
+    listener: TcpListener,
+    factory: EngineFactory,
+    opts: &ServeOptions,
+    stop: Arc<AtomicBool>,
+) -> std::io::Result<()> {
+    serve_with_stats(listener, factory, opts, stop, Arc::new(ServerStats::default()))
+}
+
+/// [`serve`] with caller-owned stats (lets tests and embedders inspect the
+/// counters without a round-trip through the wire protocol).
+pub fn serve_with_stats(
+    listener: TcpListener,
+    factory: EngineFactory,
+    opts: &ServeOptions,
+    stop: Arc<AtomicBool>,
+    stats: Arc<ServerStats>,
+) -> std::io::Result<()> {
+    listener.set_nonblocking(false)?;
+    let workers = opts.workers.max(1);
+    stats.workers.store(workers as u64, Ordering::Relaxed);
+
+    // Build every engine up front so a bad factory fails `serve` at startup
+    // rather than inside a worker thread.
+    let mut engines: Vec<Box<dyn ForceEngine>> = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        engines.push(
+            factory()
+                .map_err(|e| std::io::Error::other(format!("engine factory: {e:#}")))?,
+        );
+    }
+
+    let ingress = Arc::new(BoundedQueue::<Pending>::new(opts.queue_depth));
+    let workq = Arc::new(BoundedQueue::<Job>::new(opts.queue_depth));
+
+    let coalescer = {
+        let ingress = ingress.clone();
+        let workq = workq.clone();
+        let stats = stats.clone();
+        let window = opts.batch_window;
+        let max_atoms = opts.max_batch_atoms.max(1);
+        std::thread::spawn(move || coalescer_loop(&ingress, &workq, &stats, window, max_atoms))
+    };
+
+    let worker_handles: Vec<_> = engines
+        .into_iter()
+        .map(|engine| {
+            let workq = workq.clone();
+            let stats = stats.clone();
+            std::thread::spawn(move || worker_loop(&workq, engine, &stats))
+        })
+        .collect();
+
+    let ctx = Arc::new(SessionCtx { ingress: ingress.clone(), stats: stats.clone() });
+    let mut consecutive_errors = 0u32;
+    let result = loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if stop.load(Ordering::SeqCst) {
+                    // the wake-up poke (or a late client); drop it and exit
+                    break Ok(());
+                }
+                consecutive_errors = 0;
+                let ctx = ctx.clone();
+                std::thread::spawn(move || {
+                    if let Err(e) = session(stream, &ctx) {
+                        eprintln!("force-server connection error: {e}");
+                    }
+                });
+            }
+            Err(_e) if stop.load(Ordering::SeqCst) => break Ok(()),
+            Err(e) => {
+                // Transient accept errors (ECONNABORTED from a client that
+                // RST before accept, EMFILE under fd pressure) must not kill
+                // a healthy service; only a persistently failing listener is
+                // fatal.
+                consecutive_errors += 1;
+                if consecutive_errors >= 100 {
+                    break Err(e);
+                }
+                eprintln!("force-server accept error (retrying): {e}");
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    };
+
+    // Drain the pipeline: close ingress, let the coalescer flush what it
+    // holds, then close the work queue so workers exit after draining.
+    // Sessions still attached get an error reply on their next request and
+    // end when their clients disconnect.
+    ingress.close();
+    let _ = coalescer.join();
+    workq.close();
+    for h in worker_handles {
+        let _ = h.join();
+    }
+    result
+}
+
+/// Flip `stop` and poke the blocking accept loop awake so [`serve`]
+/// returns promptly.
+pub fn shutdown(addr: SocketAddr, stop: &AtomicBool) {
+    stop.store(true, Ordering::SeqCst);
+    let _ = TcpStream::connect(addr);
+}
+
+/// Pop requests from `ingress`; hold small ones up to `window`, merging
+/// arrivals that share a neighbor width into one padded tile.
+///
+/// The window is only opened when more than one connection is attached —
+/// a lone sequential client blocks on each reply before sending the next
+/// request, so holding its requests would add pure latency with no chance
+/// of a merge.
+fn coalescer_loop(
+    ingress: &BoundedQueue<Pending>,
+    workq: &BoundedQueue<Job>,
+    stats: &ServerStats,
+    window: Duration,
+    max_atoms: usize,
+) {
+    'outer: loop {
+        let first = match ingress.recv() {
+            Some(p) => p,
+            None => break,
+        };
+        let concurrent = stats.connections_active.load(Ordering::Relaxed) > 1;
+        if window.is_zero() || first.tile.num_atoms >= max_atoms || !concurrent {
+            if workq.send(Job::Single(first)).is_err() {
+                break;
+            }
+            continue;
+        }
+        let nn = first.tile.num_nbor;
+        let mut atoms = first.tile.num_atoms;
+        let mut group = vec![first];
+        let deadline = Instant::now() + window;
+        let mut closed = false;
+        while atoms < max_atoms {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match ingress.recv_timeout(deadline - now) {
+                RecvTimeout::Item(p) => {
+                    if p.tile.num_nbor == nn && atoms + p.tile.num_atoms <= max_atoms {
+                        atoms += p.tile.num_atoms;
+                        group.push(p);
+                    } else if workq.send(Job::Single(p)).is_err() {
+                        break 'outer;
+                    }
+                }
+                RecvTimeout::TimedOut => break,
+                RecvTimeout::Closed => {
+                    closed = true;
+                    break;
+                }
+            }
+        }
+        let job = if group.len() == 1 {
+            Job::Single(group.pop().expect("nonempty group"))
+        } else {
+            Job::Batch(group)
+        };
+        if workq.send(job).is_err() || closed {
+            break;
+        }
+    }
+}
+
+/// Worker: owns one engine, pops jobs, computes, demultiplexes replies.
+///
+/// Engine panics are contained per-job (`catch_unwind`): the offending
+/// request(s) get an error reply and the worker lives on — a hostile tile
+/// must not shrink the pool into a denial of service.  Engine scratch is
+/// resized/zeroed at the top of every `compute`, so reuse after an unwind
+/// is safe.
+fn worker_loop(
+    workq: &BoundedQueue<Job>,
+    mut engine: Box<dyn ForceEngine>,
+    stats: &ServerStats,
+) {
+    while let Some(job) = workq.recv() {
+        match job {
+            Job::Single(p) => {
+                note_wait(stats, std::iter::once(&p));
+                let t0 = Instant::now();
+                let out = guarded_compute(engine.as_mut(), &p.tile.as_input());
+                note_compute(stats, t0, p.tile.num_atoms);
+                let _ = p.reply.send(out);
+            }
+            Job::Batch(members) => {
+                note_wait(stats, members.iter());
+                let mut batch = TileBatch::new(members[0].tile.num_nbor);
+                for m in &members {
+                    batch.push(&m.tile);
+                }
+                let t0 = Instant::now();
+                let out = guarded_compute(engine.as_mut(), &batch.input());
+                note_compute(stats, t0, batch.num_atoms());
+                stats.batches_merged.fetch_add(1, Ordering::Relaxed);
+                stats
+                    .requests_coalesced
+                    .fetch_add(members.len() as u64, Ordering::Relaxed);
+                match out {
+                    Ok(out) => {
+                        for (m, part) in members.iter().zip(batch.split(&out)) {
+                            let _ = m.reply.send(Ok(part));
+                        }
+                    }
+                    Err(msg) => {
+                        for m in &members {
+                            let _ = m.reply.send(Err(msg.clone()));
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Run one engine dispatch, converting a panic into an error reply.
+fn guarded_compute(
+    engine: &mut dyn ForceEngine,
+    input: &crate::snap::engine::TileInput,
+) -> Result<TileOutput, String> {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| engine.compute(input)))
+        .map_err(|cause| {
+            let detail = cause
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| cause.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "unknown panic".to_string());
+            format!("engine panicked during compute: {detail}")
+        })
+}
+
+fn note_wait<'a>(stats: &ServerStats, pendings: impl Iterator<Item = &'a Pending>) {
+    let ns: u64 = pendings
+        .map(|p| p.enqueued.elapsed().as_nanos() as u64)
+        .sum();
+    stats.queue_wait_ns.fetch_add(ns, Ordering::Relaxed);
+}
+
+fn note_compute(stats: &ServerStats, t0: Instant, atoms: usize) {
+    stats.compute_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    stats.jobs_dispatched.fetch_add(1, Ordering::Relaxed);
+    stats.atoms_computed.fetch_add(atoms as u64, Ordering::Relaxed);
+}
+
+/// Per-connection loop: read frames, submit, write replies in order.
+///
+/// Each connection's requests are handled strictly in sequence (submit,
+/// await, reply), so per-connection reply order always matches request
+/// order; concurrency comes from many connections and from coalescing.
+fn session(stream: TcpStream, ctx: &SessionCtx) -> std::io::Result<()> {
+    ctx.stats.connections_total.fetch_add(1, Ordering::Relaxed);
+    ctx.stats.connections_active.fetch_add(1, Ordering::Relaxed);
+    let result = session_inner(stream, ctx);
+    ctx.stats.connections_active.fetch_sub(1, Ordering::Relaxed);
+    result
+}
+
+fn session_inner(stream: TcpStream, ctx: &SessionCtx) -> std::io::Result<()> {
     let peer = stream.try_clone()?;
     let reader = BufReader::new(peer);
     let mut writer = stream;
@@ -50,9 +419,17 @@ fn handle(stream: TcpStream, engine: &mut dyn ForceEngine) -> std::io::Result<()
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match process(&line, engine) {
-            Ok(r) => r,
-            Err(msg) => format!("{{\"ok\": false, \"error\": \"{msg}\"}}"),
+        ctx.stats.requests_total.fetch_add(1, Ordering::Relaxed);
+        let reply = match process(&line, ctx) {
+            Ok(Reply::Compute(r)) => {
+                ctx.stats.replies_ok.fetch_add(1, Ordering::Relaxed);
+                r
+            }
+            Ok(Reply::Control(r)) => r,
+            Err(msg) => {
+                ctx.stats.replies_err.fetch_add(1, Ordering::Relaxed);
+                format!("{{\"ok\": false, \"error\": {}}}", json::quote(&msg))
+            }
         };
         writer.write_all(reply.as_bytes())?;
         writer.write_all(b"\n")?;
@@ -60,8 +437,38 @@ fn handle(stream: TcpStream, engine: &mut dyn ForceEngine) -> std::io::Result<()
     Ok(())
 }
 
-fn process(line: &str, engine: &mut dyn ForceEngine) -> Result<String, String> {
+enum Reply {
+    Compute(String),
+    Control(String),
+}
+
+fn process(line: &str, ctx: &SessionCtx) -> Result<Reply, String> {
     let j = Json::parse(line).map_err(|e| e.to_string())?;
+    if let Some(cmd) = j.get("cmd").and_then(Json::as_str) {
+        return match cmd {
+            "stats" => {
+                ctx.stats.stats_requests.fetch_add(1, Ordering::Relaxed);
+                Ok(Reply::Control(format!(
+                    "{{\"ok\": true, \"stats\": {}}}",
+                    ctx.stats.snapshot_json()
+                )))
+            }
+            other => Err(format!("unknown cmd `{other}`")),
+        };
+    }
+    let tile = parse_tile(&j)?;
+    let (tx, rx) = mpsc::channel();
+    let pending = Pending { tile, reply: tx, enqueued: Instant::now() };
+    ctx.ingress
+        .send(pending)
+        .map_err(|_| "server shutting down".to_string())?;
+    let out = rx
+        .recv()
+        .map_err(|_| "request dropped during shutdown".to_string())??;
+    Ok(Reply::Compute(format_ok_reply(&out)))
+}
+
+fn parse_tile(j: &Json) -> Result<OwnedTile, String> {
     let na = j
         .get("num_atoms")
         .and_then(Json::as_usize)
@@ -78,47 +485,57 @@ fn process(line: &str, engine: &mut dyn ForceEngine) -> Result<String, String> {
         .get("mask")
         .and_then(Json::as_f64_vec)
         .ok_or("missing mask")?;
-    if rij.len() != na * nn * 3 || mask.len() != na * nn {
-        return Err("shape mismatch".to_string());
-    }
-    let out = engine.compute(&TileInput { num_atoms: na, num_nbor: nn, rij: &rij, mask: &mask });
+    let tile = OwnedTile { num_atoms: na, num_nbor: nn, rij, mask };
+    tile.check_shape().map_err(|e| format!("shape mismatch: {e}"))?;
+    Ok(tile)
+}
+
+fn format_ok_reply(out: &TileOutput) -> String {
     let fmt = |v: &[f64]| {
         let items: Vec<String> = v.iter().map(|x| format!("{x:.17e}")).collect();
         format!("[{}]", items.join(","))
     };
-    Ok(format!(
+    format!(
         "{{\"ok\": true, \"ei\": {}, \"dedr\": {}}}",
         fmt(&out.ei),
         fmt(&out.dedr)
-    ))
+    )
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::snap::coeff::SnapCoeffs;
-    use crate::snap::fused::{FusedConfig, FusedEngine};
-    use crate::snap::{SnapIndex, SnapParams};
+    use crate::snap::SnapIndex;
     use std::io::BufRead;
 
-    #[test]
-    fn roundtrip_request() {
-        let p = SnapParams::with_twojmax(2);
-        let idx = std::sync::Arc::new(SnapIndex::new(2));
+    fn test_factory() -> EngineFactory {
+        let idx = SnapIndex::new(2);
         let coeffs = SnapCoeffs::synthetic(2, idx.idxb_max, 3);
-        let engine: Box<dyn ForceEngine> = Box::new(FusedEngine::new(
-            p, idx, coeffs.beta, FusedConfig::default(), "fused",
-        ));
+        crate::config::engine_factory("fused", 2, coeffs.beta, "artifacts").unwrap()
+    }
+
+    type ServerJoin = std::thread::JoinHandle<std::io::Result<()>>;
+
+    fn start(opts: ServeOptions) -> (SocketAddr, Arc<AtomicBool>, ServerJoin) {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
-        let h = std::thread::spawn(move || serve(listener, engine, stop2));
+        let factory = test_factory();
+        let h = std::thread::spawn(move || serve(listener, factory, &opts, stop2));
+        (addr, stop, h)
+    }
 
+    #[test]
+    fn roundtrip_request() {
+        let (addr, stop, h) = start(ServeOptions {
+            workers: 2,
+            ..ServeOptions::default()
+        });
         let mut conn = TcpStream::connect(addr).unwrap();
-        let req = format!(
-            "{{\"num_atoms\": 1, \"num_nbor\": 2, \"rij\": [1.5,0,0, 0,1.5,0], \"mask\": [1,1]}}\n"
-        );
+        let req =
+            "{\"num_atoms\": 1, \"num_nbor\": 2, \"rij\": [1.5,0,0, 0,1.5,0], \"mask\": [1,1]}\n";
         conn.write_all(req.as_bytes()).unwrap();
         let mut reader = BufReader::new(conn.try_clone().unwrap());
         let mut line = String::new();
@@ -130,11 +547,50 @@ mod tests {
         let mut line2 = String::new();
         reader.read_line(&mut line2).unwrap();
         assert!(line2.contains("\"ok\": false"));
-        // close *both* clones of the client socket so the server's read
-        // loop sees EOF and returns to accept()
+        // stats over the wire
+        conn.write_all(b"{\"cmd\": \"stats\"}\n").unwrap();
+        let mut line3 = String::new();
+        reader.read_line(&mut line3).unwrap();
+        let j = Json::parse(line3.trim()).expect("stats reply is valid json");
+        let stats = j.get("stats").expect("has stats");
+        assert_eq!(
+            stats.get("replies_ok").and_then(Json::as_usize),
+            Some(1),
+            "{line3}"
+        );
         drop(reader);
         drop(conn);
-        stop.store(true, Ordering::Relaxed);
+        shutdown(addr, &stop);
+        h.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn error_replies_are_valid_json_even_with_quotes_in_message() {
+        let ingress = Arc::new(BoundedQueue::new(4));
+        let stats = Arc::new(ServerStats::default());
+        let ctx = SessionCtx { ingress, stats };
+        // unknown cmd name embeds the offending string (with quotes/backslash)
+        let line = "{\"cmd\": \"do \\\"this\\\" \\\\ now\"}";
+        let msg = match process(line, &ctx) {
+            Err(m) => m,
+            Ok(_) => panic!("expected error"),
+        };
+        let reply = format!("{{\"ok\": false, \"error\": {}}}", json::quote(&msg));
+        let parsed = Json::parse(&reply).expect("error reply must stay valid JSON");
+        assert_eq!(
+            parsed.get("error").and_then(Json::as_str),
+            Some(msg.as_str())
+        );
+    }
+
+    #[test]
+    fn shutdown_unblocks_idle_server() {
+        let (addr, stop, h) = start(ServeOptions {
+            workers: 1,
+            ..ServeOptions::default()
+        });
+        // no connections at all: the accept loop is parked in the kernel
+        shutdown(addr, &stop);
         h.join().unwrap().unwrap();
     }
 }

@@ -1,10 +1,10 @@
 //! The experiment harness: regenerates every table and figure of the paper
-//! (DESIGN.md section 5 maps IDs to paper artifacts).
+//! (each experiment ID maps to one paper artifact).
 //!
 //! Absolute numbers belong to *this* testbed (a single-core CPU container;
 //! the paper used a V100-16GB), so each report prints the paper's expected
-//! values alongside the measured ones and EXPERIMENTS.md records the
-//! comparison of *shape* (ordering, rough factors, feasibility boundaries).
+//! values alongside the measured ones; what transfers is the *shape*
+//! (ordering, rough factors, feasibility boundaries).
 
 use crate::bench::{grind, GrindResult, Workload};
 use crate::snap::coeff::SnapCoeffs;
@@ -193,7 +193,7 @@ pub fn fig2(opts: &ExpOpts) -> String {
         ("V7", "7.5x (15% step)"),
     ];
     speedup_table(
-        "Fig 2 — optimization ladder, 2J=8 (paper: V100; here: CPU — layout steps can invert, see DESIGN.md)",
+        "Fig 2 — optimization ladder, 2J=8 (paper: V100; here: CPU — layout steps can invert)",
         &results,
         paper,
         2 * opts.cells8.pow(3),

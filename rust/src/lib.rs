@@ -6,7 +6,9 @@
 //!
 //! * **Layer 3 (this crate)** — the coordinator: a miniature LAMMPS-style
 //!   molecular-dynamics engine ([`md`]), the tile batcher and simulation
-//!   orchestrator ([`coordinator`]), and the PJRT runtime that executes the
+//!   orchestrator ([`coordinator`]), the concurrent force server
+//!   ([`coordinator::server`]: session threads → bounded queues → batch
+//!   coalescer → worker pool), and the PJRT runtime that executes the
 //!   AOT-compiled JAX/Pallas force model ([`runtime`]).  Also the *native*
 //!   SNAP engines ([`snap`]) that realize the paper's entire optimization
 //!   ladder (baseline → adjoint refactorization → V1..V7 → section-VI fused
@@ -20,8 +22,8 @@
 //! `artifacts/*.hlo.txt` through the PJRT C API and is self-contained
 //! afterwards.
 //!
-//! See `DESIGN.md` for the system inventory and the experiment index, and
-//! `EXPERIMENTS.md` for measured paper-vs-reproduction results.
+//! See `README.md` for the build, the force-server protocol, and the
+//! experiment index; `ROADMAP.md` tracks the north star and open items.
 
 pub mod bench;
 pub mod config;

@@ -5,7 +5,8 @@
 //! repro run --script examples/in.tungsten [--steps N] [--engine fused]
 //! repro experiments --id all|table1|fig1..fig4|stages|memory [--quick]
 //! repro inspect [--artifacts artifacts]
-//! repro serve --port 7878 [--engine fused] [--twojmax 8]
+//! repro serve --port 7878 [--engine fused] [--twojmax 8] [--workers N]
+//!             [--batch-window-us 100] [--queue-depth 256]
 //! ```
 //!
 //! Argument parsing is hand-rolled (offline build: no clap); every flag is
@@ -99,7 +100,8 @@ fn print_help() {
          \x20             [--quick] [--no-xla] [--cells8 N] [--cells14 N] [--reps N]\n\
          \x20             [--out FILE] [--artifacts DIR]\n\
          \x20 inspect     [--artifacts DIR]\n\
-         \x20 serve       --port P [--engine NAME] [--twojmax J]\n\
+         \x20 serve       --port P [--engine NAME] [--twojmax J] [--workers N]\n\
+         \x20             [--batch-window-us U] [--queue-depth D] [--max-batch-atoms A]\n\
          \n\
          engines: baseline V1..V7 fused aosoa pre-adjoint-atom pre-adjoint-pair\n\
          \x20        xla:snap_2j8 xla:snap_2j8_ref xla:snap_2j14 xla:snap_2j14_ref"
@@ -209,17 +211,34 @@ fn cmd_inspect(flags: &Flags) -> Result<()> {
 }
 
 fn cmd_serve(flags: &Flags) -> Result<()> {
+    use repro::coordinator::server::{serve, ServeOptions};
+
     let port: u16 = flags.get_or("port", 7878)?;
     let engine_name = flags.get_or("engine", "fused".to_string())?;
     let twojmax = flags.get_or("twojmax", 8usize)?;
     let artifacts = flags.get_or("artifacts", "artifacts".to_string())?;
+    let defaults = ServeOptions::default();
+    let opts = ServeOptions {
+        workers: flags.get_or("workers", defaults.workers)?,
+        batch_window: std::time::Duration::from_micros(
+            flags.get_or("batch-window-us", defaults.batch_window.as_micros() as u64)?,
+        ),
+        queue_depth: flags.get_or("queue-depth", defaults.queue_depth)?,
+        max_batch_atoms: flags.get_or("max-batch-atoms", defaults.max_batch_atoms)?,
+    };
     let idx = repro::snap::SnapIndex::new(twojmax);
     let coeffs = repro::snap::coeff::SnapCoeffs::synthetic(twojmax, idx.idxb_max, 42);
-    let engine =
-        repro::config::build_engine(&engine_name, twojmax, coeffs.beta, &artifacts)?;
+    let factory =
+        repro::config::engine_factory(&engine_name, twojmax, coeffs.beta, &artifacts)?;
     let listener = std::net::TcpListener::bind(("0.0.0.0", port))?;
-    println!("force server on :{port} engine={engine_name} 2J={twojmax} (ctrl-c to stop)");
+    println!(
+        "force server on :{port} engine={engine_name} 2J={twojmax} workers={} \
+         batch-window={}us queue-depth={} (ctrl-c to stop)",
+        opts.workers,
+        opts.batch_window.as_micros(),
+        opts.queue_depth
+    );
     let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
-    repro::coordinator::server::serve(listener, engine, stop)?;
+    serve(listener, factory, &opts, stop)?;
     Ok(())
 }

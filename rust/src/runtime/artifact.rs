@@ -1,5 +1,6 @@
 //! Artifact registry: metadata + lazily compiled PJRT executables.
 
+use super::xla;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;

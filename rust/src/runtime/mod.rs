@@ -1,16 +1,20 @@
 //! PJRT runtime: loads the AOT-compiled HLO artifacts and executes them on
 //! the request path.
 //!
-//! This is the only place the `xla` crate is touched.  The flow (see
-//! /opt/xla-example/load_hlo) is: HLO *text* (written once by
-//! `python/compile/aot.py`) -> `HloModuleProto::from_text_file` ->
-//! `XlaComputation` -> `PjRtClient::compile` -> `execute` per tile.  Text is
-//! the interchange format because jax >= 0.5 emits protos with 64-bit
-//! instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids.
+//! This is the only place the XLA binding is touched.  The flow is: HLO
+//! *text* (written once by `python/compile/aot.py`) ->
+//! `HloModuleProto::from_text_file` -> `XlaComputation` ->
+//! `PjRtClient::compile` -> `execute` per tile.  Text is the interchange
+//! format because jax >= 0.5 emits protos with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! The binding itself lives behind the [`xla`] seam module: an
+//! API-compatible stub in offline builds, swappable for the real
+//! `xla` crate where PJRT is available.
 
 pub mod artifact;
 pub mod engine;
+pub mod xla;
 
 pub use artifact::{ArtifactMeta, Runtime};
 pub use engine::XlaEngine;

@@ -1,0 +1,118 @@
+//! The PJRT/XLA binding seam.
+//!
+//! The real deployment links the `xla` crate (xla_extension) and executes
+//! AOT-compiled HLO through the PJRT C API.  That crate is unavailable in
+//! the offline build environment, so this module provides an API-compatible
+//! stub: the client constructs (so `Runtime::open` can scan artifact
+//! metadata and `repro inspect` works), but compiling/executing an HLO
+//! module returns a clear runtime error instead.
+//!
+//! Swapping in the real backend is a one-line change in
+//! `runtime/artifact.rs` (`use super::xla;` -> `use ::xla;`); everything
+//! above this seam is backend-agnostic and covered by the native engines.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` closely enough for our call sites.
+#[derive(Debug)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn unavailable(what: &str) -> XlaError {
+    XlaError(format!(
+        "{what}: XLA/PJRT backend not linked in this build (offline stub); \
+         use a native engine (e.g. `fused`) or link the `xla` crate"
+    ))
+}
+
+/// Stub PJRT client: constructs so artifact registries can be opened and
+/// inspected without the backend present.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self, XlaError> {
+        Ok(PjRtClient)
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Stub HLO module handle.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<Self, XlaError> {
+        Err(unavailable(&format!("parsing HLO text {path}")))
+    }
+}
+
+/// Stub computation handle.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// Stub loaded executable (never actually constructed by the stub client).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Stub device buffer.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Stub host literal.
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[f64]) -> Self {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, XlaError> {
+        Ok(Literal)
+    }
+
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal), XlaError> {
+        Err(unavailable("Literal::to_tuple2"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
+        Err(unavailable("Literal::to_vec"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_constructs_but_compile_paths_error() {
+        let client = PjRtClient::cpu().unwrap();
+        assert!(HloModuleProto::from_text_file("/tmp/x.hlo.txt").is_err());
+        assert!(client.compile(&XlaComputation).is_err());
+        let e = PjRtLoadedExecutable.execute::<Literal>(&[]).unwrap_err();
+        assert!(e.to_string().contains("stub"));
+    }
+}

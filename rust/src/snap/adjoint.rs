@@ -13,7 +13,7 @@
 //! * **V3 layout_atom_fastest** — Ulisttot/Ylist stored atom-fastest
 //!   ([j*num_atoms + atom]) instead of j-fastest ([atom*idxu + j]).  On the
 //!   GPU this coalesces compute_Y; on this CPU the effect typically
-//!   *inverts* (DESIGN.md section 2) — the harness reports what it measures.
+//!   *inverts* on cache-based CPUs — the harness reports what it measures.
 //! * **V4 pair_atom_fastest** — flattened pair index unflattened
 //!   atom-fastest (pair = nbor*A + atom) instead of neighbor-fastest.
 //! * **V5 collapsed_y** — compute_Y consumes the precomputed flat

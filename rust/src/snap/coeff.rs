@@ -2,8 +2,8 @@
 //!
 //! The real tungsten coefficient file (W_2940_2017.2.snapcoeff) is not
 //! redistributable inside this environment, so the default potential uses
-//! deterministic *synthetic* coefficients (documented substitution,
-//! DESIGN.md section 2): energies/forces are linear in beta, so every
+//! deterministic *synthetic* coefficients (a documented substitution):
+//! energies/forces are linear in beta, so every
 //! correctness property and every performance result is beta-independent.
 //! The parser accepts the genuine LAMMPS format, so a real file drops in.
 
@@ -108,7 +108,7 @@ impl SnapCoeffs {
                             | ("chemflag", 0) | ("bnormflag", 0) | ("wselfallflag", 0)
                     );
                     if !default_ok {
-                        bail!("unsupported {key} = {val} (see DESIGN.md scope)");
+                        bail!("unsupported {key} = {val} (single-element SNAP only)");
                     }
                 }
                 _ => bail!("unknown snapparam key {key}"),

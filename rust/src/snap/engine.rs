@@ -1,9 +1,9 @@
 //! The `ForceEngine` abstraction every SNAP implementation satisfies.
 //!
 //! Engines consume the same padded tile representation the AOT model uses
-//! (DESIGN.md: "Model I/O contract"), so the coordinator can route a tile to
-//! a native Rust engine or to the PJRT executable interchangeably, and the
-//! test-suite can diff them element-for-element.
+//! (see README.md, "Model I/O contract"), so the coordinator can route a
+//! tile to a native Rust engine or to the PJRT executable interchangeably,
+//! and the test-suite can diff them element-for-element.
 
 use super::memory::MemoryFootprint;
 
@@ -35,6 +35,65 @@ impl<'a> TileInput<'a> {
         self.mask[atom * self.num_nbor + nbor] > 0.5
     }
 }
+
+/// An owned tile — the borrow-free twin of [`TileInput`], used where tiles
+/// must cross thread boundaries (the force server's work queue).
+#[derive(Clone, Debug)]
+pub struct OwnedTile {
+    pub num_atoms: usize,
+    pub num_nbor: usize,
+    /// Row-major (atom, neighbor, xyz): len = num_atoms*num_nbor*3.
+    pub rij: Vec<f64>,
+    /// 1.0 = real neighbor, 0.0 = padding; len = num_atoms*num_nbor.
+    pub mask: Vec<f64>,
+}
+
+impl OwnedTile {
+    /// Borrow as the engine-facing input view.
+    pub fn as_input(&self) -> TileInput<'_> {
+        TileInput {
+            num_atoms: self.num_atoms,
+            num_nbor: self.num_nbor,
+            rij: &self.rij,
+            mask: &self.mask,
+        }
+    }
+
+    /// Shape check mirroring [`TileInput::validate`], returning an error
+    /// instead of panicking (server-side validation of client frames).
+    ///
+    /// Multiplications are checked: a hostile frame with huge dimensions
+    /// must be rejected here, not wrap in release mode and panic a worker.
+    pub fn check_shape(&self) -> Result<(), String> {
+        let rows = self
+            .num_atoms
+            .checked_mul(self.num_nbor)
+            .ok_or("num_atoms * num_nbor overflows")?;
+        let rij_len = rows.checked_mul(3).ok_or("num_atoms * num_nbor * 3 overflows")?;
+        if self.rij.len() != rij_len {
+            return Err(format!(
+                "rij has {} values, expected num_atoms*num_nbor*3 = {rij_len}",
+                self.rij.len()
+            ));
+        }
+        if self.mask.len() != rows {
+            return Err(format!(
+                "mask has {} values, expected num_atoms*num_nbor = {rows}",
+                self.mask.len()
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Shared constructor for per-worker engine instances.
+///
+/// The serving pipeline gives every worker thread its *own* engine (engines
+/// carry mutable scratch state), all built from one factory that shares the
+/// immutable inputs — `Arc<SnapIndex>`, params, coefficients — so N workers
+/// don't pay N index rebuilds and never contend on engine state.
+pub type EngineFactory =
+    std::sync::Arc<dyn Fn() -> anyhow::Result<Box<dyn ForceEngine>> + Send + Sync>;
 
 /// Per-tile result: per-atom energies and per-pair force contractions.
 #[derive(Clone, Debug, Default)]
@@ -84,5 +143,23 @@ mod tests {
         let rij = vec![0.0; 5];
         let mask = vec![1.0; 2];
         TileInput { num_atoms: 1, num_nbor: 2, rij: &rij, mask: &mask }.validate();
+    }
+
+    #[test]
+    fn owned_tile_checks_shape() {
+        let good = OwnedTile {
+            num_atoms: 1,
+            num_nbor: 2,
+            rij: vec![0.0; 6],
+            mask: vec![1.0, 0.0],
+        };
+        assert!(good.check_shape().is_ok());
+        let view = good.as_input();
+        view.validate();
+        assert_eq!(view.num_atoms, 1);
+        let bad = OwnedTile { rij: vec![0.0; 5], ..good.clone() };
+        assert!(bad.check_shape().unwrap_err().contains("rij"));
+        let bad2 = OwnedTile { mask: vec![1.0; 3], ..good };
+        assert!(bad2.check_shape().unwrap_err().contains("mask"));
     }
 }

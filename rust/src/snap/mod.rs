@@ -30,6 +30,6 @@ pub mod params;
 pub mod variants;
 pub mod wigner;
 
-pub use engine::{ForceEngine, TileInput, TileOutput};
+pub use engine::{EngineFactory, ForceEngine, OwnedTile, TileInput, TileOutput};
 pub use indices::SnapIndex;
 pub use params::SnapParams;

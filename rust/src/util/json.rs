@@ -270,6 +270,30 @@ impl<'a> Parser<'a> {
     }
 }
 
+/// Escape and quote `s` as a JSON string literal (the writer-side dual of
+/// the parser's string reader): `"` and `\` are escaped, control characters become
+/// `\n`/`\t`/`\r` or `\u00XX`.  Anything interpolated into hand-built JSON
+/// (notably server error replies) must go through this.
+pub fn quote(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
 /// Minimal JSON writer for report emission.
 pub fn write_obj(pairs: &[(&str, String)]) -> String {
     let body: Vec<String> =
@@ -314,5 +338,22 @@ mod tests {
     #[test]
     fn unicode_escape() {
         assert_eq!(Json::parse(r#""A""#).unwrap(), Json::Str("A".into()));
+    }
+
+    #[test]
+    fn quote_escapes_specials() {
+        assert_eq!(quote("plain"), "\"plain\"");
+        assert_eq!(quote("a\"b"), "\"a\\\"b\"");
+        assert_eq!(quote("back\\slash"), "\"back\\\\slash\"");
+        assert_eq!(quote("line\nbreak\ttab"), "\"line\\nbreak\\ttab\"");
+        assert_eq!(quote("\u{1}"), "\"\\u0001\"");
+    }
+
+    #[test]
+    fn quote_roundtrips_through_parser() {
+        for s in ["", "plain", "q\"uote", "b\\s", "n\nl", "mix\t\"\\\r\n", "ünïcode"] {
+            let parsed = Json::parse(&quote(s)).unwrap();
+            assert_eq!(parsed, Json::Str(s.to_string()), "roundtrip of {s:?}");
+        }
     }
 }

@@ -6,7 +6,10 @@
 //! `REPRO_THREADS > 1` is set, keeping the coordinator structurally parallel
 //! exactly where the paper's Kokkos `parallel_for` sits.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
 
 /// Number of worker threads to use (env `REPRO_THREADS`, default = number of
 /// available cores).
@@ -60,10 +63,121 @@ pub fn parallel_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, f: F) -> Vec<T>
     out.into_iter().map(|x| x.unwrap()).collect()
 }
 
+/// Result of a [`BoundedQueue::recv_timeout`].
+#[derive(Debug)]
+pub enum RecvTimeout<T> {
+    /// An item was dequeued.
+    Item(T),
+    /// The deadline passed with the queue still empty (but open).
+    TimedOut,
+    /// The queue is closed and fully drained.
+    Closed,
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded multi-producer/multi-consumer channel built on
+/// `Mutex` + `Condvar` (std-only stand-in for crossbeam's bounded channel).
+///
+/// `send` blocks while the queue is full — this is the serving pipeline's
+/// backpressure: a slow worker pool propagates all the way back to the
+/// client sockets instead of buffering unboundedly.  After `close()`,
+/// senders get their item back as an `Err` and receivers drain the
+/// remaining items before seeing `None`.
+pub struct BoundedQueue<T> {
+    state: Mutex<QueueState<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            state: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Enqueue, blocking while full.  Returns the item back if closed.
+    pub fn send(&self, item: T) -> Result<(), T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(item);
+            }
+            if st.items.len() < self.capacity {
+                st.items.push_back(item);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Dequeue, blocking while empty.  `None` once closed and drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Dequeue with a deadline; distinguishes "empty for now" from "closed".
+    pub fn recv_timeout(&self, timeout: Duration) -> RecvTimeout<T> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.not_full.notify_one();
+                return RecvTimeout::Item(item);
+            }
+            if st.closed {
+                return RecvTimeout::Closed;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return RecvTimeout::TimedOut;
+            }
+            let (guard, _res) = self.not_empty.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
+    /// Close the queue and wake all blocked senders/receivers.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicU64;
+    use std::sync::Arc;
 
     #[test]
     fn covers_all_indices_once() {
@@ -84,5 +198,88 @@ mod tests {
     fn empty_is_fine() {
         parallel_for(0, |_| panic!("must not run"));
         assert!(parallel_map(0, |i| i).is_empty());
+    }
+
+    #[test]
+    fn bounded_queue_fifo_and_close() {
+        let q = BoundedQueue::new(4);
+        q.send(1).unwrap();
+        q.send(2).unwrap();
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.recv(), Some(1));
+        q.close();
+        // close drains remaining items first, then reports None
+        assert_eq!(q.recv(), Some(2));
+        assert_eq!(q.recv(), None);
+        // sends after close hand the item back
+        assert_eq!(q.send(9), Err(9));
+    }
+
+    #[test]
+    fn bounded_queue_blocks_full_sender_until_recv() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.send(10).unwrap();
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.send(20));
+        // the sender must be parked on the full queue; free one slot
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.recv(), Some(10));
+        h.join().unwrap().unwrap();
+        assert_eq!(q.recv(), Some(20));
+    }
+
+    #[test]
+    fn bounded_queue_mpmc_delivers_every_item_once() {
+        let q = Arc::new(BoundedQueue::new(8));
+        let total = 400usize;
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..total / 4 {
+                        q.send(p * (total / 4) + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let seen = Arc::new(Mutex::new(vec![0u8; total]));
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = q.clone();
+                let seen = seen.clone();
+                std::thread::spawn(move || {
+                    while let Some(i) = q.recv() {
+                        seen.lock().unwrap()[i] += 1;
+                    }
+                })
+            })
+            .collect();
+        for h in producers {
+            h.join().unwrap();
+        }
+        q.close();
+        for h in consumers {
+            h.join().unwrap();
+        }
+        assert!(seen.lock().unwrap().iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn bounded_queue_recv_timeout_distinguishes_states() {
+        let q: BoundedQueue<u8> = BoundedQueue::new(2);
+        match q.recv_timeout(Duration::from_millis(5)) {
+            RecvTimeout::TimedOut => {}
+            other => panic!("expected TimedOut, got {other:?}"),
+        }
+        q.send(3).unwrap();
+        match q.recv_timeout(Duration::from_millis(5)) {
+            RecvTimeout::Item(3) => {}
+            other => panic!("expected Item(3), got {other:?}"),
+        }
+        q.close();
+        match q.recv_timeout(Duration::from_millis(5)) {
+            RecvTimeout::Closed => {}
+            other => panic!("expected Closed, got {other:?}"),
+        }
     }
 }

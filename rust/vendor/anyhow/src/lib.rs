@@ -1,0 +1,215 @@
+//! Vendored minimal subset of the `anyhow` API.
+//!
+//! This repository builds fully offline (no crates.io), so we carry the
+//! slice of anyhow we actually use in-tree: `Error` with a context chain,
+//! `Result`, the `Context` extension trait for `Result`/`Option`, and the
+//! `anyhow!` / `bail!` / `ensure!` macros.  Display follows anyhow's
+//! convention: `{}` prints the outermost context, `{:#}` prints the whole
+//! chain separated by `: `.
+
+use std::fmt;
+
+/// An error with a chain of human-readable context frames.
+///
+/// Deliberately does **not** implement `std::error::Error`, mirroring the
+/// real anyhow: that keeps the blanket `From<E: std::error::Error>` impl
+/// below coherent with core's reflexive `From<T> for T`.
+pub struct Error(Box<ErrorImpl>);
+
+struct ErrorImpl {
+    msg: String,
+    cause: Option<Error>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error(Box::new(ErrorImpl { msg: message.to_string(), cause: None }))
+    }
+
+    /// Wrap `self` in an outer context frame.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error(Box::new(ErrorImpl { msg: context.to_string(), cause: Some(self) }))
+    }
+
+    /// The outermost message (what `{}` prints).
+    pub fn root_message(&self) -> &str {
+        &self.0.msg
+    }
+
+    /// The full `outer: inner: root` chain as one string.
+    pub fn chain_string(&self) -> String {
+        format!("{self:#}")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0.msg)?;
+        if f.alternate() {
+            let mut cause = &self.0.cause;
+            while let Some(e) = cause {
+                write!(f, ": {}", e.0.msg)?;
+                cause = &e.0.cause;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0.msg)?;
+        let mut cause = &self.0.cause;
+        if cause.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cause {
+            write!(f, "\n    {}", e.0.msg)?;
+            cause = &e.0.cause;
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        // Flatten the std source chain into context frames so nothing is
+        // lost when the typed error is erased.
+        let mut frames = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            frames.push(s.to_string());
+            src = s.source();
+        }
+        let mut err: Option<Error> = None;
+        for msg in frames.into_iter().rev() {
+            err = Some(Error(Box::new(ErrorImpl { msg, cause: err })));
+        }
+        err.expect("at least one frame")
+    }
+}
+
+/// `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to `Result`s and `Option`s (anyhow's extension trait).
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T, Error> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($arg)+);
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn context_chains_and_displays() {
+        let e: Error = Err::<(), _>(io_err()).context("reading file").unwrap_err();
+        assert_eq!(format!("{e}"), "reading file");
+        assert_eq!(format!("{e:#}"), "reading file: gone");
+    }
+
+    #[test]
+    fn option_context() {
+        let e = None::<u8>.context("missing key").unwrap_err();
+        assert_eq!(format!("{e}"), "missing key");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            let _: f64 = "nope".parse()?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn macros_work() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative: {x}");
+            if x == 7 {
+                bail!("unlucky {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(7).unwrap_err()), "unlucky 7");
+        assert_eq!(format!("{}", f(-2).unwrap_err()), "negative: -2");
+        let e = anyhow!("plain {}", 5);
+        assert_eq!(format!("{e}"), "plain 5");
+    }
+
+    #[test]
+    fn error_context_on_anyhow_result() {
+        let r: Result<()> = Err(anyhow!("root"));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: root");
+    }
+}
