@@ -13,6 +13,7 @@
 //! neighborhoods with `--nbor` neighbor slots, so runs are reproducible and
 //! the server's batch coalescer gets mergeable traffic.
 
+use repro::util::json::Json;
 use repro::util::XorShift;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -162,7 +163,12 @@ fn main() -> anyhow::Result<()> {
         per_conn_secs.iter().cloned().fold(0.0f64, f64::max)
     );
 
-    // pull the server's own pipeline counters
+    // pull the server's own pipeline counters; the per-batch atom shape
+    // (dispatches, mean/max atoms per dispatch) makes the coalescer and the
+    // shard-path routing observable from the client side
+    let mut dispatches = 0u64;
+    let mut atoms_computed = 0u64;
+    let mut batch_atoms_max = 0u64;
     if let Ok(conn) = TcpStream::connect(&args.addr) {
         let mut writer = conn.try_clone()?;
         let mut reader = BufReader::new(conn);
@@ -170,14 +176,42 @@ fn main() -> anyhow::Result<()> {
         let mut line = String::new();
         reader.read_line(&mut line)?;
         println!("# server stats: {}", line.trim());
+        if let Ok(j) = Json::parse(line.trim()) {
+            if let Some(s) = j.get("stats") {
+                let get = |k: &str| {
+                    s.get(k).and_then(Json::as_usize).unwrap_or(0) as u64
+                };
+                dispatches = get("jobs_dispatched");
+                atoms_computed = get("atoms_computed");
+                batch_atoms_max = get("batch_atoms_max");
+            }
+        }
     }
+    let atoms_per_dispatch = if dispatches > 0 {
+        atoms_computed as f64 / dispatches as f64
+    } else {
+        0.0
+    };
+    println!(
+        "# batch shape: {dispatches} dispatches, {atoms_per_dispatch:.2} atoms/dispatch \
+         mean, {batch_atoms_max} max"
+    );
 
     if let Some(path) = &args.out {
         let json = format!(
             "{{\"bench\": \"serve\", \"conns\": {}, \"requests_per_conn\": {}, \
              \"num_nbor\": {}, \"total_requests\": {}, \"wall_s\": {:.6}, \
-             \"req_per_s\": {:.2}}}\n",
-            args.conns, args.requests, args.nbor, total as u64, wall, rps
+             \"req_per_s\": {:.2}, \"dispatches\": {}, \
+             \"atoms_per_dispatch_mean\": {:.3}, \"batch_atoms_max\": {}}}\n",
+            args.conns,
+            args.requests,
+            args.nbor,
+            total as u64,
+            wall,
+            rps,
+            dispatches,
+            atoms_per_dispatch,
+            batch_atoms_max
         );
         std::fs::write(path, json)?;
         println!("# wrote {path}");

@@ -11,6 +11,7 @@
 //! make artifacts && cargo run --release --example md_tungsten
 //! # smaller/faster:      ... md_tungsten -- --cells 5 --steps 40
 //! # native engine:       ... md_tungsten -- --engine fused
+//! # intra-tile shards:   ... md_tungsten -- --engine fused --shards 4
 //! ```
 //!
 //! Results are recorded in the experiment reports (`repro experiments`).
@@ -37,6 +38,7 @@ fn main() -> anyhow::Result<()> {
     let steps: usize = arg(&args, "--steps", 120);
     let engine_name: String = arg(&args, "--engine", "xla:snap_2j8".to_string());
     let artifacts: String = arg(&args, "--artifacts", "artifacts".to_string());
+    let shards: usize = arg(&args, "--shards", 1).max(1);
 
     let twojmax = 8;
     let params = SnapParams::with_twojmax(twojmax);
@@ -49,10 +51,15 @@ fn main() -> anyhow::Result<()> {
     let mut rng = XorShift::new(87287);
     structure.seed_velocities(300.0, &mut rng);
 
-    println!("# md_tungsten: {natoms} atoms bcc W, 2J={twojmax}, engine={engine_name}");
-    let engine =
-        repro::config::build_engine(&engine_name, twojmax, coeffs.beta.clone(), &artifacts)?;
-    let field = ForceField::new(engine, 32, 32);
+    println!(
+        "# md_tungsten: {natoms} atoms bcc W, 2J={twojmax}, engine={engine_name}, \
+         shards={shards}"
+    );
+    let factory =
+        repro::config::engine_factory(&engine_name, twojmax, coeffs.beta.clone(), &artifacts)?;
+    // with sharding, widen the tile so every shard gets a full serial
+    // tile's worth of atoms per dispatch
+    let field = ForceField::from_factory(&factory, shards, 32 * shards, 32)?;
     let mut sim = Simulation::new(
         structure,
         field,

@@ -1,48 +1,144 @@
 //! Variant explorer: run the paper's full optimization ladder on one
-//! workload and print the speedup table — the interactive version of
-//! Figs. 2/3.
+//! workload — optionally × a shard-count sweep (the grind benchmark
+//! trajectory) — and print the speedup table, the interactive version of
+//! Figs. 2/3 extended with intra-tile parallelism.
 //!
 //! ```bash
 //! cargo run --release --example variant_explorer -- [twojmax] [cells]
-//! # e.g.   ... variant_explorer -- 8 6     (432 atoms, 2J=8)
+//! cargo run --release --example variant_explorer -- --twojmax 8 --cells 6 \
+//!     --shards 1,2,4 --grind-out BENCH_grind.json
 //! ```
 
-use repro::bench::{grind, Workload};
+use repro::bench::{grind_json, grind_sweep, Workload};
 use repro::snap::coeff::SnapCoeffs;
 use repro::snap::variants::Variant;
 use repro::snap::{SnapIndex, SnapParams};
 use std::sync::Arc;
 
-fn main() -> anyhow::Result<()> {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    let twojmax: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(8);
-    let cells: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(5);
+struct Args {
+    twojmax: usize,
+    cells: usize,
+    shards: Vec<usize>,
+    warmup: usize,
+    reps: usize,
+    grind_out: Option<String>,
+}
 
-    let params = SnapParams::with_twojmax(twojmax);
-    let idx = Arc::new(SnapIndex::new(twojmax));
-    let coeffs = SnapCoeffs::synthetic(twojmax, idx.idxb_max, 42);
-    let w = Workload::tungsten(cells, params.rcut());
-    println!(
-        "# ladder: 2J={twojmax}, {} atoms, {} neighbors/atom\n",
-        w.num_atoms, w.num_nbor
+fn value<'a>(argv: &'a [String], i: usize) -> anyhow::Result<&'a str> {
+    argv.get(i + 1)
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow::anyhow!("{} needs a value", argv[i]))
+}
+
+fn parse_args() -> anyhow::Result<Args> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut args = Args {
+        twojmax: 8,
+        cells: 5,
+        shards: vec![1],
+        warmup: 1,
+        reps: 3,
+        grind_out: None,
+    };
+    let mut positional = 0usize;
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--twojmax" => {
+                args.twojmax = value(&argv, i)?.parse()?;
+                i += 2;
+            }
+            "--cells" => {
+                args.cells = value(&argv, i)?.parse()?;
+                i += 2;
+            }
+            "--shards" => {
+                args.shards = value(&argv, i)?
+                    .split(',')
+                    .map(|s| s.trim().parse::<usize>())
+                    .collect::<Result<_, _>>()?;
+                i += 2;
+            }
+            "--warmup" => {
+                args.warmup = value(&argv, i)?.parse()?;
+                i += 2;
+            }
+            "--reps" => {
+                args.reps = value(&argv, i)?.parse()?;
+                i += 2;
+            }
+            "--grind-out" => {
+                args.grind_out = Some(value(&argv, i)?.to_string());
+                i += 2;
+            }
+            s if !s.starts_with("--") => {
+                match positional {
+                    0 => args.twojmax = s.parse()?,
+                    1 => args.cells = s.parse()?,
+                    _ => anyhow::bail!("unexpected positional argument `{s}`"),
+                }
+                positional += 1;
+                i += 1;
+            }
+            other => anyhow::bail!(
+                "unknown flag {other} (usage: variant_explorer [twojmax] [cells] \
+                 [--twojmax J] [--cells C] [--shards 1,2,4] [--warmup N] [--reps N] \
+                 [--grind-out FILE])"
+            ),
+        }
+    }
+    anyhow::ensure!(
+        !args.shards.is_empty() && args.shards.iter().all(|&s| s >= 1),
+        "--shards needs a comma-separated list of counts >= 1"
     );
-    println!("{:<18} {:>12} {:>16} {:>10}  memory@2000x26", "variant", "ms/step", "Katom-steps/s", "speedup");
+    Ok(args)
+}
 
-    let mut base = None;
-    for v in Variant::ladder() {
-        let mut eng = v.build(params, idx.clone(), coeffs.beta.clone());
-        let fp = eng.footprint(2000, 26);
-        let r = grind(eng.as_mut(), &w, 1, 3);
-        let b = *base.get_or_insert(r.secs_per_step);
+fn main() -> anyhow::Result<()> {
+    let args = parse_args()?;
+    let params = SnapParams::with_twojmax(args.twojmax);
+    let idx = Arc::new(SnapIndex::new(args.twojmax));
+    let coeffs = SnapCoeffs::synthetic(args.twojmax, idx.idxb_max, 42);
+    let w = Workload::tungsten(args.cells, params.rcut());
+    println!(
+        "# ladder grind: 2J={}, {} atoms, {} neighbors/atom, shards {:?}\n",
+        args.twojmax, w.num_atoms, w.num_nbor, args.shards
+    );
+
+    let points = grind_sweep(
+        Variant::ladder(),
+        &args.shards,
+        args.twojmax,
+        &coeffs.beta,
+        &w,
+        args.warmup,
+        args.reps,
+    )?;
+
+    println!(
+        "{:<18} {:>7} {:>12} {:>14} {:>16} {:>10}",
+        "variant", "shards", "ms/step", "us/atom-step", "Katom-steps/s", "speedup"
+    );
+    let base = points[0].result.secs_per_step;
+    for p in &points {
         println!(
-            "{:<18} {:>12.2} {:>16.2} {:>9.2}x  {:.3} GiB",
-            v.label(),
-            r.secs_per_step * 1e3,
-            r.katom_steps_per_sec,
-            b / r.secs_per_step,
-            fp.gib()
+            "{:<18} {:>7} {:>12.2} {:>14.3} {:>16.2} {:>9.2}x",
+            p.variant,
+            p.shards,
+            p.result.secs_per_step * 1e3,
+            p.result.us_per_atom_step,
+            p.result.katom_steps_per_sec,
+            base / p.result.secs_per_step
         );
     }
-    println!("\n(paper, V100: ladder ends at 7.5x for 2J8 / 8.9x for 2J14;\n section VI fused kernels reach 19.6x / 21.7x)");
+
+    if let Some(path) = &args.grind_out {
+        std::fs::write(path, grind_json(&w, &points))?;
+        println!("\n# grind trajectory written to {path}");
+    }
+    println!(
+        "\n(paper, V100: ladder ends at 7.5x for 2J8 / 8.9x for 2J14;\n \
+         section VI fused kernels reach 19.6x / 21.7x)"
+    );
     Ok(())
 }

@@ -6,8 +6,12 @@
 //! `harness = false`.
 
 use crate::md::{lattice, NeighborList, Structure};
-use crate::snap::engine::{ForceEngine, TileInput};
+use crate::snap::engine::{EngineFactory, ForceEngine, TileInput};
+use crate::snap::sharded::build_sharded;
+use crate::snap::variants::Variant;
+use crate::snap::{SnapIndex, SnapParams};
 use crate::util::Stopwatch;
+use std::sync::Arc;
 
 /// Timing statistics over repeats.
 #[derive(Clone, Copy, Debug)]
@@ -138,6 +142,74 @@ pub fn grind(engine: &mut dyn ForceEngine, w: &Workload, warmup: usize, reps: us
     }
 }
 
+/// One point of the grind sweep: a (variant × shard count) measurement.
+#[derive(Clone, Debug)]
+pub struct GrindPoint {
+    pub variant: String,
+    pub shards: usize,
+    pub result: GrindResult,
+}
+
+/// Sweep (variant × shard count) over one workload — the engine-level perf
+/// trajectory behind `BENCH_grind.json`.
+///
+/// Each sharded engine is built from a per-variant factory so every shard
+/// owns private scratch; `shards == 1` measures the plain serial engine.
+pub fn grind_sweep(
+    variants: &[Variant],
+    shard_counts: &[usize],
+    twojmax: usize,
+    beta: &[f64],
+    w: &Workload,
+    warmup: usize,
+    reps: usize,
+) -> anyhow::Result<Vec<GrindPoint>> {
+    let params = SnapParams::with_twojmax(twojmax);
+    let idx = Arc::new(SnapIndex::new(twojmax));
+    let mut points = Vec::with_capacity(variants.len() * shard_counts.len());
+    for &v in variants {
+        let factory: EngineFactory = {
+            let idx = idx.clone();
+            let beta = beta.to_vec();
+            Arc::new(move || Ok(v.build(params, idx.clone(), beta.clone())))
+        };
+        for &shards in shard_counts {
+            let mut engine =
+                build_sharded(&factory, shards, crate::snap::sharded::DEFAULT_MIN_ATOMS_PER_SHARD)?;
+            let result = grind(engine.as_mut(), w, warmup, reps);
+            points.push(GrindPoint { variant: v.label().to_string(), shards, result });
+        }
+    }
+    Ok(points)
+}
+
+/// Serialize sweep points as the `BENCH_grind.json` trajectory record
+/// (hand-rolled JSON: the build is offline, labels are plain ASCII).
+pub fn grind_json(w: &Workload, points: &[GrindPoint]) -> String {
+    let entries: Vec<String> = points
+        .iter()
+        .map(|p| {
+            format!(
+                "{{\"variant\": \"{}\", \"shards\": {}, \"us_per_atom_step\": {:.4}, \
+                 \"katom_steps_per_sec\": {:.3}, \"ms_per_step\": {:.4}}}",
+                p.variant,
+                p.shards,
+                p.result.us_per_atom_step,
+                p.result.katom_steps_per_sec,
+                p.result.secs_per_step * 1e3,
+            )
+        })
+        .collect();
+    format!(
+        "{{\"bench\": \"grind\", \"atoms\": {}, \"num_nbor\": {}, \"threads\": {}, \
+         \"points\": [{}]}}\n",
+        w.num_atoms,
+        w.num_nbor,
+        crate::util::parallel::num_threads(),
+        entries.join(", ")
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,5 +229,30 @@ mod tests {
         assert_eq!(w.num_atoms, 250);
         assert_eq!(w.num_nbor, 26); // the paper's 26 neighbors
         assert_eq!(w.mask.iter().filter(|&&m| m > 0.0).count(), 250 * 26);
+    }
+
+    #[test]
+    fn grind_sweep_covers_grid_and_serializes() {
+        let w = Workload::tungsten(4, 4.73442);
+        let idx = SnapIndex::new(2);
+        let beta = vec![0.05; idx.idxb_max];
+        let variants = [Variant::V5, Variant::Fused];
+        let points = grind_sweep(&variants, &[1, 2], 2, &beta, &w, 0, 1).unwrap();
+        assert_eq!(points.len(), 4);
+        assert!(points.iter().all(|p| p.result.us_per_atom_step > 0.0));
+        assert_eq!(points[0].variant, "V5");
+        assert_eq!(points[0].shards, 1);
+        assert_eq!(points[3].variant, "VI-fused");
+        assert_eq!(points[3].shards, 2);
+        let json = grind_json(&w, &points);
+        let parsed = crate::util::json::Json::parse(json.trim()).expect("grind json must parse");
+        assert_eq!(
+            parsed.get("bench").and_then(crate::util::json::Json::as_str),
+            Some("grind")
+        );
+        assert_eq!(
+            parsed.get("atoms").and_then(crate::util::json::Json::as_usize),
+            Some(w.num_atoms)
+        );
     }
 }

@@ -153,6 +153,33 @@ pub fn engine_factory(
     Ok(Arc::new(move || Ok(variant.build(params, idx.clone(), beta.clone()))))
 }
 
+/// [`engine_factory`] with intra-tile sharding — the `--shards` knob.
+///
+/// When `shards > 1` every engine the factory produces is a
+/// [`ShardedEngine`](crate::snap::sharded::ShardedEngine) wrapping `shards`
+/// private inner engines, so one large tile fans out across cores; with
+/// `shards <= 1` this is exactly [`engine_factory`].  Validation still
+/// happens eagerly, in the inner factory.
+pub fn sharded_engine_factory(
+    name: &str,
+    twojmax: usize,
+    beta: Vec<f64>,
+    artifacts_dir: &str,
+    shards: usize,
+) -> Result<EngineFactory> {
+    let inner = engine_factory(name, twojmax, beta, artifacts_dir)?;
+    if shards <= 1 {
+        return Ok(inner);
+    }
+    Ok(Arc::new(move || {
+        crate::snap::sharded::build_sharded(
+            &inner,
+            shards,
+            crate::snap::sharded::DEFAULT_MIN_ATOMS_PER_SHARD,
+        )
+    }))
+}
+
 /// Resolve coefficients from an input-script coefficient source.
 pub fn resolve_coeffs(
     source: &crate::io::script::CoeffSource,
@@ -247,5 +274,34 @@ mod tests {
     #[test]
     fn engine_factory_checks_beta_length() {
         assert!(build_engine("fused", 8, vec![0.0; 3], "artifacts").is_err());
+    }
+
+    #[test]
+    fn sharded_factory_wraps_and_matches_serial() {
+        let idx = SnapIndex::new(2);
+        let beta = vec![0.1; idx.idxb_max];
+        let serial_f =
+            sharded_engine_factory("fused", 2, beta.clone(), "artifacts", 1).unwrap();
+        let sharded_f =
+            sharded_engine_factory("fused", 2, beta, "artifacts", 3).unwrap();
+        let mut serial = serial_f().unwrap();
+        let mut sharded = sharded_f().unwrap();
+        assert_eq!(serial.name(), "VI-fused");
+        assert_eq!(sharded.name(), "sharded3x-VI-fused");
+        let rij = vec![
+            1.5, 0.0, 0.0, 0.0, 1.5, 0.0, 1.1, 1.1, 0.0, 0.0, 0.0, 1.5, 1.5, 1.5, 0.0,
+            0.9, 0.0, 0.9, 1.2, 0.3, 0.0, 0.0, 1.2, 0.3,
+        ];
+        let mask = vec![1.0; 8];
+        let t = crate::snap::TileInput { num_atoms: 4, num_nbor: 2, rij: &rij, mask: &mask };
+        let a = serial.compute(&t);
+        let b = sharded.compute(&t);
+        assert_eq!(a.ei, b.ei);
+        assert_eq!(a.dedr, b.dedr);
+    }
+
+    #[test]
+    fn sharded_factory_validates_eagerly() {
+        assert!(sharded_engine_factory("warp-drive", 2, vec![0.0; 5], "artifacts", 4).is_err());
     }
 }

@@ -2,7 +2,8 @@
 //! server uses to merge small requests into one engine dispatch.
 
 use crate::md::{NeighborList, Structure};
-use crate::snap::engine::{ForceEngine, OwnedTile, TileInput, TileOutput};
+use crate::snap::engine::{EngineFactory, ForceEngine, OwnedTile, TileInput, TileOutput};
+use crate::snap::sharded::{build_sharded, DEFAULT_MIN_ATOMS_PER_SHARD};
 use crate::util::StageTimes;
 
 /// Packs several small tiles that share one neighbor width into a single
@@ -111,6 +112,21 @@ pub struct ForceField {
 impl ForceField {
     pub fn new(engine: Box<dyn ForceEngine>, tile_atoms: usize, tile_nbor: usize) -> Self {
         Self { engine, tile_atoms, tile_nbor, times: StageTimes::new() }
+    }
+
+    /// Build from an engine factory with optional intra-tile sharding:
+    /// `shards > 1` wraps every tile dispatch in a
+    /// [`crate::snap::sharded::ShardedEngine`], so one MD force evaluation
+    /// spreads its tile across cores (the `--shards` knob of `repro run` /
+    /// `md_tungsten`).  Sharding is bit-invisible to the physics.
+    pub fn from_factory(
+        factory: &EngineFactory,
+        shards: usize,
+        tile_atoms: usize,
+        tile_nbor: usize,
+    ) -> anyhow::Result<Self> {
+        let engine = build_sharded(factory, shards, DEFAULT_MIN_ATOMS_PER_SHARD)?;
+        Ok(Self::new(engine, tile_atoms, tile_nbor))
     }
 
     /// Evaluate energies/forces/virial for the whole system.

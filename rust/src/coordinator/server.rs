@@ -36,6 +36,7 @@
 
 use crate::coordinator::force::TileBatch;
 use crate::snap::engine::{EngineFactory, ForceEngine, OwnedTile, TileOutput};
+use crate::snap::sharded::build_sharded;
 use crate::util::json::{self, Json};
 use crate::util::parallel::{num_threads, BoundedQueue, RecvTimeout};
 use std::io::{BufRead, BufReader, Write};
@@ -58,6 +59,13 @@ pub struct ServeOptions {
     pub queue_depth: usize,
     /// Merged tiles never exceed this many atom rows.
     pub max_batch_atoms: usize,
+    /// Intra-tile shards per worker engine (`--shards`).  With `> 1` every
+    /// worker owns a [`crate::snap::sharded::ShardedEngine`], so a large
+    /// coalesced tile fans out across the shared thread pool instead of
+    /// pinning one core; tiles below [`SHARD_MIN_ATOMS`] per shard stay
+    /// serial.  Workers and shards multiply — pick `workers * shards`
+    /// around the core count (the CLI defaults workers to `cores / shards`).
+    pub shards: usize,
 }
 
 impl Default for ServeOptions {
@@ -67,9 +75,15 @@ impl Default for ServeOptions {
             batch_window: Duration::from_micros(100),
             queue_depth: 256,
             max_batch_atoms: 32,
+            shards: 1,
         }
     }
 }
+
+/// Fan-out floor for the server's sharded path: a dispatch must bring at
+/// least this many atoms per shard before a tile splits (single-atom
+/// requests never pay fork/join overhead).
+pub const SHARD_MIN_ATOMS: usize = crate::snap::sharded::DEFAULT_MIN_ATOMS_PER_SHARD;
 
 /// Monotonic counters for every pipeline stage, readable over the wire via
 /// `{"cmd": "stats"}`.
@@ -97,8 +111,14 @@ pub struct ServerStats {
     pub compute_ns: AtomicU64,
     /// Total atom rows computed.
     pub atoms_computed: AtomicU64,
+    /// Largest single dispatch, in atom rows — together with
+    /// `atoms_computed / jobs_dispatched` this makes the shard-path routing
+    /// observable over the wire.
+    pub batch_atoms_max: AtomicU64,
     /// Worker-pool size (set once at startup).
     pub workers: AtomicU64,
+    /// Intra-tile shards per worker engine (set once at startup).
+    pub shards: AtomicU64,
 }
 
 impl ServerStats {
@@ -107,6 +127,7 @@ impl ServerStats {
         let us = |v: &AtomicU64| (v.load(Ordering::Relaxed) / 1_000).to_string();
         json::write_obj(&[
             ("workers", n(&self.workers)),
+            ("shards", n(&self.shards)),
             ("connections_total", n(&self.connections_total)),
             ("connections_active", n(&self.connections_active)),
             ("requests_total", n(&self.requests_total)),
@@ -119,6 +140,7 @@ impl ServerStats {
             ("queue_wait_us", us(&self.queue_wait_ns)),
             ("compute_us", us(&self.compute_ns)),
             ("atoms_computed", n(&self.atoms_computed)),
+            ("batch_atoms_max", n(&self.batch_atoms_max)),
         ])
     }
 }
@@ -169,13 +191,15 @@ pub fn serve_with_stats(
     listener.set_nonblocking(false)?;
     let workers = opts.workers.max(1);
     stats.workers.store(workers as u64, Ordering::Relaxed);
+    stats.shards.store(opts.shards.max(1) as u64, Ordering::Relaxed);
 
     // Build every engine up front so a bad factory fails `serve` at startup
-    // rather than inside a worker thread.
+    // rather than inside a worker thread.  With shards > 1 each worker owns
+    // a ShardedEngine: large coalesced tiles fan out over the shared pool.
     let mut engines: Vec<Box<dyn ForceEngine>> = Vec::with_capacity(workers);
     for _ in 0..workers {
         engines.push(
-            factory()
+            build_sharded(&factory, opts.shards, SHARD_MIN_ATOMS)
                 .map_err(|e| std::io::Error::other(format!("engine factory: {e:#}")))?,
         );
     }
@@ -395,6 +419,7 @@ fn note_compute(stats: &ServerStats, t0: Instant, atoms: usize) {
     stats.compute_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
     stats.jobs_dispatched.fetch_add(1, Ordering::Relaxed);
     stats.atoms_computed.fetch_add(atoms as u64, Ordering::Relaxed);
+    stats.batch_atoms_max.fetch_max(atoms as u64, Ordering::Relaxed);
 }
 
 /// Per-connection loop: read frames, submit, write replies in order.

@@ -2,11 +2,11 @@
 //! inspection, and the force server.
 //!
 //! ```text
-//! repro run --script examples/in.tungsten [--steps N] [--engine fused]
+//! repro run --script examples/in.tungsten [--steps N] [--engine fused] [--shards S]
 //! repro experiments --id all|table1|fig1..fig4|stages|memory [--quick]
 //! repro inspect [--artifacts artifacts]
 //! repro serve --port 7878 [--engine fused] [--twojmax 8] [--workers N]
-//!             [--batch-window-us 100] [--queue-depth 256]
+//!             [--batch-window-us 100] [--queue-depth 256] [--shards S]
 //! ```
 //!
 //! Argument parsing is hand-rolled (offline build: no clap); every flag is
@@ -96,12 +96,14 @@ fn print_help() {
          \n\
          commands:\n\
          \x20 run         --script <file> [--steps N] [--engine NAME] [--artifacts DIR]\n\
+         \x20             [--shards S] [--tile-atoms A] [--tile-nbor K]\n\
          \x20 experiments --id all|table1|fig1|fig2|fig3|fig4|stages|memory\n\
          \x20             [--quick] [--no-xla] [--cells8 N] [--cells14 N] [--reps N]\n\
          \x20             [--out FILE] [--artifacts DIR]\n\
          \x20 inspect     [--artifacts DIR]\n\
          \x20 serve       --port P [--engine NAME] [--twojmax J] [--workers N]\n\
          \x20             [--batch-window-us U] [--queue-depth D] [--max-batch-atoms A]\n\
+         \x20             [--shards S]\n\
          \n\
          engines: baseline V1..V7 fused aosoa pre-adjoint-atom pre-adjoint-pair\n\
          \x20        xla:snap_2j8 xla:snap_2j8_ref xla:snap_2j14 xla:snap_2j14_ref"
@@ -141,15 +143,22 @@ fn cmd_run(flags: &Flags) -> Result<()> {
         structure.seed_velocities(t, &mut rng);
     }
 
-    let engine = repro::config::build_engine(
+    let shards = flags.get_or("shards", 1usize)?.max(1);
+    let factory = repro::config::sharded_engine_factory(
         &script.engine,
         script.twojmax,
         coeffs.beta.clone(),
         &artifacts,
+        shards,
     )?;
-    let tile_atoms = flags.get_or("tile-atoms", 32usize)?;
+    // with sharding, default to tiles wide enough that every shard gets a
+    // full serial tile's worth of atoms
+    let tile_atoms = flags.get_or("tile-atoms", 32 * shards)?;
     let tile_nbor = flags.get_or("tile-nbor", 32usize)?;
-    let field = ForceField::new(engine, tile_atoms, tile_nbor);
+    let field = ForceField::new(factory()?, tile_atoms, tile_nbor);
+    if shards > 1 {
+        println!("# intra-tile sharding: {shards} shards, tile_atoms={tile_atoms}");
+    }
     let cfg = SimConfig {
         dt: script.timestep,
         neighbor_every: script.neigh_every,
@@ -218,13 +227,18 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     let twojmax = flags.get_or("twojmax", 8usize)?;
     let artifacts = flags.get_or("artifacts", "artifacts".to_string())?;
     let defaults = ServeOptions::default();
+    let shards = flags.get_or("shards", defaults.shards)?.max(1);
+    // workers and shards multiply: with --shards S and no explicit
+    // --workers, keep total lanes ~ core count instead of oversubscribing
+    let default_workers = (defaults.workers / shards).max(1);
     let opts = ServeOptions {
-        workers: flags.get_or("workers", defaults.workers)?,
+        workers: flags.get_or("workers", default_workers)?,
         batch_window: std::time::Duration::from_micros(
             flags.get_or("batch-window-us", defaults.batch_window.as_micros() as u64)?,
         ),
         queue_depth: flags.get_or("queue-depth", defaults.queue_depth)?,
         max_batch_atoms: flags.get_or("max-batch-atoms", defaults.max_batch_atoms)?,
+        shards,
     };
     let idx = repro::snap::SnapIndex::new(twojmax);
     let coeffs = repro::snap::coeff::SnapCoeffs::synthetic(twojmax, idx.idxb_max, 42);
@@ -233,8 +247,9 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     let listener = std::net::TcpListener::bind(("0.0.0.0", port))?;
     println!(
         "force server on :{port} engine={engine_name} 2J={twojmax} workers={} \
-         batch-window={}us queue-depth={} (ctrl-c to stop)",
+         shards={} batch-window={}us queue-depth={} (ctrl-c to stop)",
         opts.workers,
+        opts.shards.max(1),
         opts.batch_window.as_micros(),
         opts.queue_depth
     );

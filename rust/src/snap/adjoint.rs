@@ -32,6 +32,7 @@ use super::kernels::*;
 use super::memory::{MemoryFootprint, C128, F64};
 use super::params::SnapParams;
 use super::wigner::{compute_dulist_pair, compute_ulist_pair, PairGeom};
+use crate::util::zero_resize;
 use std::sync::Arc;
 
 /// Ladder configuration (see module docs).
@@ -108,18 +109,24 @@ impl AdjointEngine {
 
     fn ensure_capacity(&mut self, na: usize, nn: usize) {
         let iu = self.idx.idxu_max;
+        // ulist/dulist/utot_t are fully overwritten each tile (masked pairs
+        // are zero-filled explicitly), so a plain resize suffices — only
+        // freshly grown memory is touched
         self.ulist_r.resize(na * nn * iu, 0.0);
         self.ulist_i.resize(na * nn * iu, 0.0);
         self.dulist_r.resize(na * nn * iu * 3, 0.0);
         self.dulist_i.resize(na * nn * iu * 3, 0.0);
-        self.utot_r.resize(na * iu, 0.0);
-        self.utot_i.resize(na * iu, 0.0);
         if self.cfg.layout_atom_fastest && self.cfg.transpose_utot {
             self.utot_t_r.resize(na * iu, 0.0);
             self.utot_t_i.resize(na * iu, 0.0);
         }
-        self.y_r.resize(na * iu, 0.0);
-        self.y_i.resize(na * iu, 0.0);
+        // the utot/y accumulators must start at zero every tile; clear-
+        // then-resize zeroes each slot exactly once instead of the old
+        // resize-then-fill double touch of grown memory
+        zero_resize(&mut self.utot_r, na * iu);
+        zero_resize(&mut self.utot_i, na * iu);
+        zero_resize(&mut self.y_r, na * iu);
+        zero_resize(&mut self.y_i, na * iu);
     }
 
     /// Flat index of (atom, jju) in the configured staged layout.
@@ -334,8 +341,7 @@ impl ForceEngine for AdjointEngine {
         let idx = self.idx.clone();
 
         // ---- compute_U: per-pair Wigner matrices + accumulation ----
-        self.utot_r.fill(0.0);
-        self.utot_i.fill(0.0);
+        // (utot zeroed by ensure_capacity)
         // self-contribution, in the layout the accumulation below uses:
         // strided atom-fastest only in the V3-without-V6 mode; j-fastest
         // otherwise (the V6 transpose produces the atom-fastest view later).
@@ -397,9 +403,7 @@ impl ForceEngine for AdjointEngine {
             }
         }
 
-        // ---- compute_Y ----
-        self.y_r.fill(0.0);
-        self.y_i.fill(0.0);
+        // ---- compute_Y (ylist zeroed by ensure_capacity) ----
         for atom in 0..na {
             if self.cfg.collapsed_y {
                 self.compute_ylist_collapsed(atom, na);

@@ -25,6 +25,7 @@ use super::indices::SnapIndex;
 use super::memory::{MemoryFootprint, C128, F64};
 use super::params::SnapParams;
 use super::wigner::{compute_fused_dedr_pair, compute_ulist_pair, FusedDuScratch, PairGeom};
+use crate::util::zero_resize;
 use std::sync::Arc;
 
 /// Inner vector width of the AoSoA layout (doubles per SIMD register).
@@ -119,14 +120,12 @@ impl ForceEngine for FusedEngine {
         let iu = self.idx.idxu_max;
         let ih = self.idx.idxu_half_max();
         let nap = self.padded_atoms(na);
-        self.utot_r.resize(nap * iu, 0.0);
-        self.utot_i.resize(nap * iu, 0.0);
-        self.yhalf_r.resize(nap * ih, 0.0);
-        self.yhalf_i.resize(nap * ih, 0.0);
-        self.utot_r.fill(0.0);
-        self.utot_i.fill(0.0);
-        self.yhalf_r.fill(0.0);
-        self.yhalf_i.fill(0.0);
+        // accumulators must start at zero: clear-then-resize touches each
+        // slot exactly once (resize + fill would re-zero grown memory twice)
+        zero_resize(&mut self.utot_r, nap * iu);
+        zero_resize(&mut self.utot_i, nap * iu);
+        zero_resize(&mut self.yhalf_r, nap * ih);
+        zero_resize(&mut self.yhalf_i, nap * ih);
         let p = self.params;
         let idx = self.idx.clone();
         let mut out = TileOutput { ei: vec![0.0; na], dedr: vec![0.0; na * nn * 3] };

@@ -14,6 +14,9 @@
 //! * [`fused`]    — the section VI engine: recompute-instead-of-store,
 //!                  fused dE, half-index Y, split re/im, AoSoA layouts.
 //! * [`variants`] — the named ladder (V0..V7, VI) used by benches/figures.
+//! * [`sharded`]  — intra-tile hierarchical parallelism: a tile split into
+//!                  atom-range shards computed concurrently by private
+//!                  inner engines, stitched bit-identically.
 //! * [`memory`]   — analytic memory-footprint model + device budget gate.
 //! * [`coeff`]    — LAMMPS `.snapcoeff`/`.snapparam` file support.
 
@@ -27,6 +30,7 @@ pub mod fused;
 pub mod indices;
 pub mod memory;
 pub mod params;
+pub mod sharded;
 pub mod variants;
 pub mod wigner;
 

@@ -1,0 +1,315 @@
+//! [`ShardedEngine`] — intra-tile hierarchical parallelism over atom ranges.
+//!
+//! The paper's central restructuring lesson is hierarchical parallelism:
+//! teams over atoms, lanes over neighbors/quantum numbers.  The inner-lane
+//! axis lives inside each engine's kernels; this wrapper supplies the outer
+//! *atom-team* axis on the CPU: a [`TileInput`] is split into contiguous
+//! atom-range sub-tiles, each computed concurrently on the process-wide
+//! persistent thread pool by a **private** inner engine (its own scratch —
+//! no sharing, no atomics), and the per-shard outputs are stitched back in
+//! atom order.
+//!
+//! Because tile rows are per-atom independent (the same padded-tile
+//! contract [`crate::coordinator::TileBatch`] relies on for coalescing),
+//! the stitched result is **bit-identical** to evaluating the whole tile on
+//! one engine — sharding changes *where* atoms are computed, never *what*.
+
+use super::engine::{EngineFactory, ForceEngine, TileInput, TileOutput};
+use super::memory::MemoryFootprint;
+use crate::util::parallel::parallel_map;
+use std::sync::{Mutex, PoisonError};
+
+/// Default fan-out floor for production paths (server, MD, grind sweep): a
+/// tile splits only while every shard keeps at least this many atoms, so
+/// tiny tiles (single-atom requests, trailing MD tiles) never pay
+/// fork/join overhead.  [`ShardedEngine::new`] itself defaults to a floor
+/// of 1 — the pure wrapper — so tests can exercise extreme splits.
+pub const DEFAULT_MIN_ATOMS_PER_SHARD: usize = 4;
+
+/// Wrap `factory` output for intra-tile parallelism: a [`ShardedEngine`]
+/// with the given fan-out floor when `shards > 1`, the plain inner engine
+/// otherwise.  The single construction site behind the `--shards` knob
+/// (config factory, force server, `ForceField`, grind sweep).
+pub fn build_sharded(
+    factory: &EngineFactory,
+    shards: usize,
+    min_atoms_per_shard: usize,
+) -> anyhow::Result<Box<dyn ForceEngine>> {
+    if shards <= 1 {
+        return factory();
+    }
+    Ok(Box::new(
+        ShardedEngine::new(factory, shards)?.with_min_atoms_per_shard(min_atoms_per_shard),
+    ))
+}
+
+/// A `ForceEngine` that fans one tile out across `shards` inner engines.
+pub struct ShardedEngine {
+    /// One private engine per shard; the `Mutex` is uncontended (shard `s`
+    /// is only ever locked by the lane computing shard `s`) — it exists to
+    /// hand `&mut` engine access through the `Fn`-closure pool API.
+    engines: Vec<Mutex<Box<dyn ForceEngine>>>,
+    min_atoms_per_shard: usize,
+    name: String,
+}
+
+impl ShardedEngine {
+    /// Build `shards` inner engines from one factory (shared immutable
+    /// state — `Arc<SnapIndex>`, params — is built once inside the factory).
+    pub fn new(factory: &EngineFactory, shards: usize) -> anyhow::Result<Self> {
+        let shards = shards.max(1);
+        let mut engines = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            engines.push(Mutex::new(factory()?));
+        }
+        let inner = lock_shard(&engines[0]).name().to_string();
+        Ok(Self {
+            engines,
+            min_atoms_per_shard: 1,
+            name: format!("sharded{shards}x-{inner}"),
+        })
+    }
+
+    /// Set a fan-out floor: a tile only splits while every shard keeps at
+    /// least `min` atoms, so tiny tiles skip the fork/join overhead and run
+    /// serially on the first inner engine.  Splitting is bit-invisible at
+    /// any floor; this knob is purely about overhead.
+    pub fn with_min_atoms_per_shard(mut self, min: usize) -> Self {
+        self.min_atoms_per_shard = min.max(1);
+        self
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// Contiguous `(start, count)` atom ranges for `na` atoms: as many
+    /// shards as the floor allows, the remainder spread over the leading
+    /// shards (uneven last shards are exercised by tests).
+    fn plan(&self, na: usize) -> Vec<(usize, usize)> {
+        let k = self
+            .engines
+            .len()
+            .min(na / self.min_atoms_per_shard)
+            .min(na)
+            .max(1);
+        let base = na / k;
+        let extra = na % k;
+        let mut ranges = Vec::with_capacity(k);
+        let mut start = 0;
+        for s in 0..k {
+            let count = base + usize::from(s < extra);
+            ranges.push((start, count));
+            start += count;
+        }
+        ranges
+    }
+}
+
+/// Lock one shard's engine, recovering from poison.
+///
+/// A panicking inner `compute` (a hostile tile) unwinds with the guard
+/// held and poisons the mutex; recovery is sound because every engine
+/// resizes/zeroes its scratch at the top of `compute` — the same contract
+/// the force server's per-job panic containment relies on.  Without this,
+/// one bad tile would turn the shard into a permanent error source.
+fn lock_shard(
+    engine: &Mutex<Box<dyn ForceEngine>>,
+) -> std::sync::MutexGuard<'_, Box<dyn ForceEngine>> {
+    engine.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+impl ForceEngine for ShardedEngine {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn compute(&mut self, input: &TileInput) -> TileOutput {
+        input.validate();
+        let (na, nn) = (input.num_atoms, input.num_nbor);
+        let ranges = self.plan(na);
+        if ranges.len() <= 1 {
+            let engine = self.engines[0].get_mut().unwrap_or_else(PoisonError::into_inner);
+            return engine.compute(input);
+        }
+        let engines = &self.engines;
+        let parts = parallel_map(ranges.len(), |s| {
+            let (start, count) = ranges[s];
+            let sub = TileInput {
+                num_atoms: count,
+                num_nbor: nn,
+                rij: &input.rij[start * nn * 3..(start + count) * nn * 3],
+                mask: &input.mask[start * nn..(start + count) * nn],
+            };
+            lock_shard(&engines[s]).compute(&sub)
+        });
+        // stitch: shards are contiguous atom ranges in plan order, so the
+        // concatenation *is* the serial layout
+        let mut out = TileOutput {
+            ei: Vec::with_capacity(na),
+            dedr: Vec::with_capacity(na * nn * 3),
+        };
+        for p in &parts {
+            out.ei.extend_from_slice(&p.ei);
+            out.dedr.extend_from_slice(&p.dedr);
+        }
+        out
+    }
+
+    fn footprint(&self, num_atoms: usize, num_nbor: usize) -> MemoryFootprint {
+        // every shard materializes its scratch concurrently: k × the inner
+        // footprint of the largest sub-tile
+        let ranges = self.plan(num_atoms);
+        let k = ranges.len() as u64;
+        let largest = ranges.iter().map(|&(_, c)| c).max().unwrap_or(0);
+        let inner = lock_shard(&self.engines[0]).footprint(largest, num_nbor);
+        let mut m = MemoryFootprint::new();
+        for (name, bytes) in &inner.arrays {
+            m.add(&format!("{k}x {name}"), bytes * k);
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snap::variants::Variant;
+    use crate::snap::{SnapIndex, SnapParams};
+    use crate::util::XorShift;
+    use std::sync::Arc;
+
+    fn fused_factory(twojmax: usize, seed: u64) -> EngineFactory {
+        let params = SnapParams::with_twojmax(twojmax);
+        let idx = Arc::new(SnapIndex::new(twojmax));
+        let mut rng = XorShift::new(seed);
+        let beta: Vec<f64> = (0..idx.idxb_max).map(|_| rng.normal()).collect();
+        Arc::new(move || Ok(Variant::Fused.build(params, idx.clone(), beta.clone())))
+    }
+
+    fn tile(rng: &mut XorShift, na: usize, nn: usize) -> (Vec<f64>, Vec<f64>) {
+        let mut rij = Vec::new();
+        let mut mask = Vec::new();
+        for _ in 0..na * nn {
+            for _ in 0..3 {
+                rij.push(rng.uniform(-2.4, 2.4));
+            }
+            mask.push(if rng.next_f64() > 0.25 { 1.0 } else { 0.0 });
+        }
+        // atom 1 (if present) is fully padded — the mask contract must
+        // survive sharding too
+        if na > 1 {
+            for slot in 0..nn {
+                mask[nn + slot] = 0.0;
+            }
+        }
+        (rij, mask)
+    }
+
+    #[test]
+    fn sharded_is_bit_identical_to_serial() {
+        let factory = fused_factory(2, 91);
+        let mut serial = factory().unwrap();
+        let mut rng = XorShift::new(5);
+        for (na, nn) in [(13usize, 5usize), (6, 4), (2, 3), (1, 4)] {
+            let (rij, mask) = tile(&mut rng, na, nn);
+            let inp = TileInput { num_atoms: na, num_nbor: nn, rij: &rij, mask: &mask };
+            let want = serial.compute(&inp);
+            for shards in [1usize, 2, 3, 7] {
+                let mut eng = ShardedEngine::new(&factory, shards).unwrap();
+                let got = eng.compute(&inp);
+                assert_eq!(want.ei, got.ei, "ei: na={na} shards={shards}");
+                assert_eq!(want.dedr, got.dedr, "dedr: na={na} shards={shards}");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_covers_every_atom_contiguously() {
+        let factory = fused_factory(2, 17);
+        for shards in [1usize, 2, 3, 7] {
+            let eng = ShardedEngine::new(&factory, shards).unwrap();
+            for na in [0usize, 1, 2, 5, 7, 13, 32] {
+                let ranges = eng.plan(na);
+                assert!(ranges.len() <= shards.max(1));
+                let mut next = 0;
+                for &(start, count) in &ranges {
+                    assert_eq!(start, next, "shards={shards} na={na}");
+                    next += count;
+                }
+                assert_eq!(next, na, "shards={shards} na={na}");
+                // balanced: counts differ by at most one
+                if na > 0 {
+                    let min = ranges.iter().map(|r| r.1).min().unwrap();
+                    let max = ranges.iter().map(|r| r.1).max().unwrap();
+                    assert!(max - min <= 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn min_atoms_floor_limits_fanout() {
+        let factory = fused_factory(2, 23);
+        let eng = ShardedEngine::new(&factory, 8).unwrap().with_min_atoms_per_shard(4);
+        assert_eq!(eng.plan(3).len(), 1); // below the floor: serial
+        assert_eq!(eng.plan(8).len(), 2);
+        assert_eq!(eng.plan(31).len(), 7);
+        assert_eq!(eng.plan(64).len(), 8); // capped by shard count
+    }
+
+    #[test]
+    fn shard_panic_poison_is_recovered() {
+        struct Panicky;
+        impl ForceEngine for Panicky {
+            fn name(&self) -> &str {
+                "panicky"
+            }
+            fn compute(&mut self, input: &TileInput) -> TileOutput {
+                assert!(!input.rij[0].is_nan(), "hostile tile");
+                TileOutput {
+                    ei: vec![1.0; input.num_atoms],
+                    dedr: vec![0.5; input.num_atoms * input.num_nbor * 3],
+                }
+            }
+            fn footprint(&self, _na: usize, _nn: usize) -> MemoryFootprint {
+                MemoryFootprint::new()
+            }
+        }
+        let factory: EngineFactory = Arc::new(|| Ok(Box::new(Panicky) as Box<dyn ForceEngine>));
+        let mut eng = ShardedEngine::new(&factory, 2).unwrap();
+        let mut rij = vec![1.0; 2 * 3 * 3];
+        rij[0] = f64::NAN; // atom 0 -> shard 0 panics mid-compute
+        let mask = vec![1.0; 2 * 3];
+        let bad = TileInput { num_atoms: 2, num_nbor: 3, rij: &rij, mask: &mask };
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| eng.compute(&bad)));
+        assert!(caught.is_err(), "hostile tile must panic through the shards");
+        // the poisoned shard mutex must not brick the engine: the force
+        // server contains the panic per job and reuses the worker's engine
+        let rij_ok = vec![1.0; 2 * 3 * 3];
+        let good = TileInput { num_atoms: 2, num_nbor: 3, rij: &rij_ok, mask: &mask };
+        let out = eng.compute(&good);
+        assert_eq!(out.ei, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn build_sharded_respects_the_knob() {
+        let factory = fused_factory(2, 7);
+        assert_eq!(build_sharded(&factory, 1, 1).unwrap().name(), "VI-fused");
+        let wrapped = build_sharded(&factory, 4, 2).unwrap();
+        assert_eq!(wrapped.name(), "sharded4x-VI-fused");
+    }
+
+    #[test]
+    fn name_and_footprint_reflect_sharding() {
+        let factory = fused_factory(2, 3);
+        let eng = ShardedEngine::new(&factory, 4).unwrap();
+        assert!(eng.name().starts_with("sharded4x-"), "{}", eng.name());
+        assert_eq!(eng.num_shards(), 4);
+        let serial = factory().unwrap().footprint(32, 8);
+        let sharded = eng.footprint(32, 8);
+        // 4 shards of 8 atoms each materialize the per-atom arrays of 8
+        // atoms 4 times over = the serial 32-atom per-atom total
+        assert!(sharded.total() >= serial.total() / 2);
+    }
+}

@@ -195,6 +195,20 @@ mod tests {
                 reference = Some(out);
             }
         }
+
+        // the sharded wrapper is a ladder citizen too: bit-identical to its
+        // serial inner engine (and therefore within ladder tolerance of the
+        // reference), including an uneven last shard (4 atoms / 3 shards)
+        let factory: crate::snap::engine::EngineFactory = {
+            let idx = idx.clone();
+            let beta = beta.clone();
+            Arc::new(move || Ok(Variant::Fused.build(p, idx.clone(), beta.clone())))
+        };
+        let want = Variant::Fused.build(p, idx.clone(), beta.clone()).compute(&inp);
+        let mut sharded = crate::snap::sharded::ShardedEngine::new(&factory, 3).unwrap();
+        let got = sharded.compute(&inp);
+        assert_eq!(want.ei, got.ei, "sharded ei diverges from serial");
+        assert_eq!(want.dedr, got.dedr, "sharded dedr diverges from serial");
     }
 
     #[test]

@@ -1,5 +1,6 @@
-//! Small self-contained substrates: timers, deterministic RNG, a scoped
-//! thread-pool `parallel_for`, and a minimal JSON reader.
+//! Small self-contained substrates: timers, deterministic RNG, the
+//! persistent thread pool behind `parallel_for`/`parallel_map`, and a
+//! minimal JSON reader.
 //!
 //! Everything here is std-only by necessity (the build is fully offline);
 //! these utilities replace what `rayon`, `serde_json` and `criterion` would
@@ -10,6 +11,33 @@ pub mod parallel;
 pub mod rng;
 pub mod timer;
 
-pub use parallel::parallel_for;
+pub use parallel::{parallel_for, parallel_map, ThreadPool};
 pub use rng::XorShift;
 pub use timer::{Stopwatch, StageTimes};
+
+/// Resize `v` to `len` slots, all zero, touching each slot exactly once.
+///
+/// The naive `resize(len, 0.0)` + `fill(0.0)` sequence zeroes freshly grown
+/// memory twice (once inside `resize`, again in `fill`) — on the engines'
+/// per-tile accumulator arrays that double-touch is pure wasted bandwidth.
+/// Clearing first makes the single `resize` write every slot once.
+#[inline]
+pub fn zero_resize(v: &mut Vec<f64>, len: usize) {
+    v.clear();
+    v.resize(len, 0.0);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_resize_clears_grown_and_shrunk() {
+        let mut v = vec![7.0; 4];
+        zero_resize(&mut v, 9);
+        assert_eq!(v, vec![0.0; 9]);
+        v.iter_mut().for_each(|x| *x = 3.0);
+        zero_resize(&mut v, 2);
+        assert_eq!(v, vec![0.0; 2]);
+    }
+}

@@ -106,6 +106,7 @@ fn sequential_opts() -> ServeOptions {
         batch_window: std::time::Duration::ZERO,
         queue_depth: 64,
         max_batch_atoms: 32,
+        ..ServeOptions::default()
     }
 }
 
@@ -115,6 +116,7 @@ fn concurrent_opts() -> ServeOptions {
         batch_window: std::time::Duration::from_micros(300),
         queue_depth: 64,
         max_batch_atoms: 32,
+        ..ServeOptions::default()
     }
 }
 
@@ -281,6 +283,7 @@ fn coalescer_merges_concurrent_single_atom_requests() {
             batch_window: std::time::Duration::from_millis(50),
             queue_depth: 64,
             max_batch_atoms: 32,
+            ..ServeOptions::default()
         };
         let srv = TestServer::start(opts, "fused", 2);
         let addr = srv.addr;
@@ -313,6 +316,47 @@ fn coalescer_merges_concurrent_single_atom_requests() {
         eprintln!("attempt {attempt}: no coalescing observed, retrying");
     }
     panic!("coalescer never merged concurrent single-atom requests");
+}
+
+#[test]
+fn sharded_workers_are_byte_identical_and_observable() {
+    // 12 atoms >= 2 * SHARD_MIN_ATOMS: this request takes the sharded path
+    let big = request_line(42, 12, 4);
+    let small = request_line(43, 1, 4);
+
+    let serial = TestServer::start(sequential_opts(), "fused", 2);
+    let mut client = Client::connect(serial.addr);
+    let want_big = client.roundtrip(&big);
+    let want_small = client.roundtrip(&small);
+    drop(client);
+    serial.finish();
+    assert!(want_big.contains("\"ok\": true"), "{want_big}");
+
+    let opts = ServeOptions {
+        workers: 2,
+        batch_window: std::time::Duration::ZERO,
+        queue_depth: 64,
+        max_batch_atoms: 32,
+        shards: 3,
+    };
+    let srv = TestServer::start(opts, "fused", 2);
+    let mut client = Client::connect(srv.addr);
+    // intra-tile sharding must be byte-invisible to clients, for tiles
+    // both above and below the fan-out floor
+    assert_eq!(client.roundtrip(&big), want_big);
+    assert_eq!(client.roundtrip(&small), want_small);
+    let stats_reply = client.roundtrip("{\"cmd\": \"stats\"}");
+    let j = Json::parse(&stats_reply).expect("stats reply parses");
+    let s = j.get("stats").expect("stats object");
+    // ... and observable from the outside: shard config + per-batch atoms
+    assert_eq!(s.get("shards").and_then(Json::as_usize), Some(3), "{stats_reply}");
+    assert_eq!(
+        s.get("batch_atoms_max").and_then(Json::as_usize),
+        Some(12),
+        "{stats_reply}"
+    );
+    drop(client);
+    srv.finish();
 }
 
 #[test]
@@ -349,6 +393,7 @@ fn four_workers_double_throughput_over_one() {
             batch_window: std::time::Duration::from_micros(100),
             queue_depth: 64,
             max_batch_atoms: 32,
+            ..ServeOptions::default()
         };
         // 2J=8 single-atom tiles: enough compute per request that the
         // engine, not socket I/O, is the bottleneck
