@@ -12,6 +12,7 @@
 //! # smaller/faster:      ... md_tungsten -- --cells 5 --steps 40
 //! # native engine:       ... md_tungsten -- --engine fused
 //! # intra-tile shards:   ... md_tungsten -- --engine fused --shards 4
+//! # autotuned plan:      ... md_tungsten -- --plan auto   (after `repro tune`)
 //! ```
 //!
 //! Results are recorded in the experiment reports (`repro experiments`).
@@ -39,6 +40,7 @@ fn main() -> anyhow::Result<()> {
     let engine_name: String = arg(&args, "--engine", "xla:snap_2j8".to_string());
     let artifacts: String = arg(&args, "--artifacts", "artifacts".to_string());
     let shards: usize = arg(&args, "--shards", 1).max(1);
+    let plan_spec: String = arg(&args, "--plan", "off".to_string());
 
     let twojmax = 8;
     let params = SnapParams::with_twojmax(twojmax);
@@ -53,13 +55,31 @@ fn main() -> anyhow::Result<()> {
 
     println!(
         "# md_tungsten: {natoms} atoms bcc W, 2J={twojmax}, engine={engine_name}, \
-         shards={shards}"
+         shards={shards}, plan={plan_spec}"
     );
-    let factory =
-        repro::config::engine_factory(&engine_name, twojmax, coeffs.beta.clone(), &artifacts)?;
-    // with sharding, widen the tile so every shard gets a full serial
-    // tile's worth of atoms per dispatch
-    let field = ForceField::from_factory(&factory, shards, 32 * shards, 32)?;
+    // with sharding (or a plan's large-bucket fan-out), widen the tile so
+    // every shard gets a full serial tile's worth of atoms per dispatch
+    let resolution =
+        repro::config::resolve_planned_factory(&plan_spec, twojmax, coeffs.beta.clone())?;
+    let field = match resolution {
+        Some(r) => {
+            println!("# plan: {} (cache {})", r.selection.source, r.selection.cache.label());
+            if engine_name != "xla:snap_2j8" || shards > 1 {
+                println!("# note: --plan overrides --engine/--shards");
+            }
+            // the planned engine fans out per bucket itself: shards=1 here
+            ForceField::from_factory(&r.factory, 1, 32 * r.fanout, 32)?
+        }
+        None => {
+            let factory = repro::config::engine_factory(
+                &engine_name,
+                twojmax,
+                coeffs.beta.clone(),
+                &artifacts,
+            )?;
+            ForceField::from_factory(&factory, shards, 32 * shards, 32)?
+        }
+    };
     let mut sim = Simulation::new(
         structure,
         field,

@@ -18,16 +18,52 @@ use std::sync::Arc;
 pub struct BenchStats {
     pub mean_secs: f64,
     pub min_secs: f64,
+    /// Sample (n−1) standard deviation; 0 for a single rep.
     pub stddev_secs: f64,
+    /// Median over reps — the robust statistic the autotuner compares
+    /// candidates by (a single descheduled rep cannot flip a decision the
+    /// way it drags the mean).
+    pub p50_secs: f64,
     pub reps: usize,
 }
 
 impl BenchStats {
+    /// Statistics over a non-empty sample set (seconds per rep).  The one
+    /// reduction site shared by [`measure`] and the autotuner's
+    /// prune-as-you-go timing loop.
+    pub fn from_samples(samples: &[f64]) -> BenchStats {
+        assert!(!samples.is_empty(), "BenchStats needs at least one sample");
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let stddev = if samples.len() > 1 {
+            let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / (n - 1.0);
+            var.sqrt()
+        } else {
+            0.0
+        };
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mid = sorted.len() / 2;
+        let p50 = if sorted.len() % 2 == 1 {
+            sorted[mid]
+        } else {
+            0.5 * (sorted[mid - 1] + sorted[mid])
+        };
+        BenchStats {
+            mean_secs: mean,
+            min_secs: sorted[0],
+            stddev_secs: stddev,
+            p50_secs: p50,
+            reps: samples.len(),
+        }
+    }
+
     pub fn format_ms(&self) -> String {
         format!(
-            "{:.3} ms ±{:.3} (min {:.3}, n={})",
+            "{:.3} ms ±{:.3} (p50 {:.3}, min {:.3}, n={})",
             self.mean_secs * 1e3,
             self.stddev_secs * 1e3,
+            self.p50_secs * 1e3,
             self.min_secs * 1e3,
             self.reps
         )
@@ -45,15 +81,7 @@ pub fn measure<F: FnMut()>(mut f: F, warmup: usize, reps: usize) -> BenchStats {
         f();
         samples.push(sw.elapsed_secs());
     }
-    let n = samples.len() as f64;
-    let mean = samples.iter().sum::<f64>() / n;
-    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
-    BenchStats {
-        mean_secs: mean,
-        min_secs: samples.iter().copied().fold(f64::INFINITY, f64::min),
-        stddev_secs: var.sqrt(),
-        reps: samples.len(),
-    }
+    BenchStats::from_samples(&samples)
 }
 
 /// A frozen benchmark workload: one force evaluation's worth of tiles.
@@ -210,6 +238,40 @@ pub fn grind_json(w: &Workload, points: &[GrindPoint]) -> String {
     )
 }
 
+/// Serialize an autotune frontier as the `BENCH_tune.json` record: every
+/// explored `(bucket, variant, shards)` candidate with its timing statistics
+/// plus the per-bucket `chosen` flag — the full search trajectory, not just
+/// the winners (hand-rolled JSON like [`grind_json`]).
+pub fn tune_json(key: &crate::tune::PlanKey, points: &[crate::tune::TunePoint]) -> String {
+    let entries: Vec<String> = points
+        .iter()
+        .map(|p| {
+            format!(
+                "{{\"bucket\": \"{}\", \"atoms\": {}, \"variant\": \"{}\", \"shards\": {}, \
+                 \"min_atoms_per_shard\": {}, \"mean_ms\": {:.4}, \"min_ms\": {:.4}, \
+                 \"p50_ms\": {:.4}, \"reps\": {}, \"pruned\": {}, \"chosen\": {}}}",
+                p.bucket.label(),
+                p.atoms,
+                p.variant.label(),
+                p.shards,
+                p.min_atoms_per_shard,
+                p.stats.mean_secs * 1e3,
+                p.stats.min_secs * 1e3,
+                p.stats.p50_secs * 1e3,
+                p.stats.reps,
+                p.pruned,
+                p.chosen,
+            )
+        })
+        .collect();
+    format!(
+        "{{\"bench\": \"tune\", \"twojmax\": {}, \"threads\": {}, \"points\": [{}]}}\n",
+        key.twojmax,
+        key.threads,
+        entries.join(", ")
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -221,6 +283,22 @@ mod tests {
         assert_eq!(calls, 7);
         assert_eq!(s.reps, 5);
         assert!(s.min_secs <= s.mean_secs);
+        assert!(s.min_secs <= s.p50_secs);
+    }
+
+    #[test]
+    fn stats_use_sample_stddev_and_median() {
+        let s = BenchStats::from_samples(&[1.0, 2.0, 3.0, 4.0, 100.0]);
+        assert_eq!(s.p50_secs, 3.0, "odd n: middle sample");
+        assert_eq!(s.min_secs, 1.0);
+        assert_eq!(s.mean_secs, 22.0);
+        // sample (n-1) variance of [1,2,3,4,100] around 22: 7610/4 = 1902.5
+        assert!((s.stddev_secs - 1902.5f64.sqrt()).abs() < 1e-9, "{}", s.stddev_secs);
+        let even = BenchStats::from_samples(&[4.0, 1.0, 3.0, 2.0]);
+        assert_eq!(even.p50_secs, 2.5, "even n: mean of middle two");
+        let single = BenchStats::from_samples(&[7.0]);
+        assert_eq!(single.stddev_secs, 0.0, "single rep: no spread");
+        assert_eq!(single.p50_secs, 7.0);
     }
 
     #[test]

@@ -9,28 +9,10 @@ use crate::snap::coeff::SnapCoeffs;
 use crate::snap::engine::{EngineFactory, ForceEngine};
 use crate::snap::variants::Variant;
 use crate::snap::SnapIndex;
-use anyhow::{bail, Context, Result};
+use crate::tune::{PlanCounters, PlannedEngine, ShapeBucket, TunedPlan};
+use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::sync::Arc;
-
-/// Map a CLI engine name to its ladder variant (None for `xla:` names).
-fn variant_from_name(name: &str) -> Result<Variant> {
-    Ok(match name {
-        "baseline" | "V0" => Variant::V0Baseline,
-        "pre-adjoint-atom" => Variant::PreAdjointAtom,
-        "pre-adjoint-pair" => Variant::PreAdjointPair,
-        "V1" => Variant::V1,
-        "V2" => Variant::V2,
-        "V3" => Variant::V3,
-        "V4" => Variant::V4,
-        "V5" => Variant::V5,
-        "V6" => Variant::V6,
-        "V7" => Variant::V7,
-        "fused" => Variant::Fused,
-        "aosoa" => Variant::FusedAosoa,
-        other => bail!("unknown engine `{other}`"),
-    })
-}
 
 /// Flat TOML-subset document.
 #[derive(Clone, Debug, Default)]
@@ -141,7 +123,8 @@ pub fn engine_factory(
             Ok(Box::new(engine) as Box<dyn ForceEngine>)
         }));
     }
-    let variant = variant_from_name(name)?;
+    let variant = Variant::from_label(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown engine `{name}`"))?;
     let params = crate::snap::SnapParams::with_twojmax(twojmax);
     let idx = Arc::new(SnapIndex::new(twojmax));
     anyhow::ensure!(
@@ -178,6 +161,70 @@ pub fn sharded_engine_factory(
             crate::snap::sharded::DEFAULT_MIN_ATOMS_PER_SHARD,
         )
     }))
+}
+
+/// Build an [`EngineFactory`] realizing a [`TunedPlan`] — the `--plan`
+/// knob.  Every engine the factory produces is a
+/// [`PlannedEngine`](crate::tune::PlannedEngine) owning one (possibly
+/// sharded) inner engine per tile-shape bucket, so each dispatch is routed
+/// to the configuration the autotuner measured fastest for that shape.
+///
+/// The single construction site next to [`sharded_engine_factory`]: the
+/// CLI `run` path, `md_tungsten` and the force server's worker pool all
+/// build plan-driven engines here.  Per-bucket validation (variant, beta
+/// length) happens eagerly; `counters` is shared by every produced engine
+/// so bucket routing stays observable (server stats, `--plan` reports).
+pub fn planned_engine_factory(
+    plan: &TunedPlan,
+    beta: Vec<f64>,
+    counters: Arc<PlanCounters>,
+) -> Result<EngineFactory> {
+    let mut buckets = Vec::with_capacity(ShapeBucket::ALL.len());
+    for bucket in ShapeBucket::ALL {
+        let entry = plan.entry(bucket);
+        let inner =
+            engine_factory(entry.variant.label(), plan.key.twojmax, beta.clone(), "artifacts")
+                .with_context(|| format!("plan bucket `{}`", bucket.label()))?;
+        buckets.push((inner, entry.shards, entry.min_atoms_per_shard));
+    }
+    Ok(Arc::new(move || {
+        let mut engines = Vec::with_capacity(buckets.len());
+        for (inner, shards, min_atoms) in &buckets {
+            engines.push(crate::snap::sharded::build_sharded(inner, *shards, *min_atoms)?);
+        }
+        Ok(Box::new(PlannedEngine::new(engines, counters.clone())?) as Box<dyn ForceEngine>)
+    }))
+}
+
+/// A resolved `--plan` spec, ready to execute: the factory, the selection
+/// it came from, the shared dispatch counters, and the large-bucket
+/// fan-out (the tile-sizing heuristic the CLI paths share).
+pub struct PlanResolution {
+    pub factory: EngineFactory,
+    pub selection: crate::tune::PlanSelection,
+    pub counters: Arc<PlanCounters>,
+    /// `plan.entry(Large).shards` — how wide the biggest tiles fan out.
+    pub fanout: usize,
+}
+
+/// Resolve a `--plan auto|<path>|off` spec and build the planned factory
+/// in one step — the single site behind the `run`/`serve`/`md_tungsten`
+/// plan paths (`off` returns `None`: the classic `--engine`/`--shards`
+/// path applies).
+pub fn resolve_planned_factory(
+    spec: &str,
+    twojmax: usize,
+    beta: Vec<f64>,
+) -> Result<Option<PlanResolution>> {
+    let Some(selection) =
+        crate::tune::cache::resolve(spec, crate::tune::PlanKey::current(twojmax))
+    else {
+        return Ok(None);
+    };
+    let counters = Arc::new(PlanCounters::new());
+    let factory = planned_engine_factory(&selection.plan, beta, counters.clone())?;
+    let fanout = selection.plan.entry(ShapeBucket::Large).shards.max(1);
+    Ok(Some(PlanResolution { factory, selection, counters, fanout }))
 }
 
 /// Resolve coefficients from an input-script coefficient source.
@@ -303,5 +350,34 @@ mod tests {
     #[test]
     fn sharded_factory_validates_eagerly() {
         assert!(sharded_engine_factory("warp-drive", 2, vec![0.0; 5], "artifacts", 4).is_err());
+    }
+
+    #[test]
+    fn planned_factory_builds_bucket_routed_engines() {
+        use crate::tune::{PlanEntry, PlanKey, ShapeBucket};
+
+        let idx = SnapIndex::new(2);
+        let beta = vec![0.1; idx.idxb_max];
+        let mut plan = TunedPlan::default_plan(PlanKey { twojmax: 2, threads: 4 });
+        plan.set_entry(
+            ShapeBucket::Medium,
+            PlanEntry { variant: Variant::V7, shards: 2, min_atoms_per_shard: 4 },
+        );
+        let counters = Arc::new(PlanCounters::new());
+        let factory = planned_engine_factory(&plan, beta.clone(), counters.clone()).unwrap();
+        let mut eng = factory().unwrap();
+        assert!(eng.name().starts_with("planned["), "{}", eng.name());
+        // a medium tile routes through the V7 bucket and is counted
+        let na = 8usize;
+        let rij = vec![1.5; na * 2 * 3];
+        let mask = vec![1.0; na * 2];
+        let t = crate::snap::TileInput { num_atoms: na, num_nbor: 2, rij: &rij, mask: &mask };
+        let out = eng.compute(&t);
+        assert_eq!(out.ei.len(), na);
+        assert_eq!(counters.dispatches(ShapeBucket::Medium), 1);
+        assert_eq!(counters.dispatches(ShapeBucket::Small), 0);
+        // beta validation is eager, per bucket
+        assert!(planned_engine_factory(&plan, vec![0.0; 3], Arc::new(PlanCounters::new()))
+            .is_err());
     }
 }

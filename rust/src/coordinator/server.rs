@@ -37,13 +37,33 @@
 use crate::coordinator::force::TileBatch;
 use crate::snap::engine::{EngineFactory, ForceEngine, OwnedTile, TileOutput};
 use crate::snap::sharded::build_sharded;
+use crate::tune::{PlanCounters, PlanSelection, ShapeBucket};
 use crate::util::json::{self, Json};
 use crate::util::parallel::{num_threads, BoundedQueue, RecvTimeout};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// The active autotune plan a server was started with: the resolved
+/// `--plan` selection (plan + origin + cache-load outcome) and the shared
+/// per-bucket dispatch counters every worker's
+/// [`crate::tune::PlannedEngine`] feeds.  Surfaced verbatim in the
+/// `{"cmd": "stats"}` reply's `plan` section.
+#[derive(Clone, Debug)]
+pub struct PlanSetup {
+    pub selection: PlanSelection,
+    pub counters: Arc<PlanCounters>,
+}
+
+impl PlanSetup {
+    /// Pair a resolved `--plan` selection with the counters wired into the
+    /// planned engine factory.
+    pub fn from_selection(sel: &PlanSelection, counters: Arc<PlanCounters>) -> PlanSetup {
+        PlanSetup { selection: sel.clone(), counters }
+    }
+}
 
 /// Tuning knobs for the serving pipeline.
 #[derive(Clone, Debug)]
@@ -66,6 +86,11 @@ pub struct ServeOptions {
     /// serial.  Workers and shards multiply — pick `workers * shards`
     /// around the core count (the CLI defaults workers to `cores / shards`).
     pub shards: usize,
+    /// Active autotune plan (`--plan`).  When set, the caller's factory is
+    /// expected to produce plan-driven engines
+    /// ([`crate::config::planned_engine_factory`]) and `shards` should stay
+    /// 1 — per-bucket fan-out is the plan's job.
+    pub plan: Option<PlanSetup>,
 }
 
 impl Default for ServeOptions {
@@ -76,6 +101,7 @@ impl Default for ServeOptions {
             queue_depth: 256,
             max_batch_atoms: 32,
             shards: 1,
+            plan: None,
         }
     }
 }
@@ -119,9 +145,50 @@ pub struct ServerStats {
     pub workers: AtomicU64,
     /// Intra-tile shards per worker engine (set once at startup).
     pub shards: AtomicU64,
+    /// Plan-cache loads that hit (set once at startup; counters so an
+    /// embedder reloading plans can keep accumulating).
+    pub plan_cache_hits: AtomicU64,
+    /// Plan-cache loads that missed (absent/stale/corrupt).
+    pub plan_cache_misses: AtomicU64,
+    /// The active plan (set once at startup; `None` = `--plan off`).
+    pub plan: Mutex<Option<PlanSetup>>,
 }
 
 impl ServerStats {
+    /// The `plan` section of the stats reply: active source, cache
+    /// hit/miss counters, and per-bucket chosen variant/shards with live
+    /// dispatch counts.
+    fn plan_json(&self) -> String {
+        let setup = self.plan.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let Some(setup) = setup.as_ref() else {
+            return "{\"source\": \"off\"}".to_string();
+        };
+        let buckets: Vec<String> = ShapeBucket::ALL
+            .iter()
+            .map(|b| {
+                let e = setup.selection.plan.entry(*b);
+                format!(
+                    "{{\"bucket\": \"{}\", \"variant\": \"{}\", \"shards\": {}, \
+                     \"min_atoms_per_shard\": {}, \"dispatches\": {}}}",
+                    b.label(),
+                    e.variant.label(),
+                    e.shards,
+                    e.min_atoms_per_shard,
+                    setup.counters.dispatches(*b)
+                )
+            })
+            .collect();
+        format!(
+            "{{\"source\": {}, \"cache\": {}, \"cache_hits\": {}, \"cache_misses\": {}, \
+             \"buckets\": [{}]}}",
+            json::quote(&setup.selection.source),
+            json::quote(setup.selection.cache.label()),
+            self.plan_cache_hits.load(Ordering::Relaxed),
+            self.plan_cache_misses.load(Ordering::Relaxed),
+            buckets.join(", ")
+        )
+    }
+
     pub fn snapshot_json(&self) -> String {
         let n = |v: &AtomicU64| v.load(Ordering::Relaxed).to_string();
         let us = |v: &AtomicU64| (v.load(Ordering::Relaxed) / 1_000).to_string();
@@ -141,6 +208,7 @@ impl ServerStats {
             ("compute_us", us(&self.compute_ns)),
             ("atoms_computed", n(&self.atoms_computed)),
             ("batch_atoms_max", n(&self.batch_atoms_max)),
+            ("plan", self.plan_json()),
         ])
     }
 }
@@ -192,6 +260,15 @@ pub fn serve_with_stats(
     let workers = opts.workers.max(1);
     stats.workers.store(workers as u64, Ordering::Relaxed);
     stats.shards.store(opts.shards.max(1) as u64, Ordering::Relaxed);
+    if let Some(setup) = &opts.plan {
+        if setup.selection.cache.is_hit() {
+            stats.plan_cache_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            stats.plan_cache_misses.fetch_add(1, Ordering::Relaxed);
+        }
+        *stats.plan.lock().unwrap_or_else(std::sync::PoisonError::into_inner) =
+            Some(setup.clone());
+    }
 
     // Build every engine up front so a bad factory fails `serve` at startup
     // rather than inside a worker thread.  With shards > 1 each worker owns

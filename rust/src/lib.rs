@@ -12,7 +12,9 @@
 //!   AOT-compiled JAX/Pallas force model ([`runtime`]).  Also the *native*
 //!   SNAP engines ([`snap`]) that realize the paper's entire optimization
 //!   ladder (baseline → adjoint refactorization → V1..V7 → section-VI fused
-//!   kernels) so every figure of the paper can be regenerated on this CPU.
+//!   kernels) so every figure of the paper can be regenerated on this CPU,
+//!   and the autotuner ([`tune`]) that searches the (variant × shards)
+//!   strategy space and serves every layer from a persisted plan.
 //! * **Layer 2 (python/compile/model.py)** — the batched SNAP force model in
 //!   JAX, lowered once to HLO text (`make artifacts`).
 //! * **Layer 1 (python/compile/kernels/)** — the Pallas kernels
@@ -33,4 +35,5 @@ pub mod io;
 pub mod md;
 pub mod runtime;
 pub mod snap;
+pub mod tune;
 pub mod util;

@@ -3,10 +3,15 @@
 //!
 //! ```text
 //! repro run --script examples/in.tungsten [--steps N] [--engine fused] [--shards S]
+//!           [--plan auto|<file>|off]
 //! repro experiments --id all|table1|fig1..fig4|stages|memory [--quick]
 //! repro inspect [--artifacts artifacts]
 //! repro serve --port 7878 [--engine fused] [--twojmax 8] [--workers N]
 //!             [--batch-window-us 100] [--queue-depth 256] [--shards S]
+//!             [--plan auto|<file>|off]
+//! repro tune  [--twojmax 8] [--budget-ms 10000] [--cells 4] [--reps 5]
+//!             [--variants V5,fused,...] [--shards 1,2,4] [--out PLAN]
+//!             [--bench-out BENCH_tune.json]
 //! ```
 //!
 //! Argument parsing is hand-rolled (offline build: no clap); every flag is
@@ -82,6 +87,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "experiments" => cmd_experiments(&flags),
         "inspect" => cmd_inspect(&flags),
         "serve" => cmd_serve(&flags),
+        "tune" => cmd_tune(&flags),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -97,16 +103,26 @@ fn print_help() {
          commands:\n\
          \x20 run         --script <file> [--steps N] [--engine NAME] [--artifacts DIR]\n\
          \x20             [--shards S] [--tile-atoms A] [--tile-nbor K]\n\
+         \x20             [--plan auto|FILE|off]\n\
          \x20 experiments --id all|table1|fig1|fig2|fig3|fig4|stages|memory\n\
          \x20             [--quick] [--no-xla] [--cells8 N] [--cells14 N] [--reps N]\n\
          \x20             [--out FILE] [--artifacts DIR]\n\
          \x20 inspect     [--artifacts DIR]\n\
          \x20 serve       --port P [--engine NAME] [--twojmax J] [--workers N]\n\
          \x20             [--batch-window-us U] [--queue-depth D] [--max-batch-atoms A]\n\
-         \x20             [--shards S]\n\
+         \x20             [--shards S] [--plan auto|FILE|off]\n\
+         \x20 tune        [--twojmax J] [--budget-ms M] [--cells C] [--reps N]\n\
+         \x20             [--warmup N] [--variants a,b,c] [--shards 1,2,4]\n\
+         \x20             [--out PLAN] [--bench-out FILE]\n\
          \n\
          engines: baseline V1..V7 fused aosoa pre-adjoint-atom pre-adjoint-pair\n\
-         \x20        xla:snap_2j8 xla:snap_2j8_ref xla:snap_2j14 xla:snap_2j14_ref"
+         \x20        xla:snap_2j8 xla:snap_2j8_ref xla:snap_2j14 xla:snap_2j14_ref\n\
+         \n\
+         `tune` calibrates a (variant x shards) plan per tile-shape bucket,\n\
+         persists it (default: $REPRO_PLAN_CACHE or repro_plan.json) and\n\
+         records the explored frontier as BENCH_tune.json; `--plan auto`\n\
+         serves from the cached plan (stale/corrupt caches fall back to a\n\
+         default plan — re-run `tune` to refresh)."
     );
 }
 
@@ -144,20 +160,38 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     }
 
     let shards = flags.get_or("shards", 1usize)?.max(1);
-    let factory = repro::config::sharded_engine_factory(
-        &script.engine,
+    let plan_spec = flags.get_or("plan", "off".to_string())?;
+    let resolution = repro::config::resolve_planned_factory(
+        &plan_spec,
         script.twojmax,
         coeffs.beta.clone(),
-        &artifacts,
-        shards,
     )?;
-    // with sharding, default to tiles wide enough that every shard gets a
-    // full serial tile's worth of atoms
-    let tile_atoms = flags.get_or("tile-atoms", 32 * shards)?;
+    // with sharding (or a plan's large-bucket fan-out), default to tiles
+    // wide enough that every shard gets a full serial tile's worth of atoms
+    let (factory, fanout) = match resolution {
+        Some(r) => {
+            println!("# plan: {} (cache {})", r.selection.source, r.selection.cache.label());
+            if flags.has("engine") || flags.has("shards") {
+                println!("# note: --plan overrides --engine/--shards");
+            }
+            (r.factory, r.fanout)
+        }
+        None => {
+            let f = repro::config::sharded_engine_factory(
+                &script.engine,
+                script.twojmax,
+                coeffs.beta.clone(),
+                &artifacts,
+                shards,
+            )?;
+            (f, shards)
+        }
+    };
+    let tile_atoms = flags.get_or("tile-atoms", 32 * fanout)?;
     let tile_nbor = flags.get_or("tile-nbor", 32usize)?;
     let field = ForceField::new(factory()?, tile_atoms, tile_nbor);
-    if shards > 1 {
-        println!("# intra-tile sharding: {shards} shards, tile_atoms={tile_atoms}");
+    if fanout > 1 {
+        println!("# intra-tile sharding: {fanout} shards, tile_atoms={tile_atoms}");
     }
     let cfg = SimConfig {
         dt: script.timestep,
@@ -220,18 +254,34 @@ fn cmd_inspect(flags: &Flags) -> Result<()> {
 }
 
 fn cmd_serve(flags: &Flags) -> Result<()> {
-    use repro::coordinator::server::{serve, ServeOptions};
+    use repro::coordinator::server::{serve, PlanSetup, ServeOptions};
 
     let port: u16 = flags.get_or("port", 7878)?;
     let engine_name = flags.get_or("engine", "fused".to_string())?;
     let twojmax = flags.get_or("twojmax", 8usize)?;
     let artifacts = flags.get_or("artifacts", "artifacts".to_string())?;
+    let plan_spec = flags.get_or("plan", "off".to_string())?;
+    let idx = repro::snap::SnapIndex::new(twojmax);
+    let coeffs = repro::snap::coeff::SnapCoeffs::synthetic(twojmax, idx.idxb_max, 42);
+    let resolution =
+        repro::config::resolve_planned_factory(&plan_spec, twojmax, coeffs.beta.clone())?;
     let defaults = ServeOptions::default();
-    let shards = flags.get_or("shards", defaults.shards)?.max(1);
-    // workers and shards multiply: with --shards S and no explicit
-    // --workers, keep total lanes ~ core count instead of oversubscribing
-    let default_workers = (defaults.workers / shards).max(1);
-    let opts = ServeOptions {
+    // a plan shards per bucket itself; the classic path takes --shards
+    let shards = match &resolution {
+        Some(_) => 1,
+        None => flags.get_or("shards", defaults.shards)?.max(1),
+    };
+    // workers and --shards multiply in thread count, so the classic path
+    // defaults workers to cores / shards.  A plan's fan-out varies per
+    // dispatch (small RPCs stay serial; only tiles that reach a sharded
+    // bucket fan out, onto the shared bounded pool), so dividing by it
+    // would starve the worker pool for exactly the small-request traffic
+    // that never shards — the plan path keeps workers = cores.
+    let default_workers = match &resolution {
+        Some(_) => defaults.workers,
+        None => (defaults.workers / shards).max(1),
+    };
+    let mut opts = ServeOptions {
         workers: flags.get_or("workers", default_workers)?,
         batch_window: std::time::Duration::from_micros(
             flags.get_or("batch-window-us", defaults.batch_window.as_micros() as u64)?,
@@ -239,15 +289,24 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         queue_depth: flags.get_or("queue-depth", defaults.queue_depth)?,
         max_batch_atoms: flags.get_or("max-batch-atoms", defaults.max_batch_atoms)?,
         shards,
+        plan: None,
     };
-    let idx = repro::snap::SnapIndex::new(twojmax);
-    let coeffs = repro::snap::coeff::SnapCoeffs::synthetic(twojmax, idx.idxb_max, 42);
-    let factory =
-        repro::config::engine_factory(&engine_name, twojmax, coeffs.beta, &artifacts)?;
+    let factory = match resolution {
+        Some(r) => {
+            println!("# plan: {} (cache {})", r.selection.source, r.selection.cache.label());
+            if flags.has("engine") || flags.has("shards") {
+                println!("# note: --plan overrides --engine/--shards");
+            }
+            opts.plan = Some(PlanSetup::from_selection(&r.selection, r.counters));
+            r.factory
+        }
+        None => repro::config::engine_factory(&engine_name, twojmax, coeffs.beta, &artifacts)?,
+    };
     let listener = std::net::TcpListener::bind(("0.0.0.0", port))?;
     println!(
-        "force server on :{port} engine={engine_name} 2J={twojmax} workers={} \
+        "force server on :{port} engine={} 2J={twojmax} workers={} \
          shards={} batch-window={}us queue-depth={} (ctrl-c to stop)",
+        if opts.plan.is_some() { "planned" } else { engine_name.as_str() },
         opts.workers,
         opts.shards.max(1),
         opts.batch_window.as_micros(),
@@ -255,5 +314,74 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     );
     let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
     serve(listener, factory, &opts, stop)?;
+    Ok(())
+}
+
+fn cmd_tune(flags: &Flags) -> Result<()> {
+    let twojmax = flags.get_or("twojmax", 8usize)?;
+    let mut opts = repro::tune::SearchOptions::new(twojmax);
+    opts.budget_ms = flags.get_or("budget-ms", opts.budget_ms)?;
+    opts.reps = flags.get_or("reps", opts.reps)?;
+    opts.warmup = flags.get_or("warmup", opts.warmup)?;
+    opts.cells = flags.get_or("cells", opts.cells)?;
+    if let Some(list) = flags.get("variants") {
+        opts.variant_candidates = list
+            .split(',')
+            .map(|s| {
+                repro::snap::variants::Variant::from_label(s.trim())
+                    .with_context(|| format!("unknown variant `{}`", s.trim()))
+            })
+            .collect::<Result<Vec<_>>>()?;
+    }
+    if let Some(list) = flags.get("shards") {
+        opts.shard_candidates = list
+            .split(',')
+            .map(|s| s.trim().parse::<usize>().map_err(|e| anyhow::anyhow!("--shards {s}: {e}")))
+            .collect::<Result<Vec<_>>>()?;
+    }
+    let out_path = flags.get_or("out", repro::tune::cache::default_path())?;
+    let bench_out = flags.get_or("bench-out", "BENCH_tune.json".to_string())?;
+
+    let key = repro::tune::PlanKey::current(twojmax);
+    println!(
+        "# repro tune: 2J={twojmax} threads={} budget={}ms reps={} cells={} \
+         variants={:?} shards={:?}",
+        key.threads,
+        opts.budget_ms,
+        opts.reps,
+        opts.cells,
+        opts.variant_candidates.iter().map(|v| v.label()).collect::<Vec<_>>(),
+        opts.shard_candidates
+    );
+    let sw = Stopwatch::start();
+    let outcome = repro::tune::calibrate(&opts)?;
+    println!(
+        "\n{:<8} {:>6} {:<10} {:>7} {:>10} {:>10} {:>10} {:>7} {:>7}",
+        "bucket", "atoms", "variant", "shards", "mean ms", "p50 ms", "min ms", "pruned", "chosen"
+    );
+    for p in &outcome.frontier {
+        println!(
+            "{:<8} {:>6} {:<10} {:>7} {:>10.3} {:>10.3} {:>10.3} {:>7} {:>7}",
+            p.bucket.label(),
+            p.atoms,
+            p.variant.label(),
+            p.shards,
+            p.stats.mean_secs * 1e3,
+            p.stats.p50_secs * 1e3,
+            p.stats.min_secs * 1e3,
+            p.pruned,
+            if p.chosen { "<==" } else { "" }
+        );
+    }
+    repro::tune::cache::save(&out_path, &outcome.plan)?;
+    std::fs::write(&bench_out, repro::bench::tune_json(&outcome.plan.key, &outcome.frontier))?;
+    println!(
+        "\n# {} candidates explored in {:.2} s{}",
+        outcome.frontier.len(),
+        sw.elapsed_secs(),
+        if outcome.budget_exhausted { " (budget exhausted — partial coverage)" } else { "" }
+    );
+    println!("# plan written to {out_path}; frontier to {bench_out}");
+    println!("# serve it: repro serve --twojmax {twojmax} --plan {out_path}");
     Ok(())
 }

@@ -71,6 +71,28 @@ impl Variant {
         }
     }
 
+    /// The canonical inverse of [`label`](Self::label) — every label in
+    /// `ladder() ∪ fig1()` round-trips (enforced by tests) — plus the CLI
+    /// aliases (`V0`, `fused`, `aosoa`) so engine names, plan files and
+    /// bench records all parse through one site.
+    pub fn from_label(s: &str) -> Option<Variant> {
+        Some(match s {
+            "baseline" | "V0" => Variant::V0Baseline,
+            "pre-adjoint-atom" => Variant::PreAdjointAtom,
+            "pre-adjoint-pair" => Variant::PreAdjointPair,
+            "V1" => Variant::V1,
+            "V2" => Variant::V2,
+            "V3" => Variant::V3,
+            "V4" => Variant::V4,
+            "V5" => Variant::V5,
+            "V6" => Variant::V6,
+            "V7" => Variant::V7,
+            "VI-fused" | "fused" => Variant::Fused,
+            "VI-aosoa" | "aosoa" => Variant::FusedAosoa,
+            _ => return None,
+        })
+    }
+
     /// Instantiate the engine realizing this ladder step.
     pub fn build(
         &self,
@@ -209,6 +231,23 @@ mod tests {
         let got = sharded.compute(&inp);
         assert_eq!(want.ei, got.ei, "sharded ei diverges from serial");
         assert_eq!(want.dedr, got.dedr, "sharded dedr diverges from serial");
+    }
+
+    #[test]
+    fn labels_round_trip_through_from_label() {
+        for v in Variant::ladder().iter().chain(Variant::fig1()) {
+            assert_eq!(
+                Variant::from_label(v.label()),
+                Some(*v),
+                "label {} does not round-trip",
+                v.label()
+            );
+        }
+        // CLI aliases resolve too, and garbage does not
+        assert_eq!(Variant::from_label("V0"), Some(Variant::V0Baseline));
+        assert_eq!(Variant::from_label("fused"), Some(Variant::Fused));
+        assert_eq!(Variant::from_label("aosoa"), Some(Variant::FusedAosoa));
+        assert_eq!(Variant::from_label("warp-drive"), None);
     }
 
     #[test]

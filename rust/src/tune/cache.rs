@@ -1,0 +1,201 @@
+//! Plan persistence: save tuned plans, load them back with staleness
+//! invalidation, and resolve the `--plan auto|<path>|off` CLI spec.
+//!
+//! The cache contract is *never block, never panic*: a missing, corrupted
+//! or stale (key-mismatched) plan file degrades to
+//! [`TunedPlan::default_plan`] with the miss reason surfaced in
+//! [`CacheStatus`] — serving always starts, re-tuning is an operator
+//! decision (`repro tune`), and the miss is visible in the server's
+//! `plan` stats section.
+
+use super::plan::{PlanKey, TunedPlan};
+use anyhow::{Context, Result};
+
+/// Default plan-cache location: `REPRO_PLAN_CACHE` or `repro_plan.json`
+/// in the working directory (`repro tune` writes here, `--plan auto`
+/// reads here).
+pub fn default_path() -> String {
+    std::env::var("REPRO_PLAN_CACHE").unwrap_or_else(|_| "repro_plan.json".to_string())
+}
+
+/// How a plan load went — the cache hit/miss taxonomy the server reports.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CacheStatus {
+    /// File parsed and its key matches the current process.
+    Hit,
+    /// No file at the path.
+    MissAbsent,
+    /// File parsed but was tuned under a different key (stale).
+    MissStaleKey { found: PlanKey },
+    /// File exists but does not parse as a plan.
+    MissCorrupt(String),
+}
+
+impl CacheStatus {
+    pub fn is_hit(&self) -> bool {
+        matches!(self, CacheStatus::Hit)
+    }
+
+    /// Stable label for stats/reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            CacheStatus::Hit => "hit",
+            CacheStatus::MissAbsent => "miss-absent",
+            CacheStatus::MissStaleKey { .. } => "miss-stale-key",
+            CacheStatus::MissCorrupt(_) => "miss-corrupt",
+        }
+    }
+}
+
+/// Write `plan` to `path` (atomic enough for a single-writer cache: temp
+/// file + rename, so a crashed tune never leaves a half-written plan).
+pub fn save(path: &str, plan: &TunedPlan) -> Result<()> {
+    let tmp = format!("{path}.tmp");
+    std::fs::write(&tmp, plan.to_json()).with_context(|| format!("writing {tmp}"))?;
+    std::fs::rename(&tmp, path).with_context(|| format!("renaming {tmp} -> {path}"))?;
+    Ok(())
+}
+
+/// Strict load: any read/parse failure is an error (the tooling path —
+/// use [`load_or_default`] on serving paths).
+pub fn load(path: &str) -> Result<TunedPlan> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    TunedPlan::from_json_text(&text).with_context(|| format!("parsing plan {path}"))
+}
+
+/// Load with staleness invalidation: returns the cached plan only when it
+/// parses *and* its key equals `key`; otherwise the default plan for
+/// `key`, with the miss reason.  Never panics, never errors.
+pub fn load_or_default(path: &str, key: PlanKey) -> (TunedPlan, CacheStatus) {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(_) => return (TunedPlan::default_plan(key), CacheStatus::MissAbsent),
+    };
+    match TunedPlan::from_json_text(&text) {
+        Ok(plan) if plan.key == key => (plan, CacheStatus::Hit),
+        Ok(plan) => {
+            (TunedPlan::default_plan(key), CacheStatus::MissStaleKey { found: plan.key })
+        }
+        Err(e) => (TunedPlan::default_plan(key), CacheStatus::MissCorrupt(format!("{e:#}"))),
+    }
+}
+
+/// A resolved `--plan` selection, ready to build a planned factory from.
+#[derive(Clone, Debug)]
+pub struct PlanSelection {
+    pub plan: TunedPlan,
+    /// Where the plan came from: `auto (<path>)` or the explicit path.
+    pub source: String,
+    pub cache: CacheStatus,
+}
+
+/// Resolve a `--plan` spec for the current `key`:
+///
+/// * `off`     — `None`: the classic `--engine`/`--shards` path;
+/// * `auto`    — load [`default_path`], default plan on any miss;
+/// * `<path>`  — load that file, default plan on any miss.
+pub fn resolve(spec: &str, key: PlanKey) -> Option<PlanSelection> {
+    match spec {
+        "off" => None,
+        "auto" => {
+            let path = default_path();
+            let (plan, cache) = load_or_default(&path, key);
+            Some(PlanSelection { plan, source: format!("auto ({path})"), cache })
+        }
+        path => {
+            let (plan, cache) = load_or_default(path, key);
+            Some(PlanSelection { plan, source: path.to_string(), cache })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snap::variants::Variant;
+    use crate::tune::plan::{PlanEntry, ShapeBucket};
+
+    fn tmp_path(tag: &str) -> String {
+        let p = std::env::temp_dir().join(format!(
+            "repro_plan_cache_{tag}_{}.json",
+            std::process::id()
+        ));
+        p.to_string_lossy().into_owned()
+    }
+
+    fn sample_plan(key: PlanKey) -> TunedPlan {
+        let mut plan = TunedPlan::default_plan(key);
+        plan.set_entry(
+            ShapeBucket::Medium,
+            PlanEntry { variant: Variant::V7, shards: 2, min_atoms_per_shard: 4 },
+        );
+        plan
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let key = PlanKey { twojmax: 2, threads: 4 };
+        let plan = sample_plan(key);
+        let path = tmp_path("roundtrip");
+        save(&path, &plan).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back, plan);
+        let (cached, status) = load_or_default(&path, key);
+        assert_eq!(status, CacheStatus::Hit);
+        assert_eq!(cached, plan);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn key_mismatch_invalidates() {
+        let tuned_key = PlanKey { twojmax: 2, threads: 4 };
+        let plan = sample_plan(tuned_key);
+        let path = tmp_path("stale");
+        save(&path, &plan).unwrap();
+        // a different thread count must force the default plan...
+        let now = PlanKey { twojmax: 2, threads: 8 };
+        let (got, status) = load_or_default(&path, now);
+        assert_eq!(status, CacheStatus::MissStaleKey { found: tuned_key });
+        assert_eq!(got, TunedPlan::default_plan(now));
+        // ...and so must a different descriptor size
+        let now = PlanKey { twojmax: 8, threads: 4 };
+        let (got, status) = load_or_default(&path, now);
+        assert!(matches!(status, CacheStatus::MissStaleKey { .. }));
+        assert_eq!(got.key, now);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn corrupted_file_falls_back_to_default() {
+        let key = PlanKey { twojmax: 2, threads: 4 };
+        let path = tmp_path("corrupt");
+        std::fs::write(&path, "{\"format\": \"repro-plan-v1\", \"twoj").unwrap();
+        let (got, status) = load_or_default(&path, key);
+        assert!(matches!(status, CacheStatus::MissCorrupt(_)), "{status:?}");
+        assert_eq!(got, TunedPlan::default_plan(key));
+        assert!(!status.is_hit());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn absent_file_is_a_clean_miss() {
+        let key = PlanKey { twojmax: 2, threads: 4 };
+        let (got, status) = load_or_default("/nonexistent/repro_plan.json", key);
+        assert_eq!(status, CacheStatus::MissAbsent);
+        assert_eq!(got, TunedPlan::default_plan(key));
+    }
+
+    #[test]
+    fn resolve_spec_semantics() {
+        let key = PlanKey { twojmax: 2, threads: 4 };
+        assert!(resolve("off", key).is_none());
+        let sel = resolve("/nonexistent/plan.json", key).unwrap();
+        assert_eq!(sel.cache, CacheStatus::MissAbsent);
+        assert_eq!(sel.source, "/nonexistent/plan.json");
+        let path = tmp_path("resolve");
+        save(&path, &sample_plan(key)).unwrap();
+        let sel = resolve(&path, key).unwrap();
+        assert!(sel.cache.is_hit());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

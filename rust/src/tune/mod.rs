@@ -1,0 +1,32 @@
+//! The autotuner: search the `(variant × shards × threads)` strategy
+//! space, persist the winner, and serve from the plan.
+//!
+//! The paper's thesis is that a proxy harness enables *rapid exploration
+//! of optimization strategies*; this subsystem makes the exploration
+//! self-driving.  Three parts:
+//!
+//! * [`plan`]   — [`TunedPlan`]: a chosen `(variant, shards,
+//!   min_atoms_per_shard)` per tile-shape bucket (small/medium/large atom
+//!   counts), its JSON file format, and the [`PlannedEngine`] that routes
+//!   each tile to its bucket's engine.
+//! * [`search`] — the calibration search ([`calibrate`]): time candidates
+//!   on representative tiles with median-based early pruning and a
+//!   `--budget-ms` wall-clock cap.
+//! * [`cache`]  — plan persistence keyed by `(twojmax, REPRO_THREADS)`
+//!   with staleness invalidation: a missing/corrupt/stale cache file
+//!   degrades to the default plan, never a panic.
+//!
+//! Lifecycle: `repro tune` calibrates and persists (plus the full explored
+//! frontier as `BENCH_tune.json`); `repro run`/`repro serve`/`md_tungsten`
+//! accept `--plan auto|<path>|off` and build their engines through
+//! `config::planned_engine_factory`.  Tuning changes speed, never physics:
+//! plan-driven dispatches stay bitwise identical to the chosen serial
+//! variants (enforced by `rust/tests/tune_plan.rs`).
+
+pub mod cache;
+pub mod plan;
+pub mod search;
+
+pub use cache::{CacheStatus, PlanSelection};
+pub use plan::{PlanCounters, PlanEntry, PlanKey, PlannedEngine, ShapeBucket, TunedPlan};
+pub use search::{calibrate, SearchOptions, TuneOutcome, TunePoint};

@@ -1,0 +1,390 @@
+//! The tuned plan: a chosen `(variant, shards, min_atoms_per_shard)` per
+//! tile-shape bucket, its JSON wire format, and the [`PlannedEngine`] that
+//! serves it.
+//!
+//! A plan is the *output* of the calibration search (`tune::search`) and
+//! the *input* of every `--plan` execution path: the CLI `run` command,
+//! `md_tungsten`, and the force server's worker pool all route each tile
+//! through [`PlannedEngine::compute`], which picks the per-bucket engine
+//! the search measured fastest.  Plans change speed, never physics: every
+//! bucket engine is a ladder variant (optionally sharded), and sharding is
+//! bit-invisible, so a plan-driven dispatch is bitwise identical to running
+//! the chosen serial variant on the same tile.
+
+use crate::snap::engine::{ForceEngine, TileInput, TileOutput};
+use crate::snap::memory::MemoryFootprint;
+use crate::snap::sharded::DEFAULT_MIN_ATOMS_PER_SHARD;
+use crate::snap::variants::Variant;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Plan file format tag; bump on incompatible layout changes so old cache
+/// files invalidate cleanly instead of half-parsing.
+pub const PLAN_FORMAT: &str = "repro-plan-v1";
+
+/// Tile-shape buckets by atom-row count.  Small tiles (single-request
+/// dispatches) want zero fan-out overhead; large tiles (coalesced batches,
+/// MD tiles) amortize sharding — so the winning configuration genuinely
+/// differs per bucket, which is why plans are keyed by shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShapeBucket {
+    /// `num_atoms < 8`.
+    Small,
+    /// `8 <= num_atoms < 64`.
+    Medium,
+    /// `num_atoms >= 64`.
+    Large,
+}
+
+impl ShapeBucket {
+    pub const ALL: [ShapeBucket; 3] = [ShapeBucket::Small, ShapeBucket::Medium, ShapeBucket::Large];
+    /// Lower bound of the medium bucket, in atom rows.
+    pub const MEDIUM_MIN_ATOMS: usize = 8;
+    /// Lower bound of the large bucket, in atom rows.
+    pub const LARGE_MIN_ATOMS: usize = 64;
+
+    /// Bucket a tile by its atom-row count.
+    pub fn of(num_atoms: usize) -> ShapeBucket {
+        if num_atoms >= Self::LARGE_MIN_ATOMS {
+            ShapeBucket::Large
+        } else if num_atoms >= Self::MEDIUM_MIN_ATOMS {
+            ShapeBucket::Medium
+        } else {
+            ShapeBucket::Small
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ShapeBucket::Small => "small",
+            ShapeBucket::Medium => "medium",
+            ShapeBucket::Large => "large",
+        }
+    }
+
+    pub fn from_label(s: &str) -> Option<ShapeBucket> {
+        Self::ALL.iter().copied().find(|b| b.label() == s)
+    }
+
+    /// Stable index into per-bucket arrays (plan entries, counters).
+    pub fn index(&self) -> usize {
+        match self {
+            ShapeBucket::Small => 0,
+            ShapeBucket::Medium => 1,
+            ShapeBucket::Large => 2,
+        }
+    }
+
+    /// Atom count of the representative calibration tile for this bucket.
+    pub fn representative_atoms(&self) -> usize {
+        match self {
+            ShapeBucket::Small => 2,
+            ShapeBucket::Medium => 32,
+            ShapeBucket::Large => 128,
+        }
+    }
+}
+
+/// The staleness key a plan was measured under.  A cached plan is only
+/// served when the key matches the current process exactly — a plan tuned
+/// for 8 lanes is wrong for 2, and shard timings do not transfer across
+/// descriptor sizes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlanKey {
+    pub twojmax: usize,
+    /// Execution lanes (`REPRO_THREADS` / available cores) at tune time.
+    pub threads: usize,
+}
+
+impl PlanKey {
+    /// The key of the current process for a given descriptor size.
+    pub fn current(twojmax: usize) -> PlanKey {
+        PlanKey { twojmax, threads: crate::util::parallel::num_threads() }
+    }
+}
+
+/// One bucket's chosen configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlanEntry {
+    pub variant: Variant,
+    pub shards: usize,
+    pub min_atoms_per_shard: usize,
+}
+
+/// A complete tuned plan: one [`PlanEntry`] per shape bucket plus the
+/// [`PlanKey`] it was measured under.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TunedPlan {
+    pub key: PlanKey,
+    entries: [PlanEntry; 3],
+}
+
+impl TunedPlan {
+    pub fn new(key: PlanKey, entries: [PlanEntry; 3]) -> TunedPlan {
+        TunedPlan { key, entries }
+    }
+
+    /// The untuned fallback served on every cache miss: the fused engine
+    /// everywhere (the ladder's endpoint — the best *prior* before any
+    /// measurement), serial for small tiles, fanned out up to the lane
+    /// count for large ones.
+    pub fn default_plan(key: PlanKey) -> TunedPlan {
+        let entry = |shards: usize| PlanEntry {
+            variant: Variant::Fused,
+            shards: shards.max(1),
+            min_atoms_per_shard: DEFAULT_MIN_ATOMS_PER_SHARD,
+        };
+        TunedPlan {
+            key,
+            entries: [
+                entry(1),
+                entry(key.threads.min(
+                    ShapeBucket::Medium.representative_atoms() / DEFAULT_MIN_ATOMS_PER_SHARD,
+                )),
+                entry(key.threads),
+            ],
+        }
+    }
+
+    pub fn entry(&self, bucket: ShapeBucket) -> PlanEntry {
+        self.entries[bucket.index()]
+    }
+
+    pub fn set_entry(&mut self, bucket: ShapeBucket, entry: PlanEntry) {
+        self.entries[bucket.index()] = entry;
+    }
+
+    /// Serialize as the plan file format (hand-rolled JSON, the
+    /// `util::json` idiom — the build is offline).
+    pub fn to_json(&self) -> String {
+        let buckets: Vec<String> = ShapeBucket::ALL
+            .iter()
+            .map(|b| {
+                let e = self.entry(*b);
+                format!(
+                    "{{\"bucket\": \"{}\", \"variant\": \"{}\", \"shards\": {}, \
+                     \"min_atoms_per_shard\": {}}}",
+                    b.label(),
+                    e.variant.label(),
+                    e.shards,
+                    e.min_atoms_per_shard
+                )
+            })
+            .collect();
+        format!(
+            "{{\"format\": \"{}\", \"twojmax\": {}, \"threads\": {}, \"buckets\": [{}]}}\n",
+            PLAN_FORMAT,
+            self.key.twojmax,
+            self.key.threads,
+            buckets.join(", ")
+        )
+    }
+
+    /// Parse a plan file.  Strict: unknown format tags, missing buckets or
+    /// unknown variant labels are errors (the cache layer turns them into
+    /// a default-plan fallback, never a panic).
+    pub fn from_json_text(text: &str) -> Result<TunedPlan> {
+        let j = Json::parse(text.trim()).context("plan file is not valid JSON")?;
+        let format = j.get("format").and_then(Json::as_str).context("plan missing `format`")?;
+        anyhow::ensure!(format == PLAN_FORMAT, "plan format `{format}` != `{PLAN_FORMAT}`");
+        let twojmax =
+            j.get("twojmax").and_then(Json::as_usize).context("plan missing `twojmax`")?;
+        let threads =
+            j.get("threads").and_then(Json::as_usize).context("plan missing `threads`")?;
+        let buckets = j.get("buckets").and_then(Json::as_arr).context("plan missing `buckets`")?;
+        let mut entries: [Option<PlanEntry>; 3] = [None; 3];
+        for b in buckets {
+            let label = b.get("bucket").and_then(Json::as_str).context("bucket missing name")?;
+            let bucket = ShapeBucket::from_label(label)
+                .with_context(|| format!("unknown bucket `{label}`"))?;
+            let variant_label =
+                b.get("variant").and_then(Json::as_str).context("bucket missing `variant`")?;
+            let variant = Variant::from_label(variant_label)
+                .with_context(|| format!("unknown variant `{variant_label}`"))?;
+            let shards =
+                b.get("shards").and_then(Json::as_usize).context("bucket missing `shards`")?;
+            let min_atoms = b
+                .get("min_atoms_per_shard")
+                .and_then(Json::as_usize)
+                .context("bucket missing `min_atoms_per_shard`")?;
+            anyhow::ensure!(shards >= 1 && min_atoms >= 1, "bucket `{label}`: zero shards/floor");
+            entries[bucket.index()] =
+                Some(PlanEntry { variant, shards, min_atoms_per_shard: min_atoms });
+        }
+        let mut out = [PlanEntry {
+            variant: Variant::Fused,
+            shards: 1,
+            min_atoms_per_shard: DEFAULT_MIN_ATOMS_PER_SHARD,
+        }; 3];
+        for bucket in ShapeBucket::ALL {
+            out[bucket.index()] = entries[bucket.index()]
+                .with_context(|| format!("plan missing bucket `{}`", bucket.label()))?;
+        }
+        Ok(TunedPlan { key: PlanKey { twojmax, threads }, entries: out })
+    }
+}
+
+/// Shared per-bucket dispatch counters, one `Arc` across every engine a
+/// planned factory produces, so the routing decisions of a whole worker
+/// pool aggregate into one observable view (the server's `plan` stats).
+#[derive(Debug, Default)]
+pub struct PlanCounters {
+    dispatches: [AtomicU64; 3],
+}
+
+impl PlanCounters {
+    pub fn new() -> PlanCounters {
+        PlanCounters::default()
+    }
+
+    pub fn note_dispatch(&self, bucket: ShapeBucket) {
+        self.dispatches[bucket.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn dispatches(&self, bucket: ShapeBucket) -> u64 {
+        self.dispatches[bucket.index()].load(Ordering::Relaxed)
+    }
+}
+
+/// A `ForceEngine` that routes each tile to the plan's engine for its
+/// shape bucket — the per-shape dispatch behind `--plan`.
+pub struct PlannedEngine {
+    /// One engine per bucket, indexed by [`ShapeBucket::index`]; built by
+    /// `config::planned_engine_factory` (possibly sharded per the plan).
+    engines: Vec<Box<dyn ForceEngine>>,
+    counters: Arc<PlanCounters>,
+    name: String,
+}
+
+impl PlannedEngine {
+    /// Wrap per-bucket engines (in [`ShapeBucket::ALL`] order).
+    pub fn new(engines: Vec<Box<dyn ForceEngine>>, counters: Arc<PlanCounters>) -> Result<Self> {
+        anyhow::ensure!(
+            engines.len() == ShapeBucket::ALL.len(),
+            "PlannedEngine needs one engine per bucket, got {}",
+            engines.len()
+        );
+        let name = format!(
+            "planned[{}|{}|{}]",
+            engines[0].name(),
+            engines[1].name(),
+            engines[2].name()
+        );
+        Ok(PlannedEngine { engines, counters, name })
+    }
+}
+
+impl ForceEngine for PlannedEngine {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn compute(&mut self, input: &TileInput) -> TileOutput {
+        let bucket = ShapeBucket::of(input.num_atoms);
+        self.counters.note_dispatch(bucket);
+        self.engines[bucket.index()].compute(input)
+    }
+
+    fn footprint(&self, num_atoms: usize, num_nbor: usize) -> MemoryFootprint {
+        self.engines[ShapeBucket::of(num_atoms).index()].footprint(num_atoms, num_nbor)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_plan() -> TunedPlan {
+        TunedPlan::new(
+            PlanKey { twojmax: 2, threads: 4 },
+            [
+                PlanEntry { variant: Variant::V7, shards: 1, min_atoms_per_shard: 1 },
+                PlanEntry { variant: Variant::Fused, shards: 2, min_atoms_per_shard: 4 },
+                PlanEntry { variant: Variant::FusedAosoa, shards: 4, min_atoms_per_shard: 4 },
+            ],
+        )
+    }
+
+    #[test]
+    fn buckets_partition_atom_counts() {
+        assert_eq!(ShapeBucket::of(0), ShapeBucket::Small);
+        assert_eq!(ShapeBucket::of(7), ShapeBucket::Small);
+        assert_eq!(ShapeBucket::of(8), ShapeBucket::Medium);
+        assert_eq!(ShapeBucket::of(63), ShapeBucket::Medium);
+        assert_eq!(ShapeBucket::of(64), ShapeBucket::Large);
+        assert_eq!(ShapeBucket::of(100_000), ShapeBucket::Large);
+        for b in ShapeBucket::ALL {
+            assert_eq!(ShapeBucket::from_label(b.label()), Some(b));
+            assert_eq!(ShapeBucket::ALL[b.index()], b);
+        }
+    }
+
+    #[test]
+    fn plan_json_round_trips() {
+        let plan = sample_plan();
+        let text = plan.to_json();
+        let back = TunedPlan::from_json_text(&text).unwrap();
+        assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn plan_parser_rejects_bad_documents() {
+        assert!(TunedPlan::from_json_text("not json").is_err());
+        assert!(TunedPlan::from_json_text("{\"format\": \"other\"}").is_err());
+        // valid JSON but a bucket is missing
+        let partial = "{\"format\": \"repro-plan-v1\", \"twojmax\": 2, \"threads\": 4, \
+                       \"buckets\": [{\"bucket\": \"small\", \"variant\": \"V7\", \
+                       \"shards\": 1, \"min_atoms_per_shard\": 1}]}";
+        assert!(TunedPlan::from_json_text(partial).is_err());
+        // unknown variant label
+        let bad_variant = sample_plan().to_json().replace("V7", "V99");
+        assert!(TunedPlan::from_json_text(&bad_variant).is_err());
+    }
+
+    #[test]
+    fn default_plan_is_serial_for_small_tiles() {
+        let plan = TunedPlan::default_plan(PlanKey { twojmax: 2, threads: 8 });
+        assert_eq!(plan.entry(ShapeBucket::Small).shards, 1);
+        assert_eq!(plan.entry(ShapeBucket::Large).shards, 8);
+        assert_eq!(plan.entry(ShapeBucket::Large).variant, Variant::Fused);
+        // every default entry keeps the production fan-out floor
+        for b in ShapeBucket::ALL {
+            assert_eq!(plan.entry(b).min_atoms_per_shard, DEFAULT_MIN_ATOMS_PER_SHARD);
+        }
+    }
+
+    #[test]
+    fn planned_engine_routes_by_bucket_and_counts() {
+        // distinguishable stub engines: each bucket returns its index as ei
+        struct Tagged(f64);
+        impl ForceEngine for Tagged {
+            fn name(&self) -> &str {
+                "tagged"
+            }
+            fn compute(&mut self, input: &TileInput) -> TileOutput {
+                TileOutput {
+                    ei: vec![self.0; input.num_atoms],
+                    dedr: vec![0.0; input.num_atoms * input.num_nbor * 3],
+                }
+            }
+            fn footprint(&self, _na: usize, _nn: usize) -> MemoryFootprint {
+                MemoryFootprint::new()
+            }
+        }
+        let counters = Arc::new(PlanCounters::new());
+        let engines: Vec<Box<dyn ForceEngine>> =
+            vec![Box::new(Tagged(0.0)), Box::new(Tagged(1.0)), Box::new(Tagged(2.0))];
+        let mut eng = PlannedEngine::new(engines, counters.clone()).unwrap();
+        for (na, want) in [(1usize, 0.0), (8, 1.0), (64, 2.0), (3, 0.0)] {
+            let rij = vec![0.0; na * 3];
+            let mask = vec![1.0; na];
+            let t = TileInput { num_atoms: na, num_nbor: 1, rij: &rij, mask: &mask };
+            assert_eq!(eng.compute(&t).ei[0], want, "na={na}");
+        }
+        assert_eq!(counters.dispatches(ShapeBucket::Small), 2);
+        assert_eq!(counters.dispatches(ShapeBucket::Medium), 1);
+        assert_eq!(counters.dispatches(ShapeBucket::Large), 1);
+    }
+}

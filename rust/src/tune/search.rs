@@ -1,0 +1,350 @@
+//! The calibration search: time candidate `(variant × shards)` points on
+//! representative tiles per shape bucket and pick each bucket's winner.
+//!
+//! This closes the paper's loop — the repo already *has* the strategy
+//! space (the V0→Fused ladder, `ShardedEngine`, the thread pool); the
+//! search walks it automatically instead of a human reading
+//! `BENCH_grind.json`.  Two cost controls keep it cheap enough to run at
+//! deployment time:
+//!
+//! * **early pruning** — candidates are timed rep by rep; once a
+//!   candidate's running *minimum* exceeds the incumbent's *median* it can
+//!   no longer win (the comparison statistic is the median, see
+//!   [`crate::bench::BenchStats::p50_secs`]) and its remaining reps are
+//!   skipped;
+//! * **a wall-clock budget** (`--budget-ms`) — when it expires, unexplored
+//!   candidates are skipped and any bucket without a measured winner keeps
+//!   its default-plan entry.  The search degrades gracefully, it never
+//!   blocks a deployment.
+
+use super::plan::{PlanEntry, PlanKey, ShapeBucket, TunedPlan};
+use crate::bench::{BenchStats, Workload};
+use crate::snap::coeff::SnapCoeffs;
+use crate::snap::engine::{EngineFactory, TileInput};
+use crate::snap::sharded::{build_sharded, DEFAULT_MIN_ATOMS_PER_SHARD};
+use crate::snap::variants::Variant;
+use crate::snap::{SnapIndex, SnapParams};
+use crate::util::Stopwatch;
+use std::sync::Arc;
+
+/// Knobs of one calibration run.
+#[derive(Clone, Debug)]
+pub struct SearchOptions {
+    pub twojmax: usize,
+    /// Wall-clock cap for the whole search, ms (0 = uncapped).
+    pub budget_ms: u64,
+    pub warmup: usize,
+    /// Timed reps per candidate (pruning may cut a candidate short).
+    pub reps: usize,
+    /// Lattice cells of the tungsten calibration workload; validated by
+    /// [`calibrate`] to satisfy the minimum-image limit and supply at
+    /// least [`ShapeBucket::Large`]'s representative atom count.
+    pub cells: usize,
+    /// Shard counts to explore (deduplicated, always includes 1).
+    pub shard_candidates: Vec<usize>,
+    /// Ladder variants to explore.
+    pub variant_candidates: Vec<Variant>,
+}
+
+impl SearchOptions {
+    /// Defaults: the contending top of the ladder × power-of-two shard
+    /// counts up to the lane count, 5 reps, a 10 s budget.
+    pub fn new(twojmax: usize) -> SearchOptions {
+        SearchOptions {
+            twojmax,
+            budget_ms: 10_000,
+            warmup: 1,
+            reps: 5,
+            cells: 4, // 128 atoms = the large bucket's representative tile
+            shard_candidates: default_shard_candidates(crate::util::parallel::num_threads()),
+            variant_candidates: vec![
+                Variant::V5,
+                Variant::V6,
+                Variant::V7,
+                Variant::Fused,
+                Variant::FusedAosoa,
+            ],
+        }
+    }
+}
+
+/// Powers of two up to `threads`, plus `threads` itself: the shard counts
+/// worth distinguishing on a pool with that many lanes.
+pub fn default_shard_candidates(threads: usize) -> Vec<usize> {
+    let mut out = vec![1usize];
+    let mut s = 2;
+    while s < threads {
+        out.push(s);
+        s *= 2;
+    }
+    if threads > 1 {
+        out.push(threads);
+    }
+    out
+}
+
+/// One explored candidate — a point of the search frontier recorded in
+/// `BENCH_tune.json` (see [`crate::bench::tune_json`]).
+#[derive(Clone, Debug)]
+pub struct TunePoint {
+    pub bucket: ShapeBucket,
+    /// Atom rows of the representative tile this candidate was timed on.
+    pub atoms: usize,
+    pub variant: Variant,
+    pub shards: usize,
+    pub min_atoms_per_shard: usize,
+    /// Statistics over the reps actually timed (pruning may stop early).
+    pub stats: BenchStats,
+    /// True when pruning cut this candidate short.
+    pub pruned: bool,
+    /// True for each bucket's winner.
+    pub chosen: bool,
+}
+
+/// Result of a calibration run: the winning plan plus the full frontier.
+#[derive(Clone, Debug)]
+pub struct TuneOutcome {
+    pub plan: TunedPlan,
+    pub frontier: Vec<TunePoint>,
+    /// True when the budget expired before the candidate grid was covered.
+    pub budget_exhausted: bool,
+}
+
+/// Run the search and assemble a [`TunedPlan`] for the current process key.
+///
+/// Timing uses synthetic coefficients — candidate *speed* is independent of
+/// coefficient values, and the resulting plan carries no physics, only an
+/// engine choice.
+pub fn calibrate(opts: &SearchOptions) -> anyhow::Result<TuneOutcome> {
+    anyhow::ensure!(!opts.variant_candidates.is_empty(), "no variant candidates");
+    let key = PlanKey::current(opts.twojmax);
+    let params = SnapParams::with_twojmax(opts.twojmax);
+    // validate the calibration geometry up front: a clean CLI error beats
+    // the workload builder's minimum-image assert, and the large bucket
+    // must genuinely be measured on a large tile (bcc: 2 atoms per cell)
+    anyhow::ensure!(
+        opts.cells as f64 * crate::md::lattice::BCC_W_LATTICE > 2.0 * params.rcut(),
+        "--cells {} is below the minimum-image limit for rcut {:.3} (need > {:.1} cells)",
+        opts.cells,
+        params.rcut(),
+        2.0 * params.rcut() / crate::md::lattice::BCC_W_LATTICE
+    );
+    let large_atoms = ShapeBucket::Large.representative_atoms();
+    anyhow::ensure!(
+        2 * opts.cells.pow(3) >= large_atoms,
+        "--cells {} gives {} atoms; the large bucket's representative tile needs {}",
+        opts.cells,
+        2 * opts.cells.pow(3),
+        large_atoms
+    );
+    let idx = Arc::new(SnapIndex::new(opts.twojmax));
+    let coeffs = SnapCoeffs::synthetic(opts.twojmax, idx.idxb_max, 42);
+    let w = Workload::tungsten(opts.cells, params.rcut());
+
+    let mut shard_candidates: Vec<usize> =
+        opts.shard_candidates.iter().copied().filter(|&s| s >= 1).collect();
+    if !shard_candidates.contains(&1) {
+        shard_candidates.push(1);
+    }
+    shard_candidates.sort_unstable();
+    shard_candidates.dedup();
+
+    let sw = Stopwatch::start();
+    let over_budget =
+        |sw: &Stopwatch| opts.budget_ms > 0 && sw.elapsed_secs() * 1e3 > opts.budget_ms as f64;
+
+    let mut plan = TunedPlan::default_plan(key);
+    let mut frontier = Vec::new();
+    let mut budget_exhausted = false;
+
+    for bucket in ShapeBucket::ALL {
+        let na = bucket.representative_atoms();
+        let nn = w.num_nbor;
+        // representative tile: a leading atom-range slice of the workload
+        // (the same sub-tile view `ShardedEngine` uses)
+        let tile = TileInput {
+            num_atoms: na,
+            num_nbor: nn,
+            rij: &w.rij[..na * nn * 3],
+            mask: &w.mask[..na * nn],
+        };
+        // incumbent: (frontier index, median secs) of the bucket's best
+        let mut incumbent: Option<(usize, f64)> = None;
+        'candidates: for &variant in &opts.variant_candidates {
+            let factory: EngineFactory = {
+                let idx = idx.clone();
+                let beta = coeffs.beta.clone();
+                Arc::new(move || Ok(variant.build(params, idx.clone(), beta.clone())))
+            };
+            for &shards in &shard_candidates {
+                let min_atoms = if shards > 1 { DEFAULT_MIN_ATOMS_PER_SHARD } else { 1 };
+                // a shard count the floor collapses to serial duplicates
+                // the shards=1 candidate; skip it
+                if shards > 1 && na / shards < min_atoms {
+                    continue;
+                }
+                if over_budget(&sw) {
+                    budget_exhausted = true;
+                    break 'candidates;
+                }
+                let mut engine = build_sharded(&factory, shards, min_atoms)?;
+                for _ in 0..opts.warmup {
+                    std::hint::black_box(engine.compute(&tile));
+                }
+                let mut samples = Vec::with_capacity(opts.reps);
+                let mut running_min = f64::INFINITY;
+                let mut pruned = false;
+                for _ in 0..opts.reps.max(1) {
+                    let rep = Stopwatch::start();
+                    std::hint::black_box(engine.compute(&tile));
+                    let secs = rep.elapsed_secs();
+                    samples.push(secs);
+                    running_min = running_min.min(secs);
+                    // prune: the best this candidate has shown is already
+                    // slower than the incumbent's median — it cannot win
+                    if let Some((_, inc_p50)) = incumbent {
+                        if running_min > inc_p50 {
+                            pruned = true;
+                            break;
+                        }
+                    }
+                    if over_budget(&sw) {
+                        // budget expired mid-candidate: a truncated sample
+                        // set may be a one-rep fluke, so an incomplete
+                        // candidate is marked pruned — ineligible for
+                        // incumbency — instead of winning on partial stats
+                        budget_exhausted = true;
+                        if samples.len() < opts.reps.max(1) {
+                            pruned = true;
+                        }
+                        break;
+                    }
+                }
+                let stats = BenchStats::from_samples(&samples);
+                let point_idx = frontier.len();
+                frontier.push(TunePoint {
+                    bucket,
+                    atoms: na,
+                    variant,
+                    shards,
+                    min_atoms_per_shard: min_atoms,
+                    stats,
+                    pruned,
+                    chosen: false,
+                });
+                let beats_incumbent =
+                    incumbent.map_or(true, |(_, inc_p50)| stats.p50_secs < inc_p50);
+                if !pruned && beats_incumbent {
+                    incumbent = Some((point_idx, stats.p50_secs));
+                }
+                if budget_exhausted {
+                    break 'candidates;
+                }
+            }
+        }
+        if let Some((winner, _)) = incumbent {
+            frontier[winner].chosen = true;
+            let p = &frontier[winner];
+            plan.set_entry(
+                bucket,
+                PlanEntry {
+                    variant: p.variant,
+                    shards: p.shards,
+                    min_atoms_per_shard: p.min_atoms_per_shard,
+                },
+            );
+        }
+        // no winner (budget expired first): the bucket keeps its
+        // default-plan entry
+    }
+    Ok(TuneOutcome { plan, frontier, budget_exhausted })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_candidates_cover_powers_of_two() {
+        assert_eq!(default_shard_candidates(1), vec![1]);
+        assert_eq!(default_shard_candidates(2), vec![1, 2]);
+        assert_eq!(default_shard_candidates(4), vec![1, 2, 4]);
+        assert_eq!(default_shard_candidates(6), vec![1, 2, 4, 6]);
+        assert_eq!(default_shard_candidates(8), vec![1, 2, 4, 8]);
+    }
+
+    #[test]
+    fn calibrate_picks_a_winner_per_bucket() {
+        let opts = SearchOptions {
+            budget_ms: 0, // uncapped: 2J2 on tiny tiles is cheap
+            warmup: 0,
+            reps: 3,
+            variant_candidates: vec![Variant::V7, Variant::Fused],
+            shard_candidates: vec![1, 2],
+            ..SearchOptions::new(2)
+        };
+        let out = calibrate(&opts).unwrap();
+        assert!(!out.budget_exhausted);
+        for bucket in ShapeBucket::ALL {
+            let bucket_points: Vec<_> =
+                out.frontier.iter().filter(|p| p.bucket == bucket).collect();
+            assert!(!bucket_points.is_empty(), "bucket {bucket:?} unexplored");
+            assert_eq!(
+                bucket_points.iter().filter(|p| p.chosen).count(),
+                1,
+                "bucket {bucket:?} needs exactly one winner"
+            );
+            let winner = bucket_points.iter().find(|p| p.chosen).unwrap();
+            assert!(!winner.pruned, "a pruned candidate cannot win");
+            let e = out.plan.entry(bucket);
+            assert_eq!(e.variant, winner.variant);
+            assert_eq!(e.shards, winner.shards);
+            // the winner has the smallest median among unpruned candidates
+            for p in &bucket_points {
+                if !p.pruned {
+                    assert!(winner.stats.p50_secs <= p.stats.p50_secs);
+                }
+            }
+        }
+        // small bucket (2 atoms) cannot fan out past the floor: every
+        // explored point there is serial
+        assert!(out
+            .frontier
+            .iter()
+            .filter(|p| p.bucket == ShapeBucket::Small)
+            .all(|p| p.shards == 1));
+        assert_eq!(out.plan.key, PlanKey::current(2));
+    }
+
+    #[test]
+    fn bad_cells_is_a_clean_error_not_a_panic() {
+        // below the minimum-image limit for the tungsten cutoff
+        let small_box = SearchOptions { cells: 2, ..SearchOptions::new(2) };
+        assert!(calibrate(&small_box).is_err());
+        // a legal box that still cannot host the large bucket's 128-atom
+        // representative tile (2 * 3^3 = 54 atoms)
+        let too_few = SearchOptions { cells: 3, ..SearchOptions::new(2) };
+        let err = format!("{:#}", calibrate(&too_few).unwrap_err());
+        assert!(err.contains("54 atoms"), "{err}");
+    }
+
+    #[test]
+    fn exhausted_budget_degrades_to_the_default_plan() {
+        let opts = SearchOptions {
+            budget_ms: 1, // expires essentially immediately
+            warmup: 0,
+            reps: 2,
+            variant_candidates: vec![Variant::Fused],
+            shard_candidates: vec![1],
+            ..SearchOptions::new(2)
+        };
+        let out = calibrate(&opts).unwrap();
+        let key = PlanKey::current(2);
+        // whether or not the first candidate squeezed in, every bucket has
+        // a valid entry and nothing panicked
+        for bucket in ShapeBucket::ALL {
+            assert!(out.plan.entry(bucket).shards >= 1);
+        }
+        assert_eq!(out.plan.key, key);
+    }
+}

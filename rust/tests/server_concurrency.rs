@@ -263,6 +263,12 @@ fn stats_counters_add_up() {
     assert!(get("jobs_dispatched") >= 1 && get("jobs_dispatched") <= valid);
     assert_eq!(get("workers"), 4);
     assert_eq!(get("connections_total"), 1);
+    // without --plan the plan section reports the classic path
+    assert_eq!(
+        s.get("plan").and_then(|p| p.get("source")).and_then(Json::as_str),
+        Some("off"),
+        "{stats_reply}"
+    );
     drop(client);
     let stats = srv.stats.clone();
     srv.finish();
@@ -338,6 +344,7 @@ fn sharded_workers_are_byte_identical_and_observable() {
         queue_depth: 64,
         max_batch_atoms: 32,
         shards: 3,
+        ..ServeOptions::default()
     };
     let srv = TestServer::start(opts, "fused", 2);
     let mut client = Client::connect(srv.addr);
@@ -357,6 +364,106 @@ fn sharded_workers_are_byte_identical_and_observable() {
     );
     drop(client);
     srv.finish();
+}
+
+/// A server started from a persisted plan must (1) load it without
+/// re-tuning — cache hit visible in stats — (2) expose the per-bucket
+/// choices and dispatch counters over the wire, and (3) keep replies
+/// byte-identical to the chosen serial variant (plans change speed, never
+/// physics).
+#[test]
+fn planned_server_reports_plan_stats_and_stays_bitwise() {
+    use repro::coordinator::server::PlanSetup;
+    use repro::tune::{self, PlanCounters, PlanEntry, PlanKey, ShapeBucket, TunedPlan};
+
+    // persist a plan for this process's exact key: medium tiles on a
+    // 2-way-sharded V7, everything else on the default fused entries
+    let key = PlanKey::current(2);
+    let mut plan = TunedPlan::default_plan(key);
+    let v7 = repro::snap::variants::Variant::V7;
+    plan.set_entry(
+        ShapeBucket::Medium,
+        PlanEntry { variant: v7, shards: 2, min_atoms_per_shard: 4 },
+    );
+    let path = std::env::temp_dir()
+        .join(format!("repro_plan_server_test_{}.json", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    tune::cache::save(&path, &plan).unwrap();
+    let sel = tune::cache::resolve(&path, key).expect("path spec resolves");
+    assert!(sel.cache.is_hit(), "freshly saved plan must hit: {:?}", sel.cache);
+
+    // ground truth: the chosen variants served serially
+    let small = request_line(50, 2, 4); // small bucket -> fused
+    let medium = request_line(51, 12, 4); // medium bucket -> V7 (sharded 2x)
+    let seq = TestServer::start(sequential_opts(), "fused", 2);
+    let mut client = Client::connect(seq.addr);
+    let want_small = client.roundtrip(&small);
+    drop(client);
+    seq.finish();
+    let seq = TestServer::start(sequential_opts(), "V7", 2);
+    let mut client = Client::connect(seq.addr);
+    let want_medium = client.roundtrip(&medium);
+    drop(client);
+    seq.finish();
+
+    // plan-driven server
+    let idx = SnapIndex::new(2);
+    let coeffs = SnapCoeffs::synthetic(2, idx.idxb_max, 42);
+    let counters = std::sync::Arc::new(PlanCounters::new());
+    let planned_factory =
+        repro::config::planned_engine_factory(&sel.plan, coeffs.beta, counters.clone()).unwrap();
+    let opts = ServeOptions {
+        workers: 2,
+        batch_window: std::time::Duration::ZERO,
+        queue_depth: 64,
+        max_batch_atoms: 32,
+        shards: 1,
+        plan: Some(PlanSetup::from_selection(&sel, counters)),
+    };
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stats = Arc::new(ServerStats::default());
+    let (stop2, stats2) = (stop.clone(), stats.clone());
+    let handle = std::thread::spawn(move || {
+        serve_with_stats(listener, planned_factory, &opts, stop2, stats2)
+    });
+
+    let mut client = Client::connect(addr);
+    assert_eq!(client.roundtrip(&small), want_small, "small bucket diverges from fused");
+    assert_eq!(client.roundtrip(&medium), want_medium, "medium bucket diverges from V7");
+    let stats_reply = client.roundtrip("{\"cmd\": \"stats\"}");
+    let j = Json::parse(&stats_reply).expect("stats reply parses");
+    let p = j.get("stats").and_then(|s| s.get("plan")).expect("plan section");
+    assert_eq!(p.get("source").and_then(Json::as_str), Some(path.as_str()), "{stats_reply}");
+    assert_eq!(p.get("cache").and_then(Json::as_str), Some("hit"), "{stats_reply}");
+    assert_eq!(p.get("cache_hits").and_then(Json::as_usize), Some(1), "{stats_reply}");
+    assert_eq!(p.get("cache_misses").and_then(Json::as_usize), Some(0), "{stats_reply}");
+    let buckets = p.get("buckets").and_then(Json::as_arr).expect("buckets array");
+    assert_eq!(buckets.len(), 3);
+    let medium_bucket = buckets
+        .iter()
+        .find(|b| b.get("bucket").and_then(Json::as_str) == Some("medium"))
+        .expect("medium bucket");
+    assert_eq!(medium_bucket.get("variant").and_then(Json::as_str), Some("V7"));
+    assert_eq!(medium_bucket.get("shards").and_then(Json::as_usize), Some(2));
+    assert_eq!(
+        medium_bucket.get("dispatches").and_then(Json::as_usize),
+        Some(1),
+        "{stats_reply}"
+    );
+    let small_bucket = buckets
+        .iter()
+        .find(|b| b.get("bucket").and_then(Json::as_str) == Some("small"))
+        .expect("small bucket");
+    assert_eq!(small_bucket.get("variant").and_then(Json::as_str), Some("VI-fused"));
+    assert_eq!(small_bucket.get("dispatches").and_then(Json::as_usize), Some(1));
+
+    drop(client);
+    shutdown(addr, &stop);
+    handle.join().unwrap().unwrap();
+    std::fs::remove_file(&path).unwrap();
 }
 
 #[test]

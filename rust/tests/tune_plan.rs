@@ -1,0 +1,134 @@
+//! Autotuner integration tests: the full tune → persist → load → serve
+//! cycle, and the determinism contract — plan-driven engines are bitwise
+//! identical to the serial reference of each bucket's chosen variant
+//! (tuning changes speed, never physics).
+
+use repro::snap::coeff::SnapCoeffs;
+use repro::snap::engine::TileInput;
+use repro::snap::variants::Variant;
+use repro::snap::SnapIndex;
+use repro::tune::{
+    calibrate, PlanCounters, PlanEntry, PlanKey, SearchOptions, ShapeBucket, TunedPlan,
+};
+use repro::util::json::Json;
+use repro::util::XorShift;
+use std::sync::Arc;
+
+fn random_tile(seed: u64, na: usize, nn: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = XorShift::new(seed);
+    let mut rij = Vec::new();
+    let mut mask = Vec::new();
+    for _ in 0..na * nn {
+        for _ in 0..3 {
+            rij.push(rng.uniform(-2.4, 2.4));
+        }
+        mask.push(if rng.next_f64() > 0.25 { 1.0 } else { 0.0 });
+    }
+    (rij, mask)
+}
+
+/// The acceptance-criterion determinism proof: for every shape bucket, a
+/// plan-driven dispatch returns exactly the bytes the chosen variant's
+/// plain serial engine returns.
+#[test]
+fn plan_driven_engines_match_serial_reference_bitwise() {
+    let twojmax = 2usize;
+    let idx = SnapIndex::new(twojmax);
+    let coeffs = SnapCoeffs::synthetic(twojmax, idx.idxb_max, 9);
+    let key = PlanKey { twojmax, threads: repro::util::parallel::num_threads() };
+    let mut plan = TunedPlan::default_plan(key);
+    plan.set_entry(
+        ShapeBucket::Small,
+        PlanEntry { variant: Variant::V7, shards: 1, min_atoms_per_shard: 1 },
+    );
+    plan.set_entry(
+        ShapeBucket::Medium,
+        PlanEntry { variant: Variant::Fused, shards: 3, min_atoms_per_shard: 4 },
+    );
+    plan.set_entry(
+        ShapeBucket::Large,
+        PlanEntry { variant: Variant::FusedAosoa, shards: 4, min_atoms_per_shard: 4 },
+    );
+
+    let counters = Arc::new(PlanCounters::new());
+    let factory =
+        repro::config::planned_engine_factory(&plan, coeffs.beta.clone(), counters.clone())
+            .unwrap();
+    let mut planned = factory().unwrap();
+
+    let params = repro::snap::SnapParams::with_twojmax(twojmax);
+    let idx = Arc::new(SnapIndex::new(twojmax));
+    let cases = [
+        (ShapeBucket::Small, 2usize),
+        (ShapeBucket::Medium, 12),
+        (ShapeBucket::Large, 80),
+    ];
+    for (bucket, na) in cases {
+        let nn = 5usize;
+        let (rij, mask) = random_tile(100 + na as u64, na, nn);
+        let tile = TileInput { num_atoms: na, num_nbor: nn, rij: &rij, mask: &mask };
+        let entry = plan.entry(bucket);
+        let mut serial = entry.variant.build(params, idx.clone(), coeffs.beta.clone());
+        let want = serial.compute(&tile);
+        let got = planned.compute(&tile);
+        assert_eq!(want.ei, got.ei, "{bucket:?}: ei diverges from serial {}", serial.name());
+        assert_eq!(want.dedr, got.dedr, "{bucket:?}: dedr diverges from serial");
+        assert_eq!(counters.dispatches(bucket), 1, "{bucket:?} not routed");
+    }
+}
+
+/// End-to-end lifecycle: calibrate → persist → reload hits the cache with
+/// an identical plan, and the BENCH_tune frontier record is well-formed
+/// (valid JSON, every bucket explored, exactly one chosen winner each,
+/// chosen points consistent with the plan).
+#[test]
+fn tune_persist_reload_cycle() {
+    let opts = SearchOptions {
+        budget_ms: 0,
+        warmup: 0,
+        reps: 3,
+        variant_candidates: vec![Variant::V7, Variant::Fused],
+        shard_candidates: vec![1, 2],
+        ..SearchOptions::new(2)
+    };
+    let outcome = calibrate(&opts).unwrap();
+
+    // persist + reload: identical plan, cache hit under the same key
+    let path = std::env::temp_dir()
+        .join(format!("repro_tune_cycle_{}.json", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    repro::tune::cache::save(&path, &outcome.plan).unwrap();
+    let (loaded, status) = repro::tune::cache::load_or_default(&path, outcome.plan.key);
+    assert!(status.is_hit(), "{status:?}");
+    assert_eq!(loaded, outcome.plan);
+    std::fs::remove_file(&path).unwrap();
+
+    // the frontier record: parseable, complete, consistent
+    let text = repro::bench::tune_json(&outcome.plan.key, &outcome.frontier);
+    let j = Json::parse(text.trim()).expect("BENCH_tune.json must parse");
+    assert_eq!(j.get("bench").and_then(Json::as_str), Some("tune"));
+    assert_eq!(j.get("twojmax").and_then(Json::as_usize), Some(2));
+    let points = j.get("points").and_then(Json::as_arr).expect("points");
+    assert_eq!(points.len(), outcome.frontier.len());
+    for bucket in ShapeBucket::ALL {
+        let of_bucket: Vec<&Json> = points
+            .iter()
+            .filter(|p| p.get("bucket").and_then(Json::as_str) == Some(bucket.label()))
+            .collect();
+        assert!(!of_bucket.is_empty(), "bucket {bucket:?} missing from record");
+        let chosen: Vec<&&Json> = of_bucket
+            .iter()
+            .filter(|p| p.get("chosen") == Some(&Json::Bool(true)))
+            .collect();
+        assert_eq!(chosen.len(), 1, "bucket {bucket:?}: exactly one winner");
+        let e = outcome.plan.entry(bucket);
+        assert_eq!(
+            chosen[0].get("variant").and_then(Json::as_str),
+            Some(e.variant.label()),
+            "plan/record winner mismatch for {bucket:?}"
+        );
+        assert_eq!(chosen[0].get("shards").and_then(Json::as_usize), Some(e.shards));
+        assert!(chosen[0].get("p50_ms").and_then(Json::as_f64).unwrap() > 0.0);
+    }
+}
