@@ -57,29 +57,24 @@ fn main() -> anyhow::Result<()> {
         "# md_tungsten: {natoms} atoms bcc W, 2J={twojmax}, engine={engine_name}, \
          shards={shards}, plan={plan_spec}"
     );
-    // with sharding (or a plan's large-bucket fan-out), widen the tile so
-    // every shard gets a full serial tile's worth of atoms per dispatch
-    let resolution =
-        repro::config::resolve_planned_factory(&plan_spec, twojmax, coeffs.beta.clone())?;
-    let field = match resolution {
-        Some(r) => {
-            println!("# plan: {} (cache {})", r.selection.source, r.selection.cache.label());
-            if engine_name != "xla:snap_2j8" || shards > 1 {
-                println!("# note: --plan overrides --engine/--shards");
-            }
-            // the planned engine fans out per bucket itself: shards=1 here
-            ForceField::from_factory(&r.factory, 1, 32 * r.fanout, 32)?
+    // one construction site for every engine shape (name/xla, sharded,
+    // plan-driven); with sharding (or a plan's large-bucket fan-out),
+    // widen the tile so every shard gets a full serial tile's worth of
+    // atoms per dispatch
+    let build = repro::config::EngineSpec::new(twojmax)
+        .engine(&engine_name)
+        .beta(coeffs.beta.clone())
+        .artifacts_dir(&artifacts)
+        .shards(shards)
+        .plan(&plan_spec)
+        .build_factory()?;
+    if let Some(p) = &build.plan {
+        println!("# plan: {} (cache {})", p.selection.source, p.selection.cache.label());
+        if engine_name != "xla:snap_2j8" || shards > 1 {
+            println!("# note: --plan overrides --engine/--shards");
         }
-        None => {
-            let factory = repro::config::engine_factory(
-                &engine_name,
-                twojmax,
-                coeffs.beta.clone(),
-                &artifacts,
-            )?;
-            ForceField::from_factory(&factory, shards, 32 * shards, 32)?
-        }
-    };
+    }
+    let field = ForceField::new((build.factory)()?, 32 * build.fanout, 32);
     let mut sim = Simulation::new(
         structure,
         field,
@@ -95,7 +90,7 @@ fn main() -> anyhow::Result<()> {
 
     println!("\n## phase 1: Langevin warm-up ({warm_steps} steps @ 300 K)");
     let sw = Stopwatch::start();
-    let warm = sim.run(warm_steps, &mut std::io::stdout());
+    let warm = sim.run(warm_steps, &mut std::io::stdout())?;
     println!(
         "# warm-up: {:.1} s, {:.2} Katom-steps/s",
         sw.elapsed_secs(),
@@ -105,7 +100,7 @@ fn main() -> anyhow::Result<()> {
     println!("\n## phase 2: NVE production ({steps} steps)");
     sim.cfg.langevin = None;
     let sw = Stopwatch::start();
-    let stats = sim.run(steps, &mut std::io::stdout());
+    let stats = sim.run(steps, &mut std::io::stdout())?;
     println!(
         "\n# NVE: {:.1} s wall, {:.2} Katom-steps/s",
         sw.elapsed_secs(),

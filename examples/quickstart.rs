@@ -38,10 +38,15 @@ fn main() -> anyhow::Result<()> {
         nl.max_count()
     );
 
-    // 4. pick an engine from the paper's ladder and evaluate
-    let engine = Variant::Fused.build(params, idx, coeffs.beta);
+    // 4. pick an engine from the paper's ladder (through the one
+    //    construction site) and evaluate
+    let engine = repro::config::EngineSpec::new(8)
+        .variant(Variant::Fused)
+        .beta(coeffs.beta.clone())
+        .shared_index(idx)
+        .build()?;
     let mut field = ForceField::new(engine, 32, 32);
-    let result = field.compute(&structure, &nl);
+    let result = field.compute(&structure, &nl)?;
 
     println!("total potential energy: {:.6} eV", result.e_pot());
     println!("per-atom energy:        {:.6} eV", result.e_pot() / nl.natoms() as f64);

@@ -6,10 +6,10 @@
 //! `harness = false`.
 
 use crate::md::{lattice, NeighborList, Structure};
-use crate::snap::engine::{EngineFactory, ForceEngine, TileInput};
+use crate::snap::engine::{ForceEngine, TileInput, TileOutput};
 use crate::snap::sharded::build_sharded;
 use crate::snap::variants::Variant;
-use crate::snap::{SnapIndex, SnapParams};
+use crate::snap::SnapIndex;
 use crate::util::Stopwatch;
 use std::sync::Arc;
 
@@ -149,12 +149,17 @@ pub struct GrindResult {
     pub stats: BenchStats,
 }
 
-/// Time one engine on one workload.
+/// Time one engine on one workload (on the allocation-free
+/// `compute_into` path, with a buffer reused across reps — what the
+/// serving/MD hot loops actually run).
 pub fn grind(engine: &mut dyn ForceEngine, w: &Workload, warmup: usize, reps: usize) -> GrindResult {
     let tile = w.tile();
+    let mut out = TileOutput::default();
     let stats = measure(
         || {
-            let out = engine.compute(&tile);
+            engine
+                .compute_into(&tile, &mut out)
+                .expect("bench dispatch failed");
             std::hint::black_box(&out);
         },
         warmup,
@@ -192,15 +197,17 @@ pub fn grind_sweep(
     warmup: usize,
     reps: usize,
 ) -> anyhow::Result<Vec<GrindPoint>> {
-    let params = SnapParams::with_twojmax(twojmax);
     let idx = Arc::new(SnapIndex::new(twojmax));
     let mut points = Vec::with_capacity(variants.len() * shard_counts.len());
     for &v in variants {
-        let factory: EngineFactory = {
-            let idx = idx.clone();
-            let beta = beta.to_vec();
-            Arc::new(move || Ok(v.build(params, idx.clone(), beta.clone())))
-        };
+        // per-variant factories through the one construction site,
+        // sharing a single SnapIndex across the whole sweep
+        let factory = crate::config::EngineSpec::new(twojmax)
+            .variant(v)
+            .beta(beta.to_vec())
+            .shared_index(idx.clone())
+            .build_factory()?
+            .factory;
         for &shards in shard_counts {
             let mut engine =
                 build_sharded(&factory, shards, crate::snap::sharded::DEFAULT_MIN_ATOMS_PER_SHARD)?;

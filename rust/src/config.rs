@@ -1,5 +1,6 @@
-//! Run configuration: a TOML-subset parser + the engine factory shared by
-//! the CLI, the examples and the experiment harness.
+//! Run configuration: a TOML-subset parser + [`EngineSpec`], the single
+//! engine-construction entry point shared by the CLI, the examples, the
+//! force server and the autotuner.
 //!
 //! The TOML subset supports flat `key = value` lines with strings, numbers
 //! and booleans plus `[section]` headers flattened to `section.key` — all
@@ -74,157 +75,272 @@ impl Toml {
     }
 }
 
-/// Build any named engine.  Names: `baseline`, `pre-adjoint-atom`,
-/// `pre-adjoint-pair`, `V1`..`V7`, `fused`, `aosoa`, or `xla:<artifact>`
-/// (e.g. `xla:snap_2j8`).
+/// The one public engine-construction entry point: a typed builder that
+/// replaces the old `(name, twojmax, beta, artifacts_dir, shards, plan)`
+/// parameter sprawl.  Every consumer — `repro run`/`serve`/`tune`, the
+/// examples, the force server's worker pool, the autotuner — describes the
+/// engine it wants declaratively and calls
+/// [`build_factory`](Self::build_factory):
 ///
-/// One-shot convenience over [`engine_factory`] — a single validation and
-/// construction site serves both the CLI `run` path and the server's
-/// worker pool.
-pub fn build_engine(
-    name: &str,
-    twojmax: usize,
-    beta: Vec<f64>,
-    artifacts_dir: &str,
-) -> Result<Box<dyn ForceEngine>> {
-    engine_factory(name, twojmax, beta, artifacts_dir)?()
-}
-
-/// Build an [`EngineFactory`]: a shared, thread-safe constructor the force
-/// server hands to each worker so every worker owns a private engine
-/// instance (engines carry mutable scratch) while the heavy immutable
-/// state — the `SnapIndex` tables — is built once and shared via `Arc`.
+/// ```no_run
+/// # use repro::config::EngineSpec;
+/// # fn main() -> anyhow::Result<()> {
+/// let build = EngineSpec::new(8)
+///     .engine("fused")              // or .variant(..) / .xla("snap_2j8")
+///     .beta(vec![0.0; 55])
+///     .artifacts_dir("artifacts")
+///     .shards(4)
+///     .plan("auto")                 // "off" = the classic engine/shards path
+///     .build_factory()?;
+/// let _engine = (build.factory)()?;
+/// # Ok(())
+/// # }
+/// ```
 ///
-/// Validation (engine name, beta length, artifact metadata) happens here,
-/// eagerly, so `serve` fails at startup rather than in a worker thread.
-pub fn engine_factory(
-    name: &str,
+/// Validation (engine name, beta length, artifact metadata, plan variants)
+/// happens eagerly in `build_factory`, so `serve` fails at startup rather
+/// than in a worker thread.
+#[derive(Clone)]
+pub struct EngineSpec {
     twojmax: usize,
-    beta: Vec<f64>,
-    artifacts_dir: &str,
-) -> Result<EngineFactory> {
-    if let Some(artifact) = name.strip_prefix("xla:") {
-        // PJRT engines own a runtime/client each, so the closure opens a
-        // fresh Runtime per build; metadata is validated once up front.
-        let artifact = artifact.to_string();
-        let artifacts_dir = artifacts_dir.to_string();
-        let probe = crate::runtime::Runtime::open(&artifacts_dir)?;
-        let meta = probe
-            .meta(&artifact)
-            .with_context(|| format!("unknown artifact {artifact}"))?;
-        anyhow::ensure!(
-            meta.twojmax == twojmax,
-            "artifact {artifact} is 2J={} but run wants 2J={twojmax}",
-            meta.twojmax
-        );
-        return Ok(Arc::new(move || {
-            let rt = crate::runtime::Runtime::open(&artifacts_dir)?;
-            let engine = crate::runtime::XlaEngine::new(rt, &artifact, beta.clone())?;
-            Ok(Box::new(engine) as Box<dyn ForceEngine>)
-        }));
-    }
-    let variant = Variant::from_label(name)
-        .ok_or_else(|| anyhow::anyhow!("unknown engine `{name}`"))?;
-    let params = crate::snap::SnapParams::with_twojmax(twojmax);
-    let idx = Arc::new(SnapIndex::new(twojmax));
-    anyhow::ensure!(
-        beta.len() == idx.idxb_max,
-        "beta length {} != {} bispectrum components",
-        beta.len(),
-        idx.idxb_max
-    );
-    Ok(Arc::new(move || Ok(variant.build(params, idx.clone(), beta.clone()))))
-}
-
-/// [`engine_factory`] with intra-tile sharding — the `--shards` knob.
-///
-/// When `shards > 1` every engine the factory produces is a
-/// [`ShardedEngine`](crate::snap::sharded::ShardedEngine) wrapping `shards`
-/// private inner engines, so one large tile fans out across cores; with
-/// `shards <= 1` this is exactly [`engine_factory`].  Validation still
-/// happens eagerly, in the inner factory.
-pub fn sharded_engine_factory(
-    name: &str,
-    twojmax: usize,
-    beta: Vec<f64>,
-    artifacts_dir: &str,
+    engine: String,
+    beta: Option<Vec<f64>>,
+    artifacts_dir: String,
     shards: usize,
-) -> Result<EngineFactory> {
-    let inner = engine_factory(name, twojmax, beta, artifacts_dir)?;
-    if shards <= 1 {
-        return Ok(inner);
-    }
-    Ok(Arc::new(move || {
-        crate::snap::sharded::build_sharded(
-            &inner,
-            shards,
-            crate::snap::sharded::DEFAULT_MIN_ATOMS_PER_SHARD,
-        )
-    }))
+    min_atoms_per_shard: usize,
+    plan_spec: String,
+    shared_index: Option<Arc<SnapIndex>>,
 }
 
-/// Build an [`EngineFactory`] realizing a [`TunedPlan`] — the `--plan`
-/// knob.  Every engine the factory produces is a
-/// [`PlannedEngine`](crate::tune::PlannedEngine) owning one (possibly
-/// sharded) inner engine per tile-shape bucket, so each dispatch is routed
-/// to the configuration the autotuner measured fastest for that shape.
-///
-/// The single construction site next to [`sharded_engine_factory`]: the
-/// CLI `run` path, `md_tungsten` and the force server's worker pool all
-/// build plan-driven engines here.  Per-bucket validation (variant, beta
-/// length) happens eagerly; `counters` is shared by every produced engine
-/// so bucket routing stays observable (server stats, `--plan` reports).
-pub fn planned_engine_factory(
-    plan: &TunedPlan,
-    beta: Vec<f64>,
-    counters: Arc<PlanCounters>,
-) -> Result<EngineFactory> {
-    let mut buckets = Vec::with_capacity(ShapeBucket::ALL.len());
-    for bucket in ShapeBucket::ALL {
-        let entry = plan.entry(bucket);
-        let inner =
-            engine_factory(entry.variant.label(), plan.key.twojmax, beta.clone(), "artifacts")
-                .with_context(|| format!("plan bucket `{}`", bucket.label()))?;
-        buckets.push((inner, entry.shards, entry.min_atoms_per_shard));
-    }
-    Ok(Arc::new(move || {
-        let mut engines = Vec::with_capacity(buckets.len());
-        for (inner, shards, min_atoms) in &buckets {
-            engines.push(crate::snap::sharded::build_sharded(inner, *shards, *min_atoms)?);
-        }
-        Ok(Box::new(PlannedEngine::new(engines, counters.clone())?) as Box<dyn ForceEngine>)
-    }))
-}
-
-/// A resolved `--plan` spec, ready to execute: the factory, the selection
-/// it came from, the shared dispatch counters, and the large-bucket
-/// fan-out (the tile-sizing heuristic the CLI paths share).
+/// A resolved `--plan` spec riding along a built factory: the selection
+/// (plan + origin + cache-load outcome) and the dispatch counters shared
+/// by every engine the factory produces.
 pub struct PlanResolution {
-    pub factory: EngineFactory,
     pub selection: crate::tune::PlanSelection,
     pub counters: Arc<PlanCounters>,
-    /// `plan.entry(Large).shards` — how wide the biggest tiles fan out.
+}
+
+/// Result of [`EngineSpec::build_factory`]: the shared, thread-safe
+/// constructor the force server hands to each worker (every worker owns a
+/// private engine — engines carry mutable scratch — while the heavy
+/// immutable state, the `SnapIndex` tables, is built once and shared via
+/// `Arc`), plus the resolved plan (if any) and the large-tile fan-out the
+/// CLI paths use to size tiles.
+pub struct EngineBuild {
+    pub factory: EngineFactory,
+    /// `Some` when the spec's plan resolved (i.e. not `"off"`).
+    pub plan: Option<PlanResolution>,
+    /// How wide the biggest tiles fan out: `shards` on the classic path,
+    /// the plan's large-bucket shard count on the plan path.
     pub fanout: usize,
 }
 
-/// Resolve a `--plan auto|<path>|off` spec and build the planned factory
-/// in one step — the single site behind the `run`/`serve`/`md_tungsten`
-/// plan paths (`off` returns `None`: the classic `--engine`/`--shards`
-/// path applies).
-pub fn resolve_planned_factory(
-    spec: &str,
-    twojmax: usize,
-    beta: Vec<f64>,
-) -> Result<Option<PlanResolution>> {
-    let Some(selection) =
-        crate::tune::cache::resolve(spec, crate::tune::PlanKey::current(twojmax))
-    else {
-        return Ok(None);
-    };
-    let counters = Arc::new(PlanCounters::new());
-    let factory = planned_engine_factory(&selection.plan, beta, counters.clone())?;
-    let fanout = selection.plan.entry(ShapeBucket::Large).shards.max(1);
-    Ok(Some(PlanResolution { factory, selection, counters, fanout }))
+impl EngineSpec {
+    /// Start a spec for a `2J = twojmax` descriptor.  Defaults: engine
+    /// `fused`, artifacts dir `artifacts`, serial (no shards), plan `off`.
+    pub fn new(twojmax: usize) -> EngineSpec {
+        EngineSpec {
+            twojmax,
+            engine: "fused".to_string(),
+            beta: None,
+            artifacts_dir: "artifacts".to_string(),
+            shards: 1,
+            min_atoms_per_shard: crate::snap::sharded::DEFAULT_MIN_ATOMS_PER_SHARD,
+            plan_spec: "off".to_string(),
+            shared_index: None,
+        }
+    }
+
+    /// Engine by name — the stringly front door for CLI flags: a ladder
+    /// label (`baseline`, `V1`..`V7`, `fused`, `aosoa`, ...) or
+    /// `xla:<artifact>`.  Validated at build with a diagnostic listing the
+    /// valid labels.
+    pub fn engine(mut self, name: impl Into<String>) -> EngineSpec {
+        self.engine = name.into();
+        self
+    }
+
+    /// Engine by typed ladder variant.
+    pub fn variant(mut self, v: Variant) -> EngineSpec {
+        self.engine = v.label().to_string();
+        self
+    }
+
+    /// PJRT-backed engine from an AOT artifact (`xla:<artifact>`).
+    pub fn xla(mut self, artifact: impl std::fmt::Display) -> EngineSpec {
+        self.engine = format!("xla:{artifact}");
+        self
+    }
+
+    /// SNAP linear coefficients (required; length-checked at build).
+    pub fn beta(mut self, beta: Vec<f64>) -> EngineSpec {
+        self.beta = Some(beta);
+        self
+    }
+
+    /// Where `xla:` artifacts resolve (the `--artifacts` flag) — including
+    /// any chosen by a plan.
+    pub fn artifacts_dir(mut self, dir: impl Into<String>) -> EngineSpec {
+        self.artifacts_dir = dir.into();
+        self
+    }
+
+    /// Intra-tile shard count (the `--shards` knob): `> 1` wraps every
+    /// built engine in a [`ShardedEngine`](crate::snap::sharded::ShardedEngine).
+    /// Ignored on the plan path — per-bucket fan-out is the plan's job.
+    pub fn shards(mut self, shards: usize) -> EngineSpec {
+        self.shards = shards.max(1);
+        self
+    }
+
+    /// Fan-out floor for the sharded wrapper (atoms per shard below which
+    /// a tile stays serial).
+    pub fn min_atoms_per_shard(mut self, min: usize) -> EngineSpec {
+        self.min_atoms_per_shard = min.max(1);
+        self
+    }
+
+    /// Autotune plan spec: `off` (default) keeps the engine/shards path;
+    /// `auto` loads the plan cache; anything else is a plan-file path.
+    /// When the spec resolves, built engines are
+    /// [`PlannedEngine`](crate::tune::PlannedEngine)s routing each tile to
+    /// its shape bucket's tuned configuration, and `engine`/`shards` are
+    /// ignored.
+    pub fn plan(mut self, spec: impl Into<String>) -> EngineSpec {
+        self.plan_spec = spec.into();
+        self
+    }
+
+    /// Share a prebuilt `SnapIndex` instead of rebuilding one per spec —
+    /// for callers (the tuner's candidate sweep, the grind sweep) that
+    /// build many factories at the same `twojmax`.
+    pub fn shared_index(mut self, idx: Arc<SnapIndex>) -> EngineSpec {
+        self.shared_index = Some(idx);
+        self
+    }
+
+    /// Validate and build.  The factory is `Send + Sync + Clone` (an
+    /// `Arc`), so the server can hand it to N workers.
+    pub fn build_factory(&self) -> Result<EngineBuild> {
+        let beta = self
+            .beta
+            .clone()
+            .context("EngineSpec needs coefficients: call .beta(..)")?;
+        if let Some(selection) = crate::tune::cache::resolve(
+            &self.plan_spec,
+            crate::tune::PlanKey::current(self.twojmax),
+        ) {
+            return self.build_planned(selection, beta);
+        }
+        let inner = self.base_factory(&self.engine, beta)?;
+        let shards = self.shards;
+        if shards <= 1 {
+            return Ok(EngineBuild { factory: inner, plan: None, fanout: 1 });
+        }
+        let min_atoms = self.min_atoms_per_shard;
+        let factory: EngineFactory = Arc::new(move || {
+            crate::snap::sharded::build_sharded(&inner, shards, min_atoms)
+        });
+        Ok(EngineBuild { factory, plan: None, fanout: shards })
+    }
+
+    /// One-shot convenience over [`build_factory`](Self::build_factory)
+    /// for single-engine consumers (the CLI `run` path, experiments).
+    pub fn build(&self) -> Result<Box<dyn ForceEngine>> {
+        (self.build_factory()?.factory)()
+    }
+
+    /// The plan path: one (possibly sharded) inner factory per tile-shape
+    /// bucket, assembled into [`PlannedEngine`]s sharing one counter set so
+    /// bucket routing stays observable (server stats, `--plan` reports).
+    fn build_planned(
+        &self,
+        selection: crate::tune::PlanSelection,
+        beta: Vec<f64>,
+    ) -> Result<EngineBuild> {
+        let plan: &TunedPlan = &selection.plan;
+        let counters = Arc::new(PlanCounters::new());
+        // every bucket shares one SnapIndex (same twojmax) — three bucket
+        // factories must not pay three index builds
+        let mut shared = self.clone();
+        if shared.shared_index.is_none() {
+            shared.shared_index = Some(Arc::new(SnapIndex::new(self.twojmax)));
+        }
+        let mut buckets = Vec::with_capacity(ShapeBucket::ALL.len());
+        for bucket in ShapeBucket::ALL {
+            let entry = plan.entry(bucket);
+            // plan variants resolve through the same site as --engine, so
+            // the spec's artifacts_dir applies to any xla-backed choice
+            let inner = shared
+                .base_factory(entry.variant.label(), beta.clone())
+                .with_context(|| format!("plan bucket `{}`", bucket.label()))?;
+            buckets.push((inner, entry.shards, entry.min_atoms_per_shard));
+        }
+        let fanout = plan.entry(ShapeBucket::Large).shards.max(1);
+        let factory_counters = counters.clone();
+        let factory: EngineFactory = Arc::new(move || {
+            let mut engines = Vec::with_capacity(buckets.len());
+            for (inner, shards, min_atoms) in &buckets {
+                engines.push(crate::snap::sharded::build_sharded(inner, *shards, *min_atoms)?);
+            }
+            Ok(Box::new(PlannedEngine::new(engines, factory_counters.clone())?)
+                as Box<dyn ForceEngine>)
+        });
+        Ok(EngineBuild {
+            factory,
+            plan: Some(PlanResolution { selection, counters }),
+            fanout,
+        })
+    }
+
+    /// Base (unsharded) factory for one engine name: the `xla:` branch
+    /// opens/validates the artifact eagerly; the native branch resolves the
+    /// ladder variant with a diagnostic error and length-checks beta.
+    fn base_factory(&self, name: &str, beta: Vec<f64>) -> Result<EngineFactory> {
+        if let Some(artifact) = name.strip_prefix("xla:") {
+            // PJRT engines own a runtime/client each, so the closure opens
+            // a fresh Runtime per build; metadata is validated once up
+            // front.
+            let artifact = artifact.to_string();
+            let artifacts_dir = self.artifacts_dir.clone();
+            let probe = crate::runtime::Runtime::open(&artifacts_dir)?;
+            let meta = probe
+                .meta(&artifact)
+                .with_context(|| format!("unknown artifact {artifact}"))?;
+            anyhow::ensure!(
+                meta.twojmax == self.twojmax,
+                "artifact {artifact} is 2J={} but run wants 2J={}",
+                meta.twojmax,
+                self.twojmax
+            );
+            return Ok(Arc::new(move || {
+                let rt = crate::runtime::Runtime::open(&artifacts_dir)?;
+                let engine = crate::runtime::XlaEngine::new(rt, &artifact, beta.clone())?;
+                Ok(Box::new(engine) as Box<dyn ForceEngine>)
+            }));
+        }
+        let variant = Variant::resolve_label(name)?;
+        let params = crate::snap::SnapParams::with_twojmax(self.twojmax);
+        let idx = match &self.shared_index {
+            Some(idx) => {
+                anyhow::ensure!(
+                    idx.twojmax == self.twojmax,
+                    "shared index is 2J={} but spec wants 2J={}",
+                    idx.twojmax,
+                    self.twojmax
+                );
+                idx.clone()
+            }
+            None => Arc::new(SnapIndex::new(self.twojmax)),
+        };
+        anyhow::ensure!(
+            beta.len() == idx.idxb_max,
+            "beta length {} != {} bispectrum components",
+            beta.len(),
+            idx.idxb_max
+        );
+        Ok(Arc::new(move || Ok(variant.build(params, idx.clone(), beta.clone()))))
+    }
 }
 
 /// Resolve coefficients from an input-script coefficient source.
@@ -276,31 +392,51 @@ mod tests {
         assert!(Toml::parse("novalue\n").is_err());
     }
 
+    fn beta2() -> Vec<f64> {
+        vec![0.1; SnapIndex::new(2).idxb_max]
+    }
+
     #[test]
-    fn engine_factory_builds_every_native_name() {
+    fn engine_spec_builds_every_native_name() {
         for name in [
             "baseline", "pre-adjoint-atom", "pre-adjoint-pair", "V1", "V2", "V3",
             "V4", "V5", "V6", "V7", "fused", "aosoa",
         ] {
-            let idx = SnapIndex::new(2);
-            let beta = vec![0.1; idx.idxb_max];
-            let e = build_engine(name, 2, beta, "artifacts").unwrap();
+            let e = EngineSpec::new(2).engine(name).beta(beta2()).build().unwrap();
             assert!(!e.name().is_empty());
         }
     }
 
     #[test]
-    fn engine_factory_rejects_unknown() {
-        assert!(build_engine("warp-drive", 2, vec![0.0; 5], "artifacts").is_err());
+    fn engine_spec_rejects_unknown_with_diagnostic() {
+        let err = format!(
+            "{:#}",
+            EngineSpec::new(2)
+                .engine("warp-drive")
+                .beta(vec![0.0; 5])
+                .build_factory()
+                .unwrap_err()
+        );
+        // the diagnostic lists the valid labels — at least the alias users
+        // actually type — and the xla form
+        assert!(err.contains("warp-drive"), "{err}");
+        assert!(err.contains("fused"), "{err}");
+        assert!(err.contains("xla:<artifact>"), "{err}");
+    }
+
+    #[test]
+    fn engine_spec_requires_beta() {
+        let err = format!("{:#}", EngineSpec::new(2).build_factory().unwrap_err());
+        assert!(err.contains("beta"), "{err}");
     }
 
     #[test]
     fn shared_factory_builds_independent_engines() {
-        let idx = SnapIndex::new(2);
-        let beta = vec![0.1; idx.idxb_max];
-        let factory = engine_factory("fused", 2, beta, "artifacts").unwrap();
-        let mut a = factory().unwrap();
-        let mut b = factory().unwrap();
+        let build = EngineSpec::new(2).engine("fused").beta(beta2()).build_factory().unwrap();
+        assert!(build.plan.is_none());
+        assert_eq!(build.fanout, 1);
+        let mut a = (build.factory)().unwrap();
+        let mut b = (build.factory)().unwrap();
         assert_eq!(a.name(), b.name());
         // both instances compute independently (each owns its scratch)
         let rij = vec![1.5, 0.0, 0.0, 0.0, 1.5, 0.0];
@@ -313,26 +449,43 @@ mod tests {
     }
 
     #[test]
-    fn shared_factory_validates_eagerly() {
-        assert!(engine_factory("warp-drive", 2, vec![0.0; 5], "artifacts").is_err());
-        assert!(engine_factory("fused", 8, vec![0.0; 3], "artifacts").is_err());
+    fn engine_spec_validates_eagerly() {
+        assert!(EngineSpec::new(2)
+            .engine("warp-drive")
+            .beta(vec![0.0; 5])
+            .build_factory()
+            .is_err());
+        // wrong beta length for the descriptor size
+        assert!(EngineSpec::new(8).engine("fused").beta(vec![0.0; 3]).build_factory().is_err());
+        // shards don't rescue a bad inner spec
+        assert!(EngineSpec::new(2)
+            .engine("warp-drive")
+            .beta(vec![0.0; 5])
+            .shards(4)
+            .build_factory()
+            .is_err());
+        // a shared index of the wrong size is a spec bug, caught at build
+        assert!(EngineSpec::new(8)
+            .variant(Variant::Fused)
+            .beta(vec![0.0; 55])
+            .shared_index(Arc::new(SnapIndex::new(2)))
+            .build_factory()
+            .is_err());
     }
 
     #[test]
-    fn engine_factory_checks_beta_length() {
-        assert!(build_engine("fused", 8, vec![0.0; 3], "artifacts").is_err());
-    }
-
-    #[test]
-    fn sharded_factory_wraps_and_matches_serial() {
-        let idx = SnapIndex::new(2);
-        let beta = vec![0.1; idx.idxb_max];
-        let serial_f =
-            sharded_engine_factory("fused", 2, beta.clone(), "artifacts", 1).unwrap();
-        let sharded_f =
-            sharded_engine_factory("fused", 2, beta, "artifacts", 3).unwrap();
-        let mut serial = serial_f().unwrap();
-        let mut sharded = sharded_f().unwrap();
+    fn sharded_spec_wraps_and_matches_serial() {
+        let mut serial =
+            EngineSpec::new(2).engine("fused").beta(beta2()).build().unwrap();
+        let build = EngineSpec::new(2)
+            .variant(Variant::Fused)
+            .beta(beta2())
+            .shards(3)
+            .min_atoms_per_shard(1)
+            .build_factory()
+            .unwrap();
+        assert_eq!(build.fanout, 3);
+        let mut sharded = (build.factory)().unwrap();
         assert_eq!(serial.name(), "VI-fused");
         assert_eq!(sharded.name(), "sharded3x-VI-fused");
         let rij = vec![
@@ -348,24 +501,27 @@ mod tests {
     }
 
     #[test]
-    fn sharded_factory_validates_eagerly() {
-        assert!(sharded_engine_factory("warp-drive", 2, vec![0.0; 5], "artifacts", 4).is_err());
-    }
-
-    #[test]
-    fn planned_factory_builds_bucket_routed_engines() {
+    fn plan_spec_builds_bucket_routed_engines() {
         use crate::tune::{PlanEntry, PlanKey, ShapeBucket};
 
-        let idx = SnapIndex::new(2);
-        let beta = vec![0.1; idx.idxb_max];
-        let mut plan = TunedPlan::default_plan(PlanKey { twojmax: 2, threads: 4 });
+        // persist a plan for this process's key, then resolve it by path
+        let key = PlanKey::current(2);
+        let mut plan = TunedPlan::default_plan(key);
         plan.set_entry(
             ShapeBucket::Medium,
             PlanEntry { variant: Variant::V7, shards: 2, min_atoms_per_shard: 4 },
         );
-        let counters = Arc::new(PlanCounters::new());
-        let factory = planned_engine_factory(&plan, beta.clone(), counters.clone()).unwrap();
-        let mut eng = factory().unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("repro_engine_spec_plan_{}.json", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        crate::tune::cache::save(&path, &plan).unwrap();
+
+        let build = EngineSpec::new(2).beta(beta2()).plan(&path).build_factory().unwrap();
+        let resolution = build.plan.as_ref().expect("plan spec must resolve");
+        assert!(resolution.selection.cache.is_hit());
+        assert_eq!(build.fanout, plan.entry(ShapeBucket::Large).shards.max(1));
+        let mut eng = (build.factory)().unwrap();
         assert!(eng.name().starts_with("planned["), "{}", eng.name());
         // a medium tile routes through the V7 bucket and is counted
         let na = 8usize;
@@ -374,10 +530,13 @@ mod tests {
         let t = crate::snap::TileInput { num_atoms: na, num_nbor: 2, rij: &rij, mask: &mask };
         let out = eng.compute(&t);
         assert_eq!(out.ei.len(), na);
-        assert_eq!(counters.dispatches(ShapeBucket::Medium), 1);
-        assert_eq!(counters.dispatches(ShapeBucket::Small), 0);
+        assert_eq!(resolution.counters.dispatches(ShapeBucket::Medium), 1);
+        assert_eq!(resolution.counters.dispatches(ShapeBucket::Small), 0);
         // beta validation is eager, per bucket
-        assert!(planned_engine_factory(&plan, vec![0.0; 3], Arc::new(PlanCounters::new()))
-            .is_err());
+        assert!(EngineSpec::new(2).beta(vec![0.0; 3]).plan(&path).build_factory().is_err());
+        // plan off -> the classic path, no resolution attached
+        let off = EngineSpec::new(2).beta(beta2()).plan("off").build_factory().unwrap();
+        assert!(off.plan.is_none());
+        std::fs::remove_file(&path).unwrap();
     }
 }

@@ -2,8 +2,7 @@
 //! server uses to merge small requests into one engine dispatch.
 
 use crate::md::{NeighborList, Structure};
-use crate::snap::engine::{EngineFactory, ForceEngine, OwnedTile, TileInput, TileOutput};
-use crate::snap::sharded::{build_sharded, DEFAULT_MIN_ATOMS_PER_SHARD};
+use crate::snap::engine::{EngineError, ForceEngine, OwnedTile, TileInput, TileOutput};
 use crate::util::StageTimes;
 
 /// Packs several small tiles that share one neighbor width into a single
@@ -54,7 +53,12 @@ impl TileBatch {
         self.mask.extend_from_slice(&tile.mask);
     }
 
-    /// The merged tile, ready for one `ForceEngine::compute` call.
+    /// Neighbor width shared by every member.
+    pub fn num_nbor(&self) -> usize {
+        self.num_nbor
+    }
+
+    /// The merged tile, ready for one `ForceEngine::compute_into` call.
     pub fn input(&self) -> TileInput<'_> {
         TileInput {
             num_atoms: self.num_atoms(),
@@ -64,21 +68,30 @@ impl TileBatch {
         }
     }
 
-    /// Demultiplex the merged output back into per-member outputs
-    /// (in push order).
+    /// Per-member `(first_atom_row, atom_count)` ranges in push order — the
+    /// allocation-free scatter: a member's reply is serialized straight
+    /// from its slice `ei[row..row+na]` /
+    /// `dedr[row*nn*3..(row+na)*nn*3]` of the merged output.
+    pub fn member_ranges(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        self.member_atoms.iter().scan(0usize, |row, &na| {
+            let start = *row;
+            *row += na;
+            Some((start, na))
+        })
+    }
+
+    /// Demultiplex the merged output back into per-member owned outputs
+    /// (in push order).  Allocating convenience over
+    /// [`member_ranges`](Self::member_ranges) for tests/tools.
     pub fn split(&self, out: &TileOutput) -> Vec<TileOutput> {
         assert_eq!(out.ei.len(), self.num_atoms(), "output does not match batch");
         let nn = self.num_nbor;
-        let mut parts = Vec::with_capacity(self.member_atoms.len());
-        let mut row = 0usize;
-        for &na in &self.member_atoms {
-            parts.push(TileOutput {
+        self.member_ranges()
+            .map(|(row, na)| TileOutput {
                 ei: out.ei[row..row + na].to_vec(),
                 dedr: out.dedr[row * nn * 3..(row + na) * nn * 3].to_vec(),
-            });
-            row += na;
-        }
-        parts
+            })
+            .collect()
     }
 }
 
@@ -107,26 +120,20 @@ pub struct ForceField {
     /// Neighbor slots per atom row (must be >= max neighbor count).
     pub tile_nbor: usize,
     pub times: StageTimes,
+    /// Reused per-dispatch output buffer: after the first full-size tile,
+    /// the MD hot loop performs zero per-dispatch output allocations.
+    scratch: TileOutput,
 }
 
 impl ForceField {
     pub fn new(engine: Box<dyn ForceEngine>, tile_atoms: usize, tile_nbor: usize) -> Self {
-        Self { engine, tile_atoms, tile_nbor, times: StageTimes::new() }
-    }
-
-    /// Build from an engine factory with optional intra-tile sharding:
-    /// `shards > 1` wraps every tile dispatch in a
-    /// [`crate::snap::sharded::ShardedEngine`], so one MD force evaluation
-    /// spreads its tile across cores (the `--shards` knob of `repro run` /
-    /// `md_tungsten`).  Sharding is bit-invisible to the physics.
-    pub fn from_factory(
-        factory: &EngineFactory,
-        shards: usize,
-        tile_atoms: usize,
-        tile_nbor: usize,
-    ) -> anyhow::Result<Self> {
-        let engine = build_sharded(factory, shards, DEFAULT_MIN_ATOMS_PER_SHARD)?;
-        Ok(Self::new(engine, tile_atoms, tile_nbor))
+        Self {
+            engine,
+            tile_atoms,
+            tile_nbor,
+            times: StageTimes::new(),
+            scratch: TileOutput::default(),
+        }
     }
 
     /// Evaluate energies/forces/virial for the whole system.
@@ -134,7 +141,14 @@ impl ForceField {
     /// Padding contract: rows beyond an atom's neighbor count carry
     /// mask = 0 and are inert (enforced by engine tests); whole padded
     /// atoms never occur here because tiles are cut from real atoms only.
-    pub fn compute(&mut self, s: &Structure, nl: &NeighborList) -> ForceResult {
+    ///
+    /// An engine dispatch failure aborts the evaluation with the typed
+    /// error — the MD loop surfaces it instead of unwinding mid-step.
+    pub fn compute(
+        &mut self,
+        s: &Structure,
+        nl: &NeighborList,
+    ) -> Result<ForceResult, EngineError> {
         let n = s.natoms();
         assert_eq!(nl.natoms(), n, "neighbor list does not match structure");
         let maxn = nl.max_count();
@@ -172,14 +186,17 @@ impl ForceField {
                     }
                 }
             });
-            // ---- execute ----
+            // ---- execute (into the reused scratch buffer) ----
             let input = TileInput {
                 num_atoms: count,
                 num_nbor: nn,
                 rij: &rij[..count * nn * 3],
                 mask: &mask[..count * nn],
             };
-            let out = self.times.time("execute", || self.engine.compute(&input));
+            let (engine, scratch, times) =
+                (&mut self.engine, &mut self.scratch, &mut self.times);
+            times.time("execute", || engine.compute_into(&input, scratch))?;
+            let out = &self.scratch;
             // ---- scatter ----
             self.times.time("scatter", || {
                 for a in 0..count {
@@ -208,7 +225,7 @@ impl ForceField {
                 }
             });
         }
-        result
+        Ok(result)
     }
 }
 
@@ -238,7 +255,7 @@ mod tests {
     #[test]
     fn newton_third_law_total_force_zero() {
         let (s, nl, mut ff) = small_system();
-        let r = ff.compute(&s, &nl);
+        let r = ff.compute(&s, &nl).unwrap();
         for k in 0..3 {
             let total: f64 = (0..s.natoms()).map(|i| r.forces[3 * i + k]).sum();
             assert!(total.abs() < 1e-9, "net force axis {k}: {total}");
@@ -248,11 +265,11 @@ mod tests {
     #[test]
     fn tile_size_does_not_change_physics() {
         let (s, nl, mut ff) = small_system();
-        let want = ff.compute(&s, &nl);
+        let want = ff.compute(&s, &nl).unwrap();
         for ta in [1usize, 5, 27, 64] {
             let (s2, nl2, mut ff2) = small_system();
             ff2.tile_atoms = ta;
-            let got = ff2.compute(&s2, &nl2);
+            let got = ff2.compute(&s2, &nl2).unwrap();
             let _ = s2;
             for (a, b) in want.forces.iter().zip(got.forces.iter()) {
                 assert!((a - b).abs() < 1e-10, "tile {ta}");
@@ -272,7 +289,7 @@ mod tests {
         let nl = NeighborList::build_cells(&s, p.rcut());
         let eng = Box::new(BaselineEngine::new(p, idx, coeffs.beta, Staging::Monolithic));
         let mut ff = ForceField::new(eng, 32, nl.max_count());
-        let r = ff.compute(&s, &nl);
+        let r = ff.compute(&s, &nl).unwrap();
         for f in &r.forces {
             assert!(f.abs() < 1e-9, "lattice force {f}");
         }
@@ -333,16 +350,16 @@ mod tests {
         let (mut s, _, mut ff) = small_system();
         let h = 1e-5;
         let nl0 = NeighborList::build_cells(&s, 4.73442);
-        let r0 = ff.compute(&s, &nl0);
+        let r0 = ff.compute(&s, &nl0).unwrap();
         for probe in [(3usize, 0usize), (10, 2)] {
             let (i, k) = probe;
             let orig = s.pos[3 * i + k];
             s.pos[3 * i + k] = orig + h;
             let nlp = NeighborList::build_cells(&s, 4.73442);
-            let ep = ff.compute(&s, &nlp).e_pot();
+            let ep = ff.compute(&s, &nlp).unwrap().e_pot();
             s.pos[3 * i + k] = orig - h;
             let nlm = NeighborList::build_cells(&s, 4.73442);
-            let em = ff.compute(&s, &nlm).e_pot();
+            let em = ff.compute(&s, &nlm).unwrap().e_pot();
             s.pos[3 * i + k] = orig;
             let fd = -(ep - em) / (2.0 * h);
             let got = r0.forces[3 * i + k];

@@ -35,8 +35,7 @@
 //! their clients disconnect.
 
 use crate::coordinator::force::TileBatch;
-use crate::snap::engine::{EngineFactory, ForceEngine, OwnedTile, TileOutput};
-use crate::snap::sharded::build_sharded;
+use crate::snap::engine::{EngineError, EngineFactory, ForceEngine, OwnedTile, TileOutput};
 use crate::tune::{PlanCounters, PlanSelection, ShapeBucket};
 use crate::util::json::{self, Json};
 use crate::util::parallel::{num_threads, BoundedQueue, RecvTimeout};
@@ -79,17 +78,20 @@ pub struct ServeOptions {
     pub queue_depth: usize,
     /// Merged tiles never exceed this many atom rows.
     pub max_batch_atoms: usize,
-    /// Intra-tile shards per worker engine (`--shards`).  With `> 1` every
-    /// worker owns a [`crate::snap::sharded::ShardedEngine`], so a large
-    /// coalesced tile fans out across the shared thread pool instead of
-    /// pinning one core; tiles below [`SHARD_MIN_ATOMS`] per shard stay
-    /// serial.  Workers and shards multiply — pick `workers * shards`
-    /// around the core count (the CLI defaults workers to `cores / shards`).
+    /// Intra-tile shards per worker engine (`--shards`), surfaced in the
+    /// stats reply.  The sharding itself is built into the factory
+    /// ([`EngineSpec::shards`](crate::config::EngineSpec::shards)): with
+    /// `> 1` every worker owns a
+    /// [`crate::snap::sharded::ShardedEngine`], so a large coalesced tile
+    /// fans out across the shared thread pool instead of pinning one core;
+    /// tiles below the fan-out floor per shard stay serial.  Workers and
+    /// shards multiply — pick `workers * shards` around the core count
+    /// (the CLI defaults workers to `cores / shards`).
     pub shards: usize,
     /// Active autotune plan (`--plan`).  When set, the caller's factory is
-    /// expected to produce plan-driven engines
-    /// ([`crate::config::planned_engine_factory`]) and `shards` should stay
-    /// 1 — per-bucket fan-out is the plan's job.
+    /// expected to produce plan-driven engines (an
+    /// [`EngineSpec`](crate::config::EngineSpec) built with `.plan(..)`)
+    /// and `shards` should stay 1 — per-bucket fan-out is the plan's job.
     pub plan: Option<PlanSetup>,
 }
 
@@ -106,9 +108,10 @@ impl Default for ServeOptions {
     }
 }
 
-/// Fan-out floor for the server's sharded path: a dispatch must bring at
-/// least this many atoms per shard before a tile splits (single-atom
-/// requests never pay fork/join overhead).
+/// Fan-out floor the server's sharded path is built with (via
+/// [`EngineSpec`](crate::config::EngineSpec)'s default): a dispatch must
+/// bring at least this many atoms per shard before a tile splits
+/// (single-atom requests never pay fork/join overhead).
 pub const SHARD_MIN_ATOMS: usize = crate::snap::sharded::DEFAULT_MIN_ATOMS_PER_SHARD;
 
 /// Monotonic counters for every pipeline stage, readable over the wire via
@@ -124,6 +127,11 @@ pub struct ServerStats {
     pub requests_total: AtomicU64,
     pub replies_ok: AtomicU64,
     pub replies_err: AtomicU64,
+    /// Error replies caused by an engine dispatch failure (a typed
+    /// [`EngineError`], including the `Panicked` backstop) — a subset of
+    /// `replies_err`, so engine health is observable separately from
+    /// malformed-frame noise.
+    pub engine_errors: AtomicU64,
     pub stats_requests: AtomicU64,
     /// Engine dispatches (merged batches count once).
     pub jobs_dispatched: AtomicU64,
@@ -200,6 +208,7 @@ impl ServerStats {
             ("requests_total", n(&self.requests_total)),
             ("replies_ok", n(&self.replies_ok)),
             ("replies_err", n(&self.replies_err)),
+            ("engine_errors", n(&self.engine_errors)),
             ("stats_requests", n(&self.stats_requests)),
             ("jobs_dispatched", n(&self.jobs_dispatched)),
             ("batches_merged", n(&self.batches_merged)),
@@ -214,9 +223,13 @@ impl ServerStats {
 }
 
 /// One parsed compute request in flight through the pipeline.
+///
+/// The reply is the *formatted* wire line (or the typed engine error):
+/// workers serialize straight out of their reused [`TileOutput`] buffer,
+/// so no per-request output buffers ever cross the channel.
 struct Pending {
     tile: OwnedTile,
-    reply: mpsc::Sender<Result<TileOutput, String>>,
+    reply: mpsc::Sender<Result<String, EngineError>>,
     enqueued: Instant,
 }
 
@@ -271,13 +284,14 @@ pub fn serve_with_stats(
     }
 
     // Build every engine up front so a bad factory fails `serve` at startup
-    // rather than inside a worker thread.  With shards > 1 each worker owns
-    // a ShardedEngine: large coalesced tiles fan out over the shared pool.
+    // rather than inside a worker thread.  The factory (one EngineSpec
+    // build site) already encodes sharding/planning: with shards > 1 each
+    // worker owns a ShardedEngine, so large coalesced tiles fan out over
+    // the shared pool.
     let mut engines: Vec<Box<dyn ForceEngine>> = Vec::with_capacity(workers);
     for _ in 0..workers {
         engines.push(
-            build_sharded(&factory, opts.shards, SHARD_MIN_ATOMS)
-                .map_err(|e| std::io::Error::other(format!("engine factory: {e:#}")))?,
+            factory().map_err(|e| std::io::Error::other(format!("engine factory: {e:#}")))?,
         );
     }
 
@@ -418,26 +432,31 @@ fn coalescer_loop(
     }
 }
 
-/// Worker: owns one engine, pops jobs, computes, demultiplexes replies.
+/// Worker: owns one engine + one reused output buffer, pops jobs,
+/// computes, demultiplexes replies.
 ///
-/// Engine panics are contained per-job (`catch_unwind`): the offending
-/// request(s) get an error reply and the worker lives on — a hostile tile
-/// must not shrink the pool into a denial of service.  Engine scratch is
-/// resized/zeroed at the top of every `compute`, so reuse after an unwind
-/// is safe.
+/// Dispatch failures come back as typed [`EngineError`]s through
+/// `compute_into` and ride the normal reply path; the worker lives on — a
+/// hostile tile must not shrink the pool into a denial of service.  The
+/// output buffer is reset per dispatch, so a steady-state worker performs
+/// zero per-dispatch `TileOutput` allocations once it has seen its largest
+/// tile.
 fn worker_loop(
     workq: &BoundedQueue<Job>,
     mut engine: Box<dyn ForceEngine>,
     stats: &ServerStats,
 ) {
+    let mut out = TileOutput::default();
     while let Some(job) = workq.recv() {
         match job {
             Job::Single(p) => {
                 note_wait(stats, std::iter::once(&p));
                 let t0 = Instant::now();
-                let out = guarded_compute(engine.as_mut(), &p.tile.as_input());
+                let result = guarded_compute(engine.as_mut(), &p.tile.as_input(), &mut out);
                 note_compute(stats, t0, p.tile.num_atoms);
-                let _ = p.reply.send(out);
+                let _ = p
+                    .reply
+                    .send(result.map(|()| format_ok_reply(&out.ei, &out.dedr)));
             }
             Job::Batch(members) => {
                 note_wait(stats, members.iter());
@@ -446,21 +465,28 @@ fn worker_loop(
                     batch.push(&m.tile);
                 }
                 let t0 = Instant::now();
-                let out = guarded_compute(engine.as_mut(), &batch.input());
+                let result = guarded_compute(engine.as_mut(), &batch.input(), &mut out);
                 note_compute(stats, t0, batch.num_atoms());
                 stats.batches_merged.fetch_add(1, Ordering::Relaxed);
                 stats
                     .requests_coalesced
                     .fetch_add(members.len() as u64, Ordering::Relaxed);
-                match out {
-                    Ok(out) => {
-                        for (m, part) in members.iter().zip(batch.split(&out)) {
-                            let _ = m.reply.send(Ok(part));
+                match result {
+                    Ok(()) => {
+                        // serialize each member straight from its slice of
+                        // the merged output — no per-member TileOutput
+                        let nn = batch.num_nbor();
+                        for (m, (row, na)) in members.iter().zip(batch.member_ranges()) {
+                            let reply = format_ok_reply(
+                                &out.ei[row..row + na],
+                                &out.dedr[row * nn * 3..(row + na) * nn * 3],
+                            );
+                            let _ = m.reply.send(Ok(reply));
                         }
                     }
-                    Err(msg) => {
+                    Err(e) => {
                         for m in &members {
-                            let _ = m.reply.send(Err(msg.clone()));
+                            let _ = m.reply.send(Err(e.clone()));
                         }
                     }
                 }
@@ -469,19 +495,24 @@ fn worker_loop(
     }
 }
 
-/// Run one engine dispatch, converting a panic into an error reply.
+/// Run one engine dispatch.  Failures are expected to arrive as typed
+/// `EngineError`s from `compute_into`; the `catch_unwind` here is only a
+/// last-resort backstop for engines that violate that contract and panic —
+/// the unwind becomes [`EngineError::Panicked`] and the worker (plus its
+/// buffers, which every dispatch resets) stays in service.
 fn guarded_compute(
     engine: &mut dyn ForceEngine,
     input: &crate::snap::engine::TileInput,
-) -> Result<TileOutput, String> {
-    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| engine.compute(input)))
-        .map_err(|cause| {
+    out: &mut TileOutput,
+) -> Result<(), EngineError> {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| engine.compute_into(input, out)))
+        .unwrap_or_else(|cause| {
             let detail = cause
                 .downcast_ref::<&str>()
                 .map(|s| s.to_string())
                 .or_else(|| cause.downcast_ref::<String>().cloned())
                 .unwrap_or_else(|| "unknown panic".to_string());
-            format!("engine panicked during compute: {detail}")
+            Err(EngineError::Panicked(detail))
         })
 }
 
@@ -564,10 +595,18 @@ fn process(line: &str, ctx: &SessionCtx) -> Result<Reply, String> {
     ctx.ingress
         .send(pending)
         .map_err(|_| "server shutting down".to_string())?;
-    let out = rx
+    match rx
         .recv()
-        .map_err(|_| "request dropped during shutdown".to_string())??;
-    Ok(Reply::Compute(format_ok_reply(&out)))
+        .map_err(|_| "request dropped during shutdown".to_string())?
+    {
+        Ok(reply) => Ok(Reply::Compute(reply)),
+        // a typed engine failure rides the normal error-reply path, with
+        // its own counter so engine health is observable in stats
+        Err(e) => {
+            ctx.stats.engine_errors.fetch_add(1, Ordering::Relaxed);
+            Err(e.to_string())
+        }
+    }
 }
 
 fn parse_tile(j: &Json) -> Result<OwnedTile, String> {
@@ -592,16 +631,14 @@ fn parse_tile(j: &Json) -> Result<OwnedTile, String> {
     Ok(tile)
 }
 
-fn format_ok_reply(out: &TileOutput) -> String {
+/// Serialize one compute reply from output slices (for batches: a member's
+/// slice of the worker's merged, reused buffer).
+fn format_ok_reply(ei: &[f64], dedr: &[f64]) -> String {
     let fmt = |v: &[f64]| {
         let items: Vec<String> = v.iter().map(|x| format!("{x:.17e}")).collect();
         format!("[{}]", items.join(","))
     };
-    format!(
-        "{{\"ok\": true, \"ei\": {}, \"dedr\": {}}}",
-        fmt(&out.ei),
-        fmt(&out.dedr)
-    )
+    format!("{{\"ok\": true, \"ei\": {}, \"dedr\": {}}}", fmt(ei), fmt(dedr))
 }
 
 #[cfg(test)]
@@ -614,7 +651,12 @@ mod tests {
     fn test_factory() -> EngineFactory {
         let idx = SnapIndex::new(2);
         let coeffs = SnapCoeffs::synthetic(2, idx.idxb_max, 3);
-        crate::config::engine_factory("fused", 2, coeffs.beta, "artifacts").unwrap()
+        crate::config::EngineSpec::new(2)
+            .engine("fused")
+            .beta(coeffs.beta)
+            .build_factory()
+            .unwrap()
+            .factory
     }
 
     type ServerJoin = std::thread::JoinHandle<std::io::Result<()>>;

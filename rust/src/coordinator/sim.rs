@@ -5,6 +5,7 @@ use super::force::{ForceField, ForceResult};
 use crate::md::integrate::{Langevin, VelocityVerlet};
 use crate::md::thermo::Thermo;
 use crate::md::{NeighborList, Structure};
+use crate::snap::engine::EngineError;
 use crate::util::Stopwatch;
 
 /// Simulation parameters.
@@ -75,22 +76,28 @@ impl Simulation {
     }
 
     /// Compute forces for the current positions, refreshing the neighbor
-    /// list per policy, and install them in the structure.
-    pub fn compute_forces(&mut self) -> &ForceResult {
+    /// list per policy, and install them in the structure.  An engine
+    /// dispatch failure surfaces as the typed error instead of a panic.
+    pub fn compute_forces(&mut self) -> Result<&ForceResult, EngineError> {
         if self.nlist.is_none() || self.step % self.cfg.neighbor_every.max(1) == 0 {
             self.rebuild_neighbors();
         }
         // pairs beyond the force cutoff are inert (sfac = 0), so the skin
         // padding changes nothing but rebuild frequency
         let nl = self.nlist.as_ref().unwrap();
-        let r = self.field.compute(&self.structure, nl);
+        let r = self.field.compute(&self.structure, nl)?;
         self.structure.force.copy_from_slice(&r.forces);
         self.last_result = Some(r);
-        self.last_result.as_ref().unwrap()
+        Ok(self.last_result.as_ref().unwrap())
     }
 
-    /// Run `nsteps` of velocity-Verlet MD; returns run statistics.
-    pub fn run(&mut self, nsteps: usize, log: &mut dyn std::io::Write) -> RunStats {
+    /// Run `nsteps` of velocity-Verlet MD; returns run statistics, or the
+    /// engine error that aborted the trajectory.
+    pub fn run(
+        &mut self,
+        nsteps: usize,
+        log: &mut dyn std::io::Write,
+    ) -> Result<RunStats, EngineError> {
         let vv = VelocityVerlet::new(self.cfg.dt);
         let mut lang = self
             .cfg
@@ -100,7 +107,7 @@ impl Simulation {
         let sw = Stopwatch::start();
 
         // initial forces
-        self.compute_forces();
+        self.compute_forces()?;
         if let Some(l) = lang.as_mut() {
             l.apply(&mut self.structure, self.cfg.dt);
         }
@@ -117,7 +124,7 @@ impl Simulation {
         for _ in 0..nsteps {
             self.step += 1;
             vv.initial_integrate(&mut self.structure);
-            self.compute_forces();
+            self.compute_forces()?;
             if let Some(l) = lang.as_mut() {
                 l.apply(&mut self.structure, self.cfg.dt);
             }
@@ -137,13 +144,13 @@ impl Simulation {
             Thermo::sample(self.step, &self.structure, last_r.e_pot(), &last_r.virial);
         let drift = (final_t.e_total - first).abs() / n as f64;
         thermo.push(final_t);
-        RunStats {
+        Ok(RunStats {
             steps: nsteps,
             wall_secs: wall,
             katom_steps_per_sec: n as f64 * nsteps as f64 / wall / 1e3,
             thermo,
             energy_drift_per_atom: drift,
-        }
+        })
     }
 
     pub fn current_step(&self) -> usize {
@@ -189,7 +196,7 @@ mod tests {
     fn nve_energy_is_conserved() {
         let mut sim = tiny_sim(None);
         let mut sink = std::io::sink();
-        let stats = sim.run(60, &mut sink);
+        let stats = sim.run(60, &mut sink).unwrap();
         // bounded Verlet truncation oscillation, not secular drift; the
         // dt^2 scaling (true symplectic behaviour) is asserted separately
         // in rust/tests/md_integration.rs
@@ -205,7 +212,7 @@ mod tests {
     fn langevin_run_is_stable() {
         let mut sim = tiny_sim(Some((100.0, 0.1, 7)));
         let mut sink = std::io::sink();
-        let stats = sim.run(40, &mut sink);
+        let stats = sim.run(40, &mut sink).unwrap();
         let t_last = stats.thermo.last().unwrap();
         assert!(t_last.temp.is_finite() && t_last.temp < 1000.0);
         assert!(t_last.e_total.is_finite());
@@ -223,20 +230,14 @@ mod tests {
             let mut s = lattice::bcc(3, 3, 3, 3.18, 183.84);
             let mut rng = crate::util::XorShift::new(12);
             s.seed_velocities(50.0, &mut rng);
-            let factory: crate::snap::engine::EngineFactory = {
-                let idx = idx.clone();
-                let beta = coeffs.beta.clone();
-                Arc::new(move || {
-                    Ok(Box::new(FusedEngine::new(
-                        p,
-                        idx.clone(),
-                        beta.clone(),
-                        FusedConfig::default(),
-                        "fused",
-                    )) as Box<dyn crate::snap::ForceEngine>)
-                })
-            };
-            let field = ForceField::from_factory(&factory, shards, 16, 32).unwrap();
+            let engine = crate::config::EngineSpec::new(2)
+                .engine("fused")
+                .beta(coeffs.beta.clone())
+                .shared_index(idx.clone())
+                .shards(shards)
+                .build()
+                .unwrap();
+            let field = ForceField::new(engine, 16, 32);
             let mut sim = Simulation::new(
                 s,
                 field,
@@ -250,7 +251,7 @@ mod tests {
                 },
             );
             let mut sink = std::io::sink();
-            sim.run(12, &mut sink);
+            sim.run(12, &mut sink).unwrap();
             (sim.structure.pos.clone(), sim.structure.force.clone())
         };
         let (pos_serial, f_serial) = run(1);
@@ -264,7 +265,7 @@ mod tests {
         let mut sim = tiny_sim(None);
         sim.cfg.thermo_every = 5;
         let mut buf = Vec::new();
-        sim.run(10, &mut buf);
+        sim.run(10, &mut buf).unwrap();
         let text = String::from_utf8(buf).unwrap();
         assert!(text.contains("e_total"));
         assert!(text.lines().count() >= 3);

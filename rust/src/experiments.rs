@@ -291,12 +291,12 @@ pub fn table1(opts: &ExpOpts) -> String {
     }
     if opts.with_xla {
         for art in ["snap_2j8", "snap_2j8_ref"] {
-            match crate::config::build_engine(
-                &format!("xla:{art}"),
-                8,
-                beta_for(8),
-                &opts.artifacts_dir,
-            ) {
+            match crate::config::EngineSpec::new(8)
+                .xla(art)
+                .beta(beta_for(8))
+                .artifacts_dir(&opts.artifacts_dir)
+                .build()
+            {
                 Ok(mut eng) => {
                     let r = grind(eng.as_mut(), &w, opts.warmup, opts.reps);
                     rows.push(r);

@@ -161,35 +161,27 @@ fn cmd_run(flags: &Flags) -> Result<()> {
 
     let shards = flags.get_or("shards", 1usize)?.max(1);
     let plan_spec = flags.get_or("plan", "off".to_string())?;
-    let resolution = repro::config::resolve_planned_factory(
-        &plan_spec,
-        script.twojmax,
-        coeffs.beta.clone(),
-    )?;
+    // one construction site for every engine shape: name/xla, sharded,
+    // or plan-driven
+    let build = repro::config::EngineSpec::new(script.twojmax)
+        .engine(&script.engine)
+        .beta(coeffs.beta.clone())
+        .artifacts_dir(&artifacts)
+        .shards(shards)
+        .plan(&plan_spec)
+        .build_factory()?;
+    if let Some(p) = &build.plan {
+        println!("# plan: {} (cache {})", p.selection.source, p.selection.cache.label());
+        if flags.has("engine") || flags.has("shards") {
+            println!("# note: --plan overrides --engine/--shards");
+        }
+    }
     // with sharding (or a plan's large-bucket fan-out), default to tiles
     // wide enough that every shard gets a full serial tile's worth of atoms
-    let (factory, fanout) = match resolution {
-        Some(r) => {
-            println!("# plan: {} (cache {})", r.selection.source, r.selection.cache.label());
-            if flags.has("engine") || flags.has("shards") {
-                println!("# note: --plan overrides --engine/--shards");
-            }
-            (r.factory, r.fanout)
-        }
-        None => {
-            let f = repro::config::sharded_engine_factory(
-                &script.engine,
-                script.twojmax,
-                coeffs.beta.clone(),
-                &artifacts,
-                shards,
-            )?;
-            (f, shards)
-        }
-    };
+    let fanout = build.fanout;
     let tile_atoms = flags.get_or("tile-atoms", 32 * fanout)?;
     let tile_nbor = flags.get_or("tile-nbor", 32usize)?;
-    let field = ForceField::new(factory()?, tile_atoms, tile_nbor);
+    let field = ForceField::new((build.factory)()?, tile_atoms, tile_nbor);
     if fanout > 1 {
         println!("# intra-tile sharding: {fanout} shards, tile_atoms={tile_atoms}");
     }
@@ -202,7 +194,7 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     };
     let mut sim = Simulation::new(structure, field, params.rcut(), cfg);
     let sw = Stopwatch::start();
-    let stats = sim.run(steps, &mut std::io::stdout());
+    let stats = sim.run(steps, &mut std::io::stdout())?;
     println!(
         "# done: {:.2} s wall, {:.2} Katom-steps/s, NVE drift {:.3e} eV/atom",
         sw.elapsed_secs(),
@@ -263,26 +255,29 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     let plan_spec = flags.get_or("plan", "off".to_string())?;
     let idx = repro::snap::SnapIndex::new(twojmax);
     let coeffs = repro::snap::coeff::SnapCoeffs::synthetic(twojmax, idx.idxb_max, 42);
-    let resolution =
-        repro::config::resolve_planned_factory(&plan_spec, twojmax, coeffs.beta.clone())?;
     let defaults = ServeOptions::default();
     // a plan shards per bucket itself; the classic path takes --shards
-    let shards = match &resolution {
-        Some(_) => 1,
-        None => flags.get_or("shards", defaults.shards)?.max(1),
-    };
-    // workers and --shards multiply in thread count, so the classic path
-    // defaults workers to cores / shards.  A plan's fan-out varies per
-    // dispatch (small RPCs stay serial; only tiles that reach a sharded
-    // bucket fan out, onto the shared bounded pool), so dividing by it
-    // would starve the worker pool for exactly the small-request traffic
-    // that never shards — the plan path keeps workers = cores.
-    let default_workers = match &resolution {
-        Some(_) => defaults.workers,
-        None => (defaults.workers / shards).max(1),
+    let shards = flags.get_or("shards", defaults.shards)?.max(1);
+    let build = repro::config::EngineSpec::new(twojmax)
+        .engine(&engine_name)
+        .beta(coeffs.beta)
+        .artifacts_dir(&artifacts)
+        .shards(shards)
+        .plan(&plan_spec)
+        .build_factory()?;
+    let (shards, workers_hint) = match &build.plan {
+        // Workers and --shards multiply in thread count, so the classic
+        // path defaults workers to cores / shards.  A plan's fan-out
+        // varies per dispatch (small RPCs stay serial; only tiles that
+        // reach a sharded bucket fan out, onto the shared bounded pool),
+        // so dividing by it would starve the worker pool for exactly the
+        // small-request traffic that never shards — the plan path keeps
+        // workers = cores and per-engine shards = 1.
+        Some(_) => (1, defaults.workers),
+        None => (shards, (defaults.workers / shards).max(1)),
     };
     let mut opts = ServeOptions {
-        workers: flags.get_or("workers", default_workers)?,
+        workers: flags.get_or("workers", workers_hint)?,
         batch_window: std::time::Duration::from_micros(
             flags.get_or("batch-window-us", defaults.batch_window.as_micros() as u64)?,
         ),
@@ -291,17 +286,14 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         shards,
         plan: None,
     };
-    let factory = match resolution {
-        Some(r) => {
-            println!("# plan: {} (cache {})", r.selection.source, r.selection.cache.label());
-            if flags.has("engine") || flags.has("shards") {
-                println!("# note: --plan overrides --engine/--shards");
-            }
-            opts.plan = Some(PlanSetup::from_selection(&r.selection, r.counters));
-            r.factory
+    if let Some(p) = &build.plan {
+        println!("# plan: {} (cache {})", p.selection.source, p.selection.cache.label());
+        if flags.has("engine") || flags.has("shards") {
+            println!("# note: --plan overrides --engine/--shards");
         }
-        None => repro::config::engine_factory(&engine_name, twojmax, coeffs.beta, &artifacts)?,
-    };
+        opts.plan = Some(PlanSetup::from_selection(&p.selection, p.counters.clone()));
+    }
+    let factory = build.factory;
     let listener = std::net::TcpListener::bind(("0.0.0.0", port))?;
     println!(
         "force server on :{port} engine={} 2J={twojmax} workers={} \
@@ -327,10 +319,7 @@ fn cmd_tune(flags: &Flags) -> Result<()> {
     if let Some(list) = flags.get("variants") {
         opts.variant_candidates = list
             .split(',')
-            .map(|s| {
-                repro::snap::variants::Variant::from_label(s.trim())
-                    .with_context(|| format!("unknown variant `{}`", s.trim()))
-            })
+            .map(|s| repro::snap::variants::Variant::resolve_label(s.trim()))
             .collect::<Result<Vec<_>>>()?;
     }
     if let Some(list) = flags.get("shards") {

@@ -7,9 +7,10 @@
 //! python/tests/test_pallas.py and re-checked in rust integration tests).
 
 use super::artifact::Runtime;
-use crate::snap::engine::{ForceEngine, TileInput, TileOutput};
+use crate::snap::engine::{EngineError, ForceEngine, TileInput, TileOutput};
 use crate::snap::memory::{MemoryFootprint, C128, F64};
 use crate::snap::SnapIndex;
+use crate::util::zero_resize;
 
 /// PJRT-backed force engine.
 pub struct XlaEngine {
@@ -21,6 +22,9 @@ pub struct XlaEngine {
     /// sum energies; kept for reference)
     pub tile_atoms: usize,
     pub tile_nbor: usize,
+    // artifact-shaped input staging, reused across dispatches
+    rij_pad: Vec<f64>,
+    mask_pad: Vec<f64>,
 }
 
 impl XlaEngine {
@@ -44,14 +48,16 @@ impl XlaEngine {
             name: format!("xla-{artifact}"),
             tile_atoms: meta.num_atoms,
             tile_nbor: meta.num_nbor,
+            rij_pad: Vec::new(),
+            mask_pad: Vec::new(),
         })
     }
 
     /// Run exactly one artifact-shaped tile (lengths must match).
-    fn run_tile(&mut self, rij: &[f64], mask: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    fn run_tile(&mut self, rij: &[f64], mask: &[f64]) -> Result<(Vec<f64>, Vec<f64>), EngineError> {
         self.runtime
             .execute(&self.artifact, rij, mask, &self.beta)
-            .expect("PJRT execution failed")
+            .map_err(|e| EngineError::Backend(format!("PJRT execution failed: {e:#}")))
     }
 }
 
@@ -66,31 +72,40 @@ impl ForceEngine for XlaEngine {
         &self.name
     }
 
-    fn compute(&mut self, input: &TileInput) -> TileOutput {
-        input.validate();
+    fn compute_into(&mut self, input: &TileInput, out: &mut TileOutput) -> Result<(), EngineError> {
+        input.check()?;
         let (na, nn) = (input.num_atoms, input.num_nbor);
         let (ta, tn) = (self.tile_atoms, self.tile_nbor);
-        assert!(
-            nn <= tn,
-            "input neighbor count {nn} exceeds artifact tile width {tn}"
-        );
-        let mut out = TileOutput { ei: vec![0.0; na], dedr: vec![0.0; na * nn * 3] };
-        let mut rij = vec![0.0; ta * tn * 3];
-        let mut mask = vec![0.0; ta * tn];
+        if nn > tn {
+            return Err(EngineError::BadShape(format!(
+                "input neighbor count {nn} exceeds artifact tile width {tn}"
+            )));
+        }
+        out.reset(na, nn);
+        // artifact-shaped staging buffers, reused across dispatches
+        zero_resize(&mut self.rij_pad, ta * tn * 3);
+        zero_resize(&mut self.mask_pad, ta * tn);
         for tile_start in (0..na).step_by(ta) {
             let count = ta.min(na - tile_start);
-            rij.fill(0.0);
-            mask.fill(0.0);
+            if tile_start > 0 {
+                self.rij_pad.fill(0.0);
+                self.mask_pad.fill(0.0);
+            }
             for a in 0..count {
                 let src_a = tile_start + a;
                 for n in 0..nn {
                     let src = (src_a * nn + n) * 3;
                     let dst = (a * tn + n) * 3;
-                    rij[dst..dst + 3].copy_from_slice(&input.rij[src..src + 3]);
-                    mask[a * tn + n] = input.mask[src_a * nn + n];
+                    self.rij_pad[dst..dst + 3].copy_from_slice(&input.rij[src..src + 3]);
+                    self.mask_pad[a * tn + n] = input.mask[src_a * nn + n];
                 }
             }
-            let (ei, dedr) = self.run_tile(&rij, &mask);
+            let rij = std::mem::take(&mut self.rij_pad);
+            let mask = std::mem::take(&mut self.mask_pad);
+            let result = self.run_tile(&rij, &mask);
+            self.rij_pad = rij;
+            self.mask_pad = mask;
+            let (ei, dedr) = result?;
             for a in 0..count {
                 let src_a = tile_start + a;
                 out.ei[src_a] = ei[a];
@@ -101,7 +116,7 @@ impl ForceEngine for XlaEngine {
                 }
             }
         }
-        out
+        Ok(())
     }
 
     fn footprint(&self, num_atoms: usize, num_nbor: usize) -> MemoryFootprint {

@@ -26,7 +26,7 @@
 //!   (contiguous per-level slices; the CPU analog of the 128-bit
 //!   load/store alignment fix).
 
-use super::engine::{ForceEngine, TileInput, TileOutput};
+use super::engine::{EngineError, ForceEngine, TileInput, TileOutput};
 use super::indices::SnapIndex;
 use super::kernels::*;
 use super::memory::{MemoryFootprint, C128, F64};
@@ -332,11 +332,12 @@ impl ForceEngine for AdjointEngine {
         &self.name
     }
 
-    fn compute(&mut self, input: &TileInput) -> TileOutput {
-        input.validate();
+    fn compute_into(&mut self, input: &TileInput, out: &mut TileOutput) -> Result<(), EngineError> {
+        input.check()?;
         let (na, nn) = (input.num_atoms, input.num_nbor);
         let iu = self.idx.idxu_max;
         self.ensure_capacity(na, nn);
+        out.reset(na, nn);
         let p = self.params;
         let idx = self.idx.clone();
 
@@ -413,7 +414,6 @@ impl ForceEngine for AdjointEngine {
         }
 
         // ---- energy (compute_Z/B per atom, reusing scratch) ----
-        let mut out = TileOutput { ei: vec![0.0; na], dedr: vec![0.0; na * nn * 3] };
         for atom in 0..na {
             for jju in 0..iu {
                 let (r, i) = if self.cfg.layout_atom_fastest && self.cfg.transpose_utot
@@ -471,7 +471,7 @@ impl ForceEngine for AdjointEngine {
             out.dedr[o + 1] = d[1];
             out.dedr[o + 2] = d[2];
         }
-        out
+        Ok(())
     }
 
     fn footprint(&self, num_atoms: usize, num_nbor: usize) -> MemoryFootprint {

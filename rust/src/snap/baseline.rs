@@ -16,7 +16,7 @@
 //!   the paper's memory blow-up: the footprint model is what the Fig-1
 //!   OOM gate evaluates.
 
-use super::engine::{ForceEngine, TileInput, TileOutput};
+use super::engine::{EngineError, ForceEngine, TileInput, TileOutput};
 use super::indices::SnapIndex;
 use super::kernels::*;
 use super::memory::{MemoryFootprint, C128, F64};
@@ -124,13 +124,10 @@ impl ForceEngine for BaselineEngine {
         }
     }
 
-    fn compute(&mut self, input: &TileInput) -> TileOutput {
-        input.validate();
+    fn compute_into(&mut self, input: &TileInput, out: &mut TileOutput) -> Result<(), EngineError> {
+        input.check()?;
         let (na, nn) = (input.num_atoms, input.num_nbor);
-        let mut out = TileOutput {
-            ei: vec![0.0; na],
-            dedr: vec![0.0; na * nn * 3],
-        };
+        out.reset(na, nn);
         // All staging modes compute identical numbers; staging changes only
         // which intermediates persist (modelled in footprint()).  The
         // arithmetic pipeline below is the Listing-1 order.
@@ -180,7 +177,7 @@ impl ForceEngine for BaselineEngine {
                 }
             }
         }
-        out
+        Ok(())
     }
 
     fn footprint(&self, num_atoms: usize, num_nbor: usize) -> MemoryFootprint {

@@ -6,6 +6,37 @@
 //! and the test-suite can diff them element-for-element.
 
 use super::memory::MemoryFootprint;
+use crate::util::zero_resize;
+
+/// Typed engine-dispatch failure — the error half of the
+/// [`ForceEngine::compute_into`] contract.  Callers (the force server, the
+/// MD loop) turn these into structured replies / clean process errors
+/// instead of catching panics.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EngineError {
+    /// The input violates the padded-tile shape contract
+    /// (`rij.len() == num_atoms*num_nbor*3`, `mask.len() == num_atoms*num_nbor`).
+    BadShape(String),
+    /// The backing runtime failed (PJRT execution, artifact I/O).
+    Backend(String),
+    /// The engine panicked mid-dispatch and a last-resort backstop
+    /// ([`catch_unwind`](std::panic::catch_unwind) in the server's worker
+    /// loop) converted the unwind.  Engines should never produce this
+    /// themselves — report failures through the other arms.
+    Panicked(String),
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::BadShape(m) => write!(f, "bad tile shape: {m}"),
+            EngineError::Backend(m) => write!(f, "backend failure: {m}"),
+            EngineError::Panicked(m) => write!(f, "engine panicked during compute: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
 
 /// One padded tile of work: `num_atoms * num_nbor` displacement rows.
 #[derive(Clone, Copy, Debug)]
@@ -19,9 +50,37 @@ pub struct TileInput<'a> {
 }
 
 impl<'a> TileInput<'a> {
+    /// Fallible shape check — the first line of every `compute_into`.
+    /// Multiplications are checked so hostile dimensions are rejected
+    /// instead of wrapping in release mode.
+    pub fn check(&self) -> Result<(), EngineError> {
+        let rows = self
+            .num_atoms
+            .checked_mul(self.num_nbor)
+            .ok_or_else(|| EngineError::BadShape("num_atoms * num_nbor overflows".into()))?;
+        let rij_len = rows
+            .checked_mul(3)
+            .ok_or_else(|| EngineError::BadShape("num_atoms * num_nbor * 3 overflows".into()))?;
+        if self.rij.len() != rij_len {
+            return Err(EngineError::BadShape(format!(
+                "rij has {} values, expected num_atoms*num_nbor*3 = {rij_len}",
+                self.rij.len()
+            )));
+        }
+        if self.mask.len() != rows {
+            return Err(EngineError::BadShape(format!(
+                "mask has {} values, expected num_atoms*num_nbor = {rows}",
+                self.mask.len()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Panicking twin of [`check`](Self::check) for test/assert contexts.
     pub fn validate(&self) {
-        assert_eq!(self.rij.len(), self.num_atoms * self.num_nbor * 3);
-        assert_eq!(self.mask.len(), self.num_atoms * self.num_nbor);
+        if let Err(e) = self.check() {
+            panic!("{e}");
+        }
     }
 
     #[inline]
@@ -59,30 +118,14 @@ impl OwnedTile {
         }
     }
 
-    /// Shape check mirroring [`TileInput::validate`], returning an error
-    /// instead of panicking (server-side validation of client frames).
-    ///
-    /// Multiplications are checked: a hostile frame with huge dimensions
-    /// must be rejected here, not wrap in release mode and panic a worker.
+    /// Shape check for server-side validation of client frames — one
+    /// delegation to [`TileInput::check`], unwrapped to the plain message
+    /// the wire protocol reports.
     pub fn check_shape(&self) -> Result<(), String> {
-        let rows = self
-            .num_atoms
-            .checked_mul(self.num_nbor)
-            .ok_or("num_atoms * num_nbor overflows")?;
-        let rij_len = rows.checked_mul(3).ok_or("num_atoms * num_nbor * 3 overflows")?;
-        if self.rij.len() != rij_len {
-            return Err(format!(
-                "rij has {} values, expected num_atoms*num_nbor*3 = {rij_len}",
-                self.rij.len()
-            ));
-        }
-        if self.mask.len() != rows {
-            return Err(format!(
-                "mask has {} values, expected num_atoms*num_nbor = {rows}",
-                self.mask.len()
-            ));
-        }
-        Ok(())
+        self.as_input().check().map_err(|e| match e {
+            EngineError::BadShape(m) => m,
+            other => other.to_string(),
+        })
     }
 }
 
@@ -96,12 +139,27 @@ pub type EngineFactory =
     std::sync::Arc<dyn Fn() -> anyhow::Result<Box<dyn ForceEngine>> + Send + Sync>;
 
 /// Per-tile result: per-atom energies and per-pair force contractions.
-#[derive(Clone, Debug, Default)]
+///
+/// Designed for reuse: callers own the buffers and hand them to
+/// [`ForceEngine::compute_into`], which [`reset`](Self::reset)s them to the
+/// tile's shape.  After a warmup dispatch per shape, steady-state serving
+/// and MD perform zero output allocations — `reset` only reallocates when
+/// a tile outgrows every tile seen before.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct TileOutput {
     /// Per-atom SNAP energy (without the coeff0 constant); len num_atoms.
     pub ei: Vec<f64>,
     /// dE_i/d(r_ij) per pair, row-major (atom, nbor, xyz).
     pub dedr: Vec<f64>,
+}
+
+impl TileOutput {
+    /// Shape the buffers for an `num_atoms x num_nbor` tile, zero-filled,
+    /// reusing existing capacity (each slot is touched exactly once).
+    pub fn reset(&mut self, num_atoms: usize, num_nbor: usize) {
+        zero_resize(&mut self.ei, num_atoms);
+        zero_resize(&mut self.dedr, num_atoms * num_nbor * 3);
+    }
 }
 
 /// A SNAP force implementation (native or PJRT-backed).
@@ -114,8 +172,28 @@ pub trait ForceEngine: Send {
     /// "xla-pallas", ...).
     fn name(&self) -> &str;
 
-    /// Compute energies + per-pair dE/dr for one tile.
-    fn compute(&mut self, input: &TileInput) -> TileOutput;
+    /// Compute energies + per-pair dE/dr for one tile into a caller-owned
+    /// output buffer — the required dispatch method.
+    ///
+    /// Contract: the engine [`reset`](TileOutput::reset)s `out` to the
+    /// tile's shape (reusing capacity; no allocation once `out` has seen a
+    /// tile at least this large) and fills it completely.  Failures come
+    /// back as a typed [`EngineError`]; on error `out`'s contents are
+    /// unspecified but the buffers stay reusable.  Engines must leave their
+    /// internal scratch reusable after an error too — the server keeps the
+    /// engine and dispatches the next request into it.
+    fn compute_into(&mut self, input: &TileInput, out: &mut TileOutput) -> Result<(), EngineError>;
+
+    /// Allocating convenience shim over [`compute_into`](Self::compute_into)
+    /// for tests, benches and one-shot tools.  Panics on dispatch failure
+    /// (production paths call `compute_into` and handle the error).
+    fn compute(&mut self, input: &TileInput) -> TileOutput {
+        let mut out = TileOutput::default();
+        if let Err(e) = self.compute_into(input, &mut out) {
+            panic!("engine `{}` failed: {e}", self.name());
+        }
+        out
+    }
 
     /// Analytic device-memory footprint for a given problem size (used by
     /// the Fig-1 memory table and the OOM gate).
@@ -143,6 +221,73 @@ mod tests {
         let rij = vec![0.0; 5];
         let mask = vec![1.0; 2];
         TileInput { num_atoms: 1, num_nbor: 2, rij: &rij, mask: &mask }.validate();
+    }
+
+    #[test]
+    fn tile_input_check_reports_bad_shape() {
+        let rij = vec![0.0; 5];
+        let mask = vec![1.0; 2];
+        let err = TileInput { num_atoms: 1, num_nbor: 2, rij: &rij, mask: &mask }
+            .check()
+            .unwrap_err();
+        assert!(matches!(err, EngineError::BadShape(_)), "{err:?}");
+        assert!(err.to_string().contains("rij"), "{err}");
+        // hostile dimensions are a clean error, not a release-mode wrap
+        let huge = TileInput {
+            num_atoms: usize::MAX,
+            num_nbor: 2,
+            rij: &rij,
+            mask: &mask,
+        };
+        assert!(matches!(huge.check(), Err(EngineError::BadShape(_))));
+    }
+
+    #[test]
+    fn tile_output_reset_reuses_capacity() {
+        let mut out = TileOutput::default();
+        out.reset(4, 3);
+        assert_eq!(out.ei, vec![0.0; 4]);
+        assert_eq!(out.dedr, vec![0.0; 36]);
+        out.ei.iter_mut().for_each(|x| *x = 9.0);
+        let (cap_ei, cap_dedr) = (out.ei.capacity(), out.dedr.capacity());
+        out.reset(2, 3); // shrink: same buffers, re-zeroed
+        assert_eq!(out.ei, vec![0.0; 2]);
+        assert_eq!(out.ei.capacity(), cap_ei);
+        assert_eq!(out.dedr.capacity(), cap_dedr);
+    }
+
+    #[test]
+    fn compute_shim_wraps_compute_into() {
+        struct Doubler;
+        impl ForceEngine for Doubler {
+            fn name(&self) -> &str {
+                "doubler"
+            }
+            fn compute_into(
+                &mut self,
+                input: &TileInput,
+                out: &mut TileOutput,
+            ) -> Result<(), EngineError> {
+                input.check()?;
+                out.reset(input.num_atoms, input.num_nbor);
+                out.ei.fill(2.0);
+                Ok(())
+            }
+            fn footprint(&self, _na: usize, _nn: usize) -> crate::snap::memory::MemoryFootprint {
+                crate::snap::memory::MemoryFootprint::new()
+            }
+        }
+        let rij = vec![0.0; 3];
+        let mask = vec![1.0];
+        let t = TileInput { num_atoms: 1, num_nbor: 1, rij: &rij, mask: &mask };
+        let out = Doubler.compute(&t);
+        assert_eq!(out.ei, vec![2.0]);
+        // the shim panics on a dispatch error (here: a shape violation)
+        let bad = TileInput { num_atoms: 2, num_nbor: 1, rij: &rij, mask: &mask };
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            Doubler.compute(&bad)
+        }));
+        assert!(caught.is_err());
     }
 
     #[test]

@@ -20,7 +20,7 @@
 //!   index (8 doubles = one AVX-512 register / 4 NEON pairs), the CPU
 //!   generalization the paper sketches in section VI-C.
 
-use super::engine::{ForceEngine, TileInput, TileOutput};
+use super::engine::{EngineError, ForceEngine, TileInput, TileOutput};
 use super::indices::SnapIndex;
 use super::memory::{MemoryFootprint, C128, F64};
 use super::params::SnapParams;
@@ -114,8 +114,8 @@ impl ForceEngine for FusedEngine {
         &self.name
     }
 
-    fn compute(&mut self, input: &TileInput) -> TileOutput {
-        input.validate();
+    fn compute_into(&mut self, input: &TileInput, out: &mut TileOutput) -> Result<(), EngineError> {
+        input.check()?;
         let (na, nn) = (input.num_atoms, input.num_nbor);
         let iu = self.idx.idxu_max;
         let ih = self.idx.idxu_half_max();
@@ -128,7 +128,7 @@ impl ForceEngine for FusedEngine {
         zero_resize(&mut self.yhalf_i, nap * ih);
         let p = self.params;
         let idx = self.idx.clone();
-        let mut out = TileOutput { ei: vec![0.0; na], dedr: vec![0.0; na * nn * 3] };
+        out.reset(na, nn);
 
         // ---- compute_U (fused accumulate; recursion scratch reused) ----
         for atom in 0..na {
@@ -250,7 +250,7 @@ impl ForceEngine for FusedEngine {
                 out.dedr[o..o + 3].copy_from_slice(&d);
             }
         }
-        out
+        Ok(())
     }
 
     fn footprint(&self, num_atoms: usize, num_nbor: usize) -> MemoryFootprint {

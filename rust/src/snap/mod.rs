@@ -34,6 +34,6 @@ pub mod sharded;
 pub mod variants;
 pub mod wigner;
 
-pub use engine::{EngineFactory, ForceEngine, OwnedTile, TileInput, TileOutput};
+pub use engine::{EngineError, EngineFactory, ForceEngine, OwnedTile, TileInput, TileOutput};
 pub use indices::SnapIndex;
 pub use params::SnapParams;

@@ -14,7 +14,7 @@
 //! the stitched result is **bit-identical** to evaluating the whole tile on
 //! one engine — sharding changes *where* atoms are computed, never *what*.
 
-use super::engine::{EngineFactory, ForceEngine, TileInput, TileOutput};
+use super::engine::{EngineError, EngineFactory, ForceEngine, TileInput, TileOutput};
 use super::memory::MemoryFootprint;
 use crate::util::parallel::parallel_map;
 use std::sync::{Mutex, PoisonError};
@@ -49,6 +49,10 @@ pub struct ShardedEngine {
     /// is only ever locked by the lane computing shard `s`) — it exists to
     /// hand `&mut` engine access through the `Fn`-closure pool API.
     engines: Vec<Mutex<Box<dyn ForceEngine>>>,
+    /// One reused output buffer per shard (same `Mutex` story): sub-tile
+    /// results land here and are stitched into the caller's buffer, so a
+    /// warmed-up sharded dispatch allocates nothing.
+    scratch: Vec<Mutex<TileOutput>>,
     min_atoms_per_shard: usize,
     name: String,
 }
@@ -59,12 +63,15 @@ impl ShardedEngine {
     pub fn new(factory: &EngineFactory, shards: usize) -> anyhow::Result<Self> {
         let shards = shards.max(1);
         let mut engines = Vec::with_capacity(shards);
+        let mut scratch = Vec::with_capacity(shards);
         for _ in 0..shards {
             engines.push(Mutex::new(factory()?));
+            scratch.push(Mutex::new(TileOutput::default()));
         }
         let inner = lock_shard(&engines[0]).name().to_string();
         Ok(Self {
             engines,
+            scratch,
             min_atoms_per_shard: 1,
             name: format!("sharded{shards}x-{inner}"),
         })
@@ -106,17 +113,17 @@ impl ShardedEngine {
     }
 }
 
-/// Lock one shard's engine, recovering from poison.
+/// Lock one shard's slot (engine or output scratch), recovering from
+/// poison.
 ///
-/// A panicking inner `compute` (a hostile tile) unwinds with the guard
-/// held and poisons the mutex; recovery is sound because every engine
-/// resizes/zeroes its scratch at the top of `compute` — the same contract
-/// the force server's per-job panic containment relies on.  Without this,
-/// one bad tile would turn the shard into a permanent error source.
-fn lock_shard(
-    engine: &Mutex<Box<dyn ForceEngine>>,
-) -> std::sync::MutexGuard<'_, Box<dyn ForceEngine>> {
-    engine.lock().unwrap_or_else(PoisonError::into_inner)
+/// A panicking inner `compute_into` (a contract-violating engine) unwinds
+/// with the guard held and poisons the mutex; recovery is sound because
+/// every engine resizes/zeroes its scratch at the top of a dispatch — the
+/// same contract the force server's last-resort panic backstop relies on.
+/// Without this, one bad tile would turn the shard into a permanent error
+/// source.
+fn lock_shard<T>(slot: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    slot.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
 impl ForceEngine for ShardedEngine {
@@ -124,16 +131,17 @@ impl ForceEngine for ShardedEngine {
         &self.name
     }
 
-    fn compute(&mut self, input: &TileInput) -> TileOutput {
-        input.validate();
+    fn compute_into(&mut self, input: &TileInput, out: &mut TileOutput) -> Result<(), EngineError> {
+        input.check()?;
         let (na, nn) = (input.num_atoms, input.num_nbor);
         let ranges = self.plan(na);
         if ranges.len() <= 1 {
             let engine = self.engines[0].get_mut().unwrap_or_else(PoisonError::into_inner);
-            return engine.compute(input);
+            return engine.compute_into(input, out);
         }
         let engines = &self.engines;
-        let parts = parallel_map(ranges.len(), |s| {
+        let scratch = &self.scratch;
+        let results = parallel_map(ranges.len(), |s| {
             let (start, count) = ranges[s];
             let sub = TileInput {
                 num_atoms: count,
@@ -141,19 +149,26 @@ impl ForceEngine for ShardedEngine {
                 rij: &input.rij[start * nn * 3..(start + count) * nn * 3],
                 mask: &input.mask[start * nn..(start + count) * nn],
             };
-            lock_shard(&engines[s]).compute(&sub)
+            lock_shard(&engines[s]).compute_into(&sub, &mut lock_shard(&scratch[s]))
         });
-        // stitch: shards are contiguous atom ranges in plan order, so the
-        // concatenation *is* the serial layout
-        let mut out = TileOutput {
-            ei: Vec::with_capacity(na),
-            dedr: Vec::with_capacity(na * nn * 3),
-        };
-        for p in &parts {
-            out.ei.extend_from_slice(&p.ei);
-            out.dedr.extend_from_slice(&p.dedr);
+        // a failed shard fails the whole dispatch (first error wins; the
+        // caller's buffer contents are unspecified on error, per contract)
+        for r in results {
+            r?;
         }
-        out
+        // stitch into slices of the caller's buffer: shards are contiguous
+        // atom ranges in plan order, so the concatenation *is* the serial
+        // layout — and `clear` + `extend_from_slice` reuses its capacity
+        out.ei.clear();
+        out.dedr.clear();
+        for slot in self.scratch.iter().take(ranges.len()) {
+            let part = lock_shard(slot);
+            out.ei.extend_from_slice(&part.ei);
+            out.dedr.extend_from_slice(&part.dedr);
+        }
+        debug_assert_eq!(out.ei.len(), na);
+        debug_assert_eq!(out.dedr.len(), na * nn * 3);
+        Ok(())
     }
 
     fn footprint(&self, num_atoms: usize, num_nbor: usize) -> MemoryFootprint {
@@ -265,12 +280,16 @@ mod tests {
             fn name(&self) -> &str {
                 "panicky"
             }
-            fn compute(&mut self, input: &TileInput) -> TileOutput {
+            fn compute_into(
+                &mut self,
+                input: &TileInput,
+                out: &mut TileOutput,
+            ) -> Result<(), EngineError> {
                 assert!(!input.rij[0].is_nan(), "hostile tile");
-                TileOutput {
-                    ei: vec![1.0; input.num_atoms],
-                    dedr: vec![0.5; input.num_atoms * input.num_nbor * 3],
-                }
+                out.reset(input.num_atoms, input.num_nbor);
+                out.ei.fill(1.0);
+                out.dedr.fill(0.5);
+                Ok(())
             }
             fn footprint(&self, _na: usize, _nn: usize) -> MemoryFootprint {
                 MemoryFootprint::new()
@@ -290,6 +309,45 @@ mod tests {
         let good = TileInput { num_atoms: 2, num_nbor: 3, rij: &rij_ok, mask: &mask };
         let out = eng.compute(&good);
         assert_eq!(out.ei, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn shard_error_fails_the_dispatch_and_engine_stays_usable() {
+        struct Flaky;
+        impl ForceEngine for Flaky {
+            fn name(&self) -> &str {
+                "flaky"
+            }
+            fn compute_into(
+                &mut self,
+                input: &TileInput,
+                out: &mut TileOutput,
+            ) -> Result<(), EngineError> {
+                if input.rij[0] > 100.0 {
+                    return Err(EngineError::Backend("tile rejected".into()));
+                }
+                out.reset(input.num_atoms, input.num_nbor);
+                out.ei.fill(2.0);
+                Ok(())
+            }
+            fn footprint(&self, _na: usize, _nn: usize) -> MemoryFootprint {
+                MemoryFootprint::new()
+            }
+        }
+        let factory: EngineFactory = Arc::new(|| Ok(Box::new(Flaky) as Box<dyn ForceEngine>));
+        let mut eng = ShardedEngine::new(&factory, 2).unwrap();
+        let mut out = TileOutput::default();
+        let mut rij = vec![1.0; 2 * 3 * 3];
+        let mask = vec![1.0; 2 * 3];
+        rij[9] = 666.0; // atom 1 -> shard 1 reports a Backend error
+        let bad = TileInput { num_atoms: 2, num_nbor: 3, rij: &rij, mask: &mask };
+        let err = eng.compute_into(&bad, &mut out).unwrap_err();
+        assert!(matches!(err, EngineError::Backend(_)), "{err:?}");
+        // the error is per-dispatch, not per-engine: a good tile still works
+        let rij_ok = vec![1.0; 2 * 3 * 3];
+        let good = TileInput { num_atoms: 2, num_nbor: 3, rij: &rij_ok, mask: &mask };
+        eng.compute_into(&good, &mut out).unwrap();
+        assert_eq!(out.ei, vec![2.0, 2.0]);
     }
 
     #[test]

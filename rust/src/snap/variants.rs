@@ -93,6 +93,32 @@ impl Variant {
         })
     }
 
+    /// Every label [`from_label`](Self::from_label) accepts: the canonical
+    /// `ladder() ∪ fig1()` labels plus the CLI aliases, in parse order.
+    pub fn known_labels() -> Vec<&'static str> {
+        let mut out: Vec<&'static str> = Variant::ladder()
+            .iter()
+            .chain(Variant::fig1())
+            .map(Variant::label)
+            .collect();
+        out.extend(["V0", "fused", "aosoa"]);
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// [`from_label`](Self::from_label) with a diagnostic error: an unknown
+    /// label fails with a message listing every valid engine label (plus
+    /// the `xla:<artifact>` form engines resolve outside this enum).
+    pub fn resolve_label(s: &str) -> anyhow::Result<Variant> {
+        Variant::from_label(s).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown engine `{s}` — valid engines: {}, or xla:<artifact>",
+                Variant::known_labels().join(", ")
+            )
+        })
+    }
+
     /// Instantiate the engine realizing this ladder step.
     pub fn build(
         &self,
@@ -248,6 +274,21 @@ mod tests {
         assert_eq!(Variant::from_label("fused"), Some(Variant::Fused));
         assert_eq!(Variant::from_label("aosoa"), Some(Variant::FusedAosoa));
         assert_eq!(Variant::from_label("warp-drive"), None);
+    }
+
+    #[test]
+    fn unknown_label_error_lists_valid_engines() {
+        let err = format!("{:#}", Variant::resolve_label("warp-drive").unwrap_err());
+        assert!(err.contains("warp-drive"), "{err}");
+        // the message must name the aliases users actually type — at least
+        // `fused` — plus the ladder and the xla form
+        assert!(err.contains(", fused,") || err.contains(" fused,"), "{err}");
+        assert!(err.contains("baseline") && err.contains("V7"), "{err}");
+        assert!(err.contains("xla:<artifact>"), "{err}");
+        for label in Variant::known_labels() {
+            assert!(err.contains(label), "missing {label}: {err}");
+            assert!(Variant::from_label(label).is_some(), "{label} must parse");
+        }
     }
 
     #[test]

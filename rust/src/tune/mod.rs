@@ -19,7 +19,7 @@
 //! Lifecycle: `repro tune` calibrates and persists (plus the full explored
 //! frontier as `BENCH_tune.json`); `repro run`/`repro serve`/`md_tungsten`
 //! accept `--plan auto|<path>|off` and build their engines through
-//! `config::planned_engine_factory`.  Tuning changes speed, never physics:
+//! `config::EngineSpec` (`.plan(..)`).  Tuning changes speed, never physics:
 //! plan-driven dispatches stay bitwise identical to the chosen serial
 //! variants (enforced by `rust/tests/tune_plan.rs`).
 

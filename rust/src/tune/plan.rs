@@ -11,7 +11,7 @@
 //! bit-invisible, so a plan-driven dispatch is bitwise identical to running
 //! the chosen serial variant on the same tile.
 
-use crate::snap::engine::{ForceEngine, TileInput, TileOutput};
+use crate::snap::engine::{EngineError, ForceEngine, TileInput, TileOutput};
 use crate::snap::memory::MemoryFootprint;
 use crate::snap::sharded::DEFAULT_MIN_ATOMS_PER_SHARD;
 use crate::snap::variants::Variant;
@@ -252,7 +252,8 @@ impl PlanCounters {
 /// shape bucket — the per-shape dispatch behind `--plan`.
 pub struct PlannedEngine {
     /// One engine per bucket, indexed by [`ShapeBucket::index`]; built by
-    /// `config::planned_engine_factory` (possibly sharded per the plan).
+    /// `config::EngineSpec` on its plan path (possibly sharded per the
+    /// plan).
     engines: Vec<Box<dyn ForceEngine>>,
     counters: Arc<PlanCounters>,
     name: String,
@@ -281,10 +282,10 @@ impl ForceEngine for PlannedEngine {
         &self.name
     }
 
-    fn compute(&mut self, input: &TileInput) -> TileOutput {
+    fn compute_into(&mut self, input: &TileInput, out: &mut TileOutput) -> Result<(), EngineError> {
         let bucket = ShapeBucket::of(input.num_atoms);
         self.counters.note_dispatch(bucket);
-        self.engines[bucket.index()].compute(input)
+        self.engines[bucket.index()].compute_into(input, out)
     }
 
     fn footprint(&self, num_atoms: usize, num_nbor: usize) -> MemoryFootprint {
@@ -363,11 +364,14 @@ mod tests {
             fn name(&self) -> &str {
                 "tagged"
             }
-            fn compute(&mut self, input: &TileInput) -> TileOutput {
-                TileOutput {
-                    ei: vec![self.0; input.num_atoms],
-                    dedr: vec![0.0; input.num_atoms * input.num_nbor * 3],
-                }
+            fn compute_into(
+                &mut self,
+                input: &TileInput,
+                out: &mut TileOutput,
+            ) -> Result<(), EngineError> {
+                out.reset(input.num_atoms, input.num_nbor);
+                out.ei.fill(self.0);
+                Ok(())
             }
             fn footprint(&self, _na: usize, _nn: usize) -> MemoryFootprint {
                 MemoryFootprint::new()

@@ -19,8 +19,9 @@
 
 use super::plan::{PlanEntry, PlanKey, ShapeBucket, TunedPlan};
 use crate::bench::{BenchStats, Workload};
+use crate::config::EngineSpec;
 use crate::snap::coeff::SnapCoeffs;
-use crate::snap::engine::{EngineFactory, TileInput};
+use crate::snap::engine::{TileInput, TileOutput};
 use crate::snap::sharded::{build_sharded, DEFAULT_MIN_ATOMS_PER_SHARD};
 use crate::snap::variants::Variant;
 use crate::snap::{SnapIndex, SnapParams};
@@ -171,11 +172,15 @@ pub fn calibrate(opts: &SearchOptions) -> anyhow::Result<TuneOutcome> {
         // incumbent: (frontier index, median secs) of the bucket's best
         let mut incumbent: Option<(usize, f64)> = None;
         'candidates: for &variant in &opts.variant_candidates {
-            let factory: EngineFactory = {
-                let idx = idx.clone();
-                let beta = coeffs.beta.clone();
-                Arc::new(move || Ok(variant.build(params, idx.clone(), beta.clone())))
-            };
+            // one construction site for the whole strategy space: the
+            // candidate factories come from the same EngineSpec the CLI
+            // paths use, sharing one SnapIndex across the sweep
+            let factory = EngineSpec::new(opts.twojmax)
+                .variant(variant)
+                .beta(coeffs.beta.clone())
+                .shared_index(idx.clone())
+                .build_factory()?
+                .factory;
             for &shards in &shard_candidates {
                 let min_atoms = if shards > 1 { DEFAULT_MIN_ATOMS_PER_SHARD } else { 1 };
                 // a shard count the floor collapses to serial duplicates
@@ -188,15 +193,20 @@ pub fn calibrate(opts: &SearchOptions) -> anyhow::Result<TuneOutcome> {
                     break 'candidates;
                 }
                 let mut engine = build_sharded(&factory, shards, min_atoms)?;
+                // reused output buffer: candidates are timed on the same
+                // allocation-free dispatch path production uses
+                let mut out = TileOutput::default();
                 for _ in 0..opts.warmup {
-                    std::hint::black_box(engine.compute(&tile));
+                    engine.compute_into(&tile, &mut out)?;
+                    std::hint::black_box(&out);
                 }
                 let mut samples = Vec::with_capacity(opts.reps);
                 let mut running_min = f64::INFINITY;
                 let mut pruned = false;
                 for _ in 0..opts.reps.max(1) {
                     let rep = Stopwatch::start();
-                    std::hint::black_box(engine.compute(&tile));
+                    engine.compute_into(&tile, &mut out)?;
+                    std::hint::black_box(&out);
                     let secs = rep.elapsed_secs();
                     samples.push(secs);
                     running_min = running_min.min(secs);

@@ -1,0 +1,134 @@
+//! The `compute_into` dispatch contract, end to end through the public
+//! API: caller-owned output buffers are reused (zero allocations after
+//! warmup), the `compute` shim is bitwise-identical to `compute_into` for
+//! every native variant and the sharded wrapper, and shape violations come
+//! back as typed errors instead of panics.
+
+use repro::config::EngineSpec;
+use repro::snap::coeff::SnapCoeffs;
+use repro::snap::engine::{EngineError, TileInput, TileOutput};
+use repro::snap::variants::Variant;
+use repro::snap::SnapIndex;
+use repro::util::XorShift;
+
+fn random_tile(seed: u64, na: usize, nn: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = XorShift::new(seed);
+    let mut rij = Vec::new();
+    let mut mask = Vec::new();
+    for _ in 0..na * nn {
+        for _ in 0..3 {
+            rij.push(rng.uniform(-2.4, 2.4));
+        }
+        mask.push(if rng.next_f64() > 0.25 { 1.0 } else { 0.0 });
+    }
+    (rij, mask)
+}
+
+fn beta_for(twojmax: usize) -> Vec<f64> {
+    SnapCoeffs::synthetic(twojmax, SnapIndex::new(twojmax).idxb_max, 42).beta
+}
+
+/// Repeated `compute_into` calls on one engine never grow the output
+/// buffers after warmup: the steady-state serving/MD contract of zero
+/// per-dispatch output allocations.
+#[test]
+fn repeated_compute_into_does_not_grow_output_capacity() {
+    for (label, shards) in [("serial", 1usize), ("sharded", 3)] {
+        let mut engine = EngineSpec::new(2)
+            .engine("fused")
+            .beta(beta_for(2))
+            .shards(shards)
+            .min_atoms_per_shard(1)
+            .build()
+            .unwrap();
+        let (na, nn) = (9usize, 4usize);
+        let (rij, mask) = random_tile(7, na, nn);
+        let big = TileInput { num_atoms: na, num_nbor: nn, rij: &rij, mask: &mask };
+        let (rij_s, mask_s) = random_tile(8, 2, nn);
+        let small = TileInput { num_atoms: 2, num_nbor: nn, rij: &rij_s, mask: &mask_s };
+
+        let mut out = TileOutput::default();
+        engine.compute_into(&big, &mut out).unwrap(); // warmup: sizes the buffers
+        let (cap_ei, cap_dedr) = (out.ei.capacity(), out.dedr.capacity());
+        let (ptr_ei, ptr_dedr) = (out.ei.as_ptr(), out.dedr.as_ptr());
+        for rep in 0..20 {
+            // alternate shapes <= the warmup tile: reuse, never regrow
+            let tile = if rep % 3 == 2 { &small } else { &big };
+            engine.compute_into(tile, &mut out).unwrap();
+            assert_eq!(out.ei.len(), tile.num_atoms);
+            assert_eq!(out.dedr.len(), tile.num_atoms * nn * 3);
+            assert_eq!(out.ei.capacity(), cap_ei, "{label}: ei capacity grew at rep {rep}");
+            assert_eq!(
+                out.dedr.capacity(),
+                cap_dedr,
+                "{label}: dedr capacity grew at rep {rep}"
+            );
+            assert_eq!(out.ei.as_ptr(), ptr_ei, "{label}: ei reallocated at rep {rep}");
+            assert_eq!(out.dedr.as_ptr(), ptr_dedr, "{label}: dedr reallocated at rep {rep}");
+        }
+    }
+}
+
+/// `compute` (the allocating shim) and `compute_into` must agree bitwise
+/// for every native variant of the ladder ∪ fig1 set and for the sharded
+/// wrapper — the default method is a pure convenience, never a second
+/// implementation.
+#[test]
+fn compute_shim_is_bitwise_identical_to_compute_into_ladder_wide() {
+    let twojmax = 2usize;
+    let beta = beta_for(twojmax);
+    let (na, nn) = (5usize, 4usize);
+    let (rij, mask) = random_tile(31, na, nn);
+    let tile = TileInput { num_atoms: na, num_nbor: nn, rij: &rij, mask: &mask };
+    for v in Variant::ladder().iter().chain(Variant::fig1()) {
+        let mut engine = EngineSpec::new(twojmax)
+            .variant(*v)
+            .beta(beta.clone())
+            .build()
+            .unwrap();
+        let shimmed = engine.compute(&tile);
+        let mut into = TileOutput::default();
+        engine.compute_into(&tile, &mut into).unwrap();
+        assert_eq!(shimmed.ei, into.ei, "{v:?}: ei diverges");
+        assert_eq!(shimmed.dedr, into.dedr, "{v:?}: dedr diverges");
+    }
+    // the sharded wrapper honors the same equivalence
+    let mut sharded = EngineSpec::new(twojmax)
+        .engine("fused")
+        .beta(beta)
+        .shards(3)
+        .min_atoms_per_shard(1)
+        .build()
+        .unwrap();
+    let shimmed = sharded.compute(&tile);
+    let mut into = TileOutput::default();
+    sharded.compute_into(&tile, &mut into).unwrap();
+    assert_eq!(shimmed.ei, into.ei, "sharded: ei diverges");
+    assert_eq!(shimmed.dedr, into.dedr, "sharded: dedr diverges");
+}
+
+/// Shape violations are typed `BadShape` errors from `compute_into` — for
+/// the native engines and through the sharded wrapper — and the engine
+/// stays usable afterwards.
+#[test]
+fn bad_shapes_are_typed_errors_not_panics() {
+    for shards in [1usize, 3] {
+        let mut engine = EngineSpec::new(2)
+            .engine("fused")
+            .beta(beta_for(2))
+            .shards(shards)
+            .build()
+            .unwrap();
+        let (rij, mask) = random_tile(3, 2, 3);
+        let mut out = TileOutput::default();
+        // rij too short for the claimed shape
+        let bad = TileInput { num_atoms: 2, num_nbor: 4, rij: &rij, mask: &mask };
+        let err = engine.compute_into(&bad, &mut out).unwrap_err();
+        assert!(matches!(err, EngineError::BadShape(_)), "shards={shards}: {err:?}");
+        // a well-shaped tile still computes on the same engine + buffer
+        let good = TileInput { num_atoms: 2, num_nbor: 3, rij: &rij, mask: &mask };
+        engine.compute_into(&good, &mut out).unwrap();
+        assert_eq!(out.ei.len(), 2);
+        assert!(out.ei.iter().all(|e| e.is_finite()));
+    }
+}

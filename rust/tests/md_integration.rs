@@ -37,7 +37,7 @@ fn build_sim(variant: Variant, twojmax: usize, cells: usize, t0: f64) -> Simulat
 #[test]
 fn nve_conserves_energy_with_fused_engine() {
     let mut sim = build_sim(Variant::Fused, 2, 3, 60.0);
-    let stats = sim.run(80, &mut std::io::sink());
+    let stats = sim.run(80, &mut std::io::sink()).unwrap();
     assert!(
         stats.energy_drift_per_atom < 1e-5,
         "NVE drift {} eV/atom",
@@ -51,7 +51,7 @@ fn nve_trajectories_agree_across_engines() {
     // of which engine computes forces
     let run = |v: Variant| {
         let mut sim = build_sim(v, 2, 3, 40.0);
-        sim.run(25, &mut std::io::sink());
+        sim.run(25, &mut std::io::sink()).unwrap();
         sim.structure.pos.clone()
     };
     let a = run(Variant::V0Baseline);
@@ -68,7 +68,7 @@ fn neighbor_rebuild_policy_does_not_change_physics() {
     let run = |every: usize| {
         let mut sim = build_sim(Variant::Fused, 2, 3, 40.0);
         sim.cfg.neighbor_every = every;
-        sim.run(20, &mut std::io::sink());
+        sim.run(20, &mut std::io::sink()).unwrap();
         // positions are wrapped at rebuild time, so raw coordinates differ
         // by exact box lengths between cadences; compare wrapped coords
         sim.structure.wrap_all();
@@ -90,7 +90,7 @@ fn neighbor_rebuild_policy_does_not_change_physics() {
 fn langevin_equilibrates_toward_target() {
     let mut sim = build_sim(Variant::Fused, 2, 3, 0.0);
     sim.cfg.langevin = Some((150.0, 0.05, 3));
-    let stats = sim.run(150, &mut std::io::sink());
+    let stats = sim.run(150, &mut std::io::sink()).unwrap();
     let tail: Vec<f64> = stats.thermo.iter().rev().take(4).map(|t| t.temp).collect();
     let t_mean = tail.iter().sum::<f64>() / tail.len() as f64;
     assert!(
@@ -102,7 +102,7 @@ fn langevin_equilibrates_toward_target() {
 #[test]
 fn stage_times_are_recorded() {
     let mut sim = build_sim(Variant::Fused, 2, 3, 10.0);
-    sim.run(3, &mut std::io::sink());
+    sim.run(3, &mut std::io::sink()).unwrap();
     let report = sim.field.times.report();
     assert!(report.contains("execute"), "{report}");
     assert!(report.contains("pack"));
@@ -113,7 +113,7 @@ fn stage_times_are_recorded() {
 #[test]
 fn virial_pressure_is_finite_and_symmetric_lattice_is_isotropic() {
     let mut sim = build_sim(Variant::Fused, 2, 3, 0.0);
-    let r = sim.compute_forces().clone();
+    let r = sim.compute_forces().unwrap().clone();
     // perfect cubic lattice: diagonal virial components equal, off-diagonal ~0
     let w = r.virial;
     assert!((w[0] - w[4]).abs() < 1e-6 * (1.0 + w[0].abs()));
@@ -134,7 +134,7 @@ fn nve_error_scales_as_dt_squared() {
         sim.cfg.dt = dt;
         // fixed physical time horizon
         let steps = (0.016 / dt).round() as usize;
-        sim.run(steps, &mut std::io::sink()).energy_drift_per_atom
+        sim.run(steps, &mut std::io::sink()).unwrap().energy_drift_per_atom
     };
     let d1 = drift(0.0004);
     let d2 = drift(0.0002);

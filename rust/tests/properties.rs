@@ -63,7 +63,7 @@ fn prop_tiling_is_invisible() {
         let nn = nl.max_count().max(1);
         let run = |tile: usize| {
             let mut ff = ForceField::new(engine(Variant::Fused, 3, 42), tile, nn);
-            ff.compute(&s, &nl)
+            ff.compute(&s, &nl).unwrap()
         };
         let a = run(1);
         let b = run(7);
@@ -203,7 +203,7 @@ fn prop_force_balance_on_random_structures() {
         let nl = NeighborList::build_cells(&s, 4.2);
         let mut ff =
             ForceField::new(engine(Variant::Fused, 2, 42), 16, nl.max_count().max(1));
-        let r = ff.compute(&s, &nl);
+        let r = ff.compute(&s, &nl).unwrap();
         for k in 0..3 {
             let sum: f64 = (0..s.natoms()).map(|i| r.forces[3 * i + k]).sum();
             assert!(sum.abs() < 1e-8, "seed {seed} axis {k}: net force {sum}");

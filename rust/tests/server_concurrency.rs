@@ -3,7 +3,7 @@
 //! byte-identical replies to sequential serving, fault isolation between
 //! connections, stats that add up, and a graceful shutdown path.
 
-use repro::config::engine_factory;
+use repro::config::EngineSpec;
 use repro::coordinator::server::{
     serve_with_stats, shutdown, ServeOptions, ServerStats,
 };
@@ -19,7 +19,12 @@ use std::sync::{Arc, Barrier};
 fn factory(engine: &str, twojmax: usize) -> EngineFactory {
     let idx = SnapIndex::new(twojmax);
     let coeffs = SnapCoeffs::synthetic(twojmax, idx.idxb_max, 42);
-    engine_factory(engine, twojmax, coeffs.beta, "artifacts").unwrap()
+    EngineSpec::new(twojmax)
+        .engine(engine)
+        .beta(coeffs.beta)
+        .build_factory()
+        .unwrap()
+        .factory
 }
 
 struct TestServer {
@@ -31,11 +36,14 @@ struct TestServer {
 
 impl TestServer {
     fn start(opts: ServeOptions, engine: &str, twojmax: usize) -> Self {
+        Self::start_with_factory(opts, factory(engine, twojmax))
+    }
+
+    fn start_with_factory(opts: ServeOptions, f: EngineFactory) -> Self {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
         let stop = Arc::new(AtomicBool::new(false));
         let stats = Arc::new(ServerStats::default());
-        let f = factory(engine, twojmax);
         let (stop2, stats2) = (stop.clone(), stats.clone());
         let handle = std::thread::spawn(move || {
             serve_with_stats(listener, f, &opts, stop2, stats2)
@@ -346,7 +354,18 @@ fn sharded_workers_are_byte_identical_and_observable() {
         shards: 3,
         ..ServeOptions::default()
     };
-    let srv = TestServer::start(opts, "fused", 2);
+    // sharding lives in the factory now: the spec bakes it in, the
+    // ServeOptions knob is what the stats report
+    let idx = SnapIndex::new(2);
+    let coeffs = SnapCoeffs::synthetic(2, idx.idxb_max, 42);
+    let sharded_factory = EngineSpec::new(2)
+        .engine("fused")
+        .beta(coeffs.beta)
+        .shards(3)
+        .build_factory()
+        .unwrap()
+        .factory;
+    let srv = TestServer::start_with_factory(opts, sharded_factory);
     let mut client = Client::connect(srv.addr);
     // intra-tile sharding must be byte-invisible to clients, for tiles
     // both above and below the fan-out floor
@@ -374,7 +393,7 @@ fn sharded_workers_are_byte_identical_and_observable() {
 #[test]
 fn planned_server_reports_plan_stats_and_stays_bitwise() {
     use repro::coordinator::server::PlanSetup;
-    use repro::tune::{self, PlanCounters, PlanEntry, PlanKey, ShapeBucket, TunedPlan};
+    use repro::tune::{self, PlanEntry, PlanKey, ShapeBucket, TunedPlan};
 
     // persist a plan for this process's exact key: medium tiles on a
     // 2-way-sharded V7, everything else on the default fused entries
@@ -390,8 +409,6 @@ fn planned_server_reports_plan_stats_and_stays_bitwise() {
         .to_string_lossy()
         .into_owned();
     tune::cache::save(&path, &plan).unwrap();
-    let sel = tune::cache::resolve(&path, key).expect("path spec resolves");
-    assert!(sel.cache.is_hit(), "freshly saved plan must hit: {:?}", sel.cache);
 
     // ground truth: the chosen variants served serially
     let small = request_line(50, 2, 4); // small bucket -> fused
@@ -407,20 +424,28 @@ fn planned_server_reports_plan_stats_and_stays_bitwise() {
     drop(client);
     seq.finish();
 
-    // plan-driven server
+    // plan-driven server, built through the one construction site
     let idx = SnapIndex::new(2);
     let coeffs = SnapCoeffs::synthetic(2, idx.idxb_max, 42);
-    let counters = std::sync::Arc::new(PlanCounters::new());
-    let planned_factory =
-        repro::config::planned_engine_factory(&sel.plan, coeffs.beta, counters.clone()).unwrap();
+    let build = EngineSpec::new(2).beta(coeffs.beta).plan(&path).build_factory().unwrap();
+    let resolution = build.plan.as_ref().expect("path spec resolves");
+    assert!(
+        resolution.selection.cache.is_hit(),
+        "freshly saved plan must hit: {:?}",
+        resolution.selection.cache
+    );
     let opts = ServeOptions {
         workers: 2,
         batch_window: std::time::Duration::ZERO,
         queue_depth: 64,
         max_batch_atoms: 32,
         shards: 1,
-        plan: Some(PlanSetup::from_selection(&sel, counters)),
+        plan: Some(PlanSetup::from_selection(
+            &resolution.selection,
+            resolution.counters.clone(),
+        )),
     };
+    let planned_factory = build.factory;
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     let stop = Arc::new(AtomicBool::new(false));
@@ -464,6 +489,83 @@ fn planned_server_reports_plan_stats_and_stays_bitwise() {
     shutdown(addr, &stop);
     handle.join().unwrap().unwrap();
     std::fs::remove_file(&path).unwrap();
+}
+
+/// Engine fault isolation: dispatch failures — typed `EngineError`s *and*
+/// contract-violating panics caught by the last-resort backstop — become
+/// structured error replies on the offending request, are counted in the
+/// `engine_errors` stat, and never kill the worker: the same worker keeps
+/// serving good requests afterwards.
+#[test]
+fn engine_errors_are_structured_counted_and_isolated() {
+    use repro::snap::engine::{EngineError, ForceEngine, TileInput, TileOutput};
+
+    /// Stub engine: rij[0] == 666 -> typed Backend error; rij[0] == 777 ->
+    /// panic (exercising the backstop); anything else computes.
+    struct Booby;
+    impl ForceEngine for Booby {
+        fn name(&self) -> &str {
+            "booby"
+        }
+        fn compute_into(
+            &mut self,
+            input: &TileInput,
+            out: &mut TileOutput,
+        ) -> Result<(), EngineError> {
+            input.check()?;
+            if input.rij[0] == 666.0 {
+                return Err(EngineError::Backend("device fell over".into()));
+            }
+            assert!(input.rij[0] != 777.0, "boom");
+            out.reset(input.num_atoms, input.num_nbor);
+            out.ei.fill(1.5);
+            Ok(())
+        }
+        fn footprint(&self, _na: usize, _nn: usize) -> repro::snap::memory::MemoryFootprint {
+            repro::snap::memory::MemoryFootprint::new()
+        }
+    }
+
+    let f: EngineFactory = Arc::new(|| Ok(Box::new(Booby) as Box<dyn ForceEngine>));
+    let srv = TestServer::start_with_factory(
+        ServeOptions { workers: 1, ..sequential_opts() },
+        f,
+    );
+    let mut client = Client::connect(srv.addr);
+    let req = |x0: f64| {
+        format!(
+            "{{\"num_atoms\": 1, \"num_nbor\": 1, \"rij\": [{x0}, 0, 0], \"mask\": [1]}}"
+        )
+    };
+    // typed engine error -> structured reply through the normal error path
+    let reply = client.roundtrip(&req(666.0));
+    let parsed = Json::parse(&reply).expect("engine-error reply is valid JSON");
+    assert_eq!(parsed.get("ok"), Some(&Json::Bool(false)), "{reply}");
+    let msg = parsed.get("error").and_then(Json::as_str).unwrap();
+    assert!(msg.contains("device fell over"), "{msg}");
+    // panicking engine -> the backstop converts, same structured shape
+    let reply = client.roundtrip(&req(777.0));
+    let parsed = Json::parse(&reply).expect("panic reply is valid JSON");
+    assert_eq!(parsed.get("ok"), Some(&Json::Bool(false)), "{reply}");
+    assert!(
+        parsed.get("error").and_then(Json::as_str).unwrap().contains("panicked"),
+        "{reply}"
+    );
+    // the single worker survived both: a good request still computes
+    let reply = client.roundtrip(&req(1.0));
+    assert!(reply.contains("\"ok\": true"), "worker died: {reply}");
+    // and the stats separate engine failures from malformed-frame noise
+    let reply = client.roundtrip("{\"num_atoms\": 2}"); // parse error, not engine
+    assert!(reply.contains("\"ok\": false"));
+    let stats_reply = client.roundtrip("{\"cmd\": \"stats\"}");
+    let j = Json::parse(&stats_reply).expect("stats reply parses");
+    let s = j.get("stats").expect("stats object");
+    let get = |k: &str| s.get(k).and_then(Json::as_usize).unwrap();
+    assert_eq!(get("engine_errors"), 2, "{stats_reply}");
+    assert_eq!(get("replies_err"), 3, "{stats_reply}");
+    assert_eq!(get("replies_ok"), 1, "{stats_reply}");
+    drop(client);
+    srv.finish();
 }
 
 #[test]

@@ -5,7 +5,7 @@
 //! as unit tests in `snap/sharded.rs` and `util/parallel.rs`.)
 
 use repro::bench::{grind, Workload};
-use repro::config::{engine_factory, sharded_engine_factory};
+use repro::config::EngineSpec;
 use repro::snap::coeff::SnapCoeffs;
 use repro::snap::sharded::ShardedEngine;
 use repro::snap::{ForceEngine, SnapIndex, SnapParams, TileInput};
@@ -14,7 +14,12 @@ use repro::util::{ThreadPool, XorShift};
 fn fused_factory(twojmax: usize) -> repro::snap::EngineFactory {
     let idx = SnapIndex::new(twojmax);
     let coeffs = SnapCoeffs::synthetic(twojmax, idx.idxb_max, 42);
-    engine_factory("fused", twojmax, coeffs.beta, "artifacts").unwrap()
+    EngineSpec::new(twojmax)
+        .engine("fused")
+        .beta(coeffs.beta)
+        .build_factory()
+        .unwrap()
+        .factory
 }
 
 /// Random tile with ~25% padded neighbor slots and (for na > 2) one fully
@@ -55,10 +60,16 @@ fn sharded_engine_is_reusable_across_tile_sizes() {
 }
 
 #[test]
-fn sharded_factory_produces_named_wrappers() {
+fn sharded_spec_produces_named_wrappers() {
     let idx = SnapIndex::new(2);
     let coeffs = SnapCoeffs::synthetic(2, idx.idxb_max, 42);
-    let f = sharded_engine_factory("fused", 2, coeffs.beta, "artifacts", 4).unwrap();
+    let f = EngineSpec::new(2)
+        .engine("fused")
+        .beta(coeffs.beta)
+        .shards(4)
+        .build_factory()
+        .unwrap()
+        .factory;
     let a = f().unwrap();
     let b = f().unwrap();
     assert_eq!(a.name(), "sharded4x-VI-fused");

@@ -7,9 +7,7 @@ use repro::snap::coeff::SnapCoeffs;
 use repro::snap::engine::TileInput;
 use repro::snap::variants::Variant;
 use repro::snap::SnapIndex;
-use repro::tune::{
-    calibrate, PlanCounters, PlanEntry, PlanKey, SearchOptions, ShapeBucket, TunedPlan,
-};
+use repro::tune::{calibrate, PlanEntry, PlanKey, SearchOptions, ShapeBucket, TunedPlan};
 use repro::util::json::Json;
 use repro::util::XorShift;
 use std::sync::Arc;
@@ -50,11 +48,20 @@ fn plan_driven_engines_match_serial_reference_bitwise() {
         PlanEntry { variant: Variant::FusedAosoa, shards: 4, min_atoms_per_shard: 4 },
     );
 
-    let counters = Arc::new(PlanCounters::new());
-    let factory =
-        repro::config::planned_engine_factory(&plan, coeffs.beta.clone(), counters.clone())
-            .unwrap();
-    let mut planned = factory().unwrap();
+    // persist the plan and build through the one construction site
+    let path = std::env::temp_dir()
+        .join(format!("repro_tune_bitwise_{}.json", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    repro::tune::cache::save(&path, &plan).unwrap();
+    let build = repro::config::EngineSpec::new(twojmax)
+        .beta(coeffs.beta.clone())
+        .plan(&path)
+        .build_factory()
+        .unwrap();
+    let counters = build.plan.as_ref().unwrap().counters.clone();
+    let mut planned = (build.factory)().unwrap();
+    std::fs::remove_file(&path).unwrap();
 
     let params = repro::snap::SnapParams::with_twojmax(twojmax);
     let idx = Arc::new(SnapIndex::new(twojmax));
