@@ -13,7 +13,15 @@
 //! # native engine:       ... md_tungsten -- --engine fused
 //! # intra-tile shards:   ... md_tungsten -- --engine fused --shards 4
 //! # autotuned plan:      ... md_tungsten -- --plan auto   (after `repro tune`)
+//! # 2-element W-Be MD:   ... md_tungsten -- --alloy --cells 4 --steps 40
+//! # bench record:        ... md_tungsten -- --alloy --bench-out BENCH_alloy.json
 //! ```
+//!
+//! `--alloy` swaps the workload to the B2 W–Be cell with a synthetic
+//! 2-element potential: per-pair cutoffs `rcutfac*(R_i+R_j)`, per-element
+//! density weights and beta blocks, per-atom masses in the integrator —
+//! the typed-tile path end to end.  It defaults to the native fused
+//! engine (xla artifacts are single-element).
 //!
 //! Results are recorded in the experiment reports (`repro experiments`).
 
@@ -34,27 +42,44 @@ fn arg<T: std::str::FromStr>(args: &[String], key: &str, default: T) -> T {
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
+    let alloy = args.iter().any(|a| a == "--alloy");
     let cells: usize = arg(&args, "--cells", 10); // 10 -> the paper's 2000 atoms
     let warm_steps: usize = arg(&args, "--warm", 30);
     let steps: usize = arg(&args, "--steps", 120);
-    let engine_name: String = arg(&args, "--engine", "xla:snap_2j8".to_string());
+    // the W-Be scenario defaults to the native fused engine: the AOT xla
+    // artifacts are compiled for the single-element model
+    let default_engine = if alloy { "fused" } else { "xla:snap_2j8" };
+    let engine_name: String = arg(&args, "--engine", default_engine.to_string());
     let artifacts: String = arg(&args, "--artifacts", "artifacts".to_string());
     let shards: usize = arg(&args, "--shards", 1).max(1);
     let plan_spec: String = arg(&args, "--plan", "off".to_string());
+    let bench_out: String = arg(&args, "--bench-out", String::new());
 
     let twojmax = 8;
     let params = SnapParams::with_twojmax(twojmax);
     let idx = Arc::new(SnapIndex::new(twojmax));
-    let coeffs = SnapCoeffs::synthetic(twojmax, idx.idxb_max, 42);
-
-    let mut structure =
-        lattice::bcc(cells, cells, cells, lattice::BCC_W_LATTICE, 183.84);
+    let (mut structure, coeffs, workload) = if alloy {
+        (
+            lattice::wbe_alloy(cells),
+            SnapCoeffs::synthetic_multi(twojmax, idx.idxb_max, 2, 42),
+            "B2 W-Be",
+        )
+    } else {
+        (
+            lattice::bcc(cells, cells, cells, lattice::BCC_W_LATTICE, 183.84),
+            SnapCoeffs::synthetic(twojmax, idx.idxb_max, 42),
+            "bcc W",
+        )
+    };
     let natoms = structure.natoms();
     let mut rng = XorShift::new(87287);
     structure.seed_velocities(300.0, &mut rng);
+    // neighbor lists must cover the widest species pair (for W-Be that is
+    // W-W, which equals the single-element cutoff)
+    let cutoff = coeffs.elements.max_cutoff(params.rcutfac).max(params.rcut());
 
     println!(
-        "# md_tungsten: {natoms} atoms bcc W, 2J={twojmax}, engine={engine_name}, \
+        "# md_tungsten: {natoms} atoms {workload}, 2J={twojmax}, engine={engine_name}, \
          shards={shards}, plan={plan_spec}"
     );
     // one construction site for every engine shape (name/xla, sharded,
@@ -64,13 +89,14 @@ fn main() -> anyhow::Result<()> {
     let build = repro::config::EngineSpec::new(twojmax)
         .engine(&engine_name)
         .beta(coeffs.beta.clone())
+        .elements(coeffs.elements.clone())
         .artifacts_dir(&artifacts)
         .shards(shards)
         .plan(&plan_spec)
         .build_factory()?;
     if let Some(p) = &build.plan {
         println!("# plan: {} (cache {})", p.selection.source, p.selection.cache.label());
-        if engine_name != "xla:snap_2j8" || shards > 1 {
+        if engine_name != default_engine || shards > 1 {
             println!("# note: --plan overrides --engine/--shards");
         }
     }
@@ -78,9 +104,11 @@ fn main() -> anyhow::Result<()> {
     let mut sim = Simulation::new(
         structure,
         field,
-        params.rcut(),
+        cutoff,
         SimConfig {
-            dt: 0.0005, // 0.5 fs
+            // lighter Be atoms oscillate faster: the alloy runs a shorter
+            // timestep to keep the Verlet truncation error in band
+            dt: if alloy { 0.0002 } else { 0.0005 },
             neighbor_every: 10,
             skin: 0.3,
             thermo_every: 10,
@@ -120,12 +148,32 @@ fn main() -> anyhow::Result<()> {
     repro::io::dump::write_xyz(&mut f, &sim.structure, "final frame")?;
     println!("# final frame written to {dump_path}");
 
-    // loose sanity gate so CI-style runs fail loudly on broken physics
+    // loose sanity gates so CI-style runs fail loudly on broken physics
+    anyhow::ensure!(
+        stats.thermo.iter().all(|t| t.e_total.is_finite() && t.temp.is_finite()),
+        "non-finite energies/temperature in the trajectory"
+    );
+    anyhow::ensure!(
+        sim.structure.force.iter().all(|f| f.is_finite()),
+        "non-finite forces at the final step"
+    );
     anyhow::ensure!(
         stats.energy_drift_per_atom < 1e-3,
         "NVE drift {} eV/atom is too large — force/energy inconsistency",
         stats.energy_drift_per_atom
     );
+    if !bench_out.is_empty() {
+        let last = stats.thermo.last().unwrap();
+        let json = format!(
+            "{{\"bench\": \"md\", \"workload\": \"{workload}\", \"alloy\": {alloy}, \
+             \"natoms\": {natoms}, \"steps\": {steps}, \
+             \"katom_steps_per_sec\": {:.3}, \"drift_ev_per_atom\": {:.6e}, \
+             \"e_total_final\": {:.6}, \"temp_final\": {:.3}}}\n",
+            stats.katom_steps_per_sec, stats.energy_drift_per_atom, last.e_total, last.temp
+        );
+        std::fs::write(&bench_out, json)?;
+        println!("# bench point written to {bench_out}");
+    }
     println!("# OK: all three layers compose; energy is conserved.");
     Ok(())
 }

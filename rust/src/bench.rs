@@ -6,7 +6,7 @@
 //! `harness = false`.
 
 use crate::md::{lattice, NeighborList, Structure};
-use crate::snap::engine::{ForceEngine, TileInput, TileOutput};
+use crate::snap::engine::{ForceEngine, TileElems, TileInput, TileOutput};
 use crate::snap::sharded::build_sharded;
 use crate::snap::variants::Variant;
 use crate::snap::SnapIndex;
@@ -92,18 +92,37 @@ pub struct Workload {
     pub mask: Vec<f64>,
     pub num_atoms: usize,
     pub num_nbor: usize,
+    /// Element-type channel (empty for single-element workloads): what a
+    /// multi-element tune run times, so plan timings reflect the per-pair
+    /// cutoff/weight arithmetic typed tiles actually pay.
+    pub ielems: Vec<i32>,
+    pub jelems: Vec<i32>,
 }
 
 impl Workload {
     /// The paper's benchmark geometry: bcc W with exactly 26 neighbors per
     /// atom at the 2J8 cutoff; `cells` scales the atom count (10 -> 2000).
     pub fn tungsten(cells: usize, cutoff: f64) -> Self {
+        Self::tungsten_multi(cells, cutoff, 1)
+    }
+
+    /// The benchmark geometry with `nelems` species assigned round-robin
+    /// over the bcc sites — the representative *typed* workload the
+    /// multi-element tuner times (geometry identical to [`tungsten`];
+    /// only the types channel changes what the engines compute).
+    pub fn tungsten_multi(cells: usize, cutoff: f64, nelems: usize) -> Self {
         assert!(
             cells as f64 * lattice::BCC_W_LATTICE > 2.0 * cutoff,
             "need >= {} cells for cutoff {cutoff} (minimum-image)",
             (2.0 * cutoff / lattice::BCC_W_LATTICE).ceil()
         );
-        let structure = lattice::bcc(cells, cells, cells, lattice::BCC_W_LATTICE, 183.84);
+        let mut structure = lattice::bcc(cells, cells, cells, lattice::BCC_W_LATTICE, 183.84);
+        if nelems > 1 {
+            structure.masses = vec![183.84; nelems];
+            structure.symbols = (0..nelems).map(|e| format!("E{e}")).collect();
+            structure.types =
+                (0..structure.natoms()).map(|i| (i % nelems) as i32).collect();
+        }
         Self::from_structure(structure, cutoff)
     }
 
@@ -111,18 +130,33 @@ impl Workload {
         let neighbors = NeighborList::build_cells(&structure, cutoff);
         let num_atoms = structure.natoms();
         let num_nbor = neighbors.max_count();
+        let typed = structure.nelems() > 1;
         let mut rij = vec![0.0; num_atoms * num_nbor * 3];
         let mut mask = vec![0.0; num_atoms * num_nbor];
+        let mut ielems = vec![0i32; if typed { num_atoms } else { 0 }];
+        let mut jelems = vec![0i32; if typed { num_atoms * num_nbor } else { 0 }];
         for a in 0..num_atoms {
-            for (slot, (_, d)) in neighbors.row(a).enumerate() {
+            if typed {
+                ielems[a] = structure.types[a];
+            }
+            for (slot, (j, d)) in neighbors.row(a).enumerate() {
                 let o = (a * num_nbor + slot) * 3;
                 rij[o] = d[0];
                 rij[o + 1] = d[1];
                 rij[o + 2] = d[2];
                 mask[a * num_nbor + slot] = 1.0;
+                if typed {
+                    jelems[a * num_nbor + slot] = structure.types[j as usize];
+                }
             }
         }
-        Self { structure, neighbors, rij, mask, num_atoms, num_nbor }
+        Self { structure, neighbors, rij, mask, num_atoms, num_nbor, ielems, jelems }
+    }
+
+    /// The types channel, when this is a multi-element workload.
+    pub fn elems(&self) -> Option<TileElems<'_>> {
+        (!self.ielems.is_empty())
+            .then(|| TileElems { ielems: &self.ielems, jelems: &self.jelems })
     }
 
     pub fn tile(&self) -> TileInput<'_> {
@@ -131,6 +165,7 @@ impl Workload {
             num_nbor: self.num_nbor,
             rij: &self.rij,
             mask: &self.mask,
+            elems: self.elems(),
         }
     }
 }

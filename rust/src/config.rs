@@ -8,6 +8,7 @@
 
 use crate::snap::coeff::SnapCoeffs;
 use crate::snap::engine::{EngineFactory, ForceEngine};
+use crate::snap::params::ElementTable;
 use crate::snap::variants::Variant;
 use crate::snap::SnapIndex;
 use crate::tune::{PlanCounters, PlannedEngine, ShapeBucket, TunedPlan};
@@ -105,6 +106,7 @@ pub struct EngineSpec {
     twojmax: usize,
     engine: String,
     beta: Option<Vec<f64>>,
+    elements: ElementTable,
     artifacts_dir: String,
     shards: usize,
     min_atoms_per_shard: usize,
@@ -143,6 +145,7 @@ impl EngineSpec {
             twojmax,
             engine: "fused".to_string(),
             beta: None,
+            elements: ElementTable::single(),
             artifacts_dir: "artifacts".to_string(),
             shards: 1,
             min_atoms_per_shard: crate::snap::sharded::DEFAULT_MIN_ATOMS_PER_SHARD,
@@ -172,9 +175,22 @@ impl EngineSpec {
         self
     }
 
-    /// SNAP linear coefficients (required; length-checked at build).
+    /// SNAP linear coefficients (required; length-checked at build).  For
+    /// multi-element specs this is the *flattened* per-element block layout
+    /// (`nelems * idxb_max` values, element 0's block first) —
+    /// [`SnapCoeffs::beta`] is already in this form.
     pub fn beta(mut self, beta: Vec<f64>) -> EngineSpec {
         self.beta = Some(beta);
+        self
+    }
+
+    /// Per-element `(radius, weight)` tables (default: the degenerate
+    /// single-element table).  With more than one element, built engines
+    /// accept the tile types channel, `beta` must carry one block per
+    /// element, and the autotune plan key incorporates the element count so
+    /// plans tuned for different species sets never cross-contaminate.
+    pub fn elements(mut self, elements: ElementTable) -> EngineSpec {
+        self.elements = elements;
         self
     }
 
@@ -228,7 +244,7 @@ impl EngineSpec {
             .context("EngineSpec needs coefficients: call .beta(..)")?;
         if let Some(selection) = crate::tune::cache::resolve(
             &self.plan_spec,
-            crate::tune::PlanKey::current(self.twojmax),
+            crate::tune::PlanKey::current_multi(self.twojmax, self.elements.nelems()),
         ) {
             return self.build_planned(selection, beta);
         }
@@ -301,6 +317,11 @@ impl EngineSpec {
             // PJRT engines own a runtime/client each, so the closure opens
             // a fresh Runtime per build; metadata is validated once up
             // front.
+            anyhow::ensure!(
+                self.elements.nelems() == 1,
+                "xla:{artifact} engines are single-element — \
+                 use a native engine for multi-element tables"
+            );
             let artifact = artifact.to_string();
             let artifacts_dir = self.artifacts_dir.clone();
             let probe = crate::runtime::Runtime::open(&artifacts_dir)?;
@@ -333,13 +354,17 @@ impl EngineSpec {
             }
             None => Arc::new(SnapIndex::new(self.twojmax)),
         };
+        let elems = self.elements.clone();
         anyhow::ensure!(
-            beta.len() == idx.idxb_max,
-            "beta length {} != {} bispectrum components",
+            beta.len() == elems.nelems() * idx.idxb_max,
+            "beta length {} != {} element(s) x {} bispectrum components",
             beta.len(),
+            elems.nelems(),
             idx.idxb_max
         );
-        Ok(Arc::new(move || Ok(variant.build(params, idx.clone(), beta.clone()))))
+        Ok(Arc::new(move || {
+            Ok(variant.build_multi(params, idx.clone(), beta.clone(), elems.clone()))
+        }))
     }
 }
 
@@ -359,9 +384,9 @@ pub fn resolve_coeffs(
             let params = crate::snap::SnapParams::with_twojmax(twojmax);
             let c = SnapCoeffs::parse_snapcoeff(&text, params)?;
             anyhow::ensure!(
-                c.beta.len() == idx.idxb_max,
-                "coeff file has {} coefficients, 2J={twojmax} needs {}",
-                c.beta.len(),
+                c.beta.len() == c.nelems() * idx.idxb_max,
+                "coeff file has {} coefficients per element, 2J={twojmax} needs {}",
+                c.ncoeff_per_elem(),
                 idx.idxb_max
             );
             Ok(c)
@@ -441,7 +466,13 @@ mod tests {
         // both instances compute independently (each owns its scratch)
         let rij = vec![1.5, 0.0, 0.0, 0.0, 1.5, 0.0];
         let mask = vec![1.0, 1.0];
-        let t = crate::snap::TileInput { num_atoms: 1, num_nbor: 2, rij: &rij, mask: &mask };
+        let t = crate::snap::TileInput {
+            num_atoms: 1,
+            num_nbor: 2,
+            rij: &rij,
+            mask: &mask,
+            elems: None,
+        };
         let oa = a.compute(&t);
         let ob = b.compute(&t);
         assert_eq!(oa.ei, ob.ei);
@@ -493,11 +524,66 @@ mod tests {
             0.9, 0.0, 0.9, 1.2, 0.3, 0.0, 0.0, 1.2, 0.3,
         ];
         let mask = vec![1.0; 8];
-        let t = crate::snap::TileInput { num_atoms: 4, num_nbor: 2, rij: &rij, mask: &mask };
+        let t = crate::snap::TileInput {
+            num_atoms: 4,
+            num_nbor: 2,
+            rij: &rij,
+            mask: &mask,
+            elems: None,
+        };
         let a = serial.compute(&t);
         let b = sharded.compute(&t);
         assert_eq!(a.ei, b.ei);
         assert_eq!(a.dedr, b.dedr);
+    }
+
+    #[test]
+    fn multi_element_spec_validates_and_builds() {
+        use crate::snap::coeff::SnapCoeffs;
+        let coeffs = SnapCoeffs::synthetic_multi(2, SnapIndex::new(2).idxb_max, 2, 42);
+        let mut eng = EngineSpec::new(2)
+            .engine("fused")
+            .beta(coeffs.beta.clone())
+            .elements(coeffs.elements.clone())
+            .build()
+            .unwrap();
+        // a typed tile dispatches through the spec-built engine
+        let rij = vec![1.5, 0.0, 0.0, 0.0, 1.5, 0.0];
+        let mask = vec![1.0, 1.0];
+        let ielems = vec![1i32];
+        let jelems = vec![0i32, 1];
+        let t = crate::snap::TileInput {
+            num_atoms: 1,
+            num_nbor: 2,
+            rij: &rij,
+            mask: &mask,
+            elems: Some(crate::snap::TileElems { ielems: &ielems, jelems: &jelems }),
+        };
+        let out = eng.compute(&t);
+        assert!(out.ei[0].is_finite());
+        // a single-element beta vector is the wrong length for 2 elements
+        let single_beta = SnapCoeffs::synthetic(2, SnapIndex::new(2).idxb_max, 42).beta;
+        let err = format!(
+            "{:#}",
+            EngineSpec::new(2)
+                .engine("fused")
+                .beta(single_beta)
+                .elements(coeffs.elements.clone())
+                .build_factory()
+                .unwrap_err()
+        );
+        assert!(err.contains("2 element"), "{err}");
+        // xla engines stay single-element
+        let err = format!(
+            "{:#}",
+            EngineSpec::new(2)
+                .engine("xla:snap_2j8")
+                .beta(coeffs.beta.clone())
+                .elements(coeffs.elements)
+                .build_factory()
+                .unwrap_err()
+        );
+        assert!(err.contains("single-element"), "{err}");
     }
 
     #[test]
@@ -527,7 +613,13 @@ mod tests {
         let na = 8usize;
         let rij = vec![1.5; na * 2 * 3];
         let mask = vec![1.0; na * 2];
-        let t = crate::snap::TileInput { num_atoms: na, num_nbor: 2, rij: &rij, mask: &mask };
+        let t = crate::snap::TileInput {
+            num_atoms: na,
+            num_nbor: 2,
+            rij: &rij,
+            mask: &mask,
+            elems: None,
+        };
         let out = eng.compute(&t);
         assert_eq!(out.ei.len(), na);
         assert_eq!(resolution.counters.dispatches(ShapeBucket::Medium), 1);

@@ -2,7 +2,7 @@
 //! server uses to merge small requests into one engine dispatch.
 
 use crate::md::{NeighborList, Structure};
-use crate::snap::engine::{EngineError, ForceEngine, OwnedTile, TileInput, TileOutput};
+use crate::snap::engine::{EngineError, ForceEngine, OwnedTile, TileElems, TileInput, TileOutput};
 use crate::util::StageTimes;
 
 /// Packs several small tiles that share one neighbor width into a single
@@ -20,11 +20,27 @@ pub struct TileBatch {
     member_atoms: Vec<usize>,
     rij: Vec<f64>,
     mask: Vec<f64>,
+    /// Species profile, fixed by the first member: `Some(true)` = typed
+    /// members (the merged tile carries a concatenated types channel),
+    /// `Some(false)` = untyped.  Mixing profiles would silently retype
+    /// someone's tile, so it is rejected — the coalescer never merges
+    /// across profiles.
+    typed: Option<bool>,
+    ielems: Vec<i32>,
+    jelems: Vec<i32>,
 }
 
 impl TileBatch {
     pub fn new(num_nbor: usize) -> Self {
-        Self { num_nbor, member_atoms: Vec::new(), rij: Vec::new(), mask: Vec::new() }
+        Self {
+            num_nbor,
+            member_atoms: Vec::new(),
+            rij: Vec::new(),
+            mask: Vec::new(),
+            typed: None,
+            ielems: Vec::new(),
+            jelems: Vec::new(),
+        }
     }
 
     /// Number of member tiles.
@@ -41,16 +57,35 @@ impl TileBatch {
         self.member_atoms.iter().sum()
     }
 
-    /// Append one member tile (must match this batch's neighbor width).
+    /// Append one member tile (must match this batch's neighbor width and
+    /// species profile).
     pub fn push(&mut self, tile: &OwnedTile) {
         assert_eq!(
             tile.num_nbor, self.num_nbor,
             "TileBatch members must share num_nbor"
         );
         tile.as_input().validate();
+        let typed = tile.elems.is_some();
+        match self.typed {
+            None => self.typed = Some(typed),
+            Some(t) => assert_eq!(
+                t, typed,
+                "TileBatch members must share a species profile (typed vs untyped)"
+            ),
+        }
         self.member_atoms.push(tile.num_atoms);
         self.rij.extend_from_slice(&tile.rij);
         self.mask.extend_from_slice(&tile.mask);
+        if let Some(e) = &tile.elems {
+            self.ielems.extend_from_slice(&e.ielems);
+            self.jelems.extend_from_slice(&e.jelems);
+        }
+    }
+
+    /// Whether this batch carries the types channel (false until a typed
+    /// member is pushed).
+    pub fn is_typed(&self) -> bool {
+        self.typed == Some(true)
     }
 
     /// Neighbor width shared by every member.
@@ -65,6 +100,9 @@ impl TileBatch {
             num_nbor: self.num_nbor,
             rij: &self.rij,
             mask: &self.mask,
+            elems: self
+                .is_typed()
+                .then(|| TileElems { ielems: &self.ielems, jelems: &self.jelems }),
         }
     }
 
@@ -167,6 +205,12 @@ impl ForceField {
         let mut rij = vec![0.0; ta * nn * 3];
         let mut mask = vec![0.0; ta * nn];
         let mut nbr_ids: Vec<u32> = vec![0; ta * nn];
+        // the types channel rides along only for genuinely multi-element
+        // structures; single-element systems keep the legacy untyped tiles
+        // (engines resolve those to element 0)
+        let typed = s.nelems() > 1;
+        let mut ielems: Vec<i32> = vec![0; if typed { ta } else { 0 }];
+        let mut jelems: Vec<i32> = vec![0; if typed { ta * nn } else { 0 }];
 
         for tile_start in (0..n).step_by(ta) {
             let count = ta.min(n - tile_start);
@@ -174,8 +218,15 @@ impl ForceField {
             self.times.time("pack", || {
                 rij[..count * nn * 3].fill(0.0);
                 mask[..count * nn].fill(0.0);
+                if typed {
+                    // padding slots stay element 0 (in range, inert)
+                    jelems[..count * nn].fill(0);
+                }
                 for a in 0..count {
                     let atom = tile_start + a;
+                    if typed {
+                        ielems[a] = s.types[atom];
+                    }
                     for (slot, (j, d)) in nl.row(atom).enumerate() {
                         let o = (a * nn + slot) * 3;
                         rij[o] = d[0];
@@ -183,6 +234,9 @@ impl ForceField {
                         rij[o + 2] = d[2];
                         mask[a * nn + slot] = 1.0;
                         nbr_ids[a * nn + slot] = j;
+                        if typed {
+                            jelems[a * nn + slot] = s.types[j as usize];
+                        }
                     }
                 }
             });
@@ -192,6 +246,10 @@ impl ForceField {
                 num_nbor: nn,
                 rij: &rij[..count * nn * 3],
                 mask: &mask[..count * nn],
+                elems: typed.then(|| TileElems {
+                    ielems: &ielems[..count],
+                    jelems: &jelems[..count * nn],
+                }),
             };
             let (engine, scratch, times) =
                 (&mut self.engine, &mut self.scratch, &mut self.times);
@@ -316,7 +374,7 @@ mod tests {
                 }
                 mask.push(if rng.next_f64() > 0.3 { 1.0 } else { 0.0 });
             }
-            members.push(OwnedTile { num_atoms: na, num_nbor: nn, rij, mask });
+            members.push(OwnedTile { num_atoms: na, num_nbor: nn, rij, mask, elems: None });
         }
         let mut batch = TileBatch::new(nn);
         for m in &members {
@@ -341,8 +399,88 @@ mod tests {
     #[should_panic]
     fn tile_batch_rejects_mismatched_nbor_width() {
         let mut batch = TileBatch::new(3);
-        let t = OwnedTile { num_atoms: 1, num_nbor: 2, rij: vec![0.0; 6], mask: vec![0.0; 2] };
+        let t = OwnedTile {
+            num_atoms: 1,
+            num_nbor: 2,
+            rij: vec![0.0; 6],
+            mask: vec![0.0; 2],
+            elems: None,
+        };
         batch.push(&t);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tile_batch_rejects_mixed_species_profiles() {
+        use crate::snap::engine::OwnedTileElems;
+        let mut batch = TileBatch::new(2);
+        let untyped = OwnedTile {
+            num_atoms: 1,
+            num_nbor: 2,
+            rij: vec![0.0; 6],
+            mask: vec![1.0; 2],
+            elems: None,
+        };
+        let typed = OwnedTile {
+            elems: Some(OwnedTileElems { ielems: vec![0], jelems: vec![0, 0] }),
+            ..untyped.clone()
+        };
+        batch.push(&untyped);
+        batch.push(&typed); // profile mismatch must panic
+    }
+
+    #[test]
+    fn typed_tile_batch_merge_is_bitwise_identical_to_solo_eval() {
+        use crate::snap::engine::OwnedTileElems;
+        use crate::snap::variants::Variant;
+        let coeffs = SnapCoeffs::synthetic_multi(2, SnapIndex::new(2).idxb_max, 2, 5);
+        let p = coeffs.params;
+        let idx = Arc::new(SnapIndex::new(2));
+        let mut eng = Variant::Fused.build_multi(
+            p,
+            idx,
+            coeffs.beta.clone(),
+            coeffs.elements.clone(),
+        );
+        let mut rng = crate::util::XorShift::new(41);
+        let nn = 4usize;
+        let mut members = Vec::new();
+        for na in [1usize, 2, 1, 3] {
+            let mut rij = Vec::new();
+            let mut mask = Vec::new();
+            let mut ielems = Vec::new();
+            let mut jelems = Vec::new();
+            for row in 0..na * nn {
+                for _ in 0..3 {
+                    rij.push(rng.uniform(-2.0, 2.0));
+                }
+                mask.push(if rng.next_f64() > 0.3 { 1.0 } else { 0.0 });
+                jelems.push((row % 2) as i32);
+            }
+            for a in 0..na {
+                ielems.push((a % 2) as i32);
+            }
+            members.push(OwnedTile {
+                num_atoms: na,
+                num_nbor: nn,
+                rij,
+                mask,
+                elems: Some(OwnedTileElems { ielems, jelems }),
+            });
+        }
+        let mut batch = TileBatch::new(nn);
+        for m in &members {
+            batch.push(m);
+        }
+        assert!(batch.is_typed());
+        assert_eq!(batch.num_atoms(), 7);
+        let merged_out = eng.compute(&batch.input());
+        let parts = batch.split(&merged_out);
+        for (m, part) in members.iter().zip(parts.iter()) {
+            let solo = eng.compute(&m.as_input());
+            assert_eq!(solo.ei, part.ei, "typed coalescing must stay bitwise");
+            assert_eq!(solo.dedr, part.dedr);
+        }
     }
 
     #[test]

@@ -6,11 +6,18 @@
 //! compiled potential, clients submitting neighborhood batches).  Protocol:
 //!
 //! ```text
-//! request:  {"num_atoms": A, "num_nbor": N, "rij": [...3AN...], "mask": [...AN...]}\n
+//! request:  {"num_atoms": A, "num_nbor": N, "rij": [...3AN...], "mask": [...AN...],
+//!            "ielems": [...A...], "jelems": [...AN...]}\n   (types optional, paired)
 //! response: {"ok": true, "ei": [...A...], "dedr": [...3AN...]}\n
 //! control:  {"cmd": "stats"}\n  ->  {"ok": true, "stats": {...counters...}}\n
 //! errors:   {"ok": false, "error": "<json-escaped message>"}\n
 //! ```
+//!
+//! The optional `ielems`/`jelems` element-type channel (0-based element
+//! indices; omitted = every atom is element 0, byte-identical to the
+//! pre-multi-element protocol) must be present or absent together;
+//! out-of-range types come back as a structured engine `BadShape` error
+//! and bump `engine_errors`.
 //!
 //! Pipeline (the paper's hierarchical-parallelism lesson applied to the
 //! service layer):
@@ -35,7 +42,9 @@
 //! their clients disconnect.
 
 use crate::coordinator::force::TileBatch;
-use crate::snap::engine::{EngineError, EngineFactory, ForceEngine, OwnedTile, TileOutput};
+use crate::snap::engine::{
+    EngineError, EngineFactory, ForceEngine, OwnedTile, OwnedTileElems, TileOutput,
+};
 use crate::tune::{PlanCounters, PlanSelection, ShapeBucket};
 use crate::util::json::{self, Json};
 use crate::util::parallel::{num_threads, BoundedQueue, RecvTimeout};
@@ -396,6 +405,10 @@ fn coalescer_loop(
             continue;
         }
         let nn = first.tile.num_nbor;
+        // merged tiles carry one species profile: typed members only merge
+        // with typed members, untyped with untyped (TileBatch enforces the
+        // same invariant with an assert)
+        let typed = first.tile.elems.is_some();
         let mut atoms = first.tile.num_atoms;
         let mut group = vec![first];
         let deadline = Instant::now() + window;
@@ -407,7 +420,10 @@ fn coalescer_loop(
             }
             match ingress.recv_timeout(deadline - now) {
                 RecvTimeout::Item(p) => {
-                    if p.tile.num_nbor == nn && atoms + p.tile.num_atoms <= max_atoms {
+                    if p.tile.num_nbor == nn
+                        && p.tile.elems.is_some() == typed
+                        && atoms + p.tile.num_atoms <= max_atoms
+                    {
                         atoms += p.tile.num_atoms;
                         group.push(p);
                     } else if workq.send(Job::Single(p)).is_err() {
@@ -626,7 +642,21 @@ fn parse_tile(j: &Json) -> Result<OwnedTile, String> {
         .get("mask")
         .and_then(Json::as_f64_vec)
         .ok_or("missing mask")?;
-    let tile = OwnedTile { num_atoms: na, num_nbor: nn, rij, mask };
+    // the optional element-type channel: both fields or neither
+    let elems = match (j.get("ielems"), j.get("jelems")) {
+        (None, None) => None,
+        (Some(i), Some(jt)) => {
+            let ielems = i
+                .as_i32_vec()
+                .ok_or("ielems must be an array of integers")?;
+            let jelems = jt
+                .as_i32_vec()
+                .ok_or("jelems must be an array of integers")?;
+            Some(OwnedTileElems { ielems, jelems })
+        }
+        _ => return Err("ielems and jelems must be provided together".to_string()),
+    };
+    let tile = OwnedTile { num_atoms: na, num_nbor: nn, rij, mask, elems };
     tile.check_shape().map_err(|e| format!("shape mismatch: {e}"))?;
     Ok(tile)
 }

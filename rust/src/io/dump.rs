@@ -15,7 +15,7 @@ pub fn write_xyz(w: &mut dyn Write, s: &Structure, comment: &str) -> std::io::Re
     )?;
     for i in 0..n {
         let p = s.pos_of(i);
-        writeln!(w, "W {:.8} {:.8} {:.8}", p[0], p[1], p[2])?;
+        writeln!(w, "{} {:.8} {:.8} {:.8}", s.symbol_of(i), p[0], p[1], p[2])?;
     }
     Ok(())
 }

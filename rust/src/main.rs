@@ -110,10 +110,10 @@ fn print_help() {
          \x20 inspect     [--artifacts DIR]\n\
          \x20 serve       --port P [--engine NAME] [--twojmax J] [--workers N]\n\
          \x20             [--batch-window-us U] [--queue-depth D] [--max-batch-atoms A]\n\
-         \x20             [--shards S] [--plan auto|FILE|off]\n\
+         \x20             [--shards S] [--plan auto|FILE|off] [--nelems N]\n\
          \x20 tune        [--twojmax J] [--budget-ms M] [--cells C] [--reps N]\n\
          \x20             [--warmup N] [--variants a,b,c] [--shards 1,2,4]\n\
-         \x20             [--out PLAN] [--bench-out FILE]\n\
+         \x20             [--nelems N] [--out PLAN] [--bench-out FILE]\n\
          \n\
          engines: baseline V1..V7 fused aosoa pre-adjoint-atom pre-adjoint-pair\n\
          \x20        xla:snap_2j8 xla:snap_2j8_ref xla:snap_2j14 xla:snap_2j14_ref\n\
@@ -166,6 +166,7 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     let build = repro::config::EngineSpec::new(script.twojmax)
         .engine(&script.engine)
         .beta(coeffs.beta.clone())
+        .elements(coeffs.elements.clone())
         .artifacts_dir(&artifacts)
         .shards(shards)
         .plan(&plan_spec)
@@ -192,7 +193,10 @@ fn cmd_run(flags: &Flags) -> Result<()> {
         thermo_every: script.thermo,
         langevin: script.langevin,
     };
-    let mut sim = Simulation::new(structure, field, params.rcut(), cfg);
+    // neighbor lists must cover the widest per-element pair cutoff
+    // (rcutfac * 2 * max R); for the degenerate table this is rcut()
+    let cutoff = coeffs.elements.max_cutoff(params.rcutfac).max(params.rcut());
+    let mut sim = Simulation::new(structure, field, cutoff, cfg);
     let sw = Stopwatch::start();
     let stats = sim.run(steps, &mut std::io::stdout())?;
     println!(
@@ -254,13 +258,18 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     let artifacts = flags.get_or("artifacts", "artifacts".to_string())?;
     let plan_spec = flags.get_or("plan", "off".to_string())?;
     let idx = repro::snap::SnapIndex::new(twojmax);
-    let coeffs = repro::snap::coeff::SnapCoeffs::synthetic(twojmax, idx.idxb_max, 42);
+    // --nelems N serves a synthetic N-element potential (typed tiles
+    // accepted over the wire); 1 = the classic single-element server
+    let nelems = flags.get_or("nelems", 1usize)?.max(1);
+    let coeffs =
+        repro::snap::coeff::SnapCoeffs::synthetic_multi(twojmax, idx.idxb_max, nelems, 42);
     let defaults = ServeOptions::default();
     // a plan shards per bucket itself; the classic path takes --shards
     let shards = flags.get_or("shards", defaults.shards)?.max(1);
     let build = repro::config::EngineSpec::new(twojmax)
         .engine(&engine_name)
         .beta(coeffs.beta)
+        .elements(coeffs.elements.clone())
         .artifacts_dir(&artifacts)
         .shards(shards)
         .plan(&plan_spec)
@@ -312,6 +321,9 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
 fn cmd_tune(flags: &Flags) -> Result<()> {
     let twojmax = flags.get_or("twojmax", 8usize)?;
     let mut opts = repro::tune::SearchOptions::new(twojmax);
+    // tune for a multi-element deployment: candidates are timed on a typed
+    // workload and the plan key matches `serve --nelems N --plan auto`
+    opts.nelems = flags.get_or("nelems", opts.nelems)?.max(1);
     opts.budget_ms = flags.get_or("budget-ms", opts.budget_ms)?;
     opts.reps = flags.get_or("reps", opts.reps)?;
     opts.warmup = flags.get_or("warmup", opts.warmup)?;
@@ -331,10 +343,11 @@ fn cmd_tune(flags: &Flags) -> Result<()> {
     let out_path = flags.get_or("out", repro::tune::cache::default_path())?;
     let bench_out = flags.get_or("bench-out", "BENCH_tune.json".to_string())?;
 
-    let key = repro::tune::PlanKey::current(twojmax);
+    let key = repro::tune::PlanKey::current_multi(twojmax, opts.nelems);
     println!(
-        "# repro tune: 2J={twojmax} threads={} budget={}ms reps={} cells={} \
+        "# repro tune: 2J={twojmax} nelems={} threads={} budget={}ms reps={} cells={} \
          variants={:?} shards={:?}",
+        key.nelems,
         key.threads,
         opts.budget_ms,
         opts.reps,

@@ -3,7 +3,9 @@
 use super::boxpbc::SimBox;
 use crate::util::XorShift;
 
-/// Atom positions/velocities/forces + the box they live in.
+/// Atom positions/velocities/forces + the box they live in, with per-atom
+/// element types and a per-element mass/symbol table (single-element
+/// structures carry one entry and all-zero types).
 #[derive(Clone, Debug)]
 pub struct Structure {
     pub simbox: SimBox,
@@ -13,19 +15,70 @@ pub struct Structure {
     pub vel: Vec<f64>,
     /// Forces, 3*N (eV/A).
     pub force: Vec<f64>,
-    /// Atomic mass (g/mol); single species.
-    pub mass: f64,
+    /// Per-element atomic masses (g/mol), len = nelems.
+    pub masses: Vec<f64>,
+    /// Per-element symbols, len = nelems (trajectory output labels).
+    pub symbols: Vec<String>,
+    /// Per-atom element types (0-based indices into `masses`/`symbols`).
+    pub types: Vec<i32>,
 }
 
 impl Structure {
+    /// Single-element constructor (every atom is element 0).
     pub fn new(simbox: SimBox, pos: Vec<f64>, mass: f64) -> Self {
-        assert_eq!(pos.len() % 3, 0);
         let n = pos.len();
-        Self { simbox, pos, vel: vec![0.0; n], force: vec![0.0; n], mass }
+        assert_eq!(n % 3, 0);
+        Self {
+            simbox,
+            pos,
+            vel: vec![0.0; n],
+            force: vec![0.0; n],
+            masses: vec![mass],
+            symbols: vec!["W".to_string()],
+            types: vec![0; n / 3],
+        }
+    }
+
+    /// Multi-element constructor: one `(symbol, mass)` entry per element
+    /// plus a per-atom type array.
+    pub fn with_types(
+        simbox: SimBox,
+        pos: Vec<f64>,
+        masses: Vec<f64>,
+        symbols: Vec<String>,
+        types: Vec<i32>,
+    ) -> Self {
+        let n = pos.len();
+        assert_eq!(n % 3, 0);
+        assert_eq!(masses.len(), symbols.len(), "one symbol per element mass");
+        assert!(!masses.is_empty(), "need at least one element");
+        assert_eq!(types.len(), n / 3, "one type per atom");
+        assert!(
+            types.iter().all(|&t| t >= 0 && (t as usize) < masses.len()),
+            "atom types must index the element table"
+        );
+        Self { simbox, pos, vel: vec![0.0; n], force: vec![0.0; n], masses, symbols, types }
     }
 
     pub fn natoms(&self) -> usize {
         self.pos.len() / 3
+    }
+
+    /// Number of elements in this structure's table.
+    pub fn nelems(&self) -> usize {
+        self.masses.len()
+    }
+
+    /// Mass of atom `i` (g/mol).
+    #[inline]
+    pub fn mass_of(&self, i: usize) -> f64 {
+        self.masses[self.types[i] as usize]
+    }
+
+    /// Element symbol of atom `i`.
+    #[inline]
+    pub fn symbol_of(&self, i: usize) -> &str {
+        &self.symbols[self.types[i] as usize]
     }
 
     #[inline]
@@ -37,16 +90,20 @@ impl Structure {
     pub fn seed_velocities(&mut self, t_kelvin: f64, rng: &mut XorShift) {
         use super::units::{KB, MVV2E};
         let n = self.natoms();
-        // equipartition: (1/2) m v_k^2 * MVV2E = (1/2) kB T per dof
-        let sigma = (KB * t_kelvin / (self.mass * MVV2E)).sqrt();
-        for v in self.vel.iter_mut() {
-            *v = sigma * rng.normal();
+        // equipartition per atom: (1/2) m_i v_k^2 * MVV2E = (1/2) kB T
+        for i in 0..n {
+            let sigma = (KB * t_kelvin / (self.mass_of(i) * MVV2E)).sqrt();
+            for k in 0..3 {
+                self.vel[3 * i + k] = sigma * rng.normal();
+            }
         }
-        // remove center-of-mass drift
+        // remove center-of-mass drift (mass-weighted: total momentum zero)
+        let m_total: f64 = (0..n).map(|i| self.mass_of(i)).sum();
         for k in 0..3 {
-            let mean: f64 = (0..n).map(|i| self.vel[3 * i + k]).sum::<f64>() / n as f64;
+            let p: f64 = (0..n).map(|i| self.mass_of(i) * self.vel[3 * i + k]).sum();
+            let vcm = p / m_total;
             for i in 0..n {
-                self.vel[3 * i + k] -= mean;
+                self.vel[3 * i + k] -= vcm;
             }
         }
     }
@@ -72,7 +129,7 @@ impl Structure {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::md::units::{KB, MVV2E};
+    use crate::md::units::KB;
 
     #[test]
     fn seeded_velocities_have_target_temperature() {
@@ -82,17 +139,61 @@ mod tests {
         let mut rng = XorShift::new(4);
         s.seed_velocities(300.0, &mut rng);
         let n = s.natoms();
-        let ke: f64 = 0.5
-            * s.mass
-            * MVV2E
-            * s.vel.iter().map(|v| v * v).sum::<f64>();
+        let ke = crate::md::integrate::kinetic_energy(&s);
         let t = 2.0 * ke / (3.0 * n as f64 * KB);
         assert!((t - 300.0).abs() < 30.0, "T = {t}");
         // zero net momentum
         for k in 0..3 {
-            let p: f64 = (0..n).map(|i| s.vel[3 * i + k]).sum();
+            let p: f64 = (0..n).map(|i| s.mass_of(i) * s.vel[3 * i + k]).sum();
             assert!(p.abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn mixed_masses_equipartition_and_momentum() {
+        let b = SimBox::cubic(30.0);
+        let n = 2000usize;
+        let types: Vec<i32> = (0..n).map(|i| (i % 2) as i32).collect();
+        let mut s = Structure::with_types(
+            b,
+            vec![0.0; 3 * n],
+            vec![183.84, 9.012182],
+            vec!["W".into(), "Be".into()],
+            types,
+        );
+        assert_eq!(s.nelems(), 2);
+        assert_eq!(s.mass_of(0), 183.84);
+        assert_eq!(s.mass_of(1), 9.012182);
+        assert_eq!(s.symbol_of(1), "Be");
+        let mut rng = XorShift::new(9);
+        s.seed_velocities(300.0, &mut rng);
+        // total momentum (mass-weighted) vanishes even with mixed masses
+        for k in 0..3 {
+            let p: f64 = (0..n).map(|i| s.mass_of(i) * s.vel[3 * i + k]).sum();
+            assert!(p.abs() < 1e-9, "axis {k}: net momentum {p}");
+        }
+        // light atoms move faster: Be mean-square speed >> W's
+        let msv = |elem: i32| -> f64 {
+            let atoms: Vec<usize> = (0..n).filter(|&i| s.types[i] == elem).collect();
+            atoms
+                .iter()
+                .map(|&i| (0..3).map(|k| s.vel[3 * i + k].powi(2)).sum::<f64>())
+                .sum::<f64>()
+                / atoms.len() as f64
+        };
+        assert!(msv(1) > 5.0 * msv(0), "Be {} vs W {}", msv(1), msv(0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn with_types_rejects_out_of_range_types() {
+        Structure::with_types(
+            SimBox::cubic(5.0),
+            vec![0.0; 6],
+            vec![1.0],
+            vec!["W".into()],
+            vec![0, 1],
+        );
     }
 
     #[test]

@@ -18,21 +18,28 @@ impl VelocityVerlet {
     }
 
     /// First half-kick + drift.  Forces must be valid for the current
-    /// positions when this is called.
+    /// positions when this is called.  Masses are per atom, so mixed
+    /// species integrate correctly.
     pub fn initial_integrate(&self, s: &mut Structure) {
-        let dtf = 0.5 * self.dt * FTM2V / s.mass;
-        for i in 0..s.vel.len() {
-            s.vel[i] += dtf * s.force[i];
-            s.pos[i] += self.dt * s.vel[i];
+        for a in 0..s.natoms() {
+            let dtf = 0.5 * self.dt * FTM2V / s.mass_of(a);
+            for k in 0..3 {
+                let i = 3 * a + k;
+                s.vel[i] += dtf * s.force[i];
+                s.pos[i] += self.dt * s.vel[i];
+            }
         }
     }
 
     /// Second half-kick.  Forces must have been recomputed for the new
     /// positions before this is called.
     pub fn final_integrate(&self, s: &mut Structure) {
-        let dtf = 0.5 * self.dt * FTM2V / s.mass;
-        for i in 0..s.vel.len() {
-            s.vel[i] += dtf * s.force[i];
+        for a in 0..s.natoms() {
+            let dtf = 0.5 * self.dt * FTM2V / s.mass_of(a);
+            for k in 0..3 {
+                let i = 3 * a + k;
+                s.vel[i] += dtf * s.force[i];
+            }
         }
     }
 }
@@ -55,19 +62,27 @@ impl Langevin {
     /// Apply friction + noise forces (call between force compute and the
     /// final half-kick).
     pub fn apply(&mut self, s: &mut Structure, dt: f64) {
-        // friction coefficient gamma = m/damp, in (eV/A)/(A/ps)
-        let gamma = s.mass * MVV2E / self.damp;
-        // fluctuation-dissipation: sigma_F = sqrt(2 kB T gamma / dt)
-        let sigma = (2.0 * KB * self.t_target * gamma / dt).sqrt();
-        for i in 0..s.vel.len() {
-            s.force[i] += -gamma * s.vel[i] + sigma * self.rng.normal();
+        for a in 0..s.natoms() {
+            // friction coefficient gamma = m_a/damp, in (eV/A)/(A/ps)
+            let gamma = s.mass_of(a) * MVV2E / self.damp;
+            // fluctuation-dissipation: sigma_F = sqrt(2 kB T gamma / dt)
+            let sigma = (2.0 * KB * self.t_target * gamma / dt).sqrt();
+            for k in 0..3 {
+                let i = 3 * a + k;
+                s.force[i] += -gamma * s.vel[i] + sigma * self.rng.normal();
+            }
         }
     }
 }
 
-/// Kinetic energy, eV.
+/// Kinetic energy, eV (per-atom masses).
 pub fn kinetic_energy(s: &Structure) -> f64 {
-    0.5 * s.mass * MVV2E * s.vel.iter().map(|v| v * v).sum::<f64>()
+    let mut ke = 0.0;
+    for a in 0..s.natoms() {
+        let v2: f64 = (0..3).map(|k| s.vel[3 * a + k] * s.vel[3 * a + k]).sum();
+        ke += 0.5 * s.mass_of(a) * MVV2E * v2;
+    }
+    ke
 }
 
 /// Instantaneous temperature, K.

@@ -7,7 +7,7 @@
 
 use super::atoms::Structure;
 use super::boxpbc::SimBox;
-use super::units::MASS_W;
+use super::units::{MASS_BE, MASS_W};
 
 /// bcc lattice constant used for the tungsten benchmark (A).
 pub const BCC_W_LATTICE: f64 = 3.1803;
@@ -63,6 +63,52 @@ pub fn tungsten_benchmark() -> Structure {
     bcc(10, 10, 10, BCC_W_LATTICE, MASS_W)
 }
 
+/// Build a B2 (CsCl-structure) binary crystal: simple cubic with a
+/// two-atom basis — element 0 at the cell corner, element 1 at the body
+/// center.  Geometrically a bcc lattice whose two sublattices carry
+/// different species, so neighbor shells match the bcc benchmark's.
+pub fn b2(
+    nx: usize,
+    ny: usize,
+    nz: usize,
+    a: f64,
+    masses: [f64; 2],
+    symbols: [&str; 2],
+) -> Structure {
+    let simbox = SimBox::ortho([nx as f64 * a, ny as f64 * a, nz as f64 * a]);
+    let basis = [([0.0, 0.0, 0.0], 0i32), ([0.5, 0.5, 0.5], 1i32)];
+    let mut pos = Vec::with_capacity(nx * ny * nz * 2 * 3);
+    let mut types = Vec::with_capacity(nx * ny * nz * 2);
+    for ix in 0..nx {
+        for iy in 0..ny {
+            for iz in 0..nz {
+                for (b, t) in &basis {
+                    pos.push((ix as f64 + b[0]) * a);
+                    pos.push((iy as f64 + b[1]) * a);
+                    pos.push((iz as f64 + b[2]) * a);
+                    types.push(*t);
+                }
+            }
+        }
+    }
+    Structure::with_types(
+        simbox,
+        pos,
+        masses.to_vec(),
+        symbols.iter().map(|s| s.to_string()).collect(),
+        types,
+    )
+}
+
+/// The multi-element workload: a B2 W–Be alloy cell (`cells`^3 cells, 2
+/// atoms each).  The lattice constant reuses the bcc-W benchmark value so
+/// neighbor counts stay in the benchmark regime — a documented synthetic
+/// substitution (real B2 WBe is denser), consistent with the synthetic
+/// coefficients ([`crate::snap::coeff::SnapCoeffs::synthetic_multi`]).
+pub fn wbe_alloy(cells: usize) -> Structure {
+    b2(cells, cells, cells, BCC_W_LATTICE, [MASS_W, MASS_BE], ["W", "Be"])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -83,6 +129,26 @@ mod tests {
     fn benchmark_has_26_neighbors() {
         // the paper: "2000 atoms with 26 neighbors each"
         let s = tungsten_benchmark();
+        let nl = NeighborList::build_cells(&s, 4.73442);
+        for i in 0..s.natoms() {
+            assert_eq!(nl.count(i), 26, "atom {i}");
+        }
+    }
+
+    #[test]
+    fn b2_alternates_types_on_the_bcc_sites() {
+        let s = wbe_alloy(3);
+        assert_eq!(s.natoms(), 54);
+        assert_eq!(s.nelems(), 2);
+        // corner sites are W (type 0), body centers Be (type 1), half each
+        let n_be = s.types.iter().filter(|&&t| t == 1).count();
+        assert_eq!(n_be, 27);
+        assert_eq!(s.types[0], 0);
+        assert_eq!(s.types[1], 1);
+        assert_eq!(s.symbol_of(0), "W");
+        assert_eq!(s.symbol_of(1), "Be");
+        assert!((s.mass_of(1) - 9.012182).abs() < 1e-9);
+        // geometry is exactly the bcc benchmark's: same neighbor shells
         let nl = NeighborList::build_cells(&s, 4.73442);
         for i in 0..s.natoms() {
             assert_eq!(nl.count(i), 26, "atom {i}");

@@ -31,4 +31,6 @@ pub mod units {
     pub const FTM2V: f64 = 1.0 / MVV2E;
     /// Tungsten atomic mass, g/mol.
     pub const MASS_W: f64 = 183.84;
+    /// Beryllium atomic mass, g/mol (the W–Be alloy workload).
+    pub const MASS_BE: f64 = 9.012182;
 }

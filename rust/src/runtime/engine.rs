@@ -74,6 +74,14 @@ impl ForceEngine for XlaEngine {
 
     fn compute_into(&mut self, input: &TileInput, out: &mut TileOutput) -> Result<(), EngineError> {
         input.check()?;
+        // AOT artifacts are compiled for the single-element model; a typed
+        // tile would be silently mis-evaluated, so reject it loudly.
+        if input.elems.is_some() {
+            return Err(EngineError::Backend(
+                "xla artifacts are single-element; submit untyped tiles or use a native engine"
+                    .into(),
+            ));
+        }
         let (na, nn) = (input.num_atoms, input.num_nbor);
         let (ta, tn) = (self.tile_atoms, self.tile_nbor);
         if nn > tn {

@@ -30,8 +30,8 @@ use super::engine::{EngineError, ForceEngine, TileInput, TileOutput};
 use super::indices::SnapIndex;
 use super::kernels::*;
 use super::memory::{MemoryFootprint, C128, F64};
-use super::params::SnapParams;
-use super::wigner::{compute_dulist_pair, compute_ulist_pair, PairGeom};
+use super::params::{ElementTable, SnapParams};
+use super::wigner::{compute_dulist_pair, compute_ulist_pair};
 use crate::util::zero_resize;
 use std::sync::Arc;
 
@@ -50,7 +50,10 @@ pub struct AdjointConfig {
 pub struct AdjointEngine {
     pub params: SnapParams,
     pub idx: Arc<SnapIndex>,
+    /// Flattened per-element coefficient blocks:
+    /// `beta[e*idxb_max .. (e+1)*idxb_max]` is element e's block.
     pub beta: Vec<f64>,
+    pub elems: ElementTable,
     pub cfg: AdjointConfig,
     name: String,
     // staged storage (allocated per tile size on demand)
@@ -72,6 +75,7 @@ pub struct AdjointEngine {
 }
 
 impl AdjointEngine {
+    /// Single-element constructor (the degenerate [`ElementTable::single`]).
     pub fn new(
         params: SnapParams,
         idx: Arc<SnapIndex>,
@@ -79,7 +83,20 @@ impl AdjointEngine {
         cfg: AdjointConfig,
         name: impl Into<String>,
     ) -> Self {
-        assert_eq!(beta.len(), idx.idxb_max);
+        Self::new_multi(params, idx, beta, ElementTable::single(), cfg, name)
+    }
+
+    /// Multi-element constructor: `beta` holds one `idxb_max` block per
+    /// element of `elems`, in element order.
+    pub fn new_multi(
+        params: SnapParams,
+        idx: Arc<SnapIndex>,
+        beta: Vec<f64>,
+        elems: ElementTable,
+        cfg: AdjointConfig,
+        name: impl Into<String>,
+    ) -> Self {
+        assert_eq!(beta.len(), elems.nelems() * idx.idxb_max);
         let iu = idx.idxu_max;
         let iz = idx.idxz_max;
         let ib = idx.idxb_max;
@@ -87,6 +104,7 @@ impl AdjointEngine {
             params,
             idx,
             beta,
+            elems,
             cfg,
             name: name.into(),
             ulist_r: Vec::new(),
@@ -160,8 +178,9 @@ impl AdjointEngine {
     }
 
     /// compute_Y, pre-V5: nested loops with on-the-fly CG index walking
-    /// (the LAMMPS-style formulation, heavier index arithmetic).
-    fn compute_ylist_nested(&mut self, atom: usize, na: usize) {
+    /// (the LAMMPS-style formulation, heavier index arithmetic).  `boff` is
+    /// the central atom's beta-block offset.
+    fn compute_ylist_nested(&mut self, atom: usize, na: usize, boff: usize) {
         let idx = self.idx.clone();
         let iu = idx.idxu_max;
         // gather utot for this atom into scratch (layout-independent)
@@ -214,7 +233,7 @@ impl AdjointEngine {
                 jju2 -= e.j2 as i64 + 1;
                 icgb += e.j2 as i64;
             }
-            let coef = idx.yplan_fac[jjz] * self.beta[idx.yplan_jjb[jjz] as usize];
+            let coef = idx.yplan_fac[jjz] * self.beta[boff + idx.yplan_jjb[jjz] as usize];
             let jju = idx.yplan_jju[jjz] as usize;
             let dst = self.at(atom, jju, na);
             self.y_r[dst] += coef * sr;
@@ -223,7 +242,7 @@ impl AdjointEngine {
     }
 
     /// compute_Y, V5+: flat streaming over the precomputed contraction plan.
-    fn compute_ylist_collapsed(&mut self, atom: usize, na: usize) {
+    fn compute_ylist_collapsed(&mut self, atom: usize, na: usize, boff: usize) {
         let idx = self.idx.clone();
         let iu = idx.idxu_max;
         for jju in 0..iu {
@@ -252,7 +271,7 @@ impl AdjointEngine {
                     * (self.yscratch_r[u1] * self.yscratch_i[u2]
                         + self.yscratch_i[u1] * self.yscratch_r[u2]);
             }
-            let coef = idx.yplan_fac[jjz] * self.beta[idx.yplan_jjb[jjz] as usize];
+            let coef = idx.yplan_fac[jjz] * self.beta[boff + idx.yplan_jjb[jjz] as usize];
             let jju = idx.yplan_jju[jjz] as usize;
             let dst = self.at(atom, jju, na);
             self.y_r[dst] += coef * sr;
@@ -334,8 +353,10 @@ impl ForceEngine for AdjointEngine {
 
     fn compute_into(&mut self, input: &TileInput, out: &mut TileOutput) -> Result<(), EngineError> {
         input.check()?;
+        input.check_elems(self.elems.nelems())?;
         let (na, nn) = (input.num_atoms, input.num_nbor);
         let iu = self.idx.idxu_max;
+        let ib = self.idx.idxb_max;
         self.ensure_capacity(na, nn);
         out.reset(na, nn);
         let p = self.params;
@@ -369,7 +390,7 @@ impl ForceEngine for AdjointEngine {
                     ui.fill(0.0);
                     continue;
                 }
-                let g = PairGeom::new(input.rij_of(atom, nbor), &p);
+                let g = pair_geom(input, atom, nbor, &p, &self.elems);
                 compute_ulist_pair(&g, &idx, ur, ui);
                 // accumulate (strided when layout_atom_fastest && !transpose)
                 if self.cfg.layout_atom_fastest && !self.cfg.transpose_utot {
@@ -406,10 +427,11 @@ impl ForceEngine for AdjointEngine {
 
         // ---- compute_Y (ylist zeroed by ensure_capacity) ----
         for atom in 0..na {
+            let boff = input.elem_of(atom) * ib;
             if self.cfg.collapsed_y {
-                self.compute_ylist_collapsed(atom, na);
+                self.compute_ylist_collapsed(atom, na, boff);
             } else {
-                self.compute_ylist_nested(atom, na);
+                self.compute_ylist_nested(atom, na, boff);
             }
         }
 
@@ -433,7 +455,8 @@ impl ForceEngine for AdjointEngine {
                 &idx, &self.yscratch_r, &self.yscratch_i, &self.z_r, &self.z_i,
                 &mut self.blist,
             );
-            out.ei[atom] = energy_from_blist(&self.blist, &self.beta);
+            let boff = input.elem_of(atom) * ib;
+            out.ei[atom] = energy_from_blist(&self.blist, &self.beta[boff..boff + ib]);
         }
 
         // ---- compute_dU (stored) ----
@@ -446,7 +469,7 @@ impl ForceEngine for AdjointEngine {
                 self.dulist_i[base..base + iu * 3].fill(0.0);
                 continue;
             }
-            let g = PairGeom::new(input.rij_of(atom, nbor), &p);
+            let g = pair_geom(input, atom, nbor, &p, &self.elems);
             // ulist for this pair is already stored (recursion input)
             let (ur, ui) = (
                 &self.ulist_r[pair * iu..(pair + 1) * iu],
@@ -561,7 +584,7 @@ mod tests {
         let mut rng = XorShift::new(17);
         let beta: Vec<f64> = (0..idx.idxb_max).map(|_| rng.normal()).collect();
         let (rij, mask) = random_tile(&mut rng, 3, 6, &p);
-        let inp = TileInput { num_atoms: 3, num_nbor: 6, rij: &rij, mask: &mask };
+        let inp = TileInput { num_atoms: 3, num_nbor: 6, rij: &rij, mask: &mask, elems: None };
         let mut base =
             BaselineEngine::new(p, idx.clone(), beta.clone(), Staging::Monolithic);
         let ref_out = base.compute(&inp);
@@ -612,6 +635,7 @@ mod tests {
                 num_nbor: nn,
                 rij: &rij,
                 mask: &mask,
+                elems: None,
             });
             assert_eq!(out.ei.len(), na);
             assert_eq!(out.dedr.len(), na * nn * 3);

@@ -20,8 +20,8 @@ use super::engine::{EngineError, ForceEngine, TileInput, TileOutput};
 use super::indices::SnapIndex;
 use super::kernels::*;
 use super::memory::{MemoryFootprint, C128, F64};
-use super::params::SnapParams;
-use super::wigner::{compute_dulist_pair, compute_ulist_pair, PairGeom};
+use super::params::{ElementTable, SnapParams};
+use super::wigner::{compute_dulist_pair, compute_ulist_pair};
 use std::sync::Arc;
 
 /// How the Listing-1 pipeline is staged across atoms (Fig. 1 variants).
@@ -39,7 +39,10 @@ pub enum Staging {
 pub struct BaselineEngine {
     pub params: SnapParams,
     pub idx: Arc<SnapIndex>,
+    /// Flattened per-element coefficient blocks:
+    /// `beta[e*idxb_max .. (e+1)*idxb_max]` is element e's block.
     pub beta: Vec<f64>,
+    pub elems: ElementTable,
     pub staging: Staging,
     // scratch (monolithic mode reuses these across atoms)
     u_r: Vec<f64>,
@@ -55,13 +58,30 @@ pub struct BaselineEngine {
 }
 
 impl BaselineEngine {
+    /// Single-element constructor (the degenerate [`ElementTable::single`]).
     pub fn new(
         params: SnapParams,
         idx: Arc<SnapIndex>,
         beta: Vec<f64>,
         staging: Staging,
     ) -> Self {
-        assert_eq!(beta.len(), idx.idxb_max, "beta length != num bispectrum");
+        Self::new_multi(params, idx, beta, ElementTable::single(), staging)
+    }
+
+    /// Multi-element constructor: `beta` holds one `idxb_max` block per
+    /// element of `elems`, in element order.
+    pub fn new_multi(
+        params: SnapParams,
+        idx: Arc<SnapIndex>,
+        beta: Vec<f64>,
+        elems: ElementTable,
+        staging: Staging,
+    ) -> Self {
+        assert_eq!(
+            beta.len(),
+            elems.nelems() * idx.idxb_max,
+            "beta length != nelems x num bispectrum"
+        );
         let iu = idx.idxu_max;
         let iz = idx.idxz_max;
         let ib = idx.idxb_max;
@@ -69,6 +89,7 @@ impl BaselineEngine {
             params,
             idx,
             beta,
+            elems,
             staging,
             u_r: vec![0.0; iu],
             u_i: vec![0.0; iu],
@@ -126,7 +147,9 @@ impl ForceEngine for BaselineEngine {
 
     fn compute_into(&mut self, input: &TileInput, out: &mut TileOutput) -> Result<(), EngineError> {
         input.check()?;
+        input.check_elems(self.elems.nelems())?;
         let (na, nn) = (input.num_atoms, input.num_nbor);
+        let ib = self.idx.idxb_max;
         out.reset(na, nn);
         // All staging modes compute identical numbers; staging changes only
         // which intermediates persist (modelled in footprint()).  The
@@ -134,12 +157,13 @@ impl ForceEngine for BaselineEngine {
         for atom in 0..na {
             // compute_U (+ Ulisttot)
             let p = self.params;
+            let boff = input.elem_of(atom) * ib;
             init_utot(&self.idx, &p, &mut self.ut_r, &mut self.ut_i);
             for nbor in 0..nn {
                 if !input.is_real(atom, nbor) {
                     continue;
                 }
-                let g = PairGeom::new(input.rij_of(atom, nbor), &p);
+                let g = pair_geom(input, atom, nbor, &p, &self.elems);
                 compute_ulist_pair(&g, &self.idx, &mut self.u_r, &mut self.u_i);
                 accumulate_utot(
                     g.sfac, &self.u_r, &self.u_i, &mut self.ut_r, &mut self.ut_i,
@@ -154,13 +178,13 @@ impl ForceEngine for BaselineEngine {
                 &self.idx, &self.ut_r, &self.ut_i, &self.z_r, &self.z_i,
                 &mut self.blist,
             );
-            out.ei[atom] = energy_from_blist(&self.blist, &self.beta);
+            out.ei[atom] = energy_from_blist(&self.blist, &self.beta[boff..boff + ib]);
             // per neighbor: compute_dU -> compute_dB -> update_forces
             for nbor in 0..nn {
                 if !input.is_real(atom, nbor) {
                     continue;
                 }
-                let g = PairGeom::new(input.rij_of(atom, nbor), &p);
+                let g = pair_geom(input, atom, nbor, &p, &self.elems);
                 compute_ulist_pair(&g, &self.idx, &mut self.u_r, &mut self.u_i);
                 compute_dulist_pair(
                     &g, &self.idx, &self.u_r, &self.u_i, &mut self.du_r,
@@ -170,8 +194,8 @@ impl ForceEngine for BaselineEngine {
                 let o = (atom * nn + nbor) * 3;
                 for k in 0..3 {
                     let mut s = 0.0;
-                    for l in 0..self.idx.idxb_max {
-                        s += self.beta[l] * self.dblist[l * 3 + k];
+                    for l in 0..ib {
+                        s += self.beta[boff + l] * self.dblist[l * 3 + k];
                     }
                     out.dedr[o + k] = s;
                 }
@@ -265,7 +289,8 @@ mod tests {
         let beta: Vec<f64> = (0..idx.idxb_max).map(|_| rng.normal()).collect();
         let (mut rij, mask) = small_input(&mut rng, 2, 5, &p);
         let mut eng = BaselineEngine::new(p, idx, beta, Staging::Monolithic);
-        let inp = TileInput { num_atoms: 2, num_nbor: 5, rij: &rij.clone(), mask: &mask };
+        let rij0 = rij.clone();
+        let inp = TileInput { num_atoms: 2, num_nbor: 5, rij: &rij0, mask: &mask, elems: None };
         let out = eng.compute(&inp);
 
         let h = 1e-6;
@@ -278,13 +303,25 @@ mod tests {
             let orig = rij[o];
             rij[o] = orig + h;
             let ep: f64 = eng
-                .compute(&TileInput { num_atoms: 2, num_nbor: 5, rij: &rij, mask: &mask })
+                .compute(&TileInput {
+                    num_atoms: 2,
+                    num_nbor: 5,
+                    rij: &rij,
+                    mask: &mask,
+                    elems: None,
+                })
                 .ei
                 .iter()
                 .sum();
             rij[o] = orig - h;
             let em: f64 = eng
-                .compute(&TileInput { num_atoms: 2, num_nbor: 5, rij: &rij, mask: &mask })
+                .compute(&TileInput {
+                    num_atoms: 2,
+                    num_nbor: 5,
+                    rij: &rij,
+                    mask: &mask,
+                    elems: None,
+                })
                 .ei
                 .iter()
                 .sum();
@@ -307,7 +344,13 @@ mod tests {
         let (rij, mut mask) = small_input(&mut rng, 2, 4, &p);
         mask[3] = 0.0;
         let mut eng = BaselineEngine::new(p, idx, beta, Staging::Monolithic);
-        let out = eng.compute(&TileInput { num_atoms: 2, num_nbor: 4, rij: &rij, mask: &mask });
+        let out = eng.compute(&TileInput {
+            num_atoms: 2,
+            num_nbor: 4,
+            rij: &rij,
+            mask: &mask,
+            elems: None,
+        });
         for k in 0..3 {
             assert_eq!(out.dedr[3 * 3 + k], 0.0);
         }

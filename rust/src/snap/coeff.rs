@@ -1,44 +1,119 @@
 //! LAMMPS `.snapcoeff` / `.snapparam` file support + synthetic coefficients.
 //!
-//! The real tungsten coefficient file (W_2940_2017.2.snapcoeff) is not
-//! redistributable inside this environment, so the default potential uses
-//! deterministic *synthetic* coefficients (a documented substitution):
-//! energies/forces are linear in beta, so every
-//! correctness property and every performance result is beta-independent.
-//! The parser accepts the genuine LAMMPS format, so a real file drops in.
+//! The real coefficient files (W_2940_2017.2.snapcoeff, WBe_Wood_PRB2019)
+//! are not redistributable inside this environment, so the default
+//! potentials use deterministic *synthetic* coefficients (a documented
+//! substitution): energies/forces are linear in beta, so every correctness
+//! property and every performance result is beta-independent.  The parser
+//! accepts the genuine LAMMPS format — single- or multi-element — so a
+//! real file drops in.
+//!
+//! Multi-element layout: the `.snapcoeff` header is `nelem ncoeff`,
+//! followed by one block per element — an `element R w` line (cutoff
+//! radius factor + density weight, see
+//! [`ElementTable`](crate::snap::params::ElementTable)) and exactly
+//! `ncoeff` coefficient values (the first is that element's constant
+//! shift, the rest its linear beta block).
 
-use super::params::SnapParams;
+use super::params::{ElementTable, SnapParams};
 use crate::util::XorShift;
 use anyhow::{bail, Context, Result};
 
-/// A parsed SNAP potential: hyper-parameters + linear coefficients.
+/// A parsed SNAP potential: hyper-parameters, per-element tables, and
+/// per-element linear coefficient blocks.
 #[derive(Clone, Debug)]
 pub struct SnapCoeffs {
     pub params: SnapParams,
-    /// The energy shift coefficient (beta_0 in LAMMPS files).
-    pub coeff0: f64,
-    /// Linear coefficients, one per bispectrum component.
+    /// Per-element `(symbol, radius, weight)` tables.
+    pub elements: ElementTable,
+    /// Per-element energy shift coefficients (beta_0), len = nelems.
+    pub coeff0: Vec<f64>,
+    /// Flattened per-element linear coefficients:
+    /// `beta[e*k .. (e+1)*k]` is element e's block (k per-element
+    /// bispectrum components).
     pub beta: Vec<f64>,
-    pub element: String,
 }
 
 impl SnapCoeffs {
-    /// Deterministic synthetic coefficients for a given problem size.
+    pub fn nelems(&self) -> usize {
+        self.elements.nelems()
+    }
+
+    /// Bispectrum components per element block.
+    pub fn ncoeff_per_elem(&self) -> usize {
+        self.beta.len() / self.nelems()
+    }
+
+    /// Element e's linear coefficient block.
+    pub fn beta_block(&self, e: usize) -> &[f64] {
+        let k = self.ncoeff_per_elem();
+        &self.beta[e * k..(e + 1) * k]
+    }
+
+    /// Deterministic synthetic single-element coefficients for a given
+    /// problem size (the paper's tungsten workload shape).
     ///
     /// Magnitudes decay with component index (higher-order bispectrum
     /// components describe finer density detail and carry smaller weights
     /// in fitted potentials); the overall scale keeps forces O(1) eV/A for
     /// the benchmark lattice.
     pub fn synthetic(twojmax: usize, num_bispectrum: usize, seed: u64) -> Self {
-        let mut rng = XorShift::new(seed);
-        let beta = (0..num_bispectrum)
-            .map(|l| 0.05 * rng.normal() / (1.0 + l as f64).sqrt())
-            .collect();
+        Self::synthetic_multi(twojmax, num_bispectrum, 1, seed)
+    }
+
+    /// Deterministic synthetic multi-element coefficients: one decaying
+    /// block per element (element e's block is drawn from a seed offset by
+    /// e, so blocks differ but element 0 matches [`synthetic`](Self::synthetic)
+    /// exactly), with per-element `(radius, weight)` tables.  Element 0 is
+    /// always the degenerate tungsten entry `(0.5, 1.0)`, so an all-types-0
+    /// tile on a synthetic multi-element potential is bit-identical to the
+    /// single-element path.
+    pub fn synthetic_multi(
+        twojmax: usize,
+        num_bispectrum: usize,
+        nelems: usize,
+        seed: u64,
+    ) -> Self {
+        let nelems = nelems.max(1);
+        // (symbol, R, w) palette: W is the degenerate entry; Be carries the
+        // WBe_Wood_PRB2019-style radius/weight so mixed pairs genuinely
+        // exercise shorter cutoffs and sub-unit density weights.
+        const PALETTE: [(&str, f64, f64); 4] = [
+            ("W", 0.5, 1.0),
+            ("Be", 0.417932, 0.959049),
+            ("Mo", 0.46, 0.98),
+            ("Ta", 0.48, 0.99),
+        ];
+        let mut symbols = Vec::with_capacity(nelems);
+        let mut radii = Vec::with_capacity(nelems);
+        let mut weights = Vec::with_capacity(nelems);
+        for e in 0..nelems {
+            if let Some(&(sym, r, w)) = PALETTE.get(e) {
+                symbols.push(sym.to_string());
+                radii.push(r);
+                weights.push(w);
+            } else {
+                // beyond the palette: strictly decreasing, pairwise-distinct
+                // entries (asymptotes 0.25 / 0.9) so no two synthetic
+                // species ever alias each other's pair-cutoff physics
+                let k = (e - 2) as f64;
+                symbols.push(format!("E{e}"));
+                radii.push(0.25 + 0.25 / k);
+                weights.push(0.9 + 0.05 / k);
+            }
+        }
+        let mut beta = Vec::with_capacity(nelems * num_bispectrum);
+        for e in 0..nelems {
+            let mut rng = XorShift::new(seed.wrapping_add(7919 * e as u64));
+            beta.extend(
+                (0..num_bispectrum).map(|l| 0.05 * rng.normal() / (1.0 + l as f64).sqrt()),
+            );
+        }
         Self {
             params: SnapParams::with_twojmax(twojmax),
-            coeff0: 0.0,
+            elements: ElementTable { symbols, radii, weights },
+            coeff0: vec![0.0; nelems],
             beta,
-            element: "W".to_string(),
         }
     }
 
@@ -49,40 +124,117 @@ impl SnapCoeffs {
     /// element R w
     /// coeff0
     /// coeff1 ... coeff_{ncoeff-1}
+    /// element2 R2 w2       # (multi-element files: one block per element)
+    /// ...
     /// ```
-    /// Single-element files only (the paper's benchmark is elemental W).
+    /// Strict: every element block must carry exactly `ncoeff` values, and
+    /// trailing garbage after the last block is an error.
     pub fn parse_snapcoeff(text: &str, params: SnapParams) -> Result<Self> {
-        let mut lines = text
+        let lines: Vec<&str> = text
             .lines()
             .map(|l| l.trim())
-            .filter(|l| !l.is_empty() && !l.starts_with('#'));
-        let header = lines.next().context("missing header line")?;
+            .filter(|l| !l.is_empty() && !l.starts_with('#'))
+            .collect();
+        let mut cursor = lines.iter();
+        let header = cursor.next().context("missing header line")?;
         let mut it = header.split_whitespace();
-        let nelem: usize = it.next().context("missing nelem")?.parse()?;
-        let ncoeff: usize = it.next().context("missing ncoeff")?.parse()?;
-        if nelem != 1 {
-            bail!("only single-element SNAP supported (got nelem={nelem})");
-        }
-        let elem_line = lines.next().context("missing element line")?;
-        let element = elem_line
-            .split_whitespace()
+        let nelem: usize = it
             .next()
-            .context("missing element symbol")?
-            .to_string();
-        let mut vals = Vec::with_capacity(ncoeff);
-        for line in lines {
-            for tok in line.split_whitespace() {
-                vals.push(tok.parse::<f64>().with_context(|| format!("bad coeff {tok}"))?);
+            .context("missing nelem")?
+            .parse()
+            .with_context(|| format!("bad nelem in header `{header}`"))?;
+        let ncoeff: usize = it
+            .next()
+            .context("missing ncoeff")?
+            .parse()
+            .with_context(|| format!("bad ncoeff in header `{header}`"))?;
+        if nelem == 0 || ncoeff == 0 {
+            bail!("header `{header}`: nelem and ncoeff must be >= 1");
+        }
+
+        let mut symbols = Vec::with_capacity(nelem);
+        let mut radii = Vec::with_capacity(nelem);
+        let mut weights = Vec::with_capacity(nelem);
+        let mut coeff0 = Vec::with_capacity(nelem);
+        let mut beta = Vec::with_capacity(nelem * (ncoeff - 1));
+        for e in 0..nelem {
+            let elem_line = cursor
+                .next()
+                .with_context(|| format!("missing element line for element {}", e + 1))?;
+            let mut toks = elem_line.split_whitespace();
+            let symbol = toks
+                .next()
+                .with_context(|| format!("element {}: missing symbol", e + 1))?
+                .to_string();
+            let radius: f64 = toks
+                .next()
+                .with_context(|| {
+                    format!("element `{symbol}`: line must be `symbol R w`, got `{elem_line}`")
+                })?
+                .parse()
+                .with_context(|| format!("element `{symbol}`: bad radius"))?;
+            let weight: f64 = toks
+                .next()
+                .with_context(|| {
+                    format!("element `{symbol}`: line must be `symbol R w`, got `{elem_line}`")
+                })?
+                .parse()
+                .with_context(|| format!("element `{symbol}`: bad weight"))?;
+            let mut vals = Vec::with_capacity(ncoeff);
+            while vals.len() < ncoeff {
+                let line = cursor.next().with_context(|| {
+                    format!(
+                        "element `{symbol}`: expected {ncoeff} coefficients, found {}",
+                        vals.len()
+                    )
+                })?;
+                for tok in line.split_whitespace() {
+                    let v: f64 = tok.parse().with_context(|| {
+                        format!(
+                            "element `{symbol}`: bad coefficient `{tok}` \
+                             (expected {ncoeff} values, read {})",
+                            vals.len()
+                        )
+                    })?;
+                    vals.push(v);
+                }
             }
+            if vals.len() != ncoeff {
+                bail!(
+                    "element `{symbol}`: coefficient block has {} values, expected {ncoeff}",
+                    vals.len()
+                );
+            }
+            symbols.push(symbol);
+            radii.push(radius);
+            weights.push(weight);
+            coeff0.push(vals[0]);
+            beta.extend_from_slice(&vals[1..]);
         }
-        if vals.len() != ncoeff {
-            bail!("expected {ncoeff} coefficients, found {}", vals.len());
+        if let Some(extra) = cursor.next() {
+            bail!("trailing garbage after {nelem} element block(s): `{extra}`");
         }
-        Ok(Self { params, coeff0: vals[0], beta: vals[1..].to_vec(), element })
+        let elements = ElementTable::new(symbols, radii, weights)?;
+        Ok(Self { params, elements, coeff0, beta })
     }
 
     /// Parse the LAMMPS `.snapparam` format (key value lines).
+    /// Unrecognized keys are a hard error listing the valid keys, so a
+    /// typo'd or unsupported file fails loudly instead of silently running
+    /// with defaults (mirroring the unknown-engine diagnostic).
     pub fn parse_snapparam(text: &str) -> Result<SnapParams> {
+        const VALID_KEYS: &[&str] = &[
+            "twojmax",
+            "rcutfac",
+            "rfac0",
+            "rmin0",
+            "switchflag",
+            "bzeroflag",
+            "quadraticflag",
+            "chemflag",
+            "bnormflag",
+            "wselfallflag",
+        ];
         let mut p = SnapParams::default();
         for line in text.lines() {
             let line = line.trim();
@@ -108,24 +260,34 @@ impl SnapCoeffs {
                             | ("chemflag", 0) | ("bnormflag", 0) | ("wselfallflag", 0)
                     );
                     if !default_ok {
-                        bail!("unsupported {key} = {val} (single-element SNAP only)");
+                        bail!("unsupported {key} = {val} (only the LAMMPS defaults are supported)");
                     }
                 }
-                _ => bail!("unknown snapparam key {key}"),
+                other => bail!(
+                    "unknown snapparam key `{other}` — valid keys: {}",
+                    VALID_KEYS.join(", ")
+                ),
             }
         }
         Ok(p)
     }
 
-    /// Serialize to the `.snapcoeff` format (round-trip support).
+    /// Serialize to the `.snapcoeff` format (round-trip support), one block
+    /// per element.
     pub fn to_snapcoeff(&self) -> String {
+        let k = self.ncoeff_per_elem();
         let mut s = String::new();
         s.push_str("# SNAP coefficients (synthetic reproduction potential)\n");
-        s.push_str(&format!("1 {}\n", self.beta.len() + 1));
-        s.push_str(&format!("{} 0.5 1.0\n", self.element));
-        s.push_str(&format!("{:.17e}\n", self.coeff0));
-        for b in &self.beta {
-            s.push_str(&format!("{b:.17e}\n"));
+        s.push_str(&format!("{} {}\n", self.nelems(), k + 1));
+        for e in 0..self.nelems() {
+            s.push_str(&format!(
+                "{} {} {}\n",
+                self.elements.symbols[e], self.elements.radii[e], self.elements.weights[e]
+            ));
+            s.push_str(&format!("{:.17e}\n", self.coeff0[e]));
+            for b in self.beta_block(e) {
+                s.push_str(&format!("{b:.17e}\n"));
+            }
         }
         s
     }
@@ -147,27 +309,102 @@ mod tests {
     }
 
     #[test]
+    fn synthetic_multi_blocks_differ_but_element_zero_matches_single() {
+        let single = SnapCoeffs::synthetic(8, 55, 42);
+        let multi = SnapCoeffs::synthetic_multi(8, 55, 2, 42);
+        assert_eq!(multi.nelems(), 2);
+        assert_eq!(multi.beta.len(), 110);
+        assert_eq!(multi.ncoeff_per_elem(), 55);
+        // element 0's block is bit-identical to the single-element potential
+        assert_eq!(multi.beta_block(0), &single.beta[..]);
+        // element 1's block is a different draw
+        assert_ne!(multi.beta_block(0), multi.beta_block(1));
+        // the degenerate element-0 table: W (0.5, 1.0); Be is non-trivial
+        assert_eq!(multi.elements.symbols, vec!["W", "Be"]);
+        assert_eq!(multi.elements.radii[0], 0.5);
+        assert_eq!(multi.elements.weights[0], 1.0);
+        assert!(multi.elements.radii[1] < 0.5);
+        assert!(multi.elements.weights[1] < 1.0);
+        // beyond the palette every species still gets its own (R, w): no
+        // two entries alias each other's pair-cutoff physics
+        let wide = SnapCoeffs::synthetic_multi(2, 5, 7, 42);
+        for a in 0..7 {
+            for b in (a + 1)..7 {
+                assert_ne!(
+                    wide.elements.radii[a], wide.elements.radii[b],
+                    "elements {a}/{b} share a radius"
+                );
+            }
+            assert!(wide.elements.radii[a] > 0.0 && wide.elements.weights[a] > 0.0);
+        }
+    }
+
+    #[test]
     fn snapcoeff_roundtrip() {
         let c = SnapCoeffs::synthetic(8, 55, 7);
         let text = c.to_snapcoeff();
         let back = SnapCoeffs::parse_snapcoeff(&text, c.params).unwrap();
         assert_eq!(back.beta.len(), 55);
-        assert_eq!(back.element, "W");
+        assert_eq!(back.elements.symbols, vec!["W"]);
         for (x, y) in c.beta.iter().zip(back.beta.iter()) {
             assert!((x - y).abs() < 1e-15);
         }
     }
 
     #[test]
-    fn snapcoeff_rejects_multielement() {
-        let text = "2 3\nW 0.5 1.0\n1\n2\n3\nMo 0.5 1.0\n1\n2\n3\n";
-        assert!(SnapCoeffs::parse_snapcoeff(text, SnapParams::default()).is_err());
+    fn snapcoeff_multi_roundtrip() {
+        let c = SnapCoeffs::synthetic_multi(2, 5, 2, 11);
+        let text = c.to_snapcoeff();
+        let back = SnapCoeffs::parse_snapcoeff(&text, c.params).unwrap();
+        assert_eq!(back.nelems(), 2);
+        assert_eq!(back.elements, c.elements);
+        assert_eq!(back.coeff0, c.coeff0);
+        assert_eq!(back.beta.len(), c.beta.len());
+        for (x, y) in c.beta.iter().zip(back.beta.iter()) {
+            assert!((x - y).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn snapcoeff_parses_two_element_blocks() {
+        let text = "2 3\nW 0.5 1.0\n1\n2\n3\nMo 0.46 0.98\n4\n5\n6\n";
+        let c = SnapCoeffs::parse_snapcoeff(text, SnapParams::default()).unwrap();
+        assert_eq!(c.nelems(), 2);
+        assert_eq!(c.elements.symbols, vec!["W", "Mo"]);
+        assert_eq!(c.coeff0, vec![1.0, 4.0]);
+        assert_eq!(c.beta, vec![2.0, 3.0, 5.0, 6.0]);
+        assert_eq!(c.beta_block(1), &[5.0, 6.0]);
     }
 
     #[test]
     fn snapcoeff_rejects_count_mismatch() {
         let text = "1 4\nW 0.5 1.0\n0.0\n1.0\n";
-        assert!(SnapCoeffs::parse_snapcoeff(text, SnapParams::default()).is_err());
+        let err =
+            format!("{:#}", SnapCoeffs::parse_snapcoeff(text, SnapParams::default()).unwrap_err());
+        assert!(err.contains("expected 4 coefficients"), "{err}");
+    }
+
+    #[test]
+    fn snapcoeff_rejects_short_second_block_and_trailing_garbage() {
+        // second element block runs out of values
+        let short = "2 3\nW 0.5 1.0\n1\n2\n3\nMo 0.46 0.98\n4\n5\n";
+        let err =
+            format!("{:#}", SnapCoeffs::parse_snapcoeff(short, SnapParams::default()).unwrap_err());
+        assert!(err.contains("Mo"), "{err}");
+        // extra values after the declared blocks
+        let trailing = "1 3\nW 0.5 1.0\n1\n2\n3\n4\n";
+        let err = format!(
+            "{:#}",
+            SnapCoeffs::parse_snapcoeff(trailing, SnapParams::default()).unwrap_err()
+        );
+        assert!(err.contains("trailing garbage"), "{err}");
+        // a malformed element line is named, not absorbed into coefficients
+        let badline = "1 2\nW 0.5\n1\n2\n";
+        let err = format!(
+            "{:#}",
+            SnapCoeffs::parse_snapcoeff(badline, SnapParams::default()).unwrap_err()
+        );
+        assert!(err.contains("symbol R w"), "{err}");
     }
 
     #[test]
@@ -182,6 +419,14 @@ mod tests {
     fn snapparam_rejects_unsupported_flags() {
         assert!(SnapCoeffs::parse_snapparam("chemflag 1\n").is_err());
         assert!(SnapCoeffs::parse_snapparam("quadraticflag 1\n").is_err());
-        assert!(SnapCoeffs::parse_snapparam("nonsense 3\n").is_err());
+    }
+
+    #[test]
+    fn snapparam_unknown_key_error_lists_valid_keys() {
+        let err = format!("{:#}", SnapCoeffs::parse_snapparam("nonsense 3\n").unwrap_err());
+        assert!(err.contains("nonsense"), "{err}");
+        for key in ["twojmax", "rcutfac", "rfac0", "rmin0", "switchflag", "bzeroflag"] {
+            assert!(err.contains(key), "missing {key}: {err}");
+        }
     }
 }

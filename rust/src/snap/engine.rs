@@ -38,6 +38,23 @@ impl std::fmt::Display for EngineError {
 
 impl std::error::Error for EngineError {}
 
+/// The optional element-type channel of a tile: 0-based element indices
+/// into the potential's [`ElementTable`](crate::snap::params::ElementTable).
+///
+/// * `ielems[atom]` — element of each central atom row (selects the beta
+///   block and contributes `R_i` to pair cutoffs);
+/// * `jelems[atom*num_nbor + nbor]` — element of each neighbor slot
+///   (contributes `R_j` and the density weight `w_j`).  Padding slots must
+///   carry an in-range value (use 0); they stay inert either way.
+///
+/// `None` on [`TileInput::elems`] is the legacy single-element path: every
+/// atom and neighbor is element 0.
+#[derive(Clone, Copy, Debug)]
+pub struct TileElems<'a> {
+    pub ielems: &'a [i32],
+    pub jelems: &'a [i32],
+}
+
 /// One padded tile of work: `num_atoms * num_nbor` displacement rows.
 #[derive(Clone, Copy, Debug)]
 pub struct TileInput<'a> {
@@ -47,6 +64,8 @@ pub struct TileInput<'a> {
     pub rij: &'a [f64],
     /// 1.0 = real neighbor, 0.0 = padding; len = num_atoms*num_nbor.
     pub mask: &'a [f64],
+    /// Optional element types; `None` = legacy single-element tile.
+    pub elems: Option<TileElems<'a>>,
 }
 
 impl<'a> TileInput<'a> {
@@ -73,6 +92,46 @@ impl<'a> TileInput<'a> {
                 self.mask.len()
             )));
         }
+        if let Some(e) = self.elems {
+            if e.ielems.len() != self.num_atoms {
+                return Err(EngineError::BadShape(format!(
+                    "ielems has {} values, expected num_atoms = {}",
+                    e.ielems.len(),
+                    self.num_atoms
+                )));
+            }
+            if e.jelems.len() != rows {
+                return Err(EngineError::BadShape(format!(
+                    "jelems has {} values, expected num_atoms*num_nbor = {rows}",
+                    e.jelems.len()
+                )));
+            }
+            if let Some(&t) = e.ielems.iter().chain(e.jelems.iter()).find(|&&t| t < 0) {
+                return Err(EngineError::BadShape(format!(
+                    "negative element type {t} in the types channel"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate the type channel against a potential's element count —
+    /// every engine's second check after [`check`](Self::check), since only
+    /// the engine knows its [`ElementTable`](crate::snap::params::ElementTable).
+    /// Untyped tiles always pass (they resolve to element 0, which every
+    /// table has).
+    pub fn check_elems(&self, nelems: usize) -> Result<(), EngineError> {
+        let Some(e) = self.elems else { return Ok(()) };
+        if let Some(&t) = e
+            .ielems
+            .iter()
+            .chain(e.jelems.iter())
+            .find(|&&t| t as usize >= nelems)
+        {
+            return Err(EngineError::BadShape(format!(
+                "element type {t} out of range for a {nelems}-element potential"
+            )));
+        }
         Ok(())
     }
 
@@ -93,6 +152,32 @@ impl<'a> TileInput<'a> {
     pub fn is_real(&self, atom: usize, nbor: usize) -> bool {
         self.mask[atom * self.num_nbor + nbor] > 0.5
     }
+
+    /// Element of a central atom row (0 on untyped tiles).
+    #[inline]
+    pub fn elem_of(&self, atom: usize) -> usize {
+        self.elems.map_or(0, |e| e.ielems[atom] as usize)
+    }
+
+    /// `(central, neighbor)` elements of one pair (`(0, 0)` on untyped
+    /// tiles).
+    #[inline]
+    pub fn pair_elems(&self, atom: usize, nbor: usize) -> (usize, usize) {
+        match self.elems {
+            None => (0, 0),
+            Some(e) => (
+                e.ielems[atom] as usize,
+                e.jelems[atom * self.num_nbor + nbor] as usize,
+            ),
+        }
+    }
+}
+
+/// Owned twin of [`TileElems`] for tiles that cross thread boundaries.
+#[derive(Clone, Debug)]
+pub struct OwnedTileElems {
+    pub ielems: Vec<i32>,
+    pub jelems: Vec<i32>,
 }
 
 /// An owned tile — the borrow-free twin of [`TileInput`], used where tiles
@@ -105,6 +190,8 @@ pub struct OwnedTile {
     pub rij: Vec<f64>,
     /// 1.0 = real neighbor, 0.0 = padding; len = num_atoms*num_nbor.
     pub mask: Vec<f64>,
+    /// Optional element types; `None` = legacy single-element tile.
+    pub elems: Option<OwnedTileElems>,
 }
 
 impl OwnedTile {
@@ -115,6 +202,10 @@ impl OwnedTile {
             num_nbor: self.num_nbor,
             rij: &self.rij,
             mask: &self.mask,
+            elems: self
+                .elems
+                .as_ref()
+                .map(|e| TileElems { ielems: &e.ielems, jelems: &e.jelems }),
         }
     }
 
@@ -208,7 +299,7 @@ mod tests {
     fn tile_input_accessors() {
         let rij: Vec<f64> = (0..12).map(|i| i as f64).collect();
         let mask = vec![1.0, 0.0];
-        let t = TileInput { num_atoms: 1, num_nbor: 2, rij: &rij[..6], mask: &mask };
+        let t = TileInput { num_atoms: 1, num_nbor: 2, rij: &rij[..6], mask: &mask, elems: None };
         t.validate();
         assert_eq!(t.rij_of(0, 1), [3.0, 4.0, 5.0]);
         assert!(t.is_real(0, 0));
@@ -220,14 +311,14 @@ mod tests {
     fn validate_rejects_bad_lengths() {
         let rij = vec![0.0; 5];
         let mask = vec![1.0; 2];
-        TileInput { num_atoms: 1, num_nbor: 2, rij: &rij, mask: &mask }.validate();
+        TileInput { num_atoms: 1, num_nbor: 2, rij: &rij, mask: &mask, elems: None }.validate();
     }
 
     #[test]
     fn tile_input_check_reports_bad_shape() {
         let rij = vec![0.0; 5];
         let mask = vec![1.0; 2];
-        let err = TileInput { num_atoms: 1, num_nbor: 2, rij: &rij, mask: &mask }
+        let err = TileInput { num_atoms: 1, num_nbor: 2, rij: &rij, mask: &mask, elems: None }
             .check()
             .unwrap_err();
         assert!(matches!(err, EngineError::BadShape(_)), "{err:?}");
@@ -238,6 +329,7 @@ mod tests {
             num_nbor: 2,
             rij: &rij,
             mask: &mask,
+            elems: None,
         };
         assert!(matches!(huge.check(), Err(EngineError::BadShape(_))));
     }
@@ -279,11 +371,11 @@ mod tests {
         }
         let rij = vec![0.0; 3];
         let mask = vec![1.0];
-        let t = TileInput { num_atoms: 1, num_nbor: 1, rij: &rij, mask: &mask };
+        let t = TileInput { num_atoms: 1, num_nbor: 1, rij: &rij, mask: &mask, elems: None };
         let out = Doubler.compute(&t);
         assert_eq!(out.ei, vec![2.0]);
         // the shim panics on a dispatch error (here: a shape violation)
-        let bad = TileInput { num_atoms: 2, num_nbor: 1, rij: &rij, mask: &mask };
+        let bad = TileInput { num_atoms: 2, num_nbor: 1, rij: &rij, mask: &mask, elems: None };
         let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             Doubler.compute(&bad)
         }));
@@ -297,6 +389,7 @@ mod tests {
             num_nbor: 2,
             rij: vec![0.0; 6],
             mask: vec![1.0, 0.0],
+            elems: None,
         };
         assert!(good.check_shape().is_ok());
         let view = good.as_input();
@@ -306,5 +399,62 @@ mod tests {
         assert!(bad.check_shape().unwrap_err().contains("rij"));
         let bad2 = OwnedTile { mask: vec![1.0; 3], ..good };
         assert!(bad2.check_shape().unwrap_err().contains("mask"));
+    }
+
+    fn typed_tile<'a>(
+        rij: &'a [f64],
+        mask: &'a [f64],
+        ielems: &'a [i32],
+        jelems: &'a [i32],
+    ) -> TileInput<'a> {
+        TileInput {
+            num_atoms: 1,
+            num_nbor: 2,
+            rij,
+            mask,
+            elems: Some(TileElems { ielems, jelems }),
+        }
+    }
+
+    #[test]
+    fn types_channel_is_validated() {
+        let rij = vec![0.0; 6];
+        let mask = vec![1.0, 0.0];
+        let mk = |ielems: &'static [i32], jelems: &'static [i32]| {
+            typed_tile(&rij, &mask, ielems, jelems)
+        };
+        // well-formed typed tile
+        let good = mk(&[1], &[0, 1]);
+        good.check().unwrap();
+        good.check_elems(2).unwrap();
+        assert_eq!(good.elem_of(0), 1);
+        assert_eq!(good.pair_elems(0, 1), (1, 1));
+        // wrong lengths
+        let err = mk(&[0, 0], &[0, 0]).check().unwrap_err();
+        assert!(err.to_string().contains("ielems"), "{err}");
+        let err = mk(&[0], &[0]).check().unwrap_err();
+        assert!(err.to_string().contains("jelems"), "{err}");
+        // negative types are rejected at check()
+        let err = mk(&[0], &[0, -1]).check().unwrap_err();
+        assert!(err.to_string().contains("negative"), "{err}");
+        // out-of-range types are rejected against the element count
+        let err = mk(&[1], &[0, 1]).check_elems(1).unwrap_err();
+        assert!(matches!(err, EngineError::BadShape(_)), "{err:?}");
+        assert!(err.to_string().contains("out of range"), "{err}");
+        // untyped tiles resolve to element 0 and always pass check_elems
+        let untyped = TileInput { num_atoms: 1, num_nbor: 2, rij: &rij, mask: &mask, elems: None };
+        untyped.check_elems(1).unwrap();
+        assert_eq!(untyped.elem_of(0), 0);
+        assert_eq!(untyped.pair_elems(0, 1), (0, 0));
+        // owned round-trip preserves the channel
+        let owned = OwnedTile {
+            num_atoms: 1,
+            num_nbor: 2,
+            rij: rij.clone(),
+            mask: mask.clone(),
+            elems: Some(OwnedTileElems { ielems: vec![1], jelems: vec![0, 1] }),
+        };
+        assert!(owned.check_shape().is_ok());
+        assert_eq!(owned.as_input().pair_elems(0, 0), (1, 0));
     }
 }

@@ -22,9 +22,10 @@
 
 use super::engine::{EngineError, ForceEngine, TileInput, TileOutput};
 use super::indices::SnapIndex;
+use super::kernels::pair_geom;
 use super::memory::{MemoryFootprint, C128, F64};
-use super::params::SnapParams;
-use super::wigner::{compute_fused_dedr_pair, compute_ulist_pair, FusedDuScratch, PairGeom};
+use super::params::{ElementTable, SnapParams};
+use super::wigner::{compute_fused_dedr_pair, compute_ulist_pair, FusedDuScratch};
 use crate::util::zero_resize;
 use std::sync::Arc;
 
@@ -42,7 +43,10 @@ pub struct FusedConfig {
 pub struct FusedEngine {
     pub params: SnapParams,
     pub idx: Arc<SnapIndex>,
+    /// Flattened per-element coefficient blocks:
+    /// `beta[e*idxb_max .. (e+1)*idxb_max]` is element e's block.
     pub beta: Vec<f64>,
+    pub elems: ElementTable,
     pub cfg: FusedConfig,
     name: String,
     // persistent tile state: utot (full index space) + ylist (half)
@@ -60,6 +64,7 @@ pub struct FusedEngine {
 }
 
 impl FusedEngine {
+    /// Single-element constructor (the degenerate [`ElementTable::single`]).
     pub fn new(
         params: SnapParams,
         idx: Arc<SnapIndex>,
@@ -67,12 +72,26 @@ impl FusedEngine {
         cfg: FusedConfig,
         name: impl Into<String>,
     ) -> Self {
-        assert_eq!(beta.len(), idx.idxb_max);
+        Self::new_multi(params, idx, beta, ElementTable::single(), cfg, name)
+    }
+
+    /// Multi-element constructor: `beta` holds one `idxb_max` block per
+    /// element of `elems`, in element order.
+    pub fn new_multi(
+        params: SnapParams,
+        idx: Arc<SnapIndex>,
+        beta: Vec<f64>,
+        elems: ElementTable,
+        cfg: FusedConfig,
+        name: impl Into<String>,
+    ) -> Self {
+        assert_eq!(beta.len(), elems.nelems() * idx.idxb_max);
         let iu = idx.idxu_max;
         Self {
             params,
             idx: idx.clone(),
             beta,
+            elems,
             cfg,
             name: name.into(),
             utot_r: Vec::new(),
@@ -116,6 +135,7 @@ impl ForceEngine for FusedEngine {
 
     fn compute_into(&mut self, input: &TileInput, out: &mut TileOutput) -> Result<(), EngineError> {
         input.check()?;
+        input.check_elems(self.elems.nelems())?;
         let (na, nn) = (input.num_atoms, input.num_nbor);
         let iu = self.idx.idxu_max;
         let ih = self.idx.idxu_half_max();
@@ -140,7 +160,7 @@ impl ForceEngine for FusedEngine {
                 if !input.is_real(atom, nbor) {
                     continue;
                 }
-                let g = PairGeom::new(input.rij_of(atom, nbor), &p);
+                let g = pair_geom(input, atom, nbor, &p, &self.elems);
                 compute_ulist_pair(&g, &idx, &mut self.u_r, &mut self.u_i);
                 if self.cfg.aosoa {
                     for jju in 0..iu {
@@ -168,6 +188,7 @@ impl ForceEngine for FusedEngine {
             }
             // Z on the fly -> Y (half slots): bounds-check-free streaming
             // over the contraction plan (the load-balanced flat formulation)
+            let boff = input.elem_of(atom) * idx.idxb_max;
             let (ur, ui) = (&self.ut_scratch_r, &self.ut_scratch_i);
             for jjz in 0..idx.idxz_max {
                 let lo = idx.zplan_offsets[jjz] as usize;
@@ -192,7 +213,7 @@ impl ForceEngine for FusedEngine {
                     sr = (ar * br - ai * bi).mul_add(c, sr);
                     si = (ar * bi + ai * br).mul_add(c, si);
                 }
-                let coef = idx.yplan_fac[jjz] * self.beta[idx.yplan_jjb[jjz] as usize];
+                let coef = idx.yplan_fac[jjz] * self.beta[boff + idx.yplan_jjb[jjz] as usize];
                 let half = idx.uhalf_slot[idx.yplan_jju[jjz] as usize];
                 debug_assert!(half != usize::MAX);
                 let s = self.slot(atom, half, ih, nap);
@@ -225,7 +246,7 @@ impl ForceEngine for FusedEngine {
                 if !input.is_real(atom, nbor) {
                     continue;
                 }
-                let g = PairGeom::new(input.rij_of(atom, nbor), &p);
+                let g = pair_geom(input, atom, nbor, &p, &self.elems);
                 compute_ulist_pair(&g, &idx, &mut self.u_r, &mut self.u_i);
                 // level-streaming fused kernel: dU never exists outside a
                 // ~20 KB L1-resident double buffer (section VI-A)
@@ -296,7 +317,7 @@ mod tests {
         let mut rng = XorShift::new(31);
         let beta: Vec<f64> = (0..idx.idxb_max).map(|_| rng.normal()).collect();
         let (rij, mask) = tile(&mut rng, 5, 7, &p);
-        let inp = TileInput { num_atoms: 5, num_nbor: 7, rij: &rij, mask: &mask };
+        let inp = TileInput { num_atoms: 5, num_nbor: 7, rij: &rij, mask: &mask, elems: None };
         let mut base =
             BaselineEngine::new(p, idx.clone(), beta.clone(), Staging::Monolithic);
         let want = base.compute(&inp);
@@ -341,7 +362,7 @@ mod tests {
         let beta: Vec<f64> = (0..idx.idxb_max).map(|_| rng.normal()).collect();
         for na in [1usize, 3, 8, 9, 17] {
             let (rij, mask) = tile(&mut rng, na, 4, &p);
-            let inp = TileInput { num_atoms: na, num_nbor: 4, rij: &rij, mask: &mask };
+            let inp = TileInput { num_atoms: na, num_nbor: 4, rij: &rij, mask: &mask, elems: None };
             let mut a = FusedEngine::new(
                 p, idx.clone(), beta.clone(), FusedConfig { aosoa: true }, "aosoa",
             );

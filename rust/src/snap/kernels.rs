@@ -5,8 +5,9 @@
 //! operating on split re/im flat buffers.  Layout decisions (who owns which
 //! stride) live in the engines; these helpers take plain slices.
 
+use super::engine::TileInput;
 use super::indices::SnapIndex;
-use super::params::SnapParams;
+use super::params::{ElementTable, SnapParams};
 use super::wigner::{compute_ulist_pair, PairGeom};
 
 /// The fallback displacement for masked lanes (keeps the recursion finite;
@@ -18,6 +19,31 @@ pub fn safe_rij(rij: [f64; 3], real: bool, p: &SnapParams) -> [f64; 3] {
     } else {
         [0.0, 0.0, 0.5 * p.rcut()]
     }
+}
+
+/// Per-pair geometry honoring the optional element-type channel: the pair
+/// cutoff `rcutfac * (R_i + R_j)` and the neighbor density weight `w_j`
+/// are folded into `sfac`/`dsfac`, so every downstream kernel — U
+/// accumulation, stored dU, the fused dE stream — inherits both without
+/// branching.  Untyped tiles resolve to element 0; with the degenerate
+/// single-element table the result is bit-identical to the legacy
+/// fixed-cutoff [`PairGeom::new`] path (`rcutfac * (0.5 + 0.5) == rcutfac`
+/// and `1.0 * sfac == sfac` exactly).
+#[inline]
+pub fn pair_geom(
+    input: &TileInput,
+    atom: usize,
+    nbor: usize,
+    p: &SnapParams,
+    elems: &ElementTable,
+) -> PairGeom {
+    let (ei, ej) = input.pair_elems(atom, nbor);
+    PairGeom::with_cutoff(
+        input.rij_of(atom, nbor),
+        p,
+        elems.pair_cutoff(p.rcutfac, ei, ej),
+        elems.weight(ej),
+    )
 }
 
 /// Initialize a per-atom U-total buffer with the wself self-contribution.

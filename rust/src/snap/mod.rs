@@ -34,6 +34,9 @@ pub mod sharded;
 pub mod variants;
 pub mod wigner;
 
-pub use engine::{EngineError, EngineFactory, ForceEngine, OwnedTile, TileInput, TileOutput};
+pub use engine::{
+    EngineError, EngineFactory, ForceEngine, OwnedTile, OwnedTileElems, TileElems, TileInput,
+    TileOutput,
+};
 pub use indices::SnapIndex;
-pub use params::SnapParams;
+pub use params::{ElementTable, SnapParams};

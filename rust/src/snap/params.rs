@@ -1,7 +1,10 @@
-//! SNAP descriptor hyper-parameters and the radial switching function.
+//! SNAP descriptor hyper-parameters, the radial switching function, and the
+//! per-element `(radius, weight)` table multi-species potentials carry.
 //!
-//! Field names follow LAMMPS `pair_style snap` so a real `.snapparam` file
-//! maps 1:1 (see [`crate::snap::coeff`]).
+//! Field names follow LAMMPS `pair_style snap` so a real `.snapparam` /
+//! `.snapcoeff` file maps 1:1 (see [`crate::snap::coeff`]).
+
+use anyhow::Result;
 
 /// Hyper-parameters of the SNAP descriptor.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -38,26 +41,122 @@ impl SnapParams {
     /// Switching function: 1 at r <= rmin0, smooth cosine to 0 at rcut.
     #[inline]
     pub fn sfac(&self, r: f64) -> f64 {
-        if r <= self.rmin0 {
-            1.0
-        } else if r >= self.rcut() {
-            0.0
-        } else {
-            let x = (r - self.rmin0) / (self.rcut() - self.rmin0);
-            0.5 * ((std::f64::consts::PI * x).cos() + 1.0)
-        }
+        self.sfac_rc(r, self.rcut())
     }
 
     /// d(sfac)/dr.
     #[inline]
     pub fn dsfac(&self, r: f64) -> f64 {
-        if r <= self.rmin0 || r >= self.rcut() {
+        self.dsfac_rc(r, self.rcut())
+    }
+
+    /// [`sfac`](Self::sfac) against an explicit cutoff — the per-pair form
+    /// multi-element potentials use (`rcut = rcutfac * (R_i + R_j)`).
+    /// `sfac(r)` delegates here with `rcut = self.rcut()`, so the two are
+    /// bit-identical on the single-element path.
+    #[inline]
+    pub fn sfac_rc(&self, r: f64, rcut: f64) -> f64 {
+        if r <= self.rmin0 {
+            1.0
+        } else if r >= rcut {
             0.0
         } else {
-            let span = self.rcut() - self.rmin0;
+            let x = (r - self.rmin0) / (rcut - self.rmin0);
+            0.5 * ((std::f64::consts::PI * x).cos() + 1.0)
+        }
+    }
+
+    /// d([`sfac_rc`](Self::sfac_rc))/dr against an explicit cutoff.
+    #[inline]
+    pub fn dsfac_rc(&self, r: f64, rcut: f64) -> f64 {
+        if r <= self.rmin0 || r >= rcut {
+            0.0
+        } else {
+            let span = rcut - self.rmin0;
             let x = (r - self.rmin0) / span;
             -0.5 * std::f64::consts::PI / span * (std::f64::consts::PI * x).sin()
         }
+    }
+}
+
+/// Per-element SNAP tables: the `element R w` lines of a `.snapcoeff` file.
+///
+/// * `radii[e]` — cutoff radius factor `R_e`; the (i, j) pair cutoff is
+///   `rcutfac * (R_i + R_j)` (LAMMPS `pair_style snap` convention).
+/// * `weights[e]` — density weight `w_e`; neighbor j contributes
+///   `w_{elem(j)} * sfac * U(r_ij)` to the central atom's density.
+///
+/// The degenerate single-element table ([`single`](Self::single):
+/// `R = 0.5, w = 1.0`) reproduces the legacy fixed-cutoff geometry bit for
+/// bit: `rcutfac * (0.5 + 0.5) == rcutfac` and `1.0 * sfac == sfac`
+/// exactly in IEEE arithmetic — the invariant the multi-element
+/// differential suite (`rust/tests/multi_element.rs`) pins down.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ElementTable {
+    pub symbols: Vec<String>,
+    pub radii: Vec<f64>,
+    pub weights: Vec<f64>,
+}
+
+impl ElementTable {
+    /// Validated constructor: equal non-zero lengths, positive finite radii,
+    /// finite weights.
+    pub fn new(symbols: Vec<String>, radii: Vec<f64>, weights: Vec<f64>) -> Result<ElementTable> {
+        anyhow::ensure!(!symbols.is_empty(), "element table needs at least one element");
+        anyhow::ensure!(
+            symbols.len() == radii.len() && symbols.len() == weights.len(),
+            "element table columns disagree: {} symbols, {} radii, {} weights",
+            symbols.len(),
+            radii.len(),
+            weights.len()
+        );
+        for (e, (&r, &w)) in radii.iter().zip(weights.iter()).enumerate() {
+            anyhow::ensure!(
+                r.is_finite() && r > 0.0,
+                "element {} ({}) has non-positive radius {r}",
+                e,
+                symbols[e]
+            );
+            anyhow::ensure!(
+                w.is_finite(),
+                "element {} ({}) has non-finite weight {w}",
+                e,
+                symbols[e]
+            );
+        }
+        Ok(ElementTable { symbols, radii, weights })
+    }
+
+    /// The degenerate single-element table (tungsten, `R = 0.5, w = 1.0`).
+    pub fn single() -> ElementTable {
+        ElementTable {
+            symbols: vec!["W".to_string()],
+            radii: vec![0.5],
+            weights: vec![1.0],
+        }
+    }
+
+    pub fn nelems(&self) -> usize {
+        self.radii.len()
+    }
+
+    /// Cutoff of the (ei, ej) pair: `rcutfac * (R_i + R_j)`.
+    #[inline]
+    pub fn pair_cutoff(&self, rcutfac: f64, ei: usize, ej: usize) -> f64 {
+        rcutfac * (self.radii[ei] + self.radii[ej])
+    }
+
+    /// Density weight of element `e`.
+    #[inline]
+    pub fn weight(&self, e: usize) -> f64 {
+        self.weights[e]
+    }
+
+    /// The largest pair cutoff any species pair reaches — what neighbor
+    /// lists must be built with (`rcutfac * 2 * max(R)`).
+    pub fn max_cutoff(&self, rcutfac: f64) -> f64 {
+        let rmax = self.radii.iter().cloned().fold(0.0f64, f64::max);
+        rcutfac * 2.0 * rmax
     }
 }
 
@@ -91,6 +190,51 @@ mod tests {
                 p.dsfac(r)
             );
         }
+    }
+
+    #[test]
+    fn sfac_rc_generalizes_sfac_bitwise() {
+        let p = SnapParams::default();
+        for i in 0..60 {
+            let r = i as f64 * 0.1;
+            assert_eq!(p.sfac(r), p.sfac_rc(r, p.rcut()));
+            assert_eq!(p.dsfac(r), p.dsfac_rc(r, p.rcut()));
+        }
+        // a shorter pair cutoff switches off earlier
+        assert_eq!(p.sfac_rc(4.0, 3.9), 0.0);
+        assert!(p.sfac_rc(3.0, 3.9) > 0.0);
+    }
+
+    #[test]
+    fn degenerate_element_table_reproduces_the_legacy_cutoff_bitwise() {
+        let p = SnapParams::default();
+        let t = ElementTable::single();
+        assert_eq!(t.nelems(), 1);
+        // 0.5 + 0.5 == 1.0 and rcutfac * 1.0 == rcutfac, exactly
+        assert_eq!(t.pair_cutoff(p.rcutfac, 0, 0), p.rcut());
+        assert_eq!(t.weight(0), 1.0);
+        assert_eq!(t.max_cutoff(p.rcutfac), p.rcut());
+    }
+
+    #[test]
+    fn element_table_validates() {
+        let ok = ElementTable::new(
+            vec!["W".into(), "Be".into()],
+            vec![0.5, 0.417932],
+            vec![1.0, 0.959049],
+        )
+        .unwrap();
+        assert_eq!(ok.nelems(), 2);
+        // mixed pair cutoff is strictly between the homo-pair cutoffs
+        let ww = ok.pair_cutoff(4.7, 0, 0);
+        let wb = ok.pair_cutoff(4.7, 0, 1);
+        let bb = ok.pair_cutoff(4.7, 1, 1);
+        assert!(bb < wb && wb < ww);
+        assert_eq!(ok.max_cutoff(4.7), ww);
+        assert!(ElementTable::new(vec![], vec![], vec![]).is_err());
+        assert!(ElementTable::new(vec!["W".into()], vec![0.5, 0.4], vec![1.0]).is_err());
+        assert!(ElementTable::new(vec!["W".into()], vec![-0.5], vec![1.0]).is_err());
+        assert!(ElementTable::new(vec!["W".into()], vec![0.5], vec![f64::NAN]).is_err());
     }
 
     #[test]

@@ -148,6 +148,12 @@ impl ForceEngine for ShardedEngine {
                 num_nbor: nn,
                 rij: &input.rij[start * nn * 3..(start + count) * nn * 3],
                 mask: &input.mask[start * nn..(start + count) * nn],
+                // the element channel slices exactly like rij/mask: shard s
+                // sees its atom range's central types and neighbor types
+                elems: input.elems.map(|e| crate::snap::engine::TileElems {
+                    ielems: &e.ielems[start..start + count],
+                    jelems: &e.jelems[start * nn..(start + count) * nn],
+                }),
             };
             lock_shard(&engines[s]).compute_into(&sub, &mut lock_shard(&scratch[s]))
         });
@@ -228,7 +234,8 @@ mod tests {
         let mut rng = XorShift::new(5);
         for (na, nn) in [(13usize, 5usize), (6, 4), (2, 3), (1, 4)] {
             let (rij, mask) = tile(&mut rng, na, nn);
-            let inp = TileInput { num_atoms: na, num_nbor: nn, rij: &rij, mask: &mask };
+            let inp =
+                TileInput { num_atoms: na, num_nbor: nn, rij: &rij, mask: &mask, elems: None };
             let want = serial.compute(&inp);
             for shards in [1usize, 2, 3, 7] {
                 let mut eng = ShardedEngine::new(&factory, shards).unwrap();
@@ -300,13 +307,13 @@ mod tests {
         let mut rij = vec![1.0; 2 * 3 * 3];
         rij[0] = f64::NAN; // atom 0 -> shard 0 panics mid-compute
         let mask = vec![1.0; 2 * 3];
-        let bad = TileInput { num_atoms: 2, num_nbor: 3, rij: &rij, mask: &mask };
+        let bad = TileInput { num_atoms: 2, num_nbor: 3, rij: &rij, mask: &mask, elems: None };
         let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| eng.compute(&bad)));
         assert!(caught.is_err(), "hostile tile must panic through the shards");
         // the poisoned shard mutex must not brick the engine: the force
         // server contains the panic per job and reuses the worker's engine
         let rij_ok = vec![1.0; 2 * 3 * 3];
-        let good = TileInput { num_atoms: 2, num_nbor: 3, rij: &rij_ok, mask: &mask };
+        let good = TileInput { num_atoms: 2, num_nbor: 3, rij: &rij_ok, mask: &mask, elems: None };
         let out = eng.compute(&good);
         assert_eq!(out.ei, vec![1.0, 1.0]);
     }
@@ -340,12 +347,12 @@ mod tests {
         let mut rij = vec![1.0; 2 * 3 * 3];
         let mask = vec![1.0; 2 * 3];
         rij[9] = 666.0; // atom 1 -> shard 1 reports a Backend error
-        let bad = TileInput { num_atoms: 2, num_nbor: 3, rij: &rij, mask: &mask };
+        let bad = TileInput { num_atoms: 2, num_nbor: 3, rij: &rij, mask: &mask, elems: None };
         let err = eng.compute_into(&bad, &mut out).unwrap_err();
         assert!(matches!(err, EngineError::Backend(_)), "{err:?}");
         // the error is per-dispatch, not per-engine: a good tile still works
         let rij_ok = vec![1.0; 2 * 3 * 3];
-        let good = TileInput { num_atoms: 2, num_nbor: 3, rij: &rij_ok, mask: &mask };
+        let good = TileInput { num_atoms: 2, num_nbor: 3, rij: &rij_ok, mask: &mask, elems: None };
         eng.compute_into(&good, &mut out).unwrap();
         assert_eq!(out.ei, vec![2.0, 2.0]);
     }

@@ -10,7 +10,7 @@ use super::baseline::{BaselineEngine, Staging};
 use super::engine::ForceEngine;
 use super::fused::{FusedConfig, FusedEngine};
 use super::indices::SnapIndex;
-use super::params::SnapParams;
+use super::params::{ElementTable, SnapParams};
 use std::sync::Arc;
 
 /// The ladder of named variants (paper x-axis labels).
@@ -119,25 +119,41 @@ impl Variant {
         })
     }
 
-    /// Instantiate the engine realizing this ladder step.
+    /// Instantiate the engine realizing this ladder step (single-element).
     pub fn build(
         &self,
         params: SnapParams,
         idx: Arc<SnapIndex>,
         beta: Vec<f64>,
     ) -> Box<dyn ForceEngine> {
+        self.build_multi(params, idx, beta, ElementTable::single())
+    }
+
+    /// Instantiate the engine with a multi-element table: `beta` holds one
+    /// `idxb_max` block per element.  Every ladder step is multi-element
+    /// capable — the ladder ∪ fig1 cross-checks run on mixed-species tiles
+    /// too (`rust/tests/multi_element.rs`).
+    pub fn build_multi(
+        &self,
+        params: SnapParams,
+        idx: Arc<SnapIndex>,
+        beta: Vec<f64>,
+        elems: ElementTable,
+    ) -> Box<dyn ForceEngine> {
         let adj = |cfg: AdjointConfig, name: &str| -> Box<dyn ForceEngine> {
-            Box::new(AdjointEngine::new(params, idx.clone(), beta.clone(), cfg, name))
+            Box::new(AdjointEngine::new_multi(
+                params, idx.clone(), beta.clone(), elems.clone(), cfg, name,
+            ))
         };
         match self {
-            Variant::V0Baseline => Box::new(BaselineEngine::new(
-                params, idx.clone(), beta.clone(), Staging::Monolithic,
+            Variant::V0Baseline => Box::new(BaselineEngine::new_multi(
+                params, idx.clone(), beta.clone(), elems.clone(), Staging::Monolithic,
             )),
-            Variant::PreAdjointAtom => Box::new(BaselineEngine::new(
-                params, idx.clone(), beta.clone(), Staging::AtomStaged,
+            Variant::PreAdjointAtom => Box::new(BaselineEngine::new_multi(
+                params, idx.clone(), beta.clone(), elems.clone(), Staging::AtomStaged,
             )),
-            Variant::PreAdjointPair => Box::new(BaselineEngine::new(
-                params, idx.clone(), beta.clone(), Staging::PairStaged,
+            Variant::PreAdjointPair => Box::new(BaselineEngine::new_multi(
+                params, idx.clone(), beta.clone(), elems.clone(), Staging::PairStaged,
             )),
             Variant::V1 => adj(AdjointConfig::default(), "V1"),
             Variant::V2 => adj(
@@ -193,11 +209,21 @@ impl Variant {
                 },
                 "V7",
             ),
-            Variant::Fused => Box::new(FusedEngine::new(
-                params, idx.clone(), beta.clone(), FusedConfig { aosoa: false }, "VI-fused",
+            Variant::Fused => Box::new(FusedEngine::new_multi(
+                params,
+                idx.clone(),
+                beta.clone(),
+                elems.clone(),
+                FusedConfig { aosoa: false },
+                "VI-fused",
             )),
-            Variant::FusedAosoa => Box::new(FusedEngine::new(
-                params, idx.clone(), beta.clone(), FusedConfig { aosoa: true }, "VI-aosoa",
+            Variant::FusedAosoa => Box::new(FusedEngine::new_multi(
+                params,
+                idx.clone(),
+                beta.clone(),
+                elems.clone(),
+                FusedConfig { aosoa: true },
+                "VI-aosoa",
             )),
         }
     }
@@ -224,7 +250,7 @@ mod tests {
             }
             mask.push(if rng.next_f64() > 0.2 { 1.0 } else { 0.0 });
         }
-        let inp = TileInput { num_atoms: na, num_nbor: nn, rij: &rij, mask: &mask };
+        let inp = TileInput { num_atoms: na, num_nbor: nn, rij: &rij, mask: &mask, elems: None };
         let mut reference: Option<crate::snap::TileOutput> = None;
         for v in Variant::ladder().iter().chain(Variant::fig1()) {
             let mut eng = v.build(p, idx.clone(), beta.clone());

@@ -32,11 +32,23 @@ pub struct PairGeom {
 }
 
 impl PairGeom {
-    /// Map a displacement to the 3-sphere (LAMMPS compute_uarray preamble).
+    /// Map a displacement to the 3-sphere (LAMMPS compute_uarray preamble),
+    /// with the global cutoff and unit density weight — the legacy
+    /// single-element geometry.
     pub fn new(rij: [f64; 3], p: &SnapParams) -> Self {
+        Self::with_cutoff(rij, p, p.rcut(), 1.0)
+    }
+
+    /// The multi-element generalization: an explicit pair cutoff
+    /// (`rcutfac * (R_i + R_j)`) and a neighbor density weight folded into
+    /// `sfac`/`dsfac`, so every downstream kernel — U accumulation, stored
+    /// dU, the fused dE stream — picks up both without further branching.
+    /// `with_cutoff(rij, p, p.rcut(), 1.0)` is bit-identical to the legacy
+    /// geometry (`x * 1.0 == x` in IEEE arithmetic).
+    pub fn with_cutoff(rij: [f64; 3], p: &SnapParams, rcut: f64, weight: f64) -> Self {
         let [x, y, z] = rij;
         let r = (x * x + y * y + z * z).sqrt();
-        let rscale0 = p.rfac0 * std::f64::consts::PI / (p.rcut() - p.rmin0);
+        let rscale0 = p.rfac0 * std::f64::consts::PI / (rcut - p.rmin0);
         let theta0 = (r - p.rmin0) * rscale0;
         let z0 = r * theta0.cos() / theta0.sin();
         let dz0dr = z0 / r - r * rscale0 * (r * r + z0 * z0) / (r * r);
@@ -49,8 +61,8 @@ impl PairGeom {
             b_i: -r0inv * x,
             z0,
             dz0dr,
-            sfac: p.sfac(r),
-            dsfac: p.dsfac(r),
+            sfac: weight * p.sfac_rc(r, rcut),
+            dsfac: weight * p.dsfac_rc(r, rcut),
             ux: x / r,
             uy: y / r,
             uz: z / r,
@@ -230,6 +242,37 @@ mod tests {
         let p = SnapParams::with_twojmax(6);
         let idx = SnapIndex::new(6);
         (PairGeom::new(rij, &p), idx, p)
+    }
+
+    #[test]
+    fn with_cutoff_at_the_global_cutoff_is_bitwise_the_legacy_geometry() {
+        let p = SnapParams::with_twojmax(6);
+        for rij in [[0.7, -1.1, 1.9], [1.3, 0.4, -0.8], [0.2, 0.1, 3.0]] {
+            let a = PairGeom::new(rij, &p);
+            let b = PairGeom::with_cutoff(rij, &p, p.rcut(), 1.0);
+            assert_eq!(a.sfac, b.sfac);
+            assert_eq!(a.dsfac, b.dsfac);
+            assert_eq!(a.a_r, b.a_r);
+            assert_eq!(a.b_i, b.b_i);
+            assert_eq!(a.z0, b.z0);
+        }
+    }
+
+    #[test]
+    fn weight_scales_sfac_and_dsfac_only() {
+        let p = SnapParams::with_twojmax(4);
+        let rij = [1.0, 0.5, -0.7];
+        let g1 = PairGeom::with_cutoff(rij, &p, p.rcut(), 1.0);
+        let gw = PairGeom::with_cutoff(rij, &p, p.rcut(), 0.75);
+        assert_eq!(gw.sfac, 0.75 * g1.sfac);
+        assert_eq!(gw.dsfac, 0.75 * g1.dsfac);
+        // the angular mapping is weight-independent
+        assert_eq!(gw.a_r, g1.a_r);
+        assert_eq!(gw.b_r, g1.b_r);
+        // a shorter pair cutoff changes both the switch and the mapping
+        let gs = PairGeom::with_cutoff(rij, &p, 0.8 * p.rcut(), 1.0);
+        assert!(gs.sfac < g1.sfac);
+        assert!(gs.z0 != g1.z0);
     }
 
     #[test]

@@ -134,7 +134,7 @@ mod tests {
 
     #[test]
     fn save_load_round_trip() {
-        let key = PlanKey { twojmax: 2, threads: 4 };
+        let key = PlanKey { twojmax: 2, threads: 4, nelems: 1 };
         let plan = sample_plan(key);
         let path = tmp_path("roundtrip");
         save(&path, &plan).unwrap();
@@ -148,17 +148,23 @@ mod tests {
 
     #[test]
     fn key_mismatch_invalidates() {
-        let tuned_key = PlanKey { twojmax: 2, threads: 4 };
+        let tuned_key = PlanKey { twojmax: 2, threads: 4, nelems: 1 };
         let plan = sample_plan(tuned_key);
         let path = tmp_path("stale");
         save(&path, &plan).unwrap();
         // a different thread count must force the default plan...
-        let now = PlanKey { twojmax: 2, threads: 8 };
+        let now = PlanKey { twojmax: 2, threads: 8, nelems: 1 };
         let (got, status) = load_or_default(&path, now);
         assert_eq!(status, CacheStatus::MissStaleKey { found: tuned_key });
         assert_eq!(got, TunedPlan::default_plan(now));
         // ...and so must a different descriptor size
-        let now = PlanKey { twojmax: 8, threads: 4 };
+        let now = PlanKey { twojmax: 8, threads: 4, nelems: 1 };
+        let (got, status) = load_or_default(&path, now);
+        assert!(matches!(status, CacheStatus::MissStaleKey { .. }));
+        assert_eq!(got.key, now);
+        // ...and a different element count (a single-element plan must not
+        // serve a multi-element potential)
+        let now = PlanKey { twojmax: 2, threads: 4, nelems: 2 };
         let (got, status) = load_or_default(&path, now);
         assert!(matches!(status, CacheStatus::MissStaleKey { .. }));
         assert_eq!(got.key, now);
@@ -167,7 +173,7 @@ mod tests {
 
     #[test]
     fn corrupted_file_falls_back_to_default() {
-        let key = PlanKey { twojmax: 2, threads: 4 };
+        let key = PlanKey { twojmax: 2, threads: 4, nelems: 1 };
         let path = tmp_path("corrupt");
         std::fs::write(&path, "{\"format\": \"repro-plan-v1\", \"twoj").unwrap();
         let (got, status) = load_or_default(&path, key);
@@ -179,7 +185,7 @@ mod tests {
 
     #[test]
     fn absent_file_is_a_clean_miss() {
-        let key = PlanKey { twojmax: 2, threads: 4 };
+        let key = PlanKey { twojmax: 2, threads: 4, nelems: 1 };
         let (got, status) = load_or_default("/nonexistent/repro_plan.json", key);
         assert_eq!(status, CacheStatus::MissAbsent);
         assert_eq!(got, TunedPlan::default_plan(key));
@@ -187,7 +193,7 @@ mod tests {
 
     #[test]
     fn resolve_spec_semantics() {
-        let key = PlanKey { twojmax: 2, threads: 4 };
+        let key = PlanKey { twojmax: 2, threads: 4, nelems: 1 };
         assert!(resolve("off", key).is_none());
         let sel = resolve("/nonexistent/plan.json", key).unwrap();
         assert_eq!(sel.cache, CacheStatus::MissAbsent);

@@ -89,19 +89,36 @@ impl ShapeBucket {
 
 /// The staleness key a plan was measured under.  A cached plan is only
 /// served when the key matches the current process exactly — a plan tuned
-/// for 8 lanes is wrong for 2, and shard timings do not transfer across
-/// descriptor sizes.
+/// for 8 lanes is wrong for 2, shard timings do not transfer across
+/// descriptor sizes, and per-pair cutoff/weight arithmetic makes
+/// multi-element dispatches cost differently from single-element ones, so
+/// the element count is part of the key too (plans never cross-contaminate
+/// between species sets).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct PlanKey {
     pub twojmax: usize,
     /// Execution lanes (`REPRO_THREADS` / available cores) at tune time.
     pub threads: usize,
+    /// Elements of the potential the plan was measured with (1 = the
+    /// classic single-element workload).
+    pub nelems: usize,
 }
 
 impl PlanKey {
-    /// The key of the current process for a given descriptor size.
+    /// The key of the current process for a given descriptor size
+    /// (single-element).
     pub fn current(twojmax: usize) -> PlanKey {
-        PlanKey { twojmax, threads: crate::util::parallel::num_threads() }
+        Self::current_multi(twojmax, 1)
+    }
+
+    /// The key of the current process for a given descriptor size and
+    /// element count.
+    pub fn current_multi(twojmax: usize, nelems: usize) -> PlanKey {
+        PlanKey {
+            twojmax,
+            threads: crate::util::parallel::num_threads(),
+            nelems: nelems.max(1),
+        }
     }
 }
 
@@ -174,10 +191,12 @@ impl TunedPlan {
             })
             .collect();
         format!(
-            "{{\"format\": \"{}\", \"twojmax\": {}, \"threads\": {}, \"buckets\": [{}]}}\n",
+            "{{\"format\": \"{}\", \"twojmax\": {}, \"threads\": {}, \"nelems\": {}, \
+             \"buckets\": [{}]}}\n",
             PLAN_FORMAT,
             self.key.twojmax,
             self.key.threads,
+            self.key.nelems,
             buckets.join(", ")
         )
     }
@@ -193,6 +212,10 @@ impl TunedPlan {
             j.get("twojmax").and_then(Json::as_usize).context("plan missing `twojmax`")?;
         let threads =
             j.get("threads").and_then(Json::as_usize).context("plan missing `threads`")?;
+        // absent in pre-multi-element plan files: those were all tuned on
+        // the single-element workload, so default to 1 rather than
+        // invalidating every existing cache
+        let nelems = j.get("nelems").and_then(Json::as_usize).unwrap_or(1).max(1);
         let buckets = j.get("buckets").and_then(Json::as_arr).context("plan missing `buckets`")?;
         let mut entries: [Option<PlanEntry>; 3] = [None; 3];
         for b in buckets {
@@ -222,7 +245,7 @@ impl TunedPlan {
             out[bucket.index()] = entries[bucket.index()]
                 .with_context(|| format!("plan missing bucket `{}`", bucket.label()))?;
         }
-        Ok(TunedPlan { key: PlanKey { twojmax, threads }, entries: out })
+        Ok(TunedPlan { key: PlanKey { twojmax, threads, nelems }, entries: out })
     }
 }
 
@@ -299,7 +322,7 @@ mod tests {
 
     fn sample_plan() -> TunedPlan {
         TunedPlan::new(
-            PlanKey { twojmax: 2, threads: 4 },
+            PlanKey { twojmax: 2, threads: 4, nelems: 1 },
             [
                 PlanEntry { variant: Variant::V7, shards: 1, min_atoms_per_shard: 1 },
                 PlanEntry { variant: Variant::Fused, shards: 2, min_atoms_per_shard: 4 },
@@ -331,6 +354,32 @@ mod tests {
     }
 
     #[test]
+    fn nelems_rides_the_key_and_defaults_to_one_for_old_files() {
+        // a multi-element key round-trips
+        let mut plan = sample_plan();
+        plan.key.nelems = 2;
+        let back = TunedPlan::from_json_text(&plan.to_json()).unwrap();
+        assert_eq!(back.key.nelems, 2);
+        assert_eq!(back, plan);
+        // pre-multi-element plan files (no `nelems`) parse as nelems = 1,
+        // so existing single-element caches stay valid...
+        let legacy = concat!(
+            "{\"format\": \"repro-plan-v1\", \"twojmax\": 2, \"threads\": 4, \"buckets\": [",
+            "{\"bucket\": \"small\", \"variant\": \"V7\", ",
+            "\"shards\": 1, \"min_atoms_per_shard\": 1}, ",
+            "{\"bucket\": \"medium\", \"variant\": \"VI-fused\", ",
+            "\"shards\": 2, \"min_atoms_per_shard\": 4}, ",
+            "{\"bucket\": \"large\", \"variant\": \"VI-fused\", ",
+            "\"shards\": 4, \"min_atoms_per_shard\": 4}]}"
+        );
+        let old = TunedPlan::from_json_text(legacy).unwrap();
+        assert_eq!(old.key.nelems, 1);
+        // ...while a 2-element process key never matches them (stale-key
+        // invalidation keeps plans from cross-contaminating species sets)
+        assert_ne!(old.key, PlanKey { twojmax: 2, threads: 4, nelems: 2 });
+    }
+
+    #[test]
     fn plan_parser_rejects_bad_documents() {
         assert!(TunedPlan::from_json_text("not json").is_err());
         assert!(TunedPlan::from_json_text("{\"format\": \"other\"}").is_err());
@@ -346,7 +395,7 @@ mod tests {
 
     #[test]
     fn default_plan_is_serial_for_small_tiles() {
-        let plan = TunedPlan::default_plan(PlanKey { twojmax: 2, threads: 8 });
+        let plan = TunedPlan::default_plan(PlanKey { twojmax: 2, threads: 8, nelems: 1 });
         assert_eq!(plan.entry(ShapeBucket::Small).shards, 1);
         assert_eq!(plan.entry(ShapeBucket::Large).shards, 8);
         assert_eq!(plan.entry(ShapeBucket::Large).variant, Variant::Fused);
@@ -384,7 +433,7 @@ mod tests {
         for (na, want) in [(1usize, 0.0), (8, 1.0), (64, 2.0), (3, 0.0)] {
             let rij = vec![0.0; na * 3];
             let mask = vec![1.0; na];
-            let t = TileInput { num_atoms: na, num_nbor: 1, rij: &rij, mask: &mask };
+            let t = TileInput { num_atoms: na, num_nbor: 1, rij: &rij, mask: &mask, elems: None };
             assert_eq!(eng.compute(&t).ei[0], want, "na={na}");
         }
         assert_eq!(counters.dispatches(ShapeBucket::Small), 2);

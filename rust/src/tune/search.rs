@@ -21,7 +21,7 @@ use super::plan::{PlanEntry, PlanKey, ShapeBucket, TunedPlan};
 use crate::bench::{BenchStats, Workload};
 use crate::config::EngineSpec;
 use crate::snap::coeff::SnapCoeffs;
-use crate::snap::engine::{TileInput, TileOutput};
+use crate::snap::engine::{TileElems, TileInput, TileOutput};
 use crate::snap::sharded::{build_sharded, DEFAULT_MIN_ATOMS_PER_SHARD};
 use crate::snap::variants::Variant;
 use crate::snap::{SnapIndex, SnapParams};
@@ -32,6 +32,12 @@ use std::sync::Arc;
 #[derive(Clone, Debug)]
 pub struct SearchOptions {
     pub twojmax: usize,
+    /// Elements of the potential to tune for (1 = the classic
+    /// single-element workload).  With more, candidates are timed on a
+    /// *typed* workload (species round-robin over the benchmark lattice)
+    /// and the plan is keyed `(twojmax, threads, nelems)`, so `--plan
+    /// auto` on a multi-element server resolves it.
+    pub nelems: usize,
     /// Wall-clock cap for the whole search, ms (0 = uncapped).
     pub budget_ms: u64,
     pub warmup: usize,
@@ -53,6 +59,7 @@ impl SearchOptions {
     pub fn new(twojmax: usize) -> SearchOptions {
         SearchOptions {
             twojmax,
+            nelems: 1,
             budget_ms: 10_000,
             warmup: 1,
             reps: 5,
@@ -118,7 +125,8 @@ pub struct TuneOutcome {
 /// engine choice.
 pub fn calibrate(opts: &SearchOptions) -> anyhow::Result<TuneOutcome> {
     anyhow::ensure!(!opts.variant_candidates.is_empty(), "no variant candidates");
-    let key = PlanKey::current(opts.twojmax);
+    let nelems = opts.nelems.max(1);
+    let key = PlanKey::current_multi(opts.twojmax, nelems);
     let params = SnapParams::with_twojmax(opts.twojmax);
     // validate the calibration geometry up front: a clean CLI error beats
     // the workload builder's minimum-image assert, and the large bucket
@@ -139,8 +147,12 @@ pub fn calibrate(opts: &SearchOptions) -> anyhow::Result<TuneOutcome> {
         large_atoms
     );
     let idx = Arc::new(SnapIndex::new(opts.twojmax));
-    let coeffs = SnapCoeffs::synthetic(opts.twojmax, idx.idxb_max, 42);
-    let w = Workload::tungsten(opts.cells, params.rcut());
+    let coeffs = SnapCoeffs::synthetic_multi(opts.twojmax, idx.idxb_max, nelems, 42);
+    // synthetic per-element radii never exceed the degenerate 0.5, so this
+    // equals rcut() today — computed anyway so the workload stays correct
+    // if the synthetic tables ever widen
+    let cutoff = coeffs.elements.max_cutoff(params.rcutfac).max(params.rcut());
+    let w = Workload::tungsten_multi(opts.cells, cutoff, nelems);
 
     let mut shard_candidates: Vec<usize> =
         opts.shard_candidates.iter().copied().filter(|&s| s >= 1).collect();
@@ -168,6 +180,11 @@ pub fn calibrate(opts: &SearchOptions) -> anyhow::Result<TuneOutcome> {
             num_nbor: nn,
             rij: &w.rij[..na * nn * 3],
             mask: &w.mask[..na * nn],
+            // the typed channel slices with the atom range, like a shard's
+            elems: w.elems().map(|e| TileElems {
+                ielems: &e.ielems[..na],
+                jelems: &e.jelems[..na * nn],
+            }),
         };
         // incumbent: (frontier index, median secs) of the bucket's best
         let mut incumbent: Option<(usize, f64)> = None;
@@ -178,6 +195,7 @@ pub fn calibrate(opts: &SearchOptions) -> anyhow::Result<TuneOutcome> {
             let factory = EngineSpec::new(opts.twojmax)
                 .variant(variant)
                 .beta(coeffs.beta.clone())
+                .elements(coeffs.elements.clone())
                 .shared_index(idx.clone())
                 .build_factory()?
                 .factory;
@@ -324,6 +342,28 @@ mod tests {
             .filter(|p| p.bucket == ShapeBucket::Small)
             .all(|p| p.shards == 1));
         assert_eq!(out.plan.key, PlanKey::current(2));
+    }
+
+    #[test]
+    fn multi_element_calibrate_keys_the_plan_by_element_count() {
+        let opts = SearchOptions {
+            nelems: 2,
+            budget_ms: 0,
+            warmup: 0,
+            reps: 2,
+            variant_candidates: vec![Variant::Fused],
+            shard_candidates: vec![1],
+            ..SearchOptions::new(2)
+        };
+        let out = calibrate(&opts).unwrap();
+        // the plan carries the element count, so `--plan auto` on a
+        // 2-element server (same twojmax/threads) resolves it as a hit
+        assert_eq!(out.plan.key, PlanKey::current_multi(2, 2));
+        assert_ne!(out.plan.key, PlanKey::current(2));
+        for bucket in ShapeBucket::ALL {
+            assert!(out.plan.entry(bucket).shards >= 1);
+        }
+        assert!(out.frontier.iter().all(|p| p.stats.min_secs >= 0.0));
     }
 
     #[test]

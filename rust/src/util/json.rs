@@ -80,6 +80,21 @@ impl Json {
             None
         }
     }
+
+    /// Flatten a numeric array to `Vec<i32>`, rejecting non-integral or
+    /// out-of-range values (used by the wire protocol's element-type
+    /// channel, where `1.5` or `1e12` must be a parse error, not a cast).
+    pub fn as_i32_vec(&self) -> Option<Vec<i32>> {
+        let floats = self.as_f64_vec()?;
+        let mut out = Vec::with_capacity(floats.len());
+        for x in floats {
+            if x.fract() != 0.0 || x < i32::MIN as f64 || x > i32::MAX as f64 {
+                return None;
+            }
+            out.push(x as i32);
+        }
+        Some(out)
+    }
 }
 
 /// Parse error with byte offset.
@@ -326,6 +341,15 @@ mod tests {
     fn f64_vec_flattens() {
         let j = Json::parse("[[1, 2], [3, 4]]").unwrap();
         assert_eq!(j.as_f64_vec().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn i32_vec_requires_integers() {
+        assert_eq!(Json::parse("[0, 1, 2]").unwrap().as_i32_vec(), Some(vec![0, 1, 2]));
+        assert_eq!(Json::parse("[-1]").unwrap().as_i32_vec(), Some(vec![-1]));
+        assert_eq!(Json::parse("[1.5]").unwrap().as_i32_vec(), None);
+        assert_eq!(Json::parse("[1e12]").unwrap().as_i32_vec(), None);
+        assert_eq!(Json::parse("[\"a\"]").unwrap().as_i32_vec(), None);
     }
 
     #[test]

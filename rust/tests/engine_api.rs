@@ -43,9 +43,10 @@ fn repeated_compute_into_does_not_grow_output_capacity() {
             .unwrap();
         let (na, nn) = (9usize, 4usize);
         let (rij, mask) = random_tile(7, na, nn);
-        let big = TileInput { num_atoms: na, num_nbor: nn, rij: &rij, mask: &mask };
+        let big = TileInput { num_atoms: na, num_nbor: nn, rij: &rij, mask: &mask, elems: None };
         let (rij_s, mask_s) = random_tile(8, 2, nn);
-        let small = TileInput { num_atoms: 2, num_nbor: nn, rij: &rij_s, mask: &mask_s };
+        let small =
+            TileInput { num_atoms: 2, num_nbor: nn, rij: &rij_s, mask: &mask_s, elems: None };
 
         let mut out = TileOutput::default();
         engine.compute_into(&big, &mut out).unwrap(); // warmup: sizes the buffers
@@ -79,7 +80,7 @@ fn compute_shim_is_bitwise_identical_to_compute_into_ladder_wide() {
     let beta = beta_for(twojmax);
     let (na, nn) = (5usize, 4usize);
     let (rij, mask) = random_tile(31, na, nn);
-    let tile = TileInput { num_atoms: na, num_nbor: nn, rij: &rij, mask: &mask };
+    let tile = TileInput { num_atoms: na, num_nbor: nn, rij: &rij, mask: &mask, elems: None };
     for v in Variant::ladder().iter().chain(Variant::fig1()) {
         let mut engine = EngineSpec::new(twojmax)
             .variant(*v)
@@ -122,11 +123,11 @@ fn bad_shapes_are_typed_errors_not_panics() {
         let (rij, mask) = random_tile(3, 2, 3);
         let mut out = TileOutput::default();
         // rij too short for the claimed shape
-        let bad = TileInput { num_atoms: 2, num_nbor: 4, rij: &rij, mask: &mask };
+        let bad = TileInput { num_atoms: 2, num_nbor: 4, rij: &rij, mask: &mask, elems: None };
         let err = engine.compute_into(&bad, &mut out).unwrap_err();
         assert!(matches!(err, EngineError::BadShape(_)), "shards={shards}: {err:?}");
         // a well-shaped tile still computes on the same engine + buffer
-        let good = TileInput { num_atoms: 2, num_nbor: 3, rij: &rij, mask: &mask };
+        let good = TileInput { num_atoms: 2, num_nbor: 3, rij: &rij, mask: &mask, elems: None };
         engine.compute_into(&good, &mut out).unwrap();
         assert_eq!(out.ei.len(), 2);
         assert!(out.ei.iter().all(|e| e.is_finite()));

@@ -189,7 +189,8 @@ fn check_case(c: &Case) {
     }
 
     // --- engine-level: ei + dedr through the public ForceEngine API ---
-    let input = TileInput { num_atoms: c.na, num_nbor: c.nn, rij: &c.rij, mask: &c.mask };
+    let input =
+        TileInput { num_atoms: c.na, num_nbor: c.nn, rij: &c.rij, mask: &c.mask, elems: None };
     let engines: Vec<Box<dyn ForceEngine>> = vec![
         Box::new(BaselineEngine::new(
             params, idx.clone(), c.beta.clone(), Staging::Monolithic,

@@ -45,6 +45,48 @@ fn nve_conserves_energy_with_fused_engine() {
     );
 }
 
+/// Multi-element NVE: the B2 W–Be alloy with a synthetic 2-element
+/// potential conserves energy end to end — per-pair cutoffs, density
+/// weights, per-element beta blocks AND per-atom masses in the integrator
+/// must all be mutually consistent for this to hold.
+#[test]
+fn nve_conserves_energy_on_the_wbe_alloy() {
+    let twojmax = 2usize;
+    let params = SnapParams::with_twojmax(twojmax);
+    let idx = Arc::new(SnapIndex::new(twojmax));
+    let coeffs = SnapCoeffs::synthetic_multi(twojmax, idx.idxb_max, 2, 42);
+    let mut s = lattice::wbe_alloy(3);
+    let mut rng = XorShift::new(99);
+    s.seed_velocities(60.0, &mut rng);
+    let engine = Variant::Fused.build_multi(
+        params,
+        idx,
+        coeffs.beta.clone(),
+        coeffs.elements.clone(),
+    );
+    let cutoff = coeffs.elements.max_cutoff(params.rcutfac).max(params.rcut());
+    let mut sim = Simulation::new(
+        s,
+        ForceField::new(engine, 32, 32),
+        cutoff,
+        SimConfig {
+            // light Be atoms need a shorter step for the same Verlet error
+            dt: 0.0001,
+            neighbor_every: 5,
+            skin: 0.3,
+            thermo_every: 0,
+            langevin: None,
+        },
+    );
+    let stats = sim.run(80, &mut std::io::sink()).unwrap();
+    assert!(
+        stats.energy_drift_per_atom < 1e-5,
+        "alloy NVE drift {} eV/atom",
+        stats.energy_drift_per_atom
+    );
+    assert!(stats.thermo.iter().all(|t| t.e_total.is_finite()));
+}
+
 #[test]
 fn nve_trajectories_agree_across_engines() {
     // the same initial conditions must give the same trajectory regardless

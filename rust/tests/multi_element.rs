@@ -1,0 +1,589 @@
+//! Multi-element differential conformance suite.
+//!
+//! The repo's value is the bitwise-diffable engine ladder, so the
+//! multi-element path must prove two things at once:
+//!
+//! 1. **The single-element fast path is untouched** — a typed tile with
+//!    all types = 0 and the degenerate per-element table produces bytes
+//!    identical to the untyped path, across ladder ∪ fig1, serial and
+//!    sharded, and an untyped tile on a 2-element engine is byte-identical
+//!    to the single-element engine (legacy clients see nothing).
+//! 2. **The mixed-species math is right** — every ladder formulation
+//!    agrees on mixed tiles, forces match finite differences of the
+//!    energy, atom-order permutations commute bitwise, and the usual
+//!    rotation/translation invariances hold on the B2 W–Be workload.
+
+use repro::config::EngineSpec;
+use repro::coordinator::ForceField;
+use repro::md::{lattice, NeighborList};
+use repro::snap::coeff::SnapCoeffs;
+use repro::snap::engine::{EngineFactory, ForceEngine, TileElems, TileInput};
+use repro::snap::params::ElementTable;
+use repro::snap::sharded::ShardedEngine;
+use repro::snap::variants::Variant;
+use repro::snap::{SnapIndex, SnapParams};
+use repro::util::XorShift;
+use std::sync::Arc;
+
+const WBE_COEFF: &str = include_str!("fixtures/wbe.snapcoeff");
+const WBE_PARAM: &str = include_str!("fixtures/wbe.snapparam");
+
+/// A random tile plus a deterministic 2-element type assignment.
+struct TypedTile {
+    na: usize,
+    nn: usize,
+    rij: Vec<f64>,
+    mask: Vec<f64>,
+    ielems: Vec<i32>,
+    jelems: Vec<i32>,
+}
+
+impl TypedTile {
+    fn random(seed: u64, na: usize, nn: usize, nelems: i32) -> TypedTile {
+        let mut rng = XorShift::new(seed);
+        let mut rij = Vec::new();
+        let mut mask = Vec::new();
+        let mut jelems = Vec::new();
+        for row in 0..na * nn {
+            loop {
+                let v = [
+                    rng.uniform(-2.4, 2.4),
+                    rng.uniform(-2.4, 2.4),
+                    rng.uniform(-2.4, 2.4),
+                ];
+                if (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]).sqrt() > 0.4 {
+                    rij.extend_from_slice(&v);
+                    break;
+                }
+            }
+            mask.push(if rng.next_f64() > 0.25 { 1.0 } else { 0.0 });
+            jelems.push((row as i32 * 7 + 3) % nelems);
+        }
+        let ielems = (0..na).map(|a| (a as i32 * 5 + 1) % nelems).collect();
+        TypedTile { na, nn, rij, mask, ielems, jelems }
+    }
+
+    fn typed(&self) -> TileInput<'_> {
+        TileInput {
+            num_atoms: self.na,
+            num_nbor: self.nn,
+            rij: &self.rij,
+            mask: &self.mask,
+            elems: Some(TileElems { ielems: &self.ielems, jelems: &self.jelems }),
+        }
+    }
+
+    fn untyped(&self) -> TileInput<'_> {
+        TileInput {
+            num_atoms: self.na,
+            num_nbor: self.nn,
+            rij: &self.rij,
+            mask: &self.mask,
+            elems: None,
+        }
+    }
+}
+
+fn wbe_coeffs(twojmax: usize) -> SnapCoeffs {
+    SnapCoeffs::synthetic_multi(twojmax, SnapIndex::new(twojmax).idxb_max, 2, 42)
+}
+
+fn multi_factory(twojmax: usize, v: Variant, coeffs: &SnapCoeffs) -> EngineFactory {
+    let params = SnapParams::with_twojmax(twojmax);
+    let idx = Arc::new(SnapIndex::new(twojmax));
+    let beta = coeffs.beta.clone();
+    let elems = coeffs.elements.clone();
+    Arc::new(move || Ok(v.build_multi(params, idx.clone(), beta.clone(), elems.clone())))
+}
+
+/// (1a) With the degenerate table, an all-types-0 typed tile is
+/// bit-identical to the untyped tile across the whole ladder ∪ fig1 set —
+/// the multi-element machinery costs the single-element path nothing, not
+/// even an ULP.
+#[test]
+fn all_zero_types_are_bitwise_identical_to_untyped_across_the_ladder() {
+    let twojmax = 3usize;
+    let params = SnapParams::with_twojmax(twojmax);
+    let idx = Arc::new(SnapIndex::new(twojmax));
+    let beta = SnapCoeffs::synthetic(twojmax, idx.idxb_max, 42).beta;
+    let tile = TypedTile::random(11, 5, 6, 1); // nelems 1 -> all types 0
+    assert!(tile.ielems.iter().all(|&t| t == 0));
+    for v in Variant::ladder().iter().chain(Variant::fig1()) {
+        let mut eng = v.build(params, idx.clone(), beta.clone());
+        let untyped = eng.compute(&tile.untyped());
+        let typed = eng.compute(&tile.typed());
+        assert_eq!(untyped.ei, typed.ei, "{v:?}: typed all-0 ei diverges");
+        assert_eq!(untyped.dedr, typed.dedr, "{v:?}: typed all-0 dedr diverges");
+    }
+}
+
+/// (1b) Same guarantee under the sharded wrapper (the channel is sliced
+/// per shard), including an uneven last shard.
+#[test]
+fn all_zero_types_are_bitwise_identical_under_the_sharded_wrapper() {
+    let twojmax = 2usize;
+    let params = SnapParams::with_twojmax(twojmax);
+    let idx = Arc::new(SnapIndex::new(twojmax));
+    let beta = SnapCoeffs::synthetic(twojmax, idx.idxb_max, 42).beta;
+    let factory: EngineFactory = {
+        let idx = idx.clone();
+        let beta = beta.clone();
+        Arc::new(move || Ok(Variant::Fused.build(params, idx.clone(), beta.clone())))
+    };
+    let tile = TypedTile::random(13, 7, 5, 1);
+    let mut serial = factory().unwrap();
+    let want = serial.compute(&tile.untyped());
+    for shards in [2usize, 3] {
+        let mut eng = ShardedEngine::new(&factory, shards).unwrap();
+        let typed = eng.compute(&tile.typed());
+        let untyped = eng.compute(&tile.untyped());
+        assert_eq!(want.ei, typed.ei, "shards={shards}: typed ei diverges");
+        assert_eq!(want.dedr, typed.dedr, "shards={shards}: typed dedr diverges");
+        assert_eq!(want.ei, untyped.ei, "shards={shards}: untyped ei diverges");
+        assert_eq!(want.dedr, untyped.dedr, "shards={shards}: untyped dedr diverges");
+    }
+}
+
+/// (1c) An *untyped* tile on a 2-element engine resolves to element 0 and
+/// is byte-identical to the single-element engine built from element 0's
+/// block — the wire-level "legacy clients keep byte-identical replies"
+/// guarantee, at the engine layer.
+#[test]
+fn untyped_tiles_on_a_two_element_engine_match_the_single_element_engine() {
+    let twojmax = 2usize;
+    let params = SnapParams::with_twojmax(twojmax);
+    let idx = Arc::new(SnapIndex::new(twojmax));
+    let single = SnapCoeffs::synthetic(twojmax, idx.idxb_max, 42);
+    let multi = wbe_coeffs(twojmax);
+    assert_eq!(multi.beta_block(0), &single.beta[..]);
+    let tile = TypedTile::random(17, 4, 5, 1);
+    for v in [Variant::V0Baseline, Variant::V7, Variant::Fused] {
+        let mut a = v.build(params, idx.clone(), single.beta.clone());
+        let mut b = v.build_multi(
+            params,
+            idx.clone(),
+            multi.beta.clone(),
+            multi.elements.clone(),
+        );
+        let wa = a.compute(&tile.untyped());
+        let wb = b.compute(&tile.untyped());
+        assert_eq!(wa.ei, wb.ei, "{v:?}: multi-engine untyped ei diverges");
+        assert_eq!(wa.dedr, wb.dedr, "{v:?}: multi-engine untyped dedr diverges");
+    }
+}
+
+/// (2a) Every ladder formulation — materialized Zlist baseline, the
+/// adjoint V-ladder, the fused section-VI kernels, AoSoA — agrees on a
+/// genuinely mixed-species tile: per-pair cutoffs, density weights and
+/// per-element beta blocks are implemented identically everywhere.
+#[test]
+fn every_ladder_step_agrees_on_a_mixed_species_tile() {
+    let twojmax = 3usize;
+    let params = SnapParams::with_twojmax(twojmax);
+    let idx = Arc::new(SnapIndex::new(twojmax));
+    let coeffs = wbe_coeffs(twojmax);
+    let tile = TypedTile::random(19, 4, 6, 2);
+    assert!(tile.ielems.iter().any(|&t| t == 1), "tile must mix species");
+    let mut reference: Option<repro::snap::TileOutput> = None;
+    for v in Variant::ladder().iter().chain(Variant::fig1()) {
+        let mut eng =
+            v.build_multi(params, idx.clone(), coeffs.beta.clone(), coeffs.elements.clone());
+        let out = eng.compute(&tile.typed());
+        if let Some(want) = &reference {
+            for (i, (a, b)) in want.ei.iter().zip(out.ei.iter()).enumerate() {
+                assert!((a - b).abs() < 1e-9 * (1.0 + a.abs()), "{v:?} ei[{i}]: {a} vs {b}");
+            }
+            for (i, (a, b)) in want.dedr.iter().zip(out.dedr.iter()).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-9 * (1.0 + a.abs()),
+                    "{v:?} dedr[{i}]: {a} vs {b}"
+                );
+            }
+        } else {
+            reference = Some(out);
+        }
+    }
+}
+
+/// (2b) Mixed-tile forces are the exact derivative of the mixed-tile
+/// energy — the strongest check that the weights and per-pair cutoffs
+/// enter the U accumulation and its adjoint consistently.
+#[test]
+fn mixed_species_forces_match_finite_difference_of_energy() {
+    let twojmax = 3usize;
+    let params = SnapParams::with_twojmax(twojmax);
+    let idx = Arc::new(SnapIndex::new(twojmax));
+    let coeffs = wbe_coeffs(twojmax);
+    let mut tile = TypedTile::random(23, 2, 5, 2);
+    let mut eng = Variant::V0Baseline.build_multi(
+        params,
+        idx.clone(),
+        coeffs.beta.clone(),
+        coeffs.elements.clone(),
+    );
+    let out = eng.compute(&tile.typed());
+    let h = 1e-6;
+    for probe in [(0usize, 1usize, 0usize), (1, 3, 2), (0, 4, 1), (1, 0, 0)] {
+        let (a, n, k) = probe;
+        if tile.mask[a * tile.nn + n] == 0.0 {
+            continue;
+        }
+        let o = (a * tile.nn + n) * 3 + k;
+        let orig = tile.rij[o];
+        tile.rij[o] = orig + h;
+        let ep: f64 = eng.compute(&tile.typed()).ei.iter().sum();
+        tile.rij[o] = orig - h;
+        let em: f64 = eng.compute(&tile.typed()).ei.iter().sum();
+        tile.rij[o] = orig;
+        let fd = (ep - em) / (2.0 * h);
+        let got = out.dedr[o];
+        assert!(
+            (fd - got).abs() < 1e-6 * (1.0 + got.abs()),
+            "probe {probe:?}: fd={fd} got={got}"
+        );
+    }
+}
+
+/// (2c) Permuting the atom order of a 2-element tile permutes the outputs
+/// bitwise: per-atom arithmetic is order-independent in every engine,
+/// including AoSoA lane packing and sharded atom ranges.
+#[test]
+fn two_element_tile_is_permutation_consistent() {
+    let twojmax = 2usize;
+    let params = SnapParams::with_twojmax(twojmax);
+    let idx = Arc::new(SnapIndex::new(twojmax));
+    let coeffs = wbe_coeffs(twojmax);
+    let tile = TypedTile::random(29, 5, 4, 2);
+    // a fixed permutation of the atom rows
+    let perm: [usize; 5] = [3, 0, 4, 1, 2];
+    let mut permuted = TypedTile {
+        na: tile.na,
+        nn: tile.nn,
+        rij: vec![0.0; tile.rij.len()],
+        mask: vec![0.0; tile.mask.len()],
+        ielems: vec![0; tile.na],
+        jelems: vec![0; tile.na * tile.nn],
+    };
+    for (dst, &src) in perm.iter().enumerate() {
+        let nn = tile.nn;
+        permuted.rij[dst * nn * 3..(dst + 1) * nn * 3]
+            .copy_from_slice(&tile.rij[src * nn * 3..(src + 1) * nn * 3]);
+        permuted.mask[dst * nn..(dst + 1) * nn]
+            .copy_from_slice(&tile.mask[src * nn..(src + 1) * nn]);
+        permuted.jelems[dst * nn..(dst + 1) * nn]
+            .copy_from_slice(&tile.jelems[src * nn..(src + 1) * nn]);
+        permuted.ielems[dst] = tile.ielems[src];
+    }
+    let engines: Vec<Box<dyn ForceEngine>> = vec![
+        Variant::V0Baseline.build_multi(
+            params,
+            idx.clone(),
+            coeffs.beta.clone(),
+            coeffs.elements.clone(),
+        ),
+        Variant::V5.build_multi(params, idx.clone(), coeffs.beta.clone(), coeffs.elements.clone()),
+        Variant::Fused.build_multi(
+            params,
+            idx.clone(),
+            coeffs.beta.clone(),
+            coeffs.elements.clone(),
+        ),
+        Variant::FusedAosoa.build_multi(
+            params,
+            idx.clone(),
+            coeffs.beta.clone(),
+            coeffs.elements.clone(),
+        ),
+        Box::new(ShardedEngine::new(&multi_factory(twojmax, Variant::Fused, &coeffs), 3).unwrap()),
+    ];
+    for mut eng in engines {
+        let base = eng.compute(&tile.typed());
+        let perm_out = eng.compute(&permuted.typed());
+        let name = eng.name().to_string();
+        for (dst, &src) in perm.iter().enumerate() {
+            assert_eq!(base.ei[src], perm_out.ei[dst], "{name}: ei not permutation-consistent");
+            let nn = tile.nn;
+            assert_eq!(
+                &base.dedr[src * nn * 3..(src + 1) * nn * 3],
+                &perm_out.dedr[dst * nn * 3..(dst + 1) * nn * 3],
+                "{name}: dedr not permutation-consistent"
+            );
+        }
+    }
+}
+
+/// (2d) Sharded multi-element dispatch is bit-identical to serial — the
+/// types channel slices exactly like rij/mask.
+#[test]
+fn sharded_multi_element_is_bitwise_identical_to_serial() {
+    let twojmax = 2usize;
+    let coeffs = wbe_coeffs(twojmax);
+    let factory = multi_factory(twojmax, Variant::Fused, &coeffs);
+    let mut serial = factory().unwrap();
+    for (seed, na, nn) in [(31u64, 13usize, 5usize), (37, 6, 4), (41, 2, 3)] {
+        let tile = TypedTile::random(seed, na, nn, 2);
+        let want = serial.compute(&tile.typed());
+        for shards in [2usize, 3, 7] {
+            let mut eng = ShardedEngine::new(&factory, shards).unwrap();
+            let got = eng.compute(&tile.typed());
+            assert_eq!(want.ei, got.ei, "na={na} shards={shards}: ei");
+            assert_eq!(want.dedr, got.dedr, "na={na} shards={shards}: dedr");
+        }
+    }
+}
+
+/// (2e) Rotation invariance on a mixed tile: the bispectrum is rotation
+/// invariant per element pair, so energies survive a rigid rotation of
+/// every displacement even with per-pair cutoffs and weights in play.
+#[test]
+fn mixed_species_energy_is_rotation_invariant() {
+    let twojmax = 3usize;
+    let params = SnapParams::with_twojmax(twojmax);
+    let idx = Arc::new(SnapIndex::new(twojmax));
+    let coeffs = wbe_coeffs(twojmax);
+    for seed in 0..6u64 {
+        let mut rng = XorShift::new(8000 + seed);
+        let tile = TypedTile::random(43 + seed, 3, 6, 2);
+        // random rotation (axis-angle, Rodrigues)
+        let axis = {
+            let v = [rng.normal(), rng.normal(), rng.normal()];
+            let n = (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]).sqrt();
+            [v[0] / n, v[1] / n, v[2] / n]
+        };
+        let ang = rng.uniform(0.3, 2.8);
+        let (c, s) = (ang.cos(), ang.sin());
+        let rot = |v: [f64; 3]| -> [f64; 3] {
+            let dot = axis[0] * v[0] + axis[1] * v[1] + axis[2] * v[2];
+            let cross = [
+                axis[1] * v[2] - axis[2] * v[1],
+                axis[2] * v[0] - axis[0] * v[2],
+                axis[0] * v[1] - axis[1] * v[0],
+            ];
+            [
+                v[0] * c + cross[0] * s + axis[0] * dot * (1.0 - c),
+                v[1] * c + cross[1] * s + axis[1] * dot * (1.0 - c),
+                v[2] * c + cross[2] * s + axis[2] * dot * (1.0 - c),
+            ]
+        };
+        let mut rotated = TypedTile {
+            na: tile.na,
+            nn: tile.nn,
+            rij: vec![0.0; tile.rij.len()],
+            mask: tile.mask.clone(),
+            ielems: tile.ielems.clone(),
+            jelems: tile.jelems.clone(),
+        };
+        for i in 0..tile.rij.len() / 3 {
+            let v = rot([tile.rij[3 * i], tile.rij[3 * i + 1], tile.rij[3 * i + 2]]);
+            rotated.rij[3 * i..3 * i + 3].copy_from_slice(&v);
+        }
+        let mut eng = Variant::Fused.build_multi(
+            params,
+            idx.clone(),
+            coeffs.beta.clone(),
+            coeffs.elements.clone(),
+        );
+        let a = eng.compute(&tile.typed());
+        let b = eng.compute(&rotated.typed());
+        for (x, y) in a.ei.iter().zip(b.ei.iter()) {
+            assert!(
+                (x - y).abs() < 1e-8 * (1.0 + x.abs()),
+                "seed {seed}: E {x} vs rotated {y}"
+            );
+        }
+    }
+}
+
+/// (2f) End to end on the B2 W–Be workload through `ForceField`: forces
+/// balance (translation invariance of the total energy), everything is
+/// finite, and rigidly translating the whole cell (with periodic
+/// wrapping) leaves per-atom energies and forces unchanged.
+#[test]
+fn wbe_alloy_forces_balance_and_are_translation_invariant() {
+    let coeffs = SnapCoeffs::synthetic_multi(2, SnapIndex::new(2).idxb_max, 2, 42);
+    let params = coeffs.params;
+    let cutoff = coeffs.elements.max_cutoff(params.rcutfac).max(params.rcut());
+    let build_field = || {
+        EngineSpec::new(2)
+            .engine("fused")
+            .beta(coeffs.beta.clone())
+            .elements(coeffs.elements.clone())
+            .build()
+            .unwrap()
+    };
+
+    let mut s = lattice::wbe_alloy(3);
+    let mut rng = XorShift::new(51);
+    s.jitter(0.08, &mut rng);
+    s.wrap_all();
+    let nl = NeighborList::build_cells(&s, cutoff);
+    let mut ff = ForceField::new(build_field(), 16, nl.max_count().max(1));
+    let r = ff.compute(&s, &nl).unwrap();
+    assert!(r.forces.iter().all(|f| f.is_finite()));
+    assert!(r.ei.iter().all(|e| e.is_finite()));
+    for k in 0..3 {
+        let total: f64 = (0..s.natoms()).map(|i| r.forces[3 * i + k]).sum();
+        assert!(total.abs() < 1e-8, "net force axis {k}: {total}");
+    }
+    // mixed species genuinely differ: W and Be sites see different energies
+    let e_w = r.ei[0];
+    let e_be = r.ei[1];
+    assert!((e_w - e_be).abs() > 1e-12, "species are indistinguishable: {e_w}");
+
+    // rigid translation + wrap: identical physics
+    let mut s2 = s.clone();
+    for i in 0..s2.natoms() {
+        s2.pos[3 * i] += 1.7;
+        s2.pos[3 * i + 1] -= 0.9;
+        s2.pos[3 * i + 2] += 2.3;
+    }
+    s2.wrap_all();
+    let nl2 = NeighborList::build_cells(&s2, cutoff);
+    let mut ff2 = ForceField::new(build_field(), 16, nl2.max_count().max(1));
+    let r2 = ff2.compute(&s2, &nl2).unwrap();
+    for i in 0..s.natoms() {
+        assert!(
+            (r.ei[i] - r2.ei[i]).abs() < 1e-9 * (1.0 + r.ei[i].abs()),
+            "atom {i}: ei {} vs translated {}",
+            r.ei[i],
+            r2.ei[i]
+        );
+        for k in 0..3 {
+            let (a, b) = (r.forces[3 * i + k], r2.forces[3 * i + k]);
+            assert!(
+                (a - b).abs() < 1e-8 * (1.0 + a.abs()),
+                "atom {i} axis {k}: force {a} vs translated {b}"
+            );
+        }
+    }
+}
+
+/// Golden fixture: the committed 2-element `.snapcoeff`/`.snapparam` pair
+/// parses to the expected tables and block counts, and a parsed fixture
+/// drives a real mixed-species engine.
+#[test]
+fn wbe_fixture_parses_and_drives_an_engine() {
+    let params = SnapCoeffs::parse_snapparam(WBE_PARAM).unwrap();
+    assert_eq!(params.twojmax, 2);
+    assert!((params.rcutfac - 4.73442).abs() < 1e-12);
+    let coeffs = SnapCoeffs::parse_snapcoeff(WBE_COEFF, params).unwrap();
+    assert_eq!(coeffs.nelems(), 2);
+    assert_eq!(coeffs.elements.symbols, vec!["W", "Be"]);
+    assert_eq!(coeffs.elements.radii, vec![0.5, 0.417932]);
+    assert_eq!(coeffs.elements.weights, vec![1.0, 0.959049]);
+    assert_eq!(coeffs.coeff0, vec![0.0, 0.05]);
+    // 5 bispectrum components per element at 2J=2
+    let idx = SnapIndex::new(params.twojmax);
+    assert_eq!(coeffs.ncoeff_per_elem(), idx.idxb_max);
+    assert_eq!(coeffs.beta.len(), 2 * idx.idxb_max);
+    assert_eq!(coeffs.beta_block(0), &[0.1, -0.05, 0.02, 0.01, -0.005]);
+    assert_eq!(coeffs.beta_block(1), &[-0.08, 0.03, 0.015, -0.01, 0.002]);
+    // round-trip through the serializer
+    let back = SnapCoeffs::parse_snapcoeff(&coeffs.to_snapcoeff(), params).unwrap();
+    assert_eq!(back.elements, coeffs.elements);
+    assert_eq!(back.beta, coeffs.beta);
+    // and the parsed fixture actually computes
+    let mut eng = Variant::Fused.build_multi(
+        params,
+        Arc::new(idx),
+        coeffs.beta.clone(),
+        coeffs.elements.clone(),
+    );
+    let tile = TypedTile::random(53, 3, 4, 2);
+    let out = eng.compute(&tile.typed());
+    assert!(out.ei.iter().all(|e| e.is_finite()));
+    assert!(out.dedr.iter().all(|d| d.is_finite()));
+}
+
+/// Fixture rejection paths: short blocks, trailing garbage and malformed
+/// element lines fail with messages that name the offender.
+#[test]
+fn wbe_fixture_mutations_are_rejected_with_useful_errors() {
+    let params = SnapCoeffs::parse_snapparam(WBE_PARAM).unwrap();
+    // drop the last coefficient: the Be block comes up short
+    let mut lines: Vec<&str> = WBE_COEFF.trim_end().lines().collect();
+    lines.pop();
+    let short = lines.join("\n");
+    let err = format!("{:#}", SnapCoeffs::parse_snapcoeff(&short, params).unwrap_err());
+    assert!(err.contains("Be"), "{err}");
+    assert!(err.contains("expected 6 coefficients"), "{err}");
+    // append garbage after the declared blocks
+    let trailing = format!("{WBE_COEFF}0.123\n");
+    let err = format!("{:#}", SnapCoeffs::parse_snapcoeff(&trailing, params).unwrap_err());
+    assert!(err.contains("trailing garbage"), "{err}");
+    // unknown snapparam keys are hard errors listing the valid keys
+    let err = format!(
+        "{:#}",
+        SnapCoeffs::parse_snapparam(&format!("{WBE_PARAM}cutoff 3.0\n")).unwrap_err()
+    );
+    assert!(err.contains("cutoff"), "{err}");
+    assert!(err.contains("rcutfac") && err.contains("twojmax"), "{err}");
+    // a typed engine rejects out-of-range types with a BadShape error
+    let coeffs = SnapCoeffs::parse_snapcoeff(WBE_COEFF, params).unwrap();
+    let mut eng = Variant::Fused.build_multi(
+        params,
+        Arc::new(SnapIndex::new(params.twojmax)),
+        coeffs.beta.clone(),
+        coeffs.elements.clone(),
+    );
+    let mut tile = TypedTile::random(59, 2, 3, 2);
+    tile.jelems[1] = 7; // only elements 0/1 exist
+    let mut out = repro::snap::TileOutput::default();
+    let err = eng.compute_into(&tile.typed(), &mut out).unwrap_err();
+    assert!(
+        matches!(err, repro::snap::EngineError::BadShape(_)),
+        "{err:?}"
+    );
+    assert!(err.to_string().contains("out of range"), "{err}");
+    // the engine stays usable afterwards
+    tile.jelems[1] = 1;
+    eng.compute_into(&tile.typed(), &mut out).unwrap();
+    assert!(out.ei.iter().all(|e| e.is_finite()));
+}
+
+/// The ElementTable is what makes mixed pairs physically different:
+/// shrinking Be's radius far enough switches the W–Be pair off entirely
+/// while W–W keeps its legacy cutoff.
+#[test]
+fn per_pair_cutoffs_actually_gate_mixed_pairs() {
+    let twojmax = 2usize;
+    let params = SnapParams::with_twojmax(twojmax);
+    let idx = Arc::new(SnapIndex::new(twojmax));
+    let coeffs = wbe_coeffs(twojmax);
+    // one W central atom with one neighbor at r = 3.0 A; W-W cutoff is
+    // 4.73 A (in range), but with a tiny fictitious second-element radius
+    // the W-X pair cutoff drops below r
+    let rij = vec![3.0, 0.0, 0.0];
+    let mask = vec![1.0];
+    let ielems = vec![0i32];
+    let for_jelem = |jelem: i32, elements: ElementTable| {
+        let mut eng = Variant::Fused.build_multi(
+            params,
+            idx.clone(),
+            coeffs.beta.clone(),
+            elements,
+        );
+        let jelems = vec![jelem];
+        let t = TileInput {
+            num_atoms: 1,
+            num_nbor: 1,
+            rij: &rij,
+            mask: &mask,
+            elems: Some(TileElems { ielems: &ielems, jelems: &jelems }),
+        };
+        eng.compute(&t)
+    };
+    let tiny = ElementTable::new(
+        vec!["W".into(), "X".into()],
+        vec![0.5, 0.05], // W-X cutoff = 4.73442 * 0.55 = 2.60 A < 3.0 A
+        vec![1.0, 1.0],
+    )
+    .unwrap();
+    let in_range = for_jelem(0, tiny.clone());
+    let gated = for_jelem(1, tiny);
+    assert!(in_range.ei[0].abs() > 1e-12, "W-W pair must contribute");
+    // outside its pair cutoff the neighbor is invisible: the energy is the
+    // isolated-atom (wself-only) value and dedr vanishes
+    assert!(gated.dedr.iter().all(|&d| d == 0.0), "gated pair must not pull");
+    assert!((gated.ei[0] - in_range.ei[0]).abs() > 1e-12);
+}

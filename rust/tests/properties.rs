@@ -85,7 +85,7 @@ fn prop_engines_agree_on_random_geometry() {
         let mut rng = XorShift::new(2000 + seed);
         let p = SnapParams::with_twojmax(3);
         let (rij, mask) = random_tile(&mut rng, &p, 3, 7);
-        let inp = TileInput { num_atoms: 3, num_nbor: 7, rij: &rij, mask: &mask };
+        let inp = TileInput { num_atoms: 3, num_nbor: 7, rij: &rij, mask: &mask, elems: None };
         let mut base = engine(Variant::V0Baseline, 3, 42);
         let want = base.compute(&inp);
         for v in [Variant::V2, Variant::V4, Variant::V6, Variant::Fused, Variant::FusedAosoa] {
@@ -108,7 +108,7 @@ fn prop_padding_rows_are_inert() {
         let mut rng = XorShift::new(3000 + seed);
         let p = SnapParams::with_twojmax(3);
         let (rij, mask) = random_tile(&mut rng, &p, 2, 5);
-        let inp = TileInput { num_atoms: 2, num_nbor: 5, rij: &rij, mask: &mask };
+        let inp = TileInput { num_atoms: 2, num_nbor: 5, rij: &rij, mask: &mask, elems: None };
         let mut e = engine(Variant::Fused, 3, 42);
         let want = e.compute(&inp);
         // append 3 garbage masked lanes per atom
@@ -122,7 +122,7 @@ fn prop_padding_rows_are_inert() {
             mask2.extend_from_slice(&mask[a * 5..(a + 1) * 5]);
             mask2.extend_from_slice(&[0.0, 0.0, 0.0]);
         }
-        let inp2 = TileInput { num_atoms: 2, num_nbor: 8, rij: &rij2, mask: &mask2 };
+        let inp2 = TileInput { num_atoms: 2, num_nbor: 8, rij: &rij2, mask: &mask2, elems: None };
         let got = e.compute(&inp2);
         for a in 0..2 {
             assert!((want.ei[a] - got.ei[a]).abs() < 1e-10, "seed {seed}");
@@ -179,12 +179,19 @@ fn prop_rotation_invariance_of_energy() {
             rij_rot[3 * i..3 * i + 3].copy_from_slice(&v);
         }
         let mut e = engine(Variant::Fused, 4, 42);
-        let a = e.compute(&TileInput { num_atoms: 2, num_nbor: 6, rij: &rij, mask: &mask });
+        let a = e.compute(&TileInput {
+            num_atoms: 2,
+            num_nbor: 6,
+            rij: &rij,
+            mask: &mask,
+            elems: None,
+        });
         let b = e.compute(&TileInput {
             num_atoms: 2,
             num_nbor: 6,
             rij: &rij_rot,
             mask: &mask,
+            elems: None,
         });
         for (x, y) in a.ei.iter().zip(b.ei.iter()) {
             assert!(
@@ -221,12 +228,24 @@ fn prop_energy_extensive_under_duplication() {
         let p = SnapParams::with_twojmax(3);
         let (rij, mask) = random_tile(&mut rng, &p, 1, 6);
         let mut e = engine(Variant::Fused, 3, 42);
-        let single = e.compute(&TileInput { num_atoms: 1, num_nbor: 6, rij: &rij, mask: &mask });
+        let single = e.compute(&TileInput {
+            num_atoms: 1,
+            num_nbor: 6,
+            rij: &rij,
+            mask: &mask,
+            elems: None,
+        });
         let mut rij2 = rij.clone();
         rij2.extend_from_slice(&rij);
         let mut mask2 = mask.clone();
         mask2.extend_from_slice(&mask);
-        let double = e.compute(&TileInput { num_atoms: 2, num_nbor: 6, rij: &rij2, mask: &mask2 });
+        let double = e.compute(&TileInput {
+            num_atoms: 2,
+            num_nbor: 6,
+            rij: &rij2,
+            mask: &mask2,
+            elems: None,
+        });
         let want = 2.0 * single.ei[0];
         let got = double.ei[0] + double.ei[1];
         assert!((want - got).abs() < 1e-10 * (1.0 + want.abs()), "seed {seed}");

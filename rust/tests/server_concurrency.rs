@@ -587,6 +587,194 @@ fn graceful_shutdown_reports_error_to_attached_sessions() {
     );
 }
 
+/// A deterministic typed request: `request_line`'s geometry plus an
+/// `ielems`/`jelems` channel.  With all types 0 this must be byte-identical
+/// to the untyped request on a multi-element server.
+fn typed_request_line(seed: u64, na: usize, nn: usize, types_of: impl Fn(usize) -> i32) -> String {
+    let base = request_line(seed, na, nn);
+    let ielems: Vec<String> = (0..na).map(|a| types_of(a).to_string()).collect();
+    let jelems: Vec<String> = (0..na * nn).map(|r| types_of(r).to_string()).collect();
+    format!(
+        "{}, \"ielems\": [{}], \"jelems\": [{}]}}",
+        base.trim_end().trim_end_matches('}'),
+        ielems.join(","),
+        jelems.join(",")
+    )
+}
+
+/// Factory for a 2-element (W–Be) server: element 0 is the degenerate
+/// tungsten entry, so all-types-0 traffic must match the single-element
+/// server byte for byte.
+fn multi_factory(twojmax: usize) -> EngineFactory {
+    let idx = SnapIndex::new(twojmax);
+    let coeffs = SnapCoeffs::synthetic_multi(twojmax, idx.idxb_max, 2, 42);
+    EngineSpec::new(twojmax)
+        .engine("fused")
+        .beta(coeffs.beta)
+        .elements(coeffs.elements.clone())
+        .build_factory()
+        .unwrap()
+        .factory
+}
+
+/// Wire-protocol multi-element contract: (a) legacy untyped requests to a
+/// multi-element server get replies byte-identical to the single-element
+/// server's (types omitted = element 0); (b) all-types-0 typed requests
+/// are byte-identical too; (c) genuinely mixed types change the answer.
+#[test]
+fn typed_tiles_roundtrip_and_legacy_replies_stay_byte_identical() {
+    let untyped = request_line(321, 3, 4);
+    let zero_typed = typed_request_line(321, 3, 4, |_| 0);
+    let mixed_typed = typed_request_line(321, 3, 4, |r| (r % 2) as i32);
+
+    // ground truth from the classic single-element server
+    let single = TestServer::start(sequential_opts(), "fused", 2);
+    let mut client = Client::connect(single.addr);
+    let want = client.roundtrip(&untyped);
+    drop(client);
+    single.finish();
+    assert!(want.contains("\"ok\": true"), "{want}");
+
+    let srv = TestServer::start_with_factory(sequential_opts(), multi_factory(2));
+    let mut client = Client::connect(srv.addr);
+    assert_eq!(
+        client.roundtrip(&untyped),
+        want,
+        "legacy clients must get byte-identical replies from a multi-element server"
+    );
+    assert_eq!(
+        client.roundtrip(&zero_typed),
+        want,
+        "all-types-0 typed tiles must be byte-identical to untyped"
+    );
+    let mixed = client.roundtrip(&mixed_typed);
+    assert!(mixed.contains("\"ok\": true"), "{mixed}");
+    assert_ne!(mixed, want, "mixed species must change the physics");
+    drop(client);
+    srv.finish();
+}
+
+/// Typed-request validation over the wire: wrong-length channels and
+/// half-provided channels are structured errors; out-of-range types ride
+/// the engine's BadShape path, bump `engine_errors`, and the worker
+/// survives to serve the next request.
+#[test]
+fn typed_request_validation_is_structured_and_survivable() {
+    let srv = TestServer::start_with_factory(
+        ServeOptions { workers: 1, ..sequential_opts() },
+        multi_factory(2),
+    );
+    let mut client = Client::connect(srv.addr);
+
+    // wrong-length jelems: rejected at parse with a shape message
+    let wrong_len =
+        "{\"num_atoms\": 1, \"num_nbor\": 2, \"rij\": [1.5,0,0, 0,1.5,0], \"mask\": [1,1], \
+         \"ielems\": [0], \"jelems\": [0]}";
+    let reply = client.roundtrip(wrong_len);
+    let parsed = Json::parse(&reply).expect("reply is valid JSON");
+    assert_eq!(parsed.get("ok"), Some(&Json::Bool(false)), "{reply}");
+    assert!(
+        parsed.get("error").and_then(Json::as_str).unwrap().contains("jelems"),
+        "{reply}"
+    );
+
+    // ielems without jelems: the channel is all-or-nothing
+    let half = "{\"num_atoms\": 1, \"num_nbor\": 2, \"rij\": [1.5,0,0, 0,1.5,0], \
+                \"mask\": [1,1], \"ielems\": [0]}";
+    let reply = client.roundtrip(half);
+    assert!(reply.contains("\"ok\": false"), "{reply}");
+    assert!(reply.contains("together"), "{reply}");
+
+    // non-integer types are a parse error, not a silent cast
+    let fractional = "{\"num_atoms\": 1, \"num_nbor\": 2, \"rij\": [1.5,0,0, 0,1.5,0], \
+                      \"mask\": [1,1], \"ielems\": [0.5], \"jelems\": [0, 0]}";
+    let reply = client.roundtrip(fractional);
+    assert!(reply.contains("\"ok\": false"), "{reply}");
+    assert!(reply.contains("integer"), "{reply}");
+
+    // out-of-range type: reaches the engine, comes back as BadShape,
+    // bumps engine_errors
+    let out_of_range =
+        "{\"num_atoms\": 1, \"num_nbor\": 2, \"rij\": [1.5,0,0, 0,1.5,0], \"mask\": [1,1], \
+         \"ielems\": [0], \"jelems\": [0, 5]}";
+    let reply = client.roundtrip(out_of_range);
+    let parsed = Json::parse(&reply).expect("reply is valid JSON");
+    assert_eq!(parsed.get("ok"), Some(&Json::Bool(false)), "{reply}");
+    assert!(
+        parsed.get("error").and_then(Json::as_str).unwrap().contains("out of range"),
+        "{reply}"
+    );
+
+    // the single worker survived: a good typed request still computes
+    let good = typed_request_line(77, 1, 4, |r| (r % 2) as i32);
+    let reply = client.roundtrip(&good);
+    assert!(reply.contains("\"ok\": true"), "worker died: {reply}");
+
+    let stats_reply = client.roundtrip("{\"cmd\": \"stats\"}");
+    let j = Json::parse(&stats_reply).expect("stats reply parses");
+    let s = j.get("stats").expect("stats object");
+    let get = |k: &str| s.get(k).and_then(Json::as_usize).unwrap();
+    assert_eq!(
+        get("engine_errors"),
+        1,
+        "only the out-of-range type is an engine error: {stats_reply}"
+    );
+    assert_eq!(get("replies_err"), 4, "{stats_reply}");
+    assert_eq!(get("replies_ok"), 1, "{stats_reply}");
+    drop(client);
+    srv.finish();
+}
+
+/// The coalescer never merges typed with untyped traffic: concurrent
+/// mixed-profile clients with a wide-open merge window all get replies
+/// byte-identical to solo serving (a wrong merge would either retype a
+/// tile or panic the batch, both observable).
+#[test]
+fn coalescer_never_merges_mismatched_species_profiles() {
+    let untyped_req = request_line(611, 1, 4);
+    let typed_req = typed_request_line(612, 1, 4, |r| (r % 2) as i32);
+
+    // solo ground truth
+    let solo = TestServer::start_with_factory(sequential_opts(), multi_factory(2));
+    let mut client = Client::connect(solo.addr);
+    let want_untyped = client.roundtrip(&untyped_req);
+    let want_typed = client.roundtrip(&typed_req);
+    drop(client);
+    solo.finish();
+    assert!(want_typed.contains("\"ok\": true"), "{want_typed}");
+
+    // generous window + barrier: maximal merge pressure across profiles
+    let opts = ServeOptions {
+        workers: 2,
+        batch_window: std::time::Duration::from_millis(40),
+        queue_depth: 64,
+        max_batch_atoms: 32,
+        ..ServeOptions::default()
+    };
+    let srv = TestServer::start_with_factory(opts, multi_factory(2));
+    let addr = srv.addr;
+    let barrier = Arc::new(Barrier::new(6));
+    let handles: Vec<_> = (0..6)
+        .map(|c| {
+            let barrier = barrier.clone();
+            let req = if c % 2 == 0 { untyped_req.clone() } else { typed_req.clone() };
+            let want = if c % 2 == 0 { want_untyped.clone() } else { want_typed.clone() };
+            std::thread::spawn(move || {
+                let mut client = Client::connect(addr);
+                barrier.wait();
+                for k in 0..4 {
+                    let reply = client.roundtrip(&req);
+                    assert_eq!(reply, want, "client {c} rep {k}: profile-mixed merge detected");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    srv.finish();
+}
+
 /// 4 workers + 8 clients must beat 1 worker by >= 2x on a multi-core
 /// machine.  Opt-in (like REPRO_HEAVY_TESTS) because CI containers and
 /// laptops under load make wall-clock assertions flaky.

@@ -51,7 +51,7 @@ fn sharded_engine_is_reusable_across_tile_sizes() {
     let mut sharded = ShardedEngine::new(&factory, 3).unwrap();
     for (seed, na, nn) in [(1u64, 9usize, 4usize), (2, 1, 4), (3, 12, 4), (4, 2, 6)] {
         let (rij, mask) = tile(seed, na, nn);
-        let inp = TileInput { num_atoms: na, num_nbor: nn, rij: &rij, mask: &mask };
+        let inp = TileInput { num_atoms: na, num_nbor: nn, rij: &rij, mask: &mask, elems: None };
         let want = serial.compute(&inp);
         let got = sharded.compute(&inp);
         assert_eq!(want.ei, got.ei, "na={na}");

@@ -33,7 +33,11 @@ fn plan_driven_engines_match_serial_reference_bitwise() {
     let twojmax = 2usize;
     let idx = SnapIndex::new(twojmax);
     let coeffs = SnapCoeffs::synthetic(twojmax, idx.idxb_max, 9);
-    let key = PlanKey { twojmax, threads: repro::util::parallel::num_threads() };
+    let key = PlanKey {
+        twojmax,
+        threads: repro::util::parallel::num_threads(),
+        nelems: 1,
+    };
     let mut plan = TunedPlan::default_plan(key);
     plan.set_entry(
         ShapeBucket::Small,
@@ -73,7 +77,7 @@ fn plan_driven_engines_match_serial_reference_bitwise() {
     for (bucket, na) in cases {
         let nn = 5usize;
         let (rij, mask) = random_tile(100 + na as u64, na, nn);
-        let tile = TileInput { num_atoms: na, num_nbor: nn, rij: &rij, mask: &mask };
+        let tile = TileInput { num_atoms: na, num_nbor: nn, rij: &rij, mask: &mask, elems: None };
         let entry = plan.entry(bucket);
         let mut serial = entry.variant.build(params, idx.clone(), coeffs.beta.clone());
         let want = serial.compute(&tile);
