@@ -6,25 +6,46 @@
 //! ```bash
 //! cargo run --release -- serve --port 7878 --engine fused --workers 4 &
 //! cargo run --release --example force_client -- 127.0.0.1:7878 \
-//!     --conns 8 --requests 200 --out BENCH_serve.json
+//!     --conns 8 --requests 200 --wire binary --out BENCH_serve.json
 //! ```
 //!
-//! Requests are deterministic (seeded per connection) single-atom
-//! neighborhoods with `--nbor` neighbor slots, so runs are reproducible and
-//! the server's batch coalescer gets mergeable traffic.
+//! `--wire json` (default) speaks the line-delimited JSON protocol;
+//! `--wire binary` speaks `repro-frame-v1` (see `docs/PROTOCOL.md`) —
+//! same port, same requests, so the two modes measure exactly the wire
+//! overhead difference.  Requests are deterministic (seeded per
+//! connection) single-atom neighborhoods with `--nbor` neighbor slots, so
+//! runs are reproducible and the server's batch coalescer gets mergeable
+//! traffic.
 
+use repro::coordinator::wire;
 use repro::util::json::Json;
 use repro::util::XorShift;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 use std::sync::{Arc, Barrier};
 use std::time::Instant;
+
+#[derive(Clone, Copy, PartialEq)]
+enum Wire {
+    Json,
+    Binary,
+}
+
+impl Wire {
+    fn label(self) -> &'static str {
+        match self {
+            Wire::Json => "json",
+            Wire::Binary => "binary",
+        }
+    }
+}
 
 struct Args {
     addr: String,
     conns: usize,
     requests: usize,
     nbor: usize,
+    wire: Wire,
     out: Option<String>,
 }
 
@@ -41,6 +62,7 @@ fn parse_args() -> anyhow::Result<Args> {
         conns: 4,
         requests: 100,
         nbor: 6,
+        wire: Wire::Json,
         out: None,
     };
     let mut i = 0;
@@ -58,6 +80,14 @@ fn parse_args() -> anyhow::Result<Args> {
                 args.nbor = flag_value(&argv, i)?.parse()?;
                 i += 2;
             }
+            "--wire" => {
+                args.wire = match flag_value(&argv, i)? {
+                    "json" => Wire::Json,
+                    "binary" => Wire::Binary,
+                    other => anyhow::bail!("--wire must be json or binary, got {other}"),
+                };
+                i += 2;
+            }
             "--out" => {
                 args.out = Some(flag_value(&argv, i)?.to_string());
                 i += 2;
@@ -68,7 +98,7 @@ fn parse_args() -> anyhow::Result<Args> {
             }
             other => anyhow::bail!(
                 "unknown flag {other} (usage: force_client [ADDR] [--conns N] \
-                 [--requests M] [--nbor K] [--out FILE])"
+                 [--requests M] [--nbor K] [--wire json|binary] [--out FILE])"
             ),
         }
     }
@@ -76,9 +106,10 @@ fn parse_args() -> anyhow::Result<Args> {
     Ok(args)
 }
 
-/// Deterministic single-atom request: `nbor` neighbors in a shell where the
-/// SNAP switching function is well-conditioned.
-fn request_line(rng: &mut XorShift, nbor: usize) -> String {
+/// Deterministic single-atom neighborhood: `nbor` neighbors in a shell
+/// where the SNAP switching function is well-conditioned.  Both wire modes
+/// build requests from this same data, so their workloads are identical.
+fn request_tile(rng: &mut XorShift, nbor: usize) -> (Vec<f64>, Vec<f64>) {
     let mut rij = Vec::with_capacity(nbor * 3);
     for _ in 0..nbor {
         loop {
@@ -94,22 +125,94 @@ fn request_line(rng: &mut XorShift, nbor: usize) -> String {
             }
         }
     }
+    (rij, vec![1.0; nbor])
+}
+
+fn request_line(rij: &[f64], mask: &[f64], nbor: usize) -> String {
     let fmt = |v: &[f64]| {
         v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
     };
-    let mask: Vec<f64> = vec![1.0; nbor];
     format!(
         "{{\"num_atoms\": 1, \"num_nbor\": {nbor}, \"rij\": [{}], \"mask\": [{}]}}\n",
-        fmt(&rij),
-        fmt(&mask)
+        fmt(rij),
+        fmt(mask)
     )
+}
+
+/// Stream `requests` JSON requests down one connection, verifying replies.
+fn run_json_conn(
+    writer: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    conn_id: usize,
+    requests: usize,
+    nbor: usize,
+) -> anyhow::Result<()> {
+    let mut rng = XorShift::new(1000 + conn_id as u64);
+    let mut line = String::new();
+    for k in 0..requests {
+        let (rij, mask) = request_tile(&mut rng, nbor);
+        let req = request_line(&rij, &mask, nbor);
+        writer.write_all(req.as_bytes())?;
+        line.clear();
+        reader.read_line(&mut line)?;
+        anyhow::ensure!(
+            line.contains("\"ok\": true"),
+            "conn {conn_id} request {k} failed: {}",
+            &line[..line.len().min(200)]
+        );
+    }
+    Ok(())
+}
+
+/// Stream `requests` repro-frame-v1 frames down one connection (hello
+/// handshake first), verifying reply frames.
+fn run_binary_conn(
+    writer: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    conn_id: usize,
+    requests: usize,
+    nbor: usize,
+) -> anyhow::Result<()> {
+    writer.write_all(&wire::encode_hello(wire::VERSION))?;
+    let mut ack = [0u8; 2];
+    reader.read_exact(&mut ack)?;
+    anyhow::ensure!(
+        ack == wire::encode_hello_ack(),
+        "conn {conn_id}: bad hello ack {ack:?}"
+    );
+    let mut rng = XorShift::new(1000 + conn_id as u64);
+    for k in 0..requests {
+        let (rij, mask) = request_tile(&mut rng, nbor);
+        writer.write_all(&wire::encode_compute(1, nbor, &rij, &mask, None))?;
+        match wire::read_frame(reader)? {
+            Ok(wire::Frame::Result { num_atoms, num_nbor, .. }) => {
+                anyhow::ensure!(
+                    num_atoms == 1 && num_nbor == nbor,
+                    "conn {conn_id} request {k}: shape mismatch in reply"
+                );
+            }
+            Ok(wire::Frame::Error { code, message }) => {
+                anyhow::bail!(
+                    "conn {conn_id} request {k} failed: {} {message}",
+                    code.name()
+                );
+            }
+            Ok(other) => anyhow::bail!("conn {conn_id} request {k}: unexpected {other:?}"),
+            Err(bad) => anyhow::bail!("conn {conn_id} request {k}: bad frame: {}", bad.message),
+        }
+    }
+    Ok(())
 }
 
 fn main() -> anyhow::Result<()> {
     let args = parse_args()?;
     println!(
-        "# load generator: {} conns x {} requests, {} neighbors/atom -> {}",
-        args.conns, args.requests, args.nbor, args.addr
+        "# load generator: {} conns x {} requests, {} neighbors/atom, {} wire -> {}",
+        args.conns,
+        args.requests,
+        args.nbor,
+        args.wire.label(),
+        args.addr
     );
 
     // connect everything first so the timed window measures serving, not dialing
@@ -118,31 +221,25 @@ fn main() -> anyhow::Result<()> {
     for conn_id in 0..args.conns {
         let addr = args.addr.clone();
         let barrier = barrier.clone();
-        let (requests, nbor) = (args.requests, args.nbor);
+        let (requests, nbor, wire_mode) = (args.requests, args.nbor, args.wire);
         handles.push(std::thread::spawn(move || -> anyhow::Result<f64> {
             // Dial before the barrier, but *always* reach the barrier even
             // on failure — otherwise one refused connection deadlocks every
             // other thread (and main) at the rendezvous.
             let setup = (|| -> anyhow::Result<(TcpStream, BufReader<TcpStream>)> {
                 let conn = TcpStream::connect(&addr)?;
+                conn.set_nodelay(true)?;
                 let writer = conn.try_clone()?;
                 Ok((writer, BufReader::new(conn)))
             })();
             barrier.wait();
             let (mut writer, mut reader) = setup?;
-            let mut rng = XorShift::new(1000 + conn_id as u64);
             let t0 = Instant::now();
-            let mut line = String::new();
-            for k in 0..requests {
-                let req = request_line(&mut rng, nbor);
-                writer.write_all(req.as_bytes())?;
-                line.clear();
-                reader.read_line(&mut line)?;
-                anyhow::ensure!(
-                    line.contains("\"ok\": true"),
-                    "conn {conn_id} request {k} failed: {}",
-                    &line[..line.len().min(200)]
-                );
+            match wire_mode {
+                Wire::Json => run_json_conn(&mut writer, &mut reader, conn_id, requests, nbor)?,
+                Wire::Binary => {
+                    run_binary_conn(&mut writer, &mut reader, conn_id, requests, nbor)?
+                }
             }
             Ok(t0.elapsed().as_secs_f64())
         }));
@@ -199,10 +296,12 @@ fn main() -> anyhow::Result<()> {
 
     if let Some(path) = &args.out {
         let json = format!(
-            "{{\"bench\": \"serve\", \"conns\": {}, \"requests_per_conn\": {}, \
+            "{{\"bench\": \"serve\", \"wire\": \"{}\", \"conns\": {}, \
+             \"requests_per_conn\": {}, \
              \"num_nbor\": {}, \"total_requests\": {}, \"wall_s\": {:.6}, \
              \"req_per_s\": {:.2}, \"dispatches\": {}, \
              \"atoms_per_dispatch_mean\": {:.3}, \"batch_atoms_max\": {}}}\n",
+            args.wire.label(),
             args.conns,
             args.requests,
             args.nbor,

@@ -10,6 +10,7 @@
 pub mod force;
 pub mod server;
 pub mod sim;
+pub mod wire;
 
 pub use force::{ForceField, ForceResult, TileBatch};
 pub use sim::{SimConfig, Simulation};

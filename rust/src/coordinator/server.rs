@@ -1,54 +1,63 @@
-//! The force server: newline-delimited JSON over TCP, served by a
-//! concurrent pipeline.
+//! The force server: one TCP port speaking two wire formats — line-delimited
+//! JSON (the compat path) and the `repro-frame-v1` binary protocol
+//! ([`crate::coordinator::wire`]) — served by a nonblocking event loop in
+//! front of a concurrent compute pipeline.
 //!
-//! This is the coordinator as a *service* (the shape a production
-//! deployment of an ML potential takes: a central process owning the
-//! compiled potential, clients submitting neighborhood batches).  Protocol:
+//! This is the coordinator as a *service* (the shape a production deployment
+//! of an ML potential takes: a central process owning the compiled
+//! potential, clients submitting neighborhood batches).  The full wire
+//! specification lives in `docs/PROTOCOL.md`, the dataflow/threading story
+//! in `docs/ARCHITECTURE.md`; in brief:
 //!
 //! ```text
 //! request:  {"num_atoms": A, "num_nbor": N, "rij": [...3AN...], "mask": [...AN...],
 //!            "ielems": [...A...], "jelems": [...AN...]}\n   (types optional, paired)
 //! response: {"ok": true, "ei": [...A...], "dedr": [...3AN...]}\n
 //! control:  {"cmd": "stats"}\n  ->  {"ok": true, "stats": {...counters...}}\n
-//! errors:   {"ok": false, "error": "<json-escaped message>"}\n
+//! errors:   {"ok": false, "code": "<taxonomy>", "error": "<json-escaped message>"}\n
+//! binary:   first byte 0xB1 switches the connection to repro-frame-v1
+//!           (hello/ack, then length-prefixed frames with raw f64 payloads)
 //! ```
 //!
-//! The optional `ielems`/`jelems` element-type channel (0-based element
-//! indices; omitted = every atom is element 0, byte-identical to the
-//! pre-multi-element protocol) must be present or absent together;
-//! out-of-range types come back as a structured engine `BadShape` error
-//! and bump `engine_errors`.
-//!
-//! Pipeline (the paper's hierarchical-parallelism lesson applied to the
-//! service layer):
+//! Pipeline (the paper's per-item-overhead lesson applied to the service
+//! layer: no per-connection threads, no text parse on the binary path):
 //!
 //! ```text
-//! accept loop ──> session thread per connection (parse, reply I/O)
-//!                      │  bounded ingress queue (backpressure)
-//!                      ▼
-//!                 coalescer: merges small requests that arrive within
-//!                      │     `batch_window` into one padded tile
-//!                      ▼  bounded work queue
-//!                 worker pool: N workers, each owning a private engine
-//!                      │     built from one shared `EngineFactory`
-//!                      ▼
-//!                 per-request replies demultiplexed back to sessions
+//! event loop ──> nonblocking accept + read/write for *all* connections
+//!      │         (wire detect, frame/line parse, reply reordering)
+//!      │  bounded ingress queue — admission control: a full queue sheds
+//!      ▼         the request with a structured `overloaded` reply
+//! coalescer: merges small requests that arrive within `batch_window`
+//!      │     into one padded tile
+//!      ▼  bounded work queue
+//! worker pool: N workers, each owning a private engine built from one
+//!      │      shared `EngineFactory`; workers serialize replies
+//!      ▼
+//! completion channel back to the event loop, which writes replies out
+//! in per-connection request order
 //! ```
 //!
-//! Every stage is bounded, so a slow engine propagates backpressure to the
-//! client sockets instead of buffering unboundedly.  Shutdown: flip the
-//! stop flag and poke the accept loop with a throwaway connection
-//! ([`shutdown`]); the queues drain, the workers join, sessions end when
-//! their clients disconnect.
+//! Every queue is bounded.  Unlike the former thread-per-connection server,
+//! a full ingress queue no longer blocks the reader (that would stall every
+//! multiplexed connection): the request is *shed* with an `overloaded`
+//! error, which is the event-loop equivalent of backpressure.  Per-stage
+//! latency histograms (`parse`, `queue_wait`, `compute`, `reply`) are
+//! surfaced in the `{"cmd": "stats"}` reply.  Shutdown: flip the stop flag
+//! ([`shutdown`] also pokes the port for compat); the queues drain, workers
+//! join, and lingering connections are handed to drain threads that answer
+//! structured `shutdown` errors until their clients disconnect.
 
 use crate::coordinator::force::TileBatch;
+use crate::coordinator::wire::{self, ErrorCode, Extracted};
 use crate::snap::engine::{
     EngineError, EngineFactory, ForceEngine, OwnedTile, OwnedTileElems, TileOutput,
 };
 use crate::tune::{PlanCounters, PlanSelection, ShapeBucket};
+use crate::util::hist::LatencyHistogram;
 use crate::util::json::{self, Json};
-use crate::util::parallel::{num_threads, BoundedQueue, RecvTimeout};
-use std::io::{BufRead, BufReader, Write};
+use crate::util::parallel::{num_threads, BoundedQueue, RecvTimeout, TrySend};
+use std::collections::{BTreeMap, HashMap};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -82,8 +91,10 @@ pub struct ServeOptions {
     /// How long the coalescer holds a small request hoping to merge more
     /// into the same tile (`--batch-window-us`; zero disables coalescing).
     pub batch_window: Duration,
-    /// Capacity of each pipeline queue (`--queue-depth`); full queues
-    /// block upstream, i.e. backpressure.
+    /// Capacity of each pipeline queue (`--queue-depth`).  A full work
+    /// queue blocks the coalescer (internal backpressure); a full ingress
+    /// queue *sheds* the request with a structured `overloaded` reply —
+    /// admission control, so one burst cannot park the event loop.
     pub queue_depth: usize,
     /// Merged tiles never exceed this many atom rows.
     pub max_batch_atoms: usize,
@@ -141,6 +152,9 @@ pub struct ServerStats {
     /// `replies_err`, so engine health is observable separately from
     /// malformed-frame noise.
     pub engine_errors: AtomicU64,
+    /// Requests shed by admission control (ingress queue full) — a subset
+    /// of `replies_err`; each produced a structured `overloaded` reply.
+    pub requests_shed: AtomicU64,
     pub stats_requests: AtomicU64,
     /// Engine dispatches (merged batches count once).
     pub jobs_dispatched: AtomicU64,
@@ -162,6 +176,19 @@ pub struct ServerStats {
     pub workers: AtomicU64,
     /// Intra-tile shards per worker engine (set once at startup).
     pub shards: AtomicU64,
+    /// Connections whose first byte selected each wire format (the
+    /// JSON → binary migration gauge, per the `wire` stats section).
+    pub json_connections: AtomicU64,
+    pub binary_connections: AtomicU64,
+    /// Requests received on each wire format.
+    pub json_requests: AtomicU64,
+    pub binary_requests: AtomicU64,
+    /// Per-stage latency histograms: wire parse, queue wait (enqueue to
+    /// worker pickup), engine compute, and reply serialization.
+    pub lat_parse: LatencyHistogram,
+    pub lat_queue_wait: LatencyHistogram,
+    pub lat_compute: LatencyHistogram,
+    pub lat_reply: LatencyHistogram,
     /// Plan-cache loads that hit (set once at startup; counters so an
     /// embedder reloading plans can keep accumulating).
     pub plan_cache_hits: AtomicU64,
@@ -206,7 +233,10 @@ impl ServerStats {
         )
     }
 
-    pub fn snapshot_json(&self) -> String {
+    /// Full stats document with a caller-provided `sessions` array (the
+    /// event loop owns per-connection state, so it injects the live
+    /// session list; everything else is aggregate counters).
+    fn snapshot_with_sessions(&self, sessions: &str) -> String {
         let n = |v: &AtomicU64| v.load(Ordering::Relaxed).to_string();
         let us = |v: &AtomicU64| (v.load(Ordering::Relaxed) / 1_000).to_string();
         json::write_obj(&[
@@ -218,6 +248,7 @@ impl ServerStats {
             ("replies_ok", n(&self.replies_ok)),
             ("replies_err", n(&self.replies_err)),
             ("engine_errors", n(&self.engine_errors)),
+            ("requests_shed", n(&self.requests_shed)),
             ("stats_requests", n(&self.stats_requests)),
             ("jobs_dispatched", n(&self.jobs_dispatched)),
             ("batches_merged", n(&self.batches_merged)),
@@ -226,20 +257,81 @@ impl ServerStats {
             ("compute_us", us(&self.compute_ns)),
             ("atoms_computed", n(&self.atoms_computed)),
             ("batch_atoms_max", n(&self.batch_atoms_max)),
+            (
+                "wire",
+                format!(
+                    "{{\"version\": {}, \"json_connections\": {}, \"binary_connections\": {}, \
+                     \"json_requests\": {}, \"binary_requests\": {}, \"sessions\": {sessions}}}",
+                    wire::VERSION,
+                    self.json_connections.load(Ordering::Relaxed),
+                    self.binary_connections.load(Ordering::Relaxed),
+                    self.json_requests.load(Ordering::Relaxed),
+                    self.binary_requests.load(Ordering::Relaxed),
+                ),
+            ),
+            (
+                "latency",
+                format!(
+                    "{{\"parse\": {}, \"queue_wait\": {}, \"compute\": {}, \"reply\": {}}}",
+                    self.lat_parse.summary_json(),
+                    self.lat_queue_wait.summary_json(),
+                    self.lat_compute.summary_json(),
+                    self.lat_reply.summary_json(),
+                ),
+            ),
             ("plan", self.plan_json()),
         ])
     }
+
+    /// Aggregate snapshot (no live session list — embedders calling this
+    /// off the wire path have no event loop to ask).
+    pub fn snapshot_json(&self) -> String {
+        self.snapshot_with_sessions("[]")
+    }
+}
+
+/// Which wire format a reply must be serialized in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum WireFmt {
+    Json,
+    Binary,
+}
+
+/// Connection protocol state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Mode {
+    /// No bytes seen yet; the first byte picks the wire format.
+    Detect,
+    /// First byte was [`wire::MAGIC`]; waiting for the full 2-byte hello.
+    HelloWait,
+    Json,
+    Binary,
 }
 
 /// One parsed compute request in flight through the pipeline.
 ///
-/// The reply is the *formatted* wire line (or the typed engine error):
-/// workers serialize straight out of their reused [`TileOutput`] buffer,
-/// so no per-request output buffers ever cross the channel.
+/// Workers serialize the reply (JSON line or binary frame) straight out of
+/// their reused [`TileOutput`] buffer and send the finished bytes back to
+/// the event loop as a [`Completion`] — no per-request output buffers, and
+/// the loop never touches float formatting.
 struct Pending {
     tile: OwnedTile,
-    reply: mpsc::Sender<Result<String, EngineError>>,
+    fmt: WireFmt,
+    conn: u64,
+    seq: u64,
     enqueued: Instant,
+    done: mpsc::Sender<Completion>,
+}
+
+/// A finished request on its way back to the event loop.
+struct Completion {
+    conn: u64,
+    seq: u64,
+    /// Fully serialized reply bytes in the request's wire format.
+    bytes: Vec<u8>,
+    /// True when `bytes` carries an engine-failure error reply (counted
+    /// separately so engine health is observable).
+    engine_err: bool,
 }
 
 /// A unit of engine work popped by a worker.
@@ -249,17 +341,154 @@ enum Job {
     Batch(Vec<Pending>),
 }
 
-/// Shared state handed to each session thread.
-struct SessionCtx {
+/// Handles the event loop threads onto the pipeline.
+struct LoopCtx {
     ingress: Arc<BoundedQueue<Pending>>,
     stats: Arc<ServerStats>,
+    done: mpsc::Sender<Completion>,
 }
 
-/// Serve requests until `stop` flips true.  Blocks the calling thread.
+/// Per-connection state owned by the event loop.
 ///
-/// The accept call is *blocking* — an idle server parks in the kernel
-/// instead of sleep-polling.  To stop it, flip `stop` and make a
-/// throwaway connection to the listen address (see [`shutdown`]).
+/// Replies are sequenced: every request takes a `seq` at parse time, and
+/// all replies — immediate (parse errors, overload sheds, stats) and
+/// asynchronous (compute completions) — go through a reorder stash so the
+/// bytes written to the socket are always in request order, even when a
+/// pipelining client has many computes in flight.
+struct Conn {
+    stream: TcpStream,
+    mode: Mode,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    /// Bytes of `wbuf` already written to the socket.
+    wpos: usize,
+    /// Next request sequence number to assign.
+    next_seq: u64,
+    /// Next sequence number whose reply may be appended to `wbuf`.
+    next_write: u64,
+    /// Out-of-order replies waiting for their turn.
+    stash: BTreeMap<u64, Vec<u8>>,
+    /// Compute requests submitted but not yet completed.
+    inflight: u64,
+    /// Requests seen on this connection (for the per-session stats list).
+    requests: u64,
+    eof: bool,
+    dead: bool,
+    /// Stop reading (framing broken / bad hello); close once drained.
+    closing: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            mode: Mode::Detect,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            next_seq: 0,
+            next_write: 0,
+            stash: BTreeMap::new(),
+            inflight: 0,
+            requests: 0,
+            eof: false,
+            dead: false,
+            closing: false,
+        }
+    }
+
+    fn fmt(&self) -> WireFmt {
+        match self.mode {
+            Mode::HelloWait | Mode::Binary => WireFmt::Binary,
+            Mode::Detect | Mode::Json => WireFmt::Json,
+        }
+    }
+
+    fn take_seq(&mut self) -> u64 {
+        let s = self.next_seq;
+        self.next_seq += 1;
+        s
+    }
+
+    /// Sequence a reply: stash it, then move every now-consecutive reply
+    /// into the write buffer.
+    fn emit(&mut self, seq: u64, bytes: Vec<u8>) {
+        self.stash.insert(seq, bytes);
+        while let Some(b) = self.stash.remove(&self.next_write) {
+            self.wbuf.extend_from_slice(&b);
+            self.next_write += 1;
+        }
+    }
+
+    fn flushed(&self) -> bool {
+        self.wpos >= self.wbuf.len()
+    }
+
+    /// Write as much buffered output as the socket accepts right now.
+    fn flush(&mut self) -> bool {
+        let mut progressed = false;
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => {
+                    self.dead = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.wpos += n;
+                    progressed = true;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        if self.flushed() && !self.wbuf.is_empty() {
+            self.wbuf.clear();
+            self.wpos = 0;
+        }
+        progressed
+    }
+
+    /// Read everything the socket has ready into `rbuf`.
+    fn fill(&mut self, scratch: &mut [u8]) -> bool {
+        let mut progressed = false;
+        loop {
+            match self.stream.read(scratch) {
+                Ok(0) => {
+                    self.eof = true;
+                    return true;
+                }
+                Ok(n) => {
+                    self.rbuf.extend_from_slice(&scratch[..n]);
+                    progressed = true;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return progressed,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    return true;
+                }
+            }
+        }
+    }
+}
+
+/// Skip reading from a connection whose unflushed output exceeds this
+/// (a client that stops reading its replies must not buffer the server
+/// into the ground).
+const HIGH_WATER: usize = 4 << 20;
+/// Event-loop sleep bounds: reset to the floor on any activity, doubled
+/// while idle up to the cap (tighter with connections attached, so request
+/// arrival latency stays bounded; looser when only the listener is open).
+const SLEEP_FLOOR: Duration = Duration::from_micros(20);
+const SLEEP_CAP_ACTIVE: Duration = Duration::from_micros(250);
+const SLEEP_CAP_IDLE: Duration = Duration::from_millis(2);
+
+/// Serve requests until `stop` flips true.  Blocks the calling thread (it
+/// becomes the event loop).
 pub fn serve(
     listener: TcpListener,
     factory: EngineFactory,
@@ -278,7 +507,7 @@ pub fn serve_with_stats(
     stop: Arc<AtomicBool>,
     stats: Arc<ServerStats>,
 ) -> std::io::Result<()> {
-    listener.set_nonblocking(false)?;
+    listener.set_nonblocking(true)?;
     let workers = opts.workers.max(1);
     stats.workers.store(workers as u64, Ordering::Relaxed);
     stats.shards.store(opts.shards.max(1) as u64, Ordering::Relaxed);
@@ -325,57 +554,439 @@ pub fn serve_with_stats(
         })
         .collect();
 
-    let ctx = Arc::new(SessionCtx { ingress: ingress.clone(), stats: stats.clone() });
+    let (done_tx, done_rx) = mpsc::channel::<Completion>();
+    let ctx = LoopCtx { ingress: ingress.clone(), stats: stats.clone(), done: done_tx };
+
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_conn_id: u64 = 1;
+    let mut scratch = vec![0u8; 64 * 1024];
+    let mut stats_reqs: Vec<(u64, u64)> = Vec::new();
     let mut consecutive_errors = 0u32;
-    let result = loop {
-        match listener.accept() {
-            Ok((stream, _)) => {
-                if stop.load(Ordering::SeqCst) {
-                    // the wake-up poke (or a late client); drop it and exit
-                    break Ok(());
-                }
-                consecutive_errors = 0;
-                let ctx = ctx.clone();
-                std::thread::spawn(move || {
-                    if let Err(e) = session(stream, &ctx) {
-                        eprintln!("force-server connection error: {e}");
+    let mut backoff = SLEEP_FLOOR;
+
+    let result = 'serve: loop {
+        if stop.load(Ordering::SeqCst) {
+            break Ok(());
+        }
+        let mut activity = false;
+
+        // Accept every connection that is ready.
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    consecutive_errors = 0;
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
                     }
-                });
-            }
-            Err(_e) if stop.load(Ordering::SeqCst) => break Ok(()),
-            Err(e) => {
-                // Transient accept errors (ECONNABORTED from a client that
-                // RST before accept, EMFILE under fd pressure) must not kill
-                // a healthy service; only a persistently failing listener is
-                // fatal.
-                consecutive_errors += 1;
-                if consecutive_errors >= 100 {
-                    break Err(e);
+                    let _ = stream.set_nodelay(true);
+                    stats.connections_total.fetch_add(1, Ordering::Relaxed);
+                    stats.connections_active.fetch_add(1, Ordering::Relaxed);
+                    conns.insert(next_conn_id, Conn::new(stream));
+                    next_conn_id += 1;
+                    activity = true;
                 }
-                eprintln!("force-server accept error (retrying): {e}");
-                std::thread::sleep(Duration::from_millis(10));
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    // Transient accept errors (ECONNABORTED from a client
+                    // that RST before accept, EMFILE under fd pressure)
+                    // must not kill a healthy service; only a persistently
+                    // failing listener is fatal.
+                    if stop.load(Ordering::SeqCst) {
+                        break 'serve Ok(());
+                    }
+                    consecutive_errors += 1;
+                    if consecutive_errors >= 100 {
+                        break 'serve Err(e);
+                    }
+                    eprintln!("force-server accept error (retrying): {e}");
+                    std::thread::sleep(Duration::from_millis(10));
+                    break;
+                }
             }
+        }
+
+        // Deliver finished compute replies into their connections.
+        while let Ok(c) = done_rx.try_recv() {
+            activity = true;
+            deliver_completion(&mut conns, &stats, c);
+        }
+
+        // Per-connection I/O: flush pending output, read what's available,
+        // parse and dispatch complete requests.
+        for (&id, conn) in conns.iter_mut() {
+            if conn.dead {
+                continue;
+            }
+            if conn.flush() {
+                activity = true;
+            }
+            if conn.dead || conn.closing {
+                continue;
+            }
+            if !conn.eof
+                && conn.wbuf.len() - conn.wpos <= HIGH_WATER
+                && conn.fill(&mut scratch)
+            {
+                activity = true;
+            }
+            if conn.dead {
+                continue;
+            }
+            if process_rbuf(id, conn, &ctx, &mut stats_reqs) {
+                activity = true;
+            }
+        }
+
+        // Stats replies need the whole connection map (per-session wire
+        // state), so they are rendered after the borrow above ends.
+        if !stats_reqs.is_empty() {
+            let doc = format!(
+                "{{\"ok\": true, \"stats\": {}}}",
+                stats.snapshot_with_sessions(&sessions_json(&conns))
+            );
+            for (id, seq) in stats_reqs.drain(..) {
+                if let Some(conn) = conns.get_mut(&id) {
+                    let bytes = stats_reply_bytes(conn.fmt(), &doc);
+                    conn.emit(seq, bytes);
+                }
+            }
+            activity = true;
+        }
+
+        // Push out replies produced this iteration.
+        for conn in conns.values_mut() {
+            if !conn.dead && conn.flush() {
+                activity = true;
+            }
+        }
+
+        // Reap finished connections.
+        conns.retain(|_, c| {
+            let done = c.dead
+                || ((c.eof || c.closing)
+                    && c.inflight == 0
+                    && c.stash.is_empty()
+                    && c.flushed());
+            if done {
+                stats.connections_active.fetch_sub(1, Ordering::Relaxed);
+            }
+            !done
+        });
+
+        // Pacing: busy iterations spin straight through; with computes in
+        // flight, park on the completion channel (wakes the instant a
+        // worker finishes); otherwise sleep with exponential backoff.
+        if activity {
+            backoff = SLEEP_FLOOR;
+            continue;
+        }
+        let inflight: u64 = conns.values().map(|c| c.inflight).sum();
+        if inflight > 0 {
+            if let Ok(c) = done_rx.recv_timeout(SLEEP_CAP_ACTIVE) {
+                deliver_completion(&mut conns, &stats, c);
+                backoff = SLEEP_FLOOR;
+            }
+        } else {
+            std::thread::sleep(backoff);
+            let cap = if conns.is_empty() { SLEEP_CAP_IDLE } else { SLEEP_CAP_ACTIVE };
+            backoff = (backoff * 2).min(cap);
         }
     };
 
     // Drain the pipeline: close ingress, let the coalescer flush what it
     // holds, then close the work queue so workers exit after draining.
-    // Sessions still attached get an error reply on their next request and
-    // end when their clients disconnect.
     ingress.close();
     let _ = coalescer.join();
     workq.close();
     for h in worker_handles {
         let _ = h.join();
     }
+    drop(ctx);
+    // Workers have joined, so every completion is already in the channel.
+    while let Ok(c) = done_rx.try_recv() {
+        deliver_completion(&mut conns, &stats, c);
+    }
+    // Flush what each connection is owed, then hand still-open connections
+    // to drain threads that answer structured shutdown errors until their
+    // clients disconnect.
+    for (_, conn) in conns.drain() {
+        finish_conn(conn, &stats);
+    }
     result
 }
 
-/// Flip `stop` and poke the blocking accept loop awake so [`serve`]
-/// returns promptly.
+/// Flip `stop` and poke the listen port so an idle [`serve`] loop notices
+/// promptly.
 pub fn shutdown(addr: SocketAddr, stop: &AtomicBool) {
     stop.store(true, Ordering::SeqCst);
     let _ = TcpStream::connect(addr);
+}
+
+/// Count a completion and sequence its bytes into the owning connection
+/// (which may already be gone — the counters still run, keeping the
+/// accounting invariant).
+fn deliver_completion(conns: &mut HashMap<u64, Conn>, stats: &ServerStats, c: Completion) {
+    if c.engine_err {
+        stats.engine_errors.fetch_add(1, Ordering::Relaxed);
+        stats.replies_err.fetch_add(1, Ordering::Relaxed);
+    } else {
+        stats.replies_ok.fetch_add(1, Ordering::Relaxed);
+    }
+    if let Some(conn) = conns.get_mut(&c.conn) {
+        conn.inflight = conn.inflight.saturating_sub(1);
+        conn.emit(c.seq, c.bytes);
+    }
+}
+
+/// Shutdown path for one connection: synthesize replies for requests the
+/// pipeline dropped, flush everything (blocking), then either close or
+/// hand off to a drain thread that keeps answering shutdown errors.
+fn finish_conn(mut conn: Conn, stats: &Arc<ServerStats>) {
+    let fmt = conn.fmt();
+    for seq in conn.next_write..conn.next_seq {
+        if let std::collections::btree_map::Entry::Vacant(v) = conn.stash.entry(seq) {
+            stats.replies_err.fetch_add(1, Ordering::Relaxed);
+            let reply = "request dropped during shutdown";
+            v.insert(error_reply_bytes(fmt, ErrorCode::Shutdown, reply));
+        }
+    }
+    while let Some(b) = conn.stash.remove(&conn.next_write) {
+        conn.wbuf.extend_from_slice(&b);
+        conn.next_write += 1;
+    }
+    let _ = conn.stream.set_nonblocking(false);
+    if conn.wpos < conn.wbuf.len() {
+        let _ = conn.stream.write_all(&conn.wbuf[conn.wpos..]);
+    }
+    if conn.dead || conn.eof || conn.closing {
+        stats.connections_active.fetch_sub(1, Ordering::Relaxed);
+        return;
+    }
+    let stats = stats.clone();
+    let mode = conn.mode;
+    let leftover = std::mem::take(&mut conn.rbuf);
+    let stream = conn.stream;
+    std::thread::spawn(move || {
+        drain_session(stream, mode, leftover, &stats);
+        stats.connections_active.fetch_sub(1, Ordering::Relaxed);
+    });
+}
+
+/// What one parsed request asks for.
+enum Request {
+    Stats,
+    Tile(OwnedTile),
+    Bad { code: ErrorCode, msg: String },
+}
+
+/// Parse and dispatch every complete request buffered on a connection.
+/// Returns whether any progress was made.
+fn process_rbuf(
+    id: u64,
+    conn: &mut Conn,
+    ctx: &LoopCtx,
+    stats_reqs: &mut Vec<(u64, u64)>,
+) -> bool {
+    let mut progressed = false;
+    loop {
+        match conn.mode {
+            Mode::Detect => {
+                let Some(&first) = conn.rbuf.first() else { break };
+                if first == wire::MAGIC {
+                    conn.mode = Mode::HelloWait;
+                    ctx.stats.binary_connections.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    conn.mode = Mode::Json;
+                    ctx.stats.json_connections.fetch_add(1, Ordering::Relaxed);
+                }
+                progressed = true;
+            }
+            Mode::HelloWait => match wire::parse_hello(&conn.rbuf) {
+                None => break,
+                Some(Ok(consumed)) => {
+                    conn.rbuf.drain(..consumed);
+                    conn.wbuf.extend_from_slice(&wire::encode_hello_ack());
+                    conn.mode = Mode::Binary;
+                    progressed = true;
+                }
+                Some(Err(msg)) => {
+                    conn.wbuf.extend_from_slice(&wire::encode_error(ErrorCode::BadFrame, &msg));
+                    conn.closing = true;
+                    progressed = true;
+                    break;
+                }
+            },
+            Mode::Json => {
+                // A complete line, or — at EOF — the trailing unterminated
+                // line (parity with the old BufRead::lines() server).
+                let (end, consumed) = match conn.rbuf.iter().position(|&b| b == b'\n') {
+                    Some(p) => (p, p + 1),
+                    None if conn.eof && !conn.rbuf.is_empty() => {
+                        (conn.rbuf.len(), conn.rbuf.len())
+                    }
+                    None => break,
+                };
+                let line_bytes: Vec<u8> = conn.rbuf.drain(..consumed).take(end).collect();
+                progressed = true;
+                let line = String::from_utf8_lossy(&line_bytes);
+                let line = line.trim();
+                if line.is_empty() {
+                    continue;
+                }
+                conn.requests += 1;
+                ctx.stats.requests_total.fetch_add(1, Ordering::Relaxed);
+                ctx.stats.json_requests.fetch_add(1, Ordering::Relaxed);
+                let seq = conn.take_seq();
+                let t0 = Instant::now();
+                let request = parse_json_request(line);
+                ctx.stats.lat_parse.record(t0.elapsed());
+                dispatch_request(id, conn, seq, request, ctx, stats_reqs);
+            }
+            Mode::Binary => match wire::try_extract_frame(&conn.rbuf) {
+                Extracted::Incomplete => break,
+                Extracted::Fatal(msg) => {
+                    conn.requests += 1;
+                    ctx.stats.requests_total.fetch_add(1, Ordering::Relaxed);
+                    ctx.stats.binary_requests.fetch_add(1, Ordering::Relaxed);
+                    ctx.stats.replies_err.fetch_add(1, Ordering::Relaxed);
+                    let seq = conn.take_seq();
+                    conn.emit(seq, wire::encode_error(ErrorCode::BadFrame, &msg));
+                    conn.closing = true;
+                    progressed = true;
+                    break;
+                }
+                Extracted::Frame(parsed, consumed) => {
+                    conn.rbuf.drain(..consumed);
+                    progressed = true;
+                    conn.requests += 1;
+                    ctx.stats.requests_total.fetch_add(1, Ordering::Relaxed);
+                    ctx.stats.binary_requests.fetch_add(1, Ordering::Relaxed);
+                    let seq = conn.take_seq();
+                    let t0 = Instant::now();
+                    let request = match parsed {
+                        Ok(wire::Frame::Compute(tile)) => match tile.check_shape() {
+                            Ok(()) => Request::Tile(tile),
+                            Err(m) => Request::Bad {
+                                code: ErrorCode::BadShape,
+                                msg: format!("shape mismatch: {m}"),
+                            },
+                        },
+                        Ok(wire::Frame::Stats) => Request::Stats,
+                        Ok(_) => Request::Bad {
+                            code: ErrorCode::UnknownCmd,
+                            msg: "this frame type is server-to-client only".to_string(),
+                        },
+                        Err(bad) => Request::Bad { code: bad.code, msg: bad.message },
+                    };
+                    ctx.stats.lat_parse.record(t0.elapsed());
+                    dispatch_request(id, conn, seq, request, ctx, stats_reqs);
+                }
+            },
+        }
+        if conn.closing || conn.dead {
+            break;
+        }
+    }
+    progressed
+}
+
+/// Route one parsed request: stats to the deferred stats pass, tiles into
+/// the pipeline (with admission control), errors straight back.
+fn dispatch_request(
+    id: u64,
+    conn: &mut Conn,
+    seq: u64,
+    request: Request,
+    ctx: &LoopCtx,
+    stats_reqs: &mut Vec<(u64, u64)>,
+) {
+    match request {
+        Request::Stats => {
+            ctx.stats.stats_requests.fetch_add(1, Ordering::Relaxed);
+            stats_reqs.push((id, seq));
+        }
+        Request::Bad { code, msg } => {
+            ctx.stats.replies_err.fetch_add(1, Ordering::Relaxed);
+            let bytes = error_reply_bytes(conn.fmt(), code, &msg);
+            conn.emit(seq, bytes);
+        }
+        Request::Tile(tile) => {
+            let pending = Pending {
+                tile,
+                fmt: conn.fmt(),
+                conn: id,
+                seq,
+                enqueued: Instant::now(),
+                done: ctx.done.clone(),
+            };
+            match ctx.ingress.try_send(pending) {
+                Ok(()) => conn.inflight += 1,
+                Err(TrySend::Full(_)) => {
+                    // Admission control: never park the event loop on a
+                    // full queue — shed with a structured reply instead.
+                    ctx.stats.requests_shed.fetch_add(1, Ordering::Relaxed);
+                    ctx.stats.replies_err.fetch_add(1, Ordering::Relaxed);
+                    let bytes = error_reply_bytes(
+                        conn.fmt(),
+                        ErrorCode::Overloaded,
+                        "server overloaded: ingress queue full, retry later",
+                    );
+                    conn.emit(seq, bytes);
+                }
+                Err(TrySend::Closed(_)) => {
+                    ctx.stats.replies_err.fetch_add(1, Ordering::Relaxed);
+                    let bytes =
+                        error_reply_bytes(conn.fmt(), ErrorCode::Shutdown, "server shutting down");
+                    conn.emit(seq, bytes);
+                }
+            }
+        }
+    }
+}
+
+/// Classify one JSON request line.
+fn parse_json_request(line: &str) -> Request {
+    let j = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return Request::Bad { code: ErrorCode::BadFrame, msg: e.to_string() },
+    };
+    if let Some(cmd) = j.get("cmd").and_then(Json::as_str) {
+        return match cmd {
+            "stats" => Request::Stats,
+            other => Request::Bad {
+                code: ErrorCode::UnknownCmd,
+                msg: format!("unknown cmd `{other}`"),
+            },
+        };
+    }
+    match parse_tile(&j) {
+        Ok(tile) => Request::Tile(tile),
+        Err((code, msg)) => Request::Bad { code, msg },
+    }
+}
+
+/// The per-session entries of the stats reply's `wire` section.
+fn sessions_json(conns: &HashMap<u64, Conn>) -> String {
+    let mut ids: Vec<u64> = conns.keys().copied().collect();
+    ids.sort_unstable();
+    let items: Vec<String> = ids
+        .iter()
+        .map(|id| {
+            let c = &conns[id];
+            let (wire_name, version) = match c.mode {
+                Mode::Detect => ("pending", 0),
+                Mode::HelloWait | Mode::Binary => ("binary", wire::VERSION),
+                Mode::Json => ("json", 0),
+            };
+            format!(
+                "{{\"id\": {id}, \"wire\": \"{wire_name}\", \"version\": {version}, \
+                 \"requests\": {}}}",
+                c.requests
+            )
+        })
+        .collect();
+    format!("[{}]", items.join(", "))
 }
 
 /// Pop requests from `ingress`; hold small ones up to `window`, merging
@@ -449,7 +1060,8 @@ fn coalescer_loop(
 }
 
 /// Worker: owns one engine + one reused output buffer, pops jobs,
-/// computes, demultiplexes replies.
+/// computes, serializes replies, and sends them to the event loop as
+/// [`Completion`]s.
 ///
 /// Dispatch failures come back as typed [`EngineError`]s through
 /// `compute_into` and ride the normal reply path; the worker lives on — a
@@ -457,11 +1069,7 @@ fn coalescer_loop(
 /// output buffer is reset per dispatch, so a steady-state worker performs
 /// zero per-dispatch `TileOutput` allocations once it has seen its largest
 /// tile.
-fn worker_loop(
-    workq: &BoundedQueue<Job>,
-    mut engine: Box<dyn ForceEngine>,
-    stats: &ServerStats,
-) {
+fn worker_loop(workq: &BoundedQueue<Job>, mut engine: Box<dyn ForceEngine>, stats: &ServerStats) {
     let mut out = TileOutput::default();
     while let Some(job) = workq.recv() {
         match job {
@@ -470,9 +1078,16 @@ fn worker_loop(
                 let t0 = Instant::now();
                 let result = guarded_compute(engine.as_mut(), &p.tile.as_input(), &mut out);
                 note_compute(stats, t0, p.tile.num_atoms);
-                let _ = p
-                    .reply
-                    .send(result.map(|()| format_ok_reply(&out.ei, &out.dedr)));
+                let t1 = Instant::now();
+                let (bytes, engine_err) = match result {
+                    Ok(()) => (
+                        serialize_ok(p.fmt, p.tile.num_atoms, p.tile.num_nbor, &out.ei, &out.dedr),
+                        false,
+                    ),
+                    Err(e) => (serialize_engine_err(p.fmt, &e), true),
+                };
+                stats.lat_reply.record(t1.elapsed());
+                let _ = p.done.send(Completion { conn: p.conn, seq: p.seq, bytes, engine_err });
             }
             Job::Batch(members) => {
                 note_wait(stats, members.iter());
@@ -487,25 +1102,40 @@ fn worker_loop(
                 stats
                     .requests_coalesced
                     .fetch_add(members.len() as u64, Ordering::Relaxed);
+                let t1 = Instant::now();
                 match result {
                     Ok(()) => {
                         // serialize each member straight from its slice of
                         // the merged output — no per-member TileOutput
                         let nn = batch.num_nbor();
                         for (m, (row, na)) in members.iter().zip(batch.member_ranges()) {
-                            let reply = format_ok_reply(
+                            let bytes = serialize_ok(
+                                m.fmt,
+                                na,
+                                nn,
                                 &out.ei[row..row + na],
                                 &out.dedr[row * nn * 3..(row + na) * nn * 3],
                             );
-                            let _ = m.reply.send(Ok(reply));
+                            let _ = m.done.send(Completion {
+                                conn: m.conn,
+                                seq: m.seq,
+                                bytes,
+                                engine_err: false,
+                            });
                         }
                     }
                     Err(e) => {
                         for m in &members {
-                            let _ = m.reply.send(Err(e.clone()));
+                            let _ = m.done.send(Completion {
+                                conn: m.conn,
+                                seq: m.seq,
+                                bytes: serialize_engine_err(m.fmt, &e),
+                                engine_err: true,
+                            });
                         }
                     }
                 }
+                stats.lat_reply.record(t1.elapsed());
             }
         }
     }
@@ -533,132 +1163,113 @@ fn guarded_compute(
 }
 
 fn note_wait<'a>(stats: &ServerStats, pendings: impl Iterator<Item = &'a Pending>) {
-    let ns: u64 = pendings
-        .map(|p| p.enqueued.elapsed().as_nanos() as u64)
-        .sum();
-    stats.queue_wait_ns.fetch_add(ns, Ordering::Relaxed);
+    for p in pendings {
+        let waited = p.enqueued.elapsed();
+        stats
+            .queue_wait_ns
+            .fetch_add(waited.as_nanos() as u64, Ordering::Relaxed);
+        stats.lat_queue_wait.record(waited);
+    }
 }
 
 fn note_compute(stats: &ServerStats, t0: Instant, atoms: usize) {
-    stats.compute_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    let took = t0.elapsed();
+    stats.compute_ns.fetch_add(took.as_nanos() as u64, Ordering::Relaxed);
+    stats.lat_compute.record(took);
     stats.jobs_dispatched.fetch_add(1, Ordering::Relaxed);
     stats.atoms_computed.fetch_add(atoms as u64, Ordering::Relaxed);
     stats.batch_atoms_max.fetch_max(atoms as u64, Ordering::Relaxed);
 }
 
-/// Per-connection loop: read frames, submit, write replies in order.
-///
-/// Each connection's requests are handled strictly in sequence (submit,
-/// await, reply), so per-connection reply order always matches request
-/// order; concurrency comes from many connections and from coalescing.
-fn session(stream: TcpStream, ctx: &SessionCtx) -> std::io::Result<()> {
-    ctx.stats.connections_total.fetch_add(1, Ordering::Relaxed);
-    ctx.stats.connections_active.fetch_add(1, Ordering::Relaxed);
-    let result = session_inner(stream, ctx);
-    ctx.stats.connections_active.fetch_sub(1, Ordering::Relaxed);
-    result
-}
-
-fn session_inner(stream: TcpStream, ctx: &SessionCtx) -> std::io::Result<()> {
-    let peer = stream.try_clone()?;
-    let reader = BufReader::new(peer);
-    let mut writer = stream;
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        ctx.stats.requests_total.fetch_add(1, Ordering::Relaxed);
-        let reply = match process(&line, ctx) {
-            Ok(Reply::Compute(r)) => {
-                ctx.stats.replies_ok.fetch_add(1, Ordering::Relaxed);
-                r
-            }
-            Ok(Reply::Control(r)) => r,
-            Err(msg) => {
-                ctx.stats.replies_err.fetch_add(1, Ordering::Relaxed);
-                format!("{{\"ok\": false, \"error\": {}}}", json::quote(&msg))
-            }
-        };
-        writer.write_all(reply.as_bytes())?;
-        writer.write_all(b"\n")?;
-    }
-    Ok(())
-}
-
-enum Reply {
-    Compute(String),
-    Control(String),
-}
-
-fn process(line: &str, ctx: &SessionCtx) -> Result<Reply, String> {
-    let j = Json::parse(line).map_err(|e| e.to_string())?;
-    if let Some(cmd) = j.get("cmd").and_then(Json::as_str) {
-        return match cmd {
-            "stats" => {
-                ctx.stats.stats_requests.fetch_add(1, Ordering::Relaxed);
-                Ok(Reply::Control(format!(
-                    "{{\"ok\": true, \"stats\": {}}}",
-                    ctx.stats.snapshot_json()
-                )))
-            }
-            other => Err(format!("unknown cmd `{other}`")),
-        };
-    }
-    let tile = parse_tile(&j)?;
-    let (tx, rx) = mpsc::channel();
-    let pending = Pending { tile, reply: tx, enqueued: Instant::now() };
-    ctx.ingress
-        .send(pending)
-        .map_err(|_| "server shutting down".to_string())?;
-    match rx
-        .recv()
-        .map_err(|_| "request dropped during shutdown".to_string())?
-    {
-        Ok(reply) => Ok(Reply::Compute(reply)),
-        // a typed engine failure rides the normal error-reply path, with
-        // its own counter so engine health is observable in stats
-        Err(e) => {
-            ctx.stats.engine_errors.fetch_add(1, Ordering::Relaxed);
-            Err(e.to_string())
-        }
-    }
-}
-
-fn parse_tile(j: &Json) -> Result<OwnedTile, String> {
+fn parse_tile(j: &Json) -> Result<OwnedTile, (ErrorCode, String)> {
+    let bad = |msg: &str| (ErrorCode::BadFrame, msg.to_string());
     let na = j
         .get("num_atoms")
         .and_then(Json::as_usize)
-        .ok_or("missing num_atoms")?;
+        .ok_or_else(|| bad("missing num_atoms"))?;
     let nn = j
         .get("num_nbor")
         .and_then(Json::as_usize)
-        .ok_or("missing num_nbor")?;
+        .ok_or_else(|| bad("missing num_nbor"))?;
     let rij = j
         .get("rij")
         .and_then(Json::as_f64_vec)
-        .ok_or("missing rij")?;
+        .ok_or_else(|| bad("missing rij"))?;
     let mask = j
         .get("mask")
         .and_then(Json::as_f64_vec)
-        .ok_or("missing mask")?;
+        .ok_or_else(|| bad("missing mask"))?;
     // the optional element-type channel: both fields or neither
     let elems = match (j.get("ielems"), j.get("jelems")) {
         (None, None) => None,
         (Some(i), Some(jt)) => {
             let ielems = i
                 .as_i32_vec()
-                .ok_or("ielems must be an array of integers")?;
+                .ok_or_else(|| bad("ielems must be an array of integers"))?;
             let jelems = jt
                 .as_i32_vec()
-                .ok_or("jelems must be an array of integers")?;
+                .ok_or_else(|| bad("jelems must be an array of integers"))?;
             Some(OwnedTileElems { ielems, jelems })
         }
-        _ => return Err("ielems and jelems must be provided together".to_string()),
+        _ => return Err(bad("ielems and jelems must be provided together")),
     };
     let tile = OwnedTile { num_atoms: na, num_nbor: nn, rij, mask, elems };
-    tile.check_shape().map_err(|e| format!("shape mismatch: {e}"))?;
+    tile.check_shape()
+        .map_err(|e| (ErrorCode::BadShape, format!("shape mismatch: {e}")))?;
     Ok(tile)
+}
+
+/// Serialize one successful compute reply in the request's wire format.
+fn serialize_ok(
+    fmt: WireFmt,
+    num_atoms: usize,
+    num_nbor: usize,
+    ei: &[f64],
+    dedr: &[f64],
+) -> Vec<u8> {
+    match fmt {
+        WireFmt::Json => {
+            let mut bytes = format_ok_reply(ei, dedr).into_bytes();
+            bytes.push(b'\n');
+            bytes
+        }
+        WireFmt::Binary => wire::encode_result(num_atoms, num_nbor, ei, dedr),
+    }
+}
+
+/// Serialize an engine-failure reply in the request's wire format.
+fn serialize_engine_err(fmt: WireFmt, e: &EngineError) -> Vec<u8> {
+    error_reply_bytes(fmt, ErrorCode::from_engine(e), &e.to_string())
+}
+
+/// Serialize a structured error reply in the given wire format.
+fn error_reply_bytes(fmt: WireFmt, code: ErrorCode, msg: &str) -> Vec<u8> {
+    match fmt {
+        WireFmt::Json => {
+            let mut bytes = format!(
+                "{{\"ok\": false, \"code\": {}, \"error\": {}}}",
+                json::quote(code.name()),
+                json::quote(msg)
+            )
+            .into_bytes();
+            bytes.push(b'\n');
+            bytes
+        }
+        WireFmt::Binary => wire::encode_error(code, msg),
+    }
+}
+
+/// Serialize a stats reply (`doc` is the shared `{"ok": true, ...}` JSON
+/// document; the binary path carries it verbatim in a STATS_JSON frame).
+fn stats_reply_bytes(fmt: WireFmt, doc: &str) -> Vec<u8> {
+    match fmt {
+        WireFmt::Json => {
+            let mut bytes = doc.as_bytes().to_vec();
+            bytes.push(b'\n');
+            bytes
+        }
+        WireFmt::Binary => wire::encode_stats_json(doc),
+    }
 }
 
 /// Serialize one compute reply from output slices (for batches: a member's
@@ -669,6 +1280,78 @@ fn format_ok_reply(ei: &[f64], dedr: &[f64]) -> String {
         format!("[{}]", items.join(","))
     };
     format!("{{\"ok\": true, \"ei\": {}, \"dedr\": {}}}", fmt(ei), fmt(dedr))
+}
+
+/// After shutdown: answer every further request on a lingering connection
+/// with a structured shutdown error until the client disconnects (clients
+/// see a clean refusal, never a hang or an unexplained close).
+fn drain_session(stream: TcpStream, mode: Mode, leftover: Vec<u8>, stats: &ServerStats) {
+    match mode {
+        Mode::Detect | Mode::Json => drain_json(stream, leftover, stats),
+        Mode::Binary => drain_binary(stream, leftover, stats),
+        Mode::HelloWait => {
+            // the handshake never completed; refuse it and close
+            let mut stream = stream;
+            let _ = stream.write_all(&wire::encode_error(
+                ErrorCode::Shutdown,
+                "server shutting down",
+            ));
+        }
+    }
+}
+
+fn drain_json(stream: TcpStream, leftover: Vec<u8>, stats: &ServerStats) {
+    let Ok(peer) = stream.try_clone() else { return };
+    let mut writer = stream;
+    let reader = BufReader::new(std::io::Cursor::new(leftover).chain(peer));
+    for line in reader.lines() {
+        let Ok(line) = line else { return };
+        if line.trim().is_empty() {
+            continue;
+        }
+        stats.requests_total.fetch_add(1, Ordering::Relaxed);
+        stats.json_requests.fetch_add(1, Ordering::Relaxed);
+        stats.replies_err.fetch_add(1, Ordering::Relaxed);
+        let reply = error_reply_bytes(WireFmt::Json, ErrorCode::Shutdown, "server shutting down");
+        if writer.write_all(&reply).is_err() {
+            return;
+        }
+    }
+}
+
+fn drain_binary(stream: TcpStream, mut buf: Vec<u8>, stats: &ServerStats) {
+    let Ok(mut reader) = stream.try_clone() else { return };
+    let mut writer = stream;
+    let mut chunk = [0u8; 4096];
+    loop {
+        loop {
+            match wire::try_extract_frame(&buf) {
+                Extracted::Incomplete => break,
+                Extracted::Fatal(_) => {
+                    let _ = writer.write_all(&wire::encode_error(
+                        ErrorCode::Shutdown,
+                        "server shutting down",
+                    ));
+                    return;
+                }
+                Extracted::Frame(_, consumed) => {
+                    buf.drain(..consumed);
+                    stats.requests_total.fetch_add(1, Ordering::Relaxed);
+                    stats.binary_requests.fetch_add(1, Ordering::Relaxed);
+                    stats.replies_err.fetch_add(1, Ordering::Relaxed);
+                    let reply =
+                        wire::encode_error(ErrorCode::Shutdown, "server shutting down");
+                    if writer.write_all(&reply).is_err() {
+                        return;
+                    }
+                }
+            }
+        }
+        match reader.read(&mut chunk) {
+            Ok(0) | Err(_) => return,
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -721,6 +1404,7 @@ mod tests {
         let mut line2 = String::new();
         reader.read_line(&mut line2).unwrap();
         assert!(line2.contains("\"ok\": false"));
+        assert!(line2.contains("\"code\""), "{line2}");
         // stats over the wire
         conn.write_all(b"{\"cmd\": \"stats\"}\n").unwrap();
         let mut line3 = String::new();
@@ -732,6 +1416,13 @@ mod tests {
             Some(1),
             "{line3}"
         );
+        // the wire section reports this JSON session
+        let wire_section = stats.get("wire").expect("has wire section");
+        assert_eq!(
+            wire_section.get("json_connections").and_then(Json::as_usize),
+            Some(1),
+            "{line3}"
+        );
         drop(reader);
         drop(conn);
         shutdown(addr, &stop);
@@ -739,21 +1430,68 @@ mod tests {
     }
 
     #[test]
+    fn binary_hello_and_compute_roundtrip() {
+        let (addr, stop, h) = start(ServeOptions {
+            workers: 1,
+            ..ServeOptions::default()
+        });
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.write_all(&wire::encode_hello(wire::VERSION)).unwrap();
+        let mut ack = [0u8; 2];
+        conn.read_exact(&mut ack).unwrap();
+        assert_eq!(ack, wire::encode_hello_ack());
+        let rij = [1.5, 0.0, 0.0, 0.0, 1.5, 0.0];
+        let mask = [1.0, 1.0];
+        conn.write_all(&wire::encode_compute(1, 2, &rij, &mask, None))
+            .unwrap();
+        match wire::read_frame(&mut conn).unwrap().unwrap() {
+            wire::Frame::Result { num_atoms, num_nbor, ei, dedr } => {
+                assert_eq!((num_atoms, num_nbor), (1, 2));
+                assert_eq!(ei.len(), 1);
+                assert_eq!(dedr.len(), 6);
+                assert!(ei[0].is_finite());
+            }
+            other => panic!("expected result frame, got {other:?}"),
+        }
+        // stats over the binary wire: same JSON document, framed
+        conn.write_all(&wire::encode_stats_request()).unwrap();
+        match wire::read_frame(&mut conn).unwrap().unwrap() {
+            wire::Frame::StatsJson(doc) => {
+                let j = Json::parse(&doc).expect("stats doc parses");
+                let s = j.get("stats").expect("has stats");
+                assert_eq!(s.get("replies_ok").and_then(Json::as_usize), Some(1), "{doc}");
+                let w = s.get("wire").expect("has wire section");
+                assert_eq!(
+                    w.get("binary_connections").and_then(Json::as_usize),
+                    Some(1),
+                    "{doc}"
+                );
+            }
+            other => panic!("expected stats frame, got {other:?}"),
+        }
+        drop(conn);
+        shutdown(addr, &stop);
+        h.join().unwrap().unwrap();
+    }
+
+    #[test]
     fn error_replies_are_valid_json_even_with_quotes_in_message() {
-        let ingress = Arc::new(BoundedQueue::new(4));
-        let stats = Arc::new(ServerStats::default());
-        let ctx = SessionCtx { ingress, stats };
         // unknown cmd name embeds the offending string (with quotes/backslash)
         let line = "{\"cmd\": \"do \\\"this\\\" \\\\ now\"}";
-        let msg = match process(line, &ctx) {
-            Err(m) => m,
-            Ok(_) => panic!("expected error"),
+        let Request::Bad { code, msg } = parse_json_request(line) else {
+            panic!("expected error")
         };
-        let reply = format!("{{\"ok\": false, \"error\": {}}}", json::quote(&msg));
-        let parsed = Json::parse(&reply).expect("error reply must stay valid JSON");
+        assert_eq!(code, ErrorCode::UnknownCmd);
+        let reply_bytes = error_reply_bytes(WireFmt::Json, code, &msg);
+        let reply = std::str::from_utf8(&reply_bytes).unwrap();
+        let parsed = Json::parse(reply.trim_end()).expect("error reply must stay valid JSON");
         assert_eq!(
             parsed.get("error").and_then(Json::as_str),
             Some(msg.as_str())
+        );
+        assert_eq!(
+            parsed.get("code").and_then(Json::as_str),
+            Some("unknown_cmd")
         );
     }
 
@@ -763,7 +1501,7 @@ mod tests {
             workers: 1,
             ..ServeOptions::default()
         });
-        // no connections at all: the accept loop is parked in the kernel
+        // no connections at all: the loop is sleeping at its idle cap
         shutdown(addr, &stop);
         h.join().unwrap().unwrap();
     }

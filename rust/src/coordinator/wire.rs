@@ -1,0 +1,659 @@
+//! `repro-frame-v1`: the length-prefixed binary wire protocol the force
+//! server speaks alongside the line-delimited JSON compat path.
+//!
+//! The full specification (frame layouts, version negotiation, the error
+//! taxonomy, overload semantics) lives in `docs/PROTOCOL.md`; this module is
+//! the single implementation both the server event loop and the binary
+//! clients (`examples/force_client.rs`, the integration tests) share, so
+//! the two directions can never drift apart.
+//!
+//! Shape of the protocol:
+//!
+//! * A connection opens with a 2-byte hello `[0xB1, version]`; the server
+//!   acks with `[0xB1, 1]`.  The magic byte doubles as the auto-detect
+//!   discriminator against JSON (`{` / whitespace) on the shared port.
+//! * After the hello, both directions exchange frames:
+//!   `[len: u32 LE] [cmd: u8] [body: len-1 bytes]` — `len` counts the cmd
+//!   byte plus the body, and is capped at [`MAX_FRAME_LEN`].
+//! * Tile payloads are raw little-endian `f64`/`i32` — no text round-trip,
+//!   which is the entire point: the JSON path's `{:.17e}` format/parse per
+//!   float is the dominant per-request cost the paper's "eliminate per-item
+//!   overheads" lens says to delete.
+
+use crate::snap::engine::{EngineError, OwnedTile, OwnedTileElems};
+
+/// First byte of every binary connection (and of the server's hello ack).
+/// Chosen outside the ASCII range so it can never collide with the JSON
+/// compat path, whose first byte is `{` or whitespace.
+pub const MAGIC: u8 = 0xB1;
+
+/// The protocol version this build speaks (`repro-frame-v1`).
+pub const VERSION: u8 = 1;
+
+/// Hard cap on the declared frame length (cmd byte + body).  A peer
+/// declaring more than this is framing garbage — the connection is closed
+/// rather than buffering unboundedly.  64 MiB fits a ~330k-atom tile at
+/// 26 neighbors, far beyond the coalescer's batch ceiling.
+pub const MAX_FRAME_LEN: usize = 64 * 1024 * 1024;
+
+/// Client→server: compute one tile (`CMD_COMPUTE` body: `u32 num_atoms`,
+/// `u32 num_nbor`, `u8 typed`, then `rij`, `mask`, and — when `typed == 1`
+/// — `ielems`, `jelems`).
+pub const CMD_COMPUTE: u8 = 0x01;
+/// Client→server: request a stats snapshot (empty body).
+pub const CMD_STATS: u8 = 0x02;
+/// Server→client: forces for one tile (`u32 num_atoms`, `u32 num_nbor`,
+/// `ei`, `dedr`).
+pub const CMD_RESULT: u8 = 0x81;
+/// Server→client: stats snapshot as UTF-8 JSON (same document the JSON
+/// path returns for `{"cmd": "stats"}`).
+pub const CMD_STATS_JSON: u8 = 0x82;
+/// Server→client: structured error (`u8 code`, UTF-8 message).
+pub const CMD_ERROR: u8 = 0x7F;
+
+/// The structured-error taxonomy, shared by both wire formats: the binary
+/// path carries the `u8` tag, the JSON path carries [`ErrorCode::name`] in
+/// the reply's `"code"` field.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The request could not be parsed (malformed JSON line, body length
+    /// mismatch, bad typed flag, invalid UTF-8, ...).
+    BadFrame = 1,
+    /// The tile violates the shape contract (see `TileInput::check`).
+    BadShape = 2,
+    /// The backing engine runtime failed.
+    Backend = 3,
+    /// The engine panicked mid-dispatch (caught by the worker backstop).
+    Panicked = 4,
+    /// Admission control shed the request: the ingress queue was full.
+    /// Retry later — nothing about the request itself was wrong.
+    Overloaded = 5,
+    /// The cmd tag (binary) or `"cmd"` value (JSON) is not part of v1.
+    UnknownCmd = 6,
+    /// The server is shutting down; in-flight requests get this instead of
+    /// a silent close.
+    Shutdown = 7,
+}
+
+impl ErrorCode {
+    /// The `u8` carried in a binary [`CMD_ERROR`] frame.
+    pub fn tag(self) -> u8 {
+        self as u8
+    }
+
+    /// The snake_case name carried in JSON replies' `"code"` field.
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrorCode::BadFrame => "bad_frame",
+            ErrorCode::BadShape => "bad_shape",
+            ErrorCode::Backend => "backend",
+            ErrorCode::Panicked => "panicked",
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::UnknownCmd => "unknown_cmd",
+            ErrorCode::Shutdown => "shutdown",
+        }
+    }
+
+    /// Inverse of [`ErrorCode::tag`].
+    pub fn from_tag(tag: u8) -> Option<ErrorCode> {
+        Some(match tag {
+            1 => ErrorCode::BadFrame,
+            2 => ErrorCode::BadShape,
+            3 => ErrorCode::Backend,
+            4 => ErrorCode::Panicked,
+            5 => ErrorCode::Overloaded,
+            6 => ErrorCode::UnknownCmd,
+            7 => ErrorCode::Shutdown,
+            _ => return None,
+        })
+    }
+
+    /// The code a given engine failure maps to — one taxonomy across
+    /// compute backends and both wire formats.
+    pub fn from_engine(err: &EngineError) -> ErrorCode {
+        match err {
+            EngineError::BadShape(_) => ErrorCode::BadShape,
+            EngineError::Backend(_) => ErrorCode::Backend,
+            EngineError::Panicked(_) => ErrorCode::Panicked,
+        }
+    }
+}
+
+/// A decoded v1 frame, either direction.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Client→server: compute this tile.
+    Compute(OwnedTile),
+    /// Client→server: stats snapshot request.
+    Stats,
+    /// Server→client: forces (`ei` len = `num_atoms`, `dedr` len =
+    /// `num_atoms * num_nbor * 3`).
+    Result { num_atoms: usize, num_nbor: usize, ei: Vec<f64>, dedr: Vec<f64> },
+    /// Server→client: stats snapshot (JSON text).
+    StatsJson(String),
+    /// Server→client: structured error.
+    Error { code: ErrorCode, message: String },
+}
+
+/// A well-framed but invalid message: the framing survived (the reader
+/// knows exactly how many bytes to skip), so the connection can reply with
+/// a structured error and keep going.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BadFrame {
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl BadFrame {
+    fn new(code: ErrorCode, message: impl Into<String>) -> Self {
+        Self { code, message: message.into() }
+    }
+}
+
+/// Outcome of [`try_extract_frame`] on a connection's read buffer.
+#[derive(Debug)]
+pub enum Extracted {
+    /// Not enough buffered bytes for a full frame yet.
+    Incomplete,
+    /// One complete frame occupying `consumed` buffer bytes; `Err` means
+    /// the frame was well-delimited but its contents were invalid — reply
+    /// with the error and continue on the same connection.
+    Frame(Result<Frame, BadFrame>, usize),
+    /// The framing itself is untrustworthy (declared length over
+    /// [`MAX_FRAME_LEN`]); the caller must error out and close.
+    Fatal(String),
+}
+
+/// The 2-byte client hello.
+pub fn encode_hello(version: u8) -> [u8; 2] {
+    [MAGIC, version]
+}
+
+/// The 2-byte server hello ack (always the server's own version).
+pub fn encode_hello_ack() -> [u8; 2] {
+    [MAGIC, VERSION]
+}
+
+/// Parse the client hello at the front of `buf`.
+///
+/// `None` = need more bytes; `Some(Err)` = the peer is not speaking v1
+/// (close after sending the error); `Some(Ok(consumed))` = hello accepted.
+pub fn parse_hello(buf: &[u8]) -> Option<Result<usize, String>> {
+    if buf.is_empty() {
+        return None;
+    }
+    if buf[0] != MAGIC {
+        return Some(Err(format!(
+            "bad magic byte 0x{:02X} (expected 0x{MAGIC:02X})",
+            buf[0]
+        )));
+    }
+    if buf.len() < 2 {
+        return None;
+    }
+    let version = buf[1];
+    if version != VERSION {
+        return Some(Err(format!(
+            "unsupported protocol version {version} (this server speaks v{VERSION})"
+        )));
+    }
+    Some(Ok(2))
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64s(out: &mut Vec<u8>, vs: &[f64]) {
+    out.reserve(vs.len() * 8);
+    for v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_i32s(out: &mut Vec<u8>, vs: &[i32]) {
+    out.reserve(vs.len() * 4);
+    for v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Wrap a cmd byte + body into a length-prefixed frame.
+fn finish_frame(cmd: u8, body: Vec<u8>) -> Vec<u8> {
+    let len = body.len() + 1;
+    let mut out = Vec::with_capacity(4 + len);
+    put_u32(&mut out, len as u32);
+    out.push(cmd);
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Encode a [`CMD_COMPUTE`] frame.  `elems` carries the typed
+/// `(ielems, jelems)` channel when present; slice lengths must already
+/// satisfy the tile shape contract (the server re-validates regardless).
+pub fn encode_compute(
+    num_atoms: usize,
+    num_nbor: usize,
+    rij: &[f64],
+    mask: &[f64],
+    elems: Option<(&[i32], &[i32])>,
+) -> Vec<u8> {
+    let mut body = Vec::with_capacity(9 + (rij.len() + mask.len()) * 8);
+    put_u32(&mut body, num_atoms as u32);
+    put_u32(&mut body, num_nbor as u32);
+    body.push(u8::from(elems.is_some()));
+    put_f64s(&mut body, rij);
+    put_f64s(&mut body, mask);
+    if let Some((ielems, jelems)) = elems {
+        put_i32s(&mut body, ielems);
+        put_i32s(&mut body, jelems);
+    }
+    finish_frame(CMD_COMPUTE, body)
+}
+
+/// Encode a [`CMD_STATS`] frame (empty body).
+pub fn encode_stats_request() -> Vec<u8> {
+    finish_frame(CMD_STATS, Vec::new())
+}
+
+/// Encode a [`CMD_RESULT`] frame from a computed tile's output slices.
+pub fn encode_result(num_atoms: usize, num_nbor: usize, ei: &[f64], dedr: &[f64]) -> Vec<u8> {
+    debug_assert_eq!(ei.len(), num_atoms);
+    debug_assert_eq!(dedr.len(), num_atoms * num_nbor * 3);
+    let mut body = Vec::with_capacity(8 + (ei.len() + dedr.len()) * 8);
+    put_u32(&mut body, num_atoms as u32);
+    put_u32(&mut body, num_nbor as u32);
+    put_f64s(&mut body, ei);
+    put_f64s(&mut body, dedr);
+    finish_frame(CMD_RESULT, body)
+}
+
+/// Encode a [`CMD_STATS_JSON`] frame.
+pub fn encode_stats_json(json: &str) -> Vec<u8> {
+    finish_frame(CMD_STATS_JSON, json.as_bytes().to_vec())
+}
+
+/// Encode a [`CMD_ERROR`] frame.
+pub fn encode_error(code: ErrorCode, message: &str) -> Vec<u8> {
+    let mut body = Vec::with_capacity(1 + message.len());
+    body.push(code.tag());
+    body.extend_from_slice(message.as_bytes());
+    finish_frame(CMD_ERROR, body)
+}
+
+fn rd_u32(b: &[u8]) -> u32 {
+    u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+}
+
+fn rd_f64s(b: &[u8]) -> Vec<f64> {
+    b.chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().expect("chunks_exact(8)")))
+        .collect()
+}
+
+fn rd_i32s(b: &[u8]) -> Vec<i32> {
+    b.chunks_exact(4)
+        .map(|c| i32::from_le_bytes(c.try_into().expect("chunks_exact(4)")))
+        .collect()
+}
+
+/// Parse one frame payload (`cmd` byte + body, the `len` bytes after the
+/// length prefix).  Shared by the incremental server path
+/// ([`try_extract_frame`]) and the blocking client path ([`read_frame`]).
+pub fn parse_payload(payload: &[u8]) -> Result<Frame, BadFrame> {
+    let Some((&cmd, body)) = payload.split_first() else {
+        return Err(BadFrame::new(ErrorCode::BadFrame, "empty frame (len = 0)"));
+    };
+    match cmd {
+        CMD_COMPUTE => parse_compute_body(body),
+        CMD_STATS => {
+            if body.is_empty() {
+                Ok(Frame::Stats)
+            } else {
+                Err(BadFrame::new(
+                    ErrorCode::BadFrame,
+                    format!("stats frame must have an empty body, got {} bytes", body.len()),
+                ))
+            }
+        }
+        CMD_RESULT => parse_result_body(body),
+        CMD_STATS_JSON => match std::str::from_utf8(body) {
+            Ok(s) => Ok(Frame::StatsJson(s.to_string())),
+            Err(e) => Err(BadFrame::new(ErrorCode::BadFrame, format!("stats body not UTF-8: {e}"))),
+        },
+        CMD_ERROR => {
+            let Some((&tag, msg)) = body.split_first() else {
+                return Err(BadFrame::new(ErrorCode::BadFrame, "error frame missing code byte"));
+            };
+            let Some(code) = ErrorCode::from_tag(tag) else {
+                return Err(BadFrame::new(
+                    ErrorCode::BadFrame,
+                    format!("unknown error code tag {tag}"),
+                ));
+            };
+            match std::str::from_utf8(msg) {
+                Ok(s) => Ok(Frame::Error { code, message: s.to_string() }),
+                Err(e) => {
+                    Err(BadFrame::new(ErrorCode::BadFrame, format!("error message not UTF-8: {e}")))
+                }
+            }
+        }
+        other => Err(BadFrame::new(
+            ErrorCode::UnknownCmd,
+            format!("unknown cmd tag 0x{other:02X} in repro-frame-v1"),
+        )),
+    }
+}
+
+fn parse_compute_body(body: &[u8]) -> Result<Frame, BadFrame> {
+    if body.len() < 9 {
+        return Err(BadFrame::new(
+            ErrorCode::BadFrame,
+            format!("compute body too short: {} bytes (need at least 9)", body.len()),
+        ));
+    }
+    let num_atoms = rd_u32(&body[0..4]) as usize;
+    let num_nbor = rd_u32(&body[4..8]) as usize;
+    let typed = match body[8] {
+        0 => false,
+        1 => true,
+        other => {
+            return Err(BadFrame::new(
+                ErrorCode::BadFrame,
+                format!("typed flag must be 0 or 1, got {other}"),
+            ))
+        }
+    };
+    // Widen before multiplying: the u32 header fields can overflow usize
+    // arithmetic on paper even though MAX_FRAME_LEN rejects such frames in
+    // practice.
+    let rows = num_atoms as u128 * num_nbor as u128;
+    let mut expected = 9 + rows * 3 * 8 + rows * 8;
+    if typed {
+        expected += num_atoms as u128 * 4 + rows * 4;
+    }
+    if expected != body.len() as u128 {
+        return Err(BadFrame::new(
+            ErrorCode::BadFrame,
+            format!(
+                "compute body length mismatch: {num_atoms} atoms x {num_nbor} neighbors \
+                 (typed={}) needs {expected} bytes, got {}",
+                u8::from(typed),
+                body.len()
+            ),
+        ));
+    }
+    let rows = num_atoms * num_nbor;
+    let mut off = 9;
+    let rij = rd_f64s(&body[off..off + rows * 3 * 8]);
+    off += rows * 3 * 8;
+    let mask = rd_f64s(&body[off..off + rows * 8]);
+    off += rows * 8;
+    let elems = if typed {
+        let ielems = rd_i32s(&body[off..off + num_atoms * 4]);
+        off += num_atoms * 4;
+        let jelems = rd_i32s(&body[off..off + rows * 4]);
+        Some(OwnedTileElems { ielems, jelems })
+    } else {
+        None
+    };
+    Ok(Frame::Compute(OwnedTile { num_atoms, num_nbor, rij, mask, elems }))
+}
+
+fn parse_result_body(body: &[u8]) -> Result<Frame, BadFrame> {
+    if body.len() < 8 {
+        return Err(BadFrame::new(
+            ErrorCode::BadFrame,
+            format!("result body too short: {} bytes", body.len()),
+        ));
+    }
+    let num_atoms = rd_u32(&body[0..4]) as usize;
+    let num_nbor = rd_u32(&body[4..8]) as usize;
+    let rows = num_atoms as u128 * num_nbor as u128;
+    let expected = 8 + num_atoms as u128 * 8 + rows * 3 * 8;
+    if expected != body.len() as u128 {
+        return Err(BadFrame::new(
+            ErrorCode::BadFrame,
+            format!(
+                "result body length mismatch: {num_atoms} atoms x {num_nbor} neighbors \
+                 needs {expected} bytes, got {}",
+                body.len()
+            ),
+        ));
+    }
+    let ei = rd_f64s(&body[8..8 + num_atoms * 8]);
+    let dedr = rd_f64s(&body[8 + num_atoms * 8..]);
+    Ok(Frame::Result { num_atoms, num_nbor, ei, dedr })
+}
+
+/// Try to pull one complete frame off the front of a connection's read
+/// buffer (the event loop's incremental path).  Never consumes bytes on
+/// [`Extracted::Incomplete`].
+pub fn try_extract_frame(buf: &[u8]) -> Extracted {
+    if buf.len() < 4 {
+        return Extracted::Incomplete;
+    }
+    let len = rd_u32(&buf[0..4]) as usize;
+    if len > MAX_FRAME_LEN {
+        return Extracted::Fatal(format!(
+            "declared frame length {len} exceeds the {MAX_FRAME_LEN}-byte cap"
+        ));
+    }
+    if buf.len() < 4 + len {
+        return Extracted::Incomplete;
+    }
+    Extracted::Frame(parse_payload(&buf[4..4 + len]), 4 + len)
+}
+
+/// Blocking client-side read of one frame (length prefix + payload).
+/// Used by `force_client` and the integration tests; the server never
+/// blocks on reads and uses [`try_extract_frame`] instead.
+pub fn read_frame(r: &mut impl std::io::Read) -> std::io::Result<Result<Frame, BadFrame>> {
+    let mut lenb = [0u8; 4];
+    r.read_exact(&mut lenb)?;
+    let len = u32::from_le_bytes(lenb) as usize;
+    if len > MAX_FRAME_LEN {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("declared frame length {len} exceeds the {MAX_FRAME_LEN}-byte cap"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(parse_payload(&payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn extract_one(bytes: &[u8]) -> (Result<Frame, BadFrame>, usize) {
+        match try_extract_frame(bytes) {
+            Extracted::Frame(f, n) => (f, n),
+            other => panic!("expected a complete frame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn hello_negotiation() {
+        assert!(parse_hello(&[]).is_none());
+        assert!(parse_hello(&[MAGIC]).is_none());
+        assert_eq!(parse_hello(&encode_hello(VERSION)), Some(Ok(2)));
+        assert!(parse_hello(&encode_hello(9)).unwrap().is_err());
+        assert!(parse_hello(b"Q").unwrap().is_err());
+        assert_eq!(encode_hello_ack(), [MAGIC, VERSION]);
+    }
+
+    #[test]
+    fn compute_roundtrip_untyped_is_bit_exact() {
+        let (na, nn) = (2usize, 3usize);
+        let rij: Vec<f64> = (0..na * nn * 3).map(|i| (i as f64).sqrt() - 1.5).collect();
+        let mask = vec![1.0, 1.0, 0.0, 1.0, 0.0, 0.0];
+        let bytes = encode_compute(na, nn, &rij, &mask, None);
+        let (frame, consumed) = extract_one(&bytes);
+        assert_eq!(consumed, bytes.len());
+        match frame.unwrap() {
+            Frame::Compute(tile) => {
+                assert_eq!(tile.num_atoms, na);
+                assert_eq!(tile.num_nbor, nn);
+                assert!(tile.rij.iter().zip(&rij).all(|(a, b)| a.to_bits() == b.to_bits()));
+                assert_eq!(tile.mask, mask);
+                assert!(tile.elems.is_none());
+                tile.check_shape().unwrap();
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn compute_roundtrip_typed_carries_elems() {
+        let (na, nn) = (2usize, 2usize);
+        let rij = vec![0.5; na * nn * 3];
+        let mask = vec![1.0; na * nn];
+        let ielems = vec![1, 0];
+        let jelems = vec![0, 1, 1, 0];
+        let bytes = encode_compute(na, nn, &rij, &mask, Some((&ielems, &jelems)));
+        let (frame, _) = extract_one(&bytes);
+        match frame.unwrap() {
+            Frame::Compute(tile) => {
+                let e = tile.elems.expect("typed tile");
+                assert_eq!(e.ielems, ielems);
+                assert_eq!(e.jelems, jelems);
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn result_roundtrip_is_bit_exact() {
+        let (na, nn) = (3usize, 2usize);
+        let ei: Vec<f64> = (0..na).map(|i| -1.0 / (i as f64 + 1.0)).collect();
+        let dedr: Vec<f64> = (0..na * nn * 3).map(|i| (i as f64) * 0.1 - 0.7).collect();
+        let bytes = encode_result(na, nn, &ei, &dedr);
+        let (frame, _) = extract_one(&bytes);
+        match frame.unwrap() {
+            Frame::Result { num_atoms, num_nbor, ei: e, dedr: d } => {
+                assert_eq!((num_atoms, num_nbor), (na, nn));
+                assert!(e.iter().zip(&ei).all(|(a, b)| a.to_bits() == b.to_bits()));
+                assert!(d.iter().zip(&dedr).all(|(a, b)| a.to_bits() == b.to_bits()));
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stats_and_error_frames_roundtrip() {
+        let (frame, _) = extract_one(&encode_stats_request());
+        assert_eq!(frame.unwrap(), Frame::Stats);
+
+        let (frame, _) = extract_one(&encode_stats_json("{\"ok\": true}"));
+        assert_eq!(frame.unwrap(), Frame::StatsJson("{\"ok\": true}".into()));
+
+        let (frame, _) = extract_one(&encode_error(ErrorCode::Overloaded, "queue full"));
+        assert_eq!(
+            frame.unwrap(),
+            Frame::Error { code: ErrorCode::Overloaded, message: "queue full".into() }
+        );
+    }
+
+    #[test]
+    fn incomplete_prefixes_never_consume() {
+        let bytes = encode_compute(1, 1, &[0.1, 0.2, 0.3], &[1.0], None);
+        for cut in 0..bytes.len() {
+            match try_extract_frame(&bytes[..cut]) {
+                Extracted::Incomplete => {}
+                other => panic!("cut at {cut}: expected Incomplete, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn two_frames_back_to_back_extract_in_order() {
+        let mut buf = encode_stats_request();
+        buf.extend_from_slice(&encode_compute(1, 1, &[0.0; 3], &[1.0], None));
+        let (f1, n1) = extract_one(&buf);
+        assert_eq!(f1.unwrap(), Frame::Stats);
+        let (f2, n2) = extract_one(&buf[n1..]);
+        assert!(matches!(f2.unwrap(), Frame::Compute(_)));
+        assert_eq!(n1 + n2, buf.len());
+    }
+
+    #[test]
+    fn oversize_declared_length_is_fatal() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, (MAX_FRAME_LEN + 1) as u32);
+        buf.push(CMD_COMPUTE);
+        match try_extract_frame(&buf) {
+            Extracted::Fatal(msg) => assert!(msg.contains("cap"), "{msg}"),
+            other => panic!("expected Fatal, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_bodies_are_survivable_bad_frames() {
+        // unknown cmd tag
+        let (frame, n) = extract_one(&finish_frame(0x55, vec![1, 2, 3]));
+        let bad = frame.unwrap_err();
+        assert_eq!(bad.code, ErrorCode::UnknownCmd);
+        assert_eq!(n, 4 + 4);
+
+        // compute body length that disagrees with its own header
+        let mut body = Vec::new();
+        put_u32(&mut body, 2);
+        put_u32(&mut body, 3);
+        body.push(0);
+        body.extend_from_slice(&[0u8; 16]); // far less than 2*3 rows need
+        let (frame, _) = extract_one(&finish_frame(CMD_COMPUTE, body));
+        let bad = frame.unwrap_err();
+        assert_eq!(bad.code, ErrorCode::BadFrame);
+        assert!(bad.message.contains("length mismatch"), "{}", bad.message);
+
+        // bad typed flag
+        let mut body = Vec::new();
+        put_u32(&mut body, 0);
+        put_u32(&mut body, 0);
+        body.push(7);
+        let (frame, _) = extract_one(&finish_frame(CMD_COMPUTE, body));
+        assert!(frame.unwrap_err().message.contains("typed flag"));
+
+        // zero-length frame
+        let mut raw = Vec::new();
+        put_u32(&mut raw, 0);
+        let (frame, n) = extract_one(&raw);
+        assert_eq!(frame.unwrap_err().code, ErrorCode::BadFrame);
+        assert_eq!(n, 4);
+    }
+
+    #[test]
+    fn error_code_tags_and_names_roundtrip() {
+        for code in [
+            ErrorCode::BadFrame,
+            ErrorCode::BadShape,
+            ErrorCode::Backend,
+            ErrorCode::Panicked,
+            ErrorCode::Overloaded,
+            ErrorCode::UnknownCmd,
+            ErrorCode::Shutdown,
+        ] {
+            assert_eq!(ErrorCode::from_tag(code.tag()), Some(code));
+            assert!(!code.name().is_empty());
+        }
+        assert_eq!(ErrorCode::from_tag(0), None);
+        assert_eq!(ErrorCode::from_tag(200), None);
+        assert_eq!(
+            ErrorCode::from_engine(&EngineError::BadShape("x".into())),
+            ErrorCode::BadShape
+        );
+        assert_eq!(ErrorCode::from_engine(&EngineError::Backend("x".into())), ErrorCode::Backend);
+        assert_eq!(ErrorCode::from_engine(&EngineError::Panicked("x".into())), ErrorCode::Panicked);
+    }
+
+    #[test]
+    fn blocking_read_frame_matches_incremental_path() {
+        let bytes = encode_compute(1, 2, &[0.1; 6], &[1.0, 0.0], None);
+        let mut cursor = std::io::Cursor::new(bytes.clone());
+        let via_read = read_frame(&mut cursor).unwrap().unwrap();
+        let (via_extract, _) = extract_one(&bytes);
+        assert_eq!(via_read, via_extract.unwrap());
+    }
+}

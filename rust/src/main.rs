@@ -122,7 +122,12 @@ fn print_help() {
          persists it (default: $REPRO_PLAN_CACHE or repro_plan.json) and\n\
          records the explored frontier as BENCH_tune.json; `--plan auto`\n\
          serves from the cached plan (stale/corrupt caches fall back to a\n\
-         default plan — re-run `tune` to refresh)."
+         default plan — re-run `tune` to refresh).\n\
+         \n\
+         `serve` speaks two protocols on one port: line-delimited JSON and\n\
+         the repro-frame-v1 binary framing (first byte 0xB1 switches; see\n\
+         docs/PROTOCOL.md). `{{\"cmd\": \"stats\"}}` reports pipeline counters,\n\
+         per-stage latency histograms, and per-session wire state."
     );
 }
 
@@ -306,7 +311,8 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     let listener = std::net::TcpListener::bind(("0.0.0.0", port))?;
     println!(
         "force server on :{port} engine={} 2J={twojmax} workers={} \
-         shards={} batch-window={}us queue-depth={} (ctrl-c to stop)",
+         shards={} batch-window={}us queue-depth={} \
+         protocols=json+repro-frame-v1 (ctrl-c to stop)",
         if opts.plan.is_some() { "planned" } else { engine_name.as_str() },
         opts.workers,
         opts.shards.max(1),

@@ -174,7 +174,7 @@ impl<'a> TileInput<'a> {
 }
 
 /// Owned twin of [`TileElems`] for tiles that cross thread boundaries.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct OwnedTileElems {
     pub ielems: Vec<i32>,
     pub jelems: Vec<i32>,
@@ -182,7 +182,7 @@ pub struct OwnedTileElems {
 
 /// An owned tile — the borrow-free twin of [`TileInput`], used where tiles
 /// must cross thread boundaries (the force server's work queue).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct OwnedTile {
     pub num_atoms: usize,
     pub num_nbor: usize,

@@ -1,0 +1,176 @@
+//! Lock-free latency histograms for the serving pipeline's per-stage
+//! profiling (`parse`, `queue_wait`, `compute`, `reply`).
+//!
+//! A [`LatencyHistogram`] is a fixed array of power-of-two nanosecond
+//! buckets, each an `AtomicU64`: recording is a couple of relaxed atomic
+//! increments, so every worker and the event loop can hit the same
+//! histogram without contention.  Quantiles are reconstructed from bucket
+//! counts at stats time — the log2 bucketing bounds relative error at 2x,
+//! which is plenty for spotting a p99 that is 100x the p50.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Number of log2 buckets: bucket `i` holds samples in
+/// `[2^i, 2^(i+1))` nanoseconds; the last bucket is open-ended.
+/// 48 buckets cover 1 ns .. ~78 hours, beyond any per-request stage.
+const BUCKETS: usize = 48;
+
+/// A concurrent log2-bucketed histogram of durations, in nanoseconds.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample.  Relaxed atomics only — safe from any thread.
+    pub fn record(&self, d: Duration) {
+        let ns = d.as_nanos().min(u64::MAX as u128) as u64;
+        let idx = (64 - ns.leading_zeros() as usize).saturating_sub(1).min(BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    /// Total number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile (`q` in `[0, 1]`) in nanoseconds, from bucket
+    /// counts.  Returns the geometric midpoint of the bucket containing the
+    /// `q`-th sample; 0 when empty.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                // geometric midpoint of [2^i, 2^(i+1))
+                let lo = 1u64 << i;
+                return lo + lo / 2;
+            }
+        }
+        self.max_ns.load(Ordering::Relaxed)
+    }
+
+    /// Maximum recorded sample in nanoseconds.
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns.load(Ordering::Relaxed)
+    }
+
+    /// Mean in nanoseconds (0 when empty).
+    pub fn mean_ns(&self) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            0
+        } else {
+            self.sum_ns.load(Ordering::Relaxed) / n
+        }
+    }
+
+    /// Render as a JSON object string:
+    /// `{"count": N, "p50_us": X, "p99_us": Y, "mean_us": Z, "max_us": W}`.
+    /// Microsecond floats keep the stats reply humane at both ends of the
+    /// scale (sub-µs parses, multi-ms computes).
+    pub fn summary_json(&self) -> String {
+        format!(
+            "{{\"count\": {}, \"p50_us\": {:.3}, \"p99_us\": {:.3}, \"mean_us\": {:.3}, \
+             \"max_us\": {:.3}}}",
+            self.count(),
+            self.quantile_ns(0.50) as f64 / 1e3,
+            self.quantile_ns(0.99) as f64 / 1e3,
+            self.mean_ns() as f64 / 1e3,
+            self.max_ns() as f64 / 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile_ns(0.5), 0);
+        assert_eq!(h.max_ns(), 0);
+        assert_eq!(h.mean_ns(), 0);
+        assert!(h.summary_json().contains("\"count\": 0"));
+    }
+
+    #[test]
+    fn quantiles_land_in_the_right_log2_bucket() {
+        let h = LatencyHistogram::new();
+        // 90 samples near 1µs, 10 near 1ms: p50 must sit in the µs decade,
+        // p99 in the ms decade (log2 buckets => within 2x).
+        for _ in 0..90 {
+            h.record(Duration::from_nanos(1_000));
+        }
+        for _ in 0..10 {
+            h.record(Duration::from_nanos(1_000_000));
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile_ns(0.50);
+        assert!((512..2048).contains(&p50), "p50={p50}");
+        let p99 = h.quantile_ns(0.99);
+        assert!((524_288..2_097_152).contains(&p99), "p99={p99}");
+        assert_eq!(h.max_ns(), 1_000_000);
+        assert!(h.mean_ns() >= 1_000 && h.mean_ns() <= 200_000);
+    }
+
+    #[test]
+    fn zero_duration_and_monotone_quantiles() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_nanos(0));
+        h.record(Duration::from_nanos(10));
+        h.record(Duration::from_nanos(100_000));
+        let p10 = h.quantile_ns(0.10);
+        let p50 = h.quantile_ns(0.50);
+        let p99 = h.quantile_ns(0.99);
+        assert!(p10 <= p50 && p50 <= p99, "{p10} {p50} {p99}");
+    }
+
+    #[test]
+    fn concurrent_records_all_counted() {
+        let h = std::sync::Arc::new(LatencyHistogram::new());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..250u64 {
+                        h.record(Duration::from_nanos(i * 17 + 1));
+                    }
+                })
+            })
+            .collect();
+        for t in handles {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 1000);
+    }
+}

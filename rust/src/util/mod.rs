@@ -6,11 +6,13 @@
 //! these utilities replace what `rayon`, `serde_json` and `criterion` would
 //! normally provide.
 
+pub mod hist;
 pub mod json;
 pub mod parallel;
 pub mod rng;
 pub mod timer;
 
+pub use hist::LatencyHistogram;
 pub use parallel::{parallel_for, parallel_map, ThreadPool};
 pub use rng::XorShift;
 pub use timer::{Stopwatch, StageTimes};

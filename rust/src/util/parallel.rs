@@ -100,7 +100,7 @@ struct PoolShared {
 }
 
 /// A persistent worker pool: threads parked on a condvar between
-/// submissions, fed whole [`Batch`]es; every lane (workers + the submitter)
+/// submissions, fed whole `Batch`es; every lane (workers + the submitter)
 /// claims indices off one shared atomic counter.
 ///
 /// Nested submissions are safe: a lane that submits from inside a task
@@ -258,6 +258,15 @@ pub fn parallel_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, f: F) -> Vec<T>
     ThreadPool::global().map(n, f)
 }
 
+/// Rejected [`BoundedQueue::try_send`], handing the item back.
+#[derive(Debug)]
+pub enum TrySend<T> {
+    /// The queue is at capacity; the caller should shed or retry.
+    Full(T),
+    /// The queue has been closed.
+    Closed(T),
+}
+
 /// Result of a [`BoundedQueue::recv_timeout`].
 #[derive(Debug)]
 pub enum RecvTimeout<T> {
@@ -313,6 +322,23 @@ impl<T> BoundedQueue<T> {
             }
             st = self.not_full.wait(st).unwrap();
         }
+    }
+
+    /// Enqueue without blocking.  `Full` when the queue is at capacity —
+    /// this is the admission-control path: the event loop sheds the request
+    /// with a structured `overloaded` reply instead of parking the whole
+    /// loop (which would stall every other connection it multiplexes).
+    pub fn try_send(&self, item: T) -> Result<(), TrySend<T>> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(TrySend::Closed(item));
+        }
+        if st.items.len() >= self.capacity {
+            return Err(TrySend::Full(item));
+        }
+        st.items.push_back(item);
+        self.not_empty.notify_one();
+        Ok(())
     }
 
     /// Dequeue, blocking while empty.  `None` once closed and drained.
@@ -519,6 +545,27 @@ mod tests {
             h.join().unwrap();
         }
         assert!(seen.lock().unwrap().iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn bounded_queue_try_send_sheds_when_full_and_reports_closed() {
+        let q = BoundedQueue::new(2);
+        q.try_send(1).unwrap();
+        q.try_send(2).unwrap();
+        match q.try_send(3) {
+            Err(TrySend::Full(3)) => {}
+            other => panic!("expected Full(3), got {other:?}"),
+        }
+        assert_eq!(q.recv(), Some(1));
+        q.try_send(4).unwrap();
+        q.close();
+        match q.try_send(5) {
+            Err(TrySend::Closed(5)) => {}
+            other => panic!("expected Closed(5), got {other:?}"),
+        }
+        assert_eq!(q.recv(), Some(2));
+        assert_eq!(q.recv(), Some(4));
+        assert_eq!(q.recv(), None);
     }
 
     #[test]

@@ -1,0 +1,620 @@
+//! Dual-protocol serving tests: one server, one port, two wire formats.
+//! The binary `repro-frame-v1` path must be *bit-identical* to the JSON
+//! path (the wire changes encoding cost, never physics), malformed binary
+//! frames must come back as structured errors without hurting anyone else,
+//! and admission control must shed — not stall — under queue pressure.
+
+use repro::config::EngineSpec;
+use repro::coordinator::server::{serve_with_stats, shutdown, ServeOptions, ServerStats};
+use repro::coordinator::wire::{self, ErrorCode, Frame};
+use repro::snap::coeff::SnapCoeffs;
+use repro::snap::{EngineFactory, SnapIndex};
+use repro::util::json::Json;
+use repro::util::XorShift;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier};
+
+fn factory(engine: &str, twojmax: usize) -> EngineFactory {
+    let idx = SnapIndex::new(twojmax);
+    let coeffs = SnapCoeffs::synthetic(twojmax, idx.idxb_max, 42);
+    EngineSpec::new(twojmax)
+        .engine(engine)
+        .beta(coeffs.beta)
+        .build_factory()
+        .unwrap()
+        .factory
+}
+
+fn multi_factory(twojmax: usize) -> EngineFactory {
+    let idx = SnapIndex::new(twojmax);
+    let coeffs = SnapCoeffs::synthetic_multi(twojmax, idx.idxb_max, 2, 42);
+    EngineSpec::new(twojmax)
+        .engine("fused")
+        .beta(coeffs.beta)
+        .elements(coeffs.elements.clone())
+        .build_factory()
+        .unwrap()
+        .factory
+}
+
+struct TestServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    stats: Arc<ServerStats>,
+    handle: std::thread::JoinHandle<std::io::Result<()>>,
+}
+
+impl TestServer {
+    fn start_with_factory(opts: ServeOptions, f: EngineFactory) -> Self {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(ServerStats::default());
+        let (stop2, stats2) = (stop.clone(), stats.clone());
+        let handle = std::thread::spawn(move || {
+            serve_with_stats(listener, f, &opts, stop2, stats2)
+        });
+        TestServer { addr, stop, stats, handle }
+    }
+
+    fn start(opts: ServeOptions, engine: &str, twojmax: usize) -> Self {
+        Self::start_with_factory(opts, factory(engine, twojmax))
+    }
+
+    fn finish(self) {
+        shutdown(self.addr, &self.stop);
+        self.handle.join().unwrap().unwrap();
+    }
+}
+
+fn sequential_opts() -> ServeOptions {
+    ServeOptions {
+        workers: 1,
+        batch_window: std::time::Duration::ZERO,
+        queue_depth: 64,
+        max_batch_atoms: 32,
+        ..ServeOptions::default()
+    }
+}
+
+/// A line-delimited JSON client.
+struct JsonClient {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl JsonClient {
+    fn connect(addr: SocketAddr) -> JsonClient {
+        let conn = TcpStream::connect(addr).unwrap();
+        let writer = conn.try_clone().unwrap();
+        JsonClient { writer, reader: BufReader::new(conn) }
+    }
+
+    fn roundtrip(&mut self, line: &str) -> String {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply).unwrap();
+        reply.trim_end().to_string()
+    }
+}
+
+/// A repro-frame-v1 client (performs the hello handshake on connect).
+struct BinClient {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl BinClient {
+    fn connect(addr: SocketAddr) -> BinClient {
+        let conn = TcpStream::connect(addr).unwrap();
+        let mut writer = conn.try_clone().unwrap();
+        let mut reader = BufReader::new(conn);
+        writer.write_all(&wire::encode_hello(wire::VERSION)).unwrap();
+        let mut ack = [0u8; 2];
+        reader.read_exact(&mut ack).unwrap();
+        assert_eq!(ack, wire::encode_hello_ack(), "bad hello ack");
+        BinClient { writer, reader }
+    }
+
+    fn send(&mut self, frame: &[u8]) {
+        self.writer.write_all(frame).unwrap();
+    }
+
+    fn recv(&mut self) -> Frame {
+        wire::read_frame(&mut self.reader)
+            .expect("frame read")
+            .expect("reply frames are well-formed")
+    }
+}
+
+/// Deterministic tile with `na` atoms, `nn` neighbor slots, some masked —
+/// the same geometry generator as the JSON-side concurrency tests.
+fn tile_data(seed: u64, na: usize, nn: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = XorShift::new(seed);
+    let mut rij = Vec::new();
+    let mut mask = Vec::new();
+    for _ in 0..na * nn {
+        loop {
+            let v = [
+                rng.uniform(-2.4, 2.4),
+                rng.uniform(-2.4, 2.4),
+                rng.uniform(-2.4, 2.4),
+            ];
+            if (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]).sqrt() > 0.5 {
+                rij.extend_from_slice(&v);
+                break;
+            }
+        }
+        mask.push(if rng.next_f64() > 0.25 { 1.0 } else { 0.0 });
+    }
+    (rij, mask)
+}
+
+/// The JSON request for the same tile (`x.to_string()` round-trips f64
+/// exactly, so both wires submit bit-identical inputs).
+fn json_request(na: usize, nn: usize, rij: &[f64], mask: &[f64]) -> String {
+    let fmt = |v: &[f64]| {
+        v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+    };
+    format!(
+        "{{\"num_atoms\": {na}, \"num_nbor\": {nn}, \"rij\": [{}], \"mask\": [{}]}}",
+        fmt(rij),
+        fmt(mask)
+    )
+}
+
+/// Extract (ei, dedr) from a JSON ok-reply (the `{:.17e}` formatting
+/// round-trips f64 exactly, so these are the server's exact output bits).
+fn parse_json_ok(reply: &str) -> (Vec<f64>, Vec<f64>) {
+    let j = Json::parse(reply).unwrap_or_else(|e| panic!("bad reply ({e}): {reply}"));
+    assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{reply}");
+    let ei = j.get("ei").and_then(Json::as_f64_vec).expect("ei array");
+    let dedr = j.get("dedr").and_then(Json::as_f64_vec).expect("dedr array");
+    (ei, dedr)
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}[{i}]: {x:?} != {y:?} (bitwise)"
+        );
+    }
+}
+
+/// Core differential: the same tile over JSON and over repro-frame-v1 must
+/// produce bit-identical outputs — the binary wire changes serialization
+/// cost, never the physics.
+#[test]
+fn binary_replies_are_bit_identical_to_json() {
+    let srv = TestServer::start(sequential_opts(), "fused", 2);
+
+    for (seed, na, nn) in [(31u64, 1usize, 4usize), (32, 3, 4), (33, 12, 6)] {
+        let (rij, mask) = tile_data(seed, na, nn);
+
+        let mut jc = JsonClient::connect(srv.addr);
+        let (json_ei, json_dedr) = parse_json_ok(&jc.roundtrip(&json_request(na, nn, &rij, &mask)));
+        drop(jc);
+
+        let mut bc = BinClient::connect(srv.addr);
+        bc.send(&wire::encode_compute(na, nn, &rij, &mask, None));
+        match bc.recv() {
+            Frame::Result { num_atoms, num_nbor, ei, dedr } => {
+                assert_eq!((num_atoms, num_nbor), (na, nn));
+                assert_bits_eq(&json_ei, &ei, "ei");
+                assert_bits_eq(&json_dedr, &dedr, "dedr");
+            }
+            other => panic!("expected result, got {other:?}"),
+        }
+    }
+    srv.finish();
+}
+
+/// Same differential through the typed `ielems`/`jelems` channel on a
+/// multi-element server.
+#[test]
+fn typed_binary_replies_are_bit_identical_to_json() {
+    let srv = TestServer::start_with_factory(sequential_opts(), multi_factory(2));
+    let (na, nn) = (3usize, 4usize);
+    let (rij, mask) = tile_data(77, na, nn);
+    let ielems: Vec<i32> = (0..na).map(|a| (a % 2) as i32).collect();
+    let jelems: Vec<i32> = (0..na * nn).map(|r| (r % 2) as i32).collect();
+
+    let fmt_i = |v: &[i32]| {
+        v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+    };
+    let typed_json = format!(
+        "{}, \"ielems\": [{}], \"jelems\": [{}]}}",
+        json_request(na, nn, &rij, &mask).trim_end_matches('}'),
+        fmt_i(&ielems),
+        fmt_i(&jelems)
+    );
+    let mut jc = JsonClient::connect(srv.addr);
+    let (json_ei, json_dedr) = parse_json_ok(&jc.roundtrip(&typed_json));
+    drop(jc);
+
+    let mut bc = BinClient::connect(srv.addr);
+    bc.send(&wire::encode_compute(na, nn, &rij, &mask, Some((&ielems, &jelems))));
+    match bc.recv() {
+        Frame::Result { ei, dedr, .. } => {
+            assert_bits_eq(&json_ei, &ei, "typed ei");
+            assert_bits_eq(&json_dedr, &dedr, "typed dedr");
+        }
+        other => panic!("expected result, got {other:?}"),
+    }
+    srv.finish();
+}
+
+/// Mixed-protocol serving: JSON and binary clients hammer one server
+/// concurrently (coalescer and worker pool on); every reply must match the
+/// sequential ground truth bit for bit, regardless of which wire carried it.
+#[test]
+fn mixed_protocol_clients_share_one_server_bitwise() {
+    let tiles: Vec<(usize, usize, Vec<f64>, Vec<f64>)> = (0..6u64)
+        .map(|k| {
+            let (na, nn) = if k % 3 == 2 { (3, 4) } else { (1, 4) };
+            let (rij, mask) = tile_data(400 + k, na, nn);
+            (na, nn, rij, mask)
+        })
+        .collect();
+
+    // sequential ground truth, via JSON (exact round-trip)
+    let seq = TestServer::start(sequential_opts(), "fused", 2);
+    let mut jc = JsonClient::connect(seq.addr);
+    let expected: Vec<(Vec<f64>, Vec<f64>)> = tiles
+        .iter()
+        .map(|(na, nn, rij, mask)| {
+            parse_json_ok(&jc.roundtrip(&json_request(*na, *nn, rij, mask)))
+        })
+        .collect();
+    drop(jc);
+    seq.finish();
+
+    let opts = ServeOptions {
+        workers: 4,
+        batch_window: std::time::Duration::from_micros(300),
+        queue_depth: 64,
+        max_batch_atoms: 32,
+        ..ServeOptions::default()
+    };
+    let srv = TestServer::start(opts, "fused", 2);
+    let addr = srv.addr;
+    let tiles = Arc::new(tiles);
+    let expected = Arc::new(expected);
+    let barrier = Arc::new(Barrier::new(8));
+    let handles: Vec<_> = (0..8)
+        .map(|c| {
+            let (tiles, expected, barrier) = (tiles.clone(), expected.clone(), barrier.clone());
+            std::thread::spawn(move || {
+                if c % 2 == 0 {
+                    let mut client = JsonClient::connect(addr);
+                    barrier.wait();
+                    for rep in 0..3 {
+                        for (k, (na, nn, rij, mask)) in tiles.iter().enumerate() {
+                            let req = json_request(*na, *nn, rij, mask);
+                            let got = parse_json_ok(&client.roundtrip(&req));
+                            assert_bits_eq(
+                                &expected[k].0,
+                                &got.0,
+                                &format!("json client {c} rep {rep} tile {k} ei"),
+                            );
+                            assert_bits_eq(
+                                &expected[k].1,
+                                &got.1,
+                                &format!("json client {c} rep {rep} tile {k} dedr"),
+                            );
+                        }
+                    }
+                } else {
+                    let mut client = BinClient::connect(addr);
+                    barrier.wait();
+                    for rep in 0..3 {
+                        for (k, (na, nn, rij, mask)) in tiles.iter().enumerate() {
+                            client.send(&wire::encode_compute(*na, *nn, rij, mask, None));
+                            match client.recv() {
+                                Frame::Result { ei, dedr, .. } => {
+                                    assert_bits_eq(
+                                        &expected[k].0,
+                                        &ei,
+                                        &format!("bin client {c} rep {rep} tile {k} ei"),
+                                    );
+                                    assert_bits_eq(
+                                        &expected[k].1,
+                                        &dedr,
+                                        &format!("bin client {c} rep {rep} tile {k} dedr"),
+                                    );
+                                }
+                                other => panic!("client {c}: expected result, got {other:?}"),
+                            }
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    srv.finish();
+}
+
+fn raw_frame(cmd: u8, body: &[u8]) -> Vec<u8> {
+    let mut f = Vec::new();
+    f.extend_from_slice(&((1 + body.len()) as u32).to_le_bytes());
+    f.push(cmd);
+    f.extend_from_slice(body);
+    f
+}
+
+/// Well-framed but invalid binary frames get structured error replies and
+/// the connection (and worker) survive to serve the next request.
+#[test]
+fn malformed_binary_frames_are_structured_and_survivable() {
+    let srv = TestServer::start(sequential_opts(), "fused", 2);
+    let mut client = BinClient::connect(srv.addr);
+
+    // unknown command tag
+    client.send(&raw_frame(0x55, &[]));
+    match client.recv() {
+        Frame::Error { code, message } => {
+            assert_eq!(code, ErrorCode::UnknownCmd, "{message}");
+            assert!(message.contains("0x55"), "{message}");
+        }
+        other => panic!("expected error, got {other:?}"),
+    }
+
+    // compute body length that disagrees with its own header
+    let mut body = Vec::new();
+    body.extend_from_slice(&2u32.to_le_bytes()); // num_atoms
+    body.extend_from_slice(&2u32.to_le_bytes()); // num_nbor
+    body.push(0); // untyped
+    body.extend_from_slice(&1.5f64.to_le_bytes()); // far too few floats
+    client.send(&raw_frame(wire::CMD_COMPUTE, &body));
+    match client.recv() {
+        Frame::Error { code, message } => {
+            assert_eq!(code, ErrorCode::BadFrame, "{message}");
+            assert!(message.contains("length mismatch"), "{message}");
+        }
+        other => panic!("expected error, got {other:?}"),
+    }
+
+    // bad typed flag
+    let mut body = Vec::new();
+    body.extend_from_slice(&1u32.to_le_bytes());
+    body.extend_from_slice(&1u32.to_le_bytes());
+    body.push(7);
+    client.send(&raw_frame(wire::CMD_COMPUTE, &body));
+    match client.recv() {
+        Frame::Error { code, message } => {
+            assert_eq!(code, ErrorCode::BadFrame, "{message}");
+            assert!(message.contains("typed flag"), "{message}");
+        }
+        other => panic!("expected error, got {other:?}"),
+    }
+
+    // zero-length frame
+    client.send(&0u32.to_le_bytes());
+    match client.recv() {
+        Frame::Error { code, .. } => assert_eq!(code, ErrorCode::BadFrame),
+        other => panic!("expected error, got {other:?}"),
+    }
+
+    // the same connection and the single worker still compute correctly
+    let (rij, mask) = tile_data(91, 1, 4);
+    client.send(&wire::encode_compute(1, 4, &rij, &mask, None));
+    match client.recv() {
+        Frame::Result { num_atoms, ei, .. } => {
+            assert_eq!(num_atoms, 1);
+            assert!(ei[0].is_finite());
+        }
+        other => panic!("connection/worker died after bad frames: {other:?}"),
+    }
+
+    drop(client);
+    srv.finish();
+}
+
+/// Frames whose declared length is untrustworthy (oversize) poison the
+/// framing itself: the server replies once, then closes that connection —
+/// but other connections and the workers are untouched.
+#[test]
+fn oversize_frame_closes_connection_but_not_server() {
+    let srv = TestServer::start(sequential_opts(), "fused", 2);
+
+    let mut bad = BinClient::connect(srv.addr);
+    let huge = (wire::MAX_FRAME_LEN as u32) + 1;
+    bad.writer.write_all(&huge.to_le_bytes()).unwrap();
+    bad.writer.flush().unwrap();
+    match bad.recv() {
+        Frame::Error { code, message } => {
+            assert_eq!(code, ErrorCode::BadFrame, "{message}");
+            assert!(message.contains("exceeds"), "{message}");
+        }
+        other => panic!("expected error, got {other:?}"),
+    }
+    // ... and then EOF: the connection is gone
+    let mut rest = Vec::new();
+    bad.reader.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty(), "no bytes after the fatal error");
+
+    // a fresh connection is served normally
+    let mut good = BinClient::connect(srv.addr);
+    let (rij, mask) = tile_data(92, 1, 4);
+    good.send(&wire::encode_compute(1, 4, &rij, &mask, None));
+    assert!(matches!(good.recv(), Frame::Result { .. }));
+    drop(good);
+    srv.finish();
+}
+
+/// A hello with an unsupported version is refused with a structured error
+/// and a close; the server keeps serving v1 clients.
+#[test]
+fn unsupported_hello_version_is_refused() {
+    let srv = TestServer::start(sequential_opts(), "fused", 2);
+
+    let conn = TcpStream::connect(srv.addr).unwrap();
+    let mut writer = conn.try_clone().unwrap();
+    let mut reader = BufReader::new(conn);
+    writer.write_all(&wire::encode_hello(9)).unwrap();
+    match wire::read_frame(&mut reader).unwrap().unwrap() {
+        Frame::Error { code, message } => {
+            assert_eq!(code, ErrorCode::BadFrame, "{message}");
+            assert!(message.contains("version 9"), "{message}");
+        }
+        other => panic!("expected error, got {other:?}"),
+    }
+    let mut rest = Vec::new();
+    reader.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty(), "connection must close after a refused hello");
+
+    // v1 still negotiates fine
+    let _ok = BinClient::connect(srv.addr);
+    srv.finish();
+}
+
+/// Admission control: with a tiny ingress queue and a slow engine, a burst
+/// must be shed with structured `overloaded` replies — never a stalled
+/// event loop — and the accounting must still close exactly.
+#[test]
+fn overload_sheds_with_structured_replies_and_exact_accounting() {
+    use repro::snap::engine::{EngineError, ForceEngine, TileInput, TileOutput};
+
+    /// Engine that takes 100ms per dispatch, so a burst outruns the pipeline.
+    struct Slow;
+    impl ForceEngine for Slow {
+        fn name(&self) -> &str {
+            "slow"
+        }
+        fn compute_into(
+            &mut self,
+            input: &TileInput,
+            out: &mut TileOutput,
+        ) -> Result<(), EngineError> {
+            input.check()?;
+            std::thread::sleep(std::time::Duration::from_millis(100));
+            out.reset(input.num_atoms, input.num_nbor);
+            out.ei.fill(2.0);
+            Ok(())
+        }
+        fn footprint(&self, _na: usize, _nn: usize) -> repro::snap::memory::MemoryFootprint {
+            repro::snap::memory::MemoryFootprint::new()
+        }
+    }
+
+    let f: EngineFactory = Arc::new(|| Ok(Box::new(Slow) as Box<dyn ForceEngine>));
+    let opts = ServeOptions {
+        workers: 1,
+        batch_window: std::time::Duration::ZERO,
+        queue_depth: 1,
+        max_batch_atoms: 32,
+        ..ServeOptions::default()
+    };
+    let srv = TestServer::start_with_factory(opts, f);
+
+    let mut client = BinClient::connect(srv.addr);
+    let (rij, mask) = tile_data(55, 1, 4);
+    let burst = 12usize;
+    let frame = wire::encode_compute(1, 4, &rij, &mask, None);
+    let mut wave: Vec<u8> = Vec::new();
+    for _ in 0..burst {
+        wave.extend_from_slice(&frame);
+    }
+    client.send(&wave); // one write: the whole burst lands at once
+
+    let (mut ok, mut shed) = (0u64, 0u64);
+    for _ in 0..burst {
+        match client.recv() {
+            Frame::Result { .. } => ok += 1,
+            Frame::Error { code: ErrorCode::Overloaded, message } => {
+                assert!(message.contains("overloaded"), "{message}");
+                shed += 1;
+            }
+            other => panic!("unexpected reply under pressure: {other:?}"),
+        }
+    }
+    assert_eq!(ok + shed, burst as u64);
+    assert!(ok >= 1, "the first request always fits the queue");
+    assert!(
+        shed >= 1,
+        "a 12-deep burst into a depth-1 queue with a 100ms engine must shed"
+    );
+
+    // accounting closes exactly: total = ok + err + stats, shed subset of err
+    client.send(&wire::encode_stats_request());
+    let doc = match client.recv() {
+        Frame::StatsJson(doc) => doc,
+        other => panic!("expected stats, got {other:?}"),
+    };
+    let j = Json::parse(&doc).expect("stats doc parses");
+    let s = j.get("stats").expect("stats object");
+    let get = |k: &str| s.get(k).and_then(Json::as_usize).unwrap() as u64;
+    assert_eq!(get("replies_ok"), ok, "{doc}");
+    assert_eq!(get("replies_err"), shed, "{doc}");
+    assert_eq!(get("requests_shed"), shed, "{doc}");
+    assert_eq!(
+        get("requests_total"),
+        get("replies_ok") + get("replies_err") + get("stats_requests"),
+        "accounting must close: {doc}"
+    );
+    // the caller-owned stats handle sees the same numbers as the wire
+    assert_eq!(srv.stats.requests_shed.load(Ordering::Relaxed), shed);
+    assert_eq!(srv.stats.replies_ok.load(Ordering::Relaxed), ok);
+    drop(client);
+    srv.finish();
+}
+
+/// The stats reply reports per-wire counters, per-session protocol state,
+/// and per-stage latency histograms — the JSON→binary migration gauges.
+#[test]
+fn stats_report_wire_sessions_and_latency_histograms() {
+    let srv = TestServer::start(sequential_opts(), "fused", 2);
+
+    let mut jc = JsonClient::connect(srv.addr);
+    let mut bc = BinClient::connect(srv.addr);
+    let (rij, mask) = tile_data(66, 1, 4);
+    let _ = parse_json_ok(&jc.roundtrip(&json_request(1, 4, &rij, &mask)));
+    bc.send(&wire::encode_compute(1, 4, &rij, &mask, None));
+    assert!(matches!(bc.recv(), Frame::Result { .. }));
+
+    let reply = jc.roundtrip("{\"cmd\": \"stats\"}");
+    let j = Json::parse(&reply).expect("stats reply parses");
+    let s = j.get("stats").expect("stats object");
+
+    let w = s.get("wire").expect("wire section");
+    let get = |o: &Json, k: &str| o.get(k).and_then(Json::as_usize).unwrap();
+    assert_eq!(get(w, "version"), wire::VERSION as usize, "{reply}");
+    assert_eq!(get(w, "json_connections"), 1, "{reply}");
+    assert_eq!(get(w, "binary_connections"), 1, "{reply}");
+    assert_eq!(get(w, "json_requests"), 2, "{reply}"); // compute + stats
+    assert_eq!(get(w, "binary_requests"), 1, "{reply}");
+    let sessions = w.get("sessions").and_then(Json::as_arr).expect("sessions array");
+    assert_eq!(sessions.len(), 2, "{reply}");
+    let wires: Vec<&str> = sessions
+        .iter()
+        .filter_map(|e| e.get("wire").and_then(Json::as_str))
+        .collect();
+    assert!(wires.contains(&"json") && wires.contains(&"binary"), "{reply}");
+    for e in sessions {
+        assert!(e.get("requests").and_then(Json::as_usize).unwrap() >= 1, "{reply}");
+    }
+
+    let lat = s.get("latency").expect("latency section");
+    for stage in ["parse", "queue_wait", "compute", "reply"] {
+        let h = lat.get(stage).unwrap_or_else(|| panic!("latency.{stage} missing: {reply}"));
+        assert!(
+            h.get("count").and_then(Json::as_usize).unwrap() >= 2,
+            "latency.{stage} undercounted: {reply}"
+        );
+        assert!(h.get("p50_us").and_then(Json::as_f64).is_some(), "{reply}");
+        assert!(h.get("p99_us").and_then(Json::as_f64).is_some(), "{reply}");
+    }
+
+    drop(jc);
+    drop(bc);
+    srv.finish();
+}
