@@ -425,7 +425,7 @@ mod tests {
     fn engine_spec_builds_every_native_name() {
         for name in [
             "baseline", "pre-adjoint-atom", "pre-adjoint-pair", "V1", "V2", "V3",
-            "V4", "V5", "V6", "V7", "fused", "aosoa",
+            "V4", "V5", "V6", "V7", "fused", "aosoa", "VII-simd", "simd",
         ] {
             let e = EngineSpec::new(2).engine(name).beta(beta2()).build().unwrap();
             assert!(!e.name().is_empty());

@@ -22,21 +22,33 @@
 
 use super::engine::{EngineError, ForceEngine, TileInput, TileOutput};
 use super::indices::SnapIndex;
-use super::kernels::pair_geom;
+use super::kernels::{
+    accumulate_utot_batch, compute_ylist_half_batch, pair_geom, pair_geom_block,
+};
 use super::memory::{MemoryFootprint, C128, F64};
 use super::params::{ElementTable, SnapParams};
-use super::wigner::{compute_fused_dedr_pair, compute_ulist_pair, FusedDuScratch};
+use super::wigner::{
+    compute_fused_dedr_batch, compute_fused_dedr_pair, compute_ulist_batch, compute_ulist_pair,
+    FusedDuScratch, FusedDuScratchX, LANES,
+};
 use crate::util::zero_resize;
 use std::sync::Arc;
 
 /// Inner vector width of the AoSoA layout (doubles per SIMD register).
-pub const AOSOA_WIDTH: usize = 8;
+/// Defined as the batch kernels' lane count so the lane-parallel tier's
+/// "lane = atom within a block" identity holds by construction.
+pub const AOSOA_WIDTH: usize = LANES;
 
 /// Section-VI engine configuration.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct FusedConfig {
     /// AoSoA layout for Ulisttot/Ylist (section VI-B) instead of j-fastest.
     pub aosoa: bool,
+    /// Lane-parallel batched kernels over the AoSoA blocks (VII-simd):
+    /// every stage runs block-major with the lane index innermost,
+    /// evaluating [`LANES`] atoms' pairs per kernel call.  Requires
+    /// `aosoa` (the lane model *is* the AoSoA layout).
+    pub lane_parallel: bool,
 }
 
 /// The fused (section VI) engine.
@@ -61,6 +73,11 @@ pub struct FusedEngine {
     // per-atom scratch for the Y stage
     ut_scratch_r: Vec<f64>,
     ut_scratch_i: Vec<f64>,
+    // lane-parallel batch scratch (LANES pairs at once; empty when the
+    // lane_parallel tier is off)
+    ux_r: Vec<f64>,
+    ux_i: Vec<f64>,
+    dux: FusedDuScratchX,
 }
 
 impl FusedEngine {
@@ -86,7 +103,10 @@ impl FusedEngine {
         name: impl Into<String>,
     ) -> Self {
         assert_eq!(beta.len(), elems.nelems() * idx.idxb_max);
+        let cfg_ok = cfg.aosoa || !cfg.lane_parallel;
+        assert!(cfg_ok, "lane_parallel requires the AoSoA layout");
         let iu = idx.idxu_max;
+        let lanes_cap = if cfg.lane_parallel { iu * LANES } else { 0 };
         Self {
             params,
             idx: idx.clone(),
@@ -103,6 +123,9 @@ impl FusedEngine {
             du: FusedDuScratch::new(params.twojmax),
             ut_scratch_r: vec![0.0; iu],
             ut_scratch_i: vec![0.0; iu],
+            ux_r: vec![0.0; lanes_cap],
+            ux_i: vec![0.0; lanes_cap],
+            dux: FusedDuScratchX::new(if cfg.lane_parallel { params.twojmax } else { 0 }),
         }
     }
 
@@ -125,6 +148,114 @@ impl FusedEngine {
         } else {
             na
         }
+    }
+
+    /// The VII-simd path: iterate block-major over AoSoA blocks and run
+    /// every stage on [`LANES`] atoms at once.  The U accumulate and the
+    /// Y/energy contractions become contiguous `LANES`-wide streams
+    /// (yesterday's stride-8 scatters), and the Wigner recursion / fused
+    /// dE run through the batched kernels.  Lanes are atoms — no
+    /// cross-lane reduction exists — so per atom the floating-point
+    /// sequence is exactly the scalar engine's and the output is bitwise
+    /// `VI-fused`'s (masked lanes only ever add exact ±0.0 terms).
+    fn compute_lane_parallel(
+        &mut self,
+        input: &TileInput,
+        out: &mut TileOutput,
+    ) -> Result<(), EngineError> {
+        let (na, nn) = (input.num_atoms, input.num_nbor);
+        let iu = self.idx.idxu_max;
+        let ih = self.idx.idxu_half_max();
+        let p = self.params;
+        let idx = self.idx.clone();
+        let nblk = self.padded_atoms(na) / AOSOA_WIDTH;
+        for blk in 0..nblk {
+            let base = blk * AOSOA_WIDTH;
+            let live = AOSOA_WIDTH.min(na - base);
+            let ublock = blk * iu * LANES..(blk + 1) * iu * LANES;
+            let yblock = blk * ih * LANES..(blk + 1) * ih * LANES;
+            // ---- compute_U: batched accumulate into the block stream ----
+            for &jju in &idx.uself {
+                let o = ublock.start + jju as usize * LANES;
+                self.utot_r[o..o + live].fill(p.wself);
+            }
+            for nbor in 0..nn {
+                let g = pair_geom_block(input, base, nbor, &p, &self.elems);
+                if !g.any_active() {
+                    continue;
+                }
+                compute_ulist_batch(&g, &idx, &mut self.ux_r, &mut self.ux_i);
+                accumulate_utot_batch(
+                    &g.sfac,
+                    &self.ux_r,
+                    &self.ux_i,
+                    &mut self.utot_r[ublock.clone()],
+                    &mut self.utot_i[ublock.clone()],
+                );
+            }
+            // ---- compute_Y (half-index) for the whole block ----
+            let mut boff = [0usize; LANES];
+            for (l, b) in boff.iter_mut().enumerate().take(live) {
+                *b = input.elem_of(base + l) * idx.idxb_max;
+            }
+            compute_ylist_half_batch(
+                &idx,
+                &self.utot_r[ublock.clone()],
+                &self.utot_i[ublock.clone()],
+                &self.beta,
+                &boff,
+                &mut self.yhalf_r[yblock.clone()],
+                &mut self.yhalf_i[yblock.clone()],
+            );
+            // ---- energy (Euler identity), lane-innermost ----
+            {
+                let ut_r = &self.utot_r[ublock.clone()];
+                let ut_i = &self.utot_i[ublock.clone()];
+                let y_r = &self.yhalf_r[yblock.clone()];
+                let y_i = &self.yhalf_i[yblock.clone()];
+                let mut e = [0.0f64; LANES];
+                for (half, &jju32) in idx.uhalf.iter().enumerate() {
+                    let jju = jju32 as usize;
+                    let w = idx.dedr_w[jju];
+                    if w == 0.0 {
+                        continue;
+                    }
+                    let (uo, yo) = (jju * LANES, half * LANES);
+                    for l in 0..LANES {
+                        e[l] += w * (ut_r[uo + l] * y_r[yo + l] + ut_i[uo + l] * y_i[yo + l]);
+                    }
+                }
+                for (l, &el) in e.iter().enumerate().take(live) {
+                    out.ei[base + l] = 2.0 / 3.0 * el;
+                }
+            }
+            // ---- compute_fused_dE, one batched call per neighbor slot ----
+            for nbor in 0..nn {
+                let g = pair_geom_block(input, base, nbor, &p, &self.elems);
+                if !g.any_active() {
+                    continue;
+                }
+                compute_ulist_batch(&g, &idx, &mut self.ux_r, &mut self.ux_i);
+                let mut d = [[0.0f64; 3]; LANES];
+                compute_fused_dedr_batch(
+                    &g,
+                    &idx,
+                    &self.ux_r,
+                    &self.ux_i,
+                    &self.yhalf_r[yblock.clone()],
+                    &self.yhalf_i[yblock.clone()],
+                    &mut self.dux,
+                    &mut d,
+                );
+                for (l, dl) in d.iter().enumerate().take(live) {
+                    if g.active[l] {
+                        let o = ((base + l) * nn + nbor) * 3;
+                        out.dedr[o..o + 3].copy_from_slice(dl);
+                    }
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -150,6 +281,10 @@ impl ForceEngine for FusedEngine {
         let idx = self.idx.clone();
         out.reset(na, nn);
 
+        if self.cfg.lane_parallel {
+            return self.compute_lane_parallel(input, out);
+        }
+
         // ---- compute_U (fused accumulate; recursion scratch reused) ----
         for atom in 0..na {
             for &jju in &idx.uself {
@@ -163,10 +298,12 @@ impl ForceEngine for FusedEngine {
                 let g = pair_geom(input, atom, nbor, &p, &self.elems);
                 compute_ulist_pair(&g, &idx, &mut self.u_r, &mut self.u_i);
                 if self.cfg.aosoa {
+                    // block-base + stride form: one slot() per pair, not
+                    // per element — the inner loop is pure pointer bumps
+                    let base = self.slot(atom, 0, iu, nap);
                     for jju in 0..iu {
-                        let s = self.slot(atom, jju, iu, nap);
-                        self.utot_r[s] += g.sfac * self.u_r[jju];
-                        self.utot_i[s] += g.sfac * self.u_i[jju];
+                        self.utot_r[base + jju * AOSOA_WIDTH] += g.sfac * self.u_r[jju];
+                        self.utot_i[base + jju * AOSOA_WIDTH] += g.sfac * self.u_i[jju];
                     }
                 } else {
                     let base = atom * iu;
@@ -276,18 +413,20 @@ impl ForceEngine for FusedEngine {
 
     fn footprint(&self, num_atoms: usize, num_nbor: usize) -> MemoryFootprint {
         let a = self.padded_atoms(num_atoms) as u64;
-        let _n = num_nbor as u64;
+        let n = num_nbor as u64;
         let iu = self.idx.idxu_max as u64;
         let ih = self.idx.idxu_half_max() as u64;
-        let ib = self.idx.idxb_max as u64;
         let mut m = MemoryFootprint::new();
-        // no Ulist, no dUlist: only the per-atom accumulated structures +
-        // per-execution-lane scratch (one lane on this machine)
+        // no Ulist, no dUlist — and no B array either: the energy comes
+        // straight from the Euler-identity contraction of Utot with Y, so
+        // only the accumulated per-atom structures + per-execution-lane
+        // recursion scratch (LANES pairs wide when lane-parallel) are
+        // ever resident.
         m.add("ulisttot(a,ju)", a * iu * C128);
         m.add("ylist_half(a,jh)", a * ih * C128);
-        m.add("blist(a,b)", a * ib * F64);
-        m.add("pair_scratch(u,du)", (iu + iu * 3) as u64 * C128);
-        m.add("dedr(a,n,3)", a * _n * 3 * F64);
+        let lanes = if self.cfg.lane_parallel { LANES as u64 } else { 1 };
+        m.add("pair_scratch(u,du)", lanes * (iu + iu * 3) * C128);
+        m.add("dedr(a,n,3)", a * n * 3 * F64);
         m
     }
 }
@@ -321,7 +460,11 @@ mod tests {
         let mut base =
             BaselineEngine::new(p, idx.clone(), beta.clone(), Staging::Monolithic);
         let want = base.compute(&inp);
-        for cfg in [FusedConfig { aosoa: false }, FusedConfig { aosoa: true }] {
+        for cfg in [
+            FusedConfig { aosoa: false, lane_parallel: false },
+            FusedConfig { aosoa: true, lane_parallel: false },
+            FusedConfig { aosoa: true, lane_parallel: true },
+        ] {
             let mut eng =
                 FusedEngine::new(p, idx.clone(), beta.clone(), cfg, "fused");
             let got = eng.compute(&inp);
@@ -336,7 +479,12 @@ mod tests {
 
     #[test]
     fn fused_footprint_is_tiny() {
-        // section VI-C: 2J8 -> ~0.1 GB, 2J14 -> ~0.9 GB at 2000 atoms
+        // the paper's section VI-C totals (0.1 / 0.9 GB at 2000 atoms)
+        // include per-lane recursion scratch at full GPU occupancy; the
+        // single-lane CPU resident set is utot + half-Y + dedr only —
+        // ~15 MB at 2J8 and ~62 MB at 2J14 — and must never charge a B
+        // array (the fused engine's energy is the Euler-identity
+        // contraction; no blist exists)
         let idx8 = Arc::new(SnapIndex::new(8));
         let idx14 = Arc::new(SnapIndex::new(14));
         let f8 = FusedEngine::new(
@@ -349,8 +497,15 @@ mod tests {
             FusedConfig::default(), "fused",
         )
         .footprint(2000, 26);
-        assert!(f8.gib() < 0.2, "2J8 fused {:.3} GiB", f8.gib());
-        assert!(f14.gib() < 1.0, "2J14 fused {:.3} GiB", f14.gib());
+        assert!(f8.gib() < 0.02, "2J8 fused {:.4} GiB", f8.gib());
+        assert!(f14.gib() < 0.08, "2J14 fused {:.4} GiB", f14.gib());
+        for f in [&f8, &f14] {
+            assert!(
+                f.arrays.iter().all(|(name, _)| !name.contains("blist")),
+                "fused engine must not charge a B array: {:?}",
+                f.arrays
+            );
+        }
     }
 
     #[test]
@@ -364,16 +519,58 @@ mod tests {
             let (rij, mask) = tile(&mut rng, na, 4, &p);
             let inp = TileInput { num_atoms: na, num_nbor: 4, rij: &rij, mask: &mask, elems: None };
             let mut a = FusedEngine::new(
-                p, idx.clone(), beta.clone(), FusedConfig { aosoa: true }, "aosoa",
+                p,
+                idx.clone(),
+                beta.clone(),
+                FusedConfig { aosoa: true, lane_parallel: false },
+                "aosoa",
             );
             let mut b = FusedEngine::new(
-                p, idx.clone(), beta.clone(), FusedConfig { aosoa: false }, "flat",
+                p,
+                idx.clone(),
+                beta.clone(),
+                FusedConfig { aosoa: false, lane_parallel: false },
+                "flat",
             );
             let oa = a.compute(&inp);
             let ob = b.compute(&inp);
             for (x, y) in oa.dedr.iter().zip(ob.dedr.iter()) {
                 assert!((x - y).abs() < 1e-12);
             }
+        }
+    }
+
+    #[test]
+    fn lane_parallel_is_bitwise_the_scalar_fused_engine() {
+        // lanes are atoms: every lane of every batched kernel executes the
+        // scalar engine's exact floating-point sequence, so VII-simd must
+        // equal VI-fused under IEEE `==` (assert_eq on f64) — not merely
+        // within a tolerance.  Masked lanes only add exact ±0.0 terms.
+        let p = SnapParams::with_twojmax(3);
+        let idx = Arc::new(SnapIndex::new(3));
+        let mut rng = XorShift::new(53);
+        let beta: Vec<f64> = (0..idx.idxb_max).map(|_| rng.normal()).collect();
+        for na in [2usize, 8, 11] {
+            let (rij, mask) = tile(&mut rng, na, 5, &p);
+            let inp = TileInput { num_atoms: na, num_nbor: 5, rij: &rij, mask: &mask, elems: None };
+            let mut simd = FusedEngine::new(
+                p,
+                idx.clone(),
+                beta.clone(),
+                FusedConfig { aosoa: true, lane_parallel: true },
+                "VII-simd",
+            );
+            let mut fused = FusedEngine::new(
+                p,
+                idx.clone(),
+                beta.clone(),
+                FusedConfig::default(),
+                "VI-fused",
+            );
+            let a = simd.compute(&inp);
+            let b = fused.compute(&inp);
+            assert_eq!(a.ei, b.ei, "na={na}");
+            assert_eq!(a.dedr, b.dedr, "na={na}");
         }
     }
 }

@@ -8,7 +8,7 @@
 use super::engine::TileInput;
 use super::indices::SnapIndex;
 use super::params::{ElementTable, SnapParams};
-use super::wigner::{compute_ulist_pair, PairGeom};
+use super::wigner::{compute_ulist_pair, PairGeom, PairGeomX, LANES};
 
 /// The fallback displacement for masked lanes (keeps the recursion finite;
 /// contributions are zeroed by mask handling in the engines).
@@ -95,6 +95,113 @@ pub fn compute_utot_atom(
         let g = PairGeom::new(rij, p);
         compute_ulist_pair(&g, idx, scratch_r, scratch_i);
         accumulate_utot(g.sfac, scratch_r, scratch_i, ut_r, ut_i);
+    }
+}
+
+/// Batched per-block geometry (the VII-simd lane model): lane `l` is atom
+/// `atom_base + l` at neighbor slot `nbor`.  Lanes past `num_atoms` (AoSoA
+/// padding) and masked neighbors are inactive — they carry inert geometry
+/// with `sfac = dsfac = 0`, so everything they accumulate downstream is an
+/// exact ±0.0 and per-atom operation order matches the scalar engine's.
+pub fn pair_geom_block(
+    input: &TileInput,
+    atom_base: usize,
+    nbor: usize,
+    p: &SnapParams,
+    elems: &ElementTable,
+) -> PairGeomX {
+    PairGeomX::pack(|lane| {
+        let atom = atom_base + lane;
+        if atom < input.num_atoms && input.is_real(atom, nbor) {
+            Some(pair_geom(input, atom, nbor, p, elems))
+        } else {
+            None
+        }
+    })
+}
+
+/// Batched [`accumulate_utot`] over one AoSoA block: `ut += sfac * u`
+/// across `idxu_max` lane-innermost chunks — the contiguous `LANES`-wide
+/// stream that replaces the scalar path's stride-`LANES` scatter.
+/// Inactive lanes have `sfac == 0`, so they add exact ±0.0.
+pub fn accumulate_utot_batch(
+    sfac: &[f64; LANES],
+    u_r: &[f64],
+    u_i: &[f64],
+    ut_r: &mut [f64],
+    ut_i: &mut [f64],
+) {
+    debug_assert_eq!(u_r.len(), ut_r.len());
+    debug_assert_eq!(u_i.len(), ut_i.len());
+    for (t, u) in ut_r.chunks_exact_mut(LANES).zip(u_r.chunks_exact(LANES)) {
+        for l in 0..LANES {
+            t[l] += sfac[l] * u[l];
+        }
+    }
+    for (t, u) in ut_i.chunks_exact_mut(LANES).zip(u_i.chunks_exact(LANES)) {
+        for l in 0..LANES {
+            t[l] += sfac[l] * u[l];
+        }
+    }
+}
+
+/// Batched half-index compute_Y for one AoSoA block: `ut_*` hold the
+/// block's accumulated U (`idxu_max` lane-innermost chunks), `y_*` its
+/// half-index adjoint (`idxu_half_max` chunks, caller-zeroed), and
+/// `boff[l]` is lane l's per-element beta block offset.  Per lane this is
+/// exactly the fused engine's scalar Y stage (same `mul_add` contraction
+/// order over the same plan), so each lane's Y is bitwise the scalar
+/// engine's — but the plan gathers now load contiguous `LANES`-wide
+/// chunks instead of strided scalars.
+pub fn compute_ylist_half_batch(
+    idx: &SnapIndex,
+    ut_r: &[f64],
+    ut_i: &[f64],
+    beta: &[f64],
+    boff: &[usize; LANES],
+    y_r: &mut [f64],
+    y_i: &mut [f64],
+) {
+    assert!(ut_r.len() >= idx.idxu_max * LANES && ut_i.len() >= idx.idxu_max * LANES);
+    assert!(y_r.len() >= idx.idxu_half_max() * LANES);
+    assert!(y_i.len() >= idx.idxu_half_max() * LANES);
+    for jjz in 0..idx.idxz_max {
+        let lo = idx.zplan_offsets[jjz] as usize;
+        let hi = idx.zplan_offsets[jjz + 1] as usize;
+        let mut sr = [0.0; LANES];
+        let mut si = [0.0; LANES];
+        for ((&u1, &u2), &c) in idx.zplan_u1[lo..hi]
+            .iter()
+            .zip(idx.zplan_u2[lo..hi].iter())
+            .zip(idx.zplan_c[lo..hi].iter())
+        {
+            let (o1, o2) = (u1 as usize * LANES, u2 as usize * LANES);
+            for l in 0..LANES {
+                // SAFETY: plan indices are < idxu_max by construction
+                // (indices::tests::plan_indices_in_range) and the entry
+                // asserts pin ut_* to >= idxu_max * LANES.
+                let (ar, ai, br, bi) = unsafe {
+                    (
+                        *ut_r.get_unchecked(o1 + l),
+                        *ut_i.get_unchecked(o1 + l),
+                        *ut_r.get_unchecked(o2 + l),
+                        *ut_i.get_unchecked(o2 + l),
+                    )
+                };
+                sr[l] = (ar * br - ai * bi).mul_add(c, sr[l]);
+                si[l] = (ar * bi + ai * br).mul_add(c, si[l]);
+            }
+        }
+        let fac = idx.yplan_fac[jjz];
+        let jjb = idx.yplan_jjb[jjz] as usize;
+        let half = idx.uhalf_slot[idx.yplan_jju[jjz] as usize];
+        debug_assert!(half != usize::MAX);
+        let o = half * LANES;
+        for l in 0..LANES {
+            let coef = fac * beta[boff[l] + jjb];
+            y_r[o + l] += coef * sr[l];
+            y_i[o + l] += coef * si[l];
+        }
     }
 }
 
@@ -241,6 +348,52 @@ mod tests {
         let diag: f64 = ut_r.iter().sum();
         assert_eq!(diag, idx.uself.len() as f64 * p.wself);
         assert!(ut_i.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn ylist_half_batch_is_bitwise_the_scalar_contraction_per_lane() {
+        // reference: the fused engine's scalar Y stage (same plan walk,
+        // same mul_add order), run lane by lane on gathered flat buffers
+        let idx = SnapIndex::new(3);
+        let ih = idx.idxu_half_max();
+        let mut rng = crate::util::XorShift::new(41);
+        let ut_r: Vec<f64> = (0..idx.idxu_max * LANES).map(|_| rng.normal()).collect();
+        let ut_i: Vec<f64> = (0..idx.idxu_max * LANES).map(|_| rng.normal()).collect();
+        let beta: Vec<f64> = (0..2 * idx.idxb_max).map(|_| rng.normal()).collect();
+        // two distinct per-lane beta blocks, interleaved
+        let mut boff = [0usize; LANES];
+        for (l, b) in boff.iter_mut().enumerate() {
+            *b = (l % 2) * idx.idxb_max;
+        }
+        let mut yb_r = vec![0.0; ih * LANES];
+        let mut yb_i = vec![0.0; ih * LANES];
+        compute_ylist_half_batch(&idx, &ut_r, &ut_i, &beta, &boff, &mut yb_r, &mut yb_i);
+        for l in 0..LANES {
+            let fr: Vec<f64> = (0..idx.idxu_max).map(|j| ut_r[j * LANES + l]).collect();
+            let fi: Vec<f64> = (0..idx.idxu_max).map(|j| ut_i[j * LANES + l]).collect();
+            let mut ys_r = vec![0.0; ih];
+            let mut ys_i = vec![0.0; ih];
+            for jjz in 0..idx.idxz_max {
+                let lo = idx.zplan_offsets[jjz] as usize;
+                let hi = idx.zplan_offsets[jjz + 1] as usize;
+                let mut sr = 0.0;
+                let mut si = 0.0;
+                for row in lo..hi {
+                    let (u1, u2) = (idx.zplan_u1[row] as usize, idx.zplan_u2[row] as usize);
+                    let c = idx.zplan_c[row];
+                    sr = (fr[u1] * fr[u2] - fi[u1] * fi[u2]).mul_add(c, sr);
+                    si = (fr[u1] * fi[u2] + fi[u1] * fr[u2]).mul_add(c, si);
+                }
+                let coef = idx.yplan_fac[jjz] * beta[boff[l] + idx.yplan_jjb[jjz] as usize];
+                let half = idx.uhalf_slot[idx.yplan_jju[jjz] as usize];
+                ys_r[half] += coef * sr;
+                ys_i[half] += coef * si;
+            }
+            for h in 0..ih {
+                assert_eq!(ys_r[h].to_bits(), yb_r[h * LANES + l].to_bits(), "lane {l}");
+                assert_eq!(ys_i[h].to_bits(), yb_i[h * LANES + l].to_bits(), "lane {l}");
+            }
+        }
     }
 
     #[test]

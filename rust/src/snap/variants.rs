@@ -39,13 +39,17 @@ pub enum Variant {
     Fused,
     /// Section VI-B: + AoSoA Ulisttot/Ylist.
     FusedAosoa,
+    /// Section VI-C's sketch realized: lane-parallel batched kernels over
+    /// the AoSoA blocks — every stage evaluates `LANES` atoms' pairs at
+    /// once with the lane index innermost (bitwise `VI-fused`).
+    FusedSimd,
 }
 
 impl Variant {
     /// All ladder steps in paper order.
     pub fn ladder() -> &'static [Variant] {
         use Variant::*;
-        &[V0Baseline, V1, V2, V3, V4, V5, V6, V7, Fused, FusedAosoa]
+        &[V0Baseline, V1, V2, V3, V4, V5, V6, V7, Fused, FusedAosoa, FusedSimd]
     }
 
     /// The Fig. 1 set.
@@ -68,6 +72,7 @@ impl Variant {
             Variant::V7 => "V7",
             Variant::Fused => "VI-fused",
             Variant::FusedAosoa => "VI-aosoa",
+            Variant::FusedSimd => "VII-simd",
         }
     }
 
@@ -89,6 +94,7 @@ impl Variant {
             "V7" => Variant::V7,
             "VI-fused" | "fused" => Variant::Fused,
             "VI-aosoa" | "aosoa" => Variant::FusedAosoa,
+            "VII-simd" | "simd" => Variant::FusedSimd,
             _ => return None,
         })
     }
@@ -101,7 +107,7 @@ impl Variant {
             .chain(Variant::fig1())
             .map(Variant::label)
             .collect();
-        out.extend(["V0", "fused", "aosoa"]);
+        out.extend(["V0", "fused", "aosoa", "simd"]);
         out.sort_unstable();
         out.dedup();
         out
@@ -214,7 +220,7 @@ impl Variant {
                 idx.clone(),
                 beta.clone(),
                 elems.clone(),
-                FusedConfig { aosoa: false },
+                FusedConfig { aosoa: false, lane_parallel: false },
                 "VI-fused",
             )),
             Variant::FusedAosoa => Box::new(FusedEngine::new_multi(
@@ -222,8 +228,16 @@ impl Variant {
                 idx.clone(),
                 beta.clone(),
                 elems.clone(),
-                FusedConfig { aosoa: true },
+                FusedConfig { aosoa: true, lane_parallel: false },
                 "VI-aosoa",
+            )),
+            Variant::FusedSimd => Box::new(FusedEngine::new_multi(
+                params,
+                idx.clone(),
+                beta.clone(),
+                elems.clone(),
+                FusedConfig { aosoa: true, lane_parallel: true },
+                "VII-simd",
             )),
         }
     }
@@ -299,6 +313,7 @@ mod tests {
         assert_eq!(Variant::from_label("V0"), Some(Variant::V0Baseline));
         assert_eq!(Variant::from_label("fused"), Some(Variant::Fused));
         assert_eq!(Variant::from_label("aosoa"), Some(Variant::FusedAosoa));
+        assert_eq!(Variant::from_label("simd"), Some(Variant::FusedSimd));
         assert_eq!(Variant::from_label("warp-drive"), None);
     }
 

@@ -7,6 +7,16 @@
 //! into caller-provided flat scratch (split re/im, the layout the paper
 //! adopts in section VI-A), so engines choose whether the result is stored
 //! (baseline / V-ladder) or consumed immediately (fused, section VI).
+//!
+//! The **batched tier** ([`PairGeomX`], [`compute_ulist_batch`],
+//! [`compute_fused_dedr_batch`]) evaluates [`LANES`] independent pairs
+//! simultaneously with the lane index innermost — the vector-lane analog
+//! of the paper's thread-level hierarchy, and the compute side of the
+//! AoSoA layout (section VI-B/C).  Per lane the floating-point sequence
+//! is exactly the scalar kernel's, so each lane's output is bitwise the
+//! scalar result; inactive lanes (AoSoA padding, masked neighbors) carry
+//! inert geometry with `sfac = dsfac = 0` so their contributions are
+//! exact ±0.0.
 
 use super::indices::SnapIndex;
 use super::params::SnapParams;
@@ -528,4 +538,611 @@ pub fn compute_fused_dedr_pair<F: Fn(usize) -> (f64, f64)>(
         std::mem::swap(&mut s.cur_i, &mut s.prev_i);
     }
     [2.0 * acc[0], 2.0 * acc[1], 2.0 * acc[2]]
+}
+
+// ---------------------------------------------------------------------------
+// Lane-parallel batch tier (VII-simd)
+// ---------------------------------------------------------------------------
+
+/// Number of pairs the batched kernels evaluate simultaneously.  Equal to
+/// the AoSoA inner width by construction (`fused::AOSOA_WIDTH` is defined
+/// as this constant): a lane is *one atom of an AoSoA block* at a fixed
+/// neighbor slot, so batched accumulates are contiguous `LANES`-wide
+/// streams and no cross-lane reduction exists anywhere.
+pub const LANES: usize = 8;
+
+/// Load one lane-innermost chunk (`buf[i*LANES .. (i+1)*LANES]`) into a
+/// register-resident array.
+#[inline(always)]
+fn ld(buf: &[f64], i: usize) -> [f64; LANES] {
+    let mut v = [0.0; LANES];
+    v.copy_from_slice(&buf[i * LANES..i * LANES + LANES]);
+    v
+}
+
+/// Store one lane-innermost chunk.
+#[inline(always)]
+fn st(buf: &mut [f64], i: usize, v: [f64; LANES]) {
+    buf[i * LANES..i * LANES + LANES].copy_from_slice(&v);
+}
+
+/// [`PairGeom`] for `LANES` pairs at once: struct-of-`[f64; LANES]`
+/// Cayley-Klein state plus a validity mask for ragged tails.  Inactive
+/// lanes hold the inert identity geometry (`a = 1`, `b = 0`, `r = 1`) —
+/// finite through every recursion level — with `sfac = dsfac = 0`, so
+/// everything they accumulate downstream is an exact ±0.0.
+#[derive(Clone, Debug)]
+pub struct PairGeomX {
+    pub r: [f64; LANES],
+    pub a_r: [f64; LANES],
+    pub a_i: [f64; LANES],
+    pub b_r: [f64; LANES],
+    pub b_i: [f64; LANES],
+    pub z0: [f64; LANES],
+    pub dz0dr: [f64; LANES],
+    pub sfac: [f64; LANES],
+    pub dsfac: [f64; LANES],
+    pub ux: [f64; LANES],
+    pub uy: [f64; LANES],
+    pub uz: [f64; LANES],
+    pub x: [f64; LANES],
+    pub y: [f64; LANES],
+    pub z: [f64; LANES],
+    pub active: [bool; LANES],
+}
+
+impl PairGeomX {
+    /// All lanes inactive (inert identity geometry).
+    pub fn inert() -> Self {
+        Self {
+            r: [1.0; LANES],
+            a_r: [1.0; LANES],
+            a_i: [0.0; LANES],
+            b_r: [0.0; LANES],
+            b_i: [0.0; LANES],
+            z0: [0.0; LANES],
+            dz0dr: [0.0; LANES],
+            sfac: [0.0; LANES],
+            dsfac: [0.0; LANES],
+            ux: [0.0; LANES],
+            uy: [0.0; LANES],
+            uz: [0.0; LANES],
+            x: [0.0; LANES],
+            y: [0.0; LANES],
+            z: [0.0; LANES],
+            active: [false; LANES],
+        }
+    }
+
+    /// Install one lane's scalar geometry and mark it active.
+    pub fn set_lane(&mut self, lane: usize, g: &PairGeom) {
+        self.r[lane] = g.r;
+        self.a_r[lane] = g.a_r;
+        self.a_i[lane] = g.a_i;
+        self.b_r[lane] = g.b_r;
+        self.b_i[lane] = g.b_i;
+        self.z0[lane] = g.z0;
+        self.dz0dr[lane] = g.dz0dr;
+        self.sfac[lane] = g.sfac;
+        self.dsfac[lane] = g.dsfac;
+        self.ux[lane] = g.ux;
+        self.uy[lane] = g.uy;
+        self.uz[lane] = g.uz;
+        self.x[lane] = g.x;
+        self.y[lane] = g.y;
+        self.z[lane] = g.z;
+        self.active[lane] = true;
+    }
+
+    /// Pack per-lane geometries: `lane_geom(l)` returns `Some` for an
+    /// active (real) pair, `None` for a masked neighbor or AoSoA padding
+    /// lane.
+    pub fn pack<F: FnMut(usize) -> Option<PairGeom>>(mut lane_geom: F) -> Self {
+        let mut gx = Self::inert();
+        for l in 0..LANES {
+            if let Some(g) = lane_geom(l) {
+                gx.set_lane(l, &g);
+            }
+        }
+        gx
+    }
+
+    /// Whether any lane carries a real pair (all-inactive batches can be
+    /// skipped outright — they would only add exact zeros).
+    pub fn any_active(&self) -> bool {
+        self.active.iter().any(|&a| a)
+    }
+}
+
+/// Batched [`compute_ulist_pair`]: fill `u_r`/`u_i` (len
+/// `idxu_max * LANES`, lane-innermost `[jju][lane]`) with the Wigner
+/// matrices of `LANES` independent pairs.  Per lane the operation sequence
+/// is exactly the scalar kernel's (the row recursion is carried in
+/// registers, but every add/mul matches one-to-one), so each lane is
+/// bitwise identical to a scalar call on that lane's geometry.
+pub fn compute_ulist_batch(g: &PairGeomX, idx: &SnapIndex, u_r: &mut [f64], u_i: &mut [f64]) {
+    assert!(u_r.len() >= idx.idxu_max * LANES && u_i.len() >= idx.idxu_max * LANES);
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if x86::have_avx2() {
+            // SAFETY: have_avx2() verified the CPU supports AVX2 + FMA.
+            unsafe { x86::compute_ulist_batch_avx2(g, idx, u_r, u_i) };
+            return;
+        }
+    }
+    ulist_batch_body(g, idx, u_r, u_i);
+}
+
+#[inline(always)]
+fn ulist_batch_body(g: &PairGeomX, idx: &SnapIndex, u_r: &mut [f64], u_i: &mut [f64]) {
+    st(u_r, 0, [1.0; LANES]);
+    st(u_i, 0, [0.0; LANES]);
+    for j in 1..=idx.twojmax {
+        let mut jju = idx.idxu_block[j];
+        let mut jjup = idx.idxu_block[j - 1];
+        // left half: 2*mb <= j, recursion from level j-1.  u[jju] is the
+        // register-carried row accumulator (cr/ci); u[jju+1]'s seed (nr/ni)
+        // becomes the next iteration's accumulator.
+        for mb in 0..=(j / 2) {
+            let mut cr = [0.0; LANES];
+            let mut ci = [0.0; LANES];
+            for ma in 0..j {
+                let rootpq = idx.rootpq(j - ma, j - mb);
+                let pr = ld(u_r, jjup);
+                let pi = ld(u_i, jjup);
+                // += rootpq * conj(a) * u_prev
+                for l in 0..LANES {
+                    cr[l] += rootpq * (g.a_r[l] * pr[l] + g.a_i[l] * pi[l]);
+                    ci[l] += rootpq * (g.a_r[l] * pi[l] - g.a_i[l] * pr[l]);
+                }
+                st(u_r, jju, cr);
+                st(u_i, jju, ci);
+                // next element seeded with -rootpq' * conj(b) * u_prev
+                let rootpq2 = idx.rootpq(ma + 1, j - mb);
+                let mut nr = [0.0; LANES];
+                let mut ni = [0.0; LANES];
+                for l in 0..LANES {
+                    nr[l] = -rootpq2 * (g.b_r[l] * pr[l] + g.b_i[l] * pi[l]);
+                    ni[l] = -rootpq2 * (g.b_r[l] * pi[l] - g.b_i[l] * pr[l]);
+                }
+                cr = nr;
+                ci = ni;
+                jju += 1;
+                jjup += 1;
+            }
+            st(u_r, jju, cr);
+            st(u_i, jju, ci);
+            jju += 1;
+        }
+        // right half via the conjugation symmetry (sign flips are exact)
+        let mut jju = idx.idxu_block[j];
+        let mut jjup = idx.idxu_block[j] + (j + 1) * (j + 1) - 1;
+        let mut mbpar = 1i32;
+        for _mb in 0..=(j / 2) {
+            let mut mapar = mbpar;
+            for _ma in 0..=j {
+                let sr = ld(u_r, jju);
+                let si = ld(u_i, jju);
+                let mut vr = [0.0; LANES];
+                let mut vi = [0.0; LANES];
+                if mapar == 1 {
+                    for l in 0..LANES {
+                        vr[l] = sr[l];
+                        vi[l] = -si[l];
+                    }
+                } else {
+                    for l in 0..LANES {
+                        vr[l] = -sr[l];
+                        vi[l] = si[l];
+                    }
+                }
+                st(u_r, jjup, vr);
+                st(u_i, jjup, vi);
+                mapar = -mapar;
+                jju += 1;
+                jjup -= 1;
+            }
+            mbpar = -mbpar;
+        }
+    }
+}
+
+/// Batched [`FusedDuScratch`]: the same level-local double buffer with a
+/// lane-innermost inner dimension (~170 KB at 2J=14 — still cache-resident).
+pub struct FusedDuScratchX {
+    cur_r: Vec<f64>,
+    cur_i: Vec<f64>,
+    prev_r: Vec<f64>,
+    prev_i: Vec<f64>,
+}
+
+impl FusedDuScratchX {
+    pub fn new(twojmax: usize) -> Self {
+        let n = (twojmax + 1) * (twojmax + 1) * 3 * LANES;
+        Self {
+            cur_r: vec![0.0; n],
+            cur_i: vec![0.0; n],
+            prev_r: vec![0.0; n],
+            prev_i: vec![0.0; n],
+        }
+    }
+}
+
+/// Batched [`compute_fused_dedr_pair`]: the section-VI fused dE kernel for
+/// `LANES` pairs at once.  `u_r`/`u_i` hold [`compute_ulist_batch`] output;
+/// `y_r`/`y_i` are the *block-local* half-index adjoint (lane-innermost
+/// `[half][lane]`, `idxu_half_max * LANES` long).  `out[l]` receives lane
+/// l's dE/dr — bitwise the scalar kernel's result for that lane (inactive
+/// lanes produce finite garbage-free zeros-times-Y sums the caller must
+/// not emit).
+#[allow(clippy::too_many_arguments)]
+pub fn compute_fused_dedr_batch(
+    g: &PairGeomX,
+    idx: &SnapIndex,
+    u_r: &[f64],
+    u_i: &[f64],
+    y_r: &[f64],
+    y_i: &[f64],
+    s: &mut FusedDuScratchX,
+    out: &mut [[f64; 3]; LANES],
+) {
+    assert!(u_r.len() >= idx.idxu_max * LANES && u_i.len() >= idx.idxu_max * LANES);
+    assert!(y_r.len() >= idx.idxu_half_max() * LANES);
+    assert!(y_i.len() >= idx.idxu_half_max() * LANES);
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if x86::have_avx2() {
+            // SAFETY: have_avx2() verified the CPU supports AVX2 + FMA.
+            unsafe { x86::fused_dedr_batch_avx2(g, idx, u_r, u_i, y_r, y_i, s, out) };
+            return;
+        }
+    }
+    fused_dedr_batch_body(g, idx, u_r, u_i, y_r, y_i, s, out);
+}
+
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn fused_dedr_batch_body(
+    g: &PairGeomX,
+    idx: &SnapIndex,
+    u_r: &[f64],
+    u_i: &[f64],
+    y_r: &[f64],
+    y_i: &[f64],
+    s: &mut FusedDuScratchX,
+    out: &mut [[f64; 3]; LANES],
+) {
+    let uh = [g.ux, g.uy, g.uz];
+    // per-lane derivative preamble: the scalar kernel's scalars, one lane
+    // each (identical expression order per lane)
+    let mut da_r = [[0.0; LANES]; 3];
+    let mut da_i = [[0.0; LANES]; 3];
+    let mut db_r = [[0.0; LANES]; 3];
+    let mut db_i = [[0.0; LANES]; 3];
+    for l in 0..LANES {
+        let r0inv = 1.0 / (g.r[l] * g.r[l] + g.z0[l] * g.z0[l]).sqrt();
+        let dr0invdr = -r0inv.powi(3) * (g.r[l] + g.z0[l] * g.dz0dr[l]);
+        for k in 0..3 {
+            let dr0inv = dr0invdr * uh[k][l];
+            let dz0 = g.dz0dr[l] * uh[k][l];
+            da_r[k][l] = dz0 * r0inv + g.z0[l] * dr0inv;
+            da_i[k][l] = -g.z[l] * dr0inv;
+            db_r[k][l] = g.y[l] * dr0inv;
+            db_i[k][l] = -g.x[l] * dr0inv;
+        }
+        da_i[2][l] += -r0inv;
+        db_i[0][l] += -r0inv;
+        db_r[1][l] += r0inv;
+    }
+
+    let mut acc = [[0.0f64; LANES]; 3];
+
+    // level 0: du = 0, u = 1, w = 0.5
+    {
+        let u0r = ld(u_r, 0);
+        let u0i = ld(u_i, 0);
+        let h0 = idx.uhalf_slot[0];
+        let yr = ld(y_r, h0);
+        let yi = ld(y_i, h0);
+        for k in 0..3 {
+            for l in 0..LANES {
+                let dr = g.dsfac[l] * u0r[l] * uh[k][l];
+                let di = g.dsfac[l] * u0i[l] * uh[k][l];
+                acc[k][l] += 0.5 * (dr * yr[l] + di * yi[l]);
+            }
+        }
+    }
+
+    // prev level (j=0) derivative is zero
+    s.prev_r[..3 * LANES].fill(0.0);
+    s.prev_i[..3 * LANES].fill(0.0);
+
+    for j in 1..=idx.twojmax {
+        let n = j + 1;
+        let block = idx.idxu_block[j];
+        let pblock = idx.idxu_block[j - 1];
+        // --- left-half recursion, writing the level-local buffer ---
+        for mb in 0..=(j / 2) {
+            let row = mb * n * 3;
+            for k in 0..3 {
+                st(&mut s.cur_r, row + k, [0.0; LANES]);
+                st(&mut s.cur_i, row + k, [0.0; LANES]);
+            }
+            let prow = mb * j * 3; // prev level stride is j
+            for ma in 0..j {
+                let rootpq = idx.rootpq(j - ma, j - mb);
+                let pu = pblock + j * mb + ma; // prev-level global u index
+                let pr = ld(u_r, pu);
+                let pi = ld(u_i, pu);
+                let o = row + ma * 3;
+                let po = prow + ma * 3;
+                for k in 0..3 {
+                    let dpr = ld(&s.prev_r, po + k);
+                    let dpi = ld(&s.prev_i, po + k);
+                    let mut cr = ld(&s.cur_r, o + k);
+                    let mut ci = ld(&s.cur_i, o + k);
+                    for l in 0..LANES {
+                        cr[l] += rootpq
+                            * (da_r[k][l] * pr[l]
+                                + da_i[k][l] * pi[l]
+                                + g.a_r[l] * dpr[l]
+                                + g.a_i[l] * dpi[l]);
+                        ci[l] += rootpq
+                            * (da_r[k][l] * pi[l] - da_i[k][l] * pr[l] + g.a_r[l] * dpi[l]
+                                - g.a_i[l] * dpr[l]);
+                    }
+                    st(&mut s.cur_r, o + k, cr);
+                    st(&mut s.cur_i, o + k, ci);
+                }
+                let rootpq2 = idx.rootpq(ma + 1, j - mb);
+                for k in 0..3 {
+                    let dpr = ld(&s.prev_r, po + k);
+                    let dpi = ld(&s.prev_i, po + k);
+                    let mut nr = [0.0; LANES];
+                    let mut ni = [0.0; LANES];
+                    for l in 0..LANES {
+                        nr[l] = -rootpq2
+                            * (db_r[k][l] * pr[l]
+                                + db_i[k][l] * pi[l]
+                                + g.b_r[l] * dpr[l]
+                                + g.b_i[l] * dpi[l]);
+                        ni[l] = -rootpq2
+                            * (db_r[k][l] * pi[l] - db_i[k][l] * pr[l] + g.b_r[l] * dpi[l]
+                                - g.b_i[l] * dpr[l]);
+                    }
+                    st(&mut s.cur_r, o + 3 + k, nr);
+                    st(&mut s.cur_i, o + 3 + k, ni);
+                }
+            }
+        }
+        // --- minimal symmetry fill (see the scalar kernel) ---
+        if j % 2 == 1 && j < idx.twojmax {
+            let mb = (j + 1) / 2;
+            for ma in 0..=j {
+                let src = ((j - mb) * n + (j - ma)) * 3;
+                let dst = (mb * n + ma) * 3;
+                let sgn = if (ma + mb) % 2 == 0 { 1.0 } else { -1.0 };
+                for k in 0..3 {
+                    let sr = ld(&s.cur_r, src + k);
+                    let si = ld(&s.cur_i, src + k);
+                    let mut vr = [0.0; LANES];
+                    let mut vi = [0.0; LANES];
+                    for l in 0..LANES {
+                        vr[l] = sgn * sr[l];
+                        vi[l] = -sgn * si[l];
+                    }
+                    st(&mut s.cur_r, dst + k, vr);
+                    st(&mut s.cur_i, dst + k, vi);
+                }
+            }
+        }
+        // --- immediate contraction of the stored half against Y ---
+        for mb in 0..=(j / 2) {
+            let ma_full = if 2 * mb < j { j + 1 } else { 0 };
+            for ma in 0..ma_full {
+                let jju = block + n * mb + ma;
+                let half = idx.uhalf_slot[jju];
+                let yr = ld(y_r, half);
+                let yi = ld(y_i, half);
+                let o = (mb * n + ma) * 3;
+                let ur = ld(u_r, jju);
+                let ui = ld(u_i, jju);
+                for k in 0..3 {
+                    let cr = ld(&s.cur_r, o + k);
+                    let ci = ld(&s.cur_i, o + k);
+                    for l in 0..LANES {
+                        let dr = g.dsfac[l] * ur[l] * uh[k][l] + g.sfac[l] * cr[l];
+                        let di = g.dsfac[l] * ui[l] * uh[k][l] + g.sfac[l] * ci[l];
+                        acc[k][l] += dr * yr[l] + di * yi[l];
+                    }
+                }
+            }
+            if 2 * mb == j {
+                // middle row of even j: full weight below the diagonal,
+                // half weight on it
+                for ma in 0..=mb {
+                    let w = if ma == mb { 0.5 } else { 1.0 };
+                    let jju = block + n * mb + ma;
+                    let half = idx.uhalf_slot[jju];
+                    let yr = ld(y_r, half);
+                    let yi = ld(y_i, half);
+                    let o = (mb * n + ma) * 3;
+                    let ur = ld(u_r, jju);
+                    let ui = ld(u_i, jju);
+                    for k in 0..3 {
+                        let cr = ld(&s.cur_r, o + k);
+                        let ci = ld(&s.cur_i, o + k);
+                        for l in 0..LANES {
+                            let dr = g.dsfac[l] * ur[l] * uh[k][l] + g.sfac[l] * cr[l];
+                            let di = g.dsfac[l] * ui[l] * uh[k][l] + g.sfac[l] * ci[l];
+                            acc[k][l] += w * (dr * yr[l] + di * yi[l]);
+                        }
+                    }
+                }
+            }
+        }
+        std::mem::swap(&mut s.cur_r, &mut s.prev_r);
+        std::mem::swap(&mut s.cur_i, &mut s.prev_i);
+    }
+    for l in 0..LANES {
+        out[l] = [2.0 * acc[0][l], 2.0 * acc[1][l], 2.0 * acc[2][l]];
+    }
+}
+
+/// Explicit AVX2/FMA monomorphizations of the batch kernel bodies, behind
+/// the `simd` feature (no new crates: `std::arch` only).
+///
+/// `#[target_feature]` recompiles the same `#[inline(always)]` bodies with
+/// 256-bit vectors enabled; no intrinsics are hand-written, and Rust never
+/// contracts separate mul/add into FMA on its own, so the arithmetic — and
+/// therefore the bit pattern of every result — is identical to the
+/// autovectorized fallback.  Dispatch is runtime CPU detection, cached by
+/// `std::is_x86_feature_detected!`.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod x86 {
+    use super::*;
+
+    #[inline]
+    pub fn have_avx2() -> bool {
+        std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma")
+    }
+
+    /// # Safety
+    /// The CPU must support AVX2 + FMA (check [`have_avx2`] first).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn compute_ulist_batch_avx2(
+        g: &PairGeomX,
+        idx: &SnapIndex,
+        u_r: &mut [f64],
+        u_i: &mut [f64],
+    ) {
+        ulist_batch_body(g, idx, u_r, u_i)
+    }
+
+    /// # Safety
+    /// The CPU must support AVX2 + FMA (check [`have_avx2`] first).
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn fused_dedr_batch_avx2(
+        g: &PairGeomX,
+        idx: &SnapIndex,
+        u_r: &[f64],
+        u_i: &[f64],
+        y_r: &[f64],
+        y_i: &[f64],
+        s: &mut FusedDuScratchX,
+        out: &mut [[f64; 3]; LANES],
+    ) {
+        fused_dedr_batch_body(g, idx, u_r, u_i, y_r, y_i, s, out)
+    }
+}
+
+#[cfg(test)]
+mod batch_tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    fn lane_geoms(seed: u64, p: &SnapParams, actives: [bool; LANES]) -> (PairGeomX, Vec<PairGeom>) {
+        let mut rng = XorShift::new(seed);
+        let scalars: Vec<PairGeom> = (0..LANES)
+            .map(|_| {
+                let rij = [
+                    rng.uniform(-0.55 * p.rcut(), 0.55 * p.rcut()),
+                    rng.uniform(-0.55 * p.rcut(), 0.55 * p.rcut()),
+                    rng.uniform(0.1, 0.55 * p.rcut()),
+                ];
+                PairGeom::new(rij, p)
+            })
+            .collect();
+        let gx = PairGeomX::pack(|l| if actives[l] { Some(scalars[l]) } else { None });
+        (gx, scalars)
+    }
+
+    #[test]
+    fn ulist_batch_is_bitwise_scalar_per_lane() {
+        for twojmax in [2usize, 3, 4, 6] {
+            let p = SnapParams::with_twojmax(twojmax);
+            let idx = SnapIndex::new(twojmax);
+            let mut actives = [true; LANES];
+            actives[3] = false; // one inert lane mid-batch
+            let (gx, scalars) = lane_geoms(1000 + twojmax as u64, &p, actives);
+            let mut ub_r = vec![0.0; idx.idxu_max * LANES];
+            let mut ub_i = vec![0.0; idx.idxu_max * LANES];
+            compute_ulist_batch(&gx, &idx, &mut ub_r, &mut ub_i);
+            let mut us_r = vec![0.0; idx.idxu_max];
+            let mut us_i = vec![0.0; idx.idxu_max];
+            for (l, active) in actives.iter().enumerate() {
+                if !active {
+                    // inert lanes must stay finite (they feed zero-weighted
+                    // accumulates downstream, never outputs)
+                    for jju in 0..idx.idxu_max {
+                        assert!(ub_r[jju * LANES + l].is_finite());
+                        assert!(ub_i[jju * LANES + l].is_finite());
+                    }
+                    continue;
+                }
+                compute_ulist_pair(&scalars[l], &idx, &mut us_r, &mut us_i);
+                for jju in 0..idx.idxu_max {
+                    assert_eq!(
+                        us_r[jju].to_bits(),
+                        ub_r[jju * LANES + l].to_bits(),
+                        "2J={twojmax} lane {l} jju {jju} re"
+                    );
+                    assert_eq!(
+                        us_i[jju].to_bits(),
+                        ub_i[jju * LANES + l].to_bits(),
+                        "2J={twojmax} lane {l} jju {jju} im"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_dedr_batch_is_bitwise_scalar_per_lane() {
+        for twojmax in [2usize, 3, 5] {
+            let p = SnapParams::with_twojmax(twojmax);
+            let idx = SnapIndex::new(twojmax);
+            let ih = idx.idxu_half_max();
+            let mut actives = [true; LANES];
+            actives[0] = false;
+            actives[6] = false;
+            let (gx, scalars) = lane_geoms(2000 + twojmax as u64, &p, actives);
+            // random per-lane half-index adjoint, lane-innermost
+            let mut rng = XorShift::new(7 + twojmax as u64);
+            let yb_r: Vec<f64> = (0..ih * LANES).map(|_| rng.normal()).collect();
+            let yb_i: Vec<f64> = (0..ih * LANES).map(|_| rng.normal()).collect();
+            let mut ub_r = vec![0.0; idx.idxu_max * LANES];
+            let mut ub_i = vec![0.0; idx.idxu_max * LANES];
+            compute_ulist_batch(&gx, &idx, &mut ub_r, &mut ub_i);
+            let mut sx = FusedDuScratchX::new(twojmax);
+            let mut d = [[0.0f64; 3]; LANES];
+            compute_fused_dedr_batch(&gx, &idx, &ub_r, &ub_i, &yb_r, &yb_i, &mut sx, &mut d);
+            let mut us_r = vec![0.0; idx.idxu_max];
+            let mut us_i = vec![0.0; idx.idxu_max];
+            let mut ss = FusedDuScratch::new(twojmax);
+            for (l, active) in actives.iter().enumerate() {
+                if !active {
+                    assert!(d[l].iter().all(|v| v.is_finite()));
+                    continue;
+                }
+                compute_ulist_pair(&scalars[l], &idx, &mut us_r, &mut us_i);
+                let y_at = |jju: usize| {
+                    let half = idx.uhalf_slot[jju];
+                    (yb_r[half * LANES + l], yb_i[half * LANES + l])
+                };
+                let want =
+                    compute_fused_dedr_pair(&scalars[l], &idx, &us_r, &us_i, y_at, &mut ss);
+                for k in 0..3 {
+                    assert_eq!(
+                        want[k].to_bits(),
+                        d[l][k].to_bits(),
+                        "2J={twojmax} lane {l} k {k}: {} vs {}",
+                        want[k],
+                        d[l][k]
+                    );
+                }
+            }
+        }
+    }
 }

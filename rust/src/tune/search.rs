@@ -71,6 +71,7 @@ impl SearchOptions {
                 Variant::V7,
                 Variant::Fused,
                 Variant::FusedAosoa,
+                Variant::FusedSimd,
             ],
         }
     }
@@ -299,6 +300,14 @@ mod tests {
         assert_eq!(default_shard_candidates(4), vec![1, 2, 4]);
         assert_eq!(default_shard_candidates(6), vec![1, 2, 4, 6]);
         assert_eq!(default_shard_candidates(8), vec![1, 2, 4, 8]);
+    }
+
+    #[test]
+    fn default_candidates_search_the_simd_rung() {
+        // `repro tune` / `--plan auto` must consider VII-simd automatically
+        let opts = SearchOptions::new(2);
+        assert!(opts.variant_candidates.contains(&Variant::FusedSimd));
+        assert!(opts.variant_candidates.contains(&Variant::Fused));
     }
 
     #[test]

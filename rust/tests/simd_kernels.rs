@@ -1,0 +1,216 @@
+//! VII-simd differential conformance: the lane-parallel engine against
+//! `VI-fused` across ragged lane tails, masked-heavy tiles, mixed-species
+//! tiles, and the sharded wrapper.
+//!
+//! **Equivalence contract** (the tolerance documentation the engine ladder
+//! requires): VII-simd's lanes are *atoms* — lane `l` of every batched
+//! kernel executes exactly the scalar engine's floating-point sequence for
+//! atom `block*LANES + l`, and no cross-lane reduction exists anywhere in
+//! the U accumulate, the Y contraction, the energy sum, or the fused dE
+//! stream.  The operation order is therefore preserved per atom, and every
+//! comparison below asserts **bitwise** equality (`assert_eq!` on `f64`,
+//! i.e. IEEE `==`; the one legal artifact — masked lanes contributing
+//! exact ±0.0 terms whose zero *sign* may differ — is absorbed by `==`,
+//! which treats +0.0 and -0.0 as equal).  The bounded fallback the ladder
+//! would allow (≤1e-12 relative) is deliberately *not* used: if a future
+//! refactor introduces lane-order reassociation, these tests are where
+//! the contract must be relaxed — consciously, not by accident.
+
+use repro::snap::engine::{EngineFactory, ForceEngine, TileElems, TileInput};
+use repro::snap::variants::Variant;
+use repro::snap::wigner::LANES;
+use repro::snap::{SnapIndex, SnapParams, TileOutput};
+use repro::util::XorShift;
+use std::sync::Arc;
+
+/// A random padded tile with a controllable masked-neighbor fraction.
+struct Tile {
+    na: usize,
+    nn: usize,
+    rij: Vec<f64>,
+    mask: Vec<f64>,
+    ielems: Vec<i32>,
+    jelems: Vec<i32>,
+}
+
+impl Tile {
+    fn random(seed: u64, na: usize, nn: usize, masked_frac: f64, nelems: i32) -> Tile {
+        let mut rng = XorShift::new(seed);
+        let mut rij = Vec::new();
+        let mut mask = Vec::new();
+        let mut jelems = Vec::new();
+        for row in 0..na * nn {
+            loop {
+                let v = [
+                    rng.uniform(-2.4, 2.4),
+                    rng.uniform(-2.4, 2.4),
+                    rng.uniform(-2.4, 2.4),
+                ];
+                if (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]).sqrt() > 0.4 {
+                    rij.extend_from_slice(&v);
+                    break;
+                }
+            }
+            mask.push(if rng.next_f64() > masked_frac { 1.0 } else { 0.0 });
+            jelems.push((row as i32 * 7 + 3) % nelems);
+        }
+        let ielems = (0..na).map(|a| (a as i32 * 5 + 1) % nelems).collect();
+        Tile { na, nn, rij, mask, ielems, jelems }
+    }
+
+    fn untyped(&self) -> TileInput<'_> {
+        TileInput {
+            num_atoms: self.na,
+            num_nbor: self.nn,
+            rij: &self.rij,
+            mask: &self.mask,
+            elems: None,
+        }
+    }
+
+    fn typed(&self) -> TileInput<'_> {
+        TileInput {
+            num_atoms: self.na,
+            num_nbor: self.nn,
+            rij: &self.rij,
+            mask: &self.mask,
+            elems: Some(TileElems { ielems: &self.ielems, jelems: &self.jelems }),
+        }
+    }
+}
+
+fn beta_for(twojmax: usize) -> Vec<f64> {
+    let idx = SnapIndex::new(twojmax);
+    let mut rng = XorShift::new(4242);
+    (0..idx.idxb_max).map(|_| rng.normal()).collect()
+}
+
+fn build(v: Variant, twojmax: usize) -> Box<dyn ForceEngine> {
+    let idx = Arc::new(SnapIndex::new(twojmax));
+    v.build(SnapParams::with_twojmax(twojmax), idx, beta_for(twojmax))
+}
+
+/// Bitwise comparison per the contract in the module docs: IEEE `==` on
+/// every energy and every dE/dr component.
+fn assert_bitwise(want: &TileOutput, got: &TileOutput, what: &str) {
+    assert_eq!(want.ei, got.ei, "{what}: ei diverges");
+    assert_eq!(want.dedr, got.dedr, "{what}: dedr diverges");
+}
+
+/// Lane-width sweep: `na mod LANES ∈ {0, 1, LANES-1}` at one and several
+/// blocks, plus a sub-lane tile — the ragged-tail cases where AoSoA
+/// padding lanes are live in every batched call.
+#[test]
+fn ragged_lane_tails_are_bitwise_fused() {
+    for twojmax in [2usize, 3] {
+        for na in [
+            1,
+            LANES - 1,
+            LANES,
+            LANES + 1,
+            2 * LANES - 1,
+            2 * LANES,
+            3 * LANES + 1,
+        ] {
+            let tile = Tile::random(100 + na as u64, na, 6, 0.25, 1);
+            let want = build(Variant::Fused, twojmax).compute(&tile.untyped());
+            let got = build(Variant::FusedSimd, twojmax).compute(&tile.untyped());
+            assert_bitwise(&want, &got, &format!("2J={twojmax} na={na}"));
+        }
+    }
+}
+
+/// Masked-neighbor-heavy tiles: most lanes of most batched calls are
+/// inactive, including whole neighbor slots with no real pair in a block
+/// (the batch is skipped, like the scalar engine's per-pair skip) and a
+/// fully masked tile (every output must be exactly zero on both engines).
+#[test]
+fn masked_neighbor_heavy_tiles_are_bitwise_fused() {
+    let twojmax = 2usize;
+    for (seed, na, masked_frac) in [(7u64, 9usize, 0.9), (8, 17, 0.95), (9, 12, 1.0)] {
+        let tile = Tile::random(seed, na, 8, masked_frac, 1);
+        let want = build(Variant::Fused, twojmax).compute(&tile.untyped());
+        let got = build(Variant::FusedSimd, twojmax).compute(&tile.untyped());
+        assert_bitwise(&want, &got, &format!("na={na} masked={masked_frac}"));
+        if masked_frac == 1.0 {
+            assert!(got.dedr.iter().all(|&d| d == 0.0), "fully masked tile");
+        }
+    }
+}
+
+/// Mixed-species tiles: the per-pair cutoffs/weights and per-element beta
+/// blocks flow through the batched geometry pack and the per-lane beta
+/// offsets of the batched Y stage.
+#[test]
+fn multi_element_tiles_are_bitwise_fused() {
+    use repro::snap::coeff::SnapCoeffs;
+    let twojmax = 3usize;
+    let idx = Arc::new(SnapIndex::new(twojmax));
+    let coeffs = SnapCoeffs::synthetic_multi(twojmax, idx.idxb_max, 2, 42);
+    let params = SnapParams::with_twojmax(twojmax);
+    let mut fused = Variant::Fused.build_multi(
+        params,
+        idx.clone(),
+        coeffs.beta.clone(),
+        coeffs.elements.clone(),
+    );
+    let mut simd = Variant::FusedSimd.build_multi(
+        params,
+        idx.clone(),
+        coeffs.beta.clone(),
+        coeffs.elements.clone(),
+    );
+    for (seed, na) in [(21u64, 5usize), (22, LANES + 1), (23, 2 * LANES - 1)] {
+        let tile = Tile::random(seed, na, 6, 0.25, 2);
+        let want = fused.compute(&tile.typed());
+        let got = simd.compute(&tile.typed());
+        assert_bitwise(&want, &got, &format!("typed na={na}"));
+    }
+}
+
+/// ShardedEngine over VII-simd: sub-tile stitching re-blocks each shard's
+/// atoms from zero, so shard-local padding differs from the serial run —
+/// per-atom math must not.  Serial VII-simd, sharded VII-simd, and serial
+/// VI-fused must all agree bitwise (the documented contract; no relaxed
+/// stitching tolerance is needed).
+#[test]
+fn sharded_over_simd_stitches_bitwise() {
+    use repro::snap::sharded::ShardedEngine;
+    let twojmax = 2usize;
+    let params = SnapParams::with_twojmax(twojmax);
+    let idx = Arc::new(SnapIndex::new(twojmax));
+    let beta = beta_for(twojmax);
+    let tile = Tile::random(31, 2 * LANES + 1, 6, 0.3, 1); // ragged per shard
+    let factory: EngineFactory = {
+        let idx = idx.clone();
+        let beta = beta.clone();
+        Arc::new(move || Ok(Variant::FusedSimd.build(params, idx.clone(), beta.clone())))
+    };
+    let serial = Variant::FusedSimd
+        .build(params, idx.clone(), beta.clone())
+        .compute(&tile.untyped());
+    let fused = Variant::Fused
+        .build(params, idx.clone(), beta.clone())
+        .compute(&tile.untyped());
+    for shards in [2usize, 3] {
+        let mut sharded = ShardedEngine::new(&factory, shards).unwrap();
+        let got = sharded.compute(&tile.untyped());
+        assert_bitwise(&serial, &got, &format!("{shards}-sharded vs serial"));
+        assert_bitwise(&fused, &got, &format!("{shards}-sharded vs VI-fused"));
+    }
+}
+
+/// The rung is discoverable everywhere an engine can be named.
+#[test]
+fn simd_rung_is_registered() {
+    assert!(Variant::ladder().contains(&Variant::FusedSimd));
+    assert_eq!(Variant::FusedSimd.label(), "VII-simd");
+    assert_eq!(Variant::from_label("VII-simd"), Some(Variant::FusedSimd));
+    assert_eq!(Variant::from_label("simd"), Some(Variant::FusedSimd));
+    let e = repro::config::EngineSpec::new(2)
+        .engine("VII-simd")
+        .beta(beta_for(2))
+        .build()
+        .unwrap();
+    assert_eq!(e.name(), "VII-simd");
+}
