@@ -262,10 +262,14 @@ fn main() -> anyhow::Result<()> {
 
     // pull the server's own pipeline counters; the per-batch atom shape
     // (dispatches, mean/max atoms per dispatch) makes the coalescer and the
-    // shard-path routing observable from the client side
+    // shard-path routing observable from the client side, and the per-stage
+    // latency histograms (parse/queue/compute/reply p50 and p99) localize
+    // where a slow deployment actually spends its time
     let mut dispatches = 0u64;
     let mut atoms_computed = 0u64;
     let mut batch_atoms_max = 0u64;
+    // [(stage, p50_us, p99_us)] in pipeline order
+    let mut latency: Vec<(&str, f64, f64)> = Vec::new();
     if let Ok(conn) = TcpStream::connect(&args.addr) {
         let mut writer = conn.try_clone()?;
         let mut reader = BufReader::new(conn);
@@ -281,6 +285,17 @@ fn main() -> anyhow::Result<()> {
                 dispatches = get("jobs_dispatched");
                 atoms_computed = get("atoms_computed");
                 batch_atoms_max = get("batch_atoms_max");
+                if let Some(lat) = s.get("latency") {
+                    for stage in ["parse", "queue_wait", "compute", "reply"] {
+                        let q = |k: &str| {
+                            lat.get(stage)
+                                .and_then(|h| h.get(k))
+                                .and_then(Json::as_f64)
+                                .unwrap_or(0.0)
+                        };
+                        latency.push((stage, q("p50_us"), q("p99_us")));
+                    }
+                }
             }
         }
     }
@@ -293,14 +308,24 @@ fn main() -> anyhow::Result<()> {
         "# batch shape: {dispatches} dispatches, {atoms_per_dispatch:.2} atoms/dispatch \
          mean, {batch_atoms_max} max"
     );
+    for (stage, p50, p99) in &latency {
+        println!("# stage {stage}: p50 {p50:.1} us, p99 {p99:.1} us");
+    }
 
     if let Some(path) = &args.out {
+        let lat_entries: Vec<String> = latency
+            .iter()
+            .map(|(stage, p50, p99)| {
+                format!("\"{stage}\": {{\"p50_us\": {p50:.3}, \"p99_us\": {p99:.3}}}")
+            })
+            .collect();
         let json = format!(
             "{{\"bench\": \"serve\", \"wire\": \"{}\", \"conns\": {}, \
              \"requests_per_conn\": {}, \
              \"num_nbor\": {}, \"total_requests\": {}, \"wall_s\": {:.6}, \
              \"req_per_s\": {:.2}, \"dispatches\": {}, \
-             \"atoms_per_dispatch_mean\": {:.3}, \"batch_atoms_max\": {}}}\n",
+             \"atoms_per_dispatch_mean\": {:.3}, \"batch_atoms_max\": {}, \
+             \"latency\": {{{}}}}}\n",
             args.wire.label(),
             args.conns,
             args.requests,
@@ -310,7 +335,8 @@ fn main() -> anyhow::Result<()> {
             rps,
             dispatches,
             atoms_per_dispatch,
-            batch_atoms_max
+            batch_atoms_max,
+            lat_entries.join(", ")
         );
         std::fs::write(path, json)?;
         println!("# wrote {path}");

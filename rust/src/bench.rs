@@ -10,6 +10,7 @@ use crate::snap::engine::{ForceEngine, TileElems, TileInput, TileOutput};
 use crate::snap::sharded::build_sharded;
 use crate::snap::variants::Variant;
 use crate::snap::SnapIndex;
+use crate::util::metrics::{KernelProfile, Stage};
 use crate::util::Stopwatch;
 use std::sync::Arc;
 
@@ -280,6 +281,108 @@ pub fn grind_json(w: &Workload, points: &[GrindPoint]) -> String {
     )
 }
 
+/// One variant's kernel-stage attribution over a workload.
+#[derive(Clone, Debug)]
+pub struct KernelPoint {
+    pub variant: String,
+    /// Merged per-stage profile across the timed reps (warmup excluded).
+    pub profile: KernelProfile,
+    pub stats: BenchStats,
+}
+
+/// Profile each variant's per-kernel time breakdown on one workload — the
+/// repo's analogue of the paper's Fig. 5 fraction-of-time chart, backing
+/// `repro profile` and `BENCH_kernels.json`.
+///
+/// Warmup dispatches run profiled but are discarded (the profile is reset
+/// before the timed reps), so the recorded nanoseconds cover exactly the
+/// dispatches the `stats` were measured over.
+pub fn profile_sweep(
+    variants: &[Variant],
+    twojmax: usize,
+    beta: &[f64],
+    w: &Workload,
+    warmup: usize,
+    reps: usize,
+) -> anyhow::Result<Vec<KernelPoint>> {
+    let idx = Arc::new(SnapIndex::new(twojmax));
+    let tile = w.tile();
+    let mut points = Vec::with_capacity(variants.len());
+    for &v in variants {
+        let factory = crate::config::EngineSpec::new(twojmax)
+            .variant(v)
+            .beta(beta.to_vec())
+            .shared_index(idx.clone())
+            .build_factory()?
+            .factory;
+        let mut engine = factory()?;
+        engine.set_profiling(true);
+        let mut out = TileOutput::default();
+        for _ in 0..warmup {
+            engine
+                .compute_into(&tile, &mut out)
+                .map_err(|e| anyhow::anyhow!("profile warmup ({}): {e}", v.label()))?;
+        }
+        engine.reset_kernel_profile();
+        let mut samples = Vec::with_capacity(reps.max(1));
+        for _ in 0..reps.max(1) {
+            let sw = Stopwatch::start();
+            engine
+                .compute_into(&tile, &mut out)
+                .map_err(|e| anyhow::anyhow!("profile rep ({}): {e}", v.label()))?;
+            samples.push(sw.elapsed_secs());
+            std::hint::black_box(&out);
+        }
+        let profile = engine.kernel_profile().unwrap_or_default();
+        points.push(KernelPoint {
+            variant: v.label().to_string(),
+            profile,
+            stats: BenchStats::from_samples(&samples),
+        });
+    }
+    Ok(points)
+}
+
+/// Serialize a profile sweep as the `BENCH_kernels.json` record: for each
+/// variant, per-stage nanoseconds and fraction-of-total (the fractions sum
+/// to 1.0 per variant whenever any time was recorded — CI checks this).
+pub fn kernels_json(w: &Workload, points: &[KernelPoint]) -> String {
+    let entries: Vec<String> = points
+        .iter()
+        .map(|p| {
+            let fr = p.profile.fractions();
+            let stages: Vec<String> = Stage::ALL
+                .iter()
+                .map(|s| {
+                    format!(
+                        "\"{}\": {{\"ns\": {}, \"fraction\": {:.6}}}",
+                        s.label(),
+                        p.profile.nanos(*s),
+                        fr[s.index()]
+                    )
+                })
+                .collect();
+            format!(
+                "{{\"variant\": \"{}\", \"dispatches\": {}, \"total_ns\": {}, \
+                 \"ms_per_step\": {:.4}, \"stages\": {{{}}}}}",
+                p.variant,
+                p.profile.dispatches,
+                p.profile.total_nanos(),
+                p.stats.min_secs * 1e3,
+                stages.join(", ")
+            )
+        })
+        .collect();
+    format!(
+        "{{\"bench\": \"kernels\", \"atoms\": {}, \"num_nbor\": {}, \"threads\": {}, \
+         \"points\": [{}]}}\n",
+        w.num_atoms,
+        w.num_nbor,
+        crate::util::parallel::num_threads(),
+        entries.join(", ")
+    )
+}
+
 /// Serialize an autotune frontier as the `BENCH_tune.json` record: every
 /// explored `(bucket, variant, shards)` candidate with its timing statistics
 /// plus the per-bucket `chosen` flag — the full search trajectory, not just
@@ -349,6 +452,46 @@ mod tests {
         assert_eq!(w.num_atoms, 250);
         assert_eq!(w.num_nbor, 26); // the paper's 26 neighbors
         assert_eq!(w.mask.iter().filter(|&&m| m > 0.0).count(), 250 * 26);
+    }
+
+    #[test]
+    fn profile_sweep_attributes_time_and_serializes() {
+        let w = Workload::tungsten(4, 4.73442);
+        let idx = SnapIndex::new(2);
+        let beta = vec![0.05; idx.idxb_max];
+        let points = profile_sweep(&[Variant::V5, Variant::Fused], 2, &beta, &w, 1, 2).unwrap();
+        assert_eq!(points.len(), 2);
+        for p in &points {
+            assert_eq!(p.profile.dispatches, 2, "{}: warmup must not count", p.variant);
+            assert!(p.profile.total_nanos() > 0, "{}: no time attributed", p.variant);
+            let sum: f64 = p.profile.fractions().iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9, "{}: fractions sum {sum}", p.variant);
+        }
+        let json = kernels_json(&w, &points);
+        let parsed =
+            crate::util::json::Json::parse(json.trim()).expect("kernels json must parse");
+        assert_eq!(
+            parsed.get("bench").and_then(crate::util::json::Json::as_str),
+            Some("kernels")
+        );
+        let pts = parsed
+            .get("points")
+            .and_then(crate::util::json::Json::as_arr)
+            .expect("has points");
+        for p in pts {
+            let stages = p.get("stages").expect("has stages");
+            let sum: f64 = crate::util::metrics::Stage::ALL
+                .iter()
+                .map(|s| {
+                    stages
+                        .get(s.label())
+                        .and_then(|v| v.get("fraction"))
+                        .and_then(crate::util::json::Json::as_f64)
+                        .expect("stage fraction")
+                })
+                .sum();
+            assert!((sum - 1.0).abs() < 1e-3, "serialized fractions sum {sum}");
+        }
     }
 
     #[test]

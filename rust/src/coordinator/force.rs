@@ -3,6 +3,7 @@
 
 use crate::md::{NeighborList, Structure};
 use crate::snap::engine::{EngineError, ForceEngine, OwnedTile, TileElems, TileInput, TileOutput};
+use crate::util::metrics::KernelProfile;
 use crate::util::StageTimes;
 
 /// Packs several small tiles that share one neighbor width into a single
@@ -172,6 +173,20 @@ impl ForceField {
             times: StageTimes::new(),
             scratch: TileOutput::default(),
         }
+    }
+
+    /// Toggle kernel-stage profiling on the underlying engine
+    /// ([`ForceEngine::set_profiling`]; zero overhead while off).  The
+    /// coarse pack/execute/scatter accounting in [`ForceField::times`] is
+    /// always on; this adds the per-kernel breakdown inside `execute`.
+    pub fn set_profiling(&mut self, on: bool) {
+        self.engine.set_profiling(on);
+    }
+
+    /// The engine's accumulated kernel profile (`None` until profiling has
+    /// been enabled).
+    pub fn kernel_profile(&self) -> Option<KernelProfile> {
+        self.engine.kernel_profile()
     }
 
     /// Evaluate energies/forces/virial for the whole system.

@@ -55,6 +55,7 @@ use crate::snap::engine::{
 use crate::tune::{PlanCounters, PlanSelection, ShapeBucket};
 use crate::util::hist::LatencyHistogram;
 use crate::util::json::{self, Json};
+use crate::util::metrics::{KernelAggregate, Stage, TraceRing};
 use crate::util::parallel::{num_threads, BoundedQueue, RecvTimeout, TrySend};
 use std::collections::{BTreeMap, HashMap};
 use std::io::{BufRead, BufReader, Read, Write};
@@ -196,6 +197,12 @@ pub struct ServerStats {
     pub plan_cache_misses: AtomicU64,
     /// The active plan (set once at startup; `None` = `--plan off`).
     pub plan: Mutex<Option<PlanSetup>>,
+    /// Aggregated kernel-stage time drained from worker engines after each
+    /// dispatch, when its `enabled` flag is set (`--profile-kernels`).
+    pub kernels: KernelAggregate,
+    /// Pipeline trace ring (`--trace-out`): per-request spans, exportable
+    /// as Chrome `trace_event` JSON.  Disabled by default.
+    pub trace: TraceRing,
 }
 
 impl ServerStats {
@@ -280,6 +287,7 @@ impl ServerStats {
                 ),
             ),
             ("plan", self.plan_json()),
+            ("kernels", self.kernels.to_json()),
         ])
     }
 
@@ -287,6 +295,173 @@ impl ServerStats {
     /// off the wire path have no event loop to ask).
     pub fn snapshot_json(&self) -> String {
         self.snapshot_with_sessions("[]")
+    }
+
+    /// Render the whole registry in the Prometheus text exposition format
+    /// (the `{"cmd": "metrics"}` / `CMD_METRICS` reply).  Every metric is
+    /// `repro_`-prefixed; per-stage latencies are summaries in seconds.
+    pub fn prometheus_text(&self) -> String {
+        use std::fmt::Write as _;
+        fn counter(o: &mut String, name: &str, help: &str, v: u64) {
+            let _ = writeln!(o, "# HELP repro_{name} {help}");
+            let _ = writeln!(o, "# TYPE repro_{name} counter");
+            let _ = writeln!(o, "repro_{name} {v}");
+        }
+        fn gauge(o: &mut String, name: &str, help: &str, v: u64) {
+            let _ = writeln!(o, "# HELP repro_{name} {help}");
+            let _ = writeln!(o, "# TYPE repro_{name} gauge");
+            let _ = writeln!(o, "repro_{name} {v}");
+        }
+        let n = |v: &AtomicU64| v.load(Ordering::Relaxed);
+        let mut o = String::with_capacity(4096);
+        gauge(&mut o, "workers", "Worker threads in the compute pool.", n(&self.workers));
+        gauge(&mut o, "shards", "Intra-tile shards per worker engine.", n(&self.shards));
+        counter(&mut o, "connections_total", "Connections accepted.", n(&self.connections_total));
+        gauge(
+            &mut o,
+            "connections_active",
+            "Connections currently open.",
+            n(&self.connections_active),
+        );
+        counter(&mut o, "requests_total", "Non-empty requests received.", n(&self.requests_total));
+        counter(&mut o, "replies_ok_total", "Successful compute replies.", n(&self.replies_ok));
+        counter(&mut o, "replies_err_total", "Error replies.", n(&self.replies_err));
+        counter(
+            &mut o,
+            "engine_errors_total",
+            "Error replies caused by an engine dispatch failure.",
+            n(&self.engine_errors),
+        );
+        counter(
+            &mut o,
+            "requests_shed_total",
+            "Requests shed by admission control.",
+            n(&self.requests_shed),
+        );
+        counter(
+            &mut o,
+            "stats_requests_total",
+            "stats/metrics control requests served.",
+            n(&self.stats_requests),
+        );
+        counter(
+            &mut o,
+            "jobs_dispatched_total",
+            "Engine dispatches (merged batches count once).",
+            n(&self.jobs_dispatched),
+        );
+        counter(
+            &mut o,
+            "batches_merged_total",
+            "Dispatches that merged >= 2 requests.",
+            n(&self.batches_merged),
+        );
+        counter(
+            &mut o,
+            "requests_coalesced_total",
+            "Requests that rode a merged dispatch.",
+            n(&self.requests_coalesced),
+        );
+        counter(&mut o, "atoms_computed_total", "Atom rows computed.", n(&self.atoms_computed));
+        gauge(
+            &mut o,
+            "batch_atoms_max",
+            "Largest single dispatch in atom rows.",
+            n(&self.batch_atoms_max),
+        );
+        counter(
+            &mut o,
+            "json_requests_total",
+            "Requests received on the JSON wire.",
+            n(&self.json_requests),
+        );
+        counter(
+            &mut o,
+            "binary_requests_total",
+            "Requests received on the binary wire.",
+            n(&self.binary_requests),
+        );
+
+        // Per-stage latency summaries (quantiles interpolated from the
+        // log2-bucket histograms, converted to seconds).
+        let _ = writeln!(
+            o,
+            "# HELP repro_stage_latency_seconds Per-pipeline-stage request latency."
+        );
+        let _ = writeln!(o, "# TYPE repro_stage_latency_seconds summary");
+        let stages: [(&str, &LatencyHistogram); 4] = [
+            ("parse", &self.lat_parse),
+            ("queue_wait", &self.lat_queue_wait),
+            ("compute", &self.lat_compute),
+            ("reply", &self.lat_reply),
+        ];
+        for (name, h) in stages {
+            for (label, q) in [("0.5", 0.5), ("0.99", 0.99)] {
+                let _ = writeln!(
+                    o,
+                    "repro_stage_latency_seconds{{stage=\"{name}\",quantile=\"{label}\"}} {:.9}",
+                    h.quantile_ns(q) as f64 / 1e9
+                );
+            }
+            let _ = writeln!(
+                o,
+                "repro_stage_latency_seconds_sum{{stage=\"{name}\"}} {:.9}",
+                h.sum_ns() as f64 / 1e9
+            );
+            let _ = writeln!(
+                o,
+                "repro_stage_latency_seconds_count{{stage=\"{name}\"}} {}",
+                h.count()
+            );
+        }
+
+        // Plan routing (when a plan is active).
+        {
+            let setup = self.plan.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            if let Some(setup) = setup.as_ref() {
+                let _ = writeln!(
+                    o,
+                    "# HELP repro_plan_dispatches_total Dispatches routed per plan bucket."
+                );
+                let _ = writeln!(o, "# TYPE repro_plan_dispatches_total counter");
+                for b in ShapeBucket::ALL {
+                    let _ = writeln!(
+                        o,
+                        "repro_plan_dispatches_total{{bucket=\"{}\"}} {}",
+                        b.label(),
+                        setup.counters.dispatches(b)
+                    );
+                }
+            }
+        }
+
+        // Kernel-stage attribution (populated while --profile-kernels).
+        gauge(
+            &mut o,
+            "kernel_profiling_enabled",
+            "1 while per-kernel profiling is enabled.",
+            self.kernels.is_enabled() as u64,
+        );
+        let _ = writeln!(
+            o,
+            "# HELP repro_kernel_stage_seconds_total Engine wall time attributed per kernel stage."
+        );
+        let _ = writeln!(o, "# TYPE repro_kernel_stage_seconds_total counter");
+        for s in Stage::ALL {
+            let _ = writeln!(
+                o,
+                "repro_kernel_stage_seconds_total{{stage=\"{}\"}} {:.9}",
+                s.label(),
+                self.kernels.stage_ns(s) as f64 / 1e9
+            );
+        }
+        counter(
+            &mut o,
+            "kernel_dispatches_total",
+            "Profiled engine dispatches drained into the registry.",
+            self.kernels.dispatches(),
+        );
+        o
     }
 }
 
@@ -321,6 +496,19 @@ struct Pending {
     seq: u64,
     enqueued: Instant,
     done: mpsc::Sender<Completion>,
+    /// Trace track + parse timing, populated only while the trace ring is
+    /// enabled; the worker emits the request's whole span family from it.
+    trace: Option<TraceReq>,
+}
+
+/// Trace metadata a request carries through the pipeline.
+struct TraceReq {
+    /// Per-request track id (one row per request in the trace viewer).
+    tid: u64,
+    /// Request arrival (parse start), ns since the ring's epoch.
+    start_ns: u64,
+    /// Wire-parse duration, ns.
+    parse_ns: u64,
 }
 
 /// A finished request on its way back to the event loop.
@@ -776,6 +964,8 @@ fn finish_conn(mut conn: Conn, stats: &Arc<ServerStats>) {
 /// What one parsed request asks for.
 enum Request {
     Stats,
+    /// Prometheus text dump of the metrics registry.
+    Metrics,
     Tile(OwnedTile),
     Bad { code: ErrorCode, msg: String },
 }
@@ -838,10 +1028,13 @@ fn process_rbuf(
                 ctx.stats.requests_total.fetch_add(1, Ordering::Relaxed);
                 ctx.stats.json_requests.fetch_add(1, Ordering::Relaxed);
                 let seq = conn.take_seq();
+                let trace_start =
+                    ctx.stats.trace.is_enabled().then(|| ctx.stats.trace.now_ns());
                 let t0 = Instant::now();
                 let request = parse_json_request(line);
-                ctx.stats.lat_parse.record(t0.elapsed());
-                dispatch_request(id, conn, seq, request, ctx, stats_reqs);
+                let parsed_in = t0.elapsed();
+                ctx.stats.lat_parse.record(parsed_in);
+                dispatch_request(id, conn, seq, request, ctx, stats_reqs, trace_start, parsed_in);
             }
             Mode::Binary => match wire::try_extract_frame(&conn.rbuf) {
                 Extracted::Incomplete => break,
@@ -863,6 +1056,8 @@ fn process_rbuf(
                     ctx.stats.requests_total.fetch_add(1, Ordering::Relaxed);
                     ctx.stats.binary_requests.fetch_add(1, Ordering::Relaxed);
                     let seq = conn.take_seq();
+                    let trace_start =
+                        ctx.stats.trace.is_enabled().then(|| ctx.stats.trace.now_ns());
                     let t0 = Instant::now();
                     let request = match parsed {
                         Ok(wire::Frame::Compute(tile)) => match tile.check_shape() {
@@ -873,14 +1068,16 @@ fn process_rbuf(
                             },
                         },
                         Ok(wire::Frame::Stats) => Request::Stats,
+                        Ok(wire::Frame::Metrics) => Request::Metrics,
                         Ok(_) => Request::Bad {
                             code: ErrorCode::UnknownCmd,
                             msg: "this frame type is server-to-client only".to_string(),
                         },
                         Err(bad) => Request::Bad { code: bad.code, msg: bad.message },
                     };
-                    ctx.stats.lat_parse.record(t0.elapsed());
-                    dispatch_request(id, conn, seq, request, ctx, stats_reqs);
+                    let parsed_in = t0.elapsed();
+                    ctx.stats.lat_parse.record(parsed_in);
+                    dispatch_request(id, conn, seq, request, ctx, stats_reqs, trace_start, parsed_in);
                 }
             },
         }
@@ -891,8 +1088,10 @@ fn process_rbuf(
     progressed
 }
 
-/// Route one parsed request: stats to the deferred stats pass, tiles into
+/// Route one parsed request: stats to the deferred stats pass, metrics
+/// straight back (the Prometheus dump needs no session list), tiles into
 /// the pipeline (with admission control), errors straight back.
+#[allow(clippy::too_many_arguments)]
 fn dispatch_request(
     id: u64,
     conn: &mut Conn,
@@ -900,11 +1099,19 @@ fn dispatch_request(
     request: Request,
     ctx: &LoopCtx,
     stats_reqs: &mut Vec<(u64, u64)>,
+    trace_start: Option<u64>,
+    parsed_in: Duration,
 ) {
     match request {
         Request::Stats => {
             ctx.stats.stats_requests.fetch_add(1, Ordering::Relaxed);
             stats_reqs.push((id, seq));
+        }
+        Request::Metrics => {
+            ctx.stats.stats_requests.fetch_add(1, Ordering::Relaxed);
+            let text = ctx.stats.prometheus_text();
+            let bytes = metrics_reply_bytes(conn.fmt(), &text);
+            conn.emit(seq, bytes);
         }
         Request::Bad { code, msg } => {
             ctx.stats.replies_err.fetch_add(1, Ordering::Relaxed);
@@ -912,6 +1119,11 @@ fn dispatch_request(
             conn.emit(seq, bytes);
         }
         Request::Tile(tile) => {
+            let trace = trace_start.map(|start_ns| TraceReq {
+                tid: ctx.stats.trace.next_tid(),
+                start_ns,
+                parse_ns: parsed_in.as_nanos().min(u64::MAX as u128) as u64,
+            });
             let pending = Pending {
                 tile,
                 fmt: conn.fmt(),
@@ -919,6 +1131,7 @@ fn dispatch_request(
                 seq,
                 enqueued: Instant::now(),
                 done: ctx.done.clone(),
+                trace,
             };
             match ctx.ingress.try_send(pending) {
                 Ok(()) => conn.inflight += 1,
@@ -954,6 +1167,7 @@ fn parse_json_request(line: &str) -> Request {
     if let Some(cmd) = j.get("cmd").and_then(Json::as_str) {
         return match cmd {
             "stats" => Request::Stats,
+            "metrics" => Request::Metrics,
             other => Request::Bad {
                 code: ErrorCode::UnknownCmd,
                 msg: format!("unknown cmd `{other}`"),
@@ -1071,13 +1285,24 @@ fn coalescer_loop(
 /// tile.
 fn worker_loop(workq: &BoundedQueue<Job>, mut engine: Box<dyn ForceEngine>, stats: &ServerStats) {
     let mut out = TileOutput::default();
+    let mut profiling = false;
     while let Some(job) = workq.recv() {
+        // Sync the engine's kernel profiler with the registry switch before
+        // the dispatch (one relaxed load per *job*; the engine's inner
+        // loops stay on the zero-overhead path while disabled).
+        let want = stats.kernels.is_enabled();
+        if want != profiling {
+            engine.set_profiling(want);
+            profiling = want;
+        }
         match job {
             Job::Single(p) => {
                 note_wait(stats, std::iter::once(&p));
+                let pickup_ns = p.trace.as_ref().map(|_| stats.trace.now_ns());
                 let t0 = Instant::now();
                 let result = guarded_compute(engine.as_mut(), &p.tile.as_input(), &mut out);
                 note_compute(stats, t0, p.tile.num_atoms);
+                let compute_end_ns = pickup_ns.map(|_| stats.trace.now_ns());
                 let t1 = Instant::now();
                 let (bytes, engine_err) = match result {
                     Ok(()) => (
@@ -1087,17 +1312,26 @@ fn worker_loop(workq: &BoundedQueue<Job>, mut engine: Box<dyn ForceEngine>, stat
                     Err(e) => (serialize_engine_err(p.fmt, &e), true),
                 };
                 stats.lat_reply.record(t1.elapsed());
+                if let (Some(tr), Some(pickup), Some(end)) = (&p.trace, pickup_ns, compute_end_ns)
+                {
+                    let reply_end = stats.trace.now_ns();
+                    emit_request_spans(&stats.trace, tr, pickup, None, end, reply_end);
+                }
                 let _ = p.done.send(Completion { conn: p.conn, seq: p.seq, bytes, engine_err });
             }
             Job::Batch(members) => {
                 note_wait(stats, members.iter());
+                let tracing = members.iter().any(|m| m.trace.is_some());
+                let pickup_ns = tracing.then(|| stats.trace.now_ns());
                 let mut batch = TileBatch::new(members[0].tile.num_nbor);
                 for m in &members {
                     batch.push(&m.tile);
                 }
+                let assembled_ns = tracing.then(|| stats.trace.now_ns());
                 let t0 = Instant::now();
                 let result = guarded_compute(engine.as_mut(), &batch.input(), &mut out);
                 note_compute(stats, t0, batch.num_atoms());
+                let compute_end_ns = tracing.then(|| stats.trace.now_ns());
                 stats.batches_merged.fetch_add(1, Ordering::Relaxed);
                 stats
                     .requests_coalesced
@@ -1136,9 +1370,72 @@ fn worker_loop(workq: &BoundedQueue<Job>, mut engine: Box<dyn ForceEngine>, stat
                     }
                 }
                 stats.lat_reply.record(t1.elapsed());
+                if let (Some(pickup), Some(assembled), Some(end)) =
+                    (pickup_ns, assembled_ns, compute_end_ns)
+                {
+                    let reply_end = stats.trace.now_ns();
+                    for m in &members {
+                        if let Some(tr) = &m.trace {
+                            emit_request_spans(
+                                &stats.trace,
+                                tr,
+                                pickup,
+                                Some(assembled),
+                                end,
+                                reply_end,
+                            );
+                        }
+                    }
+                }
             }
         }
+        // Drain the profiled dispatch into the shared registry (only when
+        // profiling: counting costs atomics, which the off state must not).
+        if profiling {
+            if let Some(p) = engine.kernel_profile() {
+                stats.kernels.absorb(&p);
+            }
+            engine.reset_kernel_profile();
+        }
     }
+}
+
+/// Emit the span family for one completed compute request on its own trace
+/// track: `parse`, `queue`, optional `coalesce`, exactly one `compute`,
+/// `reply`, and the enclosing `request` span.  All children are disjoint
+/// and nest strictly inside `request` (a tested invariant), so the trace
+/// viewer renders one self-explanatory row per request.
+fn emit_request_spans(
+    ring: &TraceRing,
+    tr: &TraceReq,
+    pickup_ns: u64,
+    assembled_ns: Option<u64>,
+    compute_end_ns: u64,
+    reply_end_ns: u64,
+) {
+    let parse_end = tr.start_ns + tr.parse_ns;
+    ring.push("parse", tr.start_ns, tr.parse_ns, tr.tid);
+    ring.push("queue", parse_end, pickup_ns.saturating_sub(parse_end), tr.tid);
+    let compute_start = match assembled_ns {
+        Some(a) => {
+            ring.push("coalesce", pickup_ns, a.saturating_sub(pickup_ns), tr.tid);
+            a
+        }
+        None => pickup_ns,
+    };
+    ring.push(
+        "compute",
+        compute_start,
+        compute_end_ns.saturating_sub(compute_start),
+        tr.tid,
+    );
+    ring.push(
+        "reply",
+        compute_end_ns,
+        reply_end_ns.saturating_sub(compute_end_ns),
+        tr.tid,
+    );
+    ring.push("request", tr.start_ns, reply_end_ns.saturating_sub(tr.start_ns), tr.tid);
 }
 
 /// Run one engine dispatch.  Failures are expected to arrive as typed
@@ -1269,6 +1566,21 @@ fn stats_reply_bytes(fmt: WireFmt, doc: &str) -> Vec<u8> {
             bytes
         }
         WireFmt::Binary => wire::encode_stats_json(doc),
+    }
+}
+
+/// Serialize a metrics reply: the JSON wire wraps the Prometheus text in a
+/// JSON string (`{"ok": true, "metrics": "..."}`); the binary wire carries
+/// it verbatim in a METRICS_TEXT frame.
+fn metrics_reply_bytes(fmt: WireFmt, text: &str) -> Vec<u8> {
+    match fmt {
+        WireFmt::Json => {
+            let mut bytes =
+                format!("{{\"ok\": true, \"metrics\": {}}}", json::quote(text)).into_bytes();
+            bytes.push(b'\n');
+            bytes
+        }
+        WireFmt::Binary => wire::encode_metrics_text(text),
     }
 }
 

@@ -42,12 +42,17 @@ pub const MAX_FRAME_LEN: usize = 64 * 1024 * 1024;
 pub const CMD_COMPUTE: u8 = 0x01;
 /// Client→server: request a stats snapshot (empty body).
 pub const CMD_STATS: u8 = 0x02;
+/// Client→server: request a metrics-registry dump (empty body).
+pub const CMD_METRICS: u8 = 0x03;
 /// Server→client: forces for one tile (`u32 num_atoms`, `u32 num_nbor`,
 /// `ei`, `dedr`).
 pub const CMD_RESULT: u8 = 0x81;
 /// Server→client: stats snapshot as UTF-8 JSON (same document the JSON
 /// path returns for `{"cmd": "stats"}`).
 pub const CMD_STATS_JSON: u8 = 0x82;
+/// Server→client: metrics registry in the Prometheus text exposition
+/// format, UTF-8 (same text the JSON path wraps for `{"cmd": "metrics"}`).
+pub const CMD_METRICS_TEXT: u8 = 0x83;
 /// Server→client: structured error (`u8 code`, UTF-8 message).
 pub const CMD_ERROR: u8 = 0x7F;
 
@@ -126,11 +131,15 @@ pub enum Frame {
     Compute(OwnedTile),
     /// Client→server: stats snapshot request.
     Stats,
+    /// Client→server: metrics-registry dump request.
+    Metrics,
     /// Server→client: forces (`ei` len = `num_atoms`, `dedr` len =
     /// `num_atoms * num_nbor * 3`).
     Result { num_atoms: usize, num_nbor: usize, ei: Vec<f64>, dedr: Vec<f64> },
     /// Server→client: stats snapshot (JSON text).
     StatsJson(String),
+    /// Server→client: metrics registry (Prometheus text).
+    MetricsText(String),
     /// Server→client: structured error.
     Error { code: ErrorCode, message: String },
 }
@@ -256,6 +265,11 @@ pub fn encode_stats_request() -> Vec<u8> {
     finish_frame(CMD_STATS, Vec::new())
 }
 
+/// Encode a [`CMD_METRICS`] frame (empty body).
+pub fn encode_metrics_request() -> Vec<u8> {
+    finish_frame(CMD_METRICS, Vec::new())
+}
+
 /// Encode a [`CMD_RESULT`] frame from a computed tile's output slices.
 pub fn encode_result(num_atoms: usize, num_nbor: usize, ei: &[f64], dedr: &[f64]) -> Vec<u8> {
     debug_assert_eq!(ei.len(), num_atoms);
@@ -271,6 +285,11 @@ pub fn encode_result(num_atoms: usize, num_nbor: usize, ei: &[f64], dedr: &[f64]
 /// Encode a [`CMD_STATS_JSON`] frame.
 pub fn encode_stats_json(json: &str) -> Vec<u8> {
     finish_frame(CMD_STATS_JSON, json.as_bytes().to_vec())
+}
+
+/// Encode a [`CMD_METRICS_TEXT`] frame.
+pub fn encode_metrics_text(text: &str) -> Vec<u8> {
+    finish_frame(CMD_METRICS_TEXT, text.as_bytes().to_vec())
 }
 
 /// Encode a [`CMD_ERROR`] frame.
@@ -316,10 +335,26 @@ pub fn parse_payload(payload: &[u8]) -> Result<Frame, BadFrame> {
                 ))
             }
         }
+        CMD_METRICS => {
+            if body.is_empty() {
+                Ok(Frame::Metrics)
+            } else {
+                Err(BadFrame::new(
+                    ErrorCode::BadFrame,
+                    format!("metrics frame must have an empty body, got {} bytes", body.len()),
+                ))
+            }
+        }
         CMD_RESULT => parse_result_body(body),
         CMD_STATS_JSON => match std::str::from_utf8(body) {
             Ok(s) => Ok(Frame::StatsJson(s.to_string())),
             Err(e) => Err(BadFrame::new(ErrorCode::BadFrame, format!("stats body not UTF-8: {e}"))),
+        },
+        CMD_METRICS_TEXT => match std::str::from_utf8(body) {
+            Ok(s) => Ok(Frame::MetricsText(s.to_string())),
+            Err(e) => {
+                Err(BadFrame::new(ErrorCode::BadFrame, format!("metrics body not UTF-8: {e}")))
+            }
         },
         CMD_ERROR => {
             let Some((&tag, msg)) = body.split_first() else {
@@ -548,6 +583,17 @@ mod tests {
 
         let (frame, _) = extract_one(&encode_stats_json("{\"ok\": true}"));
         assert_eq!(frame.unwrap(), Frame::StatsJson("{\"ok\": true}".into()));
+
+        let (frame, _) = extract_one(&encode_metrics_request());
+        assert_eq!(frame.unwrap(), Frame::Metrics);
+
+        let text = "# TYPE repro_requests_total counter\nrepro_requests_total 3\n";
+        let (frame, _) = extract_one(&encode_metrics_text(text));
+        assert_eq!(frame.unwrap(), Frame::MetricsText(text.into()));
+
+        // a metrics request with a body is a survivable bad frame
+        let (frame, _) = extract_one(&finish_frame(CMD_METRICS, vec![1]));
+        assert_eq!(frame.unwrap_err().code, ErrorCode::BadFrame);
 
         let (frame, _) = extract_one(&encode_error(ErrorCode::Overloaded, "queue full"));
         assert_eq!(

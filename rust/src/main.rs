@@ -45,7 +45,7 @@ impl<'a> Flags<'a> {
             let k = args[i]
                 .strip_prefix("--")
                 .with_context(|| format!("expected --flag, got `{}`", args[i]))?;
-            if k == "quick" || k == "no-xla" {
+            if k == "quick" || k == "no-xla" || k == "profile-kernels" {
                 pairs.push((k, "true"));
                 i += 1;
             } else {
@@ -88,6 +88,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "inspect" => cmd_inspect(&flags),
         "serve" => cmd_serve(&flags),
         "tune" => cmd_tune(&flags),
+        "profile" => cmd_profile(&flags),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -111,9 +112,12 @@ fn print_help() {
          \x20 serve       --port P [--engine NAME] [--twojmax J] [--workers N]\n\
          \x20             [--batch-window-us U] [--queue-depth D] [--max-batch-atoms A]\n\
          \x20             [--shards S] [--plan auto|FILE|off] [--nelems N]\n\
+         \x20             [--profile-kernels] [--trace-out FILE] [--serve-seconds S]\n\
          \x20 tune        [--twojmax J] [--budget-ms M] [--cells C] [--reps N]\n\
          \x20             [--warmup N] [--variants a,b,c] [--shards 1,2,4]\n\
          \x20             [--nelems N] [--out PLAN] [--bench-out FILE]\n\
+         \x20 profile     [--twojmax J] [--cells C] [--warmup N] [--reps N]\n\
+         \x20             [--variants a,b,c] [--out BENCH_kernels.json]\n\
          \n\
          engines: baseline V1..V7 fused aosoa pre-adjoint-atom pre-adjoint-pair\n\
          \x20        xla:snap_2j8 xla:snap_2j8_ref xla:snap_2j14 xla:snap_2j14_ref\n\
@@ -127,7 +131,15 @@ fn print_help() {
          `serve` speaks two protocols on one port: line-delimited JSON and\n\
          the repro-frame-v1 binary framing (first byte 0xB1 switches; see\n\
          docs/PROTOCOL.md). `{{\"cmd\": \"stats\"}}` reports pipeline counters,\n\
-         per-stage latency histograms, and per-session wire state."
+         per-stage latency histograms, and per-session wire state;\n\
+         `{{\"cmd\": \"metrics\"}}` dumps the whole registry as Prometheus\n\
+         text. `--profile-kernels` adds per-kernel-stage attribution,\n\
+         `--trace-out` writes a Chrome trace_event file on shutdown.\n\
+         \n\
+         `profile` runs every engine variant over the benchmark workload\n\
+         with kernel profiling on and writes the per-stage fraction-of-time\n\
+         breakdown (the paper's Fig. 5 analogue) to BENCH_kernels.json\n\
+         (see docs/OBSERVABILITY.md)."
     );
 }
 
@@ -255,7 +267,7 @@ fn cmd_inspect(flags: &Flags) -> Result<()> {
 }
 
 fn cmd_serve(flags: &Flags) -> Result<()> {
-    use repro::coordinator::server::{serve, PlanSetup, ServeOptions};
+    use repro::coordinator::server::{serve_with_stats, PlanSetup, ServeOptions, ServerStats};
 
     let port: u16 = flags.get_or("port", 7878)?;
     let engine_name = flags.get_or("engine", "fused".to_string())?;
@@ -319,8 +331,96 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         opts.batch_window.as_micros(),
         opts.queue_depth
     );
+    let stats = std::sync::Arc::new(ServerStats::default());
+    if flags.has("profile-kernels") {
+        stats.kernels.set_enabled(true);
+        println!("# kernel profiling on: per-stage attribution in stats/metrics replies");
+    }
+    let trace_out = flags.get("trace-out").map(str::to_string);
+    if trace_out.is_some() {
+        stats.trace.set_enabled(true);
+    }
     let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
-    serve(listener, factory, &opts, stop)?;
+    // --serve-seconds S: stop after S seconds (0 = run until killed) so
+    // scripted runs — and --trace-out, which writes at shutdown — have a
+    // clean exit path without signal handling.
+    let serve_seconds = flags.get_or("serve-seconds", 0u64)?;
+    if serve_seconds > 0 {
+        let stop = stop.clone();
+        let addr = listener.local_addr()?;
+        std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_secs(serve_seconds));
+            repro::coordinator::server::shutdown(addr, &stop);
+        });
+        println!("# serving for {serve_seconds}s, then shutting down");
+    }
+    serve_with_stats(listener, factory, &opts, stop, stats.clone())?;
+    if let Some(path) = trace_out {
+        std::fs::write(&path, stats.trace.to_chrome_json())
+            .with_context(|| format!("writing trace to {path}"))?;
+        println!(
+            "# pipeline trace written to {path} ({} spans held, {} pushed) — load in \
+             chrome://tracing or https://ui.perfetto.dev",
+            stats.trace.snapshot().len(),
+            stats.trace.pushed()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_profile(flags: &Flags) -> Result<()> {
+    use repro::snap::variants::Variant;
+
+    let twojmax = flags.get_or("twojmax", 8usize)?;
+    let cells = flags.get_or("cells", 4usize)?;
+    let warmup = flags.get_or("warmup", 1usize)?;
+    let reps = flags.get_or("reps", 3usize)?;
+    let out_path = flags.get_or("out", "BENCH_kernels.json".to_string())?;
+    // ladder ∪ fig1 by default: every serial variant the experiments sweep
+    let mut variants: Vec<Variant> = Variant::ladder().to_vec();
+    for v in Variant::fig1() {
+        if !variants.contains(v) {
+            variants.push(*v);
+        }
+    }
+    if let Some(list) = flags.get("variants") {
+        variants = list
+            .split(',')
+            .map(|s| Variant::resolve_label(s.trim()))
+            .collect::<Result<Vec<_>>>()?;
+    }
+
+    let idx = repro::snap::SnapIndex::new(twojmax);
+    let coeffs = repro::snap::coeff::SnapCoeffs::synthetic(twojmax, idx.idxb_max, 3);
+    // the paper's benchmark geometry: bcc W, 26 neighbors at the 2J8 cutoff
+    let w = repro::bench::Workload::tungsten(cells, 4.73442);
+    println!(
+        "# repro profile: {} atoms x {} neighbors, 2J={twojmax}, {} variants, \
+         warmup={warmup} reps={reps}",
+        w.num_atoms,
+        w.num_nbor,
+        variants.len()
+    );
+    let points = repro::bench::profile_sweep(&variants, twojmax, &coeffs.beta, &w, warmup, reps)?;
+
+    // Fig. 5-style table: fraction of engine time per kernel stage.
+    use repro::util::metrics::Stage;
+    print!("\n{:<16} {:>10}", "variant", "ms/step");
+    for s in Stage::ALL {
+        print!(" {:>9}", s.label());
+    }
+    println!();
+    for p in &points {
+        let fr = p.profile.fractions();
+        print!("{:<16} {:>10.3}", p.variant, p.stats.min_secs * 1e3);
+        for s in Stage::ALL {
+            print!(" {:>8.1}%", fr[s.index()] * 100.0);
+        }
+        println!();
+    }
+
+    std::fs::write(&out_path, repro::bench::kernels_json(&w, &points))?;
+    println!("\n# per-kernel breakdown written to {out_path}");
     Ok(())
 }
 

@@ -32,6 +32,7 @@ use super::kernels::*;
 use super::memory::{MemoryFootprint, C128, F64};
 use super::params::{ElementTable, SnapParams};
 use super::wigner::{compute_dulist_pair, compute_ulist_pair};
+use crate::util::metrics::{KernelProfile, Stage, StageTimer};
 use crate::util::zero_resize;
 use std::sync::Arc;
 
@@ -72,6 +73,9 @@ pub struct AdjointEngine {
     blist: Vec<f64>,
     yscratch_r: Vec<f64>,
     yscratch_i: Vec<f64>,
+    /// Per-stage kernel profile; `None` (the default) means profiling is
+    /// off and `compute_into` takes no timestamps at all.
+    prof: Option<KernelProfile>,
 }
 
 impl AdjointEngine {
@@ -122,6 +126,7 @@ impl AdjointEngine {
             blist: vec![0.0; ib],
             yscratch_r: vec![0.0; iu],
             yscratch_i: vec![0.0; iu],
+            prof: None,
         }
     }
 
@@ -361,12 +366,17 @@ impl ForceEngine for AdjointEngine {
         out.reset(na, nn);
         let p = self.params;
         let idx = self.idx.clone();
+        // Profiling gate: when `prof` is None (the default) every
+        // StageTimer below starts disabled — no timestamps, no stores, so
+        // the computation is bitwise-identical to the uninstrumented code.
+        let active = self.prof.is_some();
 
         // ---- compute_U: per-pair Wigner matrices + accumulation ----
         // (utot zeroed by ensure_capacity)
         // self-contribution, in the layout the accumulation below uses:
         // strided atom-fastest only in the V3-without-V6 mode; j-fastest
         // otherwise (the V6 transpose produces the atom-fastest view later).
+        let t = StageTimer::start(active);
         let acc_atom_fastest = self.cfg.layout_atom_fastest && !self.cfg.transpose_utot;
         for atom in 0..na {
             for &jju in &idx.uself {
@@ -378,19 +388,25 @@ impl ForceEngine for AdjointEngine {
                 self.utot_r[s] = p.wself;
             }
         }
+        t.stop(&mut self.prof, Stage::UAccum);
         for atom in 0..na {
             for nbor in 0..nn {
                 let pair = atom * nn + nbor;
+                if !input.is_real(atom, nbor) {
+                    let t = StageTimer::start(active);
+                    self.ulist_r[pair * iu..(pair + 1) * iu].fill(0.0);
+                    self.ulist_i[pair * iu..(pair + 1) * iu].fill(0.0);
+                    t.stop(&mut self.prof, Stage::UAccum);
+                    continue;
+                }
+                let t = StageTimer::start(active);
+                let g = pair_geom(input, atom, nbor, &p, &self.elems);
+                t.stop(&mut self.prof, Stage::Geometry);
+                let t = StageTimer::start(active);
                 let (ur, ui) = (
                     &mut self.ulist_r[pair * iu..(pair + 1) * iu],
                     &mut self.ulist_i[pair * iu..(pair + 1) * iu],
                 );
-                if !input.is_real(atom, nbor) {
-                    ur.fill(0.0);
-                    ui.fill(0.0);
-                    continue;
-                }
-                let g = pair_geom(input, atom, nbor, &p, &self.elems);
                 compute_ulist_pair(&g, &idx, ur, ui);
                 // accumulate (strided when layout_atom_fastest && !transpose)
                 if self.cfg.layout_atom_fastest && !self.cfg.transpose_utot {
@@ -413,9 +429,12 @@ impl ForceEngine for AdjointEngine {
                         self.utot_i[base + jju] += g.sfac * self.ulist_i[pair * iu + jju];
                     }
                 }
+                t.stop(&mut self.prof, Stage::UAccum);
             }
         }
         // ---- transpose kernel (the paper's V6) ----
+        // (attributed to u_accum: it is the tail of Ulisttot production)
+        let t = StageTimer::start(active);
         if self.cfg.layout_atom_fastest && self.cfg.transpose_utot {
             for atom in 0..na {
                 for jju in 0..iu {
@@ -424,8 +443,10 @@ impl ForceEngine for AdjointEngine {
                 }
             }
         }
+        t.stop(&mut self.prof, Stage::UAccum);
 
         // ---- compute_Y (ylist zeroed by ensure_capacity) ----
+        let t = StageTimer::start(active);
         for atom in 0..na {
             let boff = input.elem_of(atom) * ib;
             if self.cfg.collapsed_y {
@@ -434,8 +455,11 @@ impl ForceEngine for AdjointEngine {
                 self.compute_ylist_nested(atom, na, boff);
             }
         }
+        t.stop(&mut self.prof, Stage::YList);
 
         // ---- energy (compute_Z/B per atom, reusing scratch) ----
+        // (attributed to y_list: like Ylist it is a contraction of Ulisttot)
+        let t = StageTimer::start(active);
         for atom in 0..na {
             for jju in 0..iu {
                 let (r, i) = if self.cfg.layout_atom_fastest && self.cfg.transpose_utot
@@ -458,6 +482,7 @@ impl ForceEngine for AdjointEngine {
             let boff = input.elem_of(atom) * ib;
             out.ei[atom] = energy_from_blist(&self.blist, &self.beta[boff..boff + ib]);
         }
+        t.stop(&mut self.prof, Stage::YList);
 
         // ---- compute_dU (stored) ----
         let pairs = self.pair_order(na, nn);
@@ -465,11 +490,16 @@ impl ForceEngine for AdjointEngine {
             let pair = atom * nn + nbor;
             let base = pair * iu * 3;
             if !input.is_real(atom, nbor) {
+                let t = StageTimer::start(active);
                 self.dulist_r[base..base + iu * 3].fill(0.0);
                 self.dulist_i[base..base + iu * 3].fill(0.0);
+                t.stop(&mut self.prof, Stage::DeDr);
                 continue;
             }
+            let t = StageTimer::start(active);
             let g = pair_geom(input, atom, nbor, &p, &self.elems);
+            t.stop(&mut self.prof, Stage::Geometry);
+            let t = StageTimer::start(active);
             // ulist for this pair is already stored (recursion input)
             let (ur, ui) = (
                 &self.ulist_r[pair * iu..(pair + 1) * iu],
@@ -480,9 +510,11 @@ impl ForceEngine for AdjointEngine {
                 &mut self.dulist_i[base..base + iu * 3],
             );
             compute_dulist_pair(&g, &idx, ur, ui, dur, dui);
+            t.stop(&mut self.prof, Stage::DeDr);
         }
 
         // ---- compute_dE ----
+        let t = StageTimer::start(active);
         for &(atom, nbor) in &pairs {
             let pair = atom * nn + nbor;
             if !input.is_real(atom, nbor) {
@@ -494,7 +526,25 @@ impl ForceEngine for AdjointEngine {
             out.dedr[o + 1] = d[1];
             out.dedr[o + 2] = d[2];
         }
+        t.stop(&mut self.prof, Stage::DeDr);
+        if let Some(prof) = self.prof.as_mut() {
+            prof.dispatches += 1;
+        }
         Ok(())
+    }
+
+    fn set_profiling(&mut self, on: bool) {
+        self.prof = on.then(KernelProfile::new);
+    }
+
+    fn kernel_profile(&self) -> Option<KernelProfile> {
+        self.prof.clone()
+    }
+
+    fn reset_kernel_profile(&mut self) {
+        if let Some(p) = self.prof.as_mut() {
+            p.clear();
+        }
     }
 
     fn footprint(&self, num_atoms: usize, num_nbor: usize) -> MemoryFootprint {

@@ -22,6 +22,7 @@ use super::kernels::*;
 use super::memory::{MemoryFootprint, C128, F64};
 use super::params::{ElementTable, SnapParams};
 use super::wigner::{compute_dulist_pair, compute_ulist_pair};
+use crate::util::metrics::{KernelProfile, Stage, StageTimer};
 use std::sync::Arc;
 
 /// How the Listing-1 pipeline is staged across atoms (Fig. 1 variants).
@@ -44,6 +45,9 @@ pub struct BaselineEngine {
     pub beta: Vec<f64>,
     pub elems: ElementTable,
     pub staging: Staging,
+    /// Kernel-stage profile; `Some` only while profiling is enabled
+    /// (zero-overhead contract: the disabled path is one `Option` check).
+    prof: Option<KernelProfile>,
     // scratch (monolithic mode reuses these across atoms)
     u_r: Vec<f64>,
     u_i: Vec<f64>,
@@ -91,6 +95,7 @@ impl BaselineEngine {
             beta,
             elems,
             staging,
+            prof: None,
             u_r: vec![0.0; iu],
             u_i: vec![0.0; iu],
             ut_r: vec![0.0; iu],
@@ -154,37 +159,54 @@ impl ForceEngine for BaselineEngine {
         // All staging modes compute identical numbers; staging changes only
         // which intermediates persist (modelled in footprint()).  The
         // arithmetic pipeline below is the Listing-1 order.
+        // Profiling hooks (`StageTimer`) are observational only: when
+        // `self.prof` is None each costs exactly one Option check — no
+        // clock reads, no atomics, and no change to the arithmetic order,
+        // so outputs are bitwise-identical either way.
+        let active = self.prof.is_some();
         for atom in 0..na {
             // compute_U (+ Ulisttot)
             let p = self.params;
             let boff = input.elem_of(atom) * ib;
+            let t = StageTimer::start(active);
             init_utot(&self.idx, &p, &mut self.ut_r, &mut self.ut_i);
+            t.stop(&mut self.prof, Stage::UAccum);
             for nbor in 0..nn {
                 if !input.is_real(atom, nbor) {
                     continue;
                 }
+                let t = StageTimer::start(active);
                 let g = pair_geom(input, atom, nbor, &p, &self.elems);
+                t.stop(&mut self.prof, Stage::Geometry);
+                let t = StageTimer::start(active);
                 compute_ulist_pair(&g, &self.idx, &mut self.u_r, &mut self.u_i);
                 accumulate_utot(
                     g.sfac, &self.u_r, &self.u_i, &mut self.ut_r, &mut self.ut_i,
                 );
+                t.stop(&mut self.prof, Stage::UAccum);
             }
-            // compute_Z: materialized Zlist (the O(J^5) storage)
+            // compute_Z: materialized Zlist (the O(J^5) storage),
+            // compute_B -> energy: the baseline's analogue of the adjoint
+            // engines' Y-list stage
+            let t = StageTimer::start(active);
             compute_zlist(
                 &self.idx, &self.ut_r, &self.ut_i, &mut self.z_r, &mut self.z_i,
             );
-            // compute_B -> energy
             compute_blist(
                 &self.idx, &self.ut_r, &self.ut_i, &self.z_r, &self.z_i,
                 &mut self.blist,
             );
             out.ei[atom] = energy_from_blist(&self.blist, &self.beta[boff..boff + ib]);
+            t.stop(&mut self.prof, Stage::YList);
             // per neighbor: compute_dU -> compute_dB -> update_forces
             for nbor in 0..nn {
                 if !input.is_real(atom, nbor) {
                     continue;
                 }
+                let t = StageTimer::start(active);
                 let g = pair_geom(input, atom, nbor, &p, &self.elems);
+                t.stop(&mut self.prof, Stage::Geometry);
+                let t = StageTimer::start(active);
                 compute_ulist_pair(&g, &self.idx, &mut self.u_r, &mut self.u_i);
                 compute_dulist_pair(
                     &g, &self.idx, &self.u_r, &self.u_i, &mut self.du_r,
@@ -199,9 +221,27 @@ impl ForceEngine for BaselineEngine {
                     }
                     out.dedr[o + k] = s;
                 }
+                t.stop(&mut self.prof, Stage::DeDr);
             }
         }
+        if let Some(p) = self.prof.as_mut() {
+            p.dispatches += 1;
+        }
         Ok(())
+    }
+
+    fn set_profiling(&mut self, on: bool) {
+        self.prof = on.then(KernelProfile::new);
+    }
+
+    fn kernel_profile(&self) -> Option<KernelProfile> {
+        self.prof.clone()
+    }
+
+    fn reset_kernel_profile(&mut self) {
+        if let Some(p) = self.prof.as_mut() {
+            p.clear();
+        }
     }
 
     fn footprint(&self, num_atoms: usize, num_nbor: usize) -> MemoryFootprint {

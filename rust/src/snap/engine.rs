@@ -289,6 +289,26 @@ pub trait ForceEngine: Send {
     /// Analytic device-memory footprint for a given problem size (used by
     /// the Fig-1 memory table and the OOM gate).
     fn footprint(&self, num_atoms: usize, num_nbor: usize) -> MemoryFootprint;
+
+    /// Enable or disable kernel-stage profiling
+    /// ([`KernelProfile`](crate::util::metrics::KernelProfile)).
+    ///
+    /// Contract: profiling is observational only — outputs must be
+    /// bitwise-identical with it on or off, and the disabled path must add
+    /// no atomics, clock reads, or allocation (tested by
+    /// `tests/observability.rs`).  The default implementation ignores the
+    /// request, so engines without instrumentation (the PJRT wrapper,
+    /// test doubles) simply report no profile.
+    fn set_profiling(&mut self, _on: bool) {}
+
+    /// Snapshot of accumulated per-stage time since profiling was enabled
+    /// (or last reset); `None` when profiling is off or unsupported.
+    fn kernel_profile(&self) -> Option<crate::util::metrics::KernelProfile> {
+        None
+    }
+
+    /// Zero the accumulated profile, keeping profiling enabled.
+    fn reset_kernel_profile(&mut self) {}
 }
 
 #[cfg(test)]

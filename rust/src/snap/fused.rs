@@ -31,6 +31,7 @@ use super::wigner::{
     compute_fused_dedr_batch, compute_fused_dedr_pair, compute_ulist_batch, compute_ulist_pair,
     FusedDuScratch, FusedDuScratchX, LANES,
 };
+use crate::util::metrics::{KernelProfile, Stage, StageTimer};
 use crate::util::zero_resize;
 use std::sync::Arc;
 
@@ -78,6 +79,9 @@ pub struct FusedEngine {
     ux_r: Vec<f64>,
     ux_i: Vec<f64>,
     dux: FusedDuScratchX,
+    /// Per-stage kernel profile; `None` (the default) means profiling is
+    /// off and `compute_into` takes no timestamps at all.
+    prof: Option<KernelProfile>,
 }
 
 impl FusedEngine {
@@ -126,6 +130,7 @@ impl FusedEngine {
             ux_r: vec![0.0; lanes_cap],
             ux_i: vec![0.0; lanes_cap],
             dux: FusedDuScratchX::new(if cfg.lane_parallel { params.twojmax } else { 0 }),
+            prof: None,
         }
     }
 
@@ -168,6 +173,7 @@ impl FusedEngine {
         let ih = self.idx.idxu_half_max();
         let p = self.params;
         let idx = self.idx.clone();
+        let active = self.prof.is_some();
         let nblk = self.padded_atoms(na) / AOSOA_WIDTH;
         for blk in 0..nblk {
             let base = blk * AOSOA_WIDTH;
@@ -175,15 +181,20 @@ impl FusedEngine {
             let ublock = blk * iu * LANES..(blk + 1) * iu * LANES;
             let yblock = blk * ih * LANES..(blk + 1) * ih * LANES;
             // ---- compute_U: batched accumulate into the block stream ----
+            let t = StageTimer::start(active);
             for &jju in &idx.uself {
                 let o = ublock.start + jju as usize * LANES;
                 self.utot_r[o..o + live].fill(p.wself);
             }
+            t.stop(&mut self.prof, Stage::UAccum);
             for nbor in 0..nn {
+                let t = StageTimer::start(active);
                 let g = pair_geom_block(input, base, nbor, &p, &self.elems);
+                t.stop(&mut self.prof, Stage::Geometry);
                 if !g.any_active() {
                     continue;
                 }
+                let t = StageTimer::start(active);
                 compute_ulist_batch(&g, &idx, &mut self.ux_r, &mut self.ux_i);
                 accumulate_utot_batch(
                     &g.sfac,
@@ -192,8 +203,10 @@ impl FusedEngine {
                     &mut self.utot_r[ublock.clone()],
                     &mut self.utot_i[ublock.clone()],
                 );
+                t.stop(&mut self.prof, Stage::UAccum);
             }
             // ---- compute_Y (half-index) for the whole block ----
+            let t = StageTimer::start(active);
             let mut boff = [0usize; LANES];
             for (l, b) in boff.iter_mut().enumerate().take(live) {
                 *b = input.elem_of(base + l) * idx.idxb_max;
@@ -207,7 +220,9 @@ impl FusedEngine {
                 &mut self.yhalf_r[yblock.clone()],
                 &mut self.yhalf_i[yblock.clone()],
             );
+            t.stop(&mut self.prof, Stage::YList);
             // ---- energy (Euler identity), lane-innermost ----
+            let t = StageTimer::start(active);
             {
                 let ut_r = &self.utot_r[ublock.clone()];
                 let ut_i = &self.utot_i[ublock.clone()];
@@ -229,12 +244,16 @@ impl FusedEngine {
                     out.ei[base + l] = 2.0 / 3.0 * el;
                 }
             }
+            t.stop(&mut self.prof, Stage::YList);
             // ---- compute_fused_dE, one batched call per neighbor slot ----
             for nbor in 0..nn {
+                let t = StageTimer::start(active);
                 let g = pair_geom_block(input, base, nbor, &p, &self.elems);
+                t.stop(&mut self.prof, Stage::Geometry);
                 if !g.any_active() {
                     continue;
                 }
+                let t = StageTimer::start(active);
                 compute_ulist_batch(&g, &idx, &mut self.ux_r, &mut self.ux_i);
                 let mut d = [[0.0f64; 3]; LANES];
                 compute_fused_dedr_batch(
@@ -253,6 +272,7 @@ impl FusedEngine {
                         out.dedr[o..o + 3].copy_from_slice(dl);
                     }
                 }
+                t.stop(&mut self.prof, Stage::DeDr);
             }
         }
         Ok(())
@@ -280,22 +300,35 @@ impl ForceEngine for FusedEngine {
         let p = self.params;
         let idx = self.idx.clone();
         out.reset(na, nn);
+        // Profiling gate: when `prof` is None (the default) every
+        // StageTimer below starts disabled — no timestamps, no stores, so
+        // the computation is bitwise-identical to the uninstrumented code.
+        let active = self.prof.is_some();
 
         if self.cfg.lane_parallel {
-            return self.compute_lane_parallel(input, out);
+            self.compute_lane_parallel(input, out)?;
+            if let Some(prof) = self.prof.as_mut() {
+                prof.dispatches += 1;
+            }
+            return Ok(());
         }
 
         // ---- compute_U (fused accumulate; recursion scratch reused) ----
         for atom in 0..na {
+            let t = StageTimer::start(active);
             for &jju in &idx.uself {
                 let s = self.slot(atom, jju as usize, iu, nap);
                 self.utot_r[s] = p.wself;
             }
+            t.stop(&mut self.prof, Stage::UAccum);
             for nbor in 0..nn {
                 if !input.is_real(atom, nbor) {
                     continue;
                 }
+                let t = StageTimer::start(active);
                 let g = pair_geom(input, atom, nbor, &p, &self.elems);
+                t.stop(&mut self.prof, Stage::Geometry);
+                let t = StageTimer::start(active);
                 compute_ulist_pair(&g, &idx, &mut self.u_r, &mut self.u_i);
                 if self.cfg.aosoa {
                     // block-base + stride form: one slot() per pair, not
@@ -312,10 +345,12 @@ impl ForceEngine for FusedEngine {
                         self.utot_i[base + jju] += g.sfac * self.u_i[jju];
                     }
                 }
+                t.stop(&mut self.prof, Stage::UAccum);
             }
         }
 
         // ---- compute_Y (half-index) + energy ----
+        let t = StageTimer::start(active);
         for atom in 0..na {
             // gather utot for this atom (contiguous in the non-AoSoA case)
             for jju in 0..iu {
@@ -376,6 +411,7 @@ impl ForceEngine for FusedEngine {
             }
             out.ei[atom] = 2.0 / 3.0 * e;
         }
+        t.stop(&mut self.prof, Stage::YList);
 
         // ---- compute_fused_dE: recompute u/du per pair, contract, emit ----
         for atom in 0..na {
@@ -383,7 +419,10 @@ impl ForceEngine for FusedEngine {
                 if !input.is_real(atom, nbor) {
                     continue;
                 }
+                let t = StageTimer::start(active);
                 let g = pair_geom(input, atom, nbor, &p, &self.elems);
+                t.stop(&mut self.prof, Stage::Geometry);
+                let t = StageTimer::start(active);
                 compute_ulist_pair(&g, &idx, &mut self.u_r, &mut self.u_i);
                 // level-streaming fused kernel: dU never exists outside a
                 // ~20 KB L1-resident double buffer (section VI-A)
@@ -406,9 +445,27 @@ impl ForceEngine for FusedEngine {
                 );
                 let o = (atom * nn + nbor) * 3;
                 out.dedr[o..o + 3].copy_from_slice(&d);
+                t.stop(&mut self.prof, Stage::DeDr);
             }
         }
+        if let Some(prof) = self.prof.as_mut() {
+            prof.dispatches += 1;
+        }
         Ok(())
+    }
+
+    fn set_profiling(&mut self, on: bool) {
+        self.prof = on.then(KernelProfile::new);
+    }
+
+    fn kernel_profile(&self) -> Option<KernelProfile> {
+        self.prof.clone()
+    }
+
+    fn reset_kernel_profile(&mut self) {
+        if let Some(p) = self.prof.as_mut() {
+            p.clear();
+        }
     }
 
     fn footprint(&self, num_atoms: usize, num_nbor: usize) -> MemoryFootprint {

@@ -16,6 +16,7 @@
 
 use super::engine::{EngineError, EngineFactory, ForceEngine, TileInput, TileOutput};
 use super::memory::MemoryFootprint;
+use crate::util::metrics::{KernelProfile, Stage, StageTimer};
 use crate::util::parallel::parallel_map;
 use std::sync::{Mutex, PoisonError};
 
@@ -55,6 +56,10 @@ pub struct ShardedEngine {
     scratch: Vec<Mutex<TileOutput>>,
     min_atoms_per_shard: usize,
     name: String,
+    /// Merged per-stage profile across all shards (plus the wrapper's own
+    /// `Stitch` time).  `None` (the default) means profiling is off — the
+    /// inner engines are switched together via `set_profiling`.
+    prof: Option<KernelProfile>,
 }
 
 impl ShardedEngine {
@@ -74,6 +79,7 @@ impl ShardedEngine {
             scratch,
             min_atoms_per_shard: 1,
             name: format!("sharded{shards}x-{inner}"),
+            prof: None,
         })
     }
 
@@ -137,7 +143,17 @@ impl ForceEngine for ShardedEngine {
         let ranges = self.plan(na);
         if ranges.len() <= 1 {
             let engine = self.engines[0].get_mut().unwrap_or_else(PoisonError::into_inner);
-            return engine.compute_into(input, out);
+            engine.compute_into(input, out)?;
+            if let Some(prof) = self.prof.as_mut() {
+                if let Some(inner) = engine.kernel_profile() {
+                    for s in Stage::ALL {
+                        prof.add_ns(s, inner.nanos(s));
+                    }
+                }
+                engine.reset_kernel_profile();
+                prof.dispatches += 1;
+            }
+            return Ok(());
         }
         let engines = &self.engines;
         let scratch = &self.scratch;
@@ -165,6 +181,7 @@ impl ForceEngine for ShardedEngine {
         // stitch into slices of the caller's buffer: shards are contiguous
         // atom ranges in plan order, so the concatenation *is* the serial
         // layout — and `clear` + `extend_from_slice` reuses its capacity
+        let t = StageTimer::start(self.prof.is_some());
         out.ei.clear();
         out.dedr.clear();
         for slot in self.scratch.iter().take(ranges.len()) {
@@ -172,9 +189,43 @@ impl ForceEngine for ShardedEngine {
             out.ei.extend_from_slice(&part.ei);
             out.dedr.extend_from_slice(&part.dedr);
         }
+        t.stop(&mut self.prof, Stage::Stitch);
         debug_assert_eq!(out.ei.len(), na);
         debug_assert_eq!(out.dedr.len(), na * nn * 3);
+        // drain each shard's per-stage time into the merged wrapper view;
+        // `dispatches` counts whole-tile dispatches, not shard sub-tiles
+        if self.prof.is_some() {
+            for slot in self.engines.iter_mut().take(ranges.len()) {
+                let engine = slot.get_mut().unwrap_or_else(PoisonError::into_inner);
+                if let Some(inner) = engine.kernel_profile() {
+                    let prof = self.prof.as_mut().unwrap();
+                    for s in Stage::ALL {
+                        prof.add_ns(s, inner.nanos(s));
+                    }
+                }
+                engine.reset_kernel_profile();
+            }
+            self.prof.as_mut().unwrap().dispatches += 1;
+        }
         Ok(())
+    }
+
+    fn set_profiling(&mut self, on: bool) {
+        self.prof = on.then(KernelProfile::new);
+        for slot in &mut self.engines {
+            let engine = slot.get_mut().unwrap_or_else(PoisonError::into_inner);
+            engine.set_profiling(on);
+        }
+    }
+
+    fn kernel_profile(&self) -> Option<KernelProfile> {
+        self.prof.clone()
+    }
+
+    fn reset_kernel_profile(&mut self) {
+        if let Some(p) = self.prof.as_mut() {
+            p.clear();
+        }
     }
 
     fn footprint(&self, num_atoms: usize, num_nbor: usize) -> MemoryFootprint {

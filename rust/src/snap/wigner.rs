@@ -17,6 +17,11 @@
 //! scalar result; inactive lanes (AoSoA padding, masked neighbors) carry
 //! inert geometry with `sfac = dsfac = 0` so their contributions are
 //! exact ±0.0.
+//!
+//! These kernels carry no profiling hooks of their own: per-stage wall-time
+//! attribution ([`crate::util::metrics::KernelProfile`]) lives in the
+//! *calling* engines, which bracket whole kernel invocations — keeping the
+//! recursion hot loops free of even the disabled-profiler branch.
 
 use super::indices::SnapIndex;
 use super::params::SnapParams;

@@ -16,6 +16,7 @@ use crate::snap::memory::MemoryFootprint;
 use crate::snap::sharded::DEFAULT_MIN_ATOMS_PER_SHARD;
 use crate::snap::variants::Variant;
 use crate::util::json::Json;
+use crate::util::metrics::{KernelProfile, Stage, NUM_STAGES};
 use anyhow::{Context, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -130,17 +131,59 @@ pub struct PlanEntry {
     pub min_atoms_per_shard: usize,
 }
 
+/// Informational per-stage kernel medians (nanoseconds per dispatch of the
+/// bucket's representative tile) recorded by the calibration search for
+/// the winning configuration.  Purely metadata: plan routing never reads
+/// it, and plans without it (older files, `default_plan`) parse fine.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BucketKernels {
+    pub stage_ns: [u64; NUM_STAGES],
+}
+
+impl BucketKernels {
+    /// Capture from a drained engine profile (median-of-reps profile
+    /// normalized per dispatch by the caller).
+    pub fn from_profile(p: &KernelProfile) -> BucketKernels {
+        let mut stage_ns = [0u64; NUM_STAGES];
+        for s in Stage::ALL {
+            stage_ns[s.index()] = p.nanos(s);
+        }
+        BucketKernels { stage_ns }
+    }
+
+    fn to_json(self) -> String {
+        let parts: Vec<String> = Stage::ALL
+            .iter()
+            .map(|s| format!("\"{}_ns\": {}", s.label(), self.stage_ns[s.index()]))
+            .collect();
+        format!("{{{}}}", parts.join(", "))
+    }
+
+    fn from_json(j: &Json) -> BucketKernels {
+        let mut stage_ns = [0u64; NUM_STAGES];
+        for s in Stage::ALL {
+            stage_ns[s.index()] = j
+                .get(&format!("{}_ns", s.label()))
+                .and_then(Json::as_usize)
+                .unwrap_or(0) as u64;
+        }
+        BucketKernels { stage_ns }
+    }
+}
+
 /// A complete tuned plan: one [`PlanEntry`] per shape bucket plus the
-/// [`PlanKey`] it was measured under.
+/// [`PlanKey`] it was measured under, and optional per-bucket
+/// [`BucketKernels`] metadata from the calibration run.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct TunedPlan {
     pub key: PlanKey,
     entries: [PlanEntry; 3],
+    kernels: [Option<BucketKernels>; 3],
 }
 
 impl TunedPlan {
     pub fn new(key: PlanKey, entries: [PlanEntry; 3]) -> TunedPlan {
-        TunedPlan { key, entries }
+        TunedPlan { key, entries, kernels: [None; 3] }
     }
 
     /// The untuned fallback served on every cache miss: the fused engine
@@ -162,6 +205,7 @@ impl TunedPlan {
                 )),
                 entry(key.threads),
             ],
+            kernels: [None; 3],
         }
     }
 
@@ -173,6 +217,15 @@ impl TunedPlan {
         self.entries[bucket.index()] = entry;
     }
 
+    /// Kernel-stage medians recorded for a bucket's winner, if any.
+    pub fn kernels(&self, bucket: ShapeBucket) -> Option<BucketKernels> {
+        self.kernels[bucket.index()]
+    }
+
+    pub fn set_kernels(&mut self, bucket: ShapeBucket, k: BucketKernels) {
+        self.kernels[bucket.index()] = Some(k);
+    }
+
     /// Serialize as the plan file format (hand-rolled JSON, the
     /// `util::json` idiom — the build is offline).
     pub fn to_json(&self) -> String {
@@ -180,13 +233,18 @@ impl TunedPlan {
             .iter()
             .map(|b| {
                 let e = self.entry(*b);
+                let kernels = match self.kernels(*b) {
+                    Some(k) => format!(", \"kernels\": {}", k.to_json()),
+                    None => String::new(),
+                };
                 format!(
                     "{{\"bucket\": \"{}\", \"variant\": \"{}\", \"shards\": {}, \
-                     \"min_atoms_per_shard\": {}}}",
+                     \"min_atoms_per_shard\": {}{}}}",
                     b.label(),
                     e.variant.label(),
                     e.shards,
-                    e.min_atoms_per_shard
+                    e.min_atoms_per_shard,
+                    kernels
                 )
             })
             .collect();
@@ -218,6 +276,7 @@ impl TunedPlan {
         let nelems = j.get("nelems").and_then(Json::as_usize).unwrap_or(1).max(1);
         let buckets = j.get("buckets").and_then(Json::as_arr).context("plan missing `buckets`")?;
         let mut entries: [Option<PlanEntry>; 3] = [None; 3];
+        let mut kernels: [Option<BucketKernels>; 3] = [None; 3];
         for b in buckets {
             let label = b.get("bucket").and_then(Json::as_str).context("bucket missing name")?;
             let bucket = ShapeBucket::from_label(label)
@@ -235,6 +294,7 @@ impl TunedPlan {
             anyhow::ensure!(shards >= 1 && min_atoms >= 1, "bucket `{label}`: zero shards/floor");
             entries[bucket.index()] =
                 Some(PlanEntry { variant, shards, min_atoms_per_shard: min_atoms });
+            kernels[bucket.index()] = b.get("kernels").map(BucketKernels::from_json);
         }
         let mut out = [PlanEntry {
             variant: Variant::Fused,
@@ -245,7 +305,7 @@ impl TunedPlan {
             out[bucket.index()] = entries[bucket.index()]
                 .with_context(|| format!("plan missing bucket `{}`", bucket.label()))?;
         }
-        Ok(TunedPlan { key: PlanKey { twojmax, threads, nelems }, entries: out })
+        Ok(TunedPlan { key: PlanKey { twojmax, threads, nelems }, entries: out, kernels })
     }
 }
 
@@ -311,6 +371,32 @@ impl ForceEngine for PlannedEngine {
         self.engines[bucket.index()].compute_into(input, out)
     }
 
+    fn set_profiling(&mut self, on: bool) {
+        for e in &mut self.engines {
+            e.set_profiling(on);
+        }
+    }
+
+    /// Merged view over the bucket engines (each planned dispatch lands on
+    /// exactly one bucket engine, so summing dispatches is exact).
+    fn kernel_profile(&self) -> Option<KernelProfile> {
+        let mut merged = KernelProfile::new();
+        let mut any = false;
+        for e in &self.engines {
+            if let Some(p) = e.kernel_profile() {
+                merged.merge(&p);
+                any = true;
+            }
+        }
+        any.then_some(merged)
+    }
+
+    fn reset_kernel_profile(&mut self) {
+        for e in &mut self.engines {
+            e.reset_kernel_profile();
+        }
+    }
+
     fn footprint(&self, num_atoms: usize, num_nbor: usize) -> MemoryFootprint {
         self.engines[ShapeBucket::of(num_atoms).index()].footprint(num_atoms, num_nbor)
     }
@@ -351,6 +437,32 @@ mod tests {
         let text = plan.to_json();
         let back = TunedPlan::from_json_text(&text).unwrap();
         assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn kernel_medians_round_trip_and_stay_optional() {
+        // a plan with per-bucket kernel medians survives the wire intact
+        let mut plan = sample_plan();
+        plan.set_kernels(
+            ShapeBucket::Medium,
+            BucketKernels { stage_ns: [10, 2000, 3000, 4000, 50] },
+        );
+        let text = plan.to_json();
+        assert!(text.contains("\"kernels\""), "{text}");
+        assert!(text.contains("\"u_accum_ns\": 2000"), "{text}");
+        let back = TunedPlan::from_json_text(&text).unwrap();
+        assert_eq!(back, plan);
+        assert_eq!(
+            back.kernels(ShapeBucket::Medium).unwrap().stage_ns[1],
+            2000
+        );
+        // buckets without medians stay None — and a kernels-free document
+        // (every pre-observability plan file) parses to all-None
+        assert!(back.kernels(ShapeBucket::Small).is_none());
+        let plain = TunedPlan::from_json_text(&sample_plan().to_json()).unwrap();
+        for b in ShapeBucket::ALL {
+            assert!(plain.kernels(b).is_none());
+        }
     }
 
     #[test]

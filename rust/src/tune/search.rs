@@ -17,7 +17,7 @@
 //!   its default-plan entry.  The search degrades gracefully, it never
 //!   blocks a deployment.
 
-use super::plan::{PlanEntry, PlanKey, ShapeBucket, TunedPlan};
+use super::plan::{BucketKernels, PlanEntry, PlanKey, ShapeBucket, TunedPlan};
 use crate::bench::{BenchStats, Workload};
 use crate::config::EngineSpec;
 use crate::snap::coeff::SnapCoeffs;
@@ -25,6 +25,7 @@ use crate::snap::engine::{TileElems, TileInput, TileOutput};
 use crate::snap::sharded::{build_sharded, DEFAULT_MIN_ATOMS_PER_SHARD};
 use crate::snap::variants::Variant;
 use crate::snap::{SnapIndex, SnapParams};
+use crate::util::metrics::{KernelProfile, Stage};
 use crate::util::Stopwatch;
 use std::sync::Arc;
 
@@ -273,15 +274,50 @@ pub fn calibrate(opts: &SearchOptions) -> anyhow::Result<TuneOutcome> {
         }
         if let Some((winner, _)) = incumbent {
             frontier[winner].chosen = true;
-            let p = &frontier[winner];
+            let (variant, shards, min_atoms) = {
+                let p = &frontier[winner];
+                (p.variant, p.shards, p.min_atoms_per_shard)
+            };
             plan.set_entry(
                 bucket,
-                PlanEntry {
-                    variant: p.variant,
-                    shards: p.shards,
-                    min_atoms_per_shard: p.min_atoms_per_shard,
-                },
+                PlanEntry { variant, shards, min_atoms_per_shard: min_atoms },
             );
+            // re-run the winner a few reps with the kernel profiler on and
+            // record per-stage medians into the plan — informational
+            // metadata (the Fig.-5-style breakdown of what the deployment
+            // actually chose), never read by routing.  The timed
+            // candidates above always run unprofiled, so instrumentation
+            // can never perturb the selection itself.
+            if !over_budget(&sw) {
+                let factory = EngineSpec::new(opts.twojmax)
+                    .variant(variant)
+                    .beta(coeffs.beta.clone())
+                    .elements(coeffs.elements.clone())
+                    .shared_index(idx.clone())
+                    .build_factory()?
+                    .factory;
+                let mut engine = build_sharded(&factory, shards, min_atoms)?;
+                engine.set_profiling(true);
+                let mut out = TileOutput::default();
+                let mut per_rep: Vec<KernelProfile> = Vec::new();
+                for _ in 0..opts.reps.max(1) {
+                    engine.compute_into(&tile, &mut out)?;
+                    std::hint::black_box(&out);
+                    if let Some(prof) = engine.kernel_profile() {
+                        per_rep.push(prof);
+                    }
+                    engine.reset_kernel_profile();
+                }
+                if !per_rep.is_empty() {
+                    let mut k = BucketKernels::default();
+                    for s in Stage::ALL {
+                        let mut v: Vec<u64> = per_rep.iter().map(|p| p.nanos(s)).collect();
+                        v.sort_unstable();
+                        k.stage_ns[s.index()] = v[v.len() / 2];
+                    }
+                    plan.set_kernels(bucket, k);
+                }
+            }
         }
         // no winner (budget expired first): the bucket keeps its
         // default-plan entry
@@ -342,6 +378,10 @@ mod tests {
                     assert!(winner.stats.p50_secs <= p.stats.p50_secs);
                 }
             }
+            // an uncapped run profiles each winner: per-stage medians ride
+            // the plan as metadata
+            let k = out.plan.kernels(bucket).expect("winner profiled");
+            assert!(k.stage_ns.iter().sum::<u64>() > 0, "bucket {bucket:?} all-zero");
         }
         // small bucket (2 atoms) cannot fan out past the floor: every
         // explored point there is serial

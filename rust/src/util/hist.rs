@@ -57,8 +57,17 @@ impl LatencyHistogram {
     }
 
     /// Approximate quantile (`q` in `[0, 1]`) in nanoseconds, from bucket
-    /// counts.  Returns the geometric midpoint of the bucket containing the
-    /// `q`-th sample; 0 when empty.
+    /// counts; 0 when empty.
+    ///
+    /// The bucket holding the `q`-th sample is found by rank, then the
+    /// estimate interpolates linearly *within* that bucket by in-bucket
+    /// rank (`frac = (rank_in_bucket - 0.5) / bucket_count`, the midpoint
+    /// rule).  The old readout returned one fixed midpoint per bucket,
+    /// which collapsed every quantile inside a bucket to the same value —
+    /// a bias of up to 2x documented by
+    /// `tests::interpolation_spreads_quantiles_within_a_bucket`.  The
+    /// result is additionally clamped to the observed maximum, so a p99
+    /// can never exceed a sample actually seen.
     pub fn quantile_ns(&self, q: f64) -> u64 {
         let total = self.count();
         if total == 0 {
@@ -67,11 +76,17 @@ impl LatencyHistogram {
         let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
         let mut seen = 0u64;
         for (i, b) in self.buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
+            let in_bucket = b.load(Ordering::Relaxed);
+            seen += in_bucket;
             if seen >= rank {
-                // geometric midpoint of [2^i, 2^(i+1))
-                let lo = 1u64 << i;
-                return lo + lo / 2;
+                // bucket 0 holds [0, 2); bucket i holds [2^i, 2^(i+1))
+                let lo = if i == 0 { 0u64 } else { 1u64 << i };
+                let hi = 1u64 << (i + 1);
+                let rank_in = rank - (seen - in_bucket); // 1..=in_bucket
+                let frac = (rank_in as f64 - 0.5) / in_bucket as f64;
+                let est = (lo as f64 + frac * (hi - lo) as f64) as u64;
+                let max = self.max_ns.load(Ordering::Relaxed);
+                return if max > 0 { est.min(max) } else { est };
             }
         }
         self.max_ns.load(Ordering::Relaxed)
@@ -80,6 +95,12 @@ impl LatencyHistogram {
     /// Maximum recorded sample in nanoseconds.
     pub fn max_ns(&self) -> u64 {
         self.max_ns.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all recorded samples in nanoseconds (for Prometheus
+    /// summary `_sum` series).
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns.load(Ordering::Relaxed)
     }
 
     /// Mean in nanoseconds (0 when empty).
@@ -153,6 +174,54 @@ mod tests {
         let p50 = h.quantile_ns(0.50);
         let p99 = h.quantile_ns(0.99);
         assert!(p10 <= p50 && p50 <= p99, "{p10} {p50} {p99}");
+    }
+
+    #[test]
+    fn interpolation_spreads_quantiles_within_a_bucket() {
+        // The pre-fix readout reported the fixed geometric midpoint of the
+        // bucket containing the rank — so every quantile of a
+        // single-bucket population collapsed to one value (for samples at
+        // 1100 ns, bucket [1024, 2048) => always 1536, a +40% bias that no
+        // q could escape).  With rank interpolation the quantiles spread
+        // monotonically across the bucket and never exceed the observed
+        // max.
+        let h = LatencyHistogram::new();
+        // 100 samples spread uniformly across bucket [1024, 2048)
+        for i in 0..100u64 {
+            h.record(Duration::from_nanos(1_024 + i * 10));
+        }
+        let p10 = h.quantile_ns(0.10);
+        let p50 = h.quantile_ns(0.50);
+        let p90 = h.quantile_ns(0.90);
+        assert!(p10 < p50 && p50 < p90, "quantiles must spread: {p10} {p50} {p90}");
+        // each interpolated estimate lands near its true value (within the
+        // bucket's granularity), instead of the old fixed 1536 for all q
+        assert!((1050..1250).contains(&p10), "p10={p10} (true ~1114)");
+        assert!((1400..1650).contains(&p50), "p50={p50} (true ~1514)");
+        assert!((1800..=2014).contains(&p90), "p90={p90} (true ~1914)");
+        assert!(h.quantile_ns(1.0) <= h.max_ns());
+        // an all-identical population collapses to the exact sample value
+        // (the max clamp), not to a midpoint 40% above it
+        let exact = LatencyHistogram::new();
+        for _ in 0..10 {
+            exact.record(Duration::from_nanos(1_100));
+        }
+        assert_eq!(exact.quantile_ns(0.99), 1_100);
+    }
+
+    #[test]
+    fn interpolated_quantiles_stay_monotone_across_buckets() {
+        let h = LatencyHistogram::new();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_nanos(i * 997));
+        }
+        let mut prev = 0;
+        for q in [0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0] {
+            let v = h.quantile_ns(q);
+            assert!(v >= prev, "q={q}: {v} < {prev}");
+            prev = v;
+        }
+        assert!(h.quantile_ns(1.0) <= h.max_ns());
     }
 
     #[test]

@@ -1,0 +1,571 @@
+//! The unified observability substrate: kernel-stage profiles, the
+//! pipeline trace ring, and coarse stage-time accounting.
+//!
+//! The paper's "rapid exploration" method rests on per-kernel timing
+//! breakdowns — TestSNAP's `compute_ui` / `compute_yi` / `compute_duidrj` /
+//! `compute_deidrj` splits drove every restructuring decision.  This module
+//! is the repo's analogue: a [`KernelProfile`] attributes engine wall time
+//! to the five [`Stage`]s of a SNAP force evaluation, a [`TraceRing`]
+//! records per-request pipeline spans exportable as Chrome `trace_event`
+//! JSON, and [`StageTimes`] (moved here from `util::timer`) keeps the
+//! coarse pack/execute/scatter accounting the MD driver prints.
+//!
+//! ## The zero-overhead contract
+//!
+//! Profiling is *explicitly enabled* per engine
+//! ([`ForceEngine::set_profiling`](crate::snap::engine::ForceEngine::set_profiling)).
+//! When disabled — the default — the hot path pays exactly one branch on an
+//! `Option` per instrumented section: no `Instant::now()`, no atomics, no
+//! allocation, and no floating-point reordering, so outputs are
+//! bitwise-identical with profiling on or off (a tested invariant).  When
+//! enabled, each section brackets itself with two `Instant::now()` calls;
+//! the engines instrument at per-section granularity (whole kernel loops,
+//! not individual flops) so the relative overhead stays small.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// The paper's kernel stages, as they appear across every engine variant.
+///
+/// | stage      | TestSNAP analogue        | what it covers here                      |
+/// |------------|--------------------------|------------------------------------------|
+/// | `Geometry` | neighbor preprocessing   | `PairGeom` construction (r, cutoffs, Cayley–Klein params) |
+/// | `UAccum`   | `compute_ui`             | Wigner recursion + `Utot` accumulation (incl. the V6 transpose) |
+/// | `YList`    | `compute_yi`             | adjoint Y-list / Z-list / B-list + energy |
+/// | `DeDr`     | `compute_duidrj`+`deidrj`| dU recursion and the dE/dr contraction   |
+/// | `Stitch`   | —                        | shard fan-out stitch (sharded engine only) |
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Stage {
+    Geometry = 0,
+    UAccum = 1,
+    YList = 2,
+    DeDr = 3,
+    Stitch = 4,
+}
+
+/// Number of kernel stages (the length of every per-stage array).
+pub const NUM_STAGES: usize = 5;
+
+impl Stage {
+    pub const ALL: [Stage; NUM_STAGES] =
+        [Stage::Geometry, Stage::UAccum, Stage::YList, Stage::DeDr, Stage::Stitch];
+
+    /// Stable snake_case label used in JSON, Prometheus, and trace output.
+    pub fn label(self) -> &'static str {
+        match self {
+            Stage::Geometry => "geometry",
+            Stage::UAccum => "u_accum",
+            Stage::YList => "y_list",
+            Stage::DeDr => "dedr",
+            Stage::Stitch => "stitch",
+        }
+    }
+
+    #[inline]
+    pub fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// Accumulated per-stage wall time for one engine (or one merged set of
+/// engines), in nanoseconds.  Plain data — cloning snapshots it, merging
+/// sums it, no atomics anywhere (the engine owns its profile exclusively).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct KernelProfile {
+    nanos: [u64; NUM_STAGES],
+    /// Completed `compute_into` dispatches this profile covers.
+    pub dispatches: u64,
+}
+
+impl KernelProfile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add one timed section to a stage.
+    #[inline]
+    pub fn add(&mut self, stage: Stage, d: Duration) {
+        self.nanos[stage.index()] += d.as_nanos().min(u64::MAX as u128) as u64;
+    }
+
+    pub fn add_ns(&mut self, stage: Stage, ns: u64) {
+        self.nanos[stage.index()] += ns;
+    }
+
+    /// Fold another profile in (shard merge, registry aggregation).
+    pub fn merge(&mut self, other: &KernelProfile) {
+        for i in 0..NUM_STAGES {
+            self.nanos[i] += other.nanos[i];
+        }
+        self.dispatches += other.dispatches;
+    }
+
+    pub fn nanos(&self, stage: Stage) -> u64 {
+        self.nanos[stage.index()]
+    }
+
+    pub fn total_nanos(&self) -> u64 {
+        self.nanos.iter().sum()
+    }
+
+    /// Fraction of total profiled time per stage (sums to 1.0 by
+    /// construction when any time was recorded; all zero otherwise).
+    /// This is the repo's analogue of the paper's Fig. 5 breakdown.
+    pub fn fractions(&self) -> [f64; NUM_STAGES] {
+        let total = self.total_nanos();
+        if total == 0 {
+            return [0.0; NUM_STAGES];
+        }
+        let mut f = [0.0; NUM_STAGES];
+        for i in 0..NUM_STAGES {
+            f[i] = self.nanos[i] as f64 / total as f64;
+        }
+        f
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.dispatches == 0 && self.total_nanos() == 0
+    }
+
+    pub fn clear(&mut self) {
+        *self = KernelProfile::default();
+    }
+
+    /// JSON object: `{"geometry_ns": .., ..., "dispatches": .., "total_ns": ..}`.
+    pub fn to_json(&self) -> String {
+        let mut parts: Vec<String> = Stage::ALL
+            .iter()
+            .map(|s| format!("\"{}_ns\": {}", s.label(), self.nanos(*s)))
+            .collect();
+        parts.push(format!("\"dispatches\": {}", self.dispatches));
+        parts.push(format!("\"total_ns\": {}", self.total_nanos()));
+        format!("{{{}}}", parts.join(", "))
+    }
+}
+
+/// A borrow-friendly section timer for engine hot loops.
+///
+/// ```ignore
+/// let t = StageTimer::start(self.prof.is_some());
+/// /* ... stage body, free to borrow &mut self ... */
+/// t.stop(&mut self.prof, Stage::UAccum);
+/// ```
+///
+/// `start(false)` is the whole disabled cost: one `Option` constructed from
+/// a bool, no clock read.
+pub struct StageTimer(Option<Instant>);
+
+impl StageTimer {
+    #[inline]
+    pub fn start(active: bool) -> Self {
+        StageTimer(if active { Some(Instant::now()) } else { None })
+    }
+
+    #[inline]
+    pub fn stop(self, prof: &mut Option<KernelProfile>, stage: Stage) {
+        if let (Some(t0), Some(p)) = (self.0, prof.as_mut()) {
+            p.add(stage, t0.elapsed());
+        }
+    }
+}
+
+/// Process-wide aggregation of drained engine profiles, shared by the
+/// serving pipeline's workers (each owns a private engine; after a
+/// dispatch, the worker folds its engine's profile in here and resets it).
+///
+/// All atomics — but they are only touched *after* a dispatch completes,
+/// and only when `enabled` is set, so the engine hot path stays clean.
+#[derive(Debug, Default)]
+pub struct KernelAggregate {
+    /// Master switch: workers call `set_profiling(true)` on their engines
+    /// and drain profiles only while this is set.
+    pub enabled: AtomicBool,
+    stage_ns: [AtomicU64; NUM_STAGES],
+    dispatches: AtomicU64,
+}
+
+impl KernelAggregate {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Fold one drained engine profile in.
+    pub fn absorb(&self, p: &KernelProfile) {
+        for s in Stage::ALL {
+            self.stage_ns[s.index()].fetch_add(p.nanos(s), Ordering::Relaxed);
+        }
+        self.dispatches.fetch_add(p.dispatches, Ordering::Relaxed);
+    }
+
+    pub fn stage_ns(&self, stage: Stage) -> u64 {
+        self.stage_ns[stage.index()].load(Ordering::Relaxed)
+    }
+
+    pub fn dispatches(&self) -> u64 {
+        self.dispatches.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot into a plain [`KernelProfile`].
+    pub fn snapshot(&self) -> KernelProfile {
+        let mut p = KernelProfile::new();
+        for s in Stage::ALL {
+            p.add_ns(s, self.stage_ns(s));
+        }
+        p.dispatches = self.dispatches();
+        p
+    }
+
+    /// The `kernels` section of the stats reply.
+    pub fn to_json(&self) -> String {
+        let snap = self.snapshot();
+        format!(
+            "{{\"enabled\": {}, \"profile\": {}}}",
+            self.is_enabled(),
+            snap.to_json()
+        )
+    }
+}
+
+/// One completed span in the pipeline trace.
+#[derive(Clone, Debug)]
+pub struct TraceSpan {
+    /// Span name (`request`, `parse`, `queue`, `coalesce`, `compute`,
+    /// `reply`).
+    pub name: &'static str,
+    /// Start, nanoseconds since the ring's epoch.
+    pub ts_ns: u64,
+    /// Duration in nanoseconds.
+    pub dur_ns: u64,
+    /// Track id — one per request, so every request renders as its own
+    /// row and its spans nest strictly inside its `request` span.
+    pub tid: u64,
+}
+
+#[derive(Debug)]
+struct TraceInner {
+    spans: Vec<TraceSpan>,
+    /// Next slot to overwrite once the ring is full.
+    next: usize,
+    /// Total spans ever pushed (so exports can report drops).
+    pushed: u64,
+}
+
+/// Default span capacity of a [`TraceRing`].
+pub const TRACE_RING_CAP: usize = 4096;
+
+/// A bounded in-memory ring of pipeline spans with a Chrome `trace_event`
+/// JSON exporter (loadable in `chrome://tracing` / Perfetto).
+///
+/// Disabled by default; when disabled, [`TraceRing::push`] is a single
+/// relaxed load.  The ring overwrites its oldest spans once full, so a
+/// long-running server keeps the most recent window.
+#[derive(Debug)]
+pub struct TraceRing {
+    enabled: AtomicBool,
+    epoch: Instant,
+    cap: usize,
+    inner: Mutex<TraceInner>,
+    /// Monotonic per-request track allocator for [`TraceRing::next_tid`].
+    next_tid: AtomicU64,
+}
+
+impl Default for TraceRing {
+    fn default() -> Self {
+        Self::with_capacity(TRACE_RING_CAP)
+    }
+}
+
+impl TraceRing {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        TraceRing {
+            enabled: AtomicBool::new(false),
+            epoch: Instant::now(),
+            cap: cap.max(16),
+            inner: Mutex::new(TraceInner { spans: Vec::new(), next: 0, pushed: 0 }),
+            next_tid: AtomicU64::new(1),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Nanoseconds since the ring's epoch (span timestamps are all
+    /// relative to this).
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos().min(u64::MAX as u128) as u64
+    }
+
+    /// Allocate a fresh per-request track id.
+    pub fn next_tid(&self) -> u64 {
+        self.next_tid.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Record one span (no-op while disabled).
+    pub fn push(&self, name: &'static str, ts_ns: u64, dur_ns: u64, tid: u64) {
+        if !self.is_enabled() {
+            return;
+        }
+        let span = TraceSpan { name, ts_ns, dur_ns, tid };
+        let mut inner = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        inner.pushed += 1;
+        if inner.spans.len() < self.cap {
+            inner.spans.push(span);
+        } else {
+            let slot = inner.next;
+            inner.spans[slot] = span;
+            inner.next = (slot + 1) % self.cap;
+        }
+    }
+
+    /// Spans currently held (snapshot, in no particular order).
+    pub fn snapshot(&self) -> Vec<TraceSpan> {
+        let inner = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        inner.spans.clone()
+    }
+
+    /// Total spans ever pushed (> capacity means the ring wrapped).
+    pub fn pushed(&self) -> u64 {
+        let inner = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        inner.pushed
+    }
+
+    /// Export as Chrome `trace_event` JSON (the "JSON Object Format":
+    /// `{"traceEvents": [...]}` of `ph: "X"` complete events, timestamps
+    /// in microseconds).  Perfetto and `chrome://tracing` both load this.
+    pub fn to_chrome_json(&self) -> String {
+        let mut spans = self.snapshot();
+        spans.sort_by_key(|s| (s.tid, s.ts_ns, std::cmp::Reverse(s.dur_ns)));
+        let events: Vec<String> = spans
+            .iter()
+            .map(|s| {
+                format!(
+                    "{{\"name\": \"{}\", \"cat\": \"pipeline\", \"ph\": \"X\", \
+                     \"ts\": {:.3}, \"dur\": {:.3}, \"pid\": 1, \"tid\": {}}}",
+                    s.name,
+                    s.ts_ns as f64 / 1e3,
+                    s.dur_ns as f64 / 1e3,
+                    s.tid
+                )
+            })
+            .collect();
+        format!(
+            "{{\"displayTimeUnit\": \"ms\", \"traceEvents\": [{}]}}\n",
+            events.join(",\n")
+        )
+    }
+}
+
+/// Named wall-time accumulators for the coarse per-phase accounting the MD
+/// driver prints (`pack` / `execute` / `scatter`).  Subsumed into the
+/// metrics module from `util::timer` so there is exactly one profiling
+/// home; for kernel-level attribution inside an engine use
+/// [`KernelProfile`] instead.
+#[derive(Debug, Default, Clone)]
+pub struct StageTimes {
+    totals: BTreeMap<&'static str, Duration>,
+}
+
+impl StageTimes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time one closure and accumulate under `name`.
+    pub fn time<T>(&mut self, name: &'static str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(name, t0.elapsed());
+        out
+    }
+
+    pub fn add(&mut self, name: &'static str, d: Duration) {
+        *self.totals.entry(name).or_default() += d;
+    }
+
+    pub fn get(&self, name: &str) -> Duration {
+        self.totals.get(name).copied().unwrap_or_default()
+    }
+
+    pub fn total(&self) -> Duration {
+        self.totals.values().sum()
+    }
+
+    pub fn clear(&mut self) {
+        self.totals.clear();
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&'static str, Duration)> + '_ {
+        self.totals.iter().map(|(k, v)| (*k, *v))
+    }
+
+    /// `"name=1.234ms name=0.567ms"` sorted by descending share.
+    pub fn report(&self) -> String {
+        let mut items: Vec<(&'static str, Duration)> = self.iter().collect();
+        items.sort_by(|a, b| b.1.cmp(&a.1));
+        if items.is_empty() {
+            return "(no stages timed)".to_string();
+        }
+        items
+            .iter()
+            .map(|(k, v)| format!("{k}={:.3}ms", v.as_secs_f64() * 1e3))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_labels_are_stable_and_indexed() {
+        assert_eq!(Stage::ALL.len(), NUM_STAGES);
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            assert_eq!(s.index(), i);
+            assert!(!s.label().is_empty());
+        }
+        assert_eq!(Stage::Geometry.label(), "geometry");
+        assert_eq!(Stage::Stitch.label(), "stitch");
+    }
+
+    #[test]
+    fn profile_accumulates_merges_and_fractions_sum_to_one() {
+        let mut p = KernelProfile::new();
+        assert!(p.is_empty());
+        assert_eq!(p.fractions(), [0.0; NUM_STAGES]);
+        p.add(Stage::Geometry, Duration::from_nanos(100));
+        p.add(Stage::UAccum, Duration::from_nanos(300));
+        p.add_ns(Stage::YList, 600);
+        p.dispatches = 2;
+        assert_eq!(p.total_nanos(), 1000);
+        let f = p.fractions();
+        assert!((f.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((f[Stage::UAccum.index()] - 0.3).abs() < 1e-12);
+
+        let mut q = KernelProfile::new();
+        q.add_ns(Stage::Geometry, 50);
+        q.dispatches = 1;
+        q.merge(&p);
+        assert_eq!(q.nanos(Stage::Geometry), 150);
+        assert_eq!(q.dispatches, 3);
+
+        let j = q.to_json();
+        let parsed = crate::util::json::Json::parse(&j).expect("profile json parses");
+        assert_eq!(
+            parsed.get("geometry_ns").and_then(crate::util::json::Json::as_usize),
+            Some(150)
+        );
+        assert_eq!(
+            parsed.get("total_ns").and_then(crate::util::json::Json::as_usize),
+            Some(1050)
+        );
+    }
+
+    #[test]
+    fn stage_timer_off_records_nothing() {
+        let mut prof = Some(KernelProfile::new());
+        let t = StageTimer::start(false);
+        t.stop(&mut prof, Stage::DeDr);
+        assert_eq!(prof.as_ref().unwrap().total_nanos(), 0);
+        // and a live timer into a None profile is also a no-op
+        let t = StageTimer::start(true);
+        let mut none: Option<KernelProfile> = None;
+        t.stop(&mut none, Stage::DeDr);
+        assert!(none.is_none());
+    }
+
+    #[test]
+    fn aggregate_absorbs_only_explicitly() {
+        let agg = KernelAggregate::new();
+        assert!(!agg.is_enabled());
+        let mut p = KernelProfile::new();
+        p.add_ns(Stage::YList, 42);
+        p.dispatches = 1;
+        agg.absorb(&p);
+        agg.absorb(&p);
+        assert_eq!(agg.stage_ns(Stage::YList), 84);
+        assert_eq!(agg.dispatches(), 2);
+        let j = agg.to_json();
+        let parsed = crate::util::json::Json::parse(&j).expect("kernels json parses");
+        assert_eq!(
+            parsed
+                .get("profile")
+                .and_then(|p| p.get("y_list_ns"))
+                .and_then(crate::util::json::Json::as_usize),
+            Some(84)
+        );
+    }
+
+    #[test]
+    fn trace_ring_disabled_is_silent_and_bounded_when_enabled() {
+        let ring = TraceRing::with_capacity(16);
+        ring.push("compute", 0, 10, 1);
+        assert_eq!(ring.snapshot().len(), 0, "disabled ring records nothing");
+        ring.set_enabled(true);
+        for i in 0..40u64 {
+            ring.push("compute", i * 100, 10, i);
+        }
+        let spans = ring.snapshot();
+        assert_eq!(spans.len(), 16, "ring stays bounded");
+        assert_eq!(ring.pushed(), 40);
+        // oldest spans were overwritten: every survivor is from the tail
+        assert!(spans.iter().all(|s| s.tid >= 40 - 16));
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json_with_microsecond_timestamps() {
+        let ring = TraceRing::with_capacity(16);
+        ring.set_enabled(true);
+        ring.push("request", 1_000, 5_000, 7);
+        ring.push("compute", 2_000, 3_000, 7);
+        let doc = ring.to_chrome_json();
+        let parsed = crate::util::json::Json::parse(doc.trim()).expect("chrome trace parses");
+        let events = parsed
+            .get("traceEvents")
+            .and_then(crate::util::json::Json::as_arr)
+            .expect("has traceEvents");
+        assert_eq!(events.len(), 2);
+        // sorted by (tid, ts): the enclosing request span comes first
+        assert_eq!(
+            events[0].get("name").and_then(crate::util::json::Json::as_str),
+            Some("request")
+        );
+        assert_eq!(events[0].get("ts").and_then(crate::util::json::Json::as_f64), Some(1.0));
+        assert_eq!(events[0].get("dur").and_then(crate::util::json::Json::as_f64), Some(5.0));
+        assert_eq!(events[1].get("ph").and_then(crate::util::json::Json::as_str), Some("X"));
+    }
+
+    #[test]
+    fn stage_times_accumulates() {
+        let mut t = StageTimes::new();
+        t.add("pack", Duration::from_millis(2));
+        t.add("pack", Duration::from_millis(3));
+        t.add("execute", Duration::from_millis(10));
+        assert_eq!(t.get("pack"), Duration::from_millis(5));
+        assert_eq!(t.total(), Duration::from_millis(15));
+        let r = t.report();
+        assert!(r.starts_with("execute="), "{r}");
+        t.clear();
+        assert_eq!(t.total(), Duration::ZERO);
+        assert_eq!(t.report(), "(no stages timed)");
+    }
+}

@@ -8,14 +8,16 @@
 
 pub mod hist;
 pub mod json;
+pub mod metrics;
 pub mod parallel;
 pub mod rng;
 pub mod timer;
 
 pub use hist::LatencyHistogram;
+pub use metrics::{KernelProfile, Stage, StageTimes, StageTimer, TraceRing};
 pub use parallel::{parallel_for, parallel_map, ThreadPool};
 pub use rng::XorShift;
-pub use timer::{Stopwatch, StageTimes};
+pub use timer::Stopwatch;
 
 /// Resize `v` to `len` slots, all zero, touching each slot exactly once.
 ///

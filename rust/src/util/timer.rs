@@ -1,6 +1,9 @@
-//! Wall-clock timing helpers for the per-stage profiling the perf pass uses.
+//! Wall-clock timing: the simple [`Stopwatch`].
+//!
+//! The named per-stage accumulator (`StageTimes`) lives in
+//! [`crate::util::metrics`] alongside the kernel profiler and the pipeline
+//! trace ring, so all profiling has one home.
 
-use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 /// A simple stopwatch.
@@ -17,73 +20,5 @@ impl Stopwatch {
 
     pub fn elapsed_secs(&self) -> f64 {
         self.elapsed().as_secs_f64()
-    }
-}
-
-/// Named stage accumulator: the profiler used by the engines and the
-/// coordinator (`compute_ui: 1.2ms, compute_yi: 3.4ms, ...`).
-#[derive(Default, Clone, Debug)]
-pub struct StageTimes {
-    stages: BTreeMap<&'static str, Duration>,
-}
-
-impl StageTimes {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    /// Time a closure under a stage label.
-    pub fn time<T>(&mut self, stage: &'static str, f: impl FnOnce() -> T) -> T {
-        let t = Instant::now();
-        let out = f();
-        *self.stages.entry(stage).or_default() += t.elapsed();
-        out
-    }
-
-    pub fn add(&mut self, stage: &'static str, d: Duration) {
-        *self.stages.entry(stage).or_default() += d;
-    }
-
-    pub fn get(&self, stage: &str) -> Duration {
-        self.stages.get(stage).copied().unwrap_or_default()
-    }
-
-    pub fn total(&self) -> Duration {
-        self.stages.values().sum()
-    }
-
-    pub fn clear(&mut self) {
-        self.stages.clear();
-    }
-
-    pub fn iter(&self) -> impl Iterator<Item = (&'static str, Duration)> + '_ {
-        self.stages.iter().map(|(k, v)| (*k, *v))
-    }
-
-    /// Render as a single-line report sorted by cost, descending.
-    pub fn report(&self) -> String {
-        let mut v: Vec<_> = self.stages.iter().collect();
-        v.sort_by(|a, b| b.1.cmp(a.1));
-        v.iter()
-            .map(|(k, d)| format!("{k}={:.3}ms", d.as_secs_f64() * 1e3))
-            .collect::<Vec<_>>()
-            .join(" ")
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn accumulates() {
-        let mut t = StageTimes::new();
-        let x = t.time("a", || 1 + 1);
-        assert_eq!(x, 2);
-        t.time("a", || std::thread::sleep(Duration::from_millis(1)));
-        t.time("b", || ());
-        assert!(t.get("a") >= Duration::from_millis(1));
-        assert!(t.total() >= t.get("a"));
-        assert!(t.report().contains("a="));
     }
 }

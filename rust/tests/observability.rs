@@ -1,0 +1,463 @@
+//! Observability contracts, end to end: (1) the kernel profiler is
+//! bitwise-invisible — toggling it on or off never changes an engine's
+//! outputs, across the whole ladder ∪ fig1 set plus the sharded wrapper
+//! and multi-element engines; (2) pipeline traces export as valid Chrome
+//! `trace_event` JSON whose spans nest strictly inside their request span
+//! with exactly one `compute` span per request; (3) the `metrics` verb
+//! round-trips on both wires and its payload parses line-by-line as
+//! Prometheus text exposition format.
+
+use repro::config::EngineSpec;
+use repro::coordinator::server::{serve_with_stats, shutdown, ServeOptions, ServerStats};
+use repro::coordinator::wire;
+use repro::snap::coeff::SnapCoeffs;
+use repro::snap::engine::{ForceEngine, TileElems, TileInput, TileOutput};
+use repro::snap::variants::Variant;
+use repro::snap::{SnapIndex, SnapParams};
+use repro::util::json::Json;
+use repro::util::metrics::TraceSpan;
+use repro::util::XorShift;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+fn random_tile(seed: u64, na: usize, nn: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = XorShift::new(seed);
+    let mut rij = Vec::new();
+    let mut mask = Vec::new();
+    for _ in 0..na * nn {
+        loop {
+            let v = [
+                rng.uniform(-2.4, 2.4),
+                rng.uniform(-2.4, 2.4),
+                rng.uniform(-2.4, 2.4),
+            ];
+            if (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]).sqrt() > 0.5 {
+                rij.extend_from_slice(&v);
+                break;
+            }
+        }
+        mask.push(if rng.next_f64() > 0.25 { 1.0 } else { 0.0 });
+    }
+    (rij, mask)
+}
+
+fn beta_for(twojmax: usize) -> Vec<f64> {
+    SnapCoeffs::synthetic(twojmax, SnapIndex::new(twojmax).idxb_max, 42).beta
+}
+
+/// Compute the tile with profiling in the requested state and return the
+/// outputs; asserts the profile visibility contract for that state.
+fn run_once(
+    engine: &mut Box<dyn ForceEngine>,
+    tile: &TileInput,
+    profiled: bool,
+    what: &str,
+) -> TileOutput {
+    engine.set_profiling(profiled);
+    let mut out = TileOutput::default();
+    engine.compute_into(tile, &mut out).unwrap();
+    match engine.kernel_profile() {
+        Some(p) => {
+            assert!(profiled, "{what}: profile reported while profiling is off");
+            assert_eq!(p.dispatches, 1, "{what}: one compute must be one dispatch");
+            assert!(p.total_nanos() > 0, "{what}: no time attributed to any stage");
+        }
+        None => assert!(!profiled, "{what}: no profile reported while profiling is on"),
+    }
+    out
+}
+
+/// (1) Toggling the profiler is invisible in the outputs: off → on → off
+/// produces bitwise-identical `ei`/`dedr` for every ladder ∪ fig1 variant
+/// and for the sharded wrapper. The off-state engine reports no profile
+/// at all (the hot path never touches the clock).
+#[test]
+fn profiler_toggle_is_bitwise_invisible_ladder_wide() {
+    let twojmax = 2usize;
+    let beta = beta_for(twojmax);
+    let (na, nn) = (6usize, 5usize);
+    let (rij, mask) = random_tile(401, na, nn);
+    let tile = TileInput { num_atoms: na, num_nbor: nn, rij: &rij, mask: &mask, elems: None };
+
+    for v in Variant::ladder().iter().chain(Variant::fig1()) {
+        let label = v.label();
+        let mut engine =
+            EngineSpec::new(twojmax).variant(*v).beta(beta.clone()).build().unwrap();
+        let off = run_once(&mut engine, &tile, false, label);
+        let on = run_once(&mut engine, &tile, true, label);
+        assert_eq!(off.ei, on.ei, "{label}: profiling changed ei");
+        assert_eq!(off.dedr, on.dedr, "{label}: profiling changed dedr");
+        let off_again = run_once(&mut engine, &tile, false, label);
+        assert_eq!(off.ei, off_again.ei, "{label}: disabling left a residue in ei");
+        assert_eq!(off.dedr, off_again.dedr, "{label}: disabling left a residue in dedr");
+    }
+
+    // The sharded wrapper: per-shard profiles are drained into the outer
+    // aggregate, dispatches count whole tiles, and outputs stay bitwise.
+    let mut sharded = EngineSpec::new(twojmax)
+        .engine("fused")
+        .beta(beta)
+        .shards(3)
+        .min_atoms_per_shard(1)
+        .build()
+        .unwrap();
+    let off = run_once(&mut sharded, &tile, false, "sharded");
+    let on = run_once(&mut sharded, &tile, true, "sharded");
+    assert_eq!(off.ei, on.ei, "sharded: profiling changed ei");
+    assert_eq!(off.dedr, on.dedr, "sharded: profiling changed dedr");
+}
+
+/// (1b) Same invisibility contract for multi-element engines: typed tiles
+/// through `build_multi` produce bitwise-identical outputs with the
+/// profiler on and off, for the full-kernel variants.
+#[test]
+fn profiler_toggle_is_bitwise_invisible_multi_element() {
+    let twojmax = 2usize;
+    let coeffs = SnapCoeffs::synthetic_multi(twojmax, SnapIndex::new(twojmax).idxb_max, 2, 42);
+    let params = SnapParams::with_twojmax(twojmax);
+    let idx = Arc::new(SnapIndex::new(twojmax));
+    let (na, nn) = (5usize, 4usize);
+    let (rij, mask) = random_tile(402, na, nn);
+    let ielems: Vec<i32> = (0..na).map(|a| (a as i32) % 2).collect();
+    let jelems: Vec<i32> = (0..na * nn).map(|k| ((k as i32) * 7 + 3) % 2).collect();
+    let tile = TileInput {
+        num_atoms: na,
+        num_nbor: nn,
+        rij: &rij,
+        mask: &mask,
+        elems: Some(TileElems { ielems: &ielems, jelems: &jelems }),
+    };
+
+    for v in [Variant::V0Baseline, Variant::V7, Variant::Fused, Variant::FusedSimd] {
+        let label = v.label();
+        let mut engine: Box<dyn ForceEngine> = v.build_multi(
+            params,
+            idx.clone(),
+            coeffs.beta.clone(),
+            coeffs.elements.clone(),
+        );
+        let off = run_once(&mut engine, &tile, false, label);
+        let on = run_once(&mut engine, &tile, true, label);
+        assert_eq!(off.ei, on.ei, "{label} multi: profiling changed ei");
+        assert_eq!(off.dedr, on.dedr, "{label} multi: profiling changed dedr");
+    }
+}
+
+// ---------------------------------------------------------------- server
+
+fn factory(engine: &str, twojmax: usize) -> repro::snap::EngineFactory {
+    let idx = SnapIndex::new(twojmax);
+    let coeffs = SnapCoeffs::synthetic(twojmax, idx.idxb_max, 42);
+    EngineSpec::new(twojmax)
+        .engine(engine)
+        .beta(coeffs.beta)
+        .build_factory()
+        .unwrap()
+        .factory
+}
+
+struct TestServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    stats: Arc<ServerStats>,
+    handle: std::thread::JoinHandle<std::io::Result<()>>,
+}
+
+impl TestServer {
+    fn start(opts: ServeOptions, engine: &str, twojmax: usize) -> Self {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(ServerStats::default());
+        let f = factory(engine, twojmax);
+        let (stop2, stats2) = (stop.clone(), stats.clone());
+        let opts2 = opts;
+        let handle =
+            std::thread::spawn(move || serve_with_stats(listener, f, &opts2, stop2, stats2));
+        TestServer { addr, stop, stats, handle }
+    }
+
+    fn finish(self) {
+        shutdown(self.addr, &self.stop);
+        self.handle.join().unwrap().unwrap();
+    }
+}
+
+struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let conn = TcpStream::connect(addr).unwrap();
+        let writer = conn.try_clone().unwrap();
+        Client { writer, reader: BufReader::new(conn) }
+    }
+
+    fn roundtrip(&mut self, line: &str) -> String {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply).unwrap();
+        reply.trim_end().to_string()
+    }
+}
+
+/// A repro-frame-v1 client (performs the hello handshake on connect).
+struct BinClient {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl BinClient {
+    fn connect(addr: SocketAddr) -> BinClient {
+        let conn = TcpStream::connect(addr).unwrap();
+        let mut writer = conn.try_clone().unwrap();
+        let mut reader = BufReader::new(conn);
+        writer.write_all(&wire::encode_hello(wire::VERSION)).unwrap();
+        let mut ack = [0u8; 2];
+        reader.read_exact(&mut ack).unwrap();
+        assert_eq!(ack, wire::encode_hello_ack(), "bad hello ack");
+        BinClient { writer, reader }
+    }
+
+    fn send(&mut self, frame: &[u8]) {
+        self.writer.write_all(frame).unwrap();
+    }
+
+    fn recv(&mut self) -> wire::Frame {
+        wire::read_frame(&mut self.reader).unwrap().unwrap()
+    }
+}
+
+fn request_line(seed: u64, na: usize, nn: usize) -> String {
+    let (rij, mask) = random_tile(seed, na, nn);
+    let fmt = |v: &[f64]| v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",");
+    format!(
+        "{{\"num_atoms\": {na}, \"num_nbor\": {nn}, \"rij\": [{}], \"mask\": [{}]}}",
+        fmt(&rij),
+        fmt(&mask)
+    )
+}
+
+fn assert_ok(reply: &str) {
+    let parsed = Json::parse(reply).expect("reply parses");
+    assert_eq!(parsed.get("ok"), Some(&Json::Bool(true)), "compute failed: {reply}");
+}
+
+/// (2) With the trace ring enabled, every request leaves one `request`
+/// span and exactly one `compute` span on its own track; child spans are
+/// disjoint and strictly contained in the request interval; the Chrome
+/// export is valid JSON mirroring the ring.
+#[test]
+fn trace_spans_nest_strictly_and_export_as_chrome_json() {
+    let opts = ServeOptions {
+        workers: 2,
+        batch_window: std::time::Duration::from_micros(200),
+        queue_depth: 64,
+        max_batch_atoms: 32,
+        ..ServeOptions::default()
+    };
+    let srv = TestServer::start(opts, "fused", 2);
+    srv.stats.trace.set_enabled(true);
+
+    let total = 10usize;
+    let mut client = Client::connect(srv.addr);
+    for k in 0..total {
+        assert_ok(&client.roundtrip(&request_line(700 + k as u64, 1 + k % 3, 4)));
+    }
+
+    let spans: Vec<TraceSpan> = srv.stats.trace.snapshot();
+    let chrome = srv.stats.trace.to_chrome_json();
+    srv.finish();
+
+    // Group by track: one request + one compute span per request, all
+    // children disjoint and inside the request interval.
+    let mut tids: Vec<u64> = spans.iter().map(|s| s.tid).collect();
+    tids.sort_unstable();
+    tids.dedup();
+    assert_eq!(tids.len(), total, "one track per request");
+    for tid in tids {
+        let mut mine: Vec<&TraceSpan> = spans.iter().filter(|s| s.tid == tid).collect();
+        let req = *mine
+            .iter()
+            .find(|s| s.name == "request")
+            .unwrap_or_else(|| panic!("track {tid} has no request span"));
+        assert_eq!(
+            mine.iter().filter(|s| s.name == "compute").count(),
+            1,
+            "track {tid}: exactly one compute span per request"
+        );
+        mine.retain(|s| s.name != "request");
+        assert!(!mine.is_empty());
+        mine.sort_by_key(|s| s.ts_ns);
+        let (lo, hi) = (req.ts_ns, req.ts_ns + req.dur_ns);
+        let mut cursor = lo;
+        for s in mine {
+            assert!(
+                s.ts_ns >= cursor,
+                "track {tid}: span {} overlaps its predecessor",
+                s.name
+            );
+            assert!(
+                s.ts_ns + s.dur_ns <= hi,
+                "track {tid}: span {} escapes the request interval",
+                s.name
+            );
+            cursor = s.ts_ns + s.dur_ns;
+        }
+    }
+
+    // The export is valid JSON with one event per ring span, all complete
+    // ("X") events on pid 1.
+    let j = Json::parse(&chrome).expect("chrome trace parses");
+    let events = j.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+    assert_eq!(events.len(), spans.len(), "export drops or invents spans");
+    for ev in events {
+        assert_eq!(ev.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(ev.get("pid").and_then(Json::as_usize), Some(1));
+        assert!(ev.get("ts").and_then(Json::as_f64).is_some());
+        assert!(ev.get("dur").and_then(Json::as_f64).is_some());
+        assert!(ev.get("name").and_then(Json::as_str).is_some());
+    }
+    assert_eq!(j.get("displayTimeUnit").and_then(Json::as_str), Some("ms"));
+}
+
+/// Line-by-line structural check of the Prometheus text exposition
+/// format: comments are `# HELP`/`# TYPE`, samples are
+/// `name{labels} value` with a finite numeric value.
+fn assert_parses_as_prometheus(text: &str) {
+    let mut samples = 0usize;
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# ") {
+            assert!(
+                rest.starts_with("HELP ") || rest.starts_with("TYPE "),
+                "unknown comment form: {line:?}"
+            );
+            continue;
+        }
+        let (metric, value) =
+            line.rsplit_once(' ').unwrap_or_else(|| panic!("sample without value: {line:?}"));
+        let v: f64 = value.parse().unwrap_or_else(|_| panic!("non-numeric value: {line:?}"));
+        assert!(v.is_finite(), "non-finite sample: {line:?}");
+        let name_end = metric.find('{').unwrap_or(metric.len());
+        let name = &metric[..name_end];
+        assert!(
+            !name.is_empty()
+                && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_'),
+            "bad metric name: {line:?}"
+        );
+        if name_end < metric.len() {
+            assert!(metric.ends_with('}'), "unterminated label set: {line:?}");
+            for kv in metric[name_end + 1..metric.len() - 1].split(',') {
+                let (k, val) = kv
+                    .split_once('=')
+                    .unwrap_or_else(|| panic!("label without '=': {line:?}"));
+                assert!(!k.is_empty(), "empty label name: {line:?}");
+                assert!(
+                    val.len() >= 2 && val.starts_with('"') && val.ends_with('"'),
+                    "unquoted label value: {line:?}"
+                );
+            }
+        }
+        samples += 1;
+    }
+    assert!(samples > 10, "suspiciously few samples ({samples}):\n{text}");
+}
+
+/// (3) The `metrics` verb round-trips on both wires, the payload parses
+/// as Prometheus text, and metrics requests keep the stats counter
+/// invariant (`requests_total = ok + err + stats_requests`) intact.
+#[test]
+fn metrics_verb_round_trips_both_wires_as_prometheus_text() {
+    let opts = ServeOptions { workers: 1, queue_depth: 16, ..ServeOptions::default() };
+    let srv = TestServer::start(opts, "fused", 2);
+
+    let mut client = Client::connect(srv.addr);
+    for k in 0..3u64 {
+        assert_ok(&client.roundtrip(&request_line(800 + k, 2, 4)));
+    }
+
+    // JSON wire: {"cmd": "metrics"} -> {"ok": true, "metrics": "..."}.
+    let reply = client.roundtrip("{\"cmd\": \"metrics\"}");
+    let j = Json::parse(&reply).expect("metrics reply parses");
+    assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{reply}");
+    let text = j.get("metrics").and_then(Json::as_str).expect("metrics payload").to_string();
+    assert_parses_as_prometheus(&text);
+    assert!(text.contains("repro_requests_total"), "missing core counter:\n{text}");
+    assert!(text.contains("repro_replies_ok_total 3"), "ok counter wrong:\n{text}");
+    assert!(
+        text.contains("repro_stage_latency_seconds{stage=\"compute\",quantile=\"0.99\"}"),
+        "missing latency summary:\n{text}"
+    );
+    assert!(text.contains("repro_kernel_profiling_enabled 0"), "profiler gauge:\n{text}");
+
+    // Binary wire: CMD_METRICS -> CMD_METRICS_TEXT with the same registry.
+    let mut bc = BinClient::connect(srv.addr);
+    bc.send(&wire::encode_metrics_request());
+    match bc.recv() {
+        wire::Frame::MetricsText(bin_text) => {
+            assert_parses_as_prometheus(&bin_text);
+            assert!(bin_text.contains("repro_requests_total"));
+            assert!(bin_text.contains("repro_kernel_stage_seconds_total{stage=\"geometry\"}"));
+        }
+        other => panic!("expected MetricsText, got {other:?}"),
+    }
+
+    // The invariant holds with metrics verbs in the mix: they count as
+    // stats_requests, not as compute replies.
+    let reply = client.roundtrip("{\"cmd\": \"stats\"}");
+    let j = Json::parse(&reply).expect("stats reply parses");
+    let s = j.get("stats").expect("stats object");
+    let get = |k: &str| s.get(k).and_then(Json::as_usize).unwrap();
+    assert_eq!(get("replies_ok"), 3);
+    assert_eq!(get("stats_requests"), 3, "two metrics verbs + one stats verb");
+    assert_eq!(
+        get("requests_total"),
+        get("replies_ok") + get("replies_err") + get("stats_requests"),
+        "{reply}"
+    );
+    srv.finish();
+}
+
+/// (3b) With kernel profiling enabled the `stats` verb grows a `kernels`
+/// section whose aggregate reflects the dispatched work, and the
+/// Prometheus registry flips its gauge and accumulates stage seconds.
+#[test]
+fn stats_and_metrics_surface_kernel_aggregate_when_profiling() {
+    let opts = ServeOptions { workers: 2, queue_depth: 16, ..ServeOptions::default() };
+    let srv = TestServer::start(opts, "fused", 2);
+    srv.stats.kernels.set_enabled(true);
+
+    let mut client = Client::connect(srv.addr);
+    for k in 0..4u64 {
+        assert_ok(&client.roundtrip(&request_line(900 + k, 2, 4)));
+    }
+
+    // The enabled flag is immediately visible in the stats reply.
+    let reply = client.roundtrip("{\"cmd\": \"stats\"}");
+    let j = Json::parse(&reply).expect("stats reply parses");
+    let kernels = j.get("stats").and_then(|s| s.get("kernels")).expect("kernels section");
+    assert_eq!(kernels.get("enabled"), Some(&Json::Bool(true)), "{reply}");
+    assert!(kernels.get("profile").is_some(), "{reply}");
+
+    // Workers absorb each engine profile after the job completes; after a
+    // clean shutdown every dispatch is accounted for.
+    let stats = srv.stats.clone();
+    srv.finish();
+    let snap = stats.kernels.snapshot();
+    assert!(snap.dispatches >= 1, "no kernel dispatches absorbed");
+    assert!(snap.total_nanos() > 0, "no stage time absorbed");
+    let frac: f64 = snap.fractions().iter().sum();
+    assert!((frac - 1.0).abs() < 1e-9, "stage fractions must sum to 1, got {frac}");
+    let prom = stats.prometheus_text();
+    assert!(prom.contains("repro_kernel_profiling_enabled 1"));
+    assert!(prom.contains("repro_kernel_dispatches_total"));
+    assert_parses_as_prometheus(&prom);
+}
