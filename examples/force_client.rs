@@ -16,6 +16,12 @@
 //! connection) single-atom neighborhoods with `--nbor` neighbor slots, so
 //! runs are reproducible and the server's batch coalescer gets mergeable
 //! traffic.
+//!
+//! `--mode descriptors` switches the workload from force requests to
+//! bispectrum-extraction requests (the fitting-pipeline path; add
+//! `--gradients` for per-pair dB_k/dr payloads) — point the server at a
+//! B_k-materializing engine (`--engine baseline`) and write the resulting
+//! throughput/latency profile with `--out BENCH_descriptors.json`.
 
 use repro::coordinator::wire;
 use repro::util::json::Json;
@@ -40,12 +46,29 @@ impl Wire {
     }
 }
 
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    Force,
+    Descriptors,
+}
+
+impl Mode {
+    fn label(self) -> &'static str {
+        match self {
+            Mode::Force => "force",
+            Mode::Descriptors => "descriptors",
+        }
+    }
+}
+
 struct Args {
     addr: String,
     conns: usize,
     requests: usize,
     nbor: usize,
     wire: Wire,
+    mode: Mode,
+    gradients: bool,
     out: Option<String>,
 }
 
@@ -63,6 +86,8 @@ fn parse_args() -> anyhow::Result<Args> {
         requests: 100,
         nbor: 6,
         wire: Wire::Json,
+        mode: Mode::Force,
+        gradients: false,
         out: None,
     };
     let mut i = 0;
@@ -88,6 +113,18 @@ fn parse_args() -> anyhow::Result<Args> {
                 };
                 i += 2;
             }
+            "--mode" => {
+                args.mode = match flag_value(&argv, i)? {
+                    "force" => Mode::Force,
+                    "descriptors" => Mode::Descriptors,
+                    other => anyhow::bail!("--mode must be force or descriptors, got {other}"),
+                };
+                i += 2;
+            }
+            "--gradients" => {
+                args.gradients = true;
+                i += 1;
+            }
             "--out" => {
                 args.out = Some(flag_value(&argv, i)?.to_string());
                 i += 2;
@@ -98,7 +135,8 @@ fn parse_args() -> anyhow::Result<Args> {
             }
             other => anyhow::bail!(
                 "unknown flag {other} (usage: force_client [ADDR] [--conns N] \
-                 [--requests M] [--nbor K] [--wire json|binary] [--out FILE])"
+                 [--requests M] [--nbor K] [--wire json|binary] \
+                 [--mode force|descriptors] [--gradients] [--out FILE])"
             ),
         }
     }
@@ -128,15 +166,23 @@ fn request_tile(rng: &mut XorShift, nbor: usize) -> (Vec<f64>, Vec<f64>) {
     (rij, vec![1.0; nbor])
 }
 
-fn request_line(rij: &[f64], mask: &[f64], nbor: usize) -> String {
+fn request_line(rij: &[f64], mask: &[f64], nbor: usize, mode: Mode, gradients: bool) -> String {
     let fmt = |v: &[f64]| {
         v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
     };
-    format!(
-        "{{\"num_atoms\": 1, \"num_nbor\": {nbor}, \"rij\": [{}], \"mask\": [{}]}}\n",
-        fmt(rij),
-        fmt(mask)
-    )
+    match mode {
+        Mode::Force => format!(
+            "{{\"num_atoms\": 1, \"num_nbor\": {nbor}, \"rij\": [{}], \"mask\": [{}]}}\n",
+            fmt(rij),
+            fmt(mask)
+        ),
+        Mode::Descriptors => format!(
+            "{{\"cmd\": \"descriptors\", \"num_atoms\": 1, \"num_nbor\": {nbor}, \
+             \"rij\": [{}], \"mask\": [{}], \"gradients\": {gradients}}}\n",
+            fmt(rij),
+            fmt(mask)
+        ),
+    }
 }
 
 /// Stream `requests` JSON requests down one connection, verifying replies.
@@ -146,12 +192,14 @@ fn run_json_conn(
     conn_id: usize,
     requests: usize,
     nbor: usize,
+    mode: Mode,
+    gradients: bool,
 ) -> anyhow::Result<()> {
     let mut rng = XorShift::new(1000 + conn_id as u64);
     let mut line = String::new();
     for k in 0..requests {
         let (rij, mask) = request_tile(&mut rng, nbor);
-        let req = request_line(&rij, &mask, nbor);
+        let req = request_line(&rij, &mask, nbor, mode, gradients);
         writer.write_all(req.as_bytes())?;
         line.clear();
         reader.read_line(&mut line)?;
@@ -160,6 +208,13 @@ fn run_json_conn(
             "conn {conn_id} request {k} failed: {}",
             &line[..line.len().min(200)]
         );
+        if mode == Mode::Descriptors {
+            anyhow::ensure!(
+                line.contains("\"blist\"") && line.contains("\"dblist\"") == gradients,
+                "conn {conn_id} request {k}: descriptor payload shape off: {}",
+                &line[..line.len().min(200)]
+            );
+        }
     }
     Ok(())
 }
@@ -172,6 +227,8 @@ fn run_binary_conn(
     conn_id: usize,
     requests: usize,
     nbor: usize,
+    mode: Mode,
+    gradients: bool,
 ) -> anyhow::Result<()> {
     writer.write_all(&wire::encode_hello(wire::VERSION))?;
     let mut ack = [0u8; 2];
@@ -183,12 +240,26 @@ fn run_binary_conn(
     let mut rng = XorShift::new(1000 + conn_id as u64);
     for k in 0..requests {
         let (rij, mask) = request_tile(&mut rng, nbor);
-        writer.write_all(&wire::encode_compute(1, nbor, &rij, &mask, None))?;
+        let frame = match mode {
+            Mode::Force => wire::encode_compute(1, nbor, &rij, &mask, None),
+            Mode::Descriptors => {
+                wire::encode_descriptors(1, nbor, &rij, &mask, None, gradients)
+            }
+        };
+        writer.write_all(&frame)?;
         match wire::read_frame(reader)? {
-            Ok(wire::Frame::Result { num_atoms, num_nbor, .. }) => {
+            Ok(wire::Frame::Result { num_atoms, num_nbor, .. }) if mode == Mode::Force => {
                 anyhow::ensure!(
                     num_atoms == 1 && num_nbor == nbor,
                     "conn {conn_id} request {k}: shape mismatch in reply"
+                );
+            }
+            Ok(wire::Frame::DescriptorsResult { num_atoms, num_nbor, dblist, .. })
+                if mode == Mode::Descriptors =>
+            {
+                anyhow::ensure!(
+                    num_atoms == 1 && num_nbor == nbor && dblist.is_some() == gradients,
+                    "conn {conn_id} request {k}: descriptor reply shape off"
                 );
             }
             Ok(wire::Frame::Error { code, message }) => {
@@ -207,11 +278,14 @@ fn run_binary_conn(
 fn main() -> anyhow::Result<()> {
     let args = parse_args()?;
     println!(
-        "# load generator: {} conns x {} requests, {} neighbors/atom, {} wire -> {}",
+        "# load generator: {} conns x {} requests, {} neighbors/atom, {} wire, \
+         {} mode{} -> {}",
         args.conns,
         args.requests,
         args.nbor,
         args.wire.label(),
+        args.mode.label(),
+        if args.gradients { " (+gradients)" } else { "" },
         args.addr
     );
 
@@ -222,6 +296,7 @@ fn main() -> anyhow::Result<()> {
         let addr = args.addr.clone();
         let barrier = barrier.clone();
         let (requests, nbor, wire_mode) = (args.requests, args.nbor, args.wire);
+        let (mode, gradients) = (args.mode, args.gradients);
         handles.push(std::thread::spawn(move || -> anyhow::Result<f64> {
             // Dial before the barrier, but *always* reach the barrier even
             // on failure — otherwise one refused connection deadlocks every
@@ -236,10 +311,12 @@ fn main() -> anyhow::Result<()> {
             let (mut writer, mut reader) = setup?;
             let t0 = Instant::now();
             match wire_mode {
-                Wire::Json => run_json_conn(&mut writer, &mut reader, conn_id, requests, nbor)?,
-                Wire::Binary => {
-                    run_binary_conn(&mut writer, &mut reader, conn_id, requests, nbor)?
-                }
+                Wire::Json => run_json_conn(
+                    &mut writer, &mut reader, conn_id, requests, nbor, mode, gradients,
+                )?,
+                Wire::Binary => run_binary_conn(
+                    &mut writer, &mut reader, conn_id, requests, nbor, mode, gradients,
+                )?,
             }
             Ok(t0.elapsed().as_secs_f64())
         }));
@@ -286,7 +363,7 @@ fn main() -> anyhow::Result<()> {
                 atoms_computed = get("atoms_computed");
                 batch_atoms_max = get("batch_atoms_max");
                 if let Some(lat) = s.get("latency") {
-                    for stage in ["parse", "queue_wait", "compute", "reply"] {
+                    for stage in ["parse", "queue_wait", "compute", "reply", "descriptors"] {
                         let q = |k: &str| {
                             lat.get(stage)
                                 .and_then(|h| h.get(k))
@@ -320,13 +397,17 @@ fn main() -> anyhow::Result<()> {
             })
             .collect();
         let json = format!(
-            "{{\"bench\": \"serve\", \"wire\": \"{}\", \"conns\": {}, \
+            "{{\"bench\": \"{}\", \"wire\": \"{}\", \"mode\": \"{}\", \
+             \"gradients\": {}, \"conns\": {}, \
              \"requests_per_conn\": {}, \
              \"num_nbor\": {}, \"total_requests\": {}, \"wall_s\": {:.6}, \
              \"req_per_s\": {:.2}, \"dispatches\": {}, \
              \"atoms_per_dispatch_mean\": {:.3}, \"batch_atoms_max\": {}, \
              \"latency\": {{{}}}}}\n",
+            if args.mode == Mode::Descriptors { "descriptors" } else { "serve" },
             args.wire.label(),
+            args.mode.label(),
+            args.gradients,
             args.conns,
             args.requests,
             args.nbor,

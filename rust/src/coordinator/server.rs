@@ -49,6 +49,7 @@
 
 use crate::coordinator::force::TileBatch;
 use crate::coordinator::wire::{self, ErrorCode, Extracted};
+use crate::snap::descriptors::DescriptorOutput;
 use crate::snap::engine::{
     EngineError, EngineFactory, ForceEngine, OwnedTile, OwnedTileElems, TileOutput,
 };
@@ -157,6 +158,11 @@ pub struct ServerStats {
     /// of `replies_err`; each produced a structured `overloaded` reply.
     pub requests_shed: AtomicU64,
     pub stats_requests: AtomicU64,
+    /// Descriptor-extraction requests received (the `descriptors` JSON verb
+    /// / `CMD_DESCRIPTORS` frames) — a subset of `requests_total`, so the
+    /// fitting-pipeline workload is observable separately from force
+    /// serving.
+    pub descriptor_requests: AtomicU64,
     /// Engine dispatches (merged batches count once).
     pub jobs_dispatched: AtomicU64,
     /// Dispatches that merged >= 2 requests.
@@ -190,6 +196,10 @@ pub struct ServerStats {
     pub lat_queue_wait: LatencyHistogram,
     pub lat_compute: LatencyHistogram,
     pub lat_reply: LatencyHistogram,
+    /// Engine time of descriptor dispatches specifically (a descriptor
+    /// dispatch also records into `lat_compute`; this stage isolates the
+    /// fitting workload's latency profile).
+    pub lat_descriptors: LatencyHistogram,
     /// Plan-cache loads that hit (set once at startup; counters so an
     /// embedder reloading plans can keep accumulating).
     pub plan_cache_hits: AtomicU64,
@@ -257,6 +267,7 @@ impl ServerStats {
             ("engine_errors", n(&self.engine_errors)),
             ("requests_shed", n(&self.requests_shed)),
             ("stats_requests", n(&self.stats_requests)),
+            ("descriptor_requests", n(&self.descriptor_requests)),
             ("jobs_dispatched", n(&self.jobs_dispatched)),
             ("batches_merged", n(&self.batches_merged)),
             ("requests_coalesced", n(&self.requests_coalesced)),
@@ -279,11 +290,13 @@ impl ServerStats {
             (
                 "latency",
                 format!(
-                    "{{\"parse\": {}, \"queue_wait\": {}, \"compute\": {}, \"reply\": {}}}",
+                    "{{\"parse\": {}, \"queue_wait\": {}, \"compute\": {}, \"reply\": {}, \
+                     \"descriptors\": {}}}",
                     self.lat_parse.summary_json(),
                     self.lat_queue_wait.summary_json(),
                     self.lat_compute.summary_json(),
                     self.lat_reply.summary_json(),
+                    self.lat_descriptors.summary_json(),
                 ),
             ),
             ("plan", self.plan_json()),
@@ -346,6 +359,12 @@ impl ServerStats {
         );
         counter(
             &mut o,
+            "descriptor_requests_total",
+            "Descriptor-extraction requests received.",
+            n(&self.descriptor_requests),
+        );
+        counter(
+            &mut o,
             "jobs_dispatched_total",
             "Engine dispatches (merged batches count once).",
             n(&self.jobs_dispatched),
@@ -389,11 +408,12 @@ impl ServerStats {
             "# HELP repro_stage_latency_seconds Per-pipeline-stage request latency."
         );
         let _ = writeln!(o, "# TYPE repro_stage_latency_seconds summary");
-        let stages: [(&str, &LatencyHistogram); 4] = [
+        let stages: [(&str, &LatencyHistogram); 5] = [
             ("parse", &self.lat_parse),
             ("queue_wait", &self.lat_queue_wait),
             ("compute", &self.lat_compute),
             ("reply", &self.lat_reply),
+            ("descriptors", &self.lat_descriptors),
         ];
         for (name, h) in stages {
             for (label, q) in [("0.5", 0.5), ("0.99", 0.99)] {
@@ -483,6 +503,16 @@ enum Mode {
     Binary,
 }
 
+/// What a pipelined tile request asks the engine for: forces (the MD
+/// serving path) or descriptors (the fitting-pipeline path).  Carried on
+/// [`Pending`] so the coalescer only merges like with like and the worker
+/// knows which engine capability to dispatch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ReqKind {
+    Force,
+    Descriptors { gradients: bool },
+}
+
 /// One parsed compute request in flight through the pipeline.
 ///
 /// Workers serialize the reply (JSON line or binary frame) straight out of
@@ -491,6 +521,7 @@ enum Mode {
 /// the loop never touches float formatting.
 struct Pending {
     tile: OwnedTile,
+    kind: ReqKind,
     fmt: WireFmt,
     conn: u64,
     seq: u64,
@@ -967,6 +998,9 @@ enum Request {
     /// Prometheus text dump of the metrics registry.
     Metrics,
     Tile(OwnedTile),
+    /// Descriptor extraction for one tile (per-atom B_k, plus per-pair
+    /// dB_k/dr when `gradients`).
+    Descriptors { tile: OwnedTile, gradients: bool },
     Bad { code: ErrorCode, msg: String },
 }
 
@@ -1069,6 +1103,15 @@ fn process_rbuf(
                         },
                         Ok(wire::Frame::Stats) => Request::Stats,
                         Ok(wire::Frame::Metrics) => Request::Metrics,
+                        Ok(wire::Frame::Descriptors { tile, gradients }) => {
+                            match tile.check_shape() {
+                                Ok(()) => Request::Descriptors { tile, gradients },
+                                Err(m) => Request::Bad {
+                                    code: ErrorCode::BadShape,
+                                    msg: format!("shape mismatch: {m}"),
+                                },
+                            }
+                        }
                         Ok(_) => Request::Bad {
                             code: ErrorCode::UnknownCmd,
                             msg: "this frame type is server-to-client only".to_string(),
@@ -1118,7 +1161,15 @@ fn dispatch_request(
             let bytes = error_reply_bytes(conn.fmt(), code, &msg);
             conn.emit(seq, bytes);
         }
-        Request::Tile(tile) => {
+        Request::Tile(..) | Request::Descriptors { .. } => {
+            let (tile, kind) = match request {
+                Request::Tile(tile) => (tile, ReqKind::Force),
+                Request::Descriptors { tile, gradients } => {
+                    ctx.stats.descriptor_requests.fetch_add(1, Ordering::Relaxed);
+                    (tile, ReqKind::Descriptors { gradients })
+                }
+                _ => unreachable!("outer match arm"),
+            };
             let trace = trace_start.map(|start_ns| TraceReq {
                 tid: ctx.stats.trace.next_tid(),
                 start_ns,
@@ -1126,6 +1177,7 @@ fn dispatch_request(
             });
             let pending = Pending {
                 tile,
+                kind,
                 fmt: conn.fmt(),
                 conn: id,
                 seq,
@@ -1168,6 +1220,25 @@ fn parse_json_request(line: &str) -> Request {
         return match cmd {
             "stats" => Request::Stats,
             "metrics" => Request::Metrics,
+            // {"cmd": "descriptors", <tile fields>, "gradients": bool}
+            "descriptors" => {
+                let gradients = match j.get("gradients") {
+                    None => false,
+                    Some(g) => match g.as_bool() {
+                        Some(b) => b,
+                        None => {
+                            return Request::Bad {
+                                code: ErrorCode::BadFrame,
+                                msg: "gradients must be a boolean".to_string(),
+                            }
+                        }
+                    },
+                };
+                match parse_tile(&j) {
+                    Ok(tile) => Request::Descriptors { tile, gradients },
+                    Err((code, msg)) => Request::Bad { code, msg },
+                }
+            }
             other => Request::Bad {
                 code: ErrorCode::UnknownCmd,
                 msg: format!("unknown cmd `{other}`"),
@@ -1234,6 +1305,10 @@ fn coalescer_loop(
         // with typed members, untyped with untyped (TileBatch enforces the
         // same invariant with an assert)
         let typed = first.tile.elems.is_some();
+        // one dispatch kind per merged tile: force requests never merge
+        // with descriptor requests (and gradient/no-gradient descriptor
+        // requests stay apart — they scatter different buffers)
+        let kind = first.kind;
         let mut atoms = first.tile.num_atoms;
         let mut group = vec![first];
         let deadline = Instant::now() + window;
@@ -1247,6 +1322,7 @@ fn coalescer_loop(
                 RecvTimeout::Item(p) => {
                     if p.tile.num_nbor == nn
                         && p.tile.elems.is_some() == typed
+                        && p.kind == kind
                         && atoms + p.tile.num_atoms <= max_atoms
                     {
                         atoms += p.tile.num_atoms;
@@ -1285,6 +1361,7 @@ fn coalescer_loop(
 /// tile.
 fn worker_loop(workq: &BoundedQueue<Job>, mut engine: Box<dyn ForceEngine>, stats: &ServerStats) {
     let mut out = TileOutput::default();
+    let mut desc = DescriptorOutput::default();
     let mut profiling = false;
     while let Some(job) = workq.recv() {
         // Sync the engine's kernel profiler with the registry switch before
@@ -1300,15 +1377,44 @@ fn worker_loop(workq: &BoundedQueue<Job>, mut engine: Box<dyn ForceEngine>, stat
                 note_wait(stats, std::iter::once(&p));
                 let pickup_ns = p.trace.as_ref().map(|_| stats.trace.now_ns());
                 let t0 = Instant::now();
-                let result = guarded_compute(engine.as_mut(), &p.tile.as_input(), &mut out);
+                let result = match p.kind {
+                    ReqKind::Force => {
+                        guarded_compute(engine.as_mut(), &p.tile.as_input(), &mut out)
+                    }
+                    ReqKind::Descriptors { gradients } => guarded_descriptors(
+                        engine.as_mut(),
+                        &p.tile.as_input(),
+                        gradients,
+                        &mut desc,
+                    ),
+                };
                 note_compute(stats, t0, p.tile.num_atoms);
+                if let ReqKind::Descriptors { .. } = p.kind {
+                    stats.lat_descriptors.record(t0.elapsed());
+                }
                 let compute_end_ns = pickup_ns.map(|_| stats.trace.now_ns());
                 let t1 = Instant::now();
                 let (bytes, engine_err) = match result {
-                    Ok(()) => (
-                        serialize_ok(p.fmt, p.tile.num_atoms, p.tile.num_nbor, &out.ei, &out.dedr),
-                        false,
-                    ),
+                    Ok(()) => {
+                        let bytes = match p.kind {
+                            ReqKind::Force => serialize_ok(
+                                p.fmt,
+                                p.tile.num_atoms,
+                                p.tile.num_nbor,
+                                &out.ei,
+                                &out.dedr,
+                            ),
+                            ReqKind::Descriptors { gradients } => serialize_descriptors_ok(
+                                p.fmt,
+                                p.tile.num_atoms,
+                                p.tile.num_nbor,
+                                desc.num_bispectrum,
+                                &desc.blist,
+                                gradients.then_some(&desc.dblist[..]),
+                            ),
+                        };
+                        (bytes, false)
+                    }
                     Err(e) => (serialize_engine_err(p.fmt, &e), true),
                 };
                 stats.lat_reply.record(t1.elapsed());
@@ -1323,14 +1429,28 @@ fn worker_loop(workq: &BoundedQueue<Job>, mut engine: Box<dyn ForceEngine>, stat
                 note_wait(stats, members.iter());
                 let tracing = members.iter().any(|m| m.trace.is_some());
                 let pickup_ns = tracing.then(|| stats.trace.now_ns());
+                // the coalescer merges one kind per batch, so members[0]
+                // speaks for the whole group
+                let kind = members[0].kind;
                 let mut batch = TileBatch::new(members[0].tile.num_nbor);
                 for m in &members {
                     batch.push(&m.tile);
                 }
                 let assembled_ns = tracing.then(|| stats.trace.now_ns());
                 let t0 = Instant::now();
-                let result = guarded_compute(engine.as_mut(), &batch.input(), &mut out);
+                let result = match kind {
+                    ReqKind::Force => guarded_compute(engine.as_mut(), &batch.input(), &mut out),
+                    ReqKind::Descriptors { gradients } => guarded_descriptors(
+                        engine.as_mut(),
+                        &batch.input(),
+                        gradients,
+                        &mut desc,
+                    ),
+                };
                 note_compute(stats, t0, batch.num_atoms());
+                if let ReqKind::Descriptors { .. } = kind {
+                    stats.lat_descriptors.record(t0.elapsed());
+                }
                 let compute_end_ns = tracing.then(|| stats.trace.now_ns());
                 stats.batches_merged.fetch_add(1, Ordering::Relaxed);
                 stats
@@ -1340,16 +1460,32 @@ fn worker_loop(workq: &BoundedQueue<Job>, mut engine: Box<dyn ForceEngine>, stat
                 match result {
                     Ok(()) => {
                         // serialize each member straight from its slice of
-                        // the merged output — no per-member TileOutput
+                        // the merged output — no per-member output buffer
                         let nn = batch.num_nbor();
                         for (m, (row, na)) in members.iter().zip(batch.member_ranges()) {
-                            let bytes = serialize_ok(
-                                m.fmt,
-                                na,
-                                nn,
-                                &out.ei[row..row + na],
-                                &out.dedr[row * nn * 3..(row + na) * nn * 3],
-                            );
+                            let bytes = match kind {
+                                ReqKind::Force => serialize_ok(
+                                    m.fmt,
+                                    na,
+                                    nn,
+                                    &out.ei[row..row + na],
+                                    &out.dedr[row * nn * 3..(row + na) * nn * 3],
+                                ),
+                                ReqKind::Descriptors { gradients } => {
+                                    let nb = desc.num_bispectrum;
+                                    serialize_descriptors_ok(
+                                        m.fmt,
+                                        na,
+                                        nn,
+                                        nb,
+                                        &desc.blist[row * nb..(row + na) * nb],
+                                        gradients.then(|| {
+                                            &desc.dblist
+                                                [row * nn * nb * 3..(row + na) * nn * nb * 3]
+                                        }),
+                                    )
+                                }
+                            };
                             let _ = m.done.send(Completion {
                                 conn: m.conn,
                                 seq: m.seq,
@@ -1459,6 +1595,28 @@ fn guarded_compute(
         })
 }
 
+/// [`guarded_compute`]'s descriptor twin: one descriptor dispatch with the
+/// same last-resort panic backstop, so a hostile tile on the fitting path
+/// cannot shrink the worker pool either.
+fn guarded_descriptors(
+    engine: &mut dyn ForceEngine,
+    input: &crate::snap::engine::TileInput,
+    gradients: bool,
+    out: &mut DescriptorOutput,
+) -> Result<(), EngineError> {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        engine.compute_descriptors_into(input, gradients, out)
+    }))
+    .unwrap_or_else(|cause| {
+        let detail = cause
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| cause.downcast_ref::<String>().cloned())
+            .unwrap_or_else(|| "unknown panic".to_string());
+        Err(EngineError::Panicked(detail))
+    })
+}
+
 fn note_wait<'a>(stats: &ServerStats, pendings: impl Iterator<Item = &'a Pending>) {
     for p in pendings {
         let waited = p.enqueued.elapsed();
@@ -1531,6 +1689,44 @@ fn serialize_ok(
             bytes
         }
         WireFmt::Binary => wire::encode_result(num_atoms, num_nbor, ei, dedr),
+    }
+}
+
+/// Serialize one successful descriptor reply in the request's wire format.
+/// `dblist` is `Some` exactly when gradients were requested; slices may be
+/// a member's view of the worker's merged batch buffer.  The JSON path uses
+/// the same `{:.17e}` float format as force replies, which round-trips f64
+/// exactly — the binary path carries the raw bits, so the two wires are
+/// bit-identical (asserted by `rust/tests/descriptors.rs`).
+fn serialize_descriptors_ok(
+    fmt: WireFmt,
+    num_atoms: usize,
+    num_nbor: usize,
+    num_bispectrum: usize,
+    blist: &[f64],
+    dblist: Option<&[f64]>,
+) -> Vec<u8> {
+    match fmt {
+        WireFmt::Json => {
+            let arr = |v: &[f64]| {
+                let items: Vec<String> = v.iter().map(|x| format!("{x:.17e}")).collect();
+                format!("[{}]", items.join(","))
+            };
+            let mut doc = format!(
+                "{{\"ok\": true, \"num_bispectrum\": {num_bispectrum}, \"blist\": {}",
+                arr(blist)
+            );
+            if let Some(d) = dblist {
+                doc.push_str(&format!(", \"dblist\": {}", arr(d)));
+            }
+            doc.push('}');
+            let mut bytes = doc.into_bytes();
+            bytes.push(b'\n');
+            bytes
+        }
+        WireFmt::Binary => {
+            wire::encode_descriptors_result(num_atoms, num_nbor, num_bispectrum, blist, dblist)
+        }
     }
 }
 
@@ -1684,16 +1880,33 @@ mod tests {
             .factory
     }
 
+    fn baseline_factory() -> EngineFactory {
+        let idx = SnapIndex::new(2);
+        let coeffs = SnapCoeffs::synthetic(2, idx.idxb_max, 3);
+        crate::config::EngineSpec::new(2)
+            .engine("baseline")
+            .beta(coeffs.beta)
+            .build_factory()
+            .unwrap()
+            .factory
+    }
+
     type ServerJoin = std::thread::JoinHandle<std::io::Result<()>>;
 
-    fn start(opts: ServeOptions) -> (SocketAddr, Arc<AtomicBool>, ServerJoin) {
+    fn start_with(
+        factory: EngineFactory,
+        opts: ServeOptions,
+    ) -> (SocketAddr, Arc<AtomicBool>, ServerJoin) {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
-        let factory = test_factory();
         let h = std::thread::spawn(move || serve(listener, factory, &opts, stop2));
         (addr, stop, h)
+    }
+
+    fn start(opts: ServeOptions) -> (SocketAddr, Arc<AtomicBool>, ServerJoin) {
+        start_with(test_factory(), opts)
     }
 
     #[test]
@@ -1805,6 +2018,86 @@ mod tests {
             parsed.get("code").and_then(Json::as_str),
             Some("unknown_cmd")
         );
+    }
+
+    #[test]
+    fn descriptors_verb_serves_blist_and_gradients() {
+        let (addr, stop, h) = start_with(
+            baseline_factory(),
+            ServeOptions { workers: 1, ..ServeOptions::default() },
+        );
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let req = "{\"cmd\": \"descriptors\", \"num_atoms\": 1, \"num_nbor\": 2, \
+                   \"rij\": [1.5,0,0, 0,1.5,0], \"mask\": [1,1], \"gradients\": true}\n";
+        conn.write_all(req.as_bytes()).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).expect("descriptor reply parses");
+        let nb = j.get("num_bispectrum").and_then(Json::as_usize).expect("num_bispectrum");
+        assert!(nb > 0);
+        assert_eq!(j.get("blist").and_then(Json::as_f64_vec).map(|v| v.len()), Some(nb));
+        assert_eq!(
+            j.get("dblist").and_then(Json::as_f64_vec).map(|v| v.len()),
+            Some(2 * nb * 3),
+            "{line}"
+        );
+        // without gradients the dblist field is omitted
+        let req = "{\"cmd\": \"descriptors\", \"num_atoms\": 1, \"num_nbor\": 2, \
+                   \"rij\": [1.5,0,0, 0,1.5,0], \"mask\": [1,1]}\n";
+        conn.write_all(req.as_bytes()).unwrap();
+        let mut line2 = String::new();
+        reader.read_line(&mut line2).unwrap();
+        let j2 = Json::parse(line2.trim()).unwrap();
+        assert!(j2.get("dblist").is_none(), "{line2}");
+        // the workload is observable: descriptor_requests counts both
+        conn.write_all(b"{\"cmd\": \"stats\"}\n").unwrap();
+        let mut line3 = String::new();
+        reader.read_line(&mut line3).unwrap();
+        let stats = Json::parse(line3.trim()).unwrap();
+        let s = stats.get("stats").expect("has stats");
+        assert_eq!(s.get("descriptor_requests").and_then(Json::as_usize), Some(2), "{line3}");
+        drop(reader);
+        drop(conn);
+        shutdown(addr, &stop);
+        h.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn fused_descriptor_request_gets_backend_error_and_worker_survives() {
+        // the default test factory serves the fused engine, which cannot
+        // materialize B_k: the structured error must come back and the same
+        // worker must keep serving force requests afterwards
+        let (addr, stop, h) = start(ServeOptions { workers: 1, ..ServeOptions::default() });
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let req = "{\"cmd\": \"descriptors\", \"num_atoms\": 1, \"num_nbor\": 2, \
+                   \"rij\": [1.5,0,0, 0,1.5,0], \"mask\": [1,1]}\n";
+        conn.write_all(req.as_bytes()).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false), "{line}");
+        assert_eq!(j.get("code").and_then(Json::as_str), Some("backend"), "{line}");
+        // same connection, same (sole) worker: forces still work
+        let req2 =
+            "{\"num_atoms\": 1, \"num_nbor\": 2, \"rij\": [1.5,0,0, 0,1.5,0], \"mask\": [1,1]}\n";
+        conn.write_all(req2.as_bytes()).unwrap();
+        let mut line2 = String::new();
+        reader.read_line(&mut line2).unwrap();
+        assert!(line2.contains("\"ok\": true"), "{line2}");
+        // engine_errors counted the refusal
+        conn.write_all(b"{\"cmd\": \"stats\"}\n").unwrap();
+        let mut line3 = String::new();
+        reader.read_line(&mut line3).unwrap();
+        let stats = Json::parse(line3.trim()).unwrap();
+        let s = stats.get("stats").expect("has stats");
+        assert_eq!(s.get("engine_errors").and_then(Json::as_usize), Some(1), "{line3}");
+        assert_eq!(s.get("descriptor_requests").and_then(Json::as_usize), Some(1), "{line3}");
+        drop(reader);
+        drop(conn);
+        shutdown(addr, &stop);
+        h.join().unwrap().unwrap();
     }
 
     #[test]

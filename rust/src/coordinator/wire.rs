@@ -44,6 +44,10 @@ pub const CMD_COMPUTE: u8 = 0x01;
 pub const CMD_STATS: u8 = 0x02;
 /// Client→server: request a metrics-registry dump (empty body).
 pub const CMD_METRICS: u8 = 0x03;
+/// Client→server: extract descriptors for one tile (`CMD_DESCRIPTORS`
+/// body: `u32 num_atoms`, `u32 num_nbor`, `u8 typed`, `u8 gradients`, then
+/// `rij`, `mask`, and — when `typed == 1` — `ielems`, `jelems`).
+pub const CMD_DESCRIPTORS: u8 = 0x04;
 /// Server→client: forces for one tile (`u32 num_atoms`, `u32 num_nbor`,
 /// `ei`, `dedr`).
 pub const CMD_RESULT: u8 = 0x81;
@@ -53,6 +57,12 @@ pub const CMD_STATS_JSON: u8 = 0x82;
 /// Server→client: metrics registry in the Prometheus text exposition
 /// format, UTF-8 (same text the JSON path wraps for `{"cmd": "metrics"}`).
 pub const CMD_METRICS_TEXT: u8 = 0x83;
+/// Server→client: descriptors for one tile (`u32 num_atoms`,
+/// `u32 num_nbor`, `u32 num_bispectrum`, `u8 gradients`, then `blist` and —
+/// when `gradients == 1` — `dblist`), raw little-endian `f64`: the exact
+/// bits the engine produced, byte-for-byte what the JSON path's `{:.17e}`
+/// round-trips to.
+pub const CMD_DESCRIPTORS_RESULT: u8 = 0x84;
 /// Server→client: structured error (`u8 code`, UTF-8 message).
 pub const CMD_ERROR: u8 = 0x7F;
 
@@ -133,9 +143,22 @@ pub enum Frame {
     Stats,
     /// Client→server: metrics-registry dump request.
     Metrics,
+    /// Client→server: extract descriptors for this tile (per-atom B_k,
+    /// plus per-pair dB_k/dr when `gradients`).
+    Descriptors { tile: OwnedTile, gradients: bool },
     /// Server→client: forces (`ei` len = `num_atoms`, `dedr` len =
     /// `num_atoms * num_nbor * 3`).
     Result { num_atoms: usize, num_nbor: usize, ei: Vec<f64>, dedr: Vec<f64> },
+    /// Server→client: descriptors (`blist` len = `num_atoms *
+    /// num_bispectrum`; `dblist` len = `num_atoms * num_nbor *
+    /// num_bispectrum * 3` when gradients were requested, `None` otherwise).
+    DescriptorsResult {
+        num_atoms: usize,
+        num_nbor: usize,
+        num_bispectrum: usize,
+        blist: Vec<f64>,
+        dblist: Option<Vec<f64>>,
+    },
     /// Server→client: stats snapshot (JSON text).
     StatsJson(String),
     /// Server→client: metrics registry (Prometheus text).
@@ -260,6 +283,56 @@ pub fn encode_compute(
     finish_frame(CMD_COMPUTE, body)
 }
 
+/// Encode a [`CMD_DESCRIPTORS`] frame.  Same tile payload as
+/// [`encode_compute`] plus the trailing `gradients` flag.
+pub fn encode_descriptors(
+    num_atoms: usize,
+    num_nbor: usize,
+    rij: &[f64],
+    mask: &[f64],
+    elems: Option<(&[i32], &[i32])>,
+    gradients: bool,
+) -> Vec<u8> {
+    let mut body = Vec::with_capacity(10 + (rij.len() + mask.len()) * 8);
+    put_u32(&mut body, num_atoms as u32);
+    put_u32(&mut body, num_nbor as u32);
+    body.push(u8::from(elems.is_some()));
+    body.push(u8::from(gradients));
+    put_f64s(&mut body, rij);
+    put_f64s(&mut body, mask);
+    if let Some((ielems, jelems)) = elems {
+        put_i32s(&mut body, ielems);
+        put_i32s(&mut body, jelems);
+    }
+    finish_frame(CMD_DESCRIPTORS, body)
+}
+
+/// Encode a [`CMD_DESCRIPTORS_RESULT`] frame from a computed descriptor
+/// output's slices (`dblist = None` when gradients were not requested).
+pub fn encode_descriptors_result(
+    num_atoms: usize,
+    num_nbor: usize,
+    num_bispectrum: usize,
+    blist: &[f64],
+    dblist: Option<&[f64]>,
+) -> Vec<u8> {
+    debug_assert_eq!(blist.len(), num_atoms * num_bispectrum);
+    if let Some(d) = dblist {
+        debug_assert_eq!(d.len(), num_atoms * num_nbor * num_bispectrum * 3);
+    }
+    let grad_len = dblist.map_or(0, <[f64]>::len);
+    let mut body = Vec::with_capacity(13 + (blist.len() + grad_len) * 8);
+    put_u32(&mut body, num_atoms as u32);
+    put_u32(&mut body, num_nbor as u32);
+    put_u32(&mut body, num_bispectrum as u32);
+    body.push(u8::from(dblist.is_some()));
+    put_f64s(&mut body, blist);
+    if let Some(d) = dblist {
+        put_f64s(&mut body, d);
+    }
+    finish_frame(CMD_DESCRIPTORS_RESULT, body)
+}
+
 /// Encode a [`CMD_STATS`] frame (empty body).
 pub fn encode_stats_request() -> Vec<u8> {
     finish_frame(CMD_STATS, Vec::new())
@@ -345,7 +418,9 @@ pub fn parse_payload(payload: &[u8]) -> Result<Frame, BadFrame> {
                 ))
             }
         }
+        CMD_DESCRIPTORS => parse_descriptors_body(body),
         CMD_RESULT => parse_result_body(body),
+        CMD_DESCRIPTORS_RESULT => parse_descriptors_result_body(body),
         CMD_STATS_JSON => match std::str::from_utf8(body) {
             Ok(s) => Ok(Frame::StatsJson(s.to_string())),
             Err(e) => Err(BadFrame::new(ErrorCode::BadFrame, format!("stats body not UTF-8: {e}"))),
@@ -435,6 +510,72 @@ fn parse_compute_body(body: &[u8]) -> Result<Frame, BadFrame> {
     Ok(Frame::Compute(OwnedTile { num_atoms, num_nbor, rij, mask, elems }))
 }
 
+fn parse_descriptors_body(body: &[u8]) -> Result<Frame, BadFrame> {
+    if body.len() < 10 {
+        return Err(BadFrame::new(
+            ErrorCode::BadFrame,
+            format!("descriptors body too short: {} bytes (need at least 10)", body.len()),
+        ));
+    }
+    let num_atoms = rd_u32(&body[0..4]) as usize;
+    let num_nbor = rd_u32(&body[4..8]) as usize;
+    let typed = match body[8] {
+        0 => false,
+        1 => true,
+        other => {
+            return Err(BadFrame::new(
+                ErrorCode::BadFrame,
+                format!("typed flag must be 0 or 1, got {other}"),
+            ))
+        }
+    };
+    let gradients = match body[9] {
+        0 => false,
+        1 => true,
+        other => {
+            return Err(BadFrame::new(
+                ErrorCode::BadFrame,
+                format!("gradients flag must be 0 or 1, got {other}"),
+            ))
+        }
+    };
+    // widen before multiplying, exactly like parse_compute_body
+    let rows = num_atoms as u128 * num_nbor as u128;
+    let mut expected = 10 + rows * 3 * 8 + rows * 8;
+    if typed {
+        expected += num_atoms as u128 * 4 + rows * 4;
+    }
+    if expected != body.len() as u128 {
+        return Err(BadFrame::new(
+            ErrorCode::BadFrame,
+            format!(
+                "descriptors body length mismatch: {num_atoms} atoms x {num_nbor} neighbors \
+                 (typed={}) needs {expected} bytes, got {}",
+                u8::from(typed),
+                body.len()
+            ),
+        ));
+    }
+    let rows = num_atoms * num_nbor;
+    let mut off = 10;
+    let rij = rd_f64s(&body[off..off + rows * 3 * 8]);
+    off += rows * 3 * 8;
+    let mask = rd_f64s(&body[off..off + rows * 8]);
+    off += rows * 8;
+    let elems = if typed {
+        let ielems = rd_i32s(&body[off..off + num_atoms * 4]);
+        off += num_atoms * 4;
+        let jelems = rd_i32s(&body[off..off + rows * 4]);
+        Some(OwnedTileElems { ielems, jelems })
+    } else {
+        None
+    };
+    Ok(Frame::Descriptors {
+        tile: OwnedTile { num_atoms, num_nbor, rij, mask, elems },
+        gradients,
+    })
+}
+
 fn parse_result_body(body: &[u8]) -> Result<Frame, BadFrame> {
     if body.len() < 8 {
         return Err(BadFrame::new(
@@ -459,6 +600,51 @@ fn parse_result_body(body: &[u8]) -> Result<Frame, BadFrame> {
     let ei = rd_f64s(&body[8..8 + num_atoms * 8]);
     let dedr = rd_f64s(&body[8 + num_atoms * 8..]);
     Ok(Frame::Result { num_atoms, num_nbor, ei, dedr })
+}
+
+fn parse_descriptors_result_body(body: &[u8]) -> Result<Frame, BadFrame> {
+    if body.len() < 13 {
+        return Err(BadFrame::new(
+            ErrorCode::BadFrame,
+            format!("descriptors result body too short: {} bytes", body.len()),
+        ));
+    }
+    let num_atoms = rd_u32(&body[0..4]) as usize;
+    let num_nbor = rd_u32(&body[4..8]) as usize;
+    let num_bispectrum = rd_u32(&body[8..12]) as usize;
+    let gradients = match body[12] {
+        0 => false,
+        1 => true,
+        other => {
+            return Err(BadFrame::new(
+                ErrorCode::BadFrame,
+                format!("gradients flag must be 0 or 1, got {other}"),
+            ))
+        }
+    };
+    let bl = num_atoms as u128 * num_bispectrum as u128;
+    let dbl = if gradients {
+        num_atoms as u128 * num_nbor as u128 * num_bispectrum as u128 * 3
+    } else {
+        0
+    };
+    let expected = 13 + bl * 8 + dbl * 8;
+    if expected != body.len() as u128 {
+        return Err(BadFrame::new(
+            ErrorCode::BadFrame,
+            format!(
+                "descriptors result body length mismatch: {num_atoms} atoms x {num_nbor} \
+                 neighbors x {num_bispectrum} components (gradients={}) needs {expected} \
+                 bytes, got {}",
+                u8::from(gradients),
+                body.len()
+            ),
+        ));
+    }
+    let bl = num_atoms * num_bispectrum;
+    let blist = rd_f64s(&body[13..13 + bl * 8]);
+    let dblist = gradients.then(|| rd_f64s(&body[13 + bl * 8..]));
+    Ok(Frame::DescriptorsResult { num_atoms, num_nbor, num_bispectrum, blist, dblist })
 }
 
 /// Try to pull one complete frame off the front of a connection's read
@@ -574,6 +760,97 @@ mod tests {
             }
             other => panic!("wrong frame: {other:?}"),
         }
+    }
+
+    #[test]
+    fn descriptors_roundtrip_is_bit_exact() {
+        let (na, nn) = (2usize, 3usize);
+        let rij: Vec<f64> = (0..na * nn * 3).map(|i| (i as f64).sin() * 1.3).collect();
+        let mask = vec![1.0, 0.0, 1.0, 1.0, 1.0, 0.0];
+        for gradients in [false, true] {
+            let bytes = encode_descriptors(na, nn, &rij, &mask, None, gradients);
+            let (frame, consumed) = extract_one(&bytes);
+            assert_eq!(consumed, bytes.len());
+            match frame.unwrap() {
+                Frame::Descriptors { tile, gradients: g } => {
+                    assert_eq!(g, gradients);
+                    assert_eq!(tile.num_atoms, na);
+                    assert_eq!(tile.num_nbor, nn);
+                    assert!(tile.rij.iter().zip(&rij).all(|(a, b)| a.to_bits() == b.to_bits()));
+                    assert_eq!(tile.mask, mask);
+                    assert!(tile.elems.is_none());
+                }
+                other => panic!("wrong frame: {other:?}"),
+            }
+        }
+        // typed channel slices exactly like a compute frame's
+        let ielems = vec![1, 0];
+        let jelems = vec![0, 1, 1, 0, 0, 1];
+        let bytes = encode_descriptors(na, nn, &rij, &mask, Some((&ielems, &jelems)), true);
+        let (frame, _) = extract_one(&bytes);
+        match frame.unwrap() {
+            Frame::Descriptors { tile, gradients } => {
+                assert!(gradients);
+                let e = tile.elems.expect("typed tile");
+                assert_eq!(e.ielems, ielems);
+                assert_eq!(e.jelems, jelems);
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn descriptors_result_roundtrip_is_bit_exact() {
+        let (na, nn, nb) = (2usize, 2usize, 5usize);
+        let blist: Vec<f64> = (0..na * nb).map(|i| (i as f64).exp() * 1e-3).collect();
+        let dblist: Vec<f64> = (0..na * nn * nb * 3).map(|i| (i as f64) * -0.01).collect();
+        // gradients present
+        let bytes = encode_descriptors_result(na, nn, nb, &blist, Some(&dblist));
+        let (frame, _) = extract_one(&bytes);
+        match frame.unwrap() {
+            Frame::DescriptorsResult { num_atoms, num_nbor, num_bispectrum, blist: b, dblist: d } => {
+                assert_eq!((num_atoms, num_nbor, num_bispectrum), (na, nn, nb));
+                assert!(b.iter().zip(&blist).all(|(a, w)| a.to_bits() == w.to_bits()));
+                let d = d.expect("gradients");
+                assert!(d.iter().zip(&dblist).all(|(a, w)| a.to_bits() == w.to_bits()));
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        // gradients absent
+        let bytes = encode_descriptors_result(na, nn, nb, &blist, None);
+        let (frame, _) = extract_one(&bytes);
+        match frame.unwrap() {
+            Frame::DescriptorsResult { dblist, .. } => assert!(dblist.is_none()),
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_descriptor_bodies_are_survivable() {
+        // truncated request header
+        let (frame, _) = extract_one(&finish_frame(CMD_DESCRIPTORS, vec![0; 9]));
+        assert_eq!(frame.unwrap_err().code, ErrorCode::BadFrame);
+
+        // bad gradients flag in a request
+        let mut body = Vec::new();
+        put_u32(&mut body, 0);
+        put_u32(&mut body, 0);
+        body.push(0);
+        body.push(9);
+        let (frame, _) = extract_one(&finish_frame(CMD_DESCRIPTORS, body));
+        assert!(frame.unwrap_err().message.contains("gradients flag"));
+
+        // result body that disagrees with its own header
+        let mut body = Vec::new();
+        put_u32(&mut body, 2);
+        put_u32(&mut body, 2);
+        put_u32(&mut body, 5);
+        body.push(1);
+        body.extend_from_slice(&[0u8; 24]);
+        let (frame, _) = extract_one(&finish_frame(CMD_DESCRIPTORS_RESULT, body));
+        let bad = frame.unwrap_err();
+        assert_eq!(bad.code, ErrorCode::BadFrame);
+        assert!(bad.message.contains("length mismatch"), "{}", bad.message);
     }
 
     #[test]

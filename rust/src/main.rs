@@ -45,7 +45,9 @@ impl<'a> Flags<'a> {
             let k = args[i]
                 .strip_prefix("--")
                 .with_context(|| format!("expected --flag, got `{}`", args[i]))?;
-            if k == "quick" || k == "no-xla" || k == "profile-kernels" {
+            if k == "quick" || k == "no-xla" || k == "profile-kernels" || k == "gradients"
+                || k == "quadratic"
+            {
                 pairs.push((k, "true"));
                 i += 1;
             } else {
@@ -89,6 +91,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "serve" => cmd_serve(&flags),
         "tune" => cmd_tune(&flags),
         "profile" => cmd_profile(&flags),
+        "descriptors" => cmd_descriptors(&flags),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -118,6 +121,9 @@ fn print_help() {
          \x20             [--nelems N] [--out PLAN] [--bench-out FILE]\n\
          \x20 profile     [--twojmax J] [--cells C] [--warmup N] [--reps N]\n\
          \x20             [--variants a,b,c] [--out BENCH_kernels.json]\n\
+         \x20 descriptors [--twojmax J] [--engine baseline] [--cells C] [--gradients]\n\
+         \x20             [--quadratic] [--param FILE] [--coeff FILE]\n\
+         \x20             [--out descriptors.dat]\n\
          \n\
          engines: baseline V1..V7 fused aosoa pre-adjoint-atom pre-adjoint-pair\n\
          \x20        xla:snap_2j8 xla:snap_2j8_ref xla:snap_2j14 xla:snap_2j14_ref\n\
@@ -139,7 +145,15 @@ fn print_help() {
          `profile` runs every engine variant over the benchmark workload\n\
          with kernel profiling on and writes the per-stage fraction-of-time\n\
          breakdown (the paper's Fig. 5 analogue) to BENCH_kernels.json\n\
-         (see docs/OBSERVABILITY.md)."
+         (see docs/OBSERVABILITY.md).\n\
+         \n\
+         `descriptors` extracts per-atom bispectrum components B_k (plus\n\
+         per-pair dB_k/dr with --gradients) over the benchmark lattice and\n\
+         writes a fitting-ready table; `--quadratic` (or a quadraticflag 1\n\
+         .snapparam via --param) routes the energy column through the\n\
+         quadratic SNAP form.  Only engines that materialize B_k qualify\n\
+         (baseline, pre-adjoint-*, V1..V7; the fused Euler-identity path\n\
+         refuses)."
     );
 }
 
@@ -421,6 +435,124 @@ fn cmd_profile(flags: &Flags) -> Result<()> {
 
     std::fs::write(&out_path, repro::bench::kernels_json(&w, &points))?;
     println!("\n# per-kernel breakdown written to {out_path}");
+    Ok(())
+}
+
+fn cmd_descriptors(flags: &Flags) -> Result<()> {
+    use repro::snap::coeff::SnapCoeffs;
+    use repro::snap::descriptors::DescriptorOutput;
+
+    let engine_name = flags.get_or("engine", "baseline".to_string())?;
+    let cells = flags.get_or("cells", 4usize)?;
+    let gradients = flags.has("gradients");
+    let out_path = flags.get_or("out", "descriptors.dat".to_string())?;
+
+    // potential: deterministic synthetic by default; --param/--coeff load
+    // the LAMMPS file formats (a `quadraticflag 1` .snapparam switches the
+    // energy column to the quadratic SNAP form)
+    let mut params = repro::snap::SnapParams::with_twojmax(flags.get_or("twojmax", 8usize)?);
+    if let Some(path) = flags.get("param") {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        params = SnapCoeffs::parse_snapparam(&text)?;
+    }
+    let idx = repro::snap::SnapIndex::new(params.twojmax);
+    let mut coeffs = match flags.get("coeff") {
+        Some(path) => {
+            let text =
+                std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+            let c = SnapCoeffs::parse_snapcoeff(&text, params)?;
+            anyhow::ensure!(
+                c.ncoeff_per_elem() == idx.idxb_max,
+                "coeff file has {} linear coefficients per element, 2J={} needs {}",
+                c.ncoeff_per_elem(),
+                params.twojmax,
+                idx.idxb_max
+            );
+            c
+        }
+        None => {
+            let mut c = SnapCoeffs::synthetic(params.twojmax, idx.idxb_max, 42);
+            c.params = params;
+            c
+        }
+    };
+    // --quadratic: augment a linear potential with a small deterministic
+    // packed quadratic block so the quadratic energy path runs file-free
+    if flags.has("quadratic") && !coeffs.quadratic() {
+        let k = coeffs.ncoeff_per_elem();
+        let mut rng = repro::util::XorShift::new(43);
+        coeffs.quad = (0..coeffs.nelems() * k * (k + 1) / 2)
+            .map(|q| 0.01 * rng.normal() / (1.0 + (q % (k * (k + 1) / 2)) as f64).sqrt())
+            .collect();
+        coeffs.params.quadraticflag = true;
+    }
+
+    let w = repro::bench::Workload::tungsten(cells, coeffs.params.rcutfac);
+    println!(
+        "# repro descriptors: {} atoms x {} neighbors, 2J={}, K={}, engine={}, \
+         gradients={}, quadratic={}",
+        w.num_atoms,
+        w.num_nbor,
+        coeffs.params.twojmax,
+        idx.idxb_max,
+        engine_name,
+        gradients,
+        coeffs.quadratic()
+    );
+
+    let build = repro::config::EngineSpec::new(coeffs.params.twojmax)
+        .engine(&engine_name)
+        .beta(coeffs.beta.clone())
+        .elements(coeffs.elements.clone())
+        .build_factory()?;
+    let mut engine = (build.factory)()?;
+    let mut desc = DescriptorOutput::default();
+    let sw = Stopwatch::start();
+    engine
+        .compute_descriptors_into(&w.tile(), gradients, &mut desc)
+        .map_err(|e| anyhow::anyhow!("descriptor extraction failed: {e}"))?;
+    let secs = sw.elapsed_secs();
+
+    let nb = desc.num_bispectrum;
+    let mut table = String::new();
+    table.push_str(&format!(
+        "# repro descriptors: {} atoms, 2J={}, K={} bispectrum components, engine={}\n",
+        desc.num_atoms, coeffs.params.twojmax, nb, engine_name
+    ));
+    table.push_str("# columns: atom energy B_0 .. B_{K-1}\n");
+    let mut total_energy = 0.0;
+    for a in 0..desc.num_atoms {
+        let elem = w.ielems.get(a).map(|&e| e as usize).unwrap_or(0);
+        let row = desc.blist_row(a);
+        let energy = coeffs.atom_energy(elem, row);
+        total_energy += energy;
+        table.push_str(&format!("{a} {energy:.17e}"));
+        for b in row {
+            table.push_str(&format!(" {b:.17e}"));
+        }
+        table.push('\n');
+    }
+    if gradients {
+        table.push_str("# gradient rows: dB atom nbor dB_0/dx dB_0/dy dB_0/dz ...\n");
+        for a in 0..desc.num_atoms {
+            for n in 0..desc.num_nbor {
+                if w.mask[a * desc.num_nbor + n] == 0.0 {
+                    continue;
+                }
+                table.push_str(&format!("dB {a} {n}"));
+                for v in desc.dblist_row(a, n) {
+                    table.push_str(&format!(" {v:.17e}"));
+                }
+                table.push('\n');
+            }
+        }
+    }
+    std::fs::write(&out_path, &table).with_context(|| format!("writing {out_path}"))?;
+    println!(
+        "# extracted in {secs:.3} s; total energy {total_energy:.6} eV; \
+         table written to {out_path}"
+    );
     Ok(())
 }
 

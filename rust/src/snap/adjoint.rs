@@ -26,6 +26,7 @@
 //!   (contiguous per-level slices; the CPU analog of the 128-bit
 //!   load/store alignment fix).
 
+use super::descriptors::{dblist_pair_from_duz, DescriptorOutput};
 use super::engine::{EngineError, ForceEngine, TileInput, TileOutput};
 use super::indices::SnapIndex;
 use super::kernels::*;
@@ -73,6 +74,8 @@ pub struct AdjointEngine {
     blist: Vec<f64>,
     yscratch_r: Vec<f64>,
     yscratch_i: Vec<f64>,
+    /// One pair's dB_l/dr block (`idxb_max * 3`), descriptor path only.
+    dblist_scratch: Vec<f64>,
     /// Per-stage kernel profile; `None` (the default) means profiling is
     /// off and `compute_into` takes no timestamps at all.
     prof: Option<KernelProfile>,
@@ -126,6 +129,7 @@ impl AdjointEngine {
             blist: vec![0.0; ib],
             yscratch_r: vec![0.0; iu],
             yscratch_i: vec![0.0; iu],
+            dblist_scratch: Vec::new(),
             prof: None,
         }
     }
@@ -533,6 +537,98 @@ impl ForceEngine for AdjointEngine {
         Ok(())
     }
 
+    fn compute_descriptors_into(
+        &mut self,
+        input: &TileInput,
+        want_gradients: bool,
+        out: &mut DescriptorOutput,
+    ) -> Result<(), EngineError> {
+        input.check()?;
+        input.check_elems(self.elems.nelems())?;
+        let (na, nn) = (input.num_atoms, input.num_nbor);
+        let iu = self.idx.idxu_max;
+        let ib = self.idx.idxb_max;
+        // Per-atom working set: stored ulist rows for one atom's neighbors
+        // (the dU recursion re-reads them — the adjoint trick, vs the
+        // baseline recomputing them), one transient dU block, and the
+        // yscratch gather buffers doubling as this atom's Ulisttot.
+        self.ulist_r.resize(nn * iu, 0.0);
+        self.ulist_i.resize(nn * iu, 0.0);
+        if want_gradients {
+            self.dulist_r.resize(iu * 3, 0.0);
+            self.dulist_i.resize(iu * 3, 0.0);
+            self.dblist_scratch.resize(ib * 3, 0.0);
+        }
+        out.reset(na, nn, ib, want_gradients);
+        let p = self.params;
+        let idx = self.idx.clone();
+        for atom in 0..na {
+            // compute_U: kernel-identical to the baseline accumulation
+            // (per-slot sums add neighbors in the same order), so B_k
+            // agrees with the baseline engine bitwise.
+            init_utot(&idx, &p, &mut self.yscratch_r, &mut self.yscratch_i);
+            for nbor in 0..nn {
+                if !input.is_real(atom, nbor) {
+                    continue;
+                }
+                let g = pair_geom(input, atom, nbor, &p, &self.elems);
+                let lo = nbor * iu;
+                compute_ulist_pair(
+                    &g,
+                    &idx,
+                    &mut self.ulist_r[lo..lo + iu],
+                    &mut self.ulist_i[lo..lo + iu],
+                );
+                accumulate_utot(
+                    g.sfac,
+                    &self.ulist_r[lo..lo + iu],
+                    &self.ulist_i[lo..lo + iu],
+                    &mut self.yscratch_r,
+                    &mut self.yscratch_i,
+                );
+            }
+            compute_zlist(
+                &idx, &self.yscratch_r, &self.yscratch_i, &mut self.z_r, &mut self.z_i,
+            );
+            compute_blist(
+                &idx, &self.yscratch_r, &self.yscratch_i, &self.z_r, &self.z_i,
+                &mut self.blist,
+            );
+            out.blist[atom * ib..(atom + 1) * ib].copy_from_slice(&self.blist);
+            if !want_gradients {
+                continue;
+            }
+            // compute_dU / compute_dB against this atom's resident Z-list;
+            // masked (padding) pair rows keep their exact zeros.
+            for nbor in 0..nn {
+                if !input.is_real(atom, nbor) {
+                    continue;
+                }
+                let g = pair_geom(input, atom, nbor, &p, &self.elems);
+                let lo = nbor * iu;
+                compute_dulist_pair(
+                    &g,
+                    &idx,
+                    &self.ulist_r[lo..lo + iu],
+                    &self.ulist_i[lo..lo + iu],
+                    &mut self.dulist_r[..iu * 3],
+                    &mut self.dulist_i[..iu * 3],
+                );
+                dblist_pair_from_duz(
+                    &idx,
+                    &self.dulist_r[..iu * 3],
+                    &self.dulist_i[..iu * 3],
+                    &self.z_r,
+                    &self.z_i,
+                    &mut self.dblist_scratch,
+                );
+                let o = (atom * nn + nbor) * ib * 3;
+                out.dblist[o..o + ib * 3].copy_from_slice(&self.dblist_scratch);
+            }
+        }
+        Ok(())
+    }
+
     fn set_profiling(&mut self, on: bool) {
         self.prof = on.then(KernelProfile::new);
     }
@@ -650,6 +746,33 @@ mod tests {
                     (a - b).abs() < 1e-9 * (1.0 + a.abs()),
                     "{cfg:?} dedr[{i}]: {a} vs {b}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn descriptors_match_baseline_bitwise_for_every_config() {
+        let p = SnapParams::with_twojmax(4);
+        let idx = Arc::new(SnapIndex::new(4));
+        let mut rng = XorShift::new(31);
+        let beta: Vec<f64> = (0..idx.idxb_max).map(|_| rng.normal()).collect();
+        let (rij, mask) = random_tile(&mut rng, 3, 6, &p);
+        let inp = TileInput { num_atoms: 3, num_nbor: 6, rij: &rij, mask: &mask, elems: None };
+        let mut base =
+            BaselineEngine::new(p, idx.clone(), beta.clone(), Staging::Monolithic);
+        let mut want = DescriptorOutput::default();
+        base.compute_descriptors_into(&inp, true, &mut want).unwrap();
+        for cfg in all_configs() {
+            let mut eng =
+                AdjointEngine::new(p, idx.clone(), beta.clone(), cfg, format!("{cfg:?}"));
+            let mut got = DescriptorOutput::default();
+            eng.compute_descriptors_into(&inp, true, &mut got).unwrap();
+            assert_eq!(got.num_bispectrum, idx.idxb_max);
+            for (i, (a, b)) in want.blist.iter().zip(got.blist.iter()).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{cfg:?} blist[{i}]: {a} vs {b}");
+            }
+            for (i, (a, b)) in want.dblist.iter().zip(got.dblist.iter()).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{cfg:?} dblist[{i}]: {a} vs {b}");
             }
         }
     }

@@ -111,33 +111,18 @@ impl BaselineEngine {
 
     /// compute_dB for one pair: dB_l[k] for all l, via the per-l adjoint
     /// rows (eq. 6 regrouped); cost O(J^2) per (l, level) = the paper's
-    /// O(J^5) per neighbor.
+    /// O(J^5) per neighbor.  Delegates to the one shared dbplan walk
+    /// ([`super::descriptors::dblist_pair_from_duz`]) so the force path and
+    /// the descriptor path contract identically, bit for bit.
     fn compute_dblist_pair(&mut self) {
-        let idx = &self.idx;
-        self.dblist.fill(0.0);
-        for l in 0..idx.idxb_max {
-            let lo = idx.dbplan_offsets[l] as usize;
-            let hi = idx.dbplan_offsets[l + 1] as usize;
-            let mut acc = [0.0f64; 3];
-            for row in lo..hi {
-                let jju = idx.dbplan_jju[row] as usize;
-                let w = idx.dedr_w[jju];
-                if w == 0.0 {
-                    continue;
-                }
-                let jjz = idx.dbplan_jjz[row] as usize;
-                let fw = idx.dbplan_fac[row] * w;
-                let (zr, zi) = (self.z_r[jjz], self.z_i[jjz]);
-                for k in 0..3 {
-                    // Re(dU * conj(fac*Z))
-                    acc[k] += fw
-                        * (self.du_r[jju * 3 + k] * zr + self.du_i[jju * 3 + k] * zi);
-                }
-            }
-            for k in 0..3 {
-                self.dblist[l * 3 + k] = 2.0 * acc[k];
-            }
-        }
+        super::descriptors::dblist_pair_from_duz(
+            &self.idx,
+            &self.du_r,
+            &self.du_i,
+            &self.z_r,
+            &self.z_i,
+            &mut self.dblist,
+        );
     }
 }
 
@@ -226,6 +211,63 @@ impl ForceEngine for BaselineEngine {
         }
         if let Some(p) = self.prof.as_mut() {
             p.dispatches += 1;
+        }
+        Ok(())
+    }
+
+    fn compute_descriptors_into(
+        &mut self,
+        input: &TileInput,
+        want_gradients: bool,
+        out: &mut super::descriptors::DescriptorOutput,
+    ) -> Result<(), EngineError> {
+        input.check()?;
+        input.check_elems(self.elems.nelems())?;
+        let (na, nn) = (input.num_atoms, input.num_nbor);
+        let ib = self.idx.idxb_max;
+        out.reset(na, nn, ib, want_gradients);
+        // The same Listing-1 pipeline as compute_into, stopping at the
+        // materialized blist/dblist instead of contracting against beta —
+        // so `beta · dblist_row` reproduces the force path's dedr exactly
+        // (same contraction order, asserted by tests/descriptors.rs).
+        for atom in 0..na {
+            let p = self.params;
+            init_utot(&self.idx, &p, &mut self.ut_r, &mut self.ut_i);
+            for nbor in 0..nn {
+                if !input.is_real(atom, nbor) {
+                    continue;
+                }
+                let g = pair_geom(input, atom, nbor, &p, &self.elems);
+                compute_ulist_pair(&g, &self.idx, &mut self.u_r, &mut self.u_i);
+                accumulate_utot(
+                    g.sfac, &self.u_r, &self.u_i, &mut self.ut_r, &mut self.ut_i,
+                );
+            }
+            compute_zlist(
+                &self.idx, &self.ut_r, &self.ut_i, &mut self.z_r, &mut self.z_i,
+            );
+            compute_blist(
+                &self.idx, &self.ut_r, &self.ut_i, &self.z_r, &self.z_i,
+                &mut self.blist,
+            );
+            out.blist[atom * ib..(atom + 1) * ib].copy_from_slice(&self.blist);
+            if !want_gradients {
+                continue;
+            }
+            for nbor in 0..nn {
+                if !input.is_real(atom, nbor) {
+                    continue; // padding rows keep their exact zeros
+                }
+                let g = pair_geom(input, atom, nbor, &p, &self.elems);
+                compute_ulist_pair(&g, &self.idx, &mut self.u_r, &mut self.u_i);
+                compute_dulist_pair(
+                    &g, &self.idx, &self.u_r, &self.u_i, &mut self.du_r,
+                    &mut self.du_i,
+                );
+                self.compute_dblist_pair();
+                let o = (atom * nn + nbor) * ib * 3;
+                out.dblist[o..o + ib * 3].copy_from_slice(&self.dblist);
+            }
         }
         Ok(())
     }
@@ -393,6 +435,77 @@ mod tests {
         });
         for k in 0..3 {
             assert_eq!(out.dedr[3 * 3 + k], 0.0);
+        }
+    }
+
+    #[test]
+    fn pair_staged_footprint_asserts_exact_dblist_row() {
+        // the bounds check behind descriptor serving: the per-pair dblist
+        // block the paper's PairStaged variant materializes is exactly the
+        // gradient block a descriptor dispatch returns, byte for byte
+        let p = SnapParams::with_twojmax(4);
+        let idx = Arc::new(SnapIndex::new(4));
+        let ib = idx.idxb_max as u64;
+        let eng =
+            BaselineEngine::new(p, idx.clone(), vec![0.0; idx.idxb_max], Staging::PairStaged);
+        let (a, n) = (17u64, 9u64);
+        let fp = eng.footprint(a as usize, n as usize);
+        let (_, bytes) = fp
+            .arrays
+            .iter()
+            .find(|(name, _)| name == "dblist(a,n,b,3)")
+            .expect("PairStaged must account the per-pair dblist");
+        assert_eq!(*bytes, a * n * ib * 3 * F64);
+        let desc = crate::snap::memory::descriptor_footprint(
+            a as usize,
+            n as usize,
+            idx.idxb_max,
+            true,
+        );
+        let (_, desc_bytes) = desc
+            .arrays
+            .iter()
+            .find(|(name, _)| name == "desc dblist(a,n,b,3)")
+            .expect("descriptor footprint must account the gradient block");
+        assert_eq!(*desc_bytes, *bytes);
+    }
+
+    #[test]
+    fn descriptor_beta_contraction_reproduces_dedr_bitwise() {
+        // the FD identity at its strongest: on the baseline engine the
+        // force path computes dedr[o+k] = sum_l beta[l] * dblist[l*3+k]
+        // from the very same dblist the descriptor path returns, so the
+        // contraction agrees bit for bit
+        let p = SnapParams::with_twojmax(2);
+        let idx = Arc::new(SnapIndex::new(2));
+        let mut rng = XorShift::new(9);
+        let beta: Vec<f64> = (0..idx.idxb_max).map(|_| rng.normal()).collect();
+        let (rij, mask) = small_input(&mut rng, 3, 4, &p);
+        let mut eng = BaselineEngine::new(p, idx.clone(), beta.clone(), Staging::Monolithic);
+        let inp = TileInput { num_atoms: 3, num_nbor: 4, rij: &rij, mask: &mask, elems: None };
+        let forces = eng.compute(&inp);
+        let mut desc = crate::snap::descriptors::DescriptorOutput::default();
+        eng.compute_descriptors_into(&inp, true, &mut desc).unwrap();
+        let ib = idx.idxb_max;
+        for atom in 0..3 {
+            // energy identity too: ei == beta . B (same kernel contraction)
+            let e: f64 = energy_from_blist(desc.blist_row(atom), &beta);
+            assert_eq!(e.to_bits(), forces.ei[atom].to_bits());
+            for nbor in 0..4 {
+                let row = desc.dblist_row(atom, nbor);
+                for k in 0..3 {
+                    let mut s = 0.0;
+                    for l in 0..ib {
+                        s += beta[l] * row[l * 3 + k];
+                    }
+                    let o = (atom * 4 + nbor) * 3 + k;
+                    assert_eq!(
+                        s.to_bits(),
+                        forces.dedr[o].to_bits(),
+                        "pair ({atom},{nbor}) axis {k}"
+                    );
+                }
+            }
         }
     }
 

@@ -32,6 +32,12 @@ pub struct SnapCoeffs {
     /// `beta[e*k .. (e+1)*k]` is element e's block (k per-element
     /// bispectrum components).
     pub beta: Vec<f64>,
+    /// Flattened per-element quadratic coefficients (`quadraticflag 1`),
+    /// empty for linear potentials.  Each element block holds `K(K+1)/2`
+    /// values in the LAMMPS packing — for each k: `c_kk` first, then
+    /// `c_kl` for `l > k` — so
+    /// `E_i = beta·B + sum_k 1/2 c_kk B_k^2 + sum_{k<l} c_kl B_k B_l`.
+    pub quad: Vec<f64>,
 }
 
 impl SnapCoeffs {
@@ -48,6 +54,73 @@ impl SnapCoeffs {
     pub fn beta_block(&self, e: usize) -> &[f64] {
         let k = self.ncoeff_per_elem();
         &self.beta[e * k..(e + 1) * k]
+    }
+
+    /// Whether the potential carries a quadratic term (`quadraticflag 1`).
+    pub fn quadratic(&self) -> bool {
+        !self.quad.is_empty()
+    }
+
+    /// Element e's packed quadratic block (`K(K+1)/2` values); empty slice
+    /// for linear potentials.
+    pub fn quad_block(&self, e: usize) -> &[f64] {
+        if self.quad.is_empty() {
+            return &[];
+        }
+        let k = self.ncoeff_per_elem();
+        let q = k * (k + 1) / 2;
+        &self.quad[e * q..(e + 1) * q]
+    }
+
+    /// Per-atom SNAP energy of element `e` given its bispectrum row:
+    /// `beta·B` for linear potentials, plus the packed quadratic form
+    /// `sum_k 1/2 c_kk B_k^2 + sum_{k<l} c_kl B_k B_l` under
+    /// `quadraticflag 1`.  (The constant shift `coeff0[e]` is *not*
+    /// included, matching the engines' `energy_from_blist` convention.)
+    pub fn atom_energy(&self, e: usize, blist: &[f64]) -> f64 {
+        let beta = self.beta_block(e);
+        assert_eq!(blist.len(), beta.len(), "blist row length != ncoeff_per_elem");
+        let mut energy: f64 = beta.iter().zip(blist).map(|(c, b)| c * b).sum();
+        let quad = self.quad_block(e);
+        if !quad.is_empty() {
+            let mut q = 0;
+            for k in 0..blist.len() {
+                energy += 0.5 * quad[q] * blist[k] * blist[k];
+                q += 1;
+                for l in (k + 1)..blist.len() {
+                    energy += quad[q] * blist[k] * blist[l];
+                    q += 1;
+                }
+            }
+        }
+        energy
+    }
+
+    /// Effective linear coefficients at a given bispectrum row:
+    /// `beta_eff_k = dE/dB_k = beta_k + c_kk B_k + sum_{l != k} c_{kl} B_l`
+    /// (with `c_{kl}` read from the packed upper triangle).  For linear
+    /// potentials this is just the beta block.  Forces of a quadratic SNAP
+    /// potential are the linear force contraction evaluated at `beta_eff`,
+    /// which is how descriptor extraction feeds `quadraticflag 1` energies
+    /// and forces without any new kernel.
+    pub fn beta_effective(&self, e: usize, blist: &[f64], out: &mut Vec<f64>) {
+        let beta = self.beta_block(e);
+        assert_eq!(blist.len(), beta.len(), "blist row length != ncoeff_per_elem");
+        out.clear();
+        out.extend_from_slice(beta);
+        let quad = self.quad_block(e);
+        if !quad.is_empty() {
+            let mut q = 0;
+            for k in 0..blist.len() {
+                out[k] += quad[q] * blist[k];
+                q += 1;
+                for l in (k + 1)..blist.len() {
+                    out[k] += quad[q] * blist[l];
+                    out[l] += quad[q] * blist[k];
+                    q += 1;
+                }
+            }
+        }
     }
 
     /// Deterministic synthetic single-element coefficients for a given
@@ -114,6 +187,7 @@ impl SnapCoeffs {
             elements: ElementTable { symbols, radii, weights },
             coeff0: vec![0.0; nelems],
             beta,
+            quad: Vec::new(),
         }
     }
 
@@ -129,6 +203,11 @@ impl SnapCoeffs {
     /// ```
     /// Strict: every element block must carry exactly `ncoeff` values, and
     /// trailing garbage after the last block is an error.
+    ///
+    /// Under `params.quadraticflag` each element block carries
+    /// `ncoeff = 1 + K + K(K+1)/2` values (constant shift, K linear betas,
+    /// packed upper-triangle quadratic coefficients); the header's `ncoeff`
+    /// must hit that count exactly for an integer K.
     pub fn parse_snapcoeff(text: &str, params: SnapParams) -> Result<Self> {
         let lines: Vec<&str> = text
             .lines()
@@ -151,12 +230,31 @@ impl SnapCoeffs {
         if nelem == 0 || ncoeff == 0 {
             bail!("header `{header}`: nelem and ncoeff must be >= 1");
         }
+        // linear components per block: ncoeff-1 for linear files; under
+        // quadraticflag the integer K solving ncoeff-1 == K + K(K+1)/2
+        let nlin = if params.quadraticflag {
+            let n = ncoeff - 1;
+            let mut k = 0usize;
+            while k + k * (k + 1) / 2 < n {
+                k += 1;
+            }
+            if k + k * (k + 1) / 2 != n {
+                bail!(
+                    "quadraticflag 1: header ncoeff = {ncoeff} is not \
+                     1 + K + K(K+1)/2 for any integer K"
+                );
+            }
+            k
+        } else {
+            ncoeff - 1
+        };
 
         let mut symbols = Vec::with_capacity(nelem);
         let mut radii = Vec::with_capacity(nelem);
         let mut weights = Vec::with_capacity(nelem);
         let mut coeff0 = Vec::with_capacity(nelem);
-        let mut beta = Vec::with_capacity(nelem * (ncoeff - 1));
+        let mut beta = Vec::with_capacity(nelem * nlin);
+        let mut quad = Vec::with_capacity(nelem * (ncoeff - 1 - nlin));
         for e in 0..nelem {
             let elem_line = cursor
                 .next()
@@ -209,13 +307,14 @@ impl SnapCoeffs {
             radii.push(radius);
             weights.push(weight);
             coeff0.push(vals[0]);
-            beta.extend_from_slice(&vals[1..]);
+            beta.extend_from_slice(&vals[1..1 + nlin]);
+            quad.extend_from_slice(&vals[1 + nlin..]);
         }
         if let Some(extra) = cursor.next() {
             bail!("trailing garbage after {nelem} element block(s): `{extra}`");
         }
         let elements = ElementTable::new(symbols, radii, weights)?;
-        Ok(Self { params, elements, coeff0, beta })
+        Ok(Self { params, elements, coeff0, beta, quad })
     }
 
     /// Parse the LAMMPS `.snapparam` format (key value lines).
@@ -249,15 +348,22 @@ impl SnapCoeffs {
                 "rcutfac" => p.rcutfac = val.parse()?,
                 "rfac0" => p.rfac0 = val.parse()?,
                 "rmin0" => p.rmin0 = val.parse()?,
-                "wselfallflag" | "chemflag" | "bnormflag" | "switchflag"
-                | "bzeroflag" | "quadraticflag" => {
+                "quadraticflag" => {
+                    let v: i64 = val.parse()?;
+                    match v {
+                        0 => p.quadraticflag = false,
+                        1 => p.quadraticflag = true,
+                        _ => bail!("unsupported quadraticflag = {val} (must be 0 or 1)"),
+                    }
+                }
+                "wselfallflag" | "chemflag" | "bnormflag" | "switchflag" | "bzeroflag" => {
                     // recognized LAMMPS keys whose non-default values are
                     // out of scope; reject non-defaults loudly
                     let v: f64 = val.parse()?;
                     let default_ok = matches!(
                         (key, v as i64),
-                        ("switchflag", 1) | ("bzeroflag", 0) | ("quadraticflag", 0)
-                            | ("chemflag", 0) | ("bnormflag", 0) | ("wselfallflag", 0)
+                        ("switchflag", 1) | ("bzeroflag", 0) | ("chemflag", 0)
+                            | ("bnormflag", 0) | ("wselfallflag", 0)
                     );
                     if !default_ok {
                         bail!("unsupported {key} = {val} (only the LAMMPS defaults are supported)");
@@ -276,9 +382,10 @@ impl SnapCoeffs {
     /// per element.
     pub fn to_snapcoeff(&self) -> String {
         let k = self.ncoeff_per_elem();
+        let nq = if self.quadratic() { k * (k + 1) / 2 } else { 0 };
         let mut s = String::new();
         s.push_str("# SNAP coefficients (synthetic reproduction potential)\n");
-        s.push_str(&format!("{} {}\n", self.nelems(), k + 1));
+        s.push_str(&format!("{} {}\n", self.nelems(), k + nq + 1));
         for e in 0..self.nelems() {
             s.push_str(&format!(
                 "{} {} {}\n",
@@ -287,6 +394,9 @@ impl SnapCoeffs {
             s.push_str(&format!("{:.17e}\n", self.coeff0[e]));
             for b in self.beta_block(e) {
                 s.push_str(&format!("{b:.17e}\n"));
+            }
+            for q in self.quad_block(e) {
+                s.push_str(&format!("{q:.17e}\n"));
             }
         }
         s
@@ -418,7 +528,84 @@ mod tests {
     #[test]
     fn snapparam_rejects_unsupported_flags() {
         assert!(SnapCoeffs::parse_snapparam("chemflag 1\n").is_err());
-        assert!(SnapCoeffs::parse_snapparam("quadraticflag 1\n").is_err());
+        assert!(SnapCoeffs::parse_snapparam("bzeroflag 1\n").is_err());
+        assert!(SnapCoeffs::parse_snapparam("quadraticflag 2\n").is_err());
+    }
+
+    #[test]
+    fn snapparam_accepts_quadraticflag() {
+        let p = SnapCoeffs::parse_snapparam("twojmax 2\nquadraticflag 1\n").unwrap();
+        assert!(p.quadraticflag);
+        let p = SnapCoeffs::parse_snapparam("quadraticflag 0\n").unwrap();
+        assert!(!p.quadraticflag);
+    }
+
+    #[test]
+    fn quadratic_snapcoeff_splits_linear_and_packed_blocks() {
+        // K = 2 linear components => ncoeff = 1 + 2 + 3 = 6 per block
+        let text = "1 6\nW 0.5 1.0\n7\n0.1\n0.2\n1.0\n0.5\n0.25\n";
+        let mut params = SnapParams::with_twojmax(2);
+        params.quadraticflag = true;
+        let c = SnapCoeffs::parse_snapcoeff(text, params).unwrap();
+        assert!(c.quadratic());
+        assert_eq!(c.coeff0, vec![7.0]);
+        assert_eq!(c.beta, vec![0.1, 0.2]);
+        assert_eq!(c.quad, vec![1.0, 0.5, 0.25]);
+        assert_eq!(c.ncoeff_per_elem(), 2);
+        assert_eq!(c.quad_block(0), &[1.0, 0.5, 0.25]);
+        // round-trips through to_snapcoeff
+        let back = SnapCoeffs::parse_snapcoeff(&c.to_snapcoeff(), params).unwrap();
+        assert_eq!(back.beta, c.beta);
+        assert_eq!(back.quad, c.quad);
+        // a count that is not 1 + K + K(K+1)/2 for any K fails loudly
+        let bad = "1 5\nW 0.5 1.0\n7\n0.1\n0.2\n1.0\n0.5\n";
+        let err = format!("{:#}", SnapCoeffs::parse_snapcoeff(bad, params).unwrap_err());
+        assert!(err.contains("K(K+1)/2"), "{err}");
+    }
+
+    #[test]
+    fn quadratic_energy_matches_hand_computation_at_twojmax_2() {
+        // hand-packed K = 2 potential: beta = (0.1, 0.2),
+        // A = [[1.0, 0.5], [0.5, 0.25]] packed as (c00, c01, c11)
+        let text = "1 6\nW 0.5 1.0\n0\n0.1\n0.2\n1.0\n0.5\n0.25\n";
+        let mut params = SnapParams::with_twojmax(2);
+        params.quadraticflag = true;
+        let c = SnapCoeffs::parse_snapcoeff(text, params).unwrap();
+        let b = [2.0, 3.0];
+        // E = 0.1*2 + 0.2*3 + 1/2*1.0*4 + 0.5*2*3 + 1/2*0.25*9
+        //   = 0.2 + 0.6 + 2.0 + 3.0 + 1.125 = 6.925
+        assert!((c.atom_energy(0, &b) - 6.925).abs() < 1e-14);
+        // beta_eff = dE/dB: (0.1 + 1.0*2 + 0.5*3, 0.2 + 0.25*3 + 0.5*2)
+        let mut eff = Vec::new();
+        c.beta_effective(0, &b, &mut eff);
+        assert!((eff[0] - 3.6).abs() < 1e-14);
+        assert!((eff[1] - 1.95).abs() < 1e-14);
+        // a linear potential's beta_effective is its beta block, bitwise
+        let lin = SnapCoeffs::synthetic(2, 2, 3);
+        assert!((lin.atom_energy(0, &b) - (lin.beta[0] * 2.0 + lin.beta[1] * 3.0)).abs() < 1e-15);
+        lin.beta_effective(0, &b, &mut eff);
+        assert_eq!(eff, lin.beta);
+    }
+
+    #[test]
+    fn beta_effective_is_the_gradient_of_atom_energy() {
+        // K = 3 quadratic block, checked by central finite differences
+        let mut params = SnapParams::with_twojmax(2);
+        params.quadraticflag = true;
+        let text = "1 10\nW 0.5 1.0\n0\n0.3\n-0.1\n0.07\n\
+                    0.9\n-0.4\n0.2\n0.6\n-0.3\n0.5\n";
+        let c = SnapCoeffs::parse_snapcoeff(text, params).unwrap();
+        let b = [1.3, -0.7, 2.1];
+        let mut eff = Vec::new();
+        c.beta_effective(0, &b, &mut eff);
+        let h = 1e-6;
+        for k in 0..3 {
+            let (mut bp, mut bm) = (b, b);
+            bp[k] += h;
+            bm[k] -= h;
+            let fd = (c.atom_energy(0, &bp) - c.atom_energy(0, &bm)) / (2.0 * h);
+            assert!((fd - eff[k]).abs() < 1e-8, "k={k}: fd={fd} vs {}", eff[k]);
+        }
     }
 
     #[test]

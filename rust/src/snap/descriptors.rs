@@ -1,0 +1,206 @@
+//! Descriptor extraction: per-atom bispectrum components B_k and their
+//! per-pair gradients dB_k/dr as a first-class serving payload.
+//!
+//! Fitting frameworks (FitSNAP, XPOT) drive SNAP solely to *extract*
+//! descriptors as training features — a second production workload the
+//! force path already pays for internally: the baseline engine
+//! materializes `blist`/`dblist` on every dispatch, and the adjoint
+//! engines materialize `blist` on their energy stage.  This module is the
+//! shared vocabulary of that workload:
+//!
+//! * [`DescriptorOutput`] — the caller-owned, capacity-reusing output
+//!   buffer [`ForceEngine::compute_descriptors_into`] fills (the
+//!   descriptor twin of [`TileOutput`](super::engine::TileOutput));
+//! * [`dblist_pair_from_duz`] — the dbplan walk that contracts one pair's
+//!   stored dU against the atom's Z-list into dB_l/dr.  It is the
+//!   *identical* code the baseline force path runs (extracted from
+//!   `BaselineEngine::compute_dblist_pair`), so baseline and adjoint
+//!   descriptor gradients agree **bitwise** — and `beta · dB_l/dr`
+//!   reproduces the force path's `dedr` exactly on the baseline engine
+//!   (same contraction, same FP order; asserted by
+//!   `rust/tests/descriptors.rs`).
+//!
+//! Engines that algebraically eliminate B_k (the fused Euler-identity
+//! rungs and the PJRT artifacts) cannot serve this payload; they report
+//! a structured `Backend` error via the trait default instead.
+
+use super::indices::SnapIndex;
+use super::memory::{descriptor_footprint, MemoryFootprint};
+use crate::util::zero_resize;
+
+/// Per-tile descriptor result: per-atom B_k rows and (optionally) the
+/// per-pair gradient block dB_k/dr.
+///
+/// Layouts (row-major, the tile convention everywhere else in the crate):
+///
+/// * `blist[atom * num_bispectrum + l]` — B_l of each atom;
+/// * `dblist[((atom * num_nbor + nbor) * num_bispectrum + l) * 3 + k]` —
+///   dB_l/dr_k of each (atom, neighbor) pair; empty unless gradients were
+///   requested.  Masked (padding) pairs carry exact zeros.
+///
+/// Designed for reuse exactly like `TileOutput`: the engine
+/// [`reset`](Self::reset)s the buffers to the tile's shape, reusing
+/// capacity, so steady-state descriptor serving performs zero output
+/// allocations after a warmup dispatch per shape.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DescriptorOutput {
+    pub num_atoms: usize,
+    pub num_nbor: usize,
+    /// Number of bispectrum components K (`SnapIndex::idxb_max`).
+    pub num_bispectrum: usize,
+    /// Per-atom bispectrum components; len `num_atoms * num_bispectrum`.
+    pub blist: Vec<f64>,
+    /// Per-pair gradients; len `num_atoms * num_nbor * num_bispectrum * 3`
+    /// when gradients were requested, 0 otherwise.
+    pub dblist: Vec<f64>,
+}
+
+impl DescriptorOutput {
+    /// Shape the buffers for an `num_atoms x num_nbor` tile with
+    /// `num_bispectrum` components, zero-filled, reusing capacity.  With
+    /// `gradients == false` the `dblist` buffer is emptied (capacity kept).
+    pub fn reset(
+        &mut self,
+        num_atoms: usize,
+        num_nbor: usize,
+        num_bispectrum: usize,
+        gradients: bool,
+    ) {
+        self.num_atoms = num_atoms;
+        self.num_nbor = num_nbor;
+        self.num_bispectrum = num_bispectrum;
+        zero_resize(&mut self.blist, num_atoms * num_bispectrum);
+        let grad_len = if gradients { num_atoms * num_nbor * num_bispectrum * 3 } else { 0 };
+        zero_resize(&mut self.dblist, grad_len);
+    }
+
+    /// Whether this output carries the gradient block.
+    pub fn has_gradients(&self) -> bool {
+        !self.dblist.is_empty()
+    }
+
+    /// One atom's B_k row.
+    pub fn blist_row(&self, atom: usize) -> &[f64] {
+        let nb = self.num_bispectrum;
+        &self.blist[atom * nb..(atom + 1) * nb]
+    }
+
+    /// One pair's dB row (`num_bispectrum * 3` values, `[l*3 + k]`).
+    /// Panics if gradients were not requested.
+    pub fn dblist_row(&self, atom: usize, nbor: usize) -> &[f64] {
+        let stride = self.num_bispectrum * 3;
+        let o = (atom * self.num_nbor + nbor) * stride;
+        &self.dblist[o..o + stride]
+    }
+
+    /// Analytic memory footprint of the descriptor buffers for a shape —
+    /// the serving-side row of `snap/memory.rs` accounting.
+    pub fn footprint(
+        num_atoms: usize,
+        num_nbor: usize,
+        num_bispectrum: usize,
+        gradients: bool,
+    ) -> MemoryFootprint {
+        descriptor_footprint(num_atoms, num_nbor, num_bispectrum, gradients)
+    }
+}
+
+/// Contract one pair's stored dU against the atom's resident Z-list into
+/// dB_l/dr for every bispectrum component l — the dbplan walk.
+///
+/// `du_r`/`du_i` are `idxu_max * 3` (`[jju*3 + k]`), `z_r`/`z_i` are
+/// `idxz_max`, `dblist` is `idxb_max * 3` (`[l*3 + k]`) and is fully
+/// overwritten.
+///
+/// This is the one shared implementation of the baseline force path's
+/// `compute_dB` (eq. 6 regrouped per l): `BaselineEngine` delegates here on
+/// its force *and* descriptor paths, and `AdjointEngine`'s descriptor path
+/// calls it with its stored per-pair dU — which is how baseline-vs-adjoint
+/// descriptor gradients stay bitwise-identical (same walk, same FP order,
+/// fed by per-slot U sums that accumulate neighbors in the same order).
+pub fn dblist_pair_from_duz(
+    idx: &SnapIndex,
+    du_r: &[f64],
+    du_i: &[f64],
+    z_r: &[f64],
+    z_i: &[f64],
+    dblist: &mut [f64],
+) {
+    dblist.fill(0.0);
+    for l in 0..idx.idxb_max {
+        let lo = idx.dbplan_offsets[l] as usize;
+        let hi = idx.dbplan_offsets[l + 1] as usize;
+        let mut acc = [0.0f64; 3];
+        for row in lo..hi {
+            let jju = idx.dbplan_jju[row] as usize;
+            let w = idx.dedr_w[jju];
+            if w == 0.0 {
+                continue;
+            }
+            let jjz = idx.dbplan_jjz[row] as usize;
+            let fw = idx.dbplan_fac[row] * w;
+            let (zr, zi) = (z_r[jjz], z_i[jjz]);
+            for k in 0..3 {
+                // Re(dU * conj(fac*Z))
+                acc[k] += fw * (du_r[jju * 3 + k] * zr + du_i[jju * 3 + k] * zi);
+            }
+        }
+        for k in 0..3 {
+            dblist[l * 3 + k] = 2.0 * acc[k];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reset_shapes_and_reuses_capacity() {
+        let mut out = DescriptorOutput::default();
+        out.reset(3, 4, 5, true);
+        assert_eq!(out.blist, vec![0.0; 15]);
+        assert_eq!(out.dblist, vec![0.0; 3 * 4 * 5 * 3]);
+        assert!(out.has_gradients());
+        out.blist.iter_mut().for_each(|x| *x = 7.0);
+        out.dblist.iter_mut().for_each(|x| *x = 7.0);
+        let (cap_b, cap_db) = (out.blist.capacity(), out.dblist.capacity());
+        // shrink without gradients: same buffers, re-zeroed, dblist emptied
+        out.reset(2, 4, 5, false);
+        assert_eq!(out.blist, vec![0.0; 10]);
+        assert!(out.dblist.is_empty());
+        assert!(!out.has_gradients());
+        assert_eq!(out.blist.capacity(), cap_b);
+        assert_eq!(out.dblist.capacity(), cap_db);
+        // growing back re-zeros the gradient block
+        out.reset(3, 4, 5, true);
+        assert_eq!(out.dblist, vec![0.0; 3 * 4 * 5 * 3]);
+    }
+
+    #[test]
+    fn row_accessors_match_layout() {
+        let mut out = DescriptorOutput::default();
+        out.reset(2, 3, 2, true);
+        // blist[atom*nb + l]
+        out.blist.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(out.blist_row(0), &[1.0, 2.0]);
+        assert_eq!(out.blist_row(1), &[3.0, 4.0]);
+        // dblist[((atom*nn + nbor)*nb + l)*3 + k]
+        let stride = 2 * 3;
+        let o = (1 * 3 + 2) * stride;
+        out.dblist[o] = 9.0;
+        out.dblist[o + stride - 1] = 8.0;
+        let row = out.dblist_row(1, 2);
+        assert_eq!(row.len(), stride);
+        assert_eq!(row[0], 9.0);
+        assert_eq!(row[stride - 1], 8.0);
+    }
+
+    #[test]
+    fn footprint_counts_both_buffers() {
+        let with = DescriptorOutput::footprint(10, 8, 14, true);
+        let without = DescriptorOutput::footprint(10, 8, 14, false);
+        assert_eq!(without.total(), 10 * 14 * 8);
+        assert_eq!(with.total(), 10 * 14 * 8 + 10 * 8 * 14 * 3 * 8);
+    }
+}

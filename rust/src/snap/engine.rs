@@ -5,6 +5,7 @@
 //! tile to a native Rust engine or to the PJRT executable interchangeably,
 //! and the test-suite can diff them element-for-element.
 
+use super::descriptors::DescriptorOutput;
 use super::memory::MemoryFootprint;
 use crate::util::zero_resize;
 
@@ -284,6 +285,34 @@ pub trait ForceEngine: Send {
             panic!("engine `{}` failed: {e}", self.name());
         }
         out
+    }
+
+    /// Compute per-atom bispectrum components B_k (and, when
+    /// `want_gradients`, per-pair dB_k/dr) into a caller-owned
+    /// [`DescriptorOutput`] — the descriptor-serving capability behind the
+    /// `{"cmd": "descriptors"}` verb and `repro descriptors`.
+    ///
+    /// Engines that materialize `blist`/`dblist` on their force path
+    /// (baseline, the adjoint ladder) override this and expose those
+    /// buffers; engines that algebraically eliminate B_k (the fused
+    /// Euler-identity rungs, the PJRT artifacts) keep this default, which
+    /// reports the capability gap as a structured [`EngineError::Backend`]
+    /// — never a panic, so a serving worker survives the request.
+    ///
+    /// Contract: same as [`compute_into`](Self::compute_into) — `out` is
+    /// reset to the tile's shape reusing capacity, masked pairs produce
+    /// exact zeros, and scratch stays reusable after an error.
+    fn compute_descriptors_into(
+        &mut self,
+        _input: &TileInput,
+        _want_gradients: bool,
+        _out: &mut DescriptorOutput,
+    ) -> Result<(), EngineError> {
+        Err(EngineError::Backend(format!(
+            "engine `{}` does not materialize bispectrum components \
+             (use a baseline or adjoint engine for descriptor extraction)",
+            self.name()
+        )))
     }
 
     /// Analytic device-memory footprint for a given problem size (used by

@@ -62,6 +62,27 @@ impl fmt::Display for MemoryFootprint {
 /// The paper's benchmark device budget (V100-16GB = 16e9 bytes).
 pub const V100_BUDGET: u64 = 16_000_000_000;
 
+/// Footprint of the descriptor-serving output buffers for one tile shape:
+/// the per-atom B_k table and (when gradients are requested) the per-pair
+/// dB_k/dr block.  This is what a descriptor dispatch adds *on top of* an
+/// engine's own [`ForceEngine::footprint`](crate::snap::engine::ForceEngine)
+/// scratch, so `--footprint`-style reporting stays honest for the fitting
+/// workload too.
+pub fn descriptor_footprint(
+    num_atoms: usize,
+    num_nbor: usize,
+    num_bispectrum: usize,
+    gradients: bool,
+) -> MemoryFootprint {
+    let (a, n, b) = (num_atoms as u64, num_nbor as u64, num_bispectrum as u64);
+    let mut m = MemoryFootprint::new();
+    m.add("desc blist(a,b)", a * b * F64);
+    if gradients {
+        m.add("desc dblist(a,n,b,3)", a * n * b * 3 * F64);
+    }
+    m
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

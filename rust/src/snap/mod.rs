@@ -19,12 +19,16 @@
 //!                  inner engines, stitched bit-identically.
 //! * [`memory`]   — analytic memory-footprint model + device budget gate.
 //! * [`coeff`]    — LAMMPS `.snapcoeff`/`.snapparam` file support.
+//! * [`descriptors`] — bispectrum extraction (B_k, dB_k/dr) for fitting
+//!                  pipelines: the descriptor-serving output buffer and the
+//!                  shared dbplan contraction.
 
 pub mod adjoint;
 pub mod baseline;
 pub mod cg;
 pub mod kernels;
 pub mod coeff;
+pub mod descriptors;
 pub mod engine;
 pub mod fused;
 pub mod indices;
@@ -34,6 +38,7 @@ pub mod sharded;
 pub mod variants;
 pub mod wigner;
 
+pub use descriptors::DescriptorOutput;
 pub use engine::{
     EngineError, EngineFactory, ForceEngine, OwnedTile, OwnedTileElems, TileElems, TileInput,
     TileOutput,

@@ -19,12 +19,24 @@ pub struct SnapParams {
     pub rmin0: f64,
     /// Self-contribution weight on the U diagonal.
     pub wself: f64,
+    /// LAMMPS `quadraticflag`: the energy model adds the packed quadratic
+    /// form `1/2 B·A·B` on top of the linear `beta·B` contraction, and the
+    /// `.snapcoeff` blocks carry `1 + K + K(K+1)/2` values per element
+    /// instead of `1 + K` (see [`crate::snap::coeff::SnapCoeffs::quad`]).
+    pub quadraticflag: bool,
 }
 
 impl Default for SnapParams {
     fn default() -> Self {
         // The 2000-atom tungsten benchmark of the paper.
-        Self { twojmax: 8, rcutfac: 4.73442, rfac0: 0.99363, rmin0: 0.0, wself: 1.0 }
+        Self {
+            twojmax: 8,
+            rcutfac: 4.73442,
+            rfac0: 0.99363,
+            rmin0: 0.0,
+            wself: 1.0,
+            quadraticflag: false,
+        }
     }
 }
 

@@ -14,6 +14,7 @@
 //! the stitched result is **bit-identical** to evaluating the whole tile on
 //! one engine — sharding changes *where* atoms are computed, never *what*.
 
+use super::descriptors::DescriptorOutput;
 use super::engine::{EngineError, EngineFactory, ForceEngine, TileInput, TileOutput};
 use super::memory::MemoryFootprint;
 use crate::util::metrics::{KernelProfile, Stage, StageTimer};
@@ -54,6 +55,9 @@ pub struct ShardedEngine {
     /// results land here and are stitched into the caller's buffer, so a
     /// warmed-up sharded dispatch allocates nothing.
     scratch: Vec<Mutex<TileOutput>>,
+    /// The descriptor twin of `scratch`: per-shard [`DescriptorOutput`]
+    /// buffers for `compute_descriptors_into` dispatches.
+    desc_scratch: Vec<Mutex<DescriptorOutput>>,
     min_atoms_per_shard: usize,
     name: String,
     /// Merged per-stage profile across all shards (plus the wrapper's own
@@ -69,14 +73,17 @@ impl ShardedEngine {
         let shards = shards.max(1);
         let mut engines = Vec::with_capacity(shards);
         let mut scratch = Vec::with_capacity(shards);
+        let mut desc_scratch = Vec::with_capacity(shards);
         for _ in 0..shards {
             engines.push(Mutex::new(factory()?));
             scratch.push(Mutex::new(TileOutput::default()));
+            desc_scratch.push(Mutex::new(DescriptorOutput::default()));
         }
         let inner = lock_shard(&engines[0]).name().to_string();
         Ok(Self {
             engines,
             scratch,
+            desc_scratch,
             min_atoms_per_shard: 1,
             name: format!("sharded{shards}x-{inner}"),
             prof: None,
@@ -210,6 +217,62 @@ impl ForceEngine for ShardedEngine {
         Ok(())
     }
 
+    fn compute_descriptors_into(
+        &mut self,
+        input: &TileInput,
+        want_gradients: bool,
+        out: &mut DescriptorOutput,
+    ) -> Result<(), EngineError> {
+        input.check()?;
+        let (na, nn) = (input.num_atoms, input.num_nbor);
+        let ranges = self.plan(na);
+        if ranges.len() <= 1 {
+            let engine = self.engines[0].get_mut().unwrap_or_else(PoisonError::into_inner);
+            return engine.compute_descriptors_into(input, want_gradients, out);
+        }
+        let engines = &self.engines;
+        let desc_scratch = &self.desc_scratch;
+        let results = parallel_map(ranges.len(), |s| {
+            let (start, count) = ranges[s];
+            let sub = TileInput {
+                num_atoms: count,
+                num_nbor: nn,
+                rij: &input.rij[start * nn * 3..(start + count) * nn * 3],
+                mask: &input.mask[start * nn..(start + count) * nn],
+                elems: input.elems.map(|e| crate::snap::engine::TileElems {
+                    ielems: &e.ielems[start..start + count],
+                    jelems: &e.jelems[start * nn..(start + count) * nn],
+                }),
+            };
+            lock_shard(&engines[s]).compute_descriptors_into(
+                &sub,
+                want_gradients,
+                &mut lock_shard(&desc_scratch[s]),
+            )
+        });
+        for r in results {
+            r?;
+        }
+        // stitch: shards are contiguous atom ranges in plan order, so the
+        // concatenated rows *are* the serial layout — bit-identical, and
+        // `clear` + `extend_from_slice` reuses the caller's capacity
+        out.num_atoms = na;
+        out.num_nbor = nn;
+        out.num_bispectrum = lock_shard(&self.desc_scratch[0]).num_bispectrum;
+        out.blist.clear();
+        out.dblist.clear();
+        for slot in self.desc_scratch.iter().take(ranges.len()) {
+            let part = lock_shard(slot);
+            out.blist.extend_from_slice(&part.blist);
+            out.dblist.extend_from_slice(&part.dblist);
+        }
+        debug_assert_eq!(out.blist.len(), na * out.num_bispectrum);
+        debug_assert!(
+            out.dblist.len() == if want_gradients { na * nn * out.num_bispectrum * 3 } else { 0 }
+        );
+        Ok(())
+    }
+
     fn set_profiling(&mut self, on: bool) {
         self.prof = on.then(KernelProfile::new);
         for slot in &mut self.engines {
@@ -319,6 +382,61 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn sharded_descriptors_are_bit_identical_to_serial() {
+        use crate::snap::baseline::{BaselineEngine, Staging};
+        let params = SnapParams::with_twojmax(2);
+        let idx = Arc::new(SnapIndex::new(2));
+        let mut rng = XorShift::new(41);
+        let beta: Vec<f64> = (0..idx.idxb_max).map(|_| rng.normal()).collect();
+        let factory: EngineFactory = {
+            let idx = idx.clone();
+            let beta = beta.clone();
+            Arc::new(move || {
+                Ok(Box::new(BaselineEngine::new(
+                    params,
+                    idx.clone(),
+                    beta.clone(),
+                    Staging::Monolithic,
+                )) as Box<dyn ForceEngine>)
+            })
+        };
+        let mut serial = factory().unwrap();
+        let mut rng = XorShift::new(6);
+        for (na, nn) in [(13usize, 5usize), (6, 4), (1, 4)] {
+            let (rij, mask) = tile(&mut rng, na, nn);
+            let inp =
+                TileInput { num_atoms: na, num_nbor: nn, rij: &rij, mask: &mask, elems: None };
+            for gradients in [false, true] {
+                let mut want = DescriptorOutput::default();
+                serial.compute_descriptors_into(&inp, gradients, &mut want).unwrap();
+                for shards in [2usize, 3, 7] {
+                    let mut eng = ShardedEngine::new(&factory, shards).unwrap();
+                    let mut got = DescriptorOutput::default();
+                    eng.compute_descriptors_into(&inp, gradients, &mut got).unwrap();
+                    assert_eq!(want, got, "na={na} shards={shards} grad={gradients}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_fused_descriptors_report_backend_error() {
+        // the fused rungs never materialize B_k; the structured error must
+        // surface through the sharding wrapper, not a panic or a hang
+        let factory = fused_factory(2, 57);
+        let mut eng = ShardedEngine::new(&factory, 2).unwrap();
+        let mut rng = XorShift::new(8);
+        let (rij, mask) = tile(&mut rng, 8, 4);
+        let inp = TileInput { num_atoms: 8, num_nbor: 4, rij: &rij, mask: &mask, elems: None };
+        let mut out = DescriptorOutput::default();
+        let err = eng.compute_descriptors_into(&inp, false, &mut out).unwrap_err();
+        assert!(matches!(err, EngineError::Backend(_)), "{err:?}");
+        // the engine itself stays healthy for force work
+        let forces = eng.compute(&inp);
+        assert!(forces.ei.iter().all(|x| x.is_finite()));
     }
 
     #[test]

@@ -371,6 +371,20 @@ impl ForceEngine for PlannedEngine {
         self.engines[bucket.index()].compute_into(input, out)
     }
 
+    fn compute_descriptors_into(
+        &mut self,
+        input: &TileInput,
+        want_gradients: bool,
+        out: &mut crate::snap::descriptors::DescriptorOutput,
+    ) -> Result<(), EngineError> {
+        // same bucket routing as the force path: whichever engine the plan
+        // picked for this shape serves (or structurally refuses — fused
+        // buckets never materialize B_k) the descriptor dispatch too
+        let bucket = ShapeBucket::of(input.num_atoms);
+        self.counters.note_dispatch(bucket);
+        self.engines[bucket.index()].compute_descriptors_into(input, want_gradients, out)
+    }
+
     fn set_profiling(&mut self, on: bool) {
         for e in &mut self.engines {
             e.set_profiling(on);

@@ -1,0 +1,566 @@
+//! Descriptor-serving conformance suite: the bispectrum-extraction path
+//! (`compute_descriptors_into`) must produce fitting-grade B_k / dB_k/dr.
+//!
+//! What "fitting-grade" pins down:
+//! * dB_k/dr is the true derivative of B_k (central finite differences);
+//! * the beta contraction of dB_k/dr *is* the force path's `dedr` — bitwise
+//!   on the baseline engine, 1e-8 against the adjoint force formulation;
+//! * baseline and adjoint descriptors agree bitwise (two formulations, one
+//!   answer), serial and sharded agree bitwise, and typed multi-element
+//!   tiles flow through;
+//! * B_k is rotation-invariant and permutation-consistent;
+//! * engines that never materialize B_k (fused / Euler-identity) refuse
+//!   with a structured `Backend` error and the serving pipeline survives;
+//! * the JSON verb and the binary 0x04/0x84 frames return bit-identical
+//!   payloads, and quadratic-SNAP energies/forces built from descriptors
+//!   match finite differences.
+
+use repro::config::EngineSpec;
+use repro::snap::coeff::SnapCoeffs;
+use repro::snap::engine::{EngineError, ForceEngine, TileElems, TileInput};
+use repro::snap::sharded::ShardedEngine;
+use repro::snap::{DescriptorOutput, EngineFactory, SnapIndex};
+use repro::util::json::Json;
+use repro::util::XorShift;
+
+/// Deterministic padded tile: `na x nn` slots, ~1/4 masked out.
+struct Tile {
+    na: usize,
+    nn: usize,
+    rij: Vec<f64>,
+    mask: Vec<f64>,
+}
+
+impl Tile {
+    fn random(seed: u64, na: usize, nn: usize) -> Tile {
+        let mut rng = XorShift::new(seed);
+        let mut rij = Vec::new();
+        let mut mask = Vec::new();
+        for _ in 0..na * nn {
+            loop {
+                let v = [
+                    rng.uniform(-2.4, 2.4),
+                    rng.uniform(-2.4, 2.4),
+                    rng.uniform(-2.4, 2.4),
+                ];
+                if (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]).sqrt() > 0.8 {
+                    rij.extend_from_slice(&v);
+                    break;
+                }
+            }
+            mask.push(if rng.next_f64() > 0.25 { 1.0 } else { 0.0 });
+        }
+        Tile { na, nn, rij, mask }
+    }
+
+    fn input(&self) -> TileInput<'_> {
+        TileInput {
+            num_atoms: self.na,
+            num_nbor: self.nn,
+            rij: &self.rij,
+            mask: &self.mask,
+            elems: None,
+        }
+    }
+}
+
+fn factory(engine: &str, twojmax: usize) -> EngineFactory {
+    let idx = SnapIndex::new(twojmax);
+    let coeffs = SnapCoeffs::synthetic(twojmax, idx.idxb_max, 42);
+    EngineSpec::new(twojmax)
+        .engine(engine)
+        .beta(coeffs.beta)
+        .build_factory()
+        .unwrap()
+        .factory
+}
+
+fn descriptors(engine: &str, twojmax: usize, input: &TileInput, gradients: bool) -> DescriptorOutput {
+    let mut eng = (factory(engine, twojmax))().unwrap();
+    let mut out = DescriptorOutput::default();
+    eng.compute_descriptors_into(input, gradients, &mut out).unwrap();
+    out
+}
+
+#[test]
+fn gradients_are_finite_differences_of_blist() {
+    let twojmax = 2;
+    let tile = Tile::random(7, 2, 4);
+    let desc = descriptors("baseline", twojmax, &tile.input(), true);
+    let h = 1e-5;
+    for atom in 0..tile.na {
+        for nbor in 0..tile.nn {
+            if tile.mask[atom * tile.nn + nbor] == 0.0 {
+                continue;
+            }
+            for k in 0..3 {
+                let o = (atom * tile.nn + nbor) * 3 + k;
+                let mut plus = tile.rij.clone();
+                let mut minus = tile.rij.clone();
+                plus[o] += h;
+                minus[o] -= h;
+                let bp = descriptors(
+                    "baseline",
+                    twojmax,
+                    &TileInput {
+                        num_atoms: tile.na,
+                        num_nbor: tile.nn,
+                        rij: &plus,
+                        mask: &tile.mask,
+                        elems: None,
+                    },
+                    false,
+                );
+                let bm = descriptors(
+                    "baseline",
+                    twojmax,
+                    &TileInput {
+                        num_atoms: tile.na,
+                        num_nbor: tile.nn,
+                        rij: &minus,
+                        mask: &tile.mask,
+                        elems: None,
+                    },
+                    false,
+                );
+                let row = desc.dblist_row(atom, nbor);
+                for l in 0..desc.num_bispectrum {
+                    let fd = (bp.blist_row(atom)[l] - bm.blist_row(atom)[l]) / (2.0 * h);
+                    let db = row[l * 3 + k];
+                    let scale = 1.0f64.max(fd.abs()).max(db.abs());
+                    assert!(
+                        (fd - db).abs() <= 1e-6 * scale,
+                        "atom {atom} nbor {nbor} B_{l} d{k}: fd={fd} vs analytic={db}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn beta_contraction_of_gradients_reproduces_dedr() {
+    let twojmax = 3;
+    let idx = SnapIndex::new(twojmax);
+    let coeffs = SnapCoeffs::synthetic(twojmax, idx.idxb_max, 42);
+    let tile = Tile::random(11, 5, 6);
+    let desc = descriptors("baseline", twojmax, &tile.input(), true);
+
+    // bitwise against the baseline force path: same kernels, same order
+    let mut eng = (factory("baseline", twojmax))().unwrap();
+    let forces = eng.compute(&tile.input());
+    for atom in 0..tile.na {
+        for nbor in 0..tile.nn {
+            let row = desc.dblist_row(atom, nbor);
+            for k in 0..3 {
+                let contracted: f64 = (0..desc.num_bispectrum)
+                    .map(|l| coeffs.beta[l] * row[l * 3 + k])
+                    .sum();
+                let dedr = forces.dedr[(atom * tile.nn + nbor) * 3 + k];
+                assert_eq!(
+                    contracted.to_bits(),
+                    dedr.to_bits(),
+                    "baseline contraction diverged at atom {atom} nbor {nbor} k {k}"
+                );
+            }
+        }
+    }
+
+    // the adjoint force formulation computes dedr through Y_jk instead of
+    // dB_k — an independent derivation the contraction must match to 1e-8
+    let mut adj = (factory("pre-adjoint-pair", twojmax))().unwrap();
+    let adj_forces = adj.compute(&tile.input());
+    for (i, (&a, &b)) in forces.dedr.iter().zip(adj_forces.dedr.iter()).enumerate() {
+        assert!((a - b).abs() <= 1e-8 * 1.0f64.max(a.abs()), "dedr[{i}]: {a} vs {b}");
+    }
+}
+
+#[test]
+fn baseline_and_adjoint_descriptors_agree_bitwise() {
+    let twojmax = 3;
+    let tile = Tile::random(19, 4, 5);
+    let base = descriptors("baseline", twojmax, &tile.input(), true);
+    let adj = descriptors("pre-adjoint-pair", twojmax, &tile.input(), true);
+    assert_eq!(base.num_bispectrum, adj.num_bispectrum);
+    for (i, (a, b)) in base.blist.iter().zip(adj.blist.iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "blist[{i}]: {a} vs {b}");
+    }
+    for (i, (a, b)) in base.dblist.iter().zip(adj.dblist.iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "dblist[{i}]: {a} vs {b}");
+    }
+}
+
+#[test]
+fn blist_is_rotation_invariant() {
+    let twojmax = 2;
+    let tile = Tile::random(23, 3, 5);
+    let want = descriptors("baseline", twojmax, &tile.input(), false);
+    // Rz(0.7) * Rx(0.4) applied to every displacement
+    let (ca, sa) = (0.7f64.cos(), 0.7f64.sin());
+    let (cb, sb) = (0.4f64.cos(), 0.4f64.sin());
+    let mut rot = tile.rij.clone();
+    for p in rot.chunks_exact_mut(3) {
+        let (x, y, z) = (p[0], p[1], p[2]);
+        // Rx
+        let (y, z) = (cb * y - sb * z, sb * y + cb * z);
+        // Rz
+        p[0] = ca * x - sa * y;
+        p[1] = sa * x + ca * y;
+        p[2] = z;
+    }
+    let got = descriptors(
+        "baseline",
+        twojmax,
+        &TileInput {
+            num_atoms: tile.na,
+            num_nbor: tile.nn,
+            rij: &rot,
+            mask: &tile.mask,
+            elems: None,
+        },
+        false,
+    );
+    for (i, (a, b)) in want.blist.iter().zip(got.blist.iter()).enumerate() {
+        let scale = 1.0f64.max(a.abs());
+        assert!((a - b).abs() <= 1e-10 * scale, "blist[{i}]: {a} vs rotated {b}");
+    }
+}
+
+#[test]
+fn descriptors_are_permutation_consistent() {
+    let twojmax = 2;
+    let tile = Tile::random(29, 5, 4);
+    let want = descriptors("baseline", twojmax, &tile.input(), true);
+
+    // atom permutation: rows travel with their atoms, bitwise
+    let perm = [3usize, 0, 4, 1, 2];
+    let mut rij = vec![0.0; tile.rij.len()];
+    let mut mask = vec![0.0; tile.mask.len()];
+    for (dst, &src) in perm.iter().enumerate() {
+        rij[dst * tile.nn * 3..(dst + 1) * tile.nn * 3]
+            .copy_from_slice(&tile.rij[src * tile.nn * 3..(src + 1) * tile.nn * 3]);
+        mask[dst * tile.nn..(dst + 1) * tile.nn]
+            .copy_from_slice(&tile.mask[src * tile.nn..(src + 1) * tile.nn]);
+    }
+    let got = descriptors(
+        "baseline",
+        twojmax,
+        &TileInput { num_atoms: tile.na, num_nbor: tile.nn, rij: &rij, mask: &mask, elems: None },
+        true,
+    );
+    for (dst, &src) in perm.iter().enumerate() {
+        assert_eq!(
+            got.blist_row(dst),
+            want.blist_row(src),
+            "atom permutation must move B_k rows bitwise"
+        );
+        for n in 0..tile.nn {
+            assert_eq!(got.dblist_row(dst, n), want.dblist_row(src, n));
+        }
+    }
+
+    // neighbor-slot reversal: a sum reordering, so equal to tight tolerance
+    let mut rij = vec![0.0; tile.rij.len()];
+    let mut mask = vec![0.0; tile.mask.len()];
+    for a in 0..tile.na {
+        for n in 0..tile.nn {
+            let rn = tile.nn - 1 - n;
+            rij[(a * tile.nn + n) * 3..(a * tile.nn + n) * 3 + 3]
+                .copy_from_slice(&tile.rij[(a * tile.nn + rn) * 3..(a * tile.nn + rn) * 3 + 3]);
+            mask[a * tile.nn + n] = tile.mask[a * tile.nn + rn];
+        }
+    }
+    let rev = descriptors(
+        "baseline",
+        twojmax,
+        &TileInput { num_atoms: tile.na, num_nbor: tile.nn, rij: &rij, mask: &mask, elems: None },
+        false,
+    );
+    for (i, (a, b)) in want.blist.iter().zip(rev.blist.iter()).enumerate() {
+        let scale = 1.0f64.max(a.abs());
+        assert!((a - b).abs() <= 1e-12 * scale, "blist[{i}]: {a} vs reversed {b}");
+    }
+}
+
+#[test]
+fn sharded_descriptors_match_serial_bitwise() {
+    let twojmax = 2;
+    let f = factory("baseline", twojmax);
+    let tile = Tile::random(31, 13, 4);
+    let mut serial = f().unwrap();
+    let mut want = DescriptorOutput::default();
+    serial.compute_descriptors_into(&tile.input(), true, &mut want).unwrap();
+    for shards in [2, 3, 5] {
+        let mut sharded = ShardedEngine::new(&f, shards).unwrap();
+        let mut got = DescriptorOutput::default();
+        sharded.compute_descriptors_into(&tile.input(), true, &mut got).unwrap();
+        assert_eq!(want, got, "shards={shards}");
+    }
+}
+
+#[test]
+fn typed_multi_element_tiles_flow_through() {
+    let twojmax = 2;
+    let idx = SnapIndex::new(twojmax);
+    let coeffs = SnapCoeffs::synthetic_multi(twojmax, idx.idxb_max, 2, 42);
+    let build = |engine: &str| {
+        EngineSpec::new(twojmax)
+            .engine(engine)
+            .beta(coeffs.beta.clone())
+            .elements(coeffs.elements.clone())
+            .build_factory()
+            .unwrap()
+            .factory
+    };
+    let tile = Tile::random(37, 4, 5);
+    let ielems: Vec<i32> = (0..tile.na as i32).map(|a| a % 2).collect();
+    let jelems: Vec<i32> = (0..(tile.na * tile.nn) as i32).map(|r| (r * 7 + 3) % 2).collect();
+    let typed = TileInput {
+        num_atoms: tile.na,
+        num_nbor: tile.nn,
+        rij: &tile.rij,
+        mask: &tile.mask,
+        elems: Some(TileElems { ielems: &ielems, jelems: &jelems }),
+    };
+    let mut base = (build("baseline"))().unwrap();
+    let mut adj = (build("pre-adjoint-pair"))().unwrap();
+    let (mut b_out, mut a_out) = (DescriptorOutput::default(), DescriptorOutput::default());
+    base.compute_descriptors_into(&typed, true, &mut b_out).unwrap();
+    adj.compute_descriptors_into(&typed, true, &mut a_out).unwrap();
+    assert_eq!(b_out, a_out, "typed descriptors must agree bitwise across formulations");
+    // the species channel is live: Be weights/cutoffs change the density
+    let mut untyped_out = DescriptorOutput::default();
+    base.compute_descriptors_into(&tile.input(), false, &mut untyped_out).unwrap();
+    assert_ne!(
+        b_out.blist, untyped_out.blist,
+        "a mixed-species tile must not reproduce the single-element descriptors"
+    );
+}
+
+#[test]
+fn fused_engine_refuses_with_structured_backend_error() {
+    let tile = Tile::random(41, 2, 4);
+    let mut eng = (factory("fused", 2))().unwrap();
+    let mut out = DescriptorOutput::default();
+    match eng.compute_descriptors_into(&tile.input(), false, &mut out) {
+        Err(EngineError::Backend(msg)) => {
+            assert!(msg.contains("does not materialize"), "{msg}");
+        }
+        other => panic!("expected EngineError::Backend, got {other:?}"),
+    }
+    // the engine is not poisoned: the force path still serves
+    let forces = eng.compute(&tile.input());
+    assert!(forces.ei.iter().all(|e| e.is_finite()));
+}
+
+mod served {
+    use super::*;
+    use repro::coordinator::server::{serve_with_stats, shutdown, ServeOptions, ServerStats};
+    use repro::coordinator::wire;
+    use std::io::{BufRead, BufReader, Read, Write};
+    use std::net::{SocketAddr, TcpListener, TcpStream};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    struct TestServer {
+        addr: SocketAddr,
+        stop: Arc<AtomicBool>,
+        stats: Arc<ServerStats>,
+        handle: std::thread::JoinHandle<std::io::Result<()>>,
+    }
+
+    impl TestServer {
+        fn start(engine: &str) -> TestServer {
+            let opts = ServeOptions {
+                workers: 1,
+                batch_window: std::time::Duration::ZERO,
+                ..ServeOptions::default()
+            };
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let stop = Arc::new(AtomicBool::new(false));
+            let stats = Arc::new(ServerStats::default());
+            let f = factory(engine, 2);
+            let (stop2, stats2) = (stop.clone(), stats.clone());
+            let handle =
+                std::thread::spawn(move || serve_with_stats(listener, f, &opts, stop2, stats2));
+            TestServer { addr, stop, stats, handle }
+        }
+
+        fn finish(self) {
+            shutdown(self.addr, &self.stop);
+            self.handle.join().unwrap().unwrap();
+        }
+    }
+
+    fn json_fmt(v: &[f64]) -> String {
+        v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+    }
+
+    #[test]
+    fn json_and_binary_descriptor_payloads_are_bit_identical() {
+        let srv = TestServer::start("baseline");
+        let tile = Tile::random(43, 2, 3);
+
+        // JSON verb
+        let conn = TcpStream::connect(srv.addr).unwrap();
+        let mut writer = conn.try_clone().unwrap();
+        let mut reader = BufReader::new(conn);
+        writer
+            .write_all(
+                format!(
+                    "{{\"cmd\": \"descriptors\", \"num_atoms\": {}, \"num_nbor\": {}, \
+                     \"rij\": [{}], \"mask\": [{}], \"gradients\": true}}\n",
+                    tile.na,
+                    tile.nn,
+                    json_fmt(&tile.rij),
+                    json_fmt(&tile.mask)
+                )
+                .as_bytes(),
+            )
+            .unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).expect("json reply parses");
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true), "{line}");
+        let j_blist = j.get("blist").and_then(Json::as_f64_vec).unwrap();
+        let j_dblist = j.get("dblist").and_then(Json::as_f64_vec).unwrap();
+        drop(reader);
+        drop(writer);
+
+        // binary 0x04 -> 0x84 on a fresh connection
+        let mut conn = TcpStream::connect(srv.addr).unwrap();
+        conn.write_all(&wire::encode_hello(wire::VERSION)).unwrap();
+        let mut ack = [0u8; 2];
+        conn.read_exact(&mut ack).unwrap();
+        assert_eq!(ack, wire::encode_hello_ack());
+        conn.write_all(&wire::encode_descriptors(
+            tile.na, tile.nn, &tile.rij, &tile.mask, None, true,
+        ))
+        .unwrap();
+        match wire::read_frame(&mut conn).unwrap().unwrap() {
+            wire::Frame::DescriptorsResult { num_atoms, num_nbor, blist, dblist, .. } => {
+                assert_eq!((num_atoms, num_nbor), (tile.na, tile.nn));
+                let dblist = dblist.expect("gradients requested");
+                assert_eq!(blist.len(), j_blist.len());
+                assert_eq!(dblist.len(), j_dblist.len());
+                for (i, (a, b)) in blist.iter().zip(j_blist.iter()).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "blist[{i}]: binary {a} vs json {b}");
+                }
+                for (i, (a, b)) in dblist.iter().zip(j_dblist.iter()).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "dblist[{i}]: binary {a} vs json {b}");
+                }
+            }
+            other => panic!("expected descriptors result, got {other:?}"),
+        }
+        drop(conn);
+        assert_eq!(srv.stats.descriptor_requests.load(Ordering::Relaxed), 2);
+        srv.finish();
+    }
+
+    #[test]
+    fn fused_server_survives_descriptor_refusal_and_counts_it() {
+        let srv = TestServer::start("fused");
+        let tile = Tile::random(47, 1, 3);
+        let conn = TcpStream::connect(srv.addr).unwrap();
+        let mut writer = conn.try_clone().unwrap();
+        let mut reader = BufReader::new(conn);
+        writer
+            .write_all(
+                format!(
+                    "{{\"cmd\": \"descriptors\", \"num_atoms\": 1, \"num_nbor\": {}, \
+                     \"rij\": [{}], \"mask\": [{}]}}\n",
+                    tile.nn,
+                    json_fmt(&tile.rij),
+                    json_fmt(&tile.mask)
+                )
+                .as_bytes(),
+            )
+            .unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false), "{line}");
+        assert_eq!(j.get("code").and_then(Json::as_str), Some("backend"), "{line}");
+        // same sole worker keeps serving forces
+        writer
+            .write_all(
+                format!(
+                    "{{\"num_atoms\": 1, \"num_nbor\": {}, \"rij\": [{}], \"mask\": [{}]}}\n",
+                    tile.nn,
+                    json_fmt(&tile.rij),
+                    json_fmt(&tile.mask)
+                )
+                .as_bytes(),
+            )
+            .unwrap();
+        let mut line2 = String::new();
+        reader.read_line(&mut line2).unwrap();
+        assert!(line2.contains("\"ok\": true"), "{line2}");
+        drop(reader);
+        drop(writer);
+        assert_eq!(srv.stats.engine_errors.load(Ordering::Relaxed), 1);
+        assert_eq!(srv.stats.descriptor_requests.load(Ordering::Relaxed), 1);
+        srv.finish();
+    }
+}
+
+#[test]
+fn quadratic_energy_and_forces_match_finite_differences() {
+    // quadratic SNAP through the descriptor path: E_i = beta.B + 1/2 B.A.B,
+    // forces = linear contraction at beta_eff = dE/dB.  Checked against
+    // central finite differences of the total energy in the pair inputs.
+    let twojmax = 2;
+    let idx = SnapIndex::new(twojmax);
+    let mut coeffs = SnapCoeffs::synthetic(twojmax, idx.idxb_max, 42);
+    let k = coeffs.ncoeff_per_elem();
+    let mut rng = XorShift::new(43);
+    coeffs.quad = (0..k * (k + 1) / 2).map(|q| 0.01 * rng.normal() / (1.0 + q as f64)).collect();
+    coeffs.params.quadraticflag = true;
+    assert!(coeffs.quadratic());
+
+    let tile = Tile::random(53, 2, 4);
+    let total_energy = |rij: &[f64]| -> f64 {
+        let desc = descriptors(
+            "baseline",
+            twojmax,
+            &TileInput {
+                num_atoms: tile.na,
+                num_nbor: tile.nn,
+                rij,
+                mask: &tile.mask,
+                elems: None,
+            },
+            false,
+        );
+        (0..tile.na).map(|a| coeffs.atom_energy(0, desc.blist_row(a))).sum()
+    };
+
+    let desc = descriptors("baseline", twojmax, &tile.input(), true);
+    let mut beta_eff = Vec::new();
+    let h = 1e-5;
+    for atom in 0..tile.na {
+        coeffs.beta_effective(0, desc.blist_row(atom), &mut beta_eff);
+        for nbor in 0..tile.nn {
+            if tile.mask[atom * tile.nn + nbor] == 0.0 {
+                continue;
+            }
+            let row = desc.dblist_row(atom, nbor);
+            for c in 0..3 {
+                let analytic: f64 =
+                    (0..desc.num_bispectrum).map(|l| beta_eff[l] * row[l * 3 + c]).sum();
+                let o = (atom * tile.nn + nbor) * 3 + c;
+                let mut plus = tile.rij.clone();
+                let mut minus = tile.rij.clone();
+                plus[o] += h;
+                minus[o] -= h;
+                let fd = (total_energy(&plus) - total_energy(&minus)) / (2.0 * h);
+                let scale = 1.0f64.max(fd.abs()).max(analytic.abs());
+                assert!(
+                    (fd - analytic).abs() <= 1e-6 * scale,
+                    "atom {atom} nbor {nbor} c {c}: fd={fd} vs beta_eff.dB={analytic}"
+                );
+            }
+        }
+    }
+}
