@@ -10,11 +10,14 @@
 //! ```bash
 //! make artifacts && cargo run --release --example md_tungsten
 //! # smaller/faster:      ... md_tungsten -- --cells 5 --steps 40
+//! # by atom count:       ... md_tungsten -- --atoms 30000 --engine fused
 //! # native engine:       ... md_tungsten -- --engine fused
 //! # intra-tile shards:   ... md_tungsten -- --engine fused --shards 4
 //! # autotuned plan:      ... md_tungsten -- --plan auto   (after `repro tune`)
 //! # 2-element W-Be MD:   ... md_tungsten -- --alloy --cells 4 --steps 40
 //! # bench record:        ... md_tungsten -- --alloy --bench-out BENCH_alloy.json
+//! # scaling sweep:       ... md_tungsten -- --scale-atoms 10000,100000,1000000 \
+//! #                          --twojmax 2 --engine fused --shards 4
 //! ```
 //!
 //! `--alloy` swaps the workload to the B2 W–Be cell with a synthetic
@@ -22,6 +25,13 @@
 //! density weights and beta blocks, per-atom masses in the integrator —
 //! the typed-tile path end to end.  It defaults to the native fused
 //! engine (xla artifacts are single-element).
+//!
+//! `--scale-atoms N1,N2,...` runs the system-size scaling scenario
+//! instead: short NVE bursts on bcc-W cells sized to each atom count,
+//! recording katom-steps/s with the neighbor-build seconds split out from
+//! the force (engine execute) seconds into `BENCH_scale.json`
+//! (`--scale-out`).  `--twojmax 2` keeps the descriptor cost small enough
+//! that 10^5–10^6-atom sweeps finish in CI/laptop time.
 //!
 //! Results are recorded in the experiment reports (`repro experiments`).
 
@@ -40,22 +50,146 @@ fn arg<T: std::str::FromStr>(args: &[String], key: &str, default: T) -> T {
         .unwrap_or(default)
 }
 
+/// bcc cell count whose 2-atom basis comes closest to `natoms`.
+fn cells_for_atoms(natoms: usize) -> usize {
+    ((natoms as f64 / 2.0).cbrt().round() as usize).max(1)
+}
+
+/// The system-size scaling scenario: for each requested atom count, run a
+/// short NVE burst and record throughput with neighbor-build time reported
+/// separately from force (engine execute) time.
+fn run_scale_sweep(
+    atom_targets: &[usize],
+    steps: usize,
+    twojmax: usize,
+    engine_name: &str,
+    shards: usize,
+    out_path: &str,
+) -> anyhow::Result<()> {
+    let params = SnapParams::with_twojmax(twojmax);
+    let idx = Arc::new(SnapIndex::new(twojmax));
+    let coeffs = SnapCoeffs::synthetic(twojmax, idx.idxb_max, 42);
+    let mut points = Vec::new();
+    for &target in atom_targets {
+        let cells = cells_for_atoms(target);
+        let mut structure =
+            lattice::bcc(cells, cells, cells, lattice::BCC_W_LATTICE, 183.84);
+        let natoms = structure.natoms();
+        let mut rng = XorShift::new(87287);
+        structure.seed_velocities(300.0, &mut rng);
+        let build = repro::config::EngineSpec::new(twojmax)
+            .engine(engine_name)
+            .beta(coeffs.beta.clone())
+            .elements(coeffs.elements.clone())
+            .shards(shards)
+            .build_factory()?;
+        let field = ForceField::new((build.factory)()?, 32 * build.fanout, 32);
+        let mut sim = Simulation::new(
+            structure,
+            field,
+            coeffs.elements.max_cutoff(params.rcutfac).max(params.rcut()),
+            SimConfig {
+                dt: 0.0005,
+                neighbor_every: 10,
+                skin: 0.3,
+                thermo_every: 0,
+                langevin: None,
+                check_displacement: true,
+            },
+        );
+        println!("# scale point: target {target} -> {cells}^3 cells = {natoms} atoms");
+        let stats = sim.run(steps, &mut std::io::sink())?;
+        let neighbor_secs = sim.field.times.get("neighbor").as_secs_f64();
+        let force_secs = sim.field.times.get("execute").as_secs_f64();
+        let pack_secs = sim.field.times.get("pack").as_secs_f64();
+        let scatter_secs = sim.field.times.get("scatter").as_secs_f64();
+        let e_final = stats.thermo.last().unwrap().e_total;
+        anyhow::ensure!(
+            e_final.is_finite() && sim.structure.force.iter().all(|f| f.is_finite()),
+            "non-finite energies/forces at {natoms} atoms"
+        );
+        println!(
+            "#   {natoms} atoms: {:.2} katom-steps/s | neighbor {:.3} s vs \
+             force {:.3} s (pack {:.3} s, scatter {:.3} s), {} rebuilds",
+            stats.katom_steps_per_sec,
+            neighbor_secs,
+            force_secs,
+            pack_secs,
+            scatter_secs,
+            sim.rebuild_count()
+        );
+        points.push(format!(
+            "{{\"natoms\": {natoms}, \"cells\": {cells}, \
+             \"katom_steps_per_sec\": {:.3}, \"neighbor_secs\": {:.6}, \
+             \"force_secs\": {:.6}, \"pack_secs\": {:.6}, \
+             \"scatter_secs\": {:.6}, \"neighbor_rebuilds\": {}, \
+             \"drift_ev_per_atom\": {:.6e}, \"e_total_final\": {:.6}}}",
+            stats.katom_steps_per_sec,
+            neighbor_secs,
+            force_secs,
+            pack_secs,
+            scatter_secs,
+            sim.rebuild_count(),
+            stats.energy_drift_per_atom,
+            e_final
+        ));
+    }
+    let json = format!(
+        "{{\"bench\": \"scale\", \"workload\": \"bcc W\", \"engine\": \"{engine_name}\", \
+         \"shards\": {shards}, \"twojmax\": {twojmax}, \"steps\": {steps}, \
+         \"points\": [{}]}}\n",
+        points.join(", ")
+    );
+    std::fs::write(out_path, json)?;
+    println!("# scaling sweep written to {out_path}");
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let alloy = args.iter().any(|a| a == "--alloy");
-    let cells: usize = arg(&args, "--cells", 10); // 10 -> the paper's 2000 atoms
+    let twojmax: usize = arg(&args, "--twojmax", 8);
+    let atoms: usize = arg(&args, "--atoms", 0); // 0 = use --cells
+    let cells: usize = if atoms > 0 {
+        cells_for_atoms(atoms)
+    } else {
+        arg(&args, "--cells", 10) // 10 -> the paper's 2000 atoms
+    };
     let warm_steps: usize = arg(&args, "--warm", 30);
     let steps: usize = arg(&args, "--steps", 120);
-    // the W-Be scenario defaults to the native fused engine: the AOT xla
-    // artifacts are compiled for the single-element model
-    let default_engine = if alloy { "fused" } else { "xla:snap_2j8" };
+    // the W-Be scenario and non-default 2J default to the native fused
+    // engine: the AOT xla artifacts are compiled for the single-element
+    // 2J=8 model
+    let default_engine = if alloy || twojmax != 8 { "fused" } else { "xla:snap_2j8" };
     let engine_name: String = arg(&args, "--engine", default_engine.to_string());
     let artifacts: String = arg(&args, "--artifacts", "artifacts".to_string());
     let shards: usize = arg(&args, "--shards", 1).max(1);
     let plan_spec: String = arg(&args, "--plan", "off".to_string());
     let bench_out: String = arg(&args, "--bench-out", String::new());
+    let scale_atoms: String = arg(&args, "--scale-atoms", String::new());
 
-    let twojmax = 8;
+    if !scale_atoms.is_empty() {
+        let targets: Vec<usize> = scale_atoms
+            .split(',')
+            .filter(|t| !t.is_empty())
+            .map(|t| t.trim().parse())
+            .collect::<Result<_, _>>()
+            .map_err(|e| anyhow::anyhow!("--scale-atoms: {e}"))?;
+        anyhow::ensure!(!targets.is_empty(), "--scale-atoms needs at least one size");
+        anyhow::ensure!(!alloy, "--scale-atoms sweeps the single-element bcc-W cell");
+        let scale_steps: usize = arg(&args, "--scale-steps", 3).max(1);
+        let scale_out: String =
+            arg(&args, "--scale-out", "BENCH_scale.json".to_string());
+        return run_scale_sweep(
+            &targets,
+            scale_steps,
+            twojmax,
+            &engine_name,
+            shards,
+            &scale_out,
+        );
+    }
+
     let params = SnapParams::with_twojmax(twojmax);
     let idx = Arc::new(SnapIndex::new(twojmax));
     let (mut structure, coeffs, workload) = if alloy {
@@ -113,6 +247,7 @@ fn main() -> anyhow::Result<()> {
             skin: 0.3,
             thermo_every: 10,
             langevin: Some((300.0, 0.1, 11)),
+            check_displacement: true,
         },
     );
 

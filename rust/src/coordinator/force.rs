@@ -159,9 +159,16 @@ pub struct ForceField {
     /// Neighbor slots per atom row (must be >= max neighbor count).
     pub tile_nbor: usize,
     pub times: StageTimes,
+    /// Hand each tile's spatial-bin boundaries to the engine
+    /// ([`ForceEngine::set_shard_partition`]) so sharding wrappers cut
+    /// spatially coherent sub-tiles.  Bitwise-invisible by contract; the
+    /// off position exists so tests can pin the contiguous balanced cuts.
+    pub spatial_shard_hints: bool,
     /// Reused per-dispatch output buffer: after the first full-size tile,
     /// the MD hot loop performs zero per-dispatch output allocations.
     scratch: TileOutput,
+    /// Reused per-tile bin-boundary buffer for the partition hint.
+    partition_scratch: Vec<usize>,
 }
 
 impl ForceField {
@@ -171,7 +178,9 @@ impl ForceField {
             tile_atoms,
             tile_nbor,
             times: StageTimes::new(),
+            spatial_shard_hints: true,
             scratch: TileOutput::default(),
+            partition_scratch: Vec::new(),
         }
     }
 
@@ -195,6 +204,15 @@ impl ForceField {
     /// mask = 0 and are inert (enforced by engine tests); whole padded
     /// atoms never occur here because tiles are cut from real atoms only.
     ///
+    /// Tiling walks atoms in the neighbor list's bin-major order when a
+    /// [`CellGrid`](crate::md::CellGrid) is available (spatially coherent
+    /// tiles; identity order otherwise), pads each tile to its *own* max
+    /// neighbor count instead of the global one (ragged systems stop
+    /// paying for their densest atom everywhere), and hands the tile's
+    /// bin boundaries to the engine as a shard-partition hint.  All three
+    /// are physics-invisible: rows are per-atom independent and masked
+    /// slots are inert.
+    ///
     /// An engine dispatch failure aborts the evaluation with the typed
     /// error — the MD loop surfaces it instead of unwinding mid-step.
     pub fn compute(
@@ -210,25 +228,37 @@ impl ForceField {
             "an atom has {maxn} neighbors > tile_nbor {}; increase tile_nbor",
             self.tile_nbor
         );
-        let nn = self.tile_nbor;
         let mut result = ForceResult {
             ei: vec![0.0; n],
             forces: vec![0.0; 3 * n],
             virial: [0.0; 9],
         };
         let ta = self.tile_atoms.max(1);
-        let mut rij = vec![0.0; ta * nn * 3];
-        let mut mask = vec![0.0; ta * nn];
-        let mut nbr_ids: Vec<u32> = vec![0; ta * nn];
+        // buffers sized for the widest tile; each tile slices them to its
+        // own tight neighbor width
+        let cap = self.tile_nbor.max(1);
+        let mut rij = vec![0.0; ta * cap * 3];
+        let mut mask = vec![0.0; ta * cap];
+        let mut nbr_ids: Vec<u32> = vec![0; ta * cap];
         // the types channel rides along only for genuinely multi-element
         // structures; single-element systems keep the legacy untyped tiles
         // (engines resolve those to element 0)
         let typed = s.nelems() > 1;
         let mut ielems: Vec<i32> = vec![0; if typed { ta } else { 0 }];
-        let mut jelems: Vec<i32> = vec![0; if typed { ta * nn } else { 0 }];
+        let mut jelems: Vec<i32> = vec![0; if typed { ta * cap } else { 0 }];
+        // bin-major atom order when the list carries its cell grid
+        let order: Option<&[u32]> = nl.grid.as_ref().map(|g| g.atoms.as_slice());
+        let atom_at = |p: usize| order.map_or(p, |o| o[p] as usize);
+        let hints = self.spatial_shard_hints && order.is_some();
 
         for tile_start in (0..n).step_by(ta) {
             let count = ta.min(n - tile_start);
+            // per-tile tight padding: this chunk's own widest row
+            let nn = (tile_start..tile_start + count)
+                .map(|p| nl.count(atom_at(p)))
+                .max()
+                .unwrap_or(0)
+                .max(1);
             // ---- pack ----
             self.times.time("pack", || {
                 rij[..count * nn * 3].fill(0.0);
@@ -238,7 +268,7 @@ impl ForceField {
                     jelems[..count * nn].fill(0);
                 }
                 for a in 0..count {
-                    let atom = tile_start + a;
+                    let atom = atom_at(tile_start + a);
                     if typed {
                         ielems[a] = s.types[atom];
                     }
@@ -256,6 +286,16 @@ impl ForceField {
                 }
             });
             // ---- execute (into the reused scratch buffer) ----
+            if hints {
+                self.partition_scratch.clear();
+                nl.grid.as_ref().unwrap().boundaries_in(
+                    tile_start,
+                    count,
+                    &mut self.partition_scratch,
+                );
+                self.engine
+                    .set_shard_partition(Some(self.partition_scratch.as_slice()));
+            }
             let input = TileInput {
                 num_atoms: count,
                 num_nbor: nn,
@@ -273,7 +313,7 @@ impl ForceField {
             // ---- scatter ----
             self.times.time("scatter", || {
                 for a in 0..count {
-                    let atom = tile_start + a;
+                    let atom = atom_at(tile_start + a);
                     result.ei[atom] = out.ei[a];
                     for slot in 0..nn {
                         if mask[a * nn + slot] == 0.0 {
@@ -297,6 +337,9 @@ impl ForceField {
                     }
                 }
             });
+        }
+        if hints {
+            self.engine.set_shard_partition(None);
         }
         Ok(result)
     }
@@ -496,6 +539,108 @@ mod tests {
             assert_eq!(solo.ei, part.ei, "typed coalescing must stay bitwise");
             assert_eq!(solo.dedr, part.dedr);
         }
+    }
+
+    /// Bin-major tile order + per-tile tight padding (vs the identity
+    /// order and global `max_count` padding of a grid-less list) must be
+    /// physics-invisible: same energies, same forces, up to scatter
+    /// accumulation order.
+    #[test]
+    fn bin_ordered_tiling_and_tight_padding_are_physics_invisible() {
+        let p = SnapParams::with_twojmax(2);
+        let idx = Arc::new(SnapIndex::new(2));
+        let coeffs = SnapCoeffs::synthetic(2, idx.idxb_max, 3);
+        // 5 cells: wide enough (>= 3 bins per axis) that build_cells
+        // actually bins instead of falling back to brute force
+        let mut s = lattice::bcc(5, 5, 5, 3.18, 183.84);
+        let mut rng = crate::util::XorShift::new(21);
+        s.jitter(0.05, &mut rng);
+        s.wrap_all();
+        let nl_flat = NeighborList::build_bruteforce(&s, p.rcut());
+        let nl_grid = NeighborList::build_cells(&s, p.rcut());
+        assert!(nl_flat.grid.is_none() && nl_grid.grid.is_some());
+        let make_ff = || {
+            let eng = Box::new(BaselineEngine::new(
+                p,
+                idx.clone(),
+                coeffs.beta.clone(),
+                Staging::Monolithic,
+            ));
+            ForceField::new(eng, 48, nl_flat.max_count().max(1))
+        };
+        let want = make_ff().compute(&s, &nl_flat).unwrap();
+        let got = make_ff().compute(&s, &nl_grid).unwrap();
+        for (i, (a, b)) in want.ei.iter().zip(got.ei.iter()).enumerate() {
+            assert!((a - b).abs() < 1e-10, "ei[{i}]: {a} vs {b}");
+        }
+        for (i, (a, b)) in want.forces.iter().zip(got.forces.iter()).enumerate() {
+            assert!((a - b).abs() < 1e-10, "force[{i}]: {a} vs {b}");
+        }
+        for (a, b) in want.virial.iter().zip(got.virial.iter()) {
+            assert!((a - b).abs() < 1e-8 * (1.0 + a.abs()));
+        }
+    }
+
+    /// The packer hands each tile's bin boundaries to the engine and
+    /// clears the hint after the evaluation.
+    #[test]
+    fn partition_hints_reach_the_engine_per_tile() {
+        use crate::snap::memory::MemoryFootprint;
+        use std::sync::Mutex;
+
+        #[derive(Clone, Default)]
+        struct Calls(Arc<Mutex<Vec<Option<Vec<usize>>>>>);
+        struct Probe(Calls);
+        impl ForceEngine for Probe {
+            fn name(&self) -> &str {
+                "probe"
+            }
+            fn compute_into(
+                &mut self,
+                input: &crate::snap::engine::TileInput,
+                out: &mut TileOutput,
+            ) -> Result<(), crate::snap::engine::EngineError> {
+                out.reset(input.num_atoms, input.num_nbor);
+                Ok(())
+            }
+            fn footprint(&self, _na: usize, _nn: usize) -> MemoryFootprint {
+                MemoryFootprint::new()
+            }
+            fn set_shard_partition(&mut self, b: Option<&[usize]>) {
+                self.0 .0.lock().unwrap().push(b.map(|x| x.to_vec()));
+            }
+        }
+
+        let mut s = lattice::bcc(5, 5, 5, 3.18, 183.84);
+        let mut rng = crate::util::XorShift::new(4);
+        s.jitter(0.03, &mut rng);
+        s.wrap_all();
+        let nl = NeighborList::build_cells(&s, 4.73442);
+        assert!(nl.grid.is_some());
+        let calls = Calls::default();
+        let mut ff = ForceField::new(Box::new(Probe(calls.clone())), 48, 32);
+        ff.compute(&s, &nl).unwrap();
+        {
+            let seen = calls.0.lock().unwrap();
+            let tiles = s.natoms().div_ceil(48);
+            assert_eq!(seen.len(), tiles + 1, "one hint per tile + final clear");
+            assert_eq!(seen.last(), Some(&None));
+            for hint in &seen[..tiles] {
+                let cuts = hint.as_ref().expect("tiles carry Some(boundaries)");
+                for w in cuts.windows(2) {
+                    assert!(w[0] < w[1], "boundaries must ascend");
+                }
+                for &c in cuts {
+                    assert!(c > 0 && c < 48, "cut {c} outside the tile interior");
+                }
+            }
+        }
+        // the knob turns the hints off entirely
+        let calls2 = Calls::default();
+        let mut ff2 = ForceField::new(Box::new(Probe(calls2.clone())), 48, 32);
+        ff2.spatial_shard_hints = false;
+        ff2.compute(&s, &nl).unwrap();
+        assert!(calls2.0.lock().unwrap().is_empty());
     }
 
     #[test]

@@ -21,6 +21,12 @@ pub struct SimConfig {
     pub thermo_every: usize,
     /// Langevin target temperature (None = NVE).
     pub langevin: Option<(f64, f64, u64)>, // (T, damp, seed)
+    /// Also rebuild whenever an atom has moved more than half the skin
+    /// since the last build (LAMMPS `neigh_modify check yes`).  Off means
+    /// the bare every-k policy, which silently misses interactions when
+    /// atoms outrun the skin — kept only for the regression test and for
+    /// reproducing the old behaviour.
+    pub check_displacement: bool,
 }
 
 impl Default for SimConfig {
@@ -31,6 +37,7 @@ impl Default for SimConfig {
             skin: 0.3,
             thermo_every: 10,
             langevin: None,
+            check_displacement: true,
         }
     }
 }
@@ -54,14 +61,39 @@ pub struct Simulation {
     step: usize,
     nlist: Option<NeighborList>,
     last_result: Option<ForceResult>,
+    /// Positions at the last rebuild (post-wrap), for the half-skin
+    /// displacement trigger.
+    ref_pos: Vec<f64>,
+    /// Skin the current list actually carries (a small box may truncate
+    /// `cfg.skin` at the minimum-image limit).
+    skin_eff: f64,
+    /// Whether the skin was truncated — reuse is then unsafe and the list
+    /// is rebuilt every step.
+    skin_truncated: bool,
+    warned_truncation: bool,
+    rebuilds: usize,
 }
 
 impl Simulation {
     pub fn new(structure: Structure, field: ForceField, cutoff: f64, cfg: SimConfig) -> Self {
-        Self { structure, field, cfg, cutoff, step: 0, nlist: None, last_result: None }
+        Self {
+            structure,
+            field,
+            cfg,
+            cutoff,
+            step: 0,
+            nlist: None,
+            last_result: None,
+            ref_pos: Vec::new(),
+            skin_eff: 0.0,
+            skin_truncated: false,
+            warned_truncation: false,
+            rebuilds: 0,
+        }
     }
 
     fn rebuild_neighbors(&mut self) {
+        let t0 = std::time::Instant::now();
         self.structure.wrap_all();
         let max_cut = self.structure.simbox.max_cutoff();
         assert!(
@@ -69,17 +101,70 @@ impl Simulation {
             "force cutoff {} exceeds the minimum-image limit {max_cut} of this box — enlarge the cell",
             self.cutoff
         );
-        // only the *skin* may be truncated by small boxes
+        // only the *skin* may be truncated by small boxes — but a truncated
+        // skin cannot buffer the every-k reuse policy, so reuse is disabled
         let list_cut = (self.cutoff + self.cfg.skin).min(max_cut);
+        self.skin_eff = list_cut - self.cutoff;
+        self.skin_truncated = self.skin_eff + 1e-12 < self.cfg.skin;
+        if self.skin_truncated && !self.warned_truncation {
+            self.warned_truncation = true;
+            eprintln!(
+                "# warning: neighbor skin truncated {} -> {:.6} by the minimum-image \
+                 limit of this box; disabling list reuse (rebuilding every step)",
+                self.cfg.skin, self.skin_eff
+            );
+        }
         let nl = NeighborList::build_cells(&self.structure, list_cut);
         self.nlist = Some(nl);
+        self.ref_pos.clear();
+        self.ref_pos.extend_from_slice(&self.structure.pos);
+        self.rebuilds += 1;
+        self.field.times.add("neighbor", t0.elapsed());
+    }
+
+    /// Whether the rebuild policy calls for a fresh list at this step:
+    /// no list yet, the every-k period, a truncated skin (no buffer to
+    /// reuse), or — with `check_displacement` — an atom that has moved
+    /// more than `skin_eff / 2` since the last build and may have carried
+    /// an unlisted pair inside the force cutoff.
+    fn needs_rebuild(&self) -> bool {
+        if self.nlist.is_none()
+            || self.step % self.cfg.neighbor_every.max(1) == 0
+            || self.skin_truncated
+        {
+            return true;
+        }
+        if !self.cfg.check_displacement {
+            return false;
+        }
+        // positions are only wrapped at rebuild time, so the raw
+        // difference from ref_pos is the physical displacement
+        let half_skin2 = (0.5 * self.skin_eff) * (0.5 * self.skin_eff);
+        self.structure
+            .pos
+            .chunks_exact(3)
+            .zip(self.ref_pos.chunks_exact(3))
+            .any(|(p, r)| {
+                let d = [p[0] - r[0], p[1] - r[1], p[2] - r[2]];
+                d[0] * d[0] + d[1] * d[1] + d[2] * d[2] > half_skin2
+            })
+    }
+
+    /// Neighbor-list rebuilds performed so far.
+    pub fn rebuild_count(&self) -> usize {
+        self.rebuilds
+    }
+
+    /// Whether the last rebuild had to truncate the skin (small box).
+    pub fn skin_truncated(&self) -> bool {
+        self.skin_truncated
     }
 
     /// Compute forces for the current positions, refreshing the neighbor
     /// list per policy, and install them in the structure.  An engine
     /// dispatch failure surfaces as the typed error instead of a panic.
     pub fn compute_forces(&mut self) -> Result<&ForceResult, EngineError> {
-        if self.nlist.is_none() || self.step % self.cfg.neighbor_every.max(1) == 0 {
+        if self.needs_rebuild() {
             self.rebuild_neighbors();
         }
         // pairs beyond the force cutoff are inert (sfac = 0), so the skin
@@ -188,6 +273,7 @@ mod tests {
                 skin: 0.3,
                 thermo_every: 0,
                 langevin,
+                check_displacement: true,
             },
         )
     }
@@ -248,6 +334,7 @@ mod tests {
                     skin: 0.3,
                     thermo_every: 0,
                     langevin: None,
+                    check_displacement: true,
                 },
             );
             let mut sink = std::io::sink();

@@ -223,6 +223,7 @@ fn cmd_run(flags: &Flags) -> Result<()> {
         skin: 0.3,
         thermo_every: script.thermo,
         langevin: script.langevin,
+        check_displacement: true,
     };
     // neighbor lists must cover the widest per-element pair cutoff
     // (rcutfac * 2 * max R); for the degenerate table this is rcut()

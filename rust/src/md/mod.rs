@@ -19,7 +19,7 @@ pub mod thermo;
 
 pub use atoms::Structure;
 pub use boxpbc::SimBox;
-pub use neighbor::NeighborList;
+pub use neighbor::{CellGrid, NeighborList};
 
 /// LAMMPS "metal" units constants.
 pub mod units {

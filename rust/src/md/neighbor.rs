@@ -5,8 +5,132 @@
 //! per-atom energy needs every atom's complete neighborhood; displacement
 //! vectors are stored minimum-imaged at build time so the force kernels are
 //! PBC-oblivious.
+//!
+//! The cell-list build is a flat two-pass CSR construction (counting pass →
+//! prefix-sum offsets → fill pass) parallelized over bins on the process
+//! [`ThreadPool`](crate::util::parallel) — no per-row `Vec` allocations, and
+//! the resulting rows are bitwise-identical to the brute-force builder
+//! (ascending neighbor index, identical minimum-image expressions).  The bin
+//! structure itself ([`CellGrid`]) is a public artifact of the build: the
+//! tile packer orders atoms by bin for spatial locality and hands bin
+//! boundaries to sharding wrappers as a partition hint.
 
 use super::atoms::Structure;
+use crate::util::parallel::parallel_for;
+
+/// The spatial binning behind a cell-list build: which bin every atom landed
+/// in, and the atoms of each bin as CSR ranges over a bin-major atom order.
+///
+/// Binning uses the *periodically wrapped* coordinate on periodic axes
+/// (`x - L*floor(x/L)`), so out-of-box positions land in their true bin
+/// instead of piling into edge bins; non-periodic axes clamp, which is safe
+/// because clamping is a contraction (two atoms within one bin width stay
+/// within one bin of each other).
+#[derive(Clone, Debug)]
+pub struct CellGrid {
+    /// Bin counts per axis (>= 1 everywhere, >= 3 on periodic axes).
+    pub nbins: [usize; 3],
+    /// Flat bin id of each atom, len natoms.
+    pub bin_of_atom: Vec<u32>,
+    /// CSR offsets over bins into `atoms`, len `num_bins() + 1`.
+    pub offsets: Vec<usize>,
+    /// Atom indices grouped by bin (ascending within each bin) — the
+    /// bin-major atom order used for spatially-coherent tiling.
+    pub atoms: Vec<u32>,
+}
+
+impl CellGrid {
+    /// Bin the structure at `bin_width` (>= the neighbor cutoff).  Returns
+    /// `None` when a periodic axis has fewer than 3 bins — there the
+    /// 27-stencil would visit the same image bin twice, so callers fall
+    /// back to brute force.
+    pub fn build(s: &Structure, bin_width: f64) -> Option<Self> {
+        let mut nbins = [0usize; 3];
+        for k in 0..3 {
+            nbins[k] = (s.simbox.lengths[k] / bin_width).floor().max(1.0) as usize;
+            if s.simbox.periodic[k] && nbins[k] < 3 {
+                return None;
+            }
+        }
+        let n = s.natoms();
+        let total = nbins[0] * nbins[1] * nbins[2];
+        let mut bin_of_atom = Vec::with_capacity(n);
+        // offsets double as the counting buffer: count into slot b+1, then
+        // prefix-sum in place
+        let mut offsets = vec![0usize; total + 1];
+        for i in 0..n {
+            let b = flat_bin(s, nbins, s.pos_of(i));
+            bin_of_atom.push(b as u32);
+            offsets[b + 1] += 1;
+        }
+        for b in 0..total {
+            offsets[b + 1] += offsets[b];
+        }
+        let mut cursor = offsets.clone();
+        let mut atoms = vec![0u32; n];
+        for (i, &b) in bin_of_atom.iter().enumerate() {
+            atoms[cursor[b as usize]] = i as u32;
+            cursor[b as usize] += 1;
+        }
+        Some(Self { nbins, bin_of_atom, offsets, atoms })
+    }
+
+    /// Total number of bins.
+    pub fn num_bins(&self) -> usize {
+        self.nbins[0] * self.nbins[1] * self.nbins[2]
+    }
+
+    /// Atom indices of bin `b` (ascending).
+    pub fn bin_atoms(&self, b: usize) -> &[u32] {
+        &self.atoms[self.offsets[b]..self.offsets[b + 1]]
+    }
+
+    /// Bin-boundary positions strictly inside the window
+    /// `[start, start + count)` of the bin-major atom order, relative to
+    /// `start` — the spatial partition hint handed to sharding wrappers so
+    /// sub-tiles align with bins.
+    pub fn boundaries_in(&self, start: usize, count: usize, out: &mut Vec<usize>) {
+        let lo = self.offsets.partition_point(|&o| o <= start);
+        for &o in &self.offsets[lo..] {
+            if o >= start + count {
+                break;
+            }
+            // empty bins repeat an offset; emit each boundary once
+            if out.last() != Some(&(o - start)) {
+                out.push(o - start);
+            }
+        }
+    }
+}
+
+/// Flat bin id of position `p` (wrapped binning, see [`CellGrid`]).
+#[inline]
+fn flat_bin(s: &Structure, nbins: [usize; 3], p: [f64; 3]) -> usize {
+    let mut b = [0usize; 3];
+    for k in 0..3 {
+        let l = s.simbox.lengths[k];
+        let x = if s.simbox.periodic[k] {
+            // periodic wrap: out-of-box coordinates land in their true bin
+            p[k] - l * (p[k] / l).floor()
+        } else {
+            p[k].clamp(0.0, l)
+        };
+        // `min` guards the FP edge where a wrapped coordinate rounds to L
+        b[k] = ((x / l * nbins[k] as f64) as usize).min(nbins[k] - 1);
+    }
+    (b[0] * nbins[1] + b[1]) * nbins[2] + b[2]
+}
+
+/// Raw-pointer wrapper for disjoint cross-lane writes during the parallel
+/// CSR build: each atom belongs to exactly one bin and each bin index is
+/// claimed by exactly one pool lane, so no two lanes ever touch the same
+/// count slot or CSR row range.
+struct SlotWriter<T>(*mut T);
+// SAFETY: see above — writes are disjoint by construction, and
+// `parallel_for` does not return until every index has completed, so the
+// buffers strictly outlive all writes.
+unsafe impl<T: Send> Send for SlotWriter<T> {}
+unsafe impl<T: Send> Sync for SlotWriter<T> {}
 
 /// CSR full neighbor list with cached minimum-image displacements.
 #[derive(Clone, Debug)]
@@ -18,12 +142,20 @@ pub struct NeighborList {
     /// Displacement r_j - r_i per entry (minimum image), 3 per entry.
     pub rij: Vec<f64>,
     pub cutoff: f64,
+    /// The spatial binning the list was built from (`None` for the
+    /// brute-force builder and its small-box fallback).
+    pub grid: Option<CellGrid>,
 }
 
 impl NeighborList {
     /// O(N^2) reference builder.
     pub fn build_bruteforce(s: &Structure, cutoff: f64) -> Self {
         let n = s.natoms();
+        assert!(
+            cutoff <= s.simbox.max_cutoff() + 1e-12,
+            "cutoff {cutoff} exceeds minimum-image limit {}",
+            s.simbox.max_cutoff()
+        );
         let c2 = cutoff * cutoff;
         let mut rows: Vec<Vec<(u32, [f64; 3])>> = vec![Vec::new(); n];
         for i in 0..n {
@@ -46,7 +178,11 @@ impl NeighborList {
         Self::from_rows(rows, cutoff)
     }
 
-    /// O(N) cell-list builder (bins >= cutoff, 27-stencil).
+    /// O(N) cell-list builder (bins >= cutoff, 27-stencil): flat two-pass
+    /// CSR construction parallelized over bins.  Row order is ascending
+    /// neighbor index, bitwise-identical to [`build_bruteforce`].
+    ///
+    /// [`build_bruteforce`]: Self::build_bruteforce
     pub fn build_cells(s: &Structure, cutoff: f64) -> Self {
         let n = s.natoms();
         assert!(
@@ -54,33 +190,210 @@ impl NeighborList {
             "cutoff {cutoff} exceeds minimum-image limit {}",
             s.simbox.max_cutoff()
         );
+        // fall back to brute force when a periodic axis has < 3 bins, where
+        // the 27-stencil would double-count image bins
+        let Some(grid) = CellGrid::build(s, cutoff) else {
+            return Self::build_bruteforce(s, cutoff);
+        };
         let c2 = cutoff * cutoff;
-        // bin counts (at least 1; fall back to brute force when < 3 bins on
-        // a periodic axis, where the 27-stencil would double-count)
+        let total = grid.num_bins();
+
+        // pass 1 (counting): per-atom neighbor counts, parallel over bins
+        let mut counts = vec![0u32; n];
+        {
+            let slots = SlotWriter(counts.as_mut_ptr());
+            parallel_for(total, |b| {
+                for &i in grid.bin_atoms(b) {
+                    let mut c = 0u32;
+                    scan_neighbors(s, &grid, c2, i as usize, |_, _| c += 1);
+                    // SAFETY: disjoint per-atom slots (see `SlotWriter`)
+                    unsafe { *slots.0.add(i as usize) = c };
+                }
+            });
+        }
+
+        // offsets: serial prefix sum
+        let mut offsets = Vec::with_capacity(n + 1);
+        offsets.push(0usize);
+        let mut acc = 0usize;
+        for &c in &counts {
+            acc += c as usize;
+            offsets.push(acc);
+        }
+
+        // pass 2 (fill): gather each row into a per-bin scratch, sort by
+        // neighbor index (the deterministic order shared with brute force),
+        // and write it into the atom's CSR range
+        let mut idx = vec![0u32; acc];
+        let mut rij = vec![0f64; acc * 3];
+        {
+            let idx_w = SlotWriter(idx.as_mut_ptr());
+            let rij_w = SlotWriter(rij.as_mut_ptr());
+            parallel_for(total, |b| {
+                let mut row: Vec<(u32, [f64; 3])> = Vec::new();
+                for &i in grid.bin_atoms(b) {
+                    let i = i as usize;
+                    row.clear();
+                    scan_neighbors(s, &grid, c2, i, |j, d| row.push((j, d)));
+                    // indices are unique per row, so unstable sort is
+                    // deterministic
+                    row.sort_unstable_by_key(|&(j, _)| j);
+                    debug_assert_eq!(row.len(), counts[i] as usize);
+                    let e0 = offsets[i];
+                    for (slot, &(j, d)) in row.iter().enumerate() {
+                        // SAFETY: [e0, e0 + row.len()) is atom i's CSR
+                        // range — disjoint across atoms, hence across lanes
+                        unsafe {
+                            *idx_w.0.add(e0 + slot) = j;
+                            let rp = rij_w.0.add((e0 + slot) * 3);
+                            *rp = d[0];
+                            *rp.add(1) = d[1];
+                            *rp.add(2) = d[2];
+                        }
+                    }
+                }
+            });
+        }
+        Self { offsets, idx, rij, cutoff, grid: Some(grid) }
+    }
+
+    fn from_rows(mut rows: Vec<Vec<(u32, [f64; 3])>>, cutoff: f64) -> Self {
+        // deterministic order (brute force and cell lists agree)
+        for row in rows.iter_mut() {
+            row.sort_by_key(|(j, _)| *j);
+        }
+        let mut offsets = Vec::with_capacity(rows.len() + 1);
+        let mut idx = Vec::new();
+        let mut rij = Vec::new();
+        offsets.push(0);
+        for row in rows {
+            for (j, d) in row {
+                idx.push(j);
+                rij.extend_from_slice(&d);
+            }
+            offsets.push(idx.len());
+        }
+        Self { offsets, idx, rij, cutoff, grid: None }
+    }
+
+    pub fn natoms(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn count(&self, i: usize) -> usize {
+        self.offsets[i + 1] - self.offsets[i]
+    }
+
+    pub fn max_count(&self) -> usize {
+        (0..self.natoms()).map(|i| self.count(i)).max().unwrap_or(0)
+    }
+
+    /// (neighbor index, displacement) entries of atom i.
+    pub fn row(&self, i: usize) -> impl Iterator<Item = (u32, [f64; 3])> + '_ {
+        (self.offsets[i]..self.offsets[i + 1]).map(move |e| {
+            (
+                self.idx[e],
+                [self.rij[3 * e], self.rij[3 * e + 1], self.rij[3 * e + 2]],
+            )
+        })
+    }
+}
+
+/// Visit every neighbor `j` of atom `i` within `sqrt(c2)` through the
+/// 27-stencil around `i`'s bin, in bin-scan order (callers sort).  The
+/// displacement handed to `visit` is the same `minimum_image(p_j - p_i)`
+/// expression the brute-force builder uses, so entries match it bitwise.
+#[inline]
+fn scan_neighbors(
+    s: &Structure,
+    grid: &CellGrid,
+    c2: f64,
+    i: usize,
+    mut visit: impl FnMut(u32, [f64; 3]),
+) {
+    let pi = s.pos_of(i);
+    let nbins = grid.nbins;
+    let b = grid.bin_of_atom[i] as usize;
+    let bi = [b / (nbins[1] * nbins[2]), (b / nbins[2]) % nbins[1], b % nbins[2]];
+    for dx in -1i64..=1 {
+        for dy in -1i64..=1 {
+            for dz in -1i64..=1 {
+                let mut bb = [0usize; 3];
+                let d = [dx, dy, dz];
+                let mut valid = true;
+                for k in 0..3 {
+                    let v = bi[k] as i64 + d[k];
+                    if s.simbox.periodic[k] {
+                        bb[k] = v.rem_euclid(nbins[k] as i64) as usize;
+                    } else if v < 0 || v >= nbins[k] as i64 {
+                        valid = false;
+                        break;
+                    } else {
+                        bb[k] = v as usize;
+                    }
+                }
+                if !valid {
+                    continue;
+                }
+                let flat = (bb[0] * nbins[1] + bb[1]) * nbins[2] + bb[2];
+                for &j in grid.bin_atoms(flat) {
+                    if j as usize == i {
+                        continue;
+                    }
+                    let pj = s.pos_of(j as usize);
+                    let dvec = s.simbox.minimum_image([
+                        pj[0] - pi[0],
+                        pj[1] - pi[1],
+                        pj[2] - pi[2],
+                    ]);
+                    if dvec[0] * dvec[0] + dvec[1] * dvec[1] + dvec[2] * dvec[2] < c2 {
+                        visit(j, dvec);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::md::boxpbc::SimBox;
+    use crate::md::lattice;
+    use crate::util::XorShift;
+
+    fn random_structure(seed: u64, n: usize, l: f64) -> Structure {
+        let mut rng = XorShift::new(seed);
+        let pos: Vec<f64> = (0..3 * n).map(|_| rng.uniform(0.0, l)).collect();
+        Structure::new(SimBox::cubic(l), pos, 1.0)
+    }
+
+    /// The pre-CSR cell-list algorithm (per-row `Vec`s + stable sort +
+    /// `from_rows` flattening), kept verbatim as the reference the flat
+    /// two-pass builder must reproduce bitwise.
+    fn build_cells_reference(s: &Structure, cutoff: f64) -> NeighborList {
+        let n = s.natoms();
+        let c2 = cutoff * cutoff;
         let mut nbins = [0usize; 3];
         for k in 0..3 {
             nbins[k] = (s.simbox.lengths[k] / cutoff).floor().max(1.0) as usize;
             if s.simbox.periodic[k] && nbins[k] < 3 {
-                return Self::build_bruteforce(s, cutoff);
+                return NeighborList::build_bruteforce(s, cutoff);
             }
         }
-        let bin_of = |p: [f64; 3]| -> [usize; 3] {
-            let mut b = [0usize; 3];
-            for k in 0..3 {
-                let f = (p[k] / s.simbox.lengths[k]).clamp(0.0, 0.999_999_999);
-                b[k] = ((f * nbins[k] as f64) as usize).min(nbins[k] - 1);
-            }
-            b
-        };
         let flat = |b: [usize; 3]| (b[0] * nbins[1] + b[1]) * nbins[2] + b[2];
         let mut cells: Vec<Vec<u32>> = vec![Vec::new(); nbins[0] * nbins[1] * nbins[2]];
+        let bin3 = |p: [f64; 3]| -> [usize; 3] {
+            let f = flat_bin(s, nbins, p);
+            [f / (nbins[1] * nbins[2]), (f / nbins[2]) % nbins[1], f % nbins[2]]
+        };
         for i in 0..n {
-            cells[flat(bin_of(s.pos_of(i)))].push(i as u32);
+            cells[flat(bin3(s.pos_of(i)))].push(i as u32);
         }
         let mut rows: Vec<Vec<(u32, [f64; 3])>> = vec![Vec::new(); n];
-        for i in 0..n {
+        for (i, row) in rows.iter_mut().enumerate() {
             let pi = s.pos_of(i);
-            let bi = bin_of(pi);
+            let bi = bin3(pi);
             for dx in -1i64..=1 {
                 for dy in -1i64..=1 {
                     for dz in -1i64..=1 {
@@ -114,69 +427,26 @@ impl NeighborList {
                             if dvec[0] * dvec[0] + dvec[1] * dvec[1] + dvec[2] * dvec[2]
                                 < c2
                             {
-                                rows[i].push((j, dvec));
+                                row.push((j, dvec));
                             }
                         }
                     }
                 }
             }
         }
-        Self::from_rows(rows, cutoff)
+        NeighborList::from_rows(rows, cutoff)
     }
 
-    fn from_rows(mut rows: Vec<Vec<(u32, [f64; 3])>>, cutoff: f64) -> Self {
-        // deterministic order (brute force and cell lists agree)
-        for row in rows.iter_mut() {
-            row.sort_by_key(|(j, _)| *j);
-        }
-        let mut offsets = Vec::with_capacity(rows.len() + 1);
-        let mut idx = Vec::new();
-        let mut rij = Vec::new();
-        offsets.push(0);
-        for row in rows {
-            for (j, d) in row {
-                idx.push(j);
-                rij.extend_from_slice(&d);
-            }
-            offsets.push(idx.len());
-        }
-        Self { offsets, idx, rij, cutoff }
-    }
-
-    pub fn natoms(&self) -> usize {
-        self.offsets.len() - 1
-    }
-
-    pub fn count(&self, i: usize) -> usize {
-        self.offsets[i + 1] - self.offsets[i]
-    }
-
-    pub fn max_count(&self) -> usize {
-        (0..self.natoms()).map(|i| self.count(i)).max().unwrap_or(0)
-    }
-
-    /// (neighbor index, displacement) entries of atom i.
-    pub fn row(&self, i: usize) -> impl Iterator<Item = (u32, [f64; 3])> + '_ {
-        (self.offsets[i]..self.offsets[i + 1]).map(move |e| {
-            (
-                self.idx[e],
-                [self.rij[3 * e], self.rij[3 * e + 1], self.rij[3 * e + 2]],
-            )
-        })
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::md::boxpbc::SimBox;
-    use crate::md::lattice;
-    use crate::util::XorShift;
-
-    fn random_structure(seed: u64, n: usize, l: f64) -> Structure {
-        let mut rng = XorShift::new(seed);
-        let pos: Vec<f64> = (0..3 * n).map(|_| rng.uniform(0.0, l)).collect();
-        Structure::new(SimBox::cubic(l), pos, 1.0)
+    fn assert_bitwise_equal(a: &NeighborList, b: &NeighborList, what: &str) {
+        assert_eq!(a.offsets, b.offsets, "{what}: offsets");
+        assert_eq!(a.idx, b.idx, "{what}: idx");
+        // bitwise, not approximate: both builders evaluate the identical
+        // minimum-image expression on the identical operands
+        assert_eq!(
+            a.rij.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.rij.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "{what}: rij"
+        );
     }
 
     /// Property test: cell list == brute force on random configurations
@@ -196,6 +466,120 @@ mod tests {
                 assert!((x - y).abs() < 1e-12);
             }
         }
+    }
+
+    /// Property test: the flat two-pass CSR builder is bitwise-identical
+    /// (offsets/idx/rij) to the per-row-Vec reference across random
+    /// configurations, ragged densities (clustered atoms), non-cubic boxes,
+    /// and a mixed periodic/non-periodic axis.
+    #[test]
+    fn flat_csr_matches_reference_builder_bitwise() {
+        for seed in 0..12u64 {
+            // uniform random, cubic
+            let n = 30 + (seed as usize * 17) % 80;
+            let l = 9.0 + (seed % 4) as f64;
+            let s = random_structure(seed, n, l);
+            let cutoff = 2.6 + (seed % 3) as f64 * 0.3;
+            assert_bitwise_equal(
+                &build_cells_reference(&s, cutoff),
+                &NeighborList::build_cells(&s, cutoff),
+                &format!("uniform seed {seed}"),
+            );
+
+            // ragged density: atoms clumped around a few cluster centers,
+            // so some bins are crowded and most are empty
+            let mut rng = XorShift::new(1000 + seed);
+            let lens = [12.0, 9.0 + (seed % 3) as f64, 15.0]; // non-cubic
+            let mut pos = Vec::new();
+            for _ in 0..4 {
+                let c = [
+                    rng.uniform(0.0, lens[0]),
+                    rng.uniform(0.0, lens[1]),
+                    rng.uniform(0.0, lens[2]),
+                ];
+                for _ in 0..12 {
+                    for k in 0..3 {
+                        let x = (c[k] + rng.uniform(-1.2, 1.2))
+                            .clamp(0.001, lens[k] - 0.001);
+                        pos.push(x);
+                    }
+                }
+            }
+            // mixed periodicity: z is an open boundary
+            let sb = SimBox { lengths: lens, periodic: [true, true, false] };
+            let s2 = Structure::new(sb, pos, 1.0);
+            assert_bitwise_equal(
+                &build_cells_reference(&s2, 2.8),
+                &NeighborList::build_cells(&s2, 2.8),
+                &format!("clustered seed {seed}"),
+            );
+        }
+    }
+
+    /// Regression (bugfix): out-of-box positions must bin by the wrapped
+    /// coordinate.  The old builder clamped them into edge bins, silently
+    /// dropping neighbors for callers that never `wrap_all` (quickstart,
+    /// `repro run`).
+    #[test]
+    fn out_of_box_positions_equal_bruteforce() {
+        for seed in 0..10u64 {
+            let l = 10.0;
+            let n = 50;
+            let mut s = random_structure(seed, n, l);
+            let mut rng = XorShift::new(500 + seed);
+            // drift atoms out of the box by up to L/4 on periodic axes
+            // (keeps raw pair separations within 1.5 L, where the
+            // single-fold minimum image of the brute-force reference is
+            // still exact)
+            for x in s.pos.iter_mut() {
+                *x += rng.uniform(-0.25 * l, 0.25 * l);
+            }
+            let cutoff = 3.0;
+            let a = NeighborList::build_bruteforce(&s, cutoff);
+            let b = NeighborList::build_cells(&s, cutoff);
+            assert_eq!(a.offsets, b.offsets, "seed {seed}: cell list dropped pairs");
+            assert_eq!(a.idx, b.idx, "seed {seed}");
+            for (x, y) in a.rij.iter().zip(b.rij.iter()) {
+                assert!((x - y).abs() < 1e-12);
+            }
+        }
+    }
+
+    /// The grid CSR is a consistent partition: every atom appears exactly
+    /// once, under the bin recorded in `bin_of_atom`, ascending within its
+    /// bin; `boundaries_in` reports exactly the interior bin starts.
+    #[test]
+    fn cell_grid_is_consistent() {
+        let s = random_structure(7, 120, 14.0);
+        let nl = NeighborList::build_cells(&s, 3.1);
+        let g = nl.grid.as_ref().expect("large box builds a grid");
+        assert_eq!(g.offsets.len(), g.num_bins() + 1);
+        assert_eq!(g.atoms.len(), s.natoms());
+        assert_eq!(*g.offsets.last().unwrap(), s.natoms());
+        let mut seen = vec![false; s.natoms()];
+        for b in 0..g.num_bins() {
+            let atoms = g.bin_atoms(b);
+            for w in atoms.windows(2) {
+                assert!(w[0] < w[1], "bin {b} not ascending");
+            }
+            for &i in atoms {
+                assert_eq!(g.bin_of_atom[i as usize], b as u32);
+                assert!(!seen[i as usize], "atom {i} in two bins");
+                seen[i as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&x| x));
+        // boundaries_in: interior bin starts of a window, window-relative
+        let mut cuts = Vec::new();
+        g.boundaries_in(0, s.natoms(), &mut cuts);
+        let want: Vec<usize> = g.offsets[1..g.num_bins()]
+            .iter()
+            .copied()
+            .filter(|&o| o > 0 && o < s.natoms())
+            .collect::<std::collections::BTreeSet<_>>()
+            .into_iter()
+            .collect();
+        assert_eq!(cuts, want);
     }
 
     #[test]
@@ -243,5 +627,15 @@ mod tests {
     fn oversized_cutoff_panics() {
         let s = random_structure(1, 10, 6.0);
         NeighborList::build_cells(&s, 3.5);
+    }
+
+    /// Bugfix: the brute-force builder now carries the same minimum-image
+    /// guard as the cell builder — an oversized cutoff used to silently
+    /// undercount pairs (one image per pair).
+    #[test]
+    #[should_panic(expected = "exceeds minimum-image")]
+    fn bruteforce_oversized_cutoff_panics() {
+        let s = random_structure(1, 10, 6.0);
+        NeighborList::build_bruteforce(&s, 3.5);
     }
 }

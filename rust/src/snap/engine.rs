@@ -338,6 +338,19 @@ pub trait ForceEngine: Send {
 
     /// Zero the accumulated profile, keeping profiling enabled.
     fn reset_kernel_profile(&mut self) {}
+
+    /// Hint at spatially meaningful split points for the next tiles:
+    /// `boundaries` are row offsets (ascending, strictly inside
+    /// `0..num_atoms`) where a new spatial bin starts, as produced by
+    /// [`CellGrid::boundaries_in`](crate::md::CellGrid::boundaries_in).
+    /// `None` clears the hint.
+    ///
+    /// Contract: purely a locality hint — outputs must be bitwise-identical
+    /// with any hint or none (sharding wrappers may realign their sub-tile
+    /// cuts, which the padded-tile row-independence contract makes
+    /// invisible).  The default implementation ignores it, so serial
+    /// engines need no code.
+    fn set_shard_partition(&mut self, _boundaries: Option<&[usize]>) {}
 }
 
 #[cfg(test)]

@@ -59,6 +59,14 @@ pub struct ShardedEngine {
     /// buffers for `compute_descriptors_into` dispatches.
     desc_scratch: Vec<Mutex<DescriptorOutput>>,
     min_atoms_per_shard: usize,
+    /// Spatial partition hint ([`ForceEngine::set_shard_partition`]):
+    /// ascending row offsets where a new spatial bin starts in the next
+    /// tiles.  When set, [`plan`](Self::plan) snaps its balanced interior
+    /// cuts to the nearest hinted boundary so sub-tiles are spatially
+    /// coherent — bitwise-invisible, because stitching contiguous ranges
+    /// in order reproduces the serial layout for *any* partition.
+    hint: Vec<usize>,
+    hint_set: bool,
     name: String,
     /// Merged per-stage profile across all shards (plus the wrapper's own
     /// `Stitch` time).  `None` (the default) means profiling is off — the
@@ -85,6 +93,8 @@ impl ShardedEngine {
             scratch,
             desc_scratch,
             min_atoms_per_shard: 1,
+            hint: Vec::new(),
+            hint_set: false,
             name: format!("sharded{shards}x-{inner}"),
             prof: None,
         })
@@ -105,7 +115,10 @@ impl ShardedEngine {
 
     /// Contiguous `(start, count)` atom ranges for `na` atoms: as many
     /// shards as the floor allows, the remainder spread over the leading
-    /// shards (uneven last shards are exercised by tests).
+    /// shards (uneven last shards are exercised by tests).  With a spatial
+    /// partition hint installed, each balanced interior cut snaps to the
+    /// nearest hinted bin boundary (coalescing cuts that land on the same
+    /// boundary), so sub-tiles follow the caller's spatial bins.
     fn plan(&self, na: usize) -> Vec<(usize, usize)> {
         let k = self
             .engines
@@ -115,14 +128,53 @@ impl ShardedEngine {
             .max(1);
         let base = na / k;
         let extra = na % k;
-        let mut ranges = Vec::with_capacity(k);
+        let mut cuts = Vec::with_capacity(k.saturating_sub(1));
         let mut start = 0;
-        for s in 0..k {
-            let count = base + usize::from(s < extra);
-            ranges.push((start, count));
-            start += count;
+        for s in 0..k - 1 {
+            start += base + usize::from(s < extra);
+            cuts.push(start);
         }
+        if self.hint_set && !self.hint.is_empty() {
+            for c in cuts.iter_mut() {
+                *c = nearest_boundary(&self.hint, *c);
+            }
+            // snapping a sorted sequence to sorted boundaries keeps it
+            // non-decreasing; drop coalesced and degenerate cuts
+            cuts.dedup();
+            cuts.retain(|&c| c > 0 && c < na);
+        }
+        let mut ranges = Vec::with_capacity(cuts.len() + 1);
+        let mut prev = 0;
+        for &c in &cuts {
+            ranges.push((prev, c - prev));
+            prev = c;
+        }
+        ranges.push((prev, na - prev));
         ranges
+    }
+}
+
+/// The element of sorted `bounds` closest to `target` (ties toward the
+/// lower boundary); `target` itself when `bounds` is empty.
+fn nearest_boundary(bounds: &[usize], target: usize) -> usize {
+    match bounds.binary_search(&target) {
+        Ok(_) => target,
+        Err(pos) => {
+            let lo = pos.checked_sub(1).map(|p| bounds[p]);
+            let hi = bounds.get(pos).copied();
+            match (lo, hi) {
+                (Some(a), Some(b)) => {
+                    if target - a <= b - target {
+                        a
+                    } else {
+                        b
+                    }
+                }
+                (Some(a), None) => a,
+                (None, Some(b)) => b,
+                (None, None) => target,
+            }
+        }
     }
 }
 
@@ -273,6 +325,16 @@ impl ForceEngine for ShardedEngine {
         Ok(())
     }
 
+    fn set_shard_partition(&mut self, boundaries: Option<&[usize]>) {
+        // stored, not forwarded: hint offsets are whole-tile rows, which
+        // would be meaningless inside a shard's sub-range
+        self.hint.clear();
+        self.hint_set = boundaries.is_some();
+        if let Some(b) = boundaries {
+            self.hint.extend_from_slice(b);
+        }
+    }
+
     fn set_profiling(&mut self, on: bool) {
         self.prof = on.then(KernelProfile::new);
         for slot in &mut self.engines {
@@ -381,6 +443,56 @@ mod tests {
                     assert!(max - min <= 1);
                 }
             }
+        }
+    }
+
+    #[test]
+    fn partition_hint_snaps_cuts_to_bin_boundaries() {
+        let factory = fused_factory(2, 13);
+        let mut eng = ShardedEngine::new(&factory, 4).unwrap();
+        // 32 atoms, bins starting at rows 5, 9, 18, 27
+        eng.set_shard_partition(Some(&[5, 9, 18, 27]));
+        let ranges = eng.plan(32);
+        let mut next = 0;
+        for &(start, count) in &ranges {
+            assert_eq!(start, next);
+            assert!(count > 0);
+            if start > 0 {
+                assert!(
+                    [5, 9, 18, 27].contains(&start),
+                    "cut {start} not on a bin boundary"
+                );
+            }
+            next += count;
+        }
+        assert_eq!(next, 32);
+        // clearing the hint restores the balanced default
+        eng.set_shard_partition(None);
+        let balanced = eng.plan(32);
+        assert_eq!(balanced, vec![(0, 8), (8, 8), (16, 8), (24, 8)]);
+        // cuts coalescing onto one boundary merge shards instead of
+        // producing empty ranges
+        eng.set_shard_partition(Some(&[16]));
+        let merged = eng.plan(32);
+        assert_eq!(merged, vec![(0, 16), (16, 16)]);
+    }
+
+    #[test]
+    fn partition_hint_is_bitwise_invisible() {
+        let factory = fused_factory(2, 91);
+        let mut serial = factory().unwrap();
+        let mut rng = XorShift::new(15);
+        let (na, nn) = (13usize, 5usize);
+        let (rij, mask) = tile(&mut rng, na, nn);
+        let inp = TileInput { num_atoms: na, num_nbor: nn, rij: &rij, mask: &mask, elems: None };
+        let want = serial.compute(&inp);
+        let hints: [&[usize]; 3] = [&[4, 7, 11], &[1], &[2, 3, 4, 5, 6]];
+        for hint in hints {
+            let mut eng = ShardedEngine::new(&factory, 3).unwrap();
+            eng.set_shard_partition(Some(hint));
+            let got = eng.compute(&inp);
+            assert_eq!(want.ei, got.ei, "hint {hint:?}");
+            assert_eq!(want.dedr, got.dedr, "hint {hint:?}");
         }
     }
 

@@ -391,6 +391,14 @@ impl ForceEngine for PlannedEngine {
         }
     }
 
+    /// Forwarded to every bucket engine: the next dispatch's bucket is not
+    /// known here, and the hint is bitwise-invisible by contract anyway.
+    fn set_shard_partition(&mut self, boundaries: Option<&[usize]>) {
+        for e in &mut self.engines {
+            e.set_shard_partition(boundaries);
+        }
+    }
+
     /// Merged view over the bucket engines (each planned dispatch lands on
     /// exactly one bucket engine, so summing dispatches is exact).
     fn kernel_profile(&self) -> Option<KernelProfile> {

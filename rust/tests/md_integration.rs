@@ -30,6 +30,7 @@ fn build_sim(variant: Variant, twojmax: usize, cells: usize, t0: f64) -> Simulat
             skin: 0.3,
             thermo_every: 0,
             langevin: None,
+            check_displacement: true,
         },
     )
 }
@@ -76,6 +77,7 @@ fn nve_conserves_energy_on_the_wbe_alloy() {
             skin: 0.3,
             thermo_every: 0,
             langevin: None,
+            check_displacement: true,
         },
     );
     let stats = sim.run(80, &mut std::io::sink()).unwrap();
@@ -107,8 +109,11 @@ fn nve_trajectories_agree_across_engines() {
 
 #[test]
 fn neighbor_rebuild_policy_does_not_change_physics() {
+    // cells = 4: a box large enough that the skin is NOT truncated, so the
+    // every-k cadences genuinely differ (the 3-cell box truncates the skin,
+    // which now forces per-step rebuilds and would make this test vacuous)
     let run = |every: usize| {
-        let mut sim = build_sim(Variant::Fused, 2, 3, 40.0);
+        let mut sim = build_sim(Variant::Fused, 2, 4, 40.0);
         sim.cfg.neighbor_every = every;
         sim.run(20, &mut std::io::sink()).unwrap();
         // positions are wrapped at rebuild time, so raw coordinates differ
@@ -165,6 +170,127 @@ fn virial_pressure_is_finite_and_symmetric_lattice_is_isotropic() {
             assert!(v.abs() < 1e-8, "off-diagonal virial {i}: {v}");
         }
     }
+}
+
+/// Regression for the stale-list bug: the bare every-k reuse policy lets a
+/// fast atom outrun the skin, so a pair drifts inside the force cutoff
+/// without ever entering the list and its force stays exactly zero.  The
+/// half-skin displacement trigger (`check_displacement`, LAMMPS
+/// `neigh_modify check yes`) must catch it.
+#[test]
+fn displacement_check_catches_atoms_that_outrun_the_skin() {
+    let twojmax = 2usize;
+    let params = SnapParams::with_twojmax(twojmax);
+    let idx = Arc::new(SnapIndex::new(twojmax));
+    let coeffs = SnapCoeffs::synthetic(twojmax, idx.idxb_max, 42);
+    let run = |check: bool| {
+        // two atoms just outside the list cutoff (force cutoff + skin),
+        // so the initial list is empty for both
+        let gap = params.rcut() + 0.3 + 0.2;
+        let pos = vec![3.0, 6.0, 6.0, 3.0 + gap, 6.0, 6.0];
+        let mut s = repro::md::Structure::new(repro::md::SimBox::cubic(12.0), pos, 183.84);
+        s.vel[0] = 20.0; // atom 0 sprints toward atom 1 at 20 A/ps
+        let engine = Variant::Fused.build(params, idx.clone(), coeffs.beta.clone());
+        let mut sim = Simulation::new(
+            s,
+            ForceField::new(engine, 32, 32),
+            params.rcut(),
+            SimConfig {
+                dt: 0.0005,
+                neighbor_every: 1000, // cadence alone never rebuilds mid-run
+                skin: 0.3,
+                thermo_every: 0,
+                langevin: None,
+                check_displacement: check,
+            },
+        );
+        // 70 steps x 0.01 A/step closes 0.7 A: final separation ~4.53 A,
+        // well inside the 4.73 A force cutoff
+        sim.run(70, &mut std::io::sink()).unwrap();
+        let fmax = sim.structure.force.iter().fold(0.0f64, |m, f| m.max(f.abs()));
+        (fmax, sim.rebuild_count())
+    };
+    let (f_old, rebuilds_old) = run(false);
+    assert_eq!(rebuilds_old, 1, "old policy must not rebuild (else this test is vacuous)");
+    assert_eq!(f_old, 0.0, "old policy: pair never listed, force exactly zero");
+    let (f_new, rebuilds_new) = run(true);
+    assert!(rebuilds_new > 2, "half-skin trigger fired only {rebuilds_new} rebuilds");
+    assert!(f_new > 1e-9, "displacement check failed to surface the pair (fmax {f_new})");
+}
+
+/// Regression for the silent-truncation bug: a box too small for the full
+/// skin clips it at the minimum-image limit, leaving almost no buffer for
+/// list reuse — the policy must fall back to rebuilding every step (and
+/// say so), not silently reuse an under-skinned list.
+#[test]
+fn truncated_skin_disables_list_reuse() {
+    // 3^3 bcc cells: L = 9.54 A, minimum-image limit 4.77 A, so the
+    // 4.73 A cutoff leaves ~0.036 A of the requested 0.3 A skin
+    let steps = 12;
+    let mut sim = build_sim(Variant::Fused, 2, 3, 40.0);
+    sim.cfg.neighbor_every = 10;
+    sim.run(steps, &mut std::io::sink()).unwrap();
+    assert!(sim.skin_truncated(), "3-cell box must truncate the skin");
+    assert_eq!(sim.rebuild_count(), steps + 1, "truncated skin must rebuild every step");
+    // a 4-cell box fits the full skin: the every-k cadence is honored
+    let mut sim = build_sim(Variant::Fused, 2, 4, 40.0);
+    sim.cfg.neighbor_every = 10;
+    sim.run(steps, &mut std::io::sink()).unwrap();
+    assert!(!sim.skin_truncated());
+    assert!(sim.rebuild_count() <= 3, "{} rebuilds in {steps} steps", sim.rebuild_count());
+}
+
+/// Tentpole acceptance: spatial-bin-aligned sharding, contiguous balanced
+/// sharding, and the serial engine produce bitwise-identical trajectories.
+/// The bin partition is a locality hint, never physics.
+#[test]
+fn sharded_md_trajectory_is_bitwise_identical_to_serial() {
+    use repro::snap::engine::{EngineFactory, ForceEngine};
+    use repro::snap::sharded::ShardedEngine;
+    let twojmax = 2usize;
+    let params = SnapParams::with_twojmax(twojmax);
+    let idx = Arc::new(SnapIndex::new(twojmax));
+    let coeffs = SnapCoeffs::synthetic(twojmax, idx.idxb_max, 42);
+    let factory: EngineFactory = {
+        let idx = idx.clone();
+        let beta = coeffs.beta.clone();
+        Arc::new(move || Ok(Variant::Fused.build(params, idx.clone(), beta.clone())))
+    };
+    // 5^3 cells = 250 atoms: the 15.9 A box fits 3 bins of 5.03 A per
+    // axis, so the cell grid actually forms and the bin hints are live
+    let run = |shards: usize, hints: bool| {
+        let engine: Box<dyn ForceEngine> = if shards == 1 {
+            factory().unwrap()
+        } else {
+            Box::new(ShardedEngine::new(&factory, shards).unwrap())
+        };
+        let mut s = lattice::bcc(5, 5, 5, lattice::BCC_W_LATTICE, 183.84);
+        let mut rng = XorShift::new(99);
+        s.seed_velocities(60.0, &mut rng);
+        s.jitter(0.05, &mut rng);
+        let mut field = ForceField::new(engine, 32, 32);
+        field.spatial_shard_hints = hints;
+        let mut sim = Simulation::new(
+            s,
+            field,
+            params.rcut(),
+            SimConfig {
+                dt: 0.0002,
+                neighbor_every: 5,
+                skin: 0.3,
+                thermo_every: 0,
+                langevin: None,
+                check_displacement: true,
+            },
+        );
+        sim.run(15, &mut std::io::sink()).unwrap();
+        sim.structure.pos.clone()
+    };
+    let serial = run(1, true);
+    let contiguous = run(3, false);
+    let spatial = run(3, true);
+    assert_eq!(serial, contiguous, "contiguous sharding changed the trajectory");
+    assert_eq!(serial, spatial, "spatial-bin sharding changed the trajectory");
 }
 
 #[test]
